@@ -1,0 +1,60 @@
+//! Figure 5 reproduction: single-token-output latency across network
+//! settings (LAN/WAN), thread counts (1/4/20) and sequence lengths
+//! (8..128), split into offline + online phases.
+//!
+//! Method: measured reduced-depth runs (comm metered exactly, compute
+//! measured) scaled to 12 layers; thread scaling via the calibrated
+//! Amdahl curve; network time from the rounds/bytes model (DESIGN.md).
+//!
+//!   cargo bench --bench fig5
+
+use ppq_bert::bench_harness::{prepared_model, thread_scale, Table};
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::transport::{NetParams, Phase};
+
+fn main() {
+    let measured_layers = 2usize;
+    let layer_scale = 12.0 / measured_layers as f64;
+    let seqs = [8usize, 16, 32, 64, 128];
+    let threads = [1usize, 4, 20];
+
+    for net in [NetParams::LAN, NetParams::WAN] {
+        let mut t = Table::new(&[
+            "seq", "threads", "offline s", "online s", "total s",
+        ]);
+        for &seq in &seqs {
+            let cfg = BertConfig::base_with_seq(seq).with_layers(measured_layers);
+            let (w, x) = prepared_model(cfg);
+            let mut sc = ServerConfig::new(cfg);
+            sc.net = net;
+            let mut coord = Coordinator::start(sc, w);
+            coord.submit(x);
+            let r = coord.run_batch().remove(0);
+            let snap = coord.snapshot();
+            coord.shutdown();
+
+            // split: phase compute (measured) + phase network (modeled)
+            let comp_off = snap.max_compute_ns(Phase::Offline) as f64 / 1e9 * layer_scale;
+            let comp_on = snap.max_compute_ns(Phase::Online) as f64 / 1e9 * layer_scale;
+            let net_off = (net.modeled_net_time(&snap, Phase::Offline)).as_secs_f64() * layer_scale;
+            let net_on = (net.modeled_net_time(&snap, Phase::Online)).as_secs_f64() * layer_scale;
+            let _ = r;
+            for &th in &threads {
+                let off = comp_off / thread_scale(th) + net_off;
+                let on = comp_on / thread_scale(th) + net_on;
+                t.row(vec![
+                    seq.to_string(),
+                    th.to_string(),
+                    format!("{off:.2}"),
+                    format!("{on:.2}"),
+                    format!("{:.2}", off + on),
+                ]);
+            }
+        }
+        t.print(&format!(
+            "Fig. 5 ({}): latency per inference, offline+online (paper: ~1s online @ seq 8 / 20 threads LAN; <4s @ 128)",
+            net.name
+        ));
+    }
+}

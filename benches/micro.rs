@@ -1,0 +1,145 @@
+//! Protocol micro-benchmarks + ablations (harness = false; criterion is
+//! unavailable offline — timings are median-of-N via bench_harness).
+//!
+//!   cargo bench --bench micro
+
+use ppq_bert::bench_harness::{fmt_dur, time_median, Table};
+use ppq_bert::core::ring::{R16, R4};
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::protocols::convert::convert_to_rss;
+use ppq_bert::protocols::lut::{lut_eval, LutTable};
+use ppq_bert::protocols::matmul::rss_matmul_trc;
+use ppq_bert::protocols::max::{max_rows, MaxStrategy};
+use ppq_bert::protocols::softmax::{softmax_rows, SoftmaxTables};
+use ppq_bert::sharing::additive::share2;
+use ppq_bert::sharing::rss::share_rss;
+use ppq_bert::transport::Phase;
+
+fn main() {
+    let mut t = Table::new(&["op", "shape", "median", "online B", "offline B", "rounds"]);
+
+    // LUT evaluation throughput
+    for n in [256usize, 4096] {
+        let mut snap_keep = None;
+        let d = time_median(5, || {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let table = LutTable::from_fn(R4, R16, |v| v * 3);
+                let xs: Option<Vec<u64>> =
+                    if ctx.id == P0 { Some((0..n as u64).map(|i| i % 16).collect()) } else { None };
+                let x = ctx.with_phase(Phase::Setup, |c| share2(c, P0, R4, xs.as_deref(), n));
+                lut_eval(ctx, &table, &x);
+            });
+            snap_keep = Some(snap);
+        });
+        let s = snap_keep.unwrap();
+        t.row(vec![
+            "Pi_look 4->16".into(),
+            format!("{n}"),
+            fmt_dur(d),
+            s.total_bytes(Phase::Online).to_string(),
+            s.total_bytes(Phase::Offline).to_string(),
+            s.max_rounds(Phase::Online).to_string(),
+        ]);
+    }
+
+    // share conversion
+    for n in [1024usize] {
+        let mut snap_keep = None;
+        let d = time_median(5, || {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let xs: Option<Vec<u64>> =
+                    if ctx.id == P0 { Some((0..n as u64).map(|i| i % 16).collect()) } else { None };
+                let x = ctx.with_phase(Phase::Setup, |c| share2(c, P0, R4, xs.as_deref(), n));
+                convert_to_rss(ctx, &x, R16, true);
+            });
+            snap_keep = Some(snap);
+        });
+        let s = snap_keep.unwrap();
+        t.row(vec![
+            "Pi_convert 4->16".into(),
+            format!("{n}"),
+            fmt_dur(d),
+            s.total_bytes(Phase::Online).to_string(),
+            s.total_bytes(Phase::Offline).to_string(),
+            s.max_rounds(Phase::Online).to_string(),
+        ]);
+    }
+
+    // RSS FC (Alg. 3) at BERT-base shape
+    for (rows, k, m) in [(8usize, 768usize, 768usize)] {
+        let mut snap_keep = None;
+        let d = time_median(3, || {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let xs: Option<Vec<u64>> =
+                    if ctx.id == P1 { Some(vec![3u64; rows * k]) } else { None };
+                let ws: Option<Vec<u64>> =
+                    if ctx.id == P0 { Some(vec![64u64; m * k]) } else { None };
+                let x = ctx.with_phase(Phase::Setup, |c| share_rss(c, P1, R16, xs.as_deref(), rows * k));
+                let w = ctx.with_phase(Phase::Setup, |c| share_rss(c, P0, R16, ws.as_deref(), m * k));
+                rss_matmul_trc(ctx, &x, &w, rows, k, m, 4);
+            });
+            snap_keep = Some(snap);
+        });
+        let s = snap_keep.unwrap();
+        t.row(vec![
+            "Alg3 FC".into(),
+            format!("{rows}x{k}->{m}"),
+            fmt_dur(d),
+            s.total_bytes(Phase::Online).to_string(),
+            s.total_bytes(Phase::Offline).to_string(),
+            s.max_rounds(Phase::Online).to_string(),
+        ]);
+    }
+
+    // softmax rows at attention shape
+    for (rows, n) in [(8usize, 8usize), (32, 32)] {
+        let mut snap_keep = None;
+        let d = time_median(3, || {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let tables = SoftmaxTables::new(0.5);
+                let xs: Option<Vec<u64>> =
+                    if ctx.id == P0 { Some((0..(rows * n) as u64).map(|i| i % 16).collect()) } else { None };
+                let x = ctx.with_phase(Phase::Setup, |c| share2(c, P0, R4, xs.as_deref(), rows * n));
+                softmax_rows(ctx, &tables, &x, rows, n, MaxStrategy::Tournament);
+            });
+            snap_keep = Some(snap);
+        });
+        let s = snap_keep.unwrap();
+        t.row(vec![
+            "softmax".into(),
+            format!("{rows}x{n}"),
+            fmt_dur(d),
+            s.total_bytes(Phase::Online).to_string(),
+            s.total_bytes(Phase::Offline).to_string(),
+            s.max_rounds(Phase::Online).to_string(),
+        ]);
+    }
+
+    // ablation: Pi_max tournament vs linear (rounds under WAN)
+    for strat in [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort] {
+        let (rows, n) = (8usize, 32usize);
+        let mut snap_keep = None;
+        let d = time_median(3, || {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let xs: Option<Vec<u64>> =
+                    if ctx.id == P0 { Some((0..(rows * n) as u64).map(|i| i % 16).collect()) } else { None };
+                let x = ctx.with_phase(Phase::Setup, |c| share2(c, P0, R4, xs.as_deref(), rows * n));
+                max_rows(ctx, &x, rows, n, strat);
+            });
+            snap_keep = Some(snap);
+        });
+        let s = snap_keep.unwrap();
+        let wan_online =
+            ppq_bert::transport::NetParams::WAN.modeled_phase_time(&s, Phase::Online);
+        t.row(vec![
+            format!("Pi_max {strat:?}"),
+            format!("{rows}x{n}"),
+            fmt_dur(d),
+            s.total_bytes(Phase::Online).to_string(),
+            format!("WAN {}", fmt_dur(wan_online)),
+            s.max_rounds(Phase::Online).to_string(),
+        ]);
+    }
+
+    t.print("protocol microbenchmarks (per 3-party session)");
+}

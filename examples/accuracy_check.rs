@@ -1,0 +1,80 @@
+//! Cross-layer accuracy check: runs the same input through all four
+//! implementations and reports agreement —
+//!   1. the PJRT-compiled AOT artifact (L1 Pallas + L2 JAX, python-built)
+//!   2. the Rust native plaintext oracle
+//!   3. the 3-party MPC pipeline
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example accuracy_check`
+
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::secure::{secure_infer, SecureBert};
+use ppq_bert::model::weights::{read_i32_file, Weights};
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::runtime::native;
+use ppq_bert::runtime::xla::{artifacts_dir, I32Tensor, XlaModel};
+use ppq_bert::sharing::additive::reveal2;
+
+fn main() {
+    let dir = artifacts_dir();
+    let wpath = dir.join("bert_tiny.weights.bin");
+    if !wpath.exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let w = Weights::load(&wpath).expect("load weights");
+    let cfg = w.cfg;
+    let (xshape, x) = read_i32_file(&dir.join("bert_tiny.input.bin")).expect("input");
+
+    // --- 1. PJRT artifact
+    let model = XlaModel::load(&dir.join("bert_tiny.hlo.txt")).expect("hlo");
+    let mut inputs = vec![I32Tensor::from_i64(xshape, &x)];
+    for li in 0..cfg.n_layers {
+        for p in BertConfig::layer_params() {
+            let t = w.tensor(&format!("layer{li}.{p}"));
+            inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+        }
+    }
+    let t = w.tensor("cls.w");
+    inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+    let outs = model.run(&inputs).expect("run artifact");
+    let logits_xla: Vec<i64> = outs[0].data.iter().map(|&v| v as i64).collect();
+    let h_xla: Vec<i64> = outs[1].data.iter().map(|&v| v as i64).collect();
+
+    // --- 2. native oracle
+    let (logits_native, h_native) = native::forward(&cfg, &w, &x);
+
+    // --- 3. MPC
+    let (wc, xin) = (
+        Weights { cfg, tensors: w.tensors.clone(), scales: w.scales.clone() },
+        x.clone(),
+    );
+    let (mpc_outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+        let m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&wc) } else { None });
+        let (logits, h) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
+        (logits, reveal2(ctx, &h))
+    });
+    let (logits_mpc, h_mpc_enc) = &mpc_outs[1];
+    let h_mpc: Vec<i64> = h_mpc_enc.iter().map(|&v| (((v & 0xF) ^ 8) as i64) - 8).collect();
+
+    println!("logits  artifact: {logits_xla:?}");
+    println!("logits  native:   {logits_native:?}");
+    println!("logits  MPC:      {logits_mpc:?}");
+    assert_eq!(logits_xla, logits_native, "artifact != native");
+    assert_eq!(h_xla, h_native, "hidden: artifact != native");
+    println!("artifact == native: EXACT ({} hidden values)", h_native.len());
+
+    let mut hist = [0usize; 8];
+    for (g, want) in h_mpc.iter().zip(&h_native) {
+        hist[(g - want).unsigned_abs().min(7) as usize] += 1;
+    }
+    let within1 = hist[0] + hist[1];
+    println!(
+        "MPC vs native hidden: |diff| histogram {:?}  ({}/{} within 1 LSB — probabilistic-truncation budget)",
+        &hist[..4],
+        within1,
+        h_native.len()
+    );
+    assert!(within1 * 10 >= h_native.len() * 8, "MPC drifted beyond the carry budget");
+    println!("OK");
+}

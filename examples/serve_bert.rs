@@ -1,0 +1,97 @@
+//! End-to-end serving driver (the DESIGN.md §End-to-end validation run):
+//! token sequences → data-owner-local public embedding + 4-bit
+//! quantization → sequence-bucketed router → batched 3-party secure
+//! inference, reporting per-request latency, throughput, and the
+//! per-phase communication budget.
+//!
+//! `PPQ_E2E=base` serves BERT-base width at 12 layers (slow on one core);
+//! default is a 4-layer BERT-base-width model that exercises full-size
+//! layers.
+//!
+//! Run: `cargo run --release --example serve_bert`
+
+use std::time::Instant;
+
+use ppq_bert::bench_harness::{fmt_dur, Table};
+use ppq_bert::coordinator::{Router, ServerConfig};
+use ppq_bert::core::prg::Prg;
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::embedding::PublicEmbedding;
+use ppq_bert::transport::NetParams;
+
+fn main() {
+    let cfg = match std::env::var("PPQ_E2E").as_deref() {
+        Ok("base") => BertConfig::base(),
+        Ok("tiny") => BertConfig::tiny(),
+        _ => BertConfig::base_with_seq(16).with_layers(4),
+    };
+    let buckets = vec![cfg.seq_len / 2, cfg.seq_len];
+    let n_requests = 6usize;
+    println!(
+        "serving: {} layers, d={}, seq buckets {:?} — {} token-stream requests",
+        cfg.n_layers, cfg.d_model, buckets, n_requests
+    );
+
+    // Public embedding table (paper: revealed by the model owner; the
+    // data owner embeds + quantizes locally).
+    let vocab = 1000usize;
+    let emb = PublicEmbedding::synth(vocab, cfg.d_model, cfg.seq_len, 17);
+
+    let mut sc = ServerConfig::new(cfg);
+    sc.max_batch = 4;
+    sc.net = NetParams::LAN;
+    let t0 = Instant::now();
+    let mut router = Router::new(sc, 42, buckets);
+
+    // Synthesize token streams of varying lengths and submit.
+    let mut prg = Prg::new([5u8; 16]);
+    let mut meta = Vec::new();
+    for i in 0..n_requests {
+        let len = if i % 2 == 0 { cfg.seq_len / 2 } else { cfg.seq_len };
+        let tokens: Vec<u32> = (0..len).map(|_| (prg.next_u64() % vocab as u64) as u32).collect();
+        let x4 = emb.embed_quantize(&tokens);
+        let routed = router.submit(x4).expect("request fits a bucket");
+        meta.push((routed, len));
+    }
+    println!("router: active buckets after submit: {:?}", router.active_buckets());
+
+    let mut table = Table::new(&[
+        "req", "tokens", "bucket", "class-logits", "compute", "LAN online", "online MB",
+    ]);
+    let t_serve = Instant::now();
+    let mut served = 0usize;
+    let mut latencies = Vec::new();
+    while router.pending() > 0 {
+        for (bucket, r) in router.run_all() {
+            latencies.push(r.compute);
+            let len = meta
+                .iter()
+                .find(|((b, id), _)| *b == bucket && *id == r.id)
+                .map(|(_, l)| *l)
+                .unwrap_or(0);
+            table.row(vec![
+                format!("{bucket}/{}", r.id),
+                len.to_string(),
+                bucket.to_string(),
+                format!("{:?}", r.logits),
+                fmt_dur(r.compute),
+                fmt_dur(r.online_modeled),
+                format!("{:.2}", r.online_bytes as f64 / 1048576.0),
+            ]);
+            served += 1;
+        }
+    }
+    let wall = t_serve.elapsed();
+    table.print("served requests (token streams through embedding + router)");
+
+    latencies.sort();
+    println!(
+        "\nthroughput: {:.3} req/s over {} requests   p50 compute {}   total wall (incl. per-bucket setup) {}",
+        served as f64 / wall.as_secs_f64(),
+        served,
+        fmt_dur(latencies[latencies.len() / 2]),
+        fmt_dur(t0.elapsed()),
+    );
+    println!("aggregate online communication: {:.2} MB", router.total_online_mb());
+    router.shutdown();
+}

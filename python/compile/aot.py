@@ -1,0 +1,127 @@
+"""AOT compile path: lower the L2 jax model to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust runtime loads the text with
+``HloModuleProto::from_text_file`` (the serialized-proto path is broken:
+jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects —
+see /opt/xla-example/README.md).
+
+Artifacts produced (into --out-dir):
+  bert_tiny.hlo.txt      full tiny-config forward (weights as parameters)
+  bert_tiny.weights.bin  the matching synthetic weights + config header
+  bert_tiny.input.bin    the canonical test input
+  bert_tiny.expect.bin   expected logits for that input (oracle output)
+  fc_quant.hlo.txt       standalone Pallas binary-FC kernel (seq x 64 -> 64)
+  softmax_quant.hlo.txt  standalone Pallas quantized-softmax kernel
+  MANIFEST.txt           artifact inventory with shapes
+"""
+
+import argparse
+import functools
+import os
+import struct
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.binary_matmul import fc_quant_pallas
+from .kernels.softmax_quant import softmax_quant_pallas
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides big constants as ``constant({...})`` and the text *parser* on
+    the Rust side silently garbles them (lookup tables came back as their
+    indices). Full-constant printing round-trips exactly.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_bert(cfg):
+    """Lower bert_forward(cfg) with weights as parameters -> HLO text.
+
+    Scales are calibrated first (static ints baked into the HLO and also
+    written into the weights artifact for the Rust MPC side).
+    """
+    names = model.param_order(cfg)
+    weights = model.gen_weights(cfg)
+    scales = model.calibrate(cfg, weights, model.gen_input(cfg, seed=5))
+    specs = [jax.ShapeDtypeStruct(np.asarray(weights[n]).shape, jnp.int32)
+             for n in names]
+    x_spec = jax.ShapeDtypeStruct((cfg.seq_len, cfg.d_model), jnp.int32)
+
+    def fwd(x4, *flat):
+        logits, h = model.bert_forward(cfg, x4, list(flat), scales,
+                                       use_pallas=True)
+        return logits, h
+
+    lowered = jax.jit(fwd).lower(x_spec, *specs)
+    return to_hlo_text(lowered), weights, scales
+
+
+def write_i32(path, arr):
+    arr = np.ascontiguousarray(arr, dtype=np.int32)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    od = args.out_dir
+    os.makedirs(od, exist_ok=True)
+    manifest = []
+
+    cfg = model.TINY
+    hlo, weights, scales = lower_bert(cfg)
+    with open(f"{od}/bert_tiny.hlo.txt", "w") as f:
+        f.write(hlo)
+    model.write_weights(f"{od}/bert_tiny.weights.bin", cfg, weights, scales)
+    x4 = model.gen_input(cfg)
+    write_i32(f"{od}/bert_tiny.input.bin", x4)
+    names = model.param_order(cfg)
+    logits, h = model.bert_forward(cfg, jnp.asarray(x4),
+                                   [weights[n] for n in names], scales,
+                                   use_pallas=False)
+    write_i32(f"{od}/bert_tiny.expect.bin", np.asarray(logits))
+    write_i32(f"{od}/bert_tiny.hidden.bin", np.asarray(h))
+    manifest.append(
+        f"bert_tiny.hlo.txt params=x4[{cfg.seq_len},{cfg.d_model}]"
+        f"+{len(names)} weight tensors (see weights.bin order)"
+        f" -> (logits[{cfg.n_classes}], h[{cfg.seq_len},{cfg.d_model}])")
+
+    # Standalone Pallas kernels (runtime equivalence tests load these).
+    seq, d, fc_scale = 8, 64, 64
+    fc = functools.partial(fc_quant_pallas, scale=fc_scale)
+    low = jax.jit(lambda x, w: (fc(x, w),)).lower(
+        jax.ShapeDtypeStruct((seq, d), jnp.int32),
+        jax.ShapeDtypeStruct((d, d), jnp.int32))
+    with open(f"{od}/fc_quant.hlo.txt", "w") as f:
+        f.write(to_hlo_text(low))
+    manifest.append(f"fc_quant.hlo.txt x[{seq},{d}] w[{d},{d}] scale={fc_scale}")
+
+    low = jax.jit(
+        lambda x: (softmax_quant_pallas(x, cfg.sm_sx),)
+    ).lower(jax.ShapeDtypeStruct((seq, seq), jnp.int32))
+    with open(f"{od}/softmax_quant.hlo.txt", "w") as f:
+        f.write(to_hlo_text(low))
+    manifest.append(f"softmax_quant.hlo.txt x[{seq},{seq}] sx={cfg.sm_sx}")
+
+    with open(f"{od}/MANIFEST.txt", "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {od}")
+
+
+if __name__ == "__main__":
+    main()

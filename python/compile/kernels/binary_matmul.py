@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: binary-weight (+/-1) x int4 quantized matmul.
+
+This is the compute hot-spot of the quantized BERT model: every FC layer is
+``trc16_to4( (scale*W) @ x  mod 2^16 )`` with W in {-1,+1} and x a signed
+4-bit activation (paper Alg. 3).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): W is +/-1 so the MXU-friendly
+form is ``W@x = 2*(B@x) - sum(x)`` with B in {0,1}; here we keep the direct
+int32 dot and tile (BM, K) x (K, BN) blocks into VMEM via BlockSpec. The
+kernel MUST be lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK16 = 0xFFFF
+
+
+def _fc_kernel(x_ref, w_ref, o_ref, *, scale):
+    """One (BM, BN) output tile: acc = x_tile @ (scale*w_tile)^T, trc to 4b."""
+    x = x_ref[...].astype(jnp.int32)          # [BM, K]
+    w = w_ref[...].astype(jnp.int32)          # [BN, K]
+    acc = jax.lax.dot_general(
+        x, w * scale,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc & MASK16
+    top = acc >> 12
+    o_ref[...] = ((top & 0xF) ^ 0x8) - 0x8    # signed4
+
+
+def fc_quant_pallas(x4, w_sign, scale, block_m=None, block_n=None):
+    """Pallas binary-FC. x4 [M, K] int32 signed-4b, w_sign [N, K] {-1,+1}.
+
+    Grid tiles the output [M, N]; the full K dimension is kept resident in
+    VMEM per tile (K <= 3072 -> x tile 128x3072x4B = 1.5 MB, w tile same;
+    fits VMEM with double buffering).
+    """
+    m, k = x4.shape
+    n, k2 = w_sign.shape
+    assert k == k2, (x4.shape, w_sign.shape)
+    bm = block_m or min(m, 128)
+    bn = block_n or min(n, 128)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_fc_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU-PJRT can only run interpreted Pallas
+    )(x4, w_sign)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, scale):
+    """Activation x activation tile: acc = scale * (a @ b) over Z_2^16."""
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ) * scale
+    acc = acc & MASK16
+    top = acc >> 12
+    o_ref[...] = ((top & 0xF) ^ 0x8) - 0x8
+
+
+def matmul_quant_pallas(a4, b4, scale):
+    """Pallas activation-activation quantized matmul: [M,K] @ [K,N] -> 4b."""
+    m, k = a4.shape
+    k2, n = b4.shape
+    assert k == k2
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, scale=scale),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a4, b4)

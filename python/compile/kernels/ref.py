@@ -1,0 +1,208 @@
+"""Pure-jnp integer reference semantics — THE specification.
+
+Every other implementation (the Pallas kernels, the L2 jax model, the Rust
+native plaintext model in ``rust/src/runtime/native.rs``, and the Rust MPC
+protocols in ``rust/src/protocols/``) must agree with these functions
+bit-exactly (MPC is allowed +/-1 LSB at local-truncation points, see
+DESIGN.md).
+
+Quantization scheme (paper, "Our BERT Model Structure"):
+  * weights   : 1 bit,  W in {-1, +1}, with a per-layer integer scale
+                ``scale = floor(2^12 * s_w * s_x / s_y)``
+  * activations: 4 bit, signed in [-8, 7] or unsigned in [0, 15]
+  * linear layers run over the 16-bit ring Z_2^16; the rescale to 4 bits is
+    ``trc(acc, 4)`` = keep the top 4 bits (acc >> 12), which is exact
+    because the scale shifts the quantized output into the top nibble
+    (paper, Alg. 3)
+  * softmax runs over the 8-bit ring with a 4-bit exp LUT and a two-input
+    4x4-bit division LUT (paper, Fig. 4)
+
+All tensors are int32; ring arithmetic is emulated with masks.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+MASK4 = 0xF
+MASK8 = 0xFF
+MASK16 = 0xFFFF
+
+
+def table_lookup(table, idx):
+    """Gather-free table lookup: one-hot(idx) @ table.
+
+    The AOT interchange (HLO text through xla_extension 0.5.1) mis-parses
+    jax's ``gather`` encoding — the executable returns the *indices* — so
+    every table lookup on the artifact path is expressed as a one-hot
+    matmul instead. This is also the TPU-friendly formulation (MXU work,
+    no dynamic addressing; see DESIGN.md §Hardware-Adaptation).
+    """
+    n = table.shape[0]
+    onehot = (idx[..., None] == jnp.arange(n, dtype=jnp.int32)).astype(jnp.int32)
+    return onehot @ table
+
+
+def signed4(v):
+    """Interpret the low 4 bits of ``v`` as a signed 4-bit value in [-8, 7]."""
+    return ((v & MASK4) ^ 0x8) - 0x8
+
+
+def signed_width(v, bits):
+    """Interpret the low ``bits`` bits of ``v`` as signed two's complement."""
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    return ((v & mask) ^ sign) - sign
+
+
+def trc16_to4(acc16):
+    """Paper's trc(x, 4) on the 16-bit ring: keep the top nibble, signed."""
+    return signed4((acc16 & MASK16) >> 12)
+
+
+# ---------------------------------------------------------------------------
+# Linear layers (paper Alg. 3 / Eq. 1-2)
+# ---------------------------------------------------------------------------
+
+def fc_quant(x4, w_sign, scale):
+    """Binary-weight fully connected layer.
+
+    x4     : int32 [.., n] signed 4-bit activations in [-8, 7]
+    w_sign : int32 [m, n]  binary weights in {-1, +1}
+    scale  : int           floor(2^12 * s_w * s_x / s_y), |scale| < 2^15
+
+    Returns int32 [.., m] signed 4-bit outputs.
+
+    Semantics: acc = sum_i (scale * W_i) * x_i over Z_2^16; out = trc(acc,4).
+    Products are up to 2^15*8 = 2^18 and we sum at most 3072 of them, which
+    stays inside int32 when |scale| <= 2^12 (the model configs guarantee
+    much smaller scales), so a single int32 dot is exact before the mod.
+    """
+    wq = (w_sign * scale).astype(jnp.int32)
+    acc = jnp.matmul(x4.astype(jnp.int32), wq.T)
+    return trc16_to4(acc)
+
+
+def matmul_quant(a4, b4, scale):
+    """Activation x activation quantized matmul (e.g. Q @ K^T).
+
+    a4 [.., m, k], b4 [.., k, n] signed 4-bit; result signed 4-bit.
+    acc = scale * (a @ b) over Z_2^16, out = trc(acc, 4).
+    """
+    acc = jnp.matmul(a4.astype(jnp.int32), b4.astype(jnp.int32)) * scale
+    return trc16_to4(acc)
+
+
+# ---------------------------------------------------------------------------
+# Quantized softmax (paper, "Softmax" + Fig. 4)
+# ---------------------------------------------------------------------------
+
+def exp_table(sx):
+    """T_exp[d mod 16] = round(15 * exp(sx * d)) for d in [-15, 0].
+
+    Index is (d mod 16): d=0 -> 0, d=-1 -> 15, ..., d=-15 -> 1.
+    Output is a 4-bit value in [0, 15] stored in an 8-bit ring.
+    """
+    t = np.zeros(16, dtype=np.int32)
+    for d in range(-15, 1):
+        t[d % 16] = int(round(15.0 * np.exp(sx * d)))
+    return jnp.asarray(t)
+
+
+def div_table():
+    """T_div[num || den] = clip(round(16*num / (16*den + 8)), 0, 15).
+
+    ``num`` is the 4-bit numerator e_i, ``den`` is the middle-4-bits of the
+    8-bit denominator D (i.e. D >> 4). den==0 means D in [15,16) (at least
+    one exp entry equals 15), handled as round(16*num/15).
+    """
+    t = np.zeros(256, dtype=np.int32)
+    for num in range(16):
+        for den in range(16):
+            d_est = 16 * den + 8 if den > 0 else 15
+            t[num * 16 + den] = int(np.clip(round(16.0 * num / d_est), 0, 15))
+    return jnp.asarray(t)
+
+
+def softmax_quant(x4, sx):
+    """Quantized softmax over the last axis.
+
+    x4 : int32 [.., n] signed 4-bit scores.
+    Returns int32 [.., n] unsigned 4-bit attention weights in [0, 15].
+
+    Pipeline (identical to the MPC protocol):
+      xo  = max(x)                          (Pi_max)
+      d   = (x - xo) mod 16                 (local)
+      e   = T_exp[d]                        (Pi_look, 4->8 bit)
+      D   = sum(e) mod 256                  (local, 8-bit ring)
+      num = e & 0xF                         (local: low bits of add. shares)
+      den = mid4(D) = (D >> 4) & 0xF        (Pi_look, 8->4 bit)
+      out = T_div[num || den]               (Pi_look^{4,4}, two-input)
+    """
+    te = exp_table(sx)
+    td = div_table()
+    xo = jnp.max(x4, axis=-1, keepdims=True)
+    d = (x4 - xo) & MASK4
+    e = table_lookup(te, d)
+    big = jnp.sum(e, axis=-1, keepdims=True) & MASK8
+    num = e & MASK4
+    den = (big >> 4) & MASK4
+    return table_lookup(td, num * 16 + den)
+
+
+# ---------------------------------------------------------------------------
+# ReLU / LayerNorm (paper, "ReLU" / "LayerNorm")
+# ---------------------------------------------------------------------------
+
+def relu_quant(x4):
+    """ReLU on signed 4-bit values (a 16-entry LUT in the MPC protocol)."""
+    return jnp.maximum(x4, 0)
+
+
+def ln_mean(x16, n):
+    """Paper's homomorphic quantized mean: floor(2^12/n)*sum -> top nibble."""
+    s = jnp.sum(x16.astype(jnp.int32), axis=-1, keepdims=True)
+    m16 = (s * (4096 // n)) & MASK16
+    return signed4(m16 >> 12)
+
+
+def ln_div_table(s_v, eps):
+    """T_ln[a6 || v4] = clip(round(a / sqrt(v*s_v + eps)), -8, 7) mod 16.
+
+    ``a6`` is (x - mu) mod 64 (signed 6-bit, bijective for [-32,31]);
+    ``v4`` is the 4-bit quantized variance. Output signed 4-bit (mod-16).
+    This is the paper's "lookup table with two 4-bit inputs" generalized to
+    a (6,4)-bit split — our Pi_look^{b1,b2} supports arbitrary splits.
+    """
+    t = np.zeros(64 * 16, dtype=np.int32)
+    for a6 in range(64):
+        a = (a6 ^ 0x20) - 0x20  # signed 6-bit
+        for v4 in range(16):
+            denom = np.sqrt(v4 * s_v + eps)
+            u = int(np.clip(round(a / denom), -8, 7))
+            t[a6 * 16 + v4] = u & MASK4
+    return jnp.asarray(t)
+
+
+def layernorm_quant(x16, n, s_v, eps, gamma_sign, gamma_scale, beta4):
+    """Quantized LayerNorm over the last axis of x16 (values in ~[-32,31]).
+
+    x16        : int32 [.., n] small signed values held in the 16-bit ring
+    gamma_sign : int32 [n] in {-1,+1}   (binarized LN weight)
+    gamma_scale: int                     (floor(2^12 * s_g * s_u / s_out))
+    beta4      : int32 [n] signed 4-bit  (quantized LN bias)
+
+    Returns signed 4-bit output.
+    """
+    mu = ln_mean(x16, n)
+    diff = x16 - mu
+    a = diff & 0x3F  # signed 6-bit residual index
+    # variance: sum (x-mu)^2, rescale by floor(2^12/n), keep the top nibble.
+    var = jnp.sum(diff * diff, axis=-1, keepdims=True)
+    v16 = (var * (4096 // n)) & MASK16
+    v4 = (v16 >> 12) & MASK4  # unsigned 4-bit quantized variance
+    tln = ln_div_table(s_v, eps)
+    u4 = signed4(table_lookup(tln, a * 16 + v4))
+    # gamma/beta: elementwise binary-weight multiply + rescale + add (4-bit).
+    acc = (u4 * gamma_sign * gamma_scale) & MASK16
+    g = trc16_to4(acc)
+    return signed4((g + beta4) & MASK4)

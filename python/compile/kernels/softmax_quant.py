@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: quantized softmax (paper, "Softmax" + Fig. 4).
+
+Implements the exact integer pipeline of the MPC protocol (max -> exp LUT
+-> 8-bit-ring sum -> mid-4-bit denominator -> two-input division LUT) as a
+Pallas kernel so it lowers into the same HLO module as the matmul kernels.
+
+The two 16/256-entry tables are baked into the kernel as constants — on a
+real TPU they are VMEM-resident for the whole kernel (DESIGN.md
+§Hardware-Adaptation); lookups are VPU gathers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+MASK4 = 0xF
+MASK8 = 0xFF
+
+
+def _softmax_kernel(x_ref, te_ref, td_ref, o_ref):
+    """Rows of quantized softmax. x [BM, N] signed-4b int32."""
+    x = x_ref[...]
+    te = te_ref[...]
+    td = td_ref[...]
+    xo = jnp.max(x, axis=-1, keepdims=True)
+    d = (x - xo) & MASK4
+    e = ref.table_lookup(te, d)
+    big = jnp.sum(e, axis=-1, keepdims=True) & MASK8
+    num = e & MASK4
+    den = (big >> 4) & MASK4
+    o_ref[...] = ref.table_lookup(td, num * 16 + den)
+
+
+def softmax_quant_pallas(x4, sx, block_m=None):
+    """Pallas quantized softmax over the last axis of x4 [M, N]."""
+    m, n = x4.shape
+    bm = block_m or min(m, 128)
+    assert m % bm == 0
+    te = ref.exp_table(sx).astype(jnp.int32)
+    td = ref.div_table().astype(jnp.int32)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x4, te, td)

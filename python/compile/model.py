@@ -1,0 +1,291 @@
+"""L2: quantized BERT forward pass in JAX (integer-faithful).
+
+The forward pass composes the L1 Pallas kernels (binary-FC, quantized
+softmax) plus the ref.py LayerNorm/ReLU semantics into the full encoder
+stack of the paper's 1-bit-weight / 4-bit-activation BERT.
+
+Scales are *calibrated per layer and per op* — the paper's "fine-grained,
+layerwise quantization": each op's integer rescale factor
+``floor(2^12 * s_w * s_x / s_y)`` is chosen from the activation
+distribution on a calibration input so the 4-bit output occupies its full
+range. Calibrated scales are static Python ints at lowering time (they are
+baked into the HLO artifact and shipped to Rust in the weights file).
+
+This module is build-time only: ``aot.py`` lowers ``bert_forward`` once to
+HLO text; the Rust runtime executes the artifact as the trusted plaintext
+oracle. The MPC protocols in rust/src/protocols/ implement the same
+integer pipeline over secret shares.
+
+Weights are synthetic (seeded numpy RNG — the BiT checkpoint is not
+reachable offline, see DESIGN.md §Substitutions) but the *semantics* are
+exactly the paper's.
+"""
+
+import dataclasses
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.binary_matmul import fc_quant_pallas, matmul_quant_pallas
+from .kernels.softmax_quant import softmax_quant_pallas
+
+MASK16 = 0xFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """Model + quantization configuration (mirrors rust/src/model/config.rs)."""
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    seq_len: int = 32
+    n_classes: int = 2
+    scale_cls: int = 16
+    # softmax input dequantization scale s_x; LN variance scale and eps
+    sm_sx: float = 0.5
+    ln_sv: float = 4.0
+    ln_eps: float = 1.0
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+TINY = BertConfig(n_layers=2, d_model=64, n_heads=2, d_ff=128, seq_len=8)
+BASE = BertConfig()
+
+# Deterministic parameter order for AOT lowering / the weights artifact.
+LAYER_PARAMS = ["wq", "wk", "wv", "wo", "w1", "w2",
+                "ln1_g", "ln1_b", "ln2_g", "ln2_b"]
+# Per-layer calibrated scale names (scalars, stored in the weights file).
+LAYER_SCALES = ["qkv", "att", "av", "o", "f1", "f2", "g1", "g2"]
+
+
+def param_order(cfg):
+    """Flat tensor-parameter list; the .weights.bin artifact uses this order."""
+    names = []
+    for i in range(cfg.n_layers):
+        names.extend(f"layer{i}.{p}" for p in LAYER_PARAMS)
+    names.append("cls.w")
+    return names
+
+
+def scale_order(cfg):
+    names = []
+    for i in range(cfg.n_layers):
+        names.extend(f"layer{i}.s_{s}" for s in LAYER_SCALES)
+    return names
+
+
+def gen_weights(cfg, seed=7):
+    """Synthetic 1-bit weights + quantized LN params, as a name->array dict."""
+    rng = np.random.default_rng(seed)
+
+    def sign(shape):
+        return (rng.integers(0, 2, size=shape, dtype=np.int64) * 2 - 1).astype(np.int32)
+
+    w = {}
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        w[p + "wq"] = sign((cfg.d_model, cfg.d_model))
+        w[p + "wk"] = sign((cfg.d_model, cfg.d_model))
+        w[p + "wv"] = sign((cfg.d_model, cfg.d_model))
+        w[p + "wo"] = sign((cfg.d_model, cfg.d_model))
+        w[p + "w1"] = sign((cfg.d_ff, cfg.d_model))
+        w[p + "w2"] = sign((cfg.d_model, cfg.d_ff))
+        w[p + "ln1_g"] = sign((cfg.d_model,))
+        w[p + "ln1_b"] = rng.integers(-4, 5, size=(cfg.d_model,)).astype(np.int32)
+        w[p + "ln2_g"] = sign((cfg.d_model,))
+        w[p + "ln2_b"] = rng.integers(-4, 5, size=(cfg.d_model,)).astype(np.int32)
+    w["cls.w"] = sign((cfg.n_classes, cfg.d_model))
+    return w
+
+
+def gen_input(cfg, seed=11):
+    """Synthetic quantized embedding input: signed 4-bit [seq, d_model]."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 8, size=(cfg.seq_len, cfg.d_model)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Scale calibration (the paper's fine-grained layerwise quantization)
+# ---------------------------------------------------------------------------
+
+def _pick_scale(acc):
+    """Choose scale s.t. trc(scale*acc, 4) spans the signed 4-bit range.
+
+    acc is the raw integer pre-scale accumulator; we target p99(|acc|)
+    mapping to ~7 after the >>12, i.e. scale ~= 7*2^12 / p99.
+    """
+    p99 = float(np.percentile(np.abs(np.asarray(acc, dtype=np.int64)), 99))
+    return int(np.clip(round(7 * 4096.0 / max(p99, 1.0)), 1, 4095))
+
+
+def calibrate(cfg, weights, x4):
+    """Run the plaintext forward once in numpy, picking each op's scale."""
+    scales = {}
+    h = np.asarray(x4, dtype=np.int64)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        w = {k.split(".", 1)[1]: np.asarray(weights[k], dtype=np.int64)
+             for k in weights if k.startswith(p)}
+
+        acc = np.concatenate([h @ w[m].T for m in ("wq", "wk", "wv")])
+        s_qkv = _pick_scale(acc)
+        scales[p + "s_qkv"] = s_qkv
+        q, k_, v = (np.asarray(ref.fc_quant(h, w[m], s_qkv))
+                    for m in ("wq", "wk", "wv"))
+
+        dh = cfg.d_head
+        heads = [(q[:, j*dh:(j+1)*dh], k_[:, j*dh:(j+1)*dh], v[:, j*dh:(j+1)*dh])
+                 for j in range(cfg.n_heads)]
+        acc = np.concatenate([qs @ ks.T for qs, ks, _ in heads])
+        s_att = _pick_scale(acc)
+        scales[p + "s_att"] = s_att
+        attns = [np.asarray(ref.softmax_quant(
+            jnp.asarray(ref.matmul_quant(qs, ks.T, s_att)), cfg.sm_sx))
+            for qs, ks, _ in heads]
+        acc = np.concatenate([a.astype(np.int64) @ vs for a, (_, _, vs)
+                              in zip(attns, heads)])
+        s_av = _pick_scale(acc)
+        scales[p + "s_av"] = s_av
+        ctx = np.concatenate(
+            [np.asarray(ref.matmul_quant(a, vs, s_av))
+             for a, (_, _, vs) in zip(attns, heads)], axis=-1)
+
+        acc = ctx.astype(np.int64) @ w["wo"].T
+        s_o = _pick_scale(acc)
+        scales[p + "s_o"] = s_o
+        o4 = np.asarray(ref.fc_quant(ctx, w["wo"], s_o))
+
+        res = h + o4
+        scales[p + "s_g1"] = 2048  # u4<<11 >>12 = u4/2: keeps LN output 4-bit
+        h = np.asarray(ref.layernorm_quant(jnp.asarray(res), cfg.d_model,
+                                           cfg.ln_sv, cfg.ln_eps,
+                                           jnp.asarray(weights[p + "ln1_g"]),
+                                           2048, jnp.asarray(weights[p + "ln1_b"])))
+
+        acc = h.astype(np.int64) @ w["w1"].T
+        s_f1 = _pick_scale(acc)
+        scales[p + "s_f1"] = s_f1
+        u = np.maximum(np.asarray(ref.fc_quant(h, w["w1"], s_f1)), 0)
+
+        acc = u.astype(np.int64) @ w["w2"].T
+        s_f2 = _pick_scale(acc)
+        scales[p + "s_f2"] = s_f2
+        f = np.asarray(ref.fc_quant(u, w["w2"], s_f2))
+
+        res2 = h + f
+        scales[p + "s_g2"] = 2048
+        h = np.asarray(ref.layernorm_quant(jnp.asarray(res2), cfg.d_model,
+                                           cfg.ln_sv, cfg.ln_eps,
+                                           jnp.asarray(weights[p + "ln2_g"]),
+                                           2048, jnp.asarray(weights[p + "ln2_b"])))
+    return scales
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def attention(cfg, h4, p, s, use_pallas=True):
+    """Multi-head self attention over signed 4-bit activations."""
+    fc = fc_quant_pallas if use_pallas else ref.fc_quant
+    mm = matmul_quant_pallas if use_pallas else ref.matmul_quant
+    sm = ((lambda x: softmax_quant_pallas(x, cfg.sm_sx)) if use_pallas
+          else (lambda x: ref.softmax_quant(x, cfg.sm_sx)))
+    q = fc(h4, p["wq"], s["s_qkv"])
+    k = fc(h4, p["wk"], s["s_qkv"])
+    v = fc(h4, p["wv"], s["s_qkv"])
+    dh = cfg.d_head
+    ctx = []
+    for hd in range(cfg.n_heads):
+        qs, ks, vs = (t[:, hd * dh:(hd + 1) * dh] for t in (q, k, v))
+        scores = mm(qs, ks.T, s["s_att"])
+        attn = sm(scores)
+        ctx.append(mm(attn, vs, s["s_av"]))
+    c = jnp.concatenate(ctx, axis=-1)
+    return fc(c, p["wo"], s["s_o"])
+
+
+def encoder_layer(cfg, h4, p, s, use_pallas=True):
+    """One transformer encoder layer (attention + FFN, residual + quant LN)."""
+    fc = fc_quant_pallas if use_pallas else ref.fc_quant
+    o4 = attention(cfg, h4, p, s, use_pallas)
+    res = h4 + o4  # 16-bit-ring residual (range ~[-16,14])
+    h4 = ref.layernorm_quant(res, cfg.d_model, cfg.ln_sv, cfg.ln_eps,
+                             p["ln1_g"], s["s_g1"], p["ln1_b"])
+    u = fc(h4, p["w1"], s["s_f1"])
+    u = ref.relu_quant(u)
+    f = fc(u, p["w2"], s["s_f2"])
+    res2 = h4 + f
+    return ref.layernorm_quant(res2, cfg.d_model, cfg.ln_sv, cfg.ln_eps,
+                               p["ln2_g"], s["s_g2"], p["ln2_b"])
+
+
+def bert_forward(cfg, x4, flat_weights, scales, use_pallas=True):
+    """Full encoder + classifier.
+
+    ``flat_weights`` follows param_order(cfg); ``scales`` is the calibrated
+    name->int dict (static). Returns (logits16, h4): signed 16-bit
+    classifier logits over the CLS (first) token and the final hidden
+    activations (signed 4-bit).
+    """
+    names = param_order(cfg)
+    w = dict(zip(names, flat_weights))
+    h = x4
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        p = {k.split(".", 1)[1]: v for k, v in w.items() if k.startswith(pref)}
+        s = {k.split(".", 1)[1]: v for k, v in scales.items()
+             if k.startswith(pref)}
+        h = encoder_layer(cfg, h, p, s, use_pallas)
+    cls_w = (w["cls.w"] * cfg.scale_cls).astype(jnp.int32)
+    acc = jnp.matmul(h[0].astype(jnp.int32), cls_w.T) & MASK16
+    logits = ref.signed_width(acc, 16)
+    return logits, h
+
+
+# ---------------------------------------------------------------------------
+# Weights artifact writer (consumed by rust/src/model/weights.rs)
+# ---------------------------------------------------------------------------
+
+MAGIC = b"PPQW"
+
+
+def write_weights(path, cfg, weights, scales):
+    """Binary weights file: MAGIC, header, scale table, tensors in order.
+
+    Layout (little-endian):
+      magic[4] | n_layers d_model n_heads d_ff seq_len n_classes (u32 x6)
+      | scale_cls (i32) | sm_sx ln_sv ln_eps (f64 x3)
+      | n_scales (u32) | per scale: name_len(u32) name value(i32)
+      | n_tensors (u32) | per tensor: name_len(u32) name ndim(u32)
+        dims(u32*) data(i32*, row-major)
+    """
+    names = param_order(cfg)
+    snames = scale_order(cfg)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<6I", cfg.n_layers, cfg.d_model, cfg.n_heads,
+                            cfg.d_ff, cfg.seq_len, cfg.n_classes))
+        f.write(struct.pack("<i", cfg.scale_cls))
+        f.write(struct.pack("<3d", cfg.sm_sx, cfg.ln_sv, cfg.ln_eps))
+        f.write(struct.pack("<I", len(snames)))
+        for name in snames:
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<i", int(scales[name])))
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            arr = np.ascontiguousarray(weights[name], dtype=np.int32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())

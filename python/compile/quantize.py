@@ -1,0 +1,262 @@
+"""Quantization-aware training + distillation — reproduces Fig. 1 / Table 1.
+
+The paper trains a 1-bit-weight BERT (BiT recipe: binarize weights around
+zero with a learned per-layer scale, fake-quantize activations to b bits,
+then distill from a full-precision teacher) and reports accuracy vs
+activation bit-width (Fig. 1) and GLUE accuracy at 1w/4a (Table 1).
+
+GLUE and the BiT checkpoint are unreachable offline, so this module
+reproduces the *trend* on synthetic GLUE-like sequence-classification
+tasks with a tiny transformer trained from scratch (DESIGN.md
+§Substitutions #1). The quantization scheme itself is exactly the paper's:
+
+  W_q   = sign(W - mean(W)) * alpha_W,  alpha_W = mean(|W - mean(W)|)
+  x_q   = clip(round(x / alpha_x), lo, hi) * alpha_x   (per-tensor scale,
+          symmetric for signed, asymmetric for post-ReLU activations)
+  straight-through estimator for both; distillation = KL(student||teacher
+  logits) + MSE on hidden states.
+
+Usage:
+  python -m compile.quantize --sweep            # Fig. 1 (bits 1,2,3,4,6,8)
+  python -m compile.quantize --table1           # Table 1 analog
+  python -m compile.quantize --bits 4 --steps 400
+"""
+
+import argparse
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Synthetic GLUE-like tasks
+# ---------------------------------------------------------------------------
+
+VOCAB = 32
+SEQ = 16
+
+
+def make_task(name, rng, n):
+    """Three tasks of graded difficulty (analogs of GLUE task families)."""
+    toks = rng.integers(2, VOCAB, size=(n, SEQ))
+    if name == "majority":       # SST-2-like: global evidence pooling
+        a = (toks < (2 + (VOCAB - 2) // 2)).sum(axis=1)
+        y = (a > SEQ // 2).astype(np.int32)
+    elif name == "firstlast":    # MRPC/STS-like: token matching
+        y = rng.integers(0, 2, size=n).astype(np.int32)
+        toks[:, -1] = np.where(y == 1, toks[:, 0],
+                               (toks[:, 0] + 1 - 2) % (VOCAB - 2) + 2)
+    elif name == "order":        # RTE/QNLI-like: ordered-pair detection
+        y = rng.integers(0, 2, size=n).astype(np.int32)
+        pos = rng.integers(0, SEQ - 1, size=n)
+        for i in range(n):
+            if y[i]:
+                toks[i, pos[i]] = 2
+                toks[i, pos[i] + 1] = 3
+            else:
+                toks[i, toks[i] == 2] = 4
+    else:
+        raise ValueError(name)
+    return toks.astype(np.int32), y
+
+
+TASKS = ["majority", "firstlast", "order"]
+
+# ---------------------------------------------------------------------------
+# Tiny transformer with quantization-aware forward
+# ---------------------------------------------------------------------------
+
+D, HEADS, LAYERS, FF = 32, 2, 2, 64
+
+
+def init_params(rng):
+    def mat(key, m, n):
+        return jax.random.normal(key, (m, n)) * (1.0 / np.sqrt(n))
+    keys = jax.random.split(rng, 4 + LAYERS * 8)
+    p = {"emb": jax.random.normal(keys[0], (VOCAB, D)) * 0.5,
+         "pos": jax.random.normal(keys[1], (SEQ, D)) * 0.1,
+         "cls": mat(keys[2], 2, D)}
+    k = 3
+    for i in range(LAYERS):
+        for w, (m, n) in [("wq", (D, D)), ("wk", (D, D)), ("wv", (D, D)),
+                          ("wo", (D, D)), ("w1", (FF, D)), ("w2", (D, FF))]:
+            p[f"l{i}.{w}"] = mat(keys[k], m, n)
+            k += 1
+        p[f"l{i}.g1"] = jnp.ones(D)
+        p[f"l{i}.b1"] = jnp.zeros(D)
+        p[f"l{i}.g2"] = jnp.ones(D)
+        p[f"l{i}.b2"] = jnp.zeros(D)
+    return p
+
+
+def ste(x, xq):
+    """Straight-through estimator: forward xq, backward identity."""
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def binarize_w(w):
+    """Paper's 1-bit weight quantizer: center, sign, per-tensor scale."""
+    c = w - jnp.mean(w)
+    alpha = jnp.mean(jnp.abs(c)) + 1e-8
+    return ste(w, jnp.sign(c) * alpha)
+
+
+def quant_act(x, bits, signed=True):
+    """Fake-quantize activations to ``bits`` with a dynamic scale (STE)."""
+    if bits >= 32:
+        return x
+    if signed:
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        alpha = jnp.maximum(jnp.std(x) * 2.5, 1e-6) / max(-lo, 1)
+    else:
+        lo, hi = 0, 2 ** bits - 1
+        alpha = jnp.maximum(jnp.max(jax.lax.stop_gradient(x)), 1e-6) / hi
+    q = jnp.clip(jnp.round(x / alpha), lo, hi) * alpha
+    return ste(x, q)
+
+
+def forward(p, toks, wbits, abits):
+    """Transformer forward; wbits in {1, 32}, abits in {1..8, 32}."""
+    qw = binarize_w if wbits == 1 else (lambda w: w)
+    qa = (lambda x, signed=True: quant_act(x, abits, signed))
+    h = p["emb"][toks] + p["pos"]
+    hidden = []
+    for i in range(LAYERS):
+        x = qa(h)
+        q = x @ qw(p[f"l{i}.wq"]).T
+        k = x @ qw(p[f"l{i}.wk"]).T
+        v = x @ qw(p[f"l{i}.wv"]).T
+        dh = D // HEADS
+        outs = []
+        for hd in range(HEADS):
+            sl = slice(hd * dh, (hd + 1) * dh)
+            s = qa(q[..., sl]) @ qa(k[..., sl]).swapaxes(-1, -2) / np.sqrt(dh)
+            a = jax.nn.softmax(s, axis=-1)
+            outs.append(qa(a, signed=False) @ qa(v[..., sl]))
+        o = jnp.concatenate(outs, axis=-1) @ qw(p[f"l{i}.wo"]).T
+        h = h + o
+        mu = h.mean(-1, keepdims=True)
+        sd = h.std(-1, keepdims=True) + 1e-5
+        h = (h - mu) / sd * p[f"l{i}.g1"] + p[f"l{i}.b1"]
+        u = jax.nn.relu(qa(h) @ qw(p[f"l{i}.w1"]).T)
+        f = qa(u, signed=False) @ qw(p[f"l{i}.w2"]).T
+        h = h + f
+        mu = h.mean(-1, keepdims=True)
+        sd = h.std(-1, keepdims=True) + 1e-5
+        h = (h - mu) / sd * p[f"l{i}.g2"] + p[f"l{i}.b2"]
+        hidden.append(h)
+    logits = h[:, 0, :] @ p["cls"].T
+    return logits, hidden
+
+
+# ---------------------------------------------------------------------------
+# Training (hand-rolled Adam — optax is not available offline)
+# ---------------------------------------------------------------------------
+
+def adam_init(p):
+    z = jax.tree.map(jnp.zeros_like, p)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, p), "t": 0}
+
+
+def adam_step(p, g, st, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = st["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, st["m"], g)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, st["v"], g)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    p = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), p, mh, vh)
+    return p, {"m": m, "v": v, "t": t}
+
+
+def train(task, wbits, abits, steps, seed=0, teacher=None, log=None):
+    rng = np.random.default_rng(seed)
+    toks, y = make_task(task, rng, 4096)
+    toks_te, y_te = make_task(task, np.random.default_rng(seed + 1), 1024)
+    p = init_params(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, tb, yb):
+        logits, hidden = forward(p, tb, wbits, abits)
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(yb)), yb])
+        if teacher is not None:
+            tl, th = forward(teacher, tb, 32, 32)
+            kl = jnp.mean(jnp.sum(
+                jax.nn.softmax(tl) *
+                (jax.nn.log_softmax(tl) - jax.nn.log_softmax(logits)), -1))
+            mse = sum(jnp.mean((a - b) ** 2) for a, b in zip(hidden, th))
+            return ce + kl + 0.1 * mse
+        return ce
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+    st = adam_init(p)
+    bs = 128
+    losses = []
+    for it in range(steps):
+        idx = rng.integers(0, len(y), bs)
+        l, g = grad(p, toks[idx], y[idx])
+        p, st = adam_step(p, g, st)
+        losses.append(float(l))
+        if log and it % 50 == 0:
+            log(f"  step {it:4d} loss {float(l):.4f}")
+    logits, _ = jax.jit(lambda p, t: forward(p, t, wbits, abits))(p, toks_te)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == y_te))
+    return p, acc, losses
+
+
+def run_sweep(steps, out_path):
+    """Fig. 1: accuracy vs activation bits at 1-bit weights (+FP reference)."""
+    results = {}
+    for task in TASKS:
+        print(f"== task {task}")
+        teacher, fp_acc, _ = train(task, 32, 32, steps, log=print)
+        results.setdefault("fp32", {})[task] = fp_acc
+        print(f"  fp32 teacher acc {fp_acc:.3f}")
+        for bits in [1, 2, 3, 4, 6, 8]:
+            _, acc, _ = train(task, 1, bits, steps, teacher=teacher)
+            results.setdefault(f"w1a{bits}", {})[task] = acc
+            print(f"  w1a{bits} acc {acc:.3f}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nFig.1 series (avg over {len(TASKS)} tasks):")
+    for k, v in results.items():
+        print(f"  {k:6s} avg_acc={np.mean(list(v.values())):.3f}")
+    return results
+
+
+def run_table1(steps, out_path):
+    """Table 1 analog: per-task accuracy, FP32 vs 1w/4a distilled."""
+    rows = {}
+    for task in TASKS:
+        teacher, fp_acc, _ = train(task, 32, 32, steps)
+        _, q_acc, _ = train(task, 1, 4, steps, teacher=teacher)
+        rows[task] = {"bert_32_32": fp_acc, "ours_1_4": q_acc}
+        print(f"{task:10s} fp32={fp_acc:.3f} ours(1-4)={q_acc:.3f}")
+    avg = {k: float(np.mean([r[k] for r in rows.values()]))
+           for k in ["bert_32_32", "ours_1_4"]}
+    rows["avg"] = avg
+    print(f"{'avg':10s} fp32={avg['bert_32_32']:.3f} ours(1-4)={avg['ours_1_4']:.3f}")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true", help="Fig. 1 bit sweep")
+    ap.add_argument("--table1", action="store_true", help="Table 1 analog")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--out", default="../artifacts/accuracy.json")
+    args = ap.parse_args()
+    if args.sweep:
+        run_sweep(args.steps, args.out)
+    elif args.table1:
+        run_table1(args.steps, args.out)
+    else:
+        teacher, fp, _ = train("majority", 32, 32, args.steps, log=print)
+        _, q, _ = train("majority", 1, args.bits, args.steps, teacher=teacher)
+        print(f"fp32 acc={fp:.3f}  w1a{args.bits} acc={q:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""AOT lowering regression tests — pins the two silent HLO-text-path
+corruption modes found during bring-up (see DESIGN.md):
+
+  1. ``gather`` ops round-trip as their *indices* through the text parser:
+     no artifact may contain a gather (ref.table_lookup is gather-free).
+  2. large constants must be printed in full (``print_large_constants``),
+     never elided as ``constant({...})``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.binary_matmul import fc_quant_pallas
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def fc_hlo():
+    low = jax.jit(lambda x, w: (fc_quant_pallas(x, w, 64),)).lower(
+        jax.ShapeDtypeStruct((8, 16), jnp.int32),
+        jax.ShapeDtypeStruct((16, 16), jnp.int32))
+    return aot.to_hlo_text(low)
+
+
+def test_hlo_text_is_parseable_module(fc_hlo):
+    assert fc_hlo.startswith("HloModule")
+    assert "ENTRY" in fc_hlo
+
+
+def test_no_gather_in_kernel_hlo(fc_hlo):
+    assert "gather" not in fc_hlo
+
+
+def test_no_elided_constants(fc_hlo):
+    assert "constant({...})" not in fc_hlo
+
+
+def test_softmax_lowering_has_no_gather():
+    from compile.kernels.softmax_quant import softmax_quant_pallas
+    low = jax.jit(lambda x: (softmax_quant_pallas(x, 0.5),)).lower(
+        jax.ShapeDtypeStruct((4, 8), jnp.int32))
+    hlo = aot.to_hlo_text(low)
+    assert "gather" not in hlo
+    assert "constant({...})" not in hlo
+    # the exp/div tables must appear as full constants
+    assert hlo.count("constant(") >= 2
+
+
+def test_table_lookup_matches_indexing():
+    table = jnp.asarray(np.arange(100, 116, dtype=np.int32))
+    idx = jnp.asarray([0, 5, 15, 3], dtype=jnp.int32)
+    got = ref.table_lookup(table, idx)
+    assert (np.asarray(got) == np.asarray(table)[np.asarray(idx)]).all()
+
+
+def test_lower_bert_tiny_artifacts_consistent():
+    """lower_bert returns calibrated scales covering scale_order."""
+    cfg = model.TINY
+    hlo, weights, scales = aot.lower_bert(cfg)
+    assert "gather" not in hlo
+    assert set(scales.keys()) == set(model.scale_order(cfg))
+    assert set(model.param_order(cfg)) == set(weights.keys())

@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp reference — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and values; every case must match ref.py
+bit-exactly (the kernels implement identical integer semantics).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_matmul import fc_quant_pallas, matmul_quant_pallas
+from compile.kernels.softmax_quant import softmax_quant_pallas
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+@given(seed=st.integers(0, 2**31), m=st.sampled_from([1, 2, 4, 8]),
+       k=st.sampled_from([8, 16, 64]), n=st.sampled_from([8, 16, 64]),
+       scale=st.integers(1, 512))
+@settings(**SETTINGS)
+def test_fc_quant_matches_ref(seed, m, k, n, scale):
+    rng = rng_for(seed)
+    x = rng.integers(-8, 8, (m, k)).astype(np.int32)
+    w = (rng.integers(0, 2, (n, k)) * 2 - 1).astype(np.int32)
+    got = fc_quant_pallas(jnp.asarray(x), jnp.asarray(w), scale,
+                          block_m=m, block_n=n)
+    want = ref.fc_quant(jnp.asarray(x), jnp.asarray(w), scale)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@given(seed=st.integers(0, 2**31), m=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([4, 8, 64]), n=st.sampled_from([2, 8, 16]),
+       scale=st.integers(1, 512))
+@settings(**SETTINGS)
+def test_matmul_quant_matches_ref(seed, m, k, n, scale):
+    rng = rng_for(seed)
+    a = rng.integers(-8, 8, (m, k)).astype(np.int32)
+    b = rng.integers(-8, 8, (k, n)).astype(np.int32)
+    got = matmul_quant_pallas(jnp.asarray(a), jnp.asarray(b), scale)
+    want = ref.matmul_quant(jnp.asarray(a), jnp.asarray(b), scale)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@given(seed=st.integers(0, 2**31), m=st.sampled_from([1, 4, 8]),
+       n=st.sampled_from([4, 8, 16, 32]),
+       sx=st.sampled_from([0.125, 0.25, 0.5, 1.0]))
+@settings(**SETTINGS)
+def test_softmax_quant_matches_ref(seed, m, n, sx):
+    rng = rng_for(seed)
+    x = rng.integers(-8, 8, (m, n)).astype(np.int32)
+    got = softmax_quant_pallas(jnp.asarray(x), sx, block_m=m)
+    want = ref.softmax_quant(jnp.asarray(x), sx)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_fc_unsigned_activations():
+    """Post-ReLU activations are unsigned 4-bit [0,15]; semantics identical."""
+    rng = rng_for(3)
+    x = rng.integers(0, 16, (4, 16)).astype(np.int32)
+    w = (rng.integers(0, 2, (8, 16)) * 2 - 1).astype(np.int32)
+    got = fc_quant_pallas(jnp.asarray(x), jnp.asarray(w), 64,
+                          block_m=4, block_n=8)
+    want = ref.fc_quant(jnp.asarray(x), jnp.asarray(w), 64)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_fc_output_range():
+    rng = rng_for(1)
+    x = rng.integers(-8, 8, (8, 64)).astype(np.int32)
+    w = (rng.integers(0, 2, (64, 64)) * 2 - 1).astype(np.int32)
+    out = np.asarray(fc_quant_pallas(jnp.asarray(x), jnp.asarray(w), 64))
+    assert out.min() >= -8 and out.max() <= 7
+
+
+def test_softmax_output_range_and_monotonicity():
+    """Outputs are unsigned 4-bit; the max-score entry gets the max weight."""
+    rng = rng_for(2)
+    for _ in range(20):
+        x = rng.integers(-8, 8, (1, 16)).astype(np.int32)
+        out = np.asarray(ref.softmax_quant(jnp.asarray(x), 0.25))[0]
+        assert out.min() >= 0 and out.max() <= 15
+        assert out[np.argmax(x[0])] == out.max()
+
+
+def test_exp_table_monotone():
+    t = np.asarray(ref.exp_table(0.25))
+    vals = [t[d % 16] for d in range(-15, 1)]
+    assert vals == sorted(vals)
+    assert vals[-1] == 15  # e^0 -> full scale
+    assert all(0 <= v <= 15 for v in vals)
+
+
+def test_div_table_properties():
+    t = np.asarray(ref.div_table())
+    assert t.min() >= 0 and t.max() <= 15
+    # num=0 -> 0 regardless of denominator
+    assert all(t[0 * 16 + d] == 0 for d in range(16))
+    # fixed denominator: monotone in numerator
+    for d in range(16):
+        col = [t[n * 16 + d] for n in range(16)]
+        assert col == sorted(col)
+
+
+def test_softmax_quant_vs_float_softmax():
+    """Quantized softmax approximates float softmax on peaked scores."""
+    rng = rng_for(5)
+    sx = 0.5
+    errs = []
+    for _ in range(50):
+        x = rng.integers(-8, 8, (1, 16)).astype(np.int32)
+        q = np.asarray(ref.softmax_quant(jnp.asarray(x), sx))[0] / 16.0
+        f = np.exp(sx * (x[0] - x[0].max()))
+        f = f / f.sum()
+        errs.append(np.abs(q - f).max())
+    assert np.mean(errs) < 0.15, np.mean(errs)

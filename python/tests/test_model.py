@@ -1,0 +1,117 @@
+"""L2 model tests: calibration, full forward, pallas==ref, weights artifact."""
+
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model.TINY
+    w = model.gen_weights(cfg)
+    scales = model.calibrate(cfg, w, model.gen_input(cfg, seed=5))
+    x = model.gen_input(cfg)
+    names = model.param_order(cfg)
+    return cfg, w, scales, x, names
+
+
+def test_calibration_covers_all_scales(tiny):
+    cfg, w, scales, x, names = tiny
+    assert set(scales.keys()) == set(model.scale_order(cfg))
+    assert all(1 <= v <= 4095 for v in scales.values())
+
+
+def test_forward_shapes(tiny):
+    cfg, w, scales, x, names = tiny
+    logits, h = model.bert_forward(cfg, jnp.asarray(x), [w[n] for n in names],
+                                   scales, use_pallas=False)
+    assert logits.shape == (cfg.n_classes,)
+    assert h.shape == (cfg.seq_len, cfg.d_model)
+
+
+def test_forward_pallas_matches_ref(tiny):
+    cfg, w, scales, x, names = tiny
+    flat = [w[n] for n in names]
+    l1, h1 = model.bert_forward(cfg, jnp.asarray(x), flat, scales, use_pallas=False)
+    l2, h2 = model.bert_forward(cfg, jnp.asarray(x), flat, scales, use_pallas=True)
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    assert (np.asarray(h1) == np.asarray(h2)).all()
+
+
+def test_hidden_is_4bit_and_alive(tiny):
+    cfg, w, scales, x, names = tiny
+    _, h = model.bert_forward(cfg, jnp.asarray(x), [w[n] for n in names],
+                              scales, use_pallas=False)
+    h = np.asarray(h)
+    assert h.min() >= -8 and h.max() <= 7
+    # calibration must keep the representation alive (not collapsed to ~0)
+    assert h.std() > 0.5, h.std()
+
+
+def test_forward_depends_on_input(tiny):
+    cfg, w, scales, x, names = tiny
+    flat = [w[n] for n in names]
+    _, h1 = model.bert_forward(cfg, jnp.asarray(x), flat, scales, use_pallas=False)
+    x2 = model.gen_input(cfg, seed=99)
+    _, h2 = model.bert_forward(cfg, jnp.asarray(x2), flat, scales, use_pallas=False)
+    diff = (np.asarray(h1) != np.asarray(h2)).mean()
+    assert diff > 0.2, f"hidden states nearly input-independent ({diff:.2%})"
+
+
+def test_param_order_stable(tiny):
+    cfg, w, scales, x, names = tiny
+    assert names[0] == "layer0.wq"
+    assert names[-1] == "cls.w"
+    assert len(names) == cfg.n_layers * len(model.LAYER_PARAMS) + 1
+    assert set(names) == set(w.keys())
+
+
+def test_weights_file_roundtrip(tmp_path, tiny):
+    cfg, w, scales, x, names = tiny
+    path = tmp_path / "w.bin"
+    model.write_weights(path, cfg, w, scales)
+    with open(path, "rb") as f:
+        blob = f.read()
+    assert blob[:4] == model.MAGIC
+    hdr = struct.unpack_from("<6I", blob, 4)
+    assert hdr == (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.d_ff,
+                   cfg.seq_len, cfg.n_classes)
+    off = 4 + 24 + 4 + 24
+    (n_scales,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    assert n_scales == len(model.scale_order(cfg))
+    for name in model.scale_order(cfg):
+        (nl,) = struct.unpack_from("<I", blob, off); off += 4
+        assert blob[off:off + nl].decode() == name; off += nl
+        (v,) = struct.unpack_from("<i", blob, off); off += 4
+        assert v == scales[name]
+    (n_tensors,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    assert n_tensors == len(names)
+    for name in names:
+        (nl,) = struct.unpack_from("<I", blob, off); off += 4
+        assert blob[off:off + nl].decode() == name; off += nl
+        (nd,) = struct.unpack_from("<I", blob, off); off += 4
+        dims = struct.unpack_from(f"<{nd}I", blob, off); off += 4 * nd
+        count = int(np.prod(dims))
+        data = np.frombuffer(blob, dtype="<i4", count=count, offset=off)
+        off += 4 * count
+        assert (data.reshape(dims) == np.asarray(w[name])).all()
+    assert off == len(blob)
+
+
+def test_attention_output_range(tiny):
+    cfg, w, scales, x, names = tiny
+    p = {k.split(".", 1)[1]: v for k, v in w.items() if k.startswith("layer0.")}
+    s = {k.split(".", 1)[1]: v for k, v in scales.items()
+         if k.startswith("layer0.")}
+    out = model.attention(cfg, jnp.asarray(x), p, s, use_pallas=False)
+    out = np.asarray(out)
+    assert out.shape == (cfg.seq_len, cfg.d_model)
+    assert out.min() >= -8 and out.max() <= 7
+    assert out.std() > 0.3  # attention signal survives quantization

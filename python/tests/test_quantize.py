@@ -1,0 +1,53 @@
+"""Smoke tests for the QAT/distillation harness (Fig. 1 / Table 1 driver).
+
+Kept fast: a handful of steps, assert learning happens and the quantizers
+behave per spec. The full sweep is run by ``make fig1`` / ``make table1``.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quantize as qz
+
+
+def test_tasks_are_balanced_and_learnable():
+    rng = np.random.default_rng(0)
+    for task in qz.TASKS:
+        toks, y = qz.make_task(task, rng, 512)
+        assert toks.shape == (512, qz.SEQ)
+        assert 0.2 < y.mean() < 0.8, (task, y.mean())
+
+
+def test_binarize_w_is_sign_times_scale():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(8, 8)).astype(np.float32))
+    wq = qz.binarize_w(w)
+    c = w - jnp.mean(w)
+    alpha = float(jnp.mean(jnp.abs(c)))
+    vals = np.unique(np.round(np.abs(np.asarray(wq)), 5))
+    assert np.allclose(vals, round(alpha, 5), atol=1e-4)
+
+
+def test_quant_act_levels():
+    x = jnp.linspace(-3, 3, 101)
+    for bits in [2, 3, 4]:
+        xq = np.asarray(qz.quant_act(x, bits))
+        assert len(np.unique(np.round(xq, 5))) <= 2 ** bits
+
+
+def test_quant_act_identity_at_32():
+    x = jnp.linspace(-3, 3, 11)
+    assert (np.asarray(qz.quant_act(x, 32)) == np.asarray(x)).all()
+
+
+def test_fp32_training_learns_majority():
+    _, acc, losses = qz.train("majority", 32, 32, steps=120, seed=0)
+    assert losses[-1] < losses[0]
+    assert acc > 0.75, acc
+
+
+def test_quantized_training_runs():
+    _, acc, losses = qz.train("majority", 1, 4, steps=60, seed=0)
+    assert np.isfinite(losses).all()
+    assert acc >= 0.45  # must at least not diverge in a short run

@@ -1,0 +1,95 @@
+"""Property tests on the shared integer semantics (ref.py is the spec)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=200, deadline=None)
+
+
+@given(v=st.integers(-8, 7))
+@settings(**SETTINGS)
+def test_signed4_roundtrip(v):
+    assert int(ref.signed4(v & 0xF)) == v
+
+
+@given(v=st.integers(0, 2**16 - 1))
+@settings(**SETTINGS)
+def test_signed_width_16(v):
+    s = int(ref.signed_width(np.int64(v), 16))
+    assert -(2**15) <= s < 2**15
+    assert s % 2**16 == v
+
+
+@given(a=st.integers(0, 2**16 - 1), b=st.integers(0, 2**16 - 1))
+@settings(**SETTINGS)
+def test_low_bits_are_ring_hom(a, b):
+    """mod-2^4 of a mod-2^16 sum == mod-2^4 sum: why 'num' is local in MPC."""
+    assert ((a + b) % 2**16) % 16 == (a % 16 + b % 16) % 16
+
+
+@given(x=st.integers(-(2**15), 2**15 - 1))
+@settings(**SETTINGS)
+def test_trc_top_nibble(x):
+    """trc(x,4) == floor division by 2^12 in signed arithmetic (no wrap)."""
+    got = int(ref.trc16_to4(np.int64(x % 2**16)))
+    want = ((x >> 12) + 8) % 16 - 8
+    assert got == want
+
+
+@given(seed=st.integers(0, 2**31), n=st.sampled_from([4, 16, 64]))
+@settings(max_examples=100, deadline=None)
+def test_ln_mean_exact_spec(seed, n):
+    """ln_mean == signed4( floor(2^12/n)*sum mod 2^16 >> 12 ) exactly."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-16, 15, (1, n)).astype(np.int32)
+    got = int(np.asarray(ref.ln_mean(jnp.asarray(x), n))[0, 0])
+    want = ((((4096 // n) * int(x.sum())) % 2**16 >> 12) + 8) % 16 - 8
+    assert got == want
+
+
+@given(seed=st.integers(0, 2**31), n=st.sampled_from([16, 64]))
+@settings(max_examples=50, deadline=None)
+def test_ln_mean_approx_centered(seed, n):
+    """On centered data (the LN regime) the quantized mean tracks the true
+    mean within 2 LSB — means outside [-8,7] wrap by design (paper's
+    'clipping is not necessary' remark)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-8, 8, (1, n)).astype(np.int32)
+    got = int(np.asarray(ref.ln_mean(jnp.asarray(x), n))[0, 0])
+    true = x.mean()
+    assert abs(got - true) <= 2
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_relu_quant(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-8, 8, (16,)).astype(np.int32)
+    out = np.asarray(ref.relu_quant(jnp.asarray(x)))
+    assert (out == np.maximum(x, 0)).all()
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_layernorm_output_range(seed):
+    rng = np.random.default_rng(seed)
+    n = 64
+    x = rng.integers(-16, 15, (2, n)).astype(np.int32)
+    g = (rng.integers(0, 2, (n,)) * 2 - 1).astype(np.int32)
+    b = rng.integers(-4, 5, (n,)).astype(np.int32)
+    out = np.asarray(ref.layernorm_quant(jnp.asarray(x), n, 4.0, 1.0,
+                                         jnp.asarray(g), 2048, jnp.asarray(b)))
+    assert out.min() >= -8 and out.max() <= 7
+
+
+def test_ln_div_table_sign_symmetry():
+    t = np.asarray(ref.ln_div_table(4.0, 1.0))
+    for a in range(-8, 8):
+        for v in range(16):
+            u_pos = ref.signed4(int(t[(a % 64) * 16 + v]))
+            u_neg = ref.signed4(int(t[((-a) % 64) * 16 + v]))
+            if -8 < u_pos < 7:  # away from the clip boundary
+                assert u_neg == -u_pos or abs(u_neg + u_pos) <= 1

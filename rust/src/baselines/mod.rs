@@ -1,0 +1,16 @@
+//! Comparator systems for the paper's evaluation tables.
+//!
+//! Fidelity tiers (documented per DESIGN.md §Substitutions):
+//! * [`crypten`] — CrypTen-style 64-bit fixed-point 3PC: *real* RSS linear
+//!   algebra with probabilistic truncation and *real* iterative
+//!   exp/reciprocal; comparison-based ops (ReLU, max) account communication
+//!   with CrypTen's published per-op costs.
+//! * [`lu_ndss`] — Lu et al. NDSS'25: full *real* implementation on our
+//!   LUT infrastructure, with multiplication-by-lookup-table (the design
+//!   this paper's Alg. 3 replaces).
+//! * [`sigma`] — SIGMA (FSS, 2PC): analytic model from published numbers
+//!   (FSS key generation cannot be faithfully reproduced offline).
+
+pub mod crypten;
+pub mod lu_ndss;
+pub mod sigma;

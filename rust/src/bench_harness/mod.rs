@@ -1,0 +1,117 @@
+//! Bench harness utilities (criterion is not available offline): warmup +
+//! median-of-N timing, table formatting, and the shared model/session
+//! builders used by `benches/*.rs`.
+
+use std::time::{Duration, Instant};
+
+use crate::model::config::BertConfig;
+use crate::model::weights::{synth_input, Weights};
+use crate::runtime::native;
+
+/// Median-of-`n` wall-clock measurement with one warmup run.
+pub fn time_median<F: FnMut()>(n: usize, mut f: F) -> Duration {
+    f(); // warmup
+    let mut samples: Vec<Duration> = (0..n.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// One timed run (for expensive end-to-end cases).
+pub fn time_once<F: FnOnce()>(f: F) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+/// Calibrated synthetic model + input for a config (shared by benches).
+pub fn prepared_model(cfg: BertConfig) -> (Weights, Vec<i64>) {
+    let mut w = Weights::synth(cfg, 42);
+    native::calibrate(&cfg, &mut w, &synth_input(&cfg, 5));
+    let x = synth_input(&cfg, 11);
+    (w, x)
+}
+
+/// Thread-scaling model for the single-core container (DESIGN.md
+/// §Substitutions #3): measured single-thread compute, scaled by an
+/// Amdahl curve calibrated to the paper's own 1→20-thread improvement
+/// (their Fig. 5 shows ~6.5× online speedup from 1→20 threads on the
+/// protocol's parallelizable fraction ≈ 0.92).
+pub fn thread_scale(threads: usize) -> f64 {
+    const PAR: f64 = 0.92;
+    1.0 / ((1.0 - PAR) + PAR / threads as f64)
+}
+
+/// Markdown-ish table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title}");
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    if d.as_secs_f64() >= 1.0 {
+        format!("{:.2}s", d.as_secs_f64())
+    } else {
+        format!("{:.1}ms", d.as_secs_f64() * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_reasonable() {
+        let d = time_median(3, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(d >= Duration::from_millis(1) && d < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn thread_scale_monotone() {
+        assert!(thread_scale(1) == 1.0);
+        assert!(thread_scale(4) > 2.5);
+        assert!(thread_scale(20) > thread_scale(4));
+        assert!(thread_scale(96) < 13.0); // Amdahl ceiling
+    }
+}

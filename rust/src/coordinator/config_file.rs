@@ -1,0 +1,195 @@
+//! Deployment configuration files — a minimal INI/TOML-subset parser
+//! (serde is not in the offline registry; DESIGN.md).
+//!
+//! ```text
+//! # server.conf
+//! [model]
+//! preset = base        # tiny | base
+//! seq_len = 32
+//! layers = 12
+//!
+//! [serving]
+//! max_batch = 8
+//! threads = 4
+//! net = lan            # lan | wan | local
+//! max_strategy = tournament   # tournament | linear | sort
+//! buckets = 8,16,32
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::BertConfig;
+use crate::party::SessionCfg;
+use crate::protocols::max::MaxStrategy;
+use crate::transport::NetParams;
+
+use super::server::ServerConfig;
+
+/// Parsed key-value sections.
+#[derive(Default, Debug)]
+pub struct ConfigFile {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut out = ConfigFile::default();
+        let mut section = String::from("");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                out.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &Path) -> Result<ConfigFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().with_context(|| {
+                format!("[{section}] {key} = {v}: expected an integer")
+            })?)),
+        }
+    }
+
+    /// Build the model config (preset + overrides).
+    pub fn bert_config(&self) -> Result<BertConfig> {
+        let mut cfg = match self.get("model", "preset") {
+            Some("base") => BertConfig::base(),
+            Some("tiny") | None => BertConfig::tiny(),
+            Some(other) => bail!("unknown model preset `{other}`"),
+        };
+        if let Some(s) = self.get_usize("model", "seq_len")? {
+            cfg.seq_len = s;
+        }
+        if let Some(l) = self.get_usize("model", "layers")? {
+            cfg.n_layers = l;
+        }
+        Ok(cfg)
+    }
+
+    /// Build the full server config.
+    pub fn server_config(&self) -> Result<ServerConfig> {
+        let mut sc = ServerConfig::new(self.bert_config()?);
+        if let Some(b) = self.get_usize("serving", "max_batch")? {
+            sc.max_batch = b;
+        }
+        if let Some(t) = self.get_usize("serving", "threads")? {
+            sc.session = SessionCfg { threads: t, ..sc.session };
+        }
+        sc.net = match self.get("serving", "net") {
+            Some("wan") => NetParams::WAN,
+            Some("local") => NetParams::LOCAL,
+            Some("lan") | None => NetParams::LAN,
+            Some(other) => bail!("unknown net `{other}`"),
+        };
+        sc.max_strategy = match self.get("serving", "max_strategy") {
+            Some("linear") => MaxStrategy::Linear,
+            Some("sort") => MaxStrategy::Sort,
+            Some("tournament") | None => MaxStrategy::Tournament,
+            Some(other) => bail!("unknown max_strategy `{other}`"),
+        };
+        Ok(sc)
+    }
+
+    /// Router buckets (`serving.buckets = 8,16,32`).
+    pub fn buckets(&self) -> Result<Option<Vec<usize>>> {
+        match self.get("serving", "buckets") {
+            None => Ok(None),
+            Some(v) => {
+                let parsed: Result<Vec<usize>, _> =
+                    v.split(',').map(|p| p.trim().parse()).collect();
+                Ok(Some(parsed.context("serving.buckets: comma-separated integers")?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# demo deployment
+[model]
+preset = base
+seq_len = 16
+layers = 4
+
+[serving]
+max_batch = 2
+threads = 8
+net = wan
+max_strategy = sort
+buckets = 8, 16
+"#;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("model", "preset"), Some("base"));
+        assert_eq!(c.get("serving", "net"), Some("wan"));
+        assert_eq!(c.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn builds_configs() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        let cfg = c.bert_config().unwrap();
+        assert_eq!((cfg.d_model, cfg.seq_len, cfg.n_layers), (768, 16, 4));
+        let sc = c.server_config().unwrap();
+        assert_eq!(sc.max_batch, 2);
+        assert_eq!(sc.session.threads, 8);
+        assert_eq!(sc.net.name, "WAN");
+        assert_eq!(sc.max_strategy, MaxStrategy::Sort);
+        assert_eq!(c.buckets().unwrap(), Some(vec![8, 16]));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = ConfigFile::parse("").unwrap();
+        let sc = c.server_config().unwrap();
+        assert_eq!(sc.cfg.d_model, 64); // tiny preset
+        assert_eq!(sc.net.name, "LAN");
+        assert_eq!(sc.max_strategy, MaxStrategy::Tournament);
+        assert_eq!(c.buckets().unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigFile::parse("not a kv line").is_err());
+        assert!(ConfigFile::parse("[unterminated").is_err());
+        let c = ConfigFile::parse("[model]\npreset = gpt99").unwrap();
+        assert!(c.bert_config().is_err());
+        let c = ConfigFile::parse("[model]\nseq_len = banana").unwrap();
+        assert!(c.bert_config().is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Serving coordinator: long-lived MPC sessions, a request queue with a
+//! dynamic batcher, and per-request latency/communication accounting.
+//!
+//! A [`session::Session`] pins three party threads that perform the model
+//! setup (weight sharing) once and then serve inference commands; the
+//! [`server::Coordinator`] owns the request queue, groups requests into
+//! batch windows, and reports metrics. This is the L3 "router" role of
+//! the three-layer architecture (vLLM-router-like, scaled to the paper's
+//! 3-party deployment).
+
+pub mod config_file;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use config_file::ConfigFile;
+pub use router::Router;
+pub use server::{Coordinator, InferenceResult, ServerConfig};
+pub use session::Session;

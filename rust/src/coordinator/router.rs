@@ -1,0 +1,146 @@
+//! Sequence-length-bucketed request router: requests of different lengths
+//! are routed to per-bucket MPC sessions (PJRT-style shape-specialized
+//! executables and the paper's per-shape offline tables both make mixed
+//! shapes expensive — bucketing keeps every session's tables shaped
+//! right while amortizing the one-time weight-sharing setup per bucket).
+
+use std::collections::BTreeMap;
+
+use crate::model::config::BertConfig;
+use crate::model::weights::Weights;
+use crate::transport::Phase;
+
+use super::server::{Coordinator, InferenceResult, ServerConfig};
+
+/// Routes token sequences to per-seq-bucket coordinators.
+pub struct Router {
+    base: ServerConfig,
+    weights_seed: u64,
+    /// bucket seq_len -> coordinator (lazily started)
+    buckets: BTreeMap<usize, Coordinator>,
+    allowed: Vec<usize>,
+}
+
+impl Router {
+    /// `buckets` are the allowed sequence lengths (ascending); a request
+    /// of length L is routed to the smallest bucket >= L and padded.
+    pub fn new(base: ServerConfig, weights_seed: u64, buckets: Vec<usize>) -> Router {
+        assert!(!buckets.is_empty());
+        Router {
+            base,
+            weights_seed,
+            buckets: BTreeMap::new(),
+            allowed: buckets,
+        }
+    }
+
+    fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.allowed.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Submit a variable-length request (quantized embeddings row-major
+    /// `[len, d_model]`). Returns `(bucket, id)` or None if too long.
+    pub fn submit(&mut self, x: Vec<i64>) -> Option<(usize, u64)> {
+        let d = self.base.cfg.d_model;
+        assert_eq!(x.len() % d, 0);
+        let len = x.len() / d;
+        let bucket = self.bucket_for(len)?;
+        let base = self.base;
+        let seed = self.weights_seed;
+        let coord = self.buckets.entry(bucket).or_insert_with(|| {
+            let cfg = BertConfig { seq_len: bucket, ..base.cfg };
+            let mut sc = base;
+            sc.cfg = cfg;
+            let mut w = Weights::synth(cfg, seed);
+            let sample = crate::model::weights::synth_input(&cfg, 5);
+            crate::runtime::native::calibrate(&cfg, &mut w, &sample);
+            Coordinator::start(sc, w)
+        });
+        // pad with zeros to the bucket length
+        let mut padded = x;
+        padded.resize(bucket * d, 0);
+        let id = coord.submit(padded);
+        Some((bucket, id))
+    }
+
+    /// Drain every bucket's queue once; results are tagged with bucket.
+    pub fn run_all(&mut self) -> Vec<(usize, InferenceResult)> {
+        let mut out = Vec::new();
+        for (&bucket, coord) in self.buckets.iter_mut() {
+            for r in coord.run_batch() {
+                out.push((bucket, r));
+            }
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(|c| c.pending()).sum()
+    }
+
+    pub fn active_buckets(&self) -> Vec<usize> {
+        self.buckets.keys().copied().collect()
+    }
+
+    /// Aggregate online MB across buckets (status line).
+    pub fn total_online_mb(&self) -> f64 {
+        self.buckets
+            .values()
+            .map(|c| c.snapshot().total_mb(Phase::Online))
+            .sum()
+    }
+
+    pub fn shutdown(self) {
+        for (_, c) in self.buckets {
+            c.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+
+    fn tiny_router() -> Router {
+        let mut cfg = BertConfig::tiny();
+        cfg.seq_len = 0; // per-bucket
+        Router::new(ServerConfig::new(cfg), 42, vec![4, 8])
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let mut r = tiny_router();
+        let d = BertConfig::tiny().d_model;
+        let (b1, _) = r.submit(vec![1; 3 * d]).unwrap();
+        assert_eq!(b1, 4);
+        let (b2, _) = r.submit(vec![1; 7 * d]).unwrap();
+        assert_eq!(b2, 8);
+        assert_eq!(r.active_buckets(), vec![4, 8]);
+        assert_eq!(r.pending(), 2);
+        let results = r.run_all();
+        assert_eq!(results.len(), 2);
+        assert_eq!(r.pending(), 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut r = tiny_router();
+        let d = BertConfig::tiny().d_model;
+        assert!(r.submit(vec![0; 16 * d]).is_none());
+        r.shutdown();
+    }
+
+    #[test]
+    fn bucket_sessions_are_reused() {
+        let mut r = tiny_router();
+        let d = BertConfig::tiny().d_model;
+        r.submit(vec![1; 4 * d]).unwrap();
+        r.run_all();
+        r.submit(vec![2; 4 * d]).unwrap();
+        r.run_all();
+        assert_eq!(r.active_buckets(), vec![4]); // one session served both
+        r.shutdown();
+    }
+}

@@ -1,0 +1,162 @@
+//! Request queue + dynamic batcher + metrics reporting.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::model::config::BertConfig;
+use crate::model::weights::Weights;
+use crate::party::SessionCfg;
+use crate::protocols::max::MaxStrategy;
+use crate::transport::{MetricsSnapshot, NetParams, Phase};
+
+use super::session::Session;
+
+/// Serving configuration.
+#[derive(Clone, Copy)]
+pub struct ServerConfig {
+    pub cfg: BertConfig,
+    pub session: SessionCfg,
+    /// Requests per batch window (the batcher drains up to this many
+    /// queued requests before yielding results).
+    pub max_batch: usize,
+    /// Network model used for reported (modeled) latency.
+    pub net: NetParams,
+    pub max_strategy: MaxStrategy,
+}
+
+impl ServerConfig {
+    pub fn new(cfg: BertConfig) -> Self {
+        ServerConfig {
+            cfg,
+            session: SessionCfg::default(),
+            max_batch: 8,
+            net: NetParams::LAN,
+            max_strategy: MaxStrategy::Tournament,
+        }
+    }
+}
+
+/// Completed request with measured + modeled costs.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub id: u64,
+    pub logits: Vec<i64>,
+    /// Wall-clock compute time of the MPC evaluation (in-process).
+    pub compute: Duration,
+    /// Modeled end-to-end latency under the configured network (compute +
+    /// rounds x RTT + bytes/bandwidth), split by phase.
+    pub offline_modeled: Duration,
+    pub online_modeled: Duration,
+    /// Communication this request added (bytes).
+    pub online_bytes: u64,
+    pub offline_bytes: u64,
+}
+
+/// The serving coordinator: queue in, batched MPC evaluation out.
+pub struct Coordinator {
+    cfg: ServerConfig,
+    session: Session,
+    queue: VecDeque<(u64, Vec<i64>)>,
+    next_id: u64,
+    completed: u64,
+    last_snap: MetricsSnapshot,
+}
+
+impl Coordinator {
+    /// Start the coordinator: spawns the 3-party session and performs the
+    /// one-time model setup (weight sharing).
+    pub fn start(cfg: ServerConfig, weights: Weights) -> Coordinator {
+        let session = Session::start(cfg.cfg, weights, cfg.session, cfg.max_strategy);
+        let last_snap = session.snapshot();
+        Coordinator {
+            cfg,
+            session,
+            queue: VecDeque::new(),
+            next_id: 0,
+            completed: 0,
+            last_snap,
+        }
+    }
+
+    /// Enqueue a request (quantized embeddings); returns its id.
+    pub fn submit(&mut self, input: Vec<i64>) -> u64 {
+        assert_eq!(input.len(), self.cfg.cfg.seq_len * self.cfg.cfg.d_model);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, input));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain one batch window, evaluating up to `max_batch` requests.
+    pub fn run_batch(&mut self) -> Vec<InferenceResult> {
+        let n = self.queue.len().min(self.cfg.max_batch);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (id, input) = self.queue.pop_front().unwrap();
+            let t0 = Instant::now();
+            let logits = self.session.infer(&input);
+            let compute = t0.elapsed();
+            // Per-request deltas from the session meter.
+            let snap = self.session.snapshot();
+            let mut delta = snap.clone();
+            sub_snap(&mut delta, &self.last_snap);
+            self.last_snap = snap;
+            out.push(InferenceResult {
+                id,
+                logits,
+                compute,
+                offline_modeled: self.cfg.net.modeled_phase_time(&delta, Phase::Offline),
+                online_modeled: self.cfg.net.modeled_phase_time(&delta, Phase::Online),
+                online_bytes: delta.total_bytes(Phase::Online),
+                offline_bytes: delta.total_bytes(Phase::Offline),
+            });
+            self.completed += 1;
+        }
+        out
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.session.snapshot()
+    }
+
+    /// Human-readable metrics dump (the `repro serve` status line).
+    pub fn metrics_report(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "completed={} pending={} setup_mb={:.2} offline_mb={:.2} online_mb={:.2} online_rounds={}",
+            self.completed,
+            self.queue.len(),
+            s.total_mb(Phase::Setup),
+            s.total_mb(Phase::Offline),
+            s.total_mb(Phase::Online),
+            s.max_rounds(Phase::Online),
+        )
+    }
+
+    pub fn shutdown(self) {
+        self.session.shutdown();
+    }
+}
+
+fn sub_snap(a: &mut MetricsSnapshot, b: &MetricsSnapshot) {
+    for l in 0..9 {
+        for p in 0..3 {
+            a.bytes[l][p] = a.bytes[l][p].saturating_sub(b.bytes[l][p]);
+            a.msgs[l][p] = a.msgs[l][p].saturating_sub(b.msgs[l][p]);
+        }
+    }
+    for party in 0..3 {
+        for p in 0..3 {
+            a.rounds[party][p] = a.rounds[party][p].saturating_sub(b.rounds[party][p]);
+            a.compute_ns[party][p] = a.compute_ns[party][p].saturating_sub(b.compute_ns[party][p]);
+        }
+    }
+}

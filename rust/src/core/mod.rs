@@ -1,0 +1,6 @@
+//! Substrate: ring arithmetic, PRG, wire packing, data-parallel helpers.
+
+pub mod pack;
+pub mod pool;
+pub mod prg;
+pub mod ring;

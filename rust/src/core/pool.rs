@@ -1,0 +1,85 @@
+//! Minimal data-parallel helper (rayon is not available offline).
+//!
+//! `par_chunks` splits an index range across `threads` scoped OS threads.
+//! On the single-core CI container this mostly measures oversubscription;
+//! the bench harness pairs it with the calibrated scaling model described
+//! in DESIGN.md.
+
+/// Run `f(start, end, chunk_index)` over `threads` contiguous chunks of
+/// `0..len`, collecting the per-chunk outputs in order.
+pub fn par_chunks<T, F>(threads: usize, len: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(len.max(1));
+    if threads <= 1 {
+        return vec![f(0, len, 0)];
+    }
+    let chunk = (len + threads - 1) / threads;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(len);
+            let f = &f;
+            handles.push(s.spawn(move || f(lo, hi, t)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Parallel-map over a mutable slice in contiguous chunks.
+pub fn par_map_mut<T, F>(threads: usize, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    let threads = threads.max(1).min(len.max(1));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = (len + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (t, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(t * chunk, part));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_covers_range() {
+        for threads in [1, 2, 3, 7] {
+            let parts = par_chunks(threads, 100, |lo, hi, _| (lo, hi));
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, 100);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_mut_touches_all() {
+        let mut v = vec![0u32; 97];
+        par_map_mut(4, &mut v, |base, part| {
+            for (i, x) in part.iter_mut().enumerate() {
+                *x = (base + i) as u32;
+            }
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn zero_len_ok() {
+        let parts = par_chunks(4, 0, |lo, hi, _| hi - lo);
+        assert_eq!(parts.iter().sum::<usize>(), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! AES-128-CTR pseudorandom generator for correlated randomness.
+//!
+//! Pairwise shared seeds implement the paper's `Π_share` common-seed trick:
+//! when two parties hold the same [`Prg`] and draw in the same order, they
+//! generate identical "shared randomness" with zero communication.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+
+use super::ring::Ring;
+
+/// Deterministic AES-CTR stream.
+pub struct Prg {
+    cipher: Aes128,
+    counter: u128,
+    buf: [u8; 16],
+    used: usize,
+}
+
+impl Prg {
+    pub fn new(seed: [u8; 16]) -> Self {
+        Prg {
+            cipher: Aes128::new(&seed.into()),
+            counter: 0,
+            buf: [0u8; 16],
+            used: 16,
+        }
+    }
+
+    /// Derive a child PRG with a domain-separation label.
+    pub fn derive(seed: [u8; 16], label: &str) -> Self {
+        use sha2::{Digest, Sha256};
+        let mut h = Sha256::new();
+        h.update(seed);
+        h.update(label.as_bytes());
+        let d = h.finalize();
+        let mut s = [0u8; 16];
+        s.copy_from_slice(&d[..16]);
+        Prg::new(s)
+    }
+
+    fn refill(&mut self) {
+        self.buf = self.counter.to_le_bytes();
+        let mut block = self.buf.into();
+        self.cipher.encrypt_block(&mut block);
+        self.buf.copy_from_slice(&block);
+        self.counter += 1;
+        self.used = 0;
+    }
+
+    pub fn next_u8(&mut self) -> u8 {
+        if self.used >= 16 {
+            self.refill();
+        }
+        let b = self.buf[self.used];
+        self.used += 1;
+        b
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut v = [0u8; 8];
+        for b in v.iter_mut() {
+            *b = self.next_u8();
+        }
+        u64::from_le_bytes(v)
+    }
+
+    /// Uniform element of the ring.
+    #[inline]
+    pub fn ring_elem(&mut self, ring: Ring) -> u64 {
+        // Draw only as many bytes as the ring needs.
+        let nbytes = ((ring.bits() + 7) / 8) as usize;
+        let mut v = 0u64;
+        for i in 0..nbytes {
+            v |= (self.next_u8() as u64) << (8 * i);
+        }
+        ring.reduce(v)
+    }
+
+    /// Fill a vector with uniform ring elements.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf): offline table generation draws
+    /// billions of small ring elements; for bit-widths dividing 64 we
+    /// slice whole AES blocks instead of drawing byte-by-byte (~6x fewer
+    /// cipher calls for 4-bit tables). Falls back to `ring_elem` for odd
+    /// widths so the stream stays well-defined per element count.
+    pub fn ring_vec(&mut self, ring: Ring, n: usize) -> Vec<u64> {
+        let bits = ring.bits();
+        if 64 % bits != 0 {
+            return (0..n).map(|_| self.ring_elem(ring)).collect();
+        }
+        let per = (64 / bits) as usize;
+        let mask = ring.mask();
+        let mut out = Vec::with_capacity(n);
+        let mut blocks = (n + per - 1) / per;
+        while blocks > 0 {
+            // pull 16 bytes (one AES block) at a time via the buffer
+            let mut w = 0u64;
+            for i in 0..8 {
+                w |= (self.next_u8() as u64) << (8 * i);
+            }
+            for lane in 0..per {
+                if out.len() < n {
+                    out.push((w >> (lane as u32 * bits)) & mask);
+                }
+            }
+            blocks -= 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R16, R4};
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Prg::new([1; 16]);
+        let mut b = Prg::new([1; 16]);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Prg::new([2; 16]);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn derive_separates_domains() {
+        let mut a = Prg::derive([1; 16], "x");
+        let mut b = Prg::derive([1; 16], "y");
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn ring_elem_in_range() {
+        let mut p = Prg::new([3; 16]);
+        for _ in 0..1000 {
+            assert!(p.ring_elem(R4) < 16);
+            assert!(p.ring_elem(R16) < 1 << 16);
+        }
+    }
+
+    #[test]
+    fn roughly_uniform_on_r4() {
+        let mut p = Prg::new([4; 16]);
+        let mut hist = [0u32; 16];
+        for _ in 0..16000 {
+            hist[p.ring_elem(R4) as usize] += 1;
+        }
+        for h in hist {
+            assert!((700..1300).contains(&h), "{hist:?}");
+        }
+    }
+}

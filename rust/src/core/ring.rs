@@ -1,0 +1,176 @@
+//! Ring arithmetic over `Z_2^ℓ` for the bit-widths the paper uses.
+//!
+//! All share values are stored as `u64` limbs; a [`Ring`] carries the
+//! modulus. Values in `[-2^(ℓ-1), 2^(ℓ-1))` are encoded into `[0, 2^ℓ)`
+//! two's-complement style (paper, Notations). `trc(x, k)` keeps the top
+//! `k` bits (paper's high-bit truncation used by Alg. 3).
+
+/// A power-of-two ring `Z_2^bits`, `1 <= bits <= 64`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Ring {
+    bits: u32,
+}
+
+pub const R4: Ring = Ring { bits: 4 };
+pub const R6: Ring = Ring { bits: 6 };
+pub const R8: Ring = Ring { bits: 8 };
+pub const R10: Ring = Ring { bits: 10 };
+pub const R16: Ring = Ring { bits: 16 };
+pub const R32: Ring = Ring { bits: 32 };
+pub const R64: Ring = Ring { bits: 64 };
+
+impl Ring {
+    pub const fn new(bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 64);
+        Ring { bits }
+    }
+
+    #[inline(always)]
+    pub const fn bits(self) -> u32 {
+        self.bits
+    }
+
+    #[inline(always)]
+    pub const fn mask(self) -> u64 {
+        if self.bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.bits) - 1
+        }
+    }
+
+    /// Number of elements in the ring (panics for bits == 64).
+    #[inline(always)]
+    pub const fn size(self) -> usize {
+        assert!(self.bits < 48, "table-sized rings only");
+        1usize << self.bits
+    }
+
+    #[inline(always)]
+    pub const fn reduce(self, v: u64) -> u64 {
+        v & self.mask()
+    }
+
+    #[inline(always)]
+    pub const fn add(self, a: u64, b: u64) -> u64 {
+        (a.wrapping_add(b)) & self.mask()
+    }
+
+    #[inline(always)]
+    pub const fn sub(self, a: u64, b: u64) -> u64 {
+        (a.wrapping_sub(b)) & self.mask()
+    }
+
+    #[inline(always)]
+    pub const fn mul(self, a: u64, b: u64) -> u64 {
+        (a.wrapping_mul(b)) & self.mask()
+    }
+
+    #[inline(always)]
+    pub const fn neg(self, a: u64) -> u64 {
+        (a.wrapping_neg()) & self.mask()
+    }
+
+    /// Encode a signed integer into the ring.
+    #[inline(always)]
+    pub const fn encode(self, v: i64) -> u64 {
+        (v as u64) & self.mask()
+    }
+
+    /// Decode a ring element to its signed representative.
+    #[inline(always)]
+    pub const fn decode(self, v: u64) -> i64 {
+        let v = v & self.mask();
+        let sign = 1u64 << (self.bits - 1);
+        if self.bits == 64 {
+            v as i64
+        } else if v >= sign {
+            (v as i64) - (1i64 << self.bits)
+        } else {
+            v as i64
+        }
+    }
+
+    /// Paper's `trc(x, k)`: keep the top `k` bits of an ℓ-bit value.
+    /// Output lives in `Z_2^k`.
+    #[inline(always)]
+    pub const fn trc(self, v: u64, k: u32) -> u64 {
+        (v & self.mask()) >> (self.bits - k)
+    }
+
+    /// Bit-reduce into a smaller ring (a ring homomorphism — this is why
+    /// "extract the lower bits" is a *local* operation on additive shares).
+    #[inline(always)]
+    pub const fn low(self, v: u64, to: Ring) -> u64 {
+        debug_assert!(to.bits <= self.bits);
+        v & to.mask()
+    }
+
+    /// Bytes needed to pack `n` ring elements bit-tight.
+    #[inline(always)]
+    pub const fn packed_len(self, n: usize) -> usize {
+        (n * self.bits as usize + 7) / 8
+    }
+}
+
+/// Sign-extend a `from`-bit value into a `to`-bit ring (the content of the
+/// paper's share-conversion lookup table for signed activations).
+#[inline(always)]
+pub fn sign_extend(v: u64, from: Ring, to: Ring) -> u64 {
+    to.encode(from.decode(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for r in [R4, R8, R16, R32] {
+            let half = 1i64 << (r.bits() - 1);
+            for v in [-half, -1, 0, 1, half - 1] {
+                assert_eq!(r.decode(r.encode(v)), v, "ring {:?} v {}", r, v);
+            }
+        }
+    }
+
+    #[test]
+    fn add_wraps() {
+        assert_eq!(R4.add(15, 1), 0);
+        assert_eq!(R16.add(0xFFFF, 2), 1);
+        assert_eq!(R4.sub(0, 1), 15);
+    }
+
+    #[test]
+    fn trc_takes_top_bits() {
+        // 0xAB12 -> top 4 bits = 0xA
+        assert_eq!(R16.trc(0xAB12, 4), 0xA);
+        assert_eq!(R8.trc(0b1011_0001, 4), 0b1011);
+    }
+
+    #[test]
+    fn sign_extension_table_content() {
+        assert_eq!(sign_extend(0xF, R4, R16), 0xFFFF); // -1
+        assert_eq!(sign_extend(0x8, R4, R16), 0xFFF8); // -8
+        assert_eq!(sign_extend(0x7, R4, R16), 0x0007);
+    }
+
+    #[test]
+    fn low_bits_is_ring_hom() {
+        for a in 0..=255u64 {
+            for b in [0u64, 1, 77, 255] {
+                let lhs = R8.add(a, b) & R4.mask();
+                let rhs = R4.add(a & R4.mask(), b & R4.mask());
+                assert_eq!(lhs, rhs);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_len_bit_tight() {
+        assert_eq!(R4.packed_len(3), 2);
+        assert_eq!(R4.packed_len(2), 1);
+        assert_eq!(R16.packed_len(5), 10);
+        assert_eq!(R6.packed_len(4), 3);
+    }
+}

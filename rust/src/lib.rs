@@ -1,0 +1,30 @@
+//! # ppq-bert — privacy-preserving inference for quantized BERT models
+//!
+//! Reproduction of "Privacy-Preserving Inference for Quantized BERT
+//! Models" (AAAI 2026): 3-party MPC inference over a 1-bit-weight /
+//! 4-bit-activation BERT, combining replicated secret sharing for linear
+//! layers with lookup-table protocols (single-input, multi-input, and
+//! shared-input-Δ variants) for truncation, share conversion, softmax,
+//! ReLU and LayerNorm.
+//!
+//! Layering (see DESIGN.md):
+//! * `core`, `sharing`, `transport`, `party` — MPC substrates
+//! * `protocols` — the paper's contribution (Alg. 1–3 + §Nonlinear)
+//! * `model` — the quantized BERT pipeline over shares
+//! * `runtime` — PJRT loader for the JAX/Pallas AOT artifacts + the
+//!   native plaintext oracle
+//! * `coordinator` — serving layer (router, batcher, sessions)
+//! * `baselines` — CrypTen-style, Lu-NDSS'25-style, SIGMA cost model
+//! * `bench_harness` — regenerates every paper table/figure
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod core;
+pub mod model;
+pub mod party;
+pub mod protocols;
+pub mod runtime;
+pub mod sharing;
+pub mod testing;
+pub mod transport;

@@ -1,0 +1,197 @@
+//! `repro` — CLI for the privacy-preserving quantized BERT system.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline registry):
+//!   repro infer  [--config tiny|base] [--seq N] [--threads T] [--net lan|wan|local]
+//!   repro serve  [--config tiny|base] [--requests N] [--batch B]
+//!   repro oracle [--artifacts DIR]        run the PJRT plaintext oracle
+//!   repro comm   [--seq N]                print metered comm (Table-4 row)
+//!   repro help
+
+use std::collections::HashMap;
+
+use ppq_bert::bench_harness::{fmt_dur, prepared_model};
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::weights::synth_input;
+use ppq_bert::party::SessionCfg;
+use ppq_bert::transport::{NetParams, Phase};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn config_from(flags: &HashMap<String, String>) -> BertConfig {
+    let mut cfg = match flags.get("config").map(|s| s.as_str()) {
+        Some("base") => BertConfig::base(),
+        _ => BertConfig::tiny(),
+    };
+    if let Some(s) = flags.get("seq") {
+        cfg.seq_len = s.parse().expect("--seq N");
+    }
+    if let Some(l) = flags.get("layers") {
+        cfg.n_layers = l.parse().expect("--layers N");
+    }
+    cfg
+}
+
+fn net_from(flags: &HashMap<String, String>) -> NetParams {
+    match flags.get("net").map(|s| s.as_str()) {
+        Some("wan") => NetParams::WAN,
+        Some("local") => NetParams::LOCAL,
+        _ => NetParams::LAN,
+    }
+}
+
+fn cmd_infer(flags: HashMap<String, String>) {
+    let cfg = config_from(&flags);
+    let net = net_from(&flags);
+    let threads: usize = flags.get("threads").map(|s| s.parse().unwrap()).unwrap_or(1);
+    println!(
+        "secure inference: {} layers, d={}, seq={}, threads={}, net={}",
+        cfg.n_layers, cfg.d_model, cfg.seq_len, threads, net.name
+    );
+    let (w, x) = prepared_model(cfg);
+    let mut scfg = ServerConfig::new(cfg);
+    scfg.session = SessionCfg { threads, ..SessionCfg::default() };
+    scfg.net = net;
+    let mut coord = Coordinator::start(scfg, w);
+    coord.submit(x);
+    let results = coord.run_batch();
+    for r in &results {
+        println!(
+            "request {}: logits {:?}  compute {}  modeled offline {}  online {}  comm offline {:.2} MB online {:.2} MB",
+            r.id,
+            r.logits,
+            fmt_dur(r.compute),
+            fmt_dur(r.offline_modeled),
+            fmt_dur(r.online_modeled),
+            r.offline_bytes as f64 / 1048576.0,
+            r.online_bytes as f64 / 1048576.0,
+        );
+    }
+    println!("{}", coord.metrics_report());
+    coord.shutdown();
+}
+
+fn cmd_serve(flags: HashMap<String, String>) {
+    // --conf FILE takes precedence over individual flags.
+    if let Some(path) = flags.get("conf") {
+        let cf = ppq_bert::coordinator::ConfigFile::load(std::path::Path::new(path))
+            .expect("parse config file");
+        let sc = cf.server_config().expect("build server config");
+        let n: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(4);
+        let (w, _) = prepared_model(sc.cfg);
+        let mut coord = Coordinator::start(sc, w);
+        for i in 0..n {
+            coord.submit(synth_input(&sc.cfg, 100 + i as u64));
+        }
+        while coord.pending() > 0 {
+            for r in coord.run_batch() {
+                println!("served request {} in {}", r.id, fmt_dur(r.compute));
+            }
+        }
+        println!("{}", coord.metrics_report());
+        coord.shutdown();
+        return;
+    }
+    let cfg = config_from(&flags);
+    let n: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(4);
+    let batch: usize = flags.get("batch").map(|s| s.parse().unwrap()).unwrap_or(4);
+    let (w, _) = prepared_model(cfg);
+    let mut scfg = ServerConfig::new(cfg);
+    scfg.max_batch = batch;
+    let mut coord = Coordinator::start(scfg, w);
+    for i in 0..n {
+        coord.submit(synth_input(&cfg, 100 + i as u64));
+    }
+    let t0 = std::time::Instant::now();
+    while coord.pending() > 0 {
+        let results = coord.run_batch();
+        for r in &results {
+            println!("served request {} in {}", r.id, fmt_dur(r.compute));
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "throughput: {:.2} req/s   {}",
+        n as f64 / dt.as_secs_f64(),
+        coord.metrics_report()
+    );
+    coord.shutdown();
+}
+
+fn cmd_oracle(flags: HashMap<String, String>) {
+    use ppq_bert::model::weights::{read_i32_file, Weights};
+    use ppq_bert::runtime::xla::{artifacts_dir, I32Tensor, XlaModel};
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let w = Weights::load(&dir.join("bert_tiny.weights.bin")).expect("weights artifact");
+    let (xshape, xdata) = read_i32_file(&dir.join("bert_tiny.input.bin")).expect("input artifact");
+    let model = XlaModel::load(&dir.join("bert_tiny.hlo.txt")).expect("hlo artifact");
+    let mut inputs = vec![I32Tensor::from_i64(xshape, &xdata)];
+    for li in 0..w.cfg.n_layers {
+        for p in BertConfig::layer_params() {
+            let t = w.tensor(&format!("layer{li}.{p}"));
+            inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+        }
+    }
+    let t = w.tensor("cls.w");
+    inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+    let outs = model.run(&inputs).expect("execute artifact");
+    println!("PJRT oracle logits: {:?}", outs[0].data);
+}
+
+fn cmd_comm(flags: HashMap<String, String>) {
+    let cfg = config_from(&flags);
+    let (w, x) = prepared_model(cfg);
+    let scfg = ServerConfig::new(cfg);
+    let mut coord = Coordinator::start(scfg, w);
+    coord.submit(x);
+    let _ = coord.run_batch();
+    let s = coord.snapshot();
+    println!(
+        "tokens={} online_mb={:.2} offline_mb={:.2} setup_mb={:.2} online_rounds={}",
+        cfg.seq_len,
+        s.total_mb(Phase::Online),
+        s.total_mb(Phase::Offline),
+        s.total_mb(Phase::Setup),
+        s.max_rounds(Phase::Online)
+    );
+    coord.shutdown();
+}
+
+const HELP: &str = "repro — privacy-preserving quantized BERT inference (3-party MPC)
+
+USAGE:
+  repro infer  [--config tiny|base] [--seq N] [--layers L] [--threads T] [--net lan|wan|local]
+  repro serve  [--config tiny|base] [--requests N] [--batch B] [--conf FILE]
+  repro oracle [--artifacts DIR]
+  repro comm   [--config tiny|base] [--seq N]
+  repro help
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "infer" => cmd_infer(flags),
+        "serve" => cmd_serve(flags),
+        "oracle" => cmd_oracle(flags),
+        "comm" => cmd_comm(flags),
+        _ => print!("{HELP}"),
+    }
+}

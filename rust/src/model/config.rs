@@ -1,0 +1,96 @@
+//! Model + quantization configuration (mirrors python/compile/model.py).
+
+/// Architecture and quantization hyperparameters of the 1w/4a BERT.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BertConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    /// Classifier weight scale (logits stay 16-bit; no requantization).
+    pub scale_cls: i64,
+    /// Softmax input dequantization scale `s_x`.
+    pub sm_sx: f64,
+    /// LayerNorm variance dequantization scale and epsilon.
+    pub ln_sv: f64,
+    pub ln_eps: f64,
+}
+
+impl BertConfig {
+    /// The 2-layer test configuration matching `python model.TINY` (and
+    /// the `bert_tiny` AOT artifact).
+    pub fn tiny() -> Self {
+        BertConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            seq_len: 8,
+            n_classes: 2,
+            scale_cls: 16,
+            sm_sx: 0.5,
+            ln_sv: 4.0,
+            ln_eps: 1.0,
+        }
+    }
+
+    /// BERT-base (the paper's benchmark model).
+    pub fn base() -> Self {
+        BertConfig {
+            n_layers: 12,
+            d_model: 768,
+            n_heads: 12,
+            d_ff: 3072,
+            seq_len: 32,
+            n_classes: 2,
+            scale_cls: 16,
+            sm_sx: 0.5,
+            ln_sv: 4.0,
+            ln_eps: 1.0,
+        }
+    }
+
+    /// BERT-base at a different sequence length (benches sweep this).
+    pub fn base_with_seq(seq_len: usize) -> Self {
+        BertConfig { seq_len, ..Self::base() }
+    }
+
+    pub fn with_layers(self, n_layers: usize) -> Self {
+        BertConfig { n_layers, ..self }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Per-layer tensor parameter names, in artifact order (python
+    /// `LAYER_PARAMS`).
+    pub fn layer_params() -> &'static [&'static str] {
+        &["wq", "wk", "wv", "wo", "w1", "w2", "ln1_g", "ln1_b", "ln2_g", "ln2_b"]
+    }
+
+    /// Per-layer calibrated scale names (python `LAYER_SCALES`).
+    pub fn layer_scales() -> &'static [&'static str] {
+        &["qkv", "att", "av", "o", "f1", "f2", "g1", "g2"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_matches_python() {
+        let c = BertConfig::tiny();
+        assert_eq!((c.n_layers, c.d_model, c.n_heads, c.d_ff, c.seq_len), (2, 64, 2, 128, 8));
+        assert_eq!(c.d_head(), 32);
+    }
+
+    #[test]
+    fn base_is_bert_base() {
+        let c = BertConfig::base();
+        assert_eq!((c.n_layers, c.d_model, c.n_heads, c.d_ff), (12, 768, 12, 3072));
+    }
+}

@@ -1,0 +1,116 @@
+//! Public embedding front-end (paper, System Architecture: "the model
+//! owner publicly reveals the embedding parameters. The data owner first
+//! performs the embedding computation locally, and then quantizes the
+//! resulting embeddings into 4-bit values").
+//!
+//! This module is the data-owner-local pipeline: token ids → (token +
+//! positional) embedding → symmetric 4-bit quantization. It runs in the
+//! clear at P1 before anything is shared.
+
+use crate::core::prg::Prg;
+
+/// Public (revealed) embedding table + positional embeddings.
+pub struct PublicEmbedding {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub max_seq: usize,
+    /// float token embeddings [vocab, d]
+    tok: Vec<f32>,
+    /// float positional embeddings [max_seq, d]
+    pos: Vec<f32>,
+    /// symmetric quantization scale (per-tensor, calibrated at build)
+    pub scale: f32,
+}
+
+impl PublicEmbedding {
+    /// Synthetic public embedding table (the real BERT vocab table is not
+    /// reachable offline; the distributional shape — zero-mean, unit-ish
+    /// variance rows — is what the quantizer sees).
+    pub fn synth(vocab: usize, d_model: usize, max_seq: usize, seed: u64) -> Self {
+        let mut sb = [2u8; 16];
+        sb[..8].copy_from_slice(&seed.to_le_bytes());
+        let mut prg = Prg::new(sb);
+        let mut gauss = move || {
+            // sum of 4 uniforms, centered: good-enough bell for synth data
+            let mut acc = 0.0f32;
+            for _ in 0..4 {
+                acc += (prg.next_u64() % 1000) as f32 / 1000.0;
+            }
+            (acc - 2.0) * 0.866
+        };
+        let tok: Vec<f32> = (0..vocab * d_model).map(|_| gauss()).collect();
+        let pos: Vec<f32> = (0..max_seq * d_model).map(|_| gauss() * 0.3).collect();
+        // calibrate scale so p99 |e| maps near the 4-bit edge
+        let mut mags: Vec<f32> = tok.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = mags[(mags.len() - 1) * 99 / 100].max(1e-6);
+        PublicEmbedding {
+            vocab,
+            d_model,
+            max_seq,
+            tok,
+            pos,
+            scale: p99 / 7.0,
+        }
+    }
+
+    /// Data-owner-local: embed + quantize a token sequence to signed
+    /// 4-bit activations `[seq, d_model]`.
+    pub fn embed_quantize(&self, tokens: &[u32]) -> Vec<i64> {
+        assert!(tokens.len() <= self.max_seq, "sequence too long");
+        let d = self.d_model;
+        let mut out = Vec::with_capacity(tokens.len() * d);
+        for (p, &t) in tokens.iter().enumerate() {
+            let t = t as usize % self.vocab;
+            for j in 0..d {
+                let e = self.tok[t * d + j] + self.pos[p * d + j];
+                let q = (e / self.scale).round() as i64;
+                out.push(q.clamp(-8, 7));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_is_signed_4bit() {
+        let emb = PublicEmbedding::synth(32, 16, 8, 1);
+        let x = emb.embed_quantize(&[0, 5, 31, 2]);
+        assert_eq!(x.len(), 4 * 16);
+        assert!(x.iter().all(|&v| (-8..8).contains(&v)));
+    }
+
+    #[test]
+    fn uses_full_dynamic_range() {
+        let emb = PublicEmbedding::synth(64, 32, 16, 2);
+        let toks: Vec<u32> = (0..16).collect();
+        let x = emb.embed_quantize(&toks);
+        let lo = *x.iter().min().unwrap();
+        let hi = *x.iter().max().unwrap();
+        assert!(lo <= -6 && hi >= 6, "range [{lo},{hi}] too narrow");
+    }
+
+    #[test]
+    fn position_matters() {
+        let emb = PublicEmbedding::synth(32, 16, 8, 3);
+        let a = emb.embed_quantize(&[7, 7]);
+        assert_ne!(&a[..16], &a[16..32], "positional embedding missing");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = PublicEmbedding::synth(32, 16, 8, 4).embed_quantize(&[1, 2, 3]);
+        let b = PublicEmbedding::synth(32, 16, 8, 4).embed_quantize(&[1, 2, 3]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn oov_tokens_wrap() {
+        let emb = PublicEmbedding::synth(32, 16, 8, 5);
+        assert_eq!(emb.embed_quantize(&[33]), emb.embed_quantize(&[1]));
+    }
+}

@@ -1,0 +1,7 @@
+//! The quantized BERT model: configuration, weights, and the secure
+//! (MPC) inference pipeline.
+
+pub mod config;
+pub mod embedding;
+pub mod secure;
+pub mod weights;

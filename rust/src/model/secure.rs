@@ -1,0 +1,294 @@
+//! The secure quantized BERT pipeline — the paper's system, end to end.
+//!
+//! Representation invariants between ops:
+//! * activations travel as `⟦·⟧^4` (2PC additive, signed or unsigned 4-bit)
+//! * every linear layer consumes `⟨·⟩^16` RSS produced by `Π_convert^{4,16}`
+//! * private scale factors never appear as public constants: FC scales are
+//!   folded into the RSS-shared `W' = ⌊2^12·s_w·s_x/s_y⌋·W`; the
+//!   activation-activation matmul scales (attention scores, attn·V) are
+//!   folded into the *share-conversion lookup tables* `T(i) = s·i`, so the
+//!   rescale rides along with the 4→16 extension for free.
+//!
+//! The layer dataflow mirrors `runtime::native` exactly (which mirrors the
+//! python oracle); MPC deviates only by the −1 LSB local-truncation
+//! carries at trc points.
+
+use crate::core::ring::{sign_extend, R16, R4};
+use crate::model::config::BertConfig;
+use crate::model::weights::Weights;
+use crate::party::{PartyCtx, P0, P1};
+use crate::protocols::convert::{convert_to_rss, extend_ring};
+use crate::protocols::layernorm::{layernorm_rows, LnParams};
+use crate::protocols::lut::{lut_eval, LutTable};
+use crate::protocols::matmul::{rss_matmul_full, rss_matmul_trc};
+use crate::protocols::max::MaxStrategy;
+use crate::protocols::relu::relu_to_rss16;
+use crate::protocols::softmax::{softmax_rows, SoftmaxTables};
+use crate::protocols::tables::ln_div_table;
+use crate::sharing::additive::{reveal2, share2};
+use crate::sharing::rss::{reshare_a2_to_rss, share_rss};
+use crate::sharing::{A2, Rss};
+use crate::transport::Phase;
+
+/// One layer's shared parameters + scale-folded conversion tables.
+pub struct SecureLayer {
+    wq: Rss,
+    wk: Rss,
+    wv: Rss,
+    wo: Rss,
+    w1: Rss,
+    w2: Rss,
+    ln1: LnParams,
+    ln2: LnParams,
+    /// 4→16 extension with `s_att` folded in (signed input).
+    conv_att: LutTable,
+    /// 4→16 extension with `s_av` folded in (unsigned input).
+    conv_av: LutTable,
+}
+
+/// The secure model held by one party after setup.
+pub struct SecureBert {
+    pub cfg: BertConfig,
+    pub max_strategy: MaxStrategy,
+    layers: Vec<SecureLayer>,
+    cls_w: Rss,
+    sm: SoftmaxTables,
+}
+
+fn share_scaled_sign(
+    ctx: &PartyCtx,
+    w: Option<&Weights>,
+    name: &str,
+    scale_name: &str,
+    shape_hint: (usize, usize),
+) -> Rss {
+    let len = shape_hint.0 * shape_hint.1;
+    let vals: Option<Vec<u64>> = w.map(|w| {
+        let t = w.tensor(name);
+        let s = w.scale(scale_name);
+        debug_assert_eq!(t.numel(), len);
+        t.data.iter().map(|&v| R16.encode(v * s)).collect()
+    });
+    share_rss(ctx, P0, R16, vals.as_deref(), len)
+}
+
+impl SecureBert {
+    /// Model-owner setup: P0 supplies the (calibrated) weights; all three
+    /// parties end with their share of every `W'`, γ', β and the
+    /// scale-folded conversion tables. Runs under `Phase::Setup`.
+    pub fn setup(ctx: &PartyCtx, cfg: BertConfig, weights: Option<&Weights>) -> SecureBert {
+        assert!(
+            (ctx.id == P0) == weights.is_some(),
+            "exactly P0 supplies weights"
+        );
+        ctx.with_phase(Phase::Setup, |ctx| {
+            let d = cfg.d_model;
+            let mut layers = Vec::with_capacity(cfg.n_layers);
+            for li in 0..cfg.n_layers {
+                let p = |n: &str| format!("layer{li}.{n}");
+                let sc = |w: &Weights, n: &str| w.scale(&format!("layer{li}.s_{n}"));
+                let ln = |g: &str, gs: &str, b: &str| -> LnParams {
+                    let gamma_vals: Option<Vec<u64>> = weights.map(|w| {
+                        let s = sc(w, gs);
+                        w.tensor(&p(g)).data.iter().map(|&v| R16.encode(v * s)).collect()
+                    });
+                    let beta_vals: Option<Vec<u64>> = weights
+                        .map(|w| w.tensor(&p(b)).data.iter().map(|&v| R4.encode(v)).collect());
+                    LnParams {
+                        gamma: share_rss(ctx, P0, R16, gamma_vals.as_deref(), d),
+                        beta: share2(ctx, P0, R4, beta_vals.as_deref(), d),
+                        table: ln_div_table(cfg.ln_sv, cfg.ln_eps),
+                    }
+                };
+                // conversion tables with folded activation-matmul scales;
+                // only P0's entries are real (the content is its secret).
+                let s_att = weights.map(|w| sc(w, "att")).unwrap_or(0);
+                let s_av = weights.map(|w| sc(w, "av")).unwrap_or(0);
+                layers.push(SecureLayer {
+                    wq: share_scaled_sign(ctx, weights, &p("wq"), &p("s_qkv"), (d, d)),
+                    wk: share_scaled_sign(ctx, weights, &p("wk"), &p("s_qkv"), (d, d)),
+                    wv: share_scaled_sign(ctx, weights, &p("wv"), &p("s_qkv"), (d, d)),
+                    wo: share_scaled_sign(ctx, weights, &p("wo"), &p("s_o"), (d, d)),
+                    w1: share_scaled_sign(ctx, weights, &p("w1"), &p("s_f1"), (cfg.d_ff, d)),
+                    w2: share_scaled_sign(ctx, weights, &p("w2"), &p("s_f2"), (d, cfg.d_ff)),
+                    ln1: ln("ln1_g", "g1", "ln1_b"),
+                    ln2: ln("ln2_g", "g2", "ln2_b"),
+                    conv_att: LutTable::from_fn(R4, R16, move |i| {
+                        R16.encode(R4.decode(i) * s_att)
+                    }),
+                    conv_av: LutTable::from_fn(R4, R16, move |i| R16.encode(i as i64 * s_av)),
+                });
+            }
+            let cls_vals: Option<Vec<u64>> = weights.map(|w| {
+                w.tensor("cls.w")
+                    .data
+                    .iter()
+                    .map(|&v| R16.encode(v * cfg.scale_cls))
+                    .collect()
+            });
+            let cls_w = share_rss(ctx, P0, R16, cls_vals.as_deref(), cfg.n_classes * d);
+            SecureBert {
+                cfg,
+                max_strategy: MaxStrategy::Tournament,
+                layers,
+                cls_w,
+                sm: SoftmaxTables::new(cfg.sm_sx),
+            }
+        })
+    }
+}
+
+/// Column slice of a `[rows, d]` A2 matrix: columns `[lo, hi)`.
+fn col_slice(x: &A2, rows: usize, d: usize, lo: usize, hi: usize) -> A2 {
+    let w = hi - lo;
+    if x.vals.is_empty() {
+        return A2::empty(x.ring, rows * w);
+    }
+    let mut vals = Vec::with_capacity(rows * w);
+    for r in 0..rows {
+        vals.extend_from_slice(&x.vals[r * d + lo..r * d + hi]);
+    }
+    A2 { ring: x.ring, vals, len: rows * w }
+}
+
+/// Write a `[rows, w]` block into columns `[lo, lo+w)` of a `[rows, d]`
+/// accumulator.
+fn col_write(dst: &mut Vec<u64>, src: &A2, rows: usize, d: usize, lo: usize, w: usize) {
+    if src.vals.is_empty() {
+        return;
+    }
+    if dst.is_empty() {
+        dst.resize(rows * d, 0);
+    }
+    for r in 0..rows {
+        dst[r * d + lo..r * d + lo + w].copy_from_slice(&src.vals[r * w..(r + 1) * w]);
+    }
+}
+
+/// Transpose RSS share matrices `[rows, cols] -> [cols, rows]` (local).
+fn transpose_rss(x: &Rss, rows: usize, cols: usize) -> Rss {
+    let tr = |v: &Vec<u64>| -> Vec<u64> {
+        let mut out = vec![0u64; v.len()];
+        if !v.is_empty() {
+            for r in 0..rows {
+                for c in 0..cols {
+                    out[c * rows + r] = v[r * cols + c];
+                }
+            }
+        }
+        out
+    };
+    Rss { ring: x.ring, next: tr(&x.next), prev: tr(&x.prev) }
+}
+
+/// 4→16 conversion through a caller-supplied table followed by reshare.
+fn convert_via(ctx: &PartyCtx, t: &LutTable, x: &A2) -> Rss {
+    let wide = lut_eval(ctx, t, x);
+    reshare_a2_to_rss(ctx, &wide)
+}
+
+/// One secure encoder layer. `h4` is `⟦·⟧^4 [s, d]`; returns the same.
+pub fn secure_layer(ctx: &PartyCtx, m: &SecureBert, li: usize, h4: &A2) -> A2 {
+    let cfg = &m.cfg;
+    let (s, d, dh) = (cfg.seq_len, cfg.d_model, cfg.d_head());
+    let l = &m.layers[li];
+
+    // ---- attention
+    let h16 = convert_to_rss(ctx, h4, R16, true);
+    let q4 = rss_matmul_trc(ctx, &h16, &l.wq, s, d, d, 4);
+    let k4 = rss_matmul_trc(ctx, &h16, &l.wk, s, d, d, 4);
+    let v4 = rss_matmul_trc(ctx, &h16, &l.wv, s, d, d, 4);
+
+    let mut ctxcat_vals: Vec<u64> = Vec::new();
+    for hd in 0..cfg.n_heads {
+        let (lo, hi) = (hd * dh, (hd + 1) * dh);
+        let qh = col_slice(&q4, s, d, lo, hi);
+        let kh = col_slice(&k4, s, d, lo, hi);
+        let vh = col_slice(&v4, s, d, lo, hi);
+        // scores = (s_att·q) · kᵀ, trc to 4 bits
+        let qh16 = convert_via(ctx, &l.conv_att, &qh);
+        let kh16 = convert_to_rss(ctx, &kh, R16, true);
+        let scores4 = rss_matmul_trc(ctx, &qh16, &kh16, s, dh, s, 4);
+        // softmax rows
+        let attn4 = softmax_rows(ctx, &m.sm, &scores4, s, s, m.max_strategy);
+        // ctx = (s_av·attn) · v, trc to 4 bits
+        let attn16 = convert_via(ctx, &l.conv_av, &attn4);
+        let vh16 = convert_to_rss(ctx, &vh, R16, true);
+        let vt = transpose_rss(&vh16, s, dh); // [dh, s] row-major = vᵀ
+        let ctx4 = rss_matmul_trc(ctx, &attn16, &vt, s, s, dh, 4);
+        col_write(&mut ctxcat_vals, &ctx4, s, d, lo, dh);
+    }
+    let ctxcat = A2 { ring: R4, vals: ctxcat_vals, len: s * d };
+
+    let ctx16 = convert_to_rss(ctx, &ctxcat, R16, true);
+    let o4 = rss_matmul_trc(ctx, &ctx16, &l.wo, s, d, d, 4);
+
+    // ---- residual + LN1 (extend both to the 16-bit ring, add locally)
+    let res16 = extend_ring(ctx, h4, R16, true).add(&extend_ring(ctx, &o4, R16, true));
+    let h1 = layernorm_rows(ctx, &l.ln1, &res16, s, d);
+
+    // ---- FFN
+    let h1_16 = convert_to_rss(ctx, &h1, R16, true);
+    let u4 = rss_matmul_trc(ctx, &h1_16, &l.w1, s, d, cfg.d_ff, 4);
+    let relu16 = relu_to_rss16(ctx, &u4);
+    let f4 = rss_matmul_trc(ctx, &relu16, &l.w2, s, cfg.d_ff, d, 4);
+
+    let res2 = extend_ring(ctx, &h1, R16, true).add(&extend_ring(ctx, &f4, R16, true));
+    layernorm_rows(ctx, &l.ln2, &res2, s, d)
+}
+
+/// Full secure inference. P1 (data owner) supplies the already-quantized
+/// embeddings `x4` (paper: the embedding table is public and evaluated
+/// locally by the data owner). Returns the revealed signed 16-bit logits
+/// at P1/P2 (empty at P0), plus the final hidden shares.
+pub fn secure_infer(ctx: &PartyCtx, m: &SecureBert, x4: Option<&[i64]>) -> (Vec<i64>, A2) {
+    let cfg = &m.cfg;
+    let (s, d) = (cfg.seq_len, cfg.d_model);
+    assert!((ctx.id == P1) == x4.is_some(), "exactly P1 supplies input");
+    let enc: Option<Vec<u64>> = x4.map(|x| x.iter().map(|&v| R4.encode(v)).collect());
+    let mut h4 = share2(ctx, P1, R4, enc.as_deref(), s * d);
+    for li in 0..cfg.n_layers {
+        h4 = secure_layer(ctx, m, li, &h4);
+    }
+    // classifier over the CLS (first) token
+    let cls_h = h4.slice(0, d);
+    let cls16 = convert_to_rss(ctx, &cls_h, R16, true);
+    let logits16 = rss_matmul_full(ctx, &cls16, &m.cls_w, 1, d, cfg.n_classes);
+    let revealed = reveal2(ctx, &logits16);
+    let logits = revealed.iter().map(|&v| R16.decode(v)).collect();
+    (logits, h4)
+}
+
+/// Output-minimized secure classification: like [`secure_infer`] but the
+/// parties only ever open the *argmax index* of the logits — the logit
+/// values themselves stay secret (`protocols::argmax`). Returns the
+/// predicted class at P1/P2.
+pub fn secure_classify(ctx: &PartyCtx, m: &SecureBert, x4: Option<&[i64]>) -> u64 {
+    let cfg = &m.cfg;
+    let d = cfg.d_model;
+    assert!((ctx.id == P1) == x4.is_some(), "exactly P1 supplies input");
+    let enc: Option<Vec<u64>> = x4.map(|x| x.iter().map(|&v| R4.encode(v)).collect());
+    let mut h4 = share2(ctx, P1, R4, enc.as_deref(), cfg.seq_len * d);
+    for li in 0..cfg.n_layers {
+        h4 = secure_layer(ctx, m, li, &h4);
+    }
+    let cls_h = h4.slice(0, d);
+    let cls16 = convert_to_rss(ctx, &cls_h, R16, true);
+    let logits16 = rss_matmul_full(ctx, &cls16, &m.cls_w, 1, d, cfg.n_classes);
+    // Requantize logits to 4 bits (local trc) and take the oblivious argmax.
+    let logits4 = logits16.trc_top(4);
+    let idx = crate::protocols::argmax::argmax_rows(ctx, &logits4, 1, cfg.n_classes);
+    let opened = reveal2(ctx, &idx);
+    opened.first().copied().unwrap_or(0)
+}
+
+/// Decode a revealed/shared signed-4-bit A2 into plain values (test aid:
+/// both P1 and P2 call reveal first).
+pub fn decode4(vals: &[u64]) -> Vec<i64> {
+    vals.iter().map(|&v| R4.decode(v)).collect()
+}
+
+/// The sign-extension used everywhere (exposed for tests).
+pub fn extend4to16(v: u64) -> u64 {
+    sign_extend(v, R4, R16)
+}

@@ -1,0 +1,250 @@
+//! Model weights: loading the python-generated artifact
+//! (`artifacts/bert_tiny.weights.bin`, format in python model.py
+//! `write_weights`) and generating synthetic BERT-base-scale weights in
+//! Rust (the BiT checkpoint is unreachable offline — DESIGN.md
+//! §Substitutions #1).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::BertConfig;
+use crate::core::prg::Prg;
+
+/// A named integer tensor (row-major, values are *signed* logical values).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Full weight set: tensors + calibrated per-op scales.
+pub struct Weights {
+    pub cfg: BertConfig,
+    pub tensors: HashMap<String, Tensor>,
+    pub scales: HashMap<String, i64>,
+}
+
+impl Weights {
+    pub fn tensor(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor {name}"))
+    }
+
+    pub fn scale(&self, name: &str) -> i64 {
+        *self
+            .scales
+            .get(name)
+            .unwrap_or_else(|| panic!("missing scale {name}"))
+    }
+
+    /// Load the python-written weights artifact.
+    pub fn load(path: &Path) -> Result<Weights> {
+        let mut blob = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut blob)?;
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > blob.len() {
+                bail!("truncated weights file at offset {}", *off);
+            }
+            let s = &blob[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let u32_at = |off: &mut usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(take(off, 4)?.try_into().unwrap()))
+        };
+        let i32_at = |off: &mut usize| -> Result<i32> {
+            Ok(i32::from_le_bytes(take(off, 4)?.try_into().unwrap()))
+        };
+        let f64_at = |off: &mut usize| -> Result<f64> {
+            Ok(f64::from_le_bytes(take(off, 8)?.try_into().unwrap()))
+        };
+
+        if take(&mut off, 4)? != b"PPQW" {
+            bail!("bad magic");
+        }
+        let n_layers = u32_at(&mut off)? as usize;
+        let d_model = u32_at(&mut off)? as usize;
+        let n_heads = u32_at(&mut off)? as usize;
+        let d_ff = u32_at(&mut off)? as usize;
+        let seq_len = u32_at(&mut off)? as usize;
+        let n_classes = u32_at(&mut off)? as usize;
+        let scale_cls = i32_at(&mut off)? as i64;
+        let sm_sx = f64_at(&mut off)?;
+        let ln_sv = f64_at(&mut off)?;
+        let ln_eps = f64_at(&mut off)?;
+        let cfg = BertConfig {
+            n_layers,
+            d_model,
+            n_heads,
+            d_ff,
+            seq_len,
+            n_classes,
+            scale_cls,
+            sm_sx,
+            ln_sv,
+            ln_eps,
+        };
+
+        let mut scales = HashMap::new();
+        let n_scales = u32_at(&mut off)? as usize;
+        for _ in 0..n_scales {
+            let nl = u32_at(&mut off)? as usize;
+            let name = String::from_utf8(take(&mut off, nl)?.to_vec())?;
+            let v = i32_at(&mut off)? as i64;
+            scales.insert(name, v);
+        }
+
+        let mut tensors = HashMap::new();
+        let n_tensors = u32_at(&mut off)? as usize;
+        for _ in 0..n_tensors {
+            let nl = u32_at(&mut off)? as usize;
+            let name = String::from_utf8(take(&mut off, nl)?.to_vec())?;
+            let nd = u32_at(&mut off)? as usize;
+            let mut shape = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                shape.push(u32_at(&mut off)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let raw = take(&mut off, count * 4)?;
+            let data: Vec<i64> = raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as i64)
+                .collect();
+            tensors.insert(name, Tensor { shape, data });
+        }
+        if off != blob.len() {
+            bail!("trailing bytes in weights file");
+        }
+        Ok(Weights { cfg, tensors, scales })
+    }
+
+    /// Generate synthetic 1-bit weights at any scale; scales are then
+    /// calibrated by `runtime::native::calibrate` against a sample input.
+    pub fn synth(cfg: BertConfig, seed: u64) -> Weights {
+        let mut seed_bytes = [0u8; 16];
+        seed_bytes[..8].copy_from_slice(&seed.to_le_bytes());
+        let mut prg = Prg::new(seed_bytes);
+        let mut sign = |shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            let data = (0..n)
+                .map(|_| if prg.next_u8() & 1 == 1 { 1i64 } else { -1 })
+                .collect();
+            Tensor { shape, data }
+        };
+        let mut tensors = HashMap::new();
+        for i in 0..cfg.n_layers {
+            let p = format!("layer{i}.");
+            tensors.insert(p.clone() + "wq", sign(vec![cfg.d_model, cfg.d_model]));
+            tensors.insert(p.clone() + "wk", sign(vec![cfg.d_model, cfg.d_model]));
+            tensors.insert(p.clone() + "wv", sign(vec![cfg.d_model, cfg.d_model]));
+            tensors.insert(p.clone() + "wo", sign(vec![cfg.d_model, cfg.d_model]));
+            tensors.insert(p.clone() + "w1", sign(vec![cfg.d_ff, cfg.d_model]));
+            tensors.insert(p.clone() + "w2", sign(vec![cfg.d_model, cfg.d_ff]));
+            tensors.insert(p.clone() + "ln1_g", sign(vec![cfg.d_model]));
+            tensors.insert(p.clone() + "ln2_g", sign(vec![cfg.d_model]));
+        }
+        tensors.insert("cls.w".into(), sign(vec![cfg.n_classes, cfg.d_model]));
+        // betas: small signed values
+        let mut prg_b = Prg::new([7u8; 16]);
+        for i in 0..cfg.n_layers {
+            for b in ["ln1_b", "ln2_b"] {
+                let data = (0..cfg.d_model)
+                    .map(|_| (prg_b.next_u8() % 9) as i64 - 4)
+                    .collect();
+                tensors.insert(
+                    format!("layer{i}.{b}"),
+                    Tensor { shape: vec![cfg.d_model], data },
+                );
+            }
+        }
+        Weights { cfg, tensors, scales: HashMap::new() }
+    }
+}
+
+/// Generate a synthetic signed-4-bit input (matches python `gen_input`
+/// only in distribution, not bit-for-bit; the artifact input file pins
+/// the exact python input for cross-layer tests).
+pub fn synth_input(cfg: &BertConfig, seed: u64) -> Vec<i64> {
+    let mut seed_bytes = [1u8; 16];
+    seed_bytes[..8].copy_from_slice(&seed.to_le_bytes());
+    let mut prg = Prg::new(seed_bytes);
+    (0..cfg.seq_len * cfg.d_model)
+        .map(|_| (prg.next_u8() % 16) as i64 - 8)
+        .collect()
+}
+
+/// Read the `.input.bin` / `.expect.bin` / `.hidden.bin` sidecar files
+/// written by aot.py (`write_i32` format: ndim, dims, data).
+pub fn read_i32_file(path: &Path) -> Result<(Vec<usize>, Vec<i64>)> {
+    let mut blob = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut blob)?;
+    let nd = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+    let mut shape = Vec::with_capacity(nd);
+    for i in 0..nd {
+        shape.push(u32::from_le_bytes(blob[4 + 4 * i..8 + 4 * i].try_into().unwrap()) as usize);
+    }
+    let off = 4 + 4 * nd;
+    let data = blob[off..]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as i64)
+        .collect();
+    Ok((shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_has_all_tensors() {
+        let cfg = BertConfig::tiny();
+        let w = Weights::synth(cfg, 1);
+        for i in 0..cfg.n_layers {
+            for p in BertConfig::layer_params() {
+                let t = w.tensor(&format!("layer{i}.{p}"));
+                assert!(t.numel() > 0);
+            }
+        }
+        assert_eq!(w.tensor("cls.w").shape, vec![2, 64]);
+        // binary weights are exactly +/-1
+        assert!(w.tensor("layer0.wq").data.iter().all(|&v| v == 1 || v == -1));
+    }
+
+    #[test]
+    fn synth_input_is_4bit() {
+        let cfg = BertConfig::tiny();
+        let x = synth_input(&cfg, 3);
+        assert_eq!(x.len(), cfg.seq_len * cfg.d_model);
+        assert!(x.iter().all(|&v| (-8..8).contains(&v)));
+    }
+
+    #[test]
+    fn load_python_artifact_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/bert_tiny.weights.bin");
+        if !path.exists() {
+            eprintln!("skipping: {} not built (run `make artifacts`)", path.display());
+            return;
+        }
+        let w = Weights::load(&path).unwrap();
+        assert_eq!(w.cfg.n_layers, 2);
+        assert_eq!(w.cfg.d_model, 64);
+        assert_eq!(w.tensor("layer0.wq").shape, vec![64, 64]);
+        assert!(w.scale("layer0.s_qkv") >= 1);
+        assert!(w.tensor("layer1.w1").data.iter().all(|&v| v == 1 || v == -1));
+    }
+}

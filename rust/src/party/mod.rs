@@ -1,0 +1,198 @@
+//! Three-party topology and the per-party execution context.
+//!
+//! Roles (paper, System Architecture): `P0` model owner, `P1` data owner,
+//! `P2` computing assistant. Protocol code is written SPMD-style: each
+//! party runs the same function with its own [`PartyCtx`]; channels,
+//! pairwise-shared PRGs and the metrics sink come from the session runner.
+
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::core::prg::Prg;
+use crate::transport::{build_mesh, Metrics, MetricsSnapshot, Net, NetParams, Phase};
+
+pub const P0: usize = 0;
+pub const P1: usize = 1;
+pub const P2: usize = 2;
+
+/// Per-party execution context handed to SPMD protocol code.
+pub struct PartyCtx {
+    pub id: usize,
+    pub net: Net,
+    /// PRG shared with each other party (same stream on both sides; both
+    /// parties must draw in lockstep — guaranteed by SPMD protocol code).
+    pair_prg: [RefCell<Prg>; 3],
+    /// This party's private PRG.
+    pub own_prg: RefCell<Prg>,
+    phase: Cell<Phase>,
+    phase_started: Cell<Instant>,
+    /// Worker threads available for data-parallel protocol steps.
+    pub threads: usize,
+}
+
+impl PartyCtx {
+    /// Build a party context from a mesh endpoint. Pairwise seeds are
+    /// derived from the master seed (a key-agreement handshake in a real
+    /// deployment — communication-free either way).
+    pub fn new(id: usize, net: Net, master_seed: [u8; 16], threads: usize) -> PartyCtx {
+        let mk_pair = |other: usize| RefCell::new(Prg::derive(master_seed, &pair_label(id, other)));
+        PartyCtx {
+            id,
+            net,
+            pair_prg: [mk_pair(0), mk_pair(1), mk_pair(2)],
+            own_prg: RefCell::new(Prg::derive(master_seed, &format!("own-{id}"))),
+            phase: Cell::new(Phase::Online),
+            phase_started: Cell::new(Instant::now()),
+            threads,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase.get()
+    }
+
+    /// Switch phase, attributing elapsed wall time to the previous phase.
+    pub fn set_phase(&self, p: Phase) {
+        let now = Instant::now();
+        let elapsed = now.duration_since(self.phase_started.get());
+        self.net
+            .metrics
+            .record_compute(self.id, self.phase.get(), elapsed.as_nanos() as u64);
+        self.phase.set(p);
+        self.phase_started.set(now);
+    }
+
+    /// Run `f` under phase `p`, restoring the previous phase after.
+    pub fn with_phase<T>(&self, p: Phase, f: impl FnOnce(&Self) -> T) -> T {
+        let prev = self.phase.get();
+        self.set_phase(p);
+        let out = f(self);
+        self.set_phase(prev);
+        out
+    }
+
+    /// Flush the running phase timer (call at the end of a session body).
+    pub fn flush_timer(&self) {
+        self.set_phase(self.phase.get());
+    }
+
+    /// Mutable access to the PRG shared with `other`.
+    pub fn pair_prg(&self, other: usize) -> std::cell::RefMut<'_, Prg> {
+        debug_assert_ne!(other, self.id);
+        self.pair_prg[other].borrow_mut()
+    }
+
+    pub fn next(&self) -> usize {
+        (self.id + 1) % 3
+    }
+
+    pub fn prev(&self) -> usize {
+        (self.id + 2) % 3
+    }
+}
+
+/// Session configuration.
+#[derive(Clone, Copy)]
+pub struct SessionCfg {
+    pub master_seed: [u8; 16],
+    /// Worker threads per party for data-parallel steps.
+    pub threads: usize,
+    /// Inject real sleeps matching these network parameters (demo only;
+    /// benches use the post-hoc cost model instead).
+    pub realtime: Option<NetParams>,
+}
+
+impl Default for SessionCfg {
+    fn default() -> Self {
+        SessionCfg {
+            master_seed: *b"ppq-bert-session",
+            threads: 1,
+            realtime: None,
+        }
+    }
+}
+
+fn pair_label(a: usize, b: usize) -> String {
+    format!("pair-{}-{}", a.min(b), a.max(b))
+}
+
+/// Run the same closure on three party threads; returns per-party outputs
+/// and the metered session snapshot.
+///
+/// Pairwise seeds are derived from the master seed — in a real deployment
+/// they would come from a key-agreement handshake during setup; the
+/// derivation is communication-free either way so the metering is faithful.
+pub fn run_3pc<T, F>(cfg: SessionCfg, f: F) -> ([T; 3], MetricsSnapshot)
+where
+    T: Send,
+    F: Fn(&PartyCtx) -> T + Sync,
+{
+    let metrics = Arc::new(Metrics::new());
+    let nets = build_mesh(Arc::clone(&metrics), cfg.realtime);
+    let mut outs: Vec<Option<T>> = Vec::new();
+    for _ in 0..3 {
+        outs.push(None);
+    }
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (id, net) in nets.into_iter().enumerate() {
+            let f = &f;
+            handles.push(s.spawn(move || {
+                let ctx = PartyCtx::new(id, net, cfg.master_seed, cfg.threads);
+                let out = f(&ctx);
+                ctx.flush_timer();
+                out
+            }));
+        }
+        for (id, h) in handles.into_iter().enumerate() {
+            outs[id] = Some(h.join().expect("party thread panicked"));
+        }
+    });
+    let outs: Vec<T> = outs.into_iter().map(|o| o.unwrap()).collect();
+    let outs: [T; 3] = outs.try_into().map_err(|_| ()).unwrap();
+    (outs, metrics.snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::R16;
+
+    #[test]
+    fn pairwise_prgs_agree() {
+        let ([a, b, c], _) = run_3pc(SessionCfg::default(), |ctx| {
+            let with_next = ctx.pair_prg(ctx.next()).next_u64();
+            let with_prev = ctx.pair_prg(ctx.prev()).next_u64();
+            (with_next, with_prev)
+        });
+        // P_i's "next" stream must equal P_{i+1}'s "prev" stream.
+        assert_eq!(a.0, b.1);
+        assert_eq!(b.0, c.1);
+        assert_eq!(c.0, a.1);
+        // and the three pairwise streams are distinct
+        assert_ne!(a.0, b.0);
+        assert_ne!(b.0, c.0);
+    }
+
+    #[test]
+    fn parties_can_talk_in_a_cycle() {
+        let ([a, b, c], snap) = run_3pc(SessionCfg::default(), |ctx| {
+            ctx.net
+                .send_ring(ctx.next(), Phase::Online, R16, &[ctx.id as u64 + 100]);
+            ctx.net.recv_ring(ctx.prev(), Phase::Online, R16, 1)[0]
+        });
+        assert_eq!((a, b, c), (102, 100, 101));
+        assert_eq!(snap.max_rounds(Phase::Online), 1);
+    }
+
+    #[test]
+    fn phase_timer_attributes_time() {
+        let (_, snap) = run_3pc(SessionCfg::default(), |ctx| {
+            ctx.with_phase(Phase::Offline, |_| {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            });
+        });
+        assert!(snap.max_compute_ns(Phase::Offline) >= 4_000_000);
+    }
+}

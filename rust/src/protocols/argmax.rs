@@ -1,0 +1,172 @@
+//! Oblivious argmax: returns *shares of the index* of the maximum — the
+//! output-minimizing classifier head (the serving client learns only the
+//! predicted class, not the logits).
+//!
+//! Tournament over (value, index) pairs. Each level:
+//!   1. `sel = T_gt(a‖b)` — 2-input LUT, `sel = 1` iff `b > a` (8-bit out)
+//!   2. `win_val = T_max(a‖b)` — same openings (`lut2_eval_multi`)
+//!   3. `win_idx = idx_a + sel·(idx_b − idx_a)` — one RSS multiplication
+//! Values are signed 4-bit; indices live in `Z_2^8` (seq ≤ 128).
+
+use crate::core::ring::{R4, R8};
+use crate::party::{PartyCtx, P1};
+use crate::protocols::lut::{lut2_eval_multi, LutTable2};
+use crate::protocols::matmul::rss_mul_full;
+use crate::sharing::additive::A2;
+use crate::sharing::rss::reshare_a2_to_rss;
+
+/// `T_gt(a‖b) = 1 if b > a else 0` (signed), output in `Z_2^8`.
+pub fn gt_table() -> LutTable2 {
+    LutTable2::from_fn(R4, R4, R8, |a, b| u64::from(R4.decode(b) > R4.decode(a)))
+}
+
+fn max_table8() -> LutTable2 {
+    LutTable2::from_fn(R4, R4, R4, |a, b| R4.encode(R4.decode(a).max(R4.decode(b))))
+}
+
+/// Row-wise argmax over `[rows, n]` signed 4-bit shares. Returns
+/// `⟦argmax⟧^8` (first maximal index wins ties... the *last* maximal index
+/// wins, matching `sel = (b > a)` being 0 on ties toward the left
+/// operand — deterministic and documented).
+pub fn argmax_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize) -> A2 {
+    debug_assert_eq!(x.ring, R4);
+    debug_assert_eq!(x.len, rows * n);
+    let tgt = gt_table();
+    let tmax = max_table8();
+    let has = !x.vals.is_empty();
+
+    // Survivor values (4-bit shares) and index shares (8-bit; public
+    // constants at the leaves: P1 holds the constant, P2 zero).
+    let mut vals = x.clone();
+    let mut idxs = A2 {
+        ring: R8,
+        vals: if has {
+            (0..rows * n)
+                .map(|i| if ctx.id == P1 { (i % n) as u64 } else { 0 })
+                .collect()
+        } else {
+            Vec::new()
+        },
+        len: rows * n,
+    };
+    let mut width = n;
+    while width > 1 {
+        let half = width / 2;
+        let odd = width % 2 == 1;
+        let gather = |v: &Vec<u64>, off: usize| -> Vec<u64> {
+            let mut out = Vec::with_capacity(rows * half);
+            for r in 0..rows {
+                for p in 0..half {
+                    out.push(v[r * width + 2 * p + off]);
+                }
+            }
+            out
+        };
+        let (av, bv, ia, ib) = if has {
+            (
+                gather(&vals.vals, 0),
+                gather(&vals.vals, 1),
+                gather(&idxs.vals, 0),
+                gather(&idxs.vals, 1),
+            )
+        } else {
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        };
+        let m = rows * half;
+        let a = A2 { ring: R4, vals: av, len: m };
+        let b = A2 { ring: R4, vals: bv, len: m };
+        // winner value + selector with ONE opening pair
+        let outs = lut2_eval_multi(ctx, &[&tmax, &tgt], &a, &b);
+        let (wv, sel) = (&outs[0], &outs[1]);
+        // win_idx = ia + sel * (ib - ia): one RSS multiplication over Z_2^8
+        let diff = A2 {
+            ring: R8,
+            vals: if has {
+                (0..m).map(|i| R8.sub(ib[i], ia[i])).collect()
+            } else {
+                Vec::new()
+            },
+            len: m,
+        };
+        let sel_rss = reshare_a2_to_rss(ctx, sel);
+        let diff_rss = reshare_a2_to_rss(ctx, &diff);
+        let prod = rss_mul_full(ctx, &sel_rss, &diff_rss);
+        // prod is a P1/P2 additive share; P0 holds nothing (has == false).
+        let win_idx = A2 {
+            ring: R8,
+            vals: if !prod.vals.is_empty() {
+                (0..m).map(|i| R8.add(ia[i], prod.vals[i])).collect()
+            } else {
+                Vec::new()
+            },
+            len: m,
+        };
+
+        // rebuild survivors
+        let new_width = half + usize::from(odd);
+        let mut nv = Vec::with_capacity(rows * new_width);
+        let mut ni = Vec::with_capacity(rows * new_width);
+        if has {
+            for r in 0..rows {
+                for p in 0..half {
+                    nv.push(wv.vals[r * half + p]);
+                    ni.push(win_idx.vals[r * half + p]);
+                }
+                if odd {
+                    nv.push(vals.vals[r * width + width - 1]);
+                    ni.push(idxs.vals[r * width + width - 1]);
+                }
+            }
+        }
+        vals = A2 { ring: R4, vals: nv, len: rows * new_width };
+        idxs = A2 { ring: R8, vals: ni, len: rows * new_width };
+        width = new_width;
+    }
+    idxs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::{run_3pc, SessionCfg, P0};
+    use crate::sharing::additive::{reveal2, share2};
+
+    fn run_argmax(vals: Vec<i64>, rows: usize, n: usize) -> Vec<u64> {
+        let enc: Vec<u64> = vals.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+            reveal2(ctx, &argmax_rows(ctx, &x, rows, n))
+        });
+        r1
+    }
+
+    #[test]
+    fn finds_unique_argmax() {
+        for n in [2usize, 3, 5, 8, 13] {
+            let mut vals: Vec<i64> = (0..n as i64).map(|i| (i % 6) - 5).collect();
+            let peak = (n * 2 / 3).min(n - 1);
+            vals[peak] = 7;
+            assert_eq!(run_argmax(vals, 1, n), vec![peak as u64], "n={n}");
+        }
+    }
+
+    #[test]
+    fn multi_row() {
+        let vals = vec![0i64, 7, -3, /*r2*/ 5, -8, 2];
+        assert_eq!(run_argmax(vals, 2, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_of_single_element() {
+        assert_eq!(run_argmax(vec![3], 1, 1), vec![0]);
+    }
+
+    #[test]
+    fn tie_break_is_deterministic() {
+        let got = run_argmax(vec![7, 7, 0, 7], 1, 4);
+        assert_eq!(got.len(), 1);
+        assert!([0u64, 1, 3].contains(&got[0]));
+        // and repeatable
+        assert_eq!(run_argmax(vec![7, 7, 0, 7], 1, 4), got);
+    }
+}

@@ -1,0 +1,106 @@
+//! Share conversion `Π_convert^{ℓ',ℓ}` (paper, "Lookup Table for Share
+//! Conversion"): ring extension via a lookup table (the table is the
+//! identity — or sign extension for signed activations — over the larger
+//! ring), optionally followed by the reshare step into RSS.
+//!
+//! This is what "eliminates truncation overhead entirely": instead of a
+//! secure truncation protocol, every precision bridge in the model is one
+//! cheap LUT evaluation.
+
+use crate::core::ring::{sign_extend, Ring};
+use crate::party::PartyCtx;
+use crate::sharing::rss::reshare_a2_to_rss;
+use crate::sharing::{A2, Rss};
+
+use super::lut::{lut_eval, LutTable};
+
+/// Build the ring-extension table `T(i) = i` (unsigned) or sign-extended.
+pub fn extension_table(from: Ring, to: Ring, signed: bool) -> LutTable {
+    LutTable::from_fn(from, to, move |v| {
+        if signed {
+            sign_extend(v, from, to)
+        } else {
+            v
+        }
+    })
+}
+
+/// `⟦x⟧^{ℓ'} -> ⟦x⟧^ℓ` (2PC additive stays 2PC additive).
+pub fn extend_ring(ctx: &PartyCtx, x: &A2, to: Ring, signed: bool) -> A2 {
+    debug_assert!(to.bits() >= x.ring.bits());
+    let t = extension_table(x.ring, to, signed);
+    lut_eval(ctx, &t, x)
+}
+
+/// `Π_convert^{ℓ',ℓ}`: `⟦x⟧^{ℓ'} -> ⟨x⟩^ℓ` (LUT extension + reshare).
+pub fn convert_to_rss(ctx: &PartyCtx, x: &A2, to: Ring, signed: bool) -> Rss {
+    let wide = extend_ring(ctx, x, to, signed);
+    reshare_a2_to_rss(ctx, &wide)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R16, R32, R4, R6};
+    use crate::party::{run_3pc, SessionCfg, P0};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::sharing::rss::reveal_rss;
+
+    #[test]
+    fn extend_unsigned() {
+        let vals: Vec<u64> = vec![0, 1, 8, 15];
+        let vc = vals.clone();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&vc) } else { None }, 4);
+            reveal2(ctx, &extend_ring(ctx, &x, R16, false))
+        });
+        assert_eq!(r1, vals);
+    }
+
+    #[test]
+    fn extend_signed_4_to_16() {
+        let signed: Vec<i64> = vec![-8, -1, 0, 7];
+        let enc: Vec<u64> = signed.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, 4);
+            reveal2(ctx, &extend_ring(ctx, &x, R16, true))
+        });
+        assert_eq!(
+            r1.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            signed
+        );
+    }
+
+    #[test]
+    fn convert_4_to_16_rss_roundtrip() {
+        let signed: Vec<i64> = vec![-8, -3, 0, 5, 7];
+        let enc: Vec<u64> = signed.iter().map(|&v| R4.encode(v)).collect();
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, 5);
+            let rss = convert_to_rss(ctx, &x, R16, true);
+            reveal_rss(ctx, &rss)
+        });
+        for out in outs {
+            assert_eq!(
+                out.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+                signed
+            );
+        }
+    }
+
+    #[test]
+    fn convert_6_to_32_signed() {
+        let signed: Vec<i64> = vec![-32, -23, 0, 22, 31];
+        let enc: Vec<u64> = signed.iter().map(|&v| R6.encode(v)).collect();
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R6, if ctx.id == P0 { Some(&enc) } else { None }, 5);
+            reveal_rss(ctx, &convert_to_rss(ctx, &x, R32, true))
+        });
+        for out in outs {
+            assert_eq!(
+                out.iter().map(|&v| R32.decode(v)).collect::<Vec<_>>(),
+                signed
+            );
+        }
+    }
+}

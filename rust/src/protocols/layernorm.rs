@@ -1,0 +1,200 @@
+//! Secure quantized LayerNorm (paper §LayerNorm).
+//!
+//! Inputs are the 16-bit-ring residual sums `⟦r⟧^16` (each value is the
+//! sum of two 4-bit activations, range ⊂ [-32, 31]). Pipeline per row:
+//!   mean     μ = trc(⌊2^12/n⌋ · Σ r, 4)            (local + local trc)
+//!   diff     a = r − μ (16-bit), a6 = a mod 2^6     (LUT extend + local)
+//!   variance v = trc(⌊2^12/n⌋ · Σ a², 4)           (RSS self inner product)
+//!   divide   u = T_ln(a6 ‖ v)                       (Π_look^{6,4}, Δ'
+//!            shared across the row — v is common to the whole row)
+//!   scale    g = trc(γ' · u, 4), out = g + β        (RSS mult + local add)
+//!
+//! γ' = ⌊2^12·s_γ·s_u/s_out⌋·sign(γ) is RSS-shared by the model owner at
+//! setup; β is 2PC-additively shared. Matches `ref.layernorm_quant` up to
+//! the −1 LSB local-truncation carries (mean, variance, γ rescale).
+
+use crate::core::ring::{R16, R32, R6};
+#[cfg(test)]
+use crate::core::ring::R4;
+use crate::party::PartyCtx;
+use crate::sharing::{A2, Rss};
+
+use super::convert::{convert_to_rss, extend_ring};
+use super::lut::{lut2_eval_shared_y, LutTable2};
+use super::matmul::{rss_inner_self, rss_mul_trc};
+
+/// Model-owner LayerNorm parameters, already shared.
+pub struct LnParams {
+    /// `⌊2^12·s_γ⌋ · sign(γ)` over `Z_2^16`, RSS, length `n`.
+    pub gamma: Rss,
+    /// Quantized bias `β` over `Z_2^4`, 2PC additive, length `n`.
+    pub beta: A2,
+    /// The `(6,4)`-bit division table `T_ln`.
+    pub table: LutTable2,
+}
+
+/// Row-wise secure LayerNorm. `r` is `[rows, n]` over `Z_2^16`; output is
+/// `[rows, n]` signed 4-bit shares.
+pub fn layernorm_rows(ctx: &PartyCtx, p: &LnParams, r: &A2, rows: usize, n: usize) -> A2 {
+    debug_assert_eq!(r.ring, R16);
+    debug_assert_eq!(r.len, rows * n);
+    let c = (4096 / n) as u64;
+
+    // --- mean: μ4 = trc(c·Σ, 4), then sign-extend back to Z_2^16.
+    let sums = if r.vals.is_empty() {
+        A2::empty(R16, rows)
+    } else {
+        let vals = (0..rows)
+            .map(|row| {
+                let mut acc = 0u64;
+                for j in 0..n {
+                    acc = acc.wrapping_add(r.vals[row * n + j]);
+                }
+                R16.mul(acc, c)
+            })
+            .collect();
+        A2 { ring: R16, vals, len: rows }
+    };
+    let mu4 = sums.trc_top(4);
+    let mu16 = extend_ring(ctx, &mu4, R16, true);
+
+    // --- diff (broadcast subtract), 6-bit index
+    let diff = if r.vals.is_empty() {
+        A2::empty(R16, rows * n)
+    } else {
+        let mut vals = Vec::with_capacity(rows * n);
+        for row in 0..rows {
+            for j in 0..n {
+                vals.push(R16.sub(r.vals[row * n + j], mu16.vals[row]));
+            }
+        }
+        A2 { ring: R16, vals, len: rows * n }
+    };
+    let a6 = diff.low_bits(R6);
+
+    // --- variance over Z_2^32 (diff fits 6 bits exactly, so the 6-bit
+    //     reduction is lossless; extend to 32 bits for the squares).
+    let d32 = convert_to_rss(ctx, &a6, R32, true);
+    let var = rss_inner_self(ctx, &d32, rows, n);
+    let v16 = A2 {
+        ring: R16,
+        vals: var.vals.iter().map(|&v| R16.mul(v, c)).collect(),
+        len: rows,
+    };
+    let v4 = v16.trc_top(4); // unsigned 4-bit quantized variance
+
+    // --- divide: u = T_ln(a6 ‖ v4), Δ' shared per row
+    let u4 = lut2_eval_shared_y(ctx, &p.table, &a6, &v4);
+
+    // --- γ/β: g = trc(γ'·u, 4) + β
+    let u16 = convert_to_rss(ctx, &u4, R16, true);
+    let gamma_tiled = tile_rss(&p.gamma, rows);
+    let g = rss_mul_trc(ctx, &u16, &gamma_tiled, 4);
+    let beta_tiled = tile_a2(&p.beta, rows);
+    g.add(&beta_tiled)
+}
+
+fn tile_rss(x: &Rss, times: usize) -> Rss {
+    let mut next = Vec::with_capacity(x.len() * times);
+    let mut prev = Vec::with_capacity(x.len() * times);
+    for _ in 0..times {
+        next.extend_from_slice(&x.next);
+        prev.extend_from_slice(&x.prev);
+    }
+    Rss { ring: x.ring, next, prev }
+}
+
+fn tile_a2(x: &A2, times: usize) -> A2 {
+    let mut vals = Vec::with_capacity(x.vals.len() * times);
+    for _ in 0..times {
+        vals.extend_from_slice(&x.vals);
+    }
+    A2 { ring: x.ring, vals, len: x.len * times }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::{run_3pc, SessionCfg, P0, P1};
+    use crate::protocols::tables::ln_div_table;
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::sharing::rss::share_rss;
+
+    /// Plaintext oracle identical to ref.layernorm_quant.
+    fn ln_ref(r: &[i64], n: usize, s_v: f64, eps: f64, gsign: &[i64], gscale: i64, beta: &[i64]) -> Vec<i64> {
+        let c = (4096 / n) as i64;
+        let t = ln_div_table(s_v, eps);
+        let sum: i64 = r.iter().sum();
+        let m16 = ((c * sum) as u64) & 0xFFFF;
+        let mu = R4.decode(m16 >> 12);
+        let var: i64 = r.iter().map(|&x| (x - mu) * (x - mu)).sum();
+        let v16 = ((var * c) as u64) & 0xFFFF;
+        let v4 = (v16 >> 12) & 0xF;
+        (0..n)
+            .map(|j| {
+                let a6 = ((r[j] - mu) as u64) & 0x3F;
+                let u = R4.decode(t.entries[(a6 * 16 + v4) as usize]);
+                let acc = ((u * gsign[j] * gscale) as u64) & 0xFFFF;
+                let g = R4.decode(acc >> 12);
+                R4.decode(((g + beta[j]) as u64) & 0xF)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_oracle_within_carry() {
+        let n = 16usize;
+        let r_raw: Vec<i64> = vec![3, -5, 12, -16, 0, 7, -2, 9, 1, -1, 4, -8, 14, -11, 2, 6];
+        let gsign: Vec<i64> = vec![1, -1, 1, 1, -1, 1, -1, 1, 1, 1, -1, -1, 1, -1, 1, 1];
+        let beta: Vec<i64> = vec![0, 1, -2, 3, 0, -1, 2, 0, 1, -1, 0, 2, -3, 0, 1, 0];
+        let (s_v, eps, gscale) = (4.0, 1.0, 2048i64);
+
+        let renc: Vec<u64> = r_raw.iter().map(|&v| R16.encode(v)).collect();
+        let genc: Vec<u64> = gsign.iter().map(|&v| R16.encode(v * gscale)).collect();
+        let benc: Vec<u64> = beta.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let p = LnParams {
+                gamma: share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&genc) } else { None }, 16),
+                beta: share2(ctx, P0, R4, if ctx.id == P0 { Some(&benc) } else { None }, 16),
+                table: ln_div_table(s_v, eps),
+            };
+            let r = share2(ctx, P1, R16, if ctx.id == P1 { Some(&renc) } else { None }, 16);
+            reveal2(ctx, &layernorm_rows(ctx, &p, &r, 1, 16))
+        });
+        let want = ln_ref(&r_raw, n, s_v, eps, &gsign, gscale, &beta);
+        // A -1 LSB carry on the shared mean shifts every diff in the row,
+        // so most entries may move by one quantization step; the *magnitude*
+        // must stay within the carry budget (mean, variance, γ rescale).
+        let mut total_dev = 0i64;
+        for (j, (&got_enc, &want_v)) in r1.iter().zip(&want).enumerate() {
+            let got = R4.decode(got_enc);
+            let d = (got - want_v).abs();
+            assert!(d <= 2, "j {j} got {got} want {want_v}");
+            total_dev += d;
+        }
+        assert!(total_dev as f64 / n as f64 <= 1.25, "mean |dev| {}", total_dev as f64 / n as f64);
+    }
+
+    #[test]
+    fn constant_rows_normalize_to_beta() {
+        // r constant -> diff 0 -> u 0 -> out = beta (exactly, up to carry)
+        let n = 8usize;
+        let renc: Vec<u64> = vec![R16.encode(5); n];
+        let benc: Vec<u64> = (0..n as i64).map(|v| R4.encode(v - 4)).collect();
+        let genc: Vec<u64> = vec![R16.encode(2048); n];
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let p = LnParams {
+                gamma: share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&genc) } else { None }, n),
+                beta: share2(ctx, P0, R4, if ctx.id == P0 { Some(&benc) } else { None }, n),
+                table: ln_div_table(4.0, 1.0),
+            };
+            let r = share2(ctx, P1, R16, if ctx.id == P1 { Some(&renc) } else { None }, n);
+            reveal2(ctx, &layernorm_rows(ctx, &p, &r, 1, n))
+        });
+        for (j, &got) in r1.iter().enumerate() {
+            let want = j as i64 - 4;
+            let got = R4.decode(got);
+            assert!((got - want).abs() <= 1, "j {j} got {got} want {want}");
+        }
+    }
+}

@@ -1,0 +1,470 @@
+//! Secure lookup-table evaluation (paper Alg. 1 and Alg. 2).
+//!
+//! Single input `Π_look`: P0 picks a random offset Δ, left-shifts the
+//! table by Δ, additively shares the shifted table and Δ between P1/P2
+//! (offline); online, P1/P2 open `δ = x − Δ` and read entry δ of the
+//! shared table locally.
+//!
+//! Multi input `Π_look^{b1,b2}` (two-Δ trick): the table over `x‖y` is
+//! shifted by Δ on the outer b1-bit index and Δ' on the inner b2-bit
+//! index; opening `(x−Δ, y−Δ')` costs the same as a single-input opening
+//! of b1+b2 bits — no expensive share-width conversion is needed.
+//!
+//! Shared-input optimization (§Communication Optimization): when many
+//! tables share the same `y` input (softmax division along a row, LN
+//! division along a feature row), a common Δ' lets P1/P2 open `y − Δ'`
+//! once, cutting online communication for the second operand by the row
+//! length.
+//!
+//! The table *content* is a deployment secret of P0 (it encodes private
+//! scale factors); in this SPMD simulation every party constructs the
+//! [`LutTable`] object but only P0's closure ever reads the entries.
+
+use crate::core::ring::Ring;
+use crate::party::{PartyCtx, P0, P1, P2};
+use crate::sharing::A2;
+
+/// A public-shape, P0-content lookup table for `f: Z_2^{ℓ'} -> Z_2^ℓ`.
+#[derive(Clone)]
+pub struct LutTable {
+    pub in_ring: Ring,
+    pub out_ring: Ring,
+    pub entries: Vec<u64>,
+}
+
+impl LutTable {
+    pub fn from_fn(in_ring: Ring, out_ring: Ring, f: impl Fn(u64) -> u64) -> Self {
+        let entries = (0..in_ring.size() as u64)
+            .map(|v| out_ring.reduce(f(v)))
+            .collect();
+        LutTable { in_ring, out_ring, entries }
+    }
+
+    pub fn size(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// A two-input table for `f: Z_2^{b1} x Z_2^{b2} -> Z_2^ℓ`, stored
+/// row-major (`x‖y`, i.e. entry `x * 2^b2 + y`).
+#[derive(Clone)]
+pub struct LutTable2 {
+    pub x_ring: Ring,
+    pub y_ring: Ring,
+    pub out_ring: Ring,
+    pub entries: Vec<u64>,
+}
+
+impl LutTable2 {
+    pub fn from_fn(x_ring: Ring, y_ring: Ring, out_ring: Ring, f: impl Fn(u64, u64) -> u64) -> Self {
+        let mut entries = Vec::with_capacity(x_ring.size() * y_ring.size());
+        for x in 0..x_ring.size() as u64 {
+            for y in 0..y_ring.size() as u64 {
+                entries.push(out_ring.reduce(f(x, y)));
+            }
+        }
+        LutTable2 { x_ring, y_ring, out_ring, entries }
+    }
+}
+
+/// Offline half of `Π_look` for a batch of `n` independent lookups of the
+/// same table: P0 derives fresh (Δ_i, shifted-table_i) pairs; P1's shares
+/// come from the pairwise seed, P2 receives the correction in one message.
+///
+/// Returns this party's table shares (concatenated) and Δ shares.
+fn lut_offline(ctx: &PartyCtx, t: &LutTable, n: usize) -> (Vec<u64>, Vec<u64>) {
+    let size = t.size();
+    let (inr, outr) = (t.in_ring, t.out_ring);
+    let phase = ctx.phase();
+    match ctx.id {
+        P0 => {
+            // Fresh private Δs; shifted tables; share via seed-with-P1.
+            // Randomness is drawn in bulk (one table-share vec + one Δ vec)
+            // so both sides of the pairwise stream stay in lockstep while
+            // using the fast block-sliced PRG path (§Perf).
+            let mut own = ctx.own_prg.borrow_mut();
+            let mut pair = ctx.pair_prg(P1);
+            let mut corr = pair.ring_vec(outr, n * size);
+            let mut dcorr = pair.ring_vec(inr, n);
+            for i in 0..n {
+                let delta = own.ring_elem(inr);
+                let base = i * size;
+                for j in 0..size {
+                    let shifted = t.entries[(j + delta as usize) % size];
+                    corr[base + j] = outr.sub(shifted, corr[base + j]);
+                }
+                dcorr[i] = inr.sub(delta, dcorr[i]);
+            }
+            ctx.net.send_ring(P2, phase, outr, &corr);
+            ctx.net.send_ring(P2, phase, inr, &dcorr);
+            (Vec::new(), Vec::new())
+        }
+        P1 => {
+            let mut pair = ctx.pair_prg(P0);
+            let tsh = pair.ring_vec(outr, n * size);
+            let dsh = pair.ring_vec(inr, n);
+            (tsh, dsh)
+        }
+        P2 => {
+            let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
+            let dsh = ctx.net.recv_ring(P0, phase, inr, n);
+            (tsh, dsh)
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// `Π_look` on a batch: one fresh masked table per element, one online
+/// round (P1/P2 exchange all δ values in a single message).
+pub fn lut_eval(ctx: &PartyCtx, t: &LutTable, xs: &A2) -> A2 {
+    debug_assert_eq!(xs.ring, t.in_ring);
+    let n = xs.len;
+    let size = t.size();
+    let (tsh, dsh) = ctx.with_phase(crate::transport::Phase::Offline, |c| lut_offline(c, t, n));
+    if ctx.id == P0 {
+        return A2::empty(t.out_ring, n);
+    }
+    // Online: open δ = x - Δ.
+    let delta_sh: Vec<u64> = (0..n)
+        .map(|i| t.in_ring.sub(xs.vals[i], dsh[i]))
+        .collect();
+    let peer = if ctx.id == P1 { P2 } else { P1 };
+    let theirs = ctx.net.exchange_ring(peer, ctx.phase(), t.in_ring, &delta_sh);
+    let vals = (0..n)
+        .map(|i| {
+            let delta = t.in_ring.add(delta_sh[i], theirs[i]);
+            tsh[i * size + delta as usize]
+        })
+        .collect();
+    A2 { ring: t.out_ring, vals, len: n }
+}
+
+/// Offline half for two-input tables. `fresh_y = false` uses one Δ' per
+/// `group` consecutive elements (the shared-input optimization).
+fn lut2_offline(
+    ctx: &PartyCtx,
+    t: &LutTable2,
+    n: usize,
+    groups: usize,
+) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let (bx, by, outr) = (t.x_ring, t.y_ring, t.out_ring);
+    let (sx, sy) = (bx.size(), by.size());
+    let size = sx * sy;
+    let phase = ctx.phase();
+    match ctx.id {
+        P0 => {
+            let mut own = ctx.own_prg.borrow_mut();
+            let mut pair = ctx.pair_prg(P1);
+            // one Δ' per group; bulk randomness draws (§Perf)
+            let dys: Vec<u64> = (0..groups).map(|_| own.ring_elem(by)).collect();
+            let per_group = n / groups;
+            let mut corr = pair.ring_vec(outr, n * size);
+            let mut dxc = pair.ring_vec(bx, n);
+            let mut dyc = pair.ring_vec(by, groups);
+            for g in 0..groups {
+                let dy = dys[g] as usize;
+                for e in 0..per_group {
+                    let i = g * per_group + e;
+                    let dx = own.ring_elem(bx);
+                    let base = i * size;
+                    for u in 0..sx {
+                        // inner index shift: precompute the dy-rotated row
+                        let src_row = (bx.add(u as u64, dx) as usize) * sy;
+                        for v in 0..sy {
+                            let src = src_row + ((v + dy) & (sy - 1));
+                            corr[base + u * sy + v] =
+                                outr.sub(t.entries[src], corr[base + u * sy + v]);
+                        }
+                    }
+                    dxc[i] = bx.sub(dx, dxc[i]);
+                }
+                dyc[g] = by.sub(dys[g], dyc[g]);
+            }
+            ctx.net.send_ring(P2, phase, outr, &corr);
+            ctx.net.send_ring(P2, phase, bx, &dxc);
+            ctx.net.send_ring(P2, phase, by, &dyc);
+            (Vec::new(), Vec::new(), Vec::new())
+        }
+        P1 => {
+            let mut pair = ctx.pair_prg(P0);
+            let tsh = pair.ring_vec(outr, n * size);
+            let dxs = pair.ring_vec(bx, n);
+            let dys = pair.ring_vec(by, groups);
+            (tsh, dxs, dys)
+        }
+        P2 => {
+            let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
+            let dxs = ctx.net.recv_ring(P0, phase, bx, n);
+            let dys = ctx.net.recv_ring(P0, phase, by, groups);
+            (tsh, dxs, dys)
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// `Π_look^{b1,b2}` with the shared-y optimization: `xs` has
+/// `groups * per_group` elements; `ys` has one element per group. Each
+/// group's lookups reuse one opened `y − Δ'`.
+///
+/// Online cost: open `n` b1-bit values + `groups` b2-bit values, one round.
+pub fn lut2_eval_shared_y(ctx: &PartyCtx, t: &LutTable2, xs: &A2, ys: &A2) -> A2 {
+    debug_assert_eq!(xs.ring, t.x_ring);
+    debug_assert_eq!(ys.ring, t.y_ring);
+    let n = xs.len;
+    let groups = ys.len;
+    debug_assert!(groups > 0 && n % groups == 0);
+    let per_group = n / groups;
+    let (sx, sy) = (t.x_ring.size(), t.y_ring.size());
+    let size = sx * sy;
+    let (tsh, dxs, dys) =
+        ctx.with_phase(crate::transport::Phase::Offline, |c| lut2_offline(c, t, n, groups));
+    if ctx.id == P0 {
+        return A2::empty(t.out_ring, n);
+    }
+    // Open δx (n values) and δy (groups values) in one combined message.
+    let my_dx: Vec<u64> = (0..n).map(|i| t.x_ring.sub(xs.vals[i], dxs[i])).collect();
+    let my_dy: Vec<u64> = (0..groups).map(|g| t.y_ring.sub(ys.vals[g], dys[g])).collect();
+    let mut payload = crate::core::pack::pack(t.x_ring, &my_dx);
+    payload.extend(crate::core::pack::pack(t.y_ring, &my_dy));
+    let peer = if ctx.id == P1 { P2 } else { P1 };
+    ctx.net.send_bytes(peer, ctx.phase(), payload);
+    let theirs = ctx.net.recv_bytes(peer, ctx.phase());
+    let split = t.x_ring.packed_len(n);
+    let their_dx = crate::core::pack::unpack(t.x_ring, &theirs[..split], n);
+    let their_dy = crate::core::pack::unpack(t.y_ring, &theirs[split..], groups);
+    let mut vals = Vec::with_capacity(n);
+    for g in 0..groups {
+        let dy = t.y_ring.add(my_dy[g], their_dy[g]) as usize;
+        for j in 0..per_group {
+            let i = g * per_group + j;
+            let dx = t.x_ring.add(my_dx[i], their_dx[i]) as usize;
+            vals.push(tsh[i * size + dx * sy + dy]);
+        }
+    }
+    A2 { ring: t.out_ring, vals, len: n }
+}
+
+/// `Π_look^{b1,b2}` with independent y per element (groups == n).
+pub fn lut2_eval(ctx: &PartyCtx, t: &LutTable2, xs: &A2, ys: &A2) -> A2 {
+    debug_assert_eq!(xs.len, ys.len);
+    lut2_eval_shared_y(ctx, t, xs, ys)
+}
+
+/// Evaluate SEVERAL two-input tables on the SAME inputs with one opening —
+/// the full form of the paper's §Communication Optimization ("by setting
+/// Δ^(1) = Δ^(2) ... we only need to open x − Δ once ... reduces the
+/// online communication cost by up to 50%"). Each table still gets a
+/// fresh masked copy offline (content security); only the openings are
+/// shared. Used by the sorting network's (min, max) compare-exchange.
+pub fn lut2_eval_multi(ctx: &PartyCtx, ts: &[&LutTable2], xs: &A2, ys: &A2) -> Vec<A2> {
+    debug_assert!(!ts.is_empty());
+    let t0 = ts[0];
+    for t in ts {
+        debug_assert_eq!(t.x_ring, t0.x_ring);
+        debug_assert_eq!(t.y_ring, t0.y_ring);
+    }
+    debug_assert_eq!(xs.ring, t0.x_ring);
+    debug_assert_eq!(ys.ring, t0.y_ring);
+    debug_assert_eq!(xs.len, ys.len);
+    let n = xs.len;
+    let (sx, sy) = (t0.x_ring.size(), t0.y_ring.size());
+    let size = sx * sy;
+    let phase_off = crate::transport::Phase::Offline;
+
+    // Offline: ONE (Δ, Δ') pair per element, one masked copy per table.
+    let (tshs, dxs, dys) = ctx.with_phase(phase_off, |ctx| match ctx.id {
+        P0 => {
+            let mut own = ctx.own_prg.borrow_mut();
+            let mut pair = ctx.pair_prg(P1);
+            let mut all_corr: Vec<Vec<u64>> = Vec::with_capacity(ts.len());
+            let dxv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.x_ring)).collect();
+            let dyv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.y_ring)).collect();
+            for t in ts {
+                let mut corr = pair.ring_vec(t.out_ring, n * size);
+                for i in 0..n {
+                    let (dx, dy) = (dxv[i] as usize, dyv[i] as usize);
+                    let base = i * size;
+                    for u in 0..sx {
+                        let src_row = ((u + dx) & (sx - 1)) * sy;
+                        for v in 0..sy {
+                            let src = src_row + ((v + dy) & (sy - 1));
+                            corr[base + u * sy + v] =
+                                t.out_ring.sub(t.entries[src], corr[base + u * sy + v]);
+                        }
+                    }
+                }
+                ctx.net.send_ring(P2, ctx.phase(), t.out_ring, &corr);
+                all_corr.push(Vec::new());
+            }
+            let mut dxc = pair.ring_vec(t0.x_ring, n);
+            let mut dyc = pair.ring_vec(t0.y_ring, n);
+            for i in 0..n {
+                dxc[i] = t0.x_ring.sub(dxv[i], dxc[i]);
+                dyc[i] = t0.y_ring.sub(dyv[i], dyc[i]);
+            }
+            ctx.net.send_ring(P2, ctx.phase(), t0.x_ring, &dxc);
+            ctx.net.send_ring(P2, ctx.phase(), t0.y_ring, &dyc);
+            (all_corr, Vec::new(), Vec::new())
+        }
+        P1 => {
+            let mut pair = ctx.pair_prg(P0);
+            let tshs: Vec<Vec<u64>> =
+                ts.iter().map(|t| pair.ring_vec(t.out_ring, n * size)).collect();
+            let dxs = pair.ring_vec(t0.x_ring, n);
+            let dys = pair.ring_vec(t0.y_ring, n);
+            (tshs, dxs, dys)
+        }
+        P2 => {
+            let tshs: Vec<Vec<u64>> = ts
+                .iter()
+                .map(|t| ctx.net.recv_ring(P0, ctx.phase(), t.out_ring, n * size))
+                .collect();
+            let dxs = ctx.net.recv_ring(P0, ctx.phase(), t0.x_ring, n);
+            let dys = ctx.net.recv_ring(P0, ctx.phase(), t0.y_ring, n);
+            (tshs, dxs, dys)
+        }
+        _ => unreachable!(),
+    });
+    if ctx.id == P0 {
+        return ts.iter().map(|t| A2::empty(t.out_ring, n)).collect();
+    }
+
+    // Online: ONE opening pair serves every table.
+    let my_dx: Vec<u64> = (0..n).map(|i| t0.x_ring.sub(xs.vals[i], dxs[i])).collect();
+    let my_dy: Vec<u64> = (0..n).map(|i| t0.y_ring.sub(ys.vals[i], dys[i])).collect();
+    let mut payload = crate::core::pack::pack(t0.x_ring, &my_dx);
+    payload.extend(crate::core::pack::pack(t0.y_ring, &my_dy));
+    let peer = if ctx.id == P1 { P2 } else { P1 };
+    ctx.net.send_bytes(peer, ctx.phase(), payload);
+    let theirs = ctx.net.recv_bytes(peer, ctx.phase());
+    let split = t0.x_ring.packed_len(n);
+    let their_dx = crate::core::pack::unpack(t0.x_ring, &theirs[..split], n);
+    let their_dy = crate::core::pack::unpack(t0.y_ring, &theirs[split..], n);
+    ts.iter()
+        .enumerate()
+        .map(|(ti, t)| {
+            let vals = (0..n)
+                .map(|i| {
+                    let dx = t0.x_ring.add(my_dx[i], their_dx[i]) as usize;
+                    let dy = t0.y_ring.add(my_dy[i], their_dy[i]) as usize;
+                    tshs[ti][i * size + dx * sy + dy]
+                })
+                .collect();
+            A2 { ring: t.out_ring, vals, len: n }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R16, R4, R8};
+    use crate::party::{run_3pc, SessionCfg};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::transport::Phase;
+
+    fn share_from_p0(ctx: &PartyCtx, ring: Ring, vals: &[u64]) -> A2 {
+        let v: Vec<u64> = vals.iter().map(|&v| ring.reduce(v)).collect();
+        share2(ctx, P0, ring, if ctx.id == P0 { Some(&v) } else { None }, vals.len())
+    }
+
+    #[test]
+    fn single_input_lut_square() {
+        let t_spec = |v: u64| (v * v) & 0xFF;
+        let inputs: Vec<u64> = (0..16).collect();
+        let ic = inputs.clone();
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable::from_fn(R4, R8, t_spec);
+            let xs = share_from_p0(ctx, R4, &ic);
+            let out = lut_eval(ctx, &t, &xs);
+            reveal2(ctx, &out)
+        });
+        assert_eq!(r1, inputs.iter().map(|&v| t_spec(v)).collect::<Vec<_>>());
+        // offline bytes flow P0->P2 only; online is input share + one
+        // exchange round + reveal
+        assert!(snap.total_bytes(Phase::Offline) > 0);
+        assert!(snap.max_rounds(Phase::Online) <= 3);
+    }
+
+    #[test]
+    fn lut_sign_extension_4_to_16() {
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), |ctx| {
+            let t = LutTable::from_fn(R4, R16, |v| {
+                crate::core::ring::sign_extend(v, R4, R16)
+            });
+            let xs = share_from_p0(ctx, R4, &[0x0, 0x7, 0x8, 0xF]);
+            reveal2(ctx, &lut_eval(ctx, &t, &xs))
+        });
+        assert_eq!(r1, vec![0x0000, 0x0007, 0xFFF8, 0xFFFF]);
+    }
+
+    #[test]
+    fn two_input_lut_max() {
+        // T(x||y) = max of signed 4-bit values
+        let f = |x: u64, y: u64| {
+            let (a, b) = (R4.decode(x), R4.decode(y));
+            R4.encode(a.max(b))
+        };
+        let xs: Vec<u64> = vec![0, 3, 9, 15, 7, 8]; // 0,3,-7,-1,7,-8
+        let ys: Vec<u64> = vec![1, 2, 3, 4, 5, 6];
+        let (xc, yc) = (xs.clone(), ys.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable2::from_fn(R4, R4, R4, f);
+            let xsh = share_from_p0(ctx, R4, &xc);
+            let ysh = share_from_p0(ctx, R4, &yc);
+            reveal2(ctx, &lut2_eval(ctx, &t, &xsh, &ysh))
+        });
+        let want: Vec<u64> = xs.iter().zip(&ys).map(|(&x, &y)| f(x, y)).collect();
+        assert_eq!(r1, want);
+    }
+
+    #[test]
+    fn shared_y_groups() {
+        // 2 groups of 3 lookups; each group shares one y.
+        let f = |x: u64, y: u64| (x * 16 + y) & 0xFF;
+        let xs: Vec<u64> = vec![1, 2, 3, 4, 5, 6];
+        let ys: Vec<u64> = vec![9, 12];
+        let (xc, yc) = (xs.clone(), ys.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable2::from_fn(R4, R4, R8, f);
+            let xsh = share_from_p0(ctx, R4, &xc);
+            let ysh = share_from_p0(ctx, R4, &yc);
+            reveal2(ctx, &lut2_eval_shared_y(ctx, &t, &xsh, &ysh))
+        });
+        let want: Vec<u64> = (0..6).map(|i| f(xs[i], ys[i / 3])).collect();
+        assert_eq!(r1, want);
+    }
+
+    #[test]
+    fn shared_y_saves_online_bytes() {
+        let f = |x: u64, y: u64| (x + y) & 0xF;
+        let run = |shared: bool| {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let t = LutTable2::from_fn(R4, R4, R4, f);
+                let xs = share_from_p0(ctx, R4, &[1u64; 32]);
+                let ys_vals: Vec<u64> = if shared { vec![3] } else { vec![3; 32] };
+                let ys = share_from_p0(ctx, R4, &ys_vals);
+                lut2_eval_shared_y(ctx, &t, &xs, &ys);
+            });
+            snap.total_bytes(Phase::Online)
+        };
+        let with_opt = run(true);
+        let without = run(false);
+        assert!(with_opt < without, "{with_opt} !< {without}");
+    }
+
+    #[test]
+    fn lut_offline_online_split() {
+        // All table material must flow in the offline phase; online must be
+        // only the δ openings (n * 4 bits each way for a 4-bit table).
+        let (_, snap) = run_3pc(SessionCfg::default(), |ctx| {
+            let t = LutTable::from_fn(R4, R16, |v| v);
+            let xs = ctx.with_phase(Phase::Setup, |c| share_from_p0(c, R4, &[5u64; 100]));
+            lut_eval(ctx, &t, &xs);
+        });
+        // online: P1<->P2 two directions x 50 bytes (100 nibbles)
+        assert_eq!(snap.total_bytes(Phase::Online), 100);
+        // offline: P0->P2 table corrections 100*16 entries * 2B + Δ 50B
+        assert_eq!(snap.total_bytes(Phase::Offline), 100 * 16 * 2 + 50);
+    }
+}

@@ -1,0 +1,315 @@
+//! RSS linear algebra: the paper's Alg. 3 (inner product for quantized FC
+//! with high-bit truncation) plus elementwise products and self inner
+//! products used by LayerNorm.
+//!
+//! Communication: one 16-bit element from P0 to P1 per *output* element
+//! (RSS inner-product cost depends only on the output dimension), one
+//! round. Local products are re-randomized with a fresh zero-sharing
+//! before P0 discloses its limb.
+
+use crate::core::pool::par_chunks;
+use crate::core::ring::Ring;
+use crate::party::{PartyCtx, P0, P1};
+use crate::sharing::rss::zero_share;
+use crate::sharing::{A2, Rss};
+
+/// Local wrapping matmul `a [rows,k] x b^T [m,k] -> [rows,m]` over `ring`.
+///
+/// Perf (EXPERIMENTS.md §Perf): for rings of <= 16 bits all arithmetic is
+/// done in wrapping `u16` — `(a·b mod 2^16)` summed `mod 2^16` equals the
+/// full product reduced `mod 2^16`, and the narrow lanes auto-vectorize
+/// (4x the elements per SIMD register vs u64).
+pub fn mm_local(ring: Ring, a: &[u64], b: &[u64], rows: usize, k: usize, m: usize, threads: usize) -> Vec<u64> {
+    if ring.bits() <= 16 {
+        let a16: Vec<u16> = a.iter().map(|&v| v as u16).collect();
+        let b16: Vec<u16> = b.iter().map(|&v| v as u16).collect();
+        let outs = par_chunks(threads, rows, |lo, hi, _| {
+            let mut out = vec![0u64; (hi - lo) * m];
+            for r in lo..hi {
+                let ar = &a16[r * k..(r + 1) * k];
+                for o in 0..m {
+                    let br = &b16[o * k..(o + 1) * k];
+                    let mut acc = 0u16;
+                    for j in 0..k {
+                        acc = acc.wrapping_add(ar[j].wrapping_mul(br[j]));
+                    }
+                    out[(r - lo) * m + o] = ring.reduce(acc as u64);
+                }
+            }
+            out
+        });
+        return outs.concat();
+    }
+    let outs = par_chunks(threads, rows, |lo, hi, _| {
+        let mut out = vec![0u64; (hi - lo) * m];
+        for r in lo..hi {
+            let ar = &a[r * k..(r + 1) * k];
+            for o in 0..m {
+                let br = &b[o * k..(o + 1) * k];
+                let mut acc = 0u64;
+                for j in 0..k {
+                    acc = acc.wrapping_add(ar[j].wrapping_mul(br[j]));
+                }
+                out[(r - lo) * m + o] = ring.reduce(acc);
+            }
+        }
+        out
+    });
+    outs.concat()
+}
+
+/// Each party's local share of the product (paper's 3-term cross formula):
+/// `z_i = Σ x_{i-1} y_{i+1} + x_{i+1} y_{i-1} + x_{i+1} y_{i+1}`.
+/// Folded to two matmuls: `x_prev·y_next + x_next·(y_prev + y_next)`.
+fn local_cross_mm(ctx: &PartyCtx, x: &Rss, w: &Rss, rows: usize, k: usize, m: usize) -> Vec<u64> {
+    let ring = x.ring;
+    let w_sum: Vec<u64> = w
+        .prev
+        .iter()
+        .zip(&w.next)
+        .map(|(&a, &b)| ring.add(a, b))
+        .collect();
+    let t1 = mm_local(ring, &x.prev, &w.next, rows, k, m, ctx.threads);
+    let t2 = mm_local(ring, &x.next, &w_sum, rows, k, m, ctx.threads);
+    (0..rows * m).map(|i| ring.add(t1[i], t2[i])).collect()
+}
+
+/// Alg. 3: RSS matmul + high-bit truncation. `x` is `[rows,k]`, `w` is
+/// `[m,k]` (both over the same ring, typically `Z_2^16` with `w` holding
+/// `scale * W`), output is `⟦trc(x·wᵀ, trc_bits)⟧` as a 2PC additive share
+/// between P1/P2 over `Z_2^{trc_bits}`.
+pub fn rss_matmul_trc(
+    ctx: &PartyCtx,
+    x: &Rss,
+    w: &Rss,
+    rows: usize,
+    k: usize,
+    m: usize,
+    trc_bits: u32,
+) -> A2 {
+    let full = rss_matmul_full(ctx, x, w, rows, k, m);
+    full.trc_top(trc_bits)
+}
+
+/// Alg. 3 without the truncation: output `⟦x·wᵀ⟧` over the full ring.
+pub fn rss_matmul_full(
+    ctx: &PartyCtx,
+    x: &Rss,
+    w: &Rss,
+    rows: usize,
+    k: usize,
+    m: usize,
+) -> A2 {
+    let ring = x.ring;
+    debug_assert_eq!(w.ring, ring);
+    let n = rows * m;
+    let mut z = local_cross_mm(ctx, x, w, rows, k, m);
+    let alpha = zero_share(ctx, ring, n);
+    for (v, a) in z.iter_mut().zip(&alpha) {
+        *v = ring.add(*v, *a);
+    }
+    collapse_to_a2(ctx, ring, z, n)
+}
+
+/// Elementwise RSS product over the full ring (no truncation).
+pub fn rss_mul_full(ctx: &PartyCtx, a: &Rss, b: &Rss) -> A2 {
+    let ring = a.ring;
+    debug_assert_eq!(b.ring, ring);
+    let n = a.len();
+    let mut z: Vec<u64> = (0..n)
+        .map(|i| {
+            let t = a.prev[i]
+                .wrapping_mul(b.next[i])
+                .wrapping_add(a.next[i].wrapping_mul(b.prev[i]))
+                .wrapping_add(a.next[i].wrapping_mul(b.next[i]));
+            ring.reduce(t)
+        })
+        .collect();
+    let alpha = zero_share(ctx, ring, n);
+    for (v, x) in z.iter_mut().zip(&alpha) {
+        *v = ring.add(*v, *x);
+    }
+    collapse_to_a2(ctx, ring, z, n)
+}
+
+/// Elementwise RSS product with truncation (LayerNorm γ multiply).
+pub fn rss_mul_trc(ctx: &PartyCtx, a: &Rss, b: &Rss, trc_bits: u32) -> A2 {
+    let ring = a.ring;
+    debug_assert_eq!(b.ring, ring);
+    let n = a.len();
+    let mut z: Vec<u64> = (0..n)
+        .map(|i| {
+            let t = a.prev[i]
+                .wrapping_mul(b.next[i])
+                .wrapping_add(a.next[i].wrapping_mul(b.prev[i]))
+                .wrapping_add(a.next[i].wrapping_mul(b.next[i]));
+            ring.reduce(t)
+        })
+        .collect();
+    let alpha = zero_share(ctx, ring, n);
+    for (v, x) in z.iter_mut().zip(&alpha) {
+        *v = ring.add(*v, *x);
+    }
+    collapse_to_a2(ctx, ring, z, n).trc_top(trc_bits)
+}
+
+/// Row-wise self inner product `Σ_j d[r,j]^2` (LayerNorm variance). Output
+/// one full-ring element per row.
+pub fn rss_inner_self(ctx: &PartyCtx, d: &Rss, rows: usize, n: usize) -> A2 {
+    let ring = d.ring;
+    let mut z = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let lo = r * n;
+        let mut acc = 0u64;
+        for j in 0..n {
+            let (xp, xn) = (d.prev[lo + j], d.next[lo + j]);
+            // x_prev*y_next + x_next*y_prev + x_next*y_next with y == x
+            acc = acc
+                .wrapping_add(xp.wrapping_mul(xn))
+                .wrapping_add(xn.wrapping_mul(xp))
+                .wrapping_add(xn.wrapping_mul(xn));
+        }
+        z.push(ring.reduce(acc));
+    }
+    let alpha = zero_share(ctx, ring, rows);
+    for (v, a) in z.iter_mut().zip(&alpha) {
+        *v = ring.add(*v, *a);
+    }
+    collapse_to_a2(ctx, ring, z, rows)
+}
+
+/// Collapse the 3-way additive sum (z0, z1, z2) into a 2PC additive share
+/// between P1 and P2: P0 sends its limb to P1 (one round).
+fn collapse_to_a2(ctx: &PartyCtx, ring: Ring, z: Vec<u64>, n: usize) -> A2 {
+    let phase = ctx.phase();
+    match ctx.id {
+        P0 => {
+            ctx.net.send_ring(P1, phase, ring, &z);
+            A2::empty(ring, n)
+        }
+        P1 => {
+            let z0 = ctx.net.recv_ring(P0, phase, ring, n);
+            let vals = (0..n).map(|i| ring.add(z[i], z0[i])).collect();
+            A2 { ring, vals, len: n }
+        }
+        _ => A2 { ring, vals: z, len: n },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R16, R32};
+    use crate::party::{run_3pc, SessionCfg, P0, P1};
+    use crate::sharing::additive::reveal2;
+    use crate::sharing::rss::share_rss;
+    use crate::transport::Phase;
+
+    fn enc(ring: Ring, v: &[i64]) -> Vec<u64> {
+        v.iter().map(|&x| ring.encode(x)).collect()
+    }
+
+    #[test]
+    fn mm_local_matches_naive() {
+        // 2x3 * (2x3)^T -> 2x2
+        let a = enc(R16, &[1, 2, 3, -1, 0, 2]);
+        let b = enc(R16, &[2, 2, 2, 1, -1, 1]);
+        let out = mm_local(R16, &a, &b, 2, 3, 2, 1);
+        assert_eq!(
+            out.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            vec![12, 2, 2, 1]
+        );
+    }
+
+    #[test]
+    fn rss_matmul_full_correct() {
+        let x_vals = enc(R16, &[1, 2, 3, 4, 5, 6]); // [2,3]
+        let w_vals = enc(R16, &[1, 0, -1, 2, 2, 2]); // [2,3]
+        let (xc, wc) = (x_vals.clone(), w_vals.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&xc) } else { None }, 6);
+            let w = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&wc) } else { None }, 6);
+            reveal2(ctx, &rss_matmul_full(ctx, &x, &w, 2, 3, 2))
+        });
+        // [[1,2,3],[4,5,6]] x [[1,0,-1],[2,2,2]]^T = [[-2,12],[-2,30]]
+        assert_eq!(
+            r1.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            vec![-2, 12, -2, 30]
+        );
+    }
+
+    #[test]
+    fn alg3_trc_within_one_lsb() {
+        // scale*W puts the 4-bit result in the top nibble: emulate Alg. 3.
+        let scale = 64i64;
+        let x_raw: Vec<i64> = vec![3, -5, 7, 2, 0, -8, 1, 4]; // [2,4]
+        let w_raw: Vec<i64> = vec![1, -1, 1, 1, -1, -1, 1, -1]; // [2,4]
+        let (xc, wc): (Vec<u64>, Vec<u64>) = (
+            enc(R16, &x_raw),
+            enc(R16, &w_raw.iter().map(|&w| w * scale).collect::<Vec<_>>()),
+        );
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&xc) } else { None }, 8);
+            let w = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&wc) } else { None }, 8);
+            reveal2(ctx, &rss_matmul_trc(ctx, &x, &w, 2, 4, 2, 4))
+        });
+        for (r, row) in x_raw.chunks(4).enumerate() {
+            for (o, wrow) in w_raw.chunks(4).enumerate() {
+                let acc: i64 = row.iter().zip(wrow).map(|(&x, &w)| x * w * scale).sum();
+                let exact = ((acc as u64) & 0xFFFF) >> 12;
+                let got = r1[r * 2 + o];
+                let deficit = (exact + 16 - got) % 16;
+                assert!(deficit <= 1, "got {got} exact {exact}");
+            }
+        }
+        // comm: P0->P1 16 bits per output element, one round (plus reveal)
+        let online = snap.total_bytes(Phase::Online);
+        assert!(online >= 4 * 2, "{online}");
+    }
+
+    #[test]
+    fn elementwise_mul_trc() {
+        let a_raw = vec![3i64, -2, 5, 7];
+        let b_raw = vec![1024i64, 2048, -1024, 512];
+        let (ac, bc) = (enc(R16, &a_raw), enc(R16, &b_raw));
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let a = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&ac) } else { None }, 4);
+            let b = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&bc) } else { None }, 4);
+            reveal2(ctx, &rss_mul_trc(ctx, &a, &b, 4))
+        });
+        for i in 0..4 {
+            let exact = (((a_raw[i] * b_raw[i]) as u64) & 0xFFFF) >> 12;
+            let deficit = (exact + 16 - r1[i]) % 16;
+            assert!(deficit <= 1, "i {i} got {} exact {exact}", r1[i]);
+        }
+    }
+
+    #[test]
+    fn inner_self_is_sum_of_squares() {
+        let d_raw = vec![3i64, -4, 0, 1, -2, 2]; // 2 rows x 3
+        let dc = enc(R32, &d_raw);
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let d = share_rss(ctx, P1, R32, if ctx.id == P1 { Some(&dc) } else { None }, 6);
+            reveal2(ctx, &rss_inner_self(ctx, &d, 2, 3))
+        });
+        assert_eq!(r1, vec![9 + 16 + 0, 1 + 4 + 4]);
+    }
+
+    #[test]
+    fn matmul_threads_agree() {
+        let x_vals = enc(R16, &(0..64).map(|i| (i % 13) - 6).collect::<Vec<_>>());
+        let w_vals = enc(R16, &(0..64).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect::<Vec<_>>());
+        let run = |threads| {
+            let (xc, wc) = (x_vals.clone(), w_vals.clone());
+            let mut cfg = SessionCfg::default();
+            cfg.threads = threads;
+            let ([_, r1, _], _) = run_3pc(cfg, move |ctx| {
+                let x = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&xc) } else { None }, 64);
+                let w = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&wc) } else { None }, 64);
+                reveal2(ctx, &rss_matmul_full(ctx, &x, &w, 8, 8, 8))
+            });
+            r1
+        };
+        assert_eq!(run(1), run(4));
+    }
+}

@@ -1,0 +1,196 @@
+//! Oblivious maximum `Π_max` over secret-shared 4-bit values.
+//!
+//! The paper instantiates `Π_max` with Asharov et al.'s 3-party radix
+//! sort. Offline, a full oblivious sort needs bit-decomposition protocols
+//! whose only role here is selecting the largest element; we instead
+//! realize `Π_max` with the paper's *own* multi-input lookup table: a
+//! 2-input 4x4-bit table `T(a‖b) = max(a, b)` evaluated in a reduction
+//! tree (`Tournament`, ceil(log2 n) rounds) or a left fold (`Linear`,
+//! n-1 rounds — the WAN-ablation strawman). Both are oblivious: every
+//! comparison path is taken for every input. See DESIGN.md
+//! §Substitutions #5; the round/communication tradeoff is benched in
+//! `benches/micro.rs`.
+
+use crate::core::ring::R4;
+use crate::party::PartyCtx;
+use crate::sharing::A2;
+
+use super::lut::{lut2_eval, LutTable2};
+
+/// Which Π_max realization to use.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MaxStrategy {
+    /// Reduction tree: ceil(log2 n) rounds, n-1 table evaluations.
+    Tournament,
+    /// Left fold: n-1 rounds, n-1 table evaluations (ablation).
+    Linear,
+    /// Full oblivious sort, take the last element — the paper's stated
+    /// realization (via `protocols::sort`); log^2 n rounds, n log^2 n / 4
+    /// compare-exchanges (each one shared-opening two-table lookup).
+    Sort,
+}
+
+/// The signed-max two-input table.
+pub fn max_table() -> LutTable2 {
+    LutTable2::from_fn(R4, R4, R4, |a, b| {
+        R4.encode(R4.decode(a).max(R4.decode(b)))
+    })
+}
+
+/// Row-wise oblivious max: `x` is `[rows, n]` of signed 4-bit shares;
+/// returns one share per row. All rows advance together, so the round
+/// count is per-level, not per-row.
+pub fn max_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize, strat: MaxStrategy) -> A2 {
+    debug_assert_eq!(x.ring, R4);
+    debug_assert_eq!(x.len, rows * n);
+    let t = max_table();
+    match strat {
+        MaxStrategy::Tournament => {
+            // Current survivors per row, processed level by level.
+            let mut cur = x.clone();
+            let mut width = n;
+            while width > 1 {
+                let half = width / 2;
+                let odd = width % 2 == 1;
+                // Gather (a, b) pairs across all rows into flat batches.
+                let gather = |vals: &Vec<u64>, off: usize| -> Vec<u64> {
+                    let mut out = Vec::with_capacity(rows * half);
+                    for r in 0..rows {
+                        for p in 0..half {
+                            out.push(vals[r * width + 2 * p + off]);
+                        }
+                    }
+                    out
+                };
+                let (av, bv) = if cur.holds_share() && !cur.vals.is_empty() {
+                    (gather(&cur.vals, 0), gather(&cur.vals, 1))
+                } else {
+                    (Vec::new(), Vec::new())
+                };
+                let a = A2 { ring: R4, vals: av, len: rows * half };
+                let b = A2 { ring: R4, vals: bv, len: rows * half };
+                let m = lut2_eval(ctx, &t, &a, &b);
+                // Rebuild survivor rows: winners + the odd leftover.
+                let new_width = half + usize::from(odd);
+                let mut nv = Vec::with_capacity(rows * new_width);
+                if !m.vals.is_empty() || rows * new_width == 0 {
+                    for r in 0..rows {
+                        for p in 0..half {
+                            nv.push(m.vals[r * half + p]);
+                        }
+                        if odd {
+                            nv.push(cur.vals[r * width + width - 1]);
+                        }
+                    }
+                }
+                cur = A2 { ring: R4, vals: nv, len: rows * new_width };
+                width = new_width;
+            }
+            cur
+        }
+        MaxStrategy::Sort => super::sort::sort_max_rows(ctx, x, rows, n),
+        MaxStrategy::Linear => {
+            let col = |vals: &Vec<u64>, j: usize| -> Vec<u64> {
+                (0..rows).map(|r| vals[r * n + j]).collect()
+            };
+            let has = !x.vals.is_empty();
+            let mut acc = A2 {
+                ring: R4,
+                vals: if has { col(&x.vals, 0) } else { Vec::new() },
+                len: rows,
+            };
+            for j in 1..n {
+                let b = A2 {
+                    ring: R4,
+                    vals: if has { col(&x.vals, j) } else { Vec::new() },
+                    len: rows,
+                };
+                acc = lut2_eval(ctx, &t, &acc, &b);
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::R4;
+    use crate::party::{run_3pc, SessionCfg, P0};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::transport::Phase;
+
+    fn run_max(vals: Vec<i64>, rows: usize, n: usize, strat: MaxStrategy) -> (Vec<i64>, u64) {
+        let enc: Vec<u64> = vals.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+            reveal2(ctx, &max_rows(ctx, &x, rows, n, strat))
+        });
+        (
+            r1.iter().map(|&v| R4.decode(v)).collect(),
+            snap.max_rounds(Phase::Online),
+        )
+    }
+
+    #[test]
+    fn tournament_finds_max() {
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let vals: Vec<i64> = (0..n as i64).map(|i| ((i * 7) % 16) - 8).collect();
+            let want = *vals.iter().max().unwrap();
+            let (got, _) = run_max(vals, 1, n, MaxStrategy::Tournament);
+            assert_eq!(got, vec![want], "n={n}");
+        }
+    }
+
+    #[test]
+    fn linear_finds_max() {
+        let vals = vec![-8i64, 3, 7, -1, 0, 5];
+        let (got, _) = run_max(vals, 1, 6, MaxStrategy::Linear);
+        assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    fn multi_row_batched() {
+        let vals = vec![1i64, 2, 3, 4, /* row2 */ -5, -6, -7, -8];
+        let (got, _) = run_max(vals, 2, 4, MaxStrategy::Tournament);
+        assert_eq!(got, vec![4, -5]);
+    }
+
+    #[test]
+    fn tournament_uses_fewer_rounds_than_linear() {
+        let vals: Vec<i64> = (0..16).map(|i| (i % 15) - 7).collect();
+        let (_, tr) = run_max(vals.clone(), 1, 16, MaxStrategy::Tournament);
+        let (_, lr) = run_max(vals, 1, 16, MaxStrategy::Linear);
+        assert!(tr < lr, "tournament {tr} rounds vs linear {lr}");
+    }
+
+    #[test]
+    fn sort_strategy_finds_max() {
+        for n in [1usize, 2, 5, 8, 11] {
+            let vals: Vec<i64> = (0..n as i64).map(|i| ((i * 13 + 2) % 16) - 8).collect();
+            let want = *vals.iter().max().unwrap();
+            let (got, _) = run_max(vals, 1, n, MaxStrategy::Sort);
+            assert_eq!(got, vec![want], "n={n}");
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let vals: Vec<i64> = vec![3, -7, 5, 0, -2, 7, -8, 1, 4, -1];
+        let mut results = Vec::new();
+        for strat in [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort] {
+            let (got, _) = run_max(vals.clone(), 2, 5, strat);
+            results.push(got);
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn duplicates_and_extremes() {
+        let (got, _) = run_max(vec![7, 7, 7, 7], 1, 4, MaxStrategy::Tournament);
+        assert_eq!(got, vec![7]);
+        let (got, _) = run_max(vec![-8, -8], 1, 2, MaxStrategy::Tournament);
+        assert_eq!(got, vec![-8]);
+    }
+}

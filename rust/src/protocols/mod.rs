@@ -1,0 +1,22 @@
+//! The paper's protocol suite.
+//!
+//! * [`lut`] — secure lookup tables: `Π_look` (Alg. 1), the multi-input
+//!   `Π_look^{b1,b2}` (Alg. 2) and the shared-input-Δ optimization
+//! * [`matmul`] — RSS linear algebra with high-bit truncation (Alg. 3)
+//! * [`convert`] — share conversion `Π_convert^{ℓ',ℓ}` via LUT + reshare
+//! * [`max`] — oblivious maximum `Π_max` (tournament / linear)
+//! * [`softmax`] — the quantized softmax pipeline (§Softmax, Fig. 4)
+//! * [`relu`] — LUT ReLU emitting FC-ready 16-bit shares (§ReLU)
+//! * [`layernorm`] — quantized LayerNorm (§LayerNorm)
+//! * [`tables`] — table contents pinned against the python oracle
+
+pub mod argmax;
+pub mod convert;
+pub mod layernorm;
+pub mod lut;
+pub mod matmul;
+pub mod max;
+pub mod relu;
+pub mod softmax;
+pub mod sort;
+pub mod tables;

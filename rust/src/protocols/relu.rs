@@ -1,0 +1,83 @@
+//! Secure ReLU (paper §ReLU, after Lu et al. NDSS'25): a single lookup
+//! table maps the signed 4-bit input directly to 16-bit additive shares
+//! (the next FC layer consumes 16-bit RSS), so activation + ring
+//! extension cost one table evaluation.
+
+use crate::core::ring::{R16, R4};
+use crate::party::PartyCtx;
+use crate::sharing::rss::reshare_a2_to_rss;
+use crate::sharing::{A2, Rss};
+
+use super::lut::lut_eval;
+use super::tables::relu16_table;
+
+/// `⟦x⟧^4 (signed) -> ⟦relu(x)⟧^16`.
+pub fn relu_to_16(ctx: &PartyCtx, x: &A2) -> A2 {
+    debug_assert_eq!(x.ring, R4);
+    let t = relu16_table();
+    lut_eval(ctx, &t, x)
+}
+
+/// `⟦x⟧^4 -> ⟨relu(x)⟩^16` (LUT + reshare), ready for Alg. 3.
+pub fn relu_to_rss16(ctx: &PartyCtx, x: &A2) -> Rss {
+    let wide = relu_to_16(ctx, x);
+    debug_assert_eq!(wide.ring, R16);
+    reshare_a2_to_rss(ctx, &wide)
+}
+
+/// GELU activation variant: same single-LUT cost as ReLU (the paper's
+/// framework prices every pointwise nonlinearity identically).
+pub fn gelu_to_rss16(ctx: &PartyCtx, x: &A2, s_x: f64, s_y: f64) -> Rss {
+    let t = super::tables::gelu16_table(s_x, s_y);
+    let wide = lut_eval(ctx, &t, x);
+    reshare_a2_to_rss(ctx, &wide)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::{run_3pc, SessionCfg, P0};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::sharing::rss::reveal_rss;
+
+    #[test]
+    fn relu_all_16_inputs() {
+        let signed: Vec<i64> = (-8..8).collect();
+        let enc: Vec<u64> = signed.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, 16);
+            reveal2(ctx, &relu_to_16(ctx, &x))
+        });
+        let want: Vec<u64> = signed.iter().map(|&v| v.max(0) as u64).collect();
+        assert_eq!(r1, want);
+    }
+
+    #[test]
+    fn gelu_rss_roundtrip() {
+        let signed: Vec<i64> = vec![-8, -1, 0, 3, 7];
+        let enc: Vec<u64> = signed.iter().map(|&v| R4.encode(v)).collect();
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, 5);
+            reveal_rss(ctx, &gelu_to_rss16(ctx, &x, 1.0, 1.0))
+        });
+        for out in outs {
+            let got: Vec<i64> = out.iter().map(|&v| crate::core::ring::R16.decode(v)).collect();
+            assert_eq!(got[2], 0); // gelu(0) = 0
+            assert!(got[4] >= 6); // gelu(7) ~ 7
+            assert_eq!(got[0], 0); // gelu(-8) ~ 0
+        }
+    }
+
+    #[test]
+    fn relu_rss_roundtrip() {
+        let signed: Vec<i64> = vec![-8, -1, 0, 3, 7];
+        let enc: Vec<u64> = signed.iter().map(|&v| R4.encode(v)).collect();
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, 5);
+            reveal_rss(ctx, &relu_to_rss16(ctx, &x))
+        });
+        for out in outs {
+            assert_eq!(out, vec![0, 0, 0, 3, 7]);
+        }
+    }
+}

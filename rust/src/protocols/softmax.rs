@@ -1,0 +1,180 @@
+//! Secure quantized softmax (paper §Softmax + Fig. 4).
+//!
+//! Pipeline over `⟦x⟧^4` rows (signed 4-bit attention scores):
+//!   1. `x_o = Π_max(x)`                         (LUT tournament)
+//!   2. `d_i = x_i − x_o`                        (local)
+//!   3. `e_i = T_exp(d_i)` → 8-bit shares        (`Π_look`, 4→8)
+//!   4. `D = Σ e_i mod 2^8`                      (local, 8-bit ring sum)
+//!   5. `num_i = e_i mod 2^4`                    (local: low bits are a
+//!      ring homomorphism of additive shares)
+//!   6. `den = T_mid(D) = mid4(D)`               (`Π_look`, 8→4)
+//!   7. `out_i = T_div(num_i ‖ den)`             (`Π_look^{4,4}` with the
+//!      shared-Δ' optimization: `den − Δ'` is opened once per row)
+//!
+//! Exactly mirrors `ref.softmax_quant`; the MPC result is bit-exact
+//! against the plaintext oracle (no truncation is involved anywhere).
+
+use crate::core::ring::R4;
+use crate::party::PartyCtx;
+use crate::sharing::A2;
+
+use super::lut::{lut_eval, lut2_eval_shared_y, LutTable, LutTable2};
+use super::max::{max_rows, MaxStrategy};
+use super::tables;
+
+/// Precomputed softmax tables (built once per model, reused every layer —
+/// table *contents* are reused; masked instances are fresh per lookup).
+pub struct SoftmaxTables {
+    pub exp: LutTable,
+    pub mid: LutTable,
+    pub div: LutTable2,
+}
+
+impl SoftmaxTables {
+    pub fn new(sx: f64) -> Self {
+        SoftmaxTables {
+            exp: tables::exp_table(sx),
+            mid: tables::mid4_table(),
+            div: tables::div_table(),
+        }
+    }
+}
+
+/// Row-wise secure softmax: `x` is `[rows, n]` signed 4-bit shares;
+/// returns `[rows, n]` unsigned 4-bit shares.
+pub fn softmax_rows(
+    ctx: &PartyCtx,
+    t: &SoftmaxTables,
+    x: &A2,
+    rows: usize,
+    n: usize,
+    strat: MaxStrategy,
+) -> A2 {
+    debug_assert_eq!(x.ring, R4);
+    debug_assert_eq!(x.len, rows * n);
+
+    // 1. row maxima
+    let xo = max_rows(ctx, x, rows, n, strat);
+
+    // 2. d = x - xo (local, broadcast per row)
+    let d = if x.vals.is_empty() {
+        A2::empty(R4, rows * n)
+    } else {
+        let mut vals = Vec::with_capacity(rows * n);
+        for r in 0..rows {
+            for j in 0..n {
+                vals.push(R4.sub(x.vals[r * n + j], xo.vals[r]));
+            }
+        }
+        A2 { ring: R4, vals, len: rows * n }
+    };
+
+    // 3. e = T_exp(d), 8-bit shares
+    let e = lut_eval(ctx, &t.exp, &d);
+
+    // 4. D = sum(e) per row over Z_2^8 (local)
+    let big = if e.vals.is_empty() {
+        A2::empty(e.ring, rows)
+    } else {
+        let vals = (0..rows)
+            .map(|r| {
+                let mut acc = 0u64;
+                for j in 0..n {
+                    acc = e.ring.add(acc, e.vals[r * n + j]);
+                }
+                acc
+            })
+            .collect();
+        A2 { ring: e.ring, vals, len: rows }
+    };
+
+    // 5. num = low 4 bits (local ring reduction)
+    let num = e.low_bits(R4);
+
+    // 6. den = mid4(D) via 8-bit LUT
+    let den = lut_eval(ctx, &t.mid, &big);
+
+    // 7. out = T_div(num ‖ den), den's Δ' shared across each row
+    lut2_eval_shared_y(ctx, &t.div, &num, &den)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::{run_3pc, SessionCfg, P0};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::transport::Phase;
+
+    /// Plaintext oracle identical to ref.softmax_quant.
+    fn softmax_ref(x: &[i64], sx: f64) -> Vec<u64> {
+        let texp = tables::exp_table(sx);
+        let tdiv = tables::div_table();
+        let xo = *x.iter().max().unwrap();
+        let e: Vec<u64> = x
+            .iter()
+            .map(|&v| texp.entries[((v - xo).rem_euclid(16)) as usize])
+            .collect();
+        let big: u64 = e.iter().sum::<u64>() & 0xFF;
+        let den = (big >> 4) & 0xF;
+        e.iter()
+            .map(|&ei| tdiv.entries[((ei & 0xF) * 16 + den) as usize])
+            .collect()
+    }
+
+    fn run_softmax(rows: Vec<Vec<i64>>, sx: f64) -> Vec<u64> {
+        let n = rows[0].len();
+        let nr = rows.len();
+        let flat: Vec<u64> = rows
+            .iter()
+            .flatten()
+            .map(|&v| R4.encode(v))
+            .collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = SoftmaxTables::new(sx);
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&flat) } else { None }, flat.len());
+            reveal2(ctx, &softmax_rows(ctx, &t, &x, nr, n, MaxStrategy::Tournament))
+        });
+        r1
+    }
+
+    #[test]
+    fn matches_plaintext_oracle() {
+        let rows = vec![
+            vec![3i64, -5, 7, 0, -8, 2, 1, -1],
+            vec![0i64, 0, 0, 0, 0, 0, 0, 0],
+            vec![7i64, 7, -8, -8, 3, -3, 5, -5],
+        ];
+        let got = run_softmax(rows.clone(), 0.25);
+        let want: Vec<u64> = rows.iter().flat_map(|r| softmax_ref(r, 0.25)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn output_is_unsigned_4bit_peaked_at_max() {
+        let row = vec![6i64, -2, 1, -7, 3, 0, -4, 5];
+        let got = run_softmax(vec![row.clone()], 0.5);
+        assert!(got.iter().all(|&v| v <= 15));
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .unwrap()
+            .0;
+        let m = *got.iter().max().unwrap();
+        assert_eq!(got[argmax], m);
+    }
+
+    #[test]
+    fn online_rounds_are_logarithmic() {
+        let row: Vec<i64> = (0..16).map(|i| (i % 15) - 7).collect();
+        let flat: Vec<u64> = row.iter().map(|&v| R4.encode(v)).collect();
+        let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = SoftmaxTables::new(0.25);
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&flat) } else { None }, 16);
+            softmax_rows(ctx, &t, &x, 1, 16, MaxStrategy::Tournament);
+        });
+        // 4 tournament levels + exp + mid + div opens = 7 rounds
+        assert!(snap.max_rounds(Phase::Online) <= 8,
+                "{}", snap.max_rounds(Phase::Online));
+    }
+}

@@ -1,0 +1,225 @@
+//! Oblivious sorting over secret-shared 4-bit values (the substrate the
+//! paper's `Π_max` cites — Asharov et al.'s 3PC sort — realized here as a
+//! Batcher bitonic network whose compare-exchange is one shared-opening
+//! multi-table lookup).
+//!
+//! Each compare-exchange evaluates TWO tables, `T_min(a‖b)` and
+//! `T_max(a‖b)`, with the same (Δ, Δ') openings (`lut2_eval_multi`, the
+//! paper's §Communication Optimization), so online cost per CE is a
+//! single pair of 4-bit openings. The network is data-independent
+//! (oblivious by construction); all rows and all CEs within a level are
+//! batched into one round.
+
+use crate::core::ring::R4;
+use crate::party::PartyCtx;
+use crate::protocols::lut::{lut2_eval_multi, LutTable2};
+use crate::sharing::A2;
+
+/// The (min, max) compare-exchange tables over signed 4-bit values.
+pub fn minmax_tables() -> (LutTable2, LutTable2) {
+    let tmin = LutTable2::from_fn(R4, R4, R4, |a, b| {
+        R4.encode(R4.decode(a).min(R4.decode(b)))
+    });
+    let tmax = LutTable2::from_fn(R4, R4, R4, |a, b| {
+        R4.encode(R4.decode(a).max(R4.decode(b)))
+    });
+    (tmin, tmax)
+}
+
+/// Compare-exchange pair indices for a bitonic network of size `m`
+/// (a power of two), grouped by level.
+fn bitonic_levels(m: usize) -> Vec<Vec<(usize, usize, bool)>> {
+    debug_assert!(m.is_power_of_two());
+    let mut levels = Vec::new();
+    let mut k = 2usize;
+    while k <= m {
+        let mut j = k >> 1;
+        while j >= 1 {
+            let mut level = Vec::new();
+            for i in 0..m {
+                let l = i ^ j;
+                if l > i {
+                    let asc = (i & k) == 0;
+                    level.push((i, l, asc));
+                }
+            }
+            levels.push(level);
+            j >>= 1;
+        }
+        k <<= 1;
+    }
+    levels
+}
+
+/// Row-wise oblivious ascending sort of `[rows, n]` signed 4-bit shares.
+///
+/// Non-power-of-two widths are padded with shares of the signed minimum
+/// (-8): pads sort to the *front* of each row, so the real values occupy
+/// the last `n` slots in ascending order, which this function returns.
+pub fn bitonic_sort_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize) -> A2 {
+    debug_assert_eq!(x.ring, R4);
+    debug_assert_eq!(x.len, rows * n);
+    let mut m = 1usize;
+    while m < n {
+        m <<= 1;
+    }
+    let (tmin, tmax) = minmax_tables();
+    // Pad each row to m with shares of -8 (P1 holds the constant, P2 zero).
+    let has = !x.vals.is_empty();
+    let pad_share = if ctx.id == crate::party::P1 { R4.encode(-8) } else { 0 };
+    let mut cur = A2 {
+        ring: R4,
+        vals: if has {
+            let mut v = Vec::with_capacity(rows * m);
+            for r in 0..rows {
+                v.extend_from_slice(&x.vals[r * n..(r + 1) * n]);
+                v.extend(std::iter::repeat(pad_share).take(m - n));
+            }
+            v
+        } else {
+            Vec::new()
+        },
+        len: rows * m,
+    };
+    for level in bitonic_levels(m) {
+        let mut av = Vec::new();
+        let mut bv = Vec::new();
+        if has {
+            for r in 0..rows {
+                for &(i, j, _) in &level {
+                    av.push(cur.vals[r * m + i]);
+                    bv.push(cur.vals[r * m + j]);
+                }
+            }
+        }
+        let a = A2 { ring: R4, vals: av, len: rows * level.len() };
+        let b = A2 { ring: R4, vals: bv, len: rows * level.len() };
+        let outs = lut2_eval_multi(ctx, &[&tmin, &tmax], &a, &b);
+        if has {
+            let (mins, maxs) = (&outs[0], &outs[1]);
+            let mut idx = 0usize;
+            for r in 0..rows {
+                for &(i, j, asc) in &level {
+                    let (lo, hi) = (mins.vals[idx], maxs.vals[idx]);
+                    idx += 1;
+                    if asc {
+                        cur.vals[r * m + i] = lo;
+                        cur.vals[r * m + j] = hi;
+                    } else {
+                        cur.vals[r * m + i] = hi;
+                        cur.vals[r * m + j] = lo;
+                    }
+                }
+            }
+        }
+    }
+    // Return the last n slots of each padded row (the real sorted values).
+    A2 {
+        ring: R4,
+        vals: if has {
+            let mut v = Vec::with_capacity(rows * n);
+            for r in 0..rows {
+                v.extend_from_slice(&cur.vals[r * m + (m - n)..(r + 1) * m]);
+            }
+            v
+        } else {
+            Vec::new()
+        },
+        len: rows * n,
+    }
+}
+
+/// `Π_max` via sorting (the paper's stated realization): sort ascending,
+/// take the last element of each row.
+pub fn sort_max_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize) -> A2 {
+    if n == 1 {
+        return x.clone();
+    }
+    let sorted = bitonic_sort_rows(ctx, x, rows, n);
+    if sorted.vals.is_empty() {
+        return A2::empty(R4, rows);
+    }
+    let vals = (0..rows).map(|r| sorted.vals[r * n + n - 1]).collect();
+    A2 { ring: R4, vals, len: rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::{run_3pc, SessionCfg, P0};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::transport::Phase;
+
+    fn run_sort(vals: Vec<i64>, rows: usize, n: usize) -> Vec<i64> {
+        let enc: Vec<u64> = vals.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+            reveal2(ctx, &bitonic_sort_rows(ctx, &x, rows, n))
+        });
+        r1.iter().map(|&v| R4.decode(v)).collect()
+    }
+
+    #[test]
+    fn sorts_power_of_two_rows() {
+        for n in [2usize, 4, 8, 16] {
+            let vals: Vec<i64> = (0..n as i64).map(|i| ((i * 11 + 3) % 16) - 8).collect();
+            let mut want = vals.clone();
+            want.sort();
+            assert_eq!(run_sort(vals, 1, n), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_multiple_rows_batched() {
+        let vals = vec![5i64, -3, 7, 0, /*row2*/ -8, 7, 1, 1];
+        let got = run_sort(vals, 2, 4);
+        assert_eq!(got, vec![-3, 0, 5, 7, -8, 1, 1, 7]);
+    }
+
+    #[test]
+    fn sort_max_matches_plain_max() {
+        for n in [2usize, 3, 5, 8, 12] {
+            let vals: Vec<i64> = (0..n as i64).map(|i| ((i * 7 + 1) % 16) - 8).collect();
+            let want = *vals.iter().max().unwrap();
+            let enc: Vec<u64> = vals.iter().map(|&v| R4.encode(v)).collect();
+            let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+                let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+                reveal2(ctx, &sort_max_rows(ctx, &x, 1, n))
+            });
+            assert_eq!(R4.decode(r1[0]), want, "n={n}");
+        }
+    }
+
+    fn shared_ab(ctx: &PartyCtx, n: usize) -> (A2, A2) {
+        let ones = vec![1u64; n];
+        let twos = vec![2u64; n];
+        let a = ctx.with_phase(Phase::Setup, |c| {
+            share2(c, P0, R4, if c.id == P0 { Some(&ones) } else { None }, n)
+        });
+        let b = ctx.with_phase(Phase::Setup, |c| {
+            share2(c, P0, R4, if c.id == P0 { Some(&twos) } else { None }, n)
+        });
+        (a, b)
+    }
+
+    #[test]
+    fn shared_opening_halves_online_vs_two_calls() {
+        // lut2_eval_multi with 2 tables must open once, not twice.
+        let n = 64usize;
+        let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let (tmin, tmax) = minmax_tables();
+            let (a, b) = shared_ab(ctx, n);
+            lut2_eval_multi(ctx, &[&tmin, &tmax], &a, &b);
+        });
+        let multi = snap.total_bytes(Phase::Online);
+        // two independent calls = two openings
+        let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let (tmin, tmax) = minmax_tables();
+            let (a, b) = shared_ab(ctx, n);
+            crate::protocols::lut::lut2_eval(ctx, &tmin, &a, &b);
+            crate::protocols::lut::lut2_eval(ctx, &tmax, &a, &b);
+        });
+        let two_calls = snap.total_bytes(Phase::Online);
+        assert_eq!(multi * 2, two_calls, "multi {multi} vs two {two_calls}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Table contents shared by the MPC protocols and the plaintext oracle.
+//!
+//! These must match `python/compile/kernels/ref.py` bit-exactly — the
+//! pytest suite pins the python side, the cross-layer integration tests
+//! pin this side against the AOT artifact.
+
+use crate::core::ring::{Ring, R16, R4, R6, R8};
+
+use super::lut::{LutTable, LutTable2};
+
+/// `T_exp[d mod 16] = round(15 * exp(sx * d))` for `d in [-15, 0]`
+/// (ref.py `exp_table`). Output is a 4-bit value carried in an 8-bit ring.
+pub fn exp_table(sx: f64) -> LutTable {
+    LutTable::from_fn(R4, R8, move |idx| {
+        // idx = d mod 16 with d in [-15, 0]: idx 0 -> d 0, idx k -> d = k-16.
+        let d = if idx == 0 { 0i64 } else { idx as i64 - 16 };
+        (15.0 * (sx * d as f64).exp()).round() as u64
+    })
+}
+
+/// Middle-4-bits extraction of the 8-bit softmax denominator:
+/// `T_mid(D) = (D >> 4) & 0xF`. Evaluated as a LUT because high bits of an
+/// additive share are *not* local (carries) — the opened `D − Δ` handles
+/// the carry for free.
+pub fn mid4_table() -> LutTable {
+    LutTable::from_fn(R8, R4, |d| (d >> 4) & 0xF)
+}
+
+/// `T_div(num‖den) = clip(round(16*num / (16*den + 8)), 0, 15)` with the
+/// `den == 0 -> D ≈ 15` convention (ref.py `div_table`).
+pub fn div_table() -> LutTable2 {
+    LutTable2::from_fn(R4, R4, R4, |num, den| {
+        let d_est = if den > 0 { 16.0 * den as f64 + 8.0 } else { 15.0 };
+        let q = (16.0 * num as f64 / d_est).round();
+        q.clamp(0.0, 15.0) as u64
+    })
+}
+
+/// LayerNorm division table `T_ln(a6‖v4) = clip(round(a / sqrt(v*s_v +
+/// eps)), -8, 7)` (ref.py `ln_div_table`) — a (6,4)-bit split of the
+/// paper's two-input division LUT.
+pub fn ln_div_table(s_v: f64, eps: f64) -> LutTable2 {
+    LutTable2::from_fn(R6, R4, R4, move |a6, v4| {
+        let a = R6.decode(a6) as f64;
+        let denom = (v4 as f64 * s_v + eps).sqrt();
+        let u = (a / denom).round().clamp(-8.0, 7.0) as i64;
+        R4.encode(u)
+    })
+}
+
+/// ReLU emitting 16-bit shares directly (paper §ReLU: the output feeds an
+/// FC layer, so the table jumps straight to the FC input ring).
+pub fn relu16_table() -> LutTable {
+    LutTable::from_fn(R4, R16, |v| R4.decode(v).max(0) as u64)
+}
+
+/// GELU emitting 16-bit shares (paper's "nonlinear layers ... and
+/// others": real BERT uses GELU; BiT swaps in ReLU. Both are one LUT in
+/// this framework — this table quantizes gelu(s_x·v)/s_y).
+pub fn gelu16_table(s_x: f64, s_y: f64) -> LutTable {
+    LutTable::from_fn(R4, R16, move |v| {
+        let x = R4.decode(v) as f64 * s_x;
+        let g = 0.5 * x * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh());
+        R16.encode((g / s_y).round() as i64)
+    })
+}
+
+/// Generic signed clip-free requantization check helper (tests).
+pub fn identity_table(ring: Ring) -> LutTable {
+    LutTable::from_fn(ring, ring, |v| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_table_matches_ref_py() {
+        // Pin a few entries for sx = 0.25 against the python oracle values.
+        let t = exp_table(0.25);
+        assert_eq!(t.entries[0], 15); // d=0: round(15*e^0)
+        assert_eq!(t.entries[15], 12); // d=-1: round(15*e^-.25)=11.68->12
+        assert_eq!(t.entries[1], 0); // d=-15: round(15*e^-3.75)=0.35->0
+        // monotone in d
+        let seq: Vec<u64> = (0..16)
+            .map(|d| t.entries[((-(d as i64)).rem_euclid(16)) as usize])
+            .collect();
+        for w in seq.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn div_table_matches_ref_py() {
+        let t = div_table();
+        // num=15, den=0 -> round(16*15/15) = 16 -> clip 15
+        assert_eq!(t.entries[15 * 16 + 0], 15);
+        // num=8, den=8 -> round(128/136) = 1
+        assert_eq!(t.entries[8 * 16 + 8], 1);
+        // num=0 -> always 0
+        for den in 0..16 {
+            assert_eq!(t.entries[den], 0);
+        }
+    }
+
+    #[test]
+    fn mid4_extracts_bits_4_to_8() {
+        let t = mid4_table();
+        assert_eq!(t.entries[0x00], 0);
+        assert_eq!(t.entries[0x1F], 1);
+        assert_eq!(t.entries[0xFF], 0xF);
+        assert_eq!(t.entries[0xA7], 0xA);
+    }
+
+    #[test]
+    fn relu16_is_signed_relu() {
+        let t = relu16_table();
+        assert_eq!(t.entries[0x7], 7);
+        assert_eq!(t.entries[0x8], 0); // -8 -> 0
+        assert_eq!(t.entries[0xF], 0); // -1 -> 0
+        assert_eq!(t.entries[0x3], 3);
+    }
+
+    #[test]
+    fn gelu_table_shape() {
+        let t = gelu16_table(1.0, 1.0);
+        // gelu(0) = 0; gelu(x) ~ x for large positive; ~0 for very negative
+        assert_eq!(R16.decode(t.entries[0]), 0);
+        assert!(R16.decode(t.entries[0x7]) >= 6);
+        assert_eq!(R16.decode(t.entries[0x8]), 0); // gelu(-8) ~ 0
+        // monotone nondecreasing over the signed domain
+        let dom: Vec<i64> = (-8..8).map(|v| R16.decode(t.entries[(v as u64 & 0xF) as usize])).collect();
+        for w in dom.windows(2) {
+            assert!(w[1] >= w[0], "{dom:?}");
+        }
+    }
+
+    #[test]
+    fn ln_div_table_signs() {
+        let t = ln_div_table(4.0, 1.0);
+        // a = 8, v = 0 -> 8/1 = 8 -> clip 7
+        assert_eq!(R4.decode(t.entries[8 * 16 + 0]), 7);
+        // a = -8 -> -8/1 = -8
+        assert_eq!(R4.decode(t.entries[(R6.encode(-8) as usize) * 16]), -8);
+        // a = 0 -> 0 for all v
+        for v in 0..16 {
+            assert_eq!(t.entries[0 * 16 + v], 0);
+        }
+    }
+}

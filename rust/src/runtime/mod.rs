@@ -1,0 +1,5 @@
+//! Execution runtimes: the native plaintext oracle and the PJRT loader
+//! for the JAX/Pallas AOT artifacts.
+
+pub mod native;
+pub mod xla;

@@ -1,0 +1,365 @@
+//! Native plaintext quantized BERT — the Rust twin of
+//! `python/compile/kernels/ref.py` + `model.py` (bit-exact).
+//!
+//! Used as (a) the reference the MPC pipeline is validated against,
+//! (b) the non-private baseline in benches, and (c) the calibration
+//! engine for synthetic BERT-base weights.
+
+use std::collections::HashMap;
+
+use crate::model::config::BertConfig;
+use crate::model::weights::{Tensor, Weights};
+use crate::protocols::tables;
+
+const MASK16: u64 = 0xFFFF;
+
+#[inline]
+pub fn signed4(v: u64) -> i64 {
+    (((v & 0xF) ^ 0x8) as i64) - 0x8
+}
+
+#[inline]
+pub fn trc16_to4(acc: i64) -> i64 {
+    signed4(((acc as u64) & MASK16) >> 12)
+}
+
+/// Binary-weight FC: `trc16_to4( x [rows,k] · (scale·W [m,k])ᵀ )`.
+pub fn fc_quant(x: &[i64], rows: usize, k: usize, w: &Tensor, scale: i64) -> Vec<i64> {
+    let m = w.shape[0];
+    debug_assert_eq!(w.shape[1], k);
+    let mut out = vec![0i64; rows * m];
+    for r in 0..rows {
+        for o in 0..m {
+            let mut acc = 0i64;
+            let wr = &w.data[o * k..(o + 1) * k];
+            let xr = &x[r * k..(r + 1) * k];
+            for j in 0..k {
+                acc += xr[j] * wr[j];
+            }
+            out[r * m + o] = trc16_to4(acc * scale);
+        }
+    }
+    out
+}
+
+/// Activation-activation quantized matmul: `a [m,k] · b [k,n]`, rescale.
+pub fn matmul_quant(a: &[i64], m: usize, k: usize, b: &[i64], n: usize, scale: i64) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0i64;
+            for j in 0..k {
+                acc += a[r * k + j] * b[j * n + c];
+            }
+            out[r * n + c] = trc16_to4(acc * scale);
+        }
+    }
+    out
+}
+
+/// Quantized softmax over each length-`n` row (ref.softmax_quant).
+pub fn softmax_quant(x: &[i64], rows: usize, n: usize, sx: f64) -> Vec<i64> {
+    let te = tables::exp_table(sx);
+    let td = tables::div_table();
+    let mut out = vec![0i64; rows * n];
+    for r in 0..rows {
+        let row = &x[r * n..(r + 1) * n];
+        let xo = *row.iter().max().unwrap();
+        let e: Vec<u64> = row
+            .iter()
+            .map(|&v| te.entries[((v - xo).rem_euclid(16)) as usize])
+            .collect();
+        let big: u64 = e.iter().fold(0u64, |a, &b| (a + b) & 0xFF);
+        let den = (big >> 4) & 0xF;
+        for (j, &ej) in e.iter().enumerate() {
+            out[r * n + j] = td.entries[((ej & 0xF) * 16 + den) as usize] as i64;
+        }
+    }
+    out
+}
+
+pub fn relu_quant(x: &[i64]) -> Vec<i64> {
+    x.iter().map(|&v| v.max(0)).collect()
+}
+
+/// Quantized LayerNorm over each length-`n` row (ref.layernorm_quant).
+pub fn layernorm_quant(
+    r16: &[i64],
+    rows: usize,
+    n: usize,
+    s_v: f64,
+    eps: f64,
+    gamma: &Tensor,
+    gamma_scale: i64,
+    beta: &Tensor,
+) -> Vec<i64> {
+    let c = (4096 / n) as i64;
+    let t = tables::ln_div_table(s_v, eps);
+    let mut out = vec![0i64; rows * n];
+    for row in 0..rows {
+        let x = &r16[row * n..(row + 1) * n];
+        let sum: i64 = x.iter().sum();
+        let m16 = ((c * sum) as u64) & MASK16;
+        let mu = signed4(m16 >> 12);
+        let var: i64 = x.iter().map(|&v| (v - mu) * (v - mu)).sum();
+        let v16 = ((var * c) as u64) & MASK16;
+        let v4 = (v16 >> 12) & 0xF;
+        for j in 0..n {
+            let a6 = ((x[j] - mu) as u64) & 0x3F;
+            let u = signed4(t.entries[(a6 * 16 + v4) as usize]);
+            let acc = u * gamma.data[j] * gamma_scale;
+            let g = trc16_to4(acc);
+            out[row * n + j] = signed4(((g + beta.data[j]) as u64) & 0xF);
+        }
+    }
+    out
+}
+
+/// One encoder layer (mirrors python `encoder_layer`).
+pub fn encoder_layer(cfg: &BertConfig, w: &Weights, li: usize, h: &[i64]) -> Vec<i64> {
+    let (s, d, dh) = (cfg.seq_len, cfg.d_model, cfg.d_head());
+    let p = |name: &str| format!("layer{li}.{name}");
+    let sc = |name: &str| w.scale(&format!("layer{li}.s_{name}"));
+
+    let q = fc_quant(h, s, d, w.tensor(&p("wq")), sc("qkv"));
+    let k = fc_quant(h, s, d, w.tensor(&p("wk")), sc("qkv"));
+    let v = fc_quant(h, s, d, w.tensor(&p("wv")), sc("qkv"));
+
+    let mut ctxcat = vec![0i64; s * d];
+    for hd in 0..cfg.n_heads {
+        let slice = |t: &[i64]| -> Vec<i64> {
+            let mut out = vec![0i64; s * dh];
+            for r in 0..s {
+                out[r * dh..(r + 1) * dh]
+                    .copy_from_slice(&t[r * d + hd * dh..r * d + (hd + 1) * dh]);
+            }
+            out
+        };
+        let (qs, ks, vs) = (slice(&q), slice(&k), slice(&v));
+        // scores = qs [s,dh] @ ks^T [dh,s]
+        let kst: Vec<i64> = {
+            let mut t = vec![0i64; dh * s];
+            for r in 0..s {
+                for c in 0..dh {
+                    t[c * s + r] = ks[r * dh + c];
+                }
+            }
+            t
+        };
+        let scores = matmul_quant(&qs, s, dh, &kst, s, sc("att"));
+        let attn = softmax_quant(&scores, s, s, cfg.sm_sx);
+        let ctx = matmul_quant(&attn, s, s, &vs, dh, sc("av"));
+        for r in 0..s {
+            ctxcat[r * d + hd * dh..r * d + (hd + 1) * dh]
+                .copy_from_slice(&ctx[r * dh..(r + 1) * dh]);
+        }
+    }
+    let o = fc_quant(&ctxcat, s, d, w.tensor(&p("wo")), sc("o"));
+    let res: Vec<i64> = h.iter().zip(&o).map(|(&a, &b)| a + b).collect();
+    let h1 = layernorm_quant(&res, s, d, cfg.ln_sv, cfg.ln_eps,
+                             w.tensor(&p("ln1_g")), sc("g1"), w.tensor(&p("ln1_b")));
+    let u = fc_quant(&h1, s, d, w.tensor(&p("w1")), sc("f1"));
+    let u = relu_quant(&u);
+    let f = fc_quant(&u, s, cfg.d_ff, w.tensor(&p("w2")), sc("f2"));
+    let res2: Vec<i64> = h1.iter().zip(&f).map(|(&a, &b)| a + b).collect();
+    layernorm_quant(&res2, s, d, cfg.ln_sv, cfg.ln_eps,
+                    w.tensor(&p("ln2_g")), sc("g2"), w.tensor(&p("ln2_b")))
+}
+
+/// Full forward: returns (logits over the CLS token, final hidden).
+pub fn forward(cfg: &BertConfig, w: &Weights, x4: &[i64]) -> (Vec<i64>, Vec<i64>) {
+    let mut h = x4.to_vec();
+    for li in 0..cfg.n_layers {
+        h = encoder_layer(cfg, w, li, &h);
+    }
+    let cls = w.tensor("cls.w");
+    let d = cfg.d_model;
+    let logits = (0..cfg.n_classes)
+        .map(|c| {
+            let mut acc = 0i64;
+            for j in 0..d {
+                acc += h[j] * cls.data[c * d + j] * cfg.scale_cls;
+            }
+            // signed 16-bit interpretation of the ring value
+            let v = (acc as u64) & MASK16;
+            if v >= 0x8000 { v as i64 - 0x10000 } else { v as i64 }
+        })
+        .collect();
+    (logits, h)
+}
+
+/// Scale calibration (python `calibrate`): run the forward once, choosing
+/// each op's `floor(2^12·s_w·s_x/s_y)` so outputs span the 4-bit range.
+pub fn calibrate(cfg: &BertConfig, w: &mut Weights, x4: &[i64]) {
+    let (s, d, dh) = (cfg.seq_len, cfg.d_model, cfg.d_head());
+    let pick = |accs: &[i64]| -> i64 {
+        let mut mags: Vec<i64> = accs.iter().map(|&a| a.abs()).collect();
+        mags.sort_unstable();
+        let p99 = mags[((mags.len() - 1) as f64 * 0.99) as usize].max(1);
+        ((7.0 * 4096.0 / p99 as f64).round() as i64).clamp(1, 4095)
+    };
+    let raw_fc = |x: &[i64], rows: usize, k: usize, t: &Tensor| -> Vec<i64> {
+        let m = t.shape[0];
+        let mut out = vec![0i64; rows * m];
+        for r in 0..rows {
+            for o in 0..m {
+                let mut acc = 0i64;
+                for j in 0..k {
+                    acc += x[r * k + j] * t.data[o * k + j];
+                }
+                out[r * m + o] = acc;
+            }
+        }
+        out
+    };
+
+    let mut scales: HashMap<String, i64> = HashMap::new();
+    let mut h = x4.to_vec();
+    for li in 0..cfg.n_layers {
+        let p = |n: &str| format!("layer{li}.{n}");
+        // QKV
+        let mut acc = raw_fc(&h, s, d, w.tensor(&p("wq")));
+        acc.extend(raw_fc(&h, s, d, w.tensor(&p("wk"))));
+        acc.extend(raw_fc(&h, s, d, w.tensor(&p("wv"))));
+        scales.insert(p("s_qkv"), pick(&acc));
+        let sqkv = scales[&p("s_qkv")];
+        let q = fc_quant(&h, s, d, w.tensor(&p("wq")), sqkv);
+        let k = fc_quant(&h, s, d, w.tensor(&p("wk")), sqkv);
+        let v = fc_quant(&h, s, d, w.tensor(&p("wv")), sqkv);
+        // attention scores
+        let slice = |t: &[i64], hd: usize| -> Vec<i64> {
+            let mut out = vec![0i64; s * dh];
+            for r in 0..s {
+                out[r * dh..(r + 1) * dh]
+                    .copy_from_slice(&t[r * d + hd * dh..r * d + (hd + 1) * dh]);
+            }
+            out
+        };
+        let mut acc = Vec::new();
+        for hd in 0..cfg.n_heads {
+            let (qs, ks) = (slice(&q, hd), slice(&k, hd));
+            for r in 0..s {
+                for c in 0..s {
+                    let mut a = 0i64;
+                    for j in 0..dh {
+                        a += qs[r * dh + j] * ks[c * dh + j];
+                    }
+                    acc.push(a);
+                }
+            }
+        }
+        scales.insert(p("s_att"), pick(&acc));
+        let satt = scales[&p("s_att")];
+        // attn @ V
+        let mut acc_av = Vec::new();
+        let mut ctxcat = vec![0i64; s * d];
+        let mut attns = Vec::new();
+        for hd in 0..cfg.n_heads {
+            let (qs, ks) = (slice(&q, hd), slice(&k, hd));
+            let kst: Vec<i64> = {
+                let mut t = vec![0i64; dh * s];
+                for r in 0..s {
+                    for c in 0..dh {
+                        t[c * s + r] = ks[r * dh + c];
+                    }
+                }
+                t
+            };
+            let scores = matmul_quant(&qs, s, dh, &kst, s, satt);
+            let attn = softmax_quant(&scores, s, s, cfg.sm_sx);
+            let vs = slice(&v, hd);
+            for r in 0..s {
+                for c in 0..dh {
+                    let mut a = 0i64;
+                    for j in 0..s {
+                        a += attn[r * s + j] * vs[j * dh + c];
+                    }
+                    acc_av.push(a);
+                }
+            }
+            attns.push((attn, vs));
+        }
+        scales.insert(p("s_av"), pick(&acc_av));
+        let sav = scales[&p("s_av")];
+        for (hd, (attn, vs)) in attns.iter().enumerate() {
+            let ctx = matmul_quant(attn, s, s, vs, dh, sav);
+            for r in 0..s {
+                ctxcat[r * d + hd * dh..r * d + (hd + 1) * dh]
+                    .copy_from_slice(&ctx[r * dh..(r + 1) * dh]);
+            }
+        }
+        // Wo
+        let acc = raw_fc(&ctxcat, s, d, w.tensor(&p("wo")));
+        scales.insert(p("s_o"), pick(&acc));
+        let o = fc_quant(&ctxcat, s, d, w.tensor(&p("wo")), scales[&p("s_o")]);
+        let res: Vec<i64> = h.iter().zip(&o).map(|(&a, &b)| a + b).collect();
+        scales.insert(p("s_g1"), 2048);
+        let h1 = layernorm_quant(&res, s, d, cfg.ln_sv, cfg.ln_eps,
+                                 w.tensor(&p("ln1_g")), 2048, w.tensor(&p("ln1_b")));
+        // FFN
+        let acc = raw_fc(&h1, s, d, w.tensor(&p("w1")));
+        scales.insert(p("s_f1"), pick(&acc));
+        let u = relu_quant(&fc_quant(&h1, s, d, w.tensor(&p("w1")), scales[&p("s_f1")]));
+        let acc = raw_fc(&u, s, cfg.d_ff, w.tensor(&p("w2")));
+        scales.insert(p("s_f2"), pick(&acc));
+        let f = fc_quant(&u, s, cfg.d_ff, w.tensor(&p("w2")), scales[&p("s_f2")]);
+        let res2: Vec<i64> = h1.iter().zip(&f).map(|(&a, &b)| a + b).collect();
+        scales.insert(p("s_g2"), 2048);
+        h = layernorm_quant(&res2, s, d, cfg.ln_sv, cfg.ln_eps,
+                            w.tensor(&p("ln2_g")), 2048, w.tensor(&p("ln2_b")));
+    }
+    w.scales = scales;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::{synth_input, Weights};
+
+    fn tiny_calibrated() -> (BertConfig, Weights, Vec<i64>) {
+        let cfg = BertConfig::tiny();
+        let mut w = Weights::synth(cfg, 42);
+        let xc = synth_input(&cfg, 5);
+        calibrate(&cfg, &mut w, &xc);
+        let x = synth_input(&cfg, 11);
+        (cfg, w, x)
+    }
+
+    #[test]
+    fn forward_shapes_and_ranges() {
+        let (cfg, w, x) = tiny_calibrated();
+        let (logits, h) = forward(&cfg, &w, &x);
+        assert_eq!(logits.len(), cfg.n_classes);
+        assert_eq!(h.len(), cfg.seq_len * cfg.d_model);
+        assert!(h.iter().all(|&v| (-8..8).contains(&v)));
+    }
+
+    #[test]
+    fn forward_depends_on_input() {
+        let (cfg, w, x) = tiny_calibrated();
+        let (_, h1) = forward(&cfg, &w, &x);
+        let x2 = synth_input(&cfg, 99);
+        let (_, h2) = forward(&cfg, &w, &x2);
+        let diff = h1.iter().zip(&h2).filter(|(a, b)| a != b).count();
+        assert!(diff * 5 > h1.len(), "only {diff}/{} differ", h1.len());
+    }
+
+    #[test]
+    fn calibration_keeps_signal_alive() {
+        let (cfg, w, x) = tiny_calibrated();
+        let (_, h) = forward(&cfg, &w, &x);
+        let mean: f64 = h.iter().map(|&v| v as f64).sum::<f64>() / h.len() as f64;
+        let var: f64 =
+            h.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / h.len() as f64;
+        assert!(var.sqrt() > 0.5, "hidden std {}", var.sqrt());
+    }
+
+    #[test]
+    fn softmax_rows_sum_near_16() {
+        // quantized softmax outputs roughly preserve the normalization
+        let x = vec![3i64, -5, 7, 0, -8, 2, 1, -1];
+        let out = softmax_quant(&x, 1, 8, 0.5);
+        let sum: i64 = out.iter().sum();
+        assert!((8..=24).contains(&sum), "{out:?}");
+    }
+}

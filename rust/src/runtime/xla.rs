@@ -1,0 +1,93 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts (HLO text) and execute
+//! them on the CPU PJRT client.
+//!
+//! This is the L2/L3 bridge of the three-layer architecture: python runs
+//! once at build time (`make artifacts`); this module makes the lowered
+//! computation callable from Rust with no python on the request path.
+//! Interchange is HLO *text* — serialized protos from jax ≥ 0.5 carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled executable with convenience I/O for int32 tensors.
+pub struct XlaModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// An int32 tensor argument/result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct I32Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl I32Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        I32Tensor { shape, data }
+    }
+
+    pub fn from_i64(shape: Vec<usize>, data: &[i64]) -> Self {
+        I32Tensor::new(shape, data.iter().map(|&v| v as i32).collect())
+    }
+}
+
+impl XlaModel {
+    /// Load + compile an HLO text artifact on the CPU PJRT client.
+    pub fn load(path: &Path) -> Result<XlaModel> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(XlaModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Execute with int32 inputs; returns every element of the output
+    /// tuple as an [`I32Tensor`] (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[I32Tensor]) -> Result<Vec<I32Tensor>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data);
+            let lit = if t.shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims).context("reshape literal")?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let tuple = result.to_tuple().context("untuple result")?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            let shape = lit.array_shape().context("result shape")?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<i32>().context("result data")?;
+            outs.push(I32Tensor::new(dims, data));
+        }
+        Ok(outs)
+    }
+}
+
+/// Locate the artifacts directory (env override, else repo default).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("PPQ_ARTIFACTS") {
+        return d.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,247 @@
+//! Two-party additive secret sharing `⟦x⟧^ℓ` between P1 and P2.
+//!
+//! `⟦x⟧_1 + ⟦x⟧_2 mod 2^ℓ = x`. P0 holds no share (its copy is an empty
+//! vector). All linear operations are local; `reveal` costs one round of
+//! P1<->P2 communication.
+
+use crate::core::ring::Ring;
+use crate::party::{PartyCtx, P0, P1, P2};
+
+/// A vector of 2PC-additively-shared ring elements (this party's share).
+#[derive(Clone, Debug)]
+pub struct A2 {
+    pub ring: Ring,
+    /// This party's share; empty at P0.
+    pub vals: Vec<u64>,
+    /// Logical length (also tracked at P0, which holds no data).
+    pub len: usize,
+}
+
+impl A2 {
+    pub fn empty(ring: Ring, len: usize) -> A2 {
+        A2 { ring, vals: Vec::new(), len }
+    }
+
+    pub fn holds_share(&self) -> bool {
+        !self.vals.is_empty() || self.len == 0
+    }
+
+    /// Local addition of two shared vectors.
+    pub fn add(&self, other: &A2) -> A2 {
+        debug_assert_eq!(self.ring, other.ring);
+        debug_assert_eq!(self.len, other.len);
+        A2 {
+            ring: self.ring,
+            vals: self
+                .vals
+                .iter()
+                .zip(&other.vals)
+                .map(|(&a, &b)| self.ring.add(a, b))
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    /// Local subtraction.
+    pub fn sub(&self, other: &A2) -> A2 {
+        debug_assert_eq!(self.ring, other.ring);
+        debug_assert_eq!(self.len, other.len);
+        A2 {
+            ring: self.ring,
+            vals: self
+                .vals
+                .iter()
+                .zip(&other.vals)
+                .map(|(&a, &b)| self.ring.sub(a, b))
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    /// Add a public constant (only P1 adds — convention).
+    pub fn add_public(&self, ctx: &PartyCtx, c: &[u64]) -> A2 {
+        let mut out = self.clone();
+        if ctx.id == P1 {
+            for (v, &cv) in out.vals.iter_mut().zip(c) {
+                *v = self.ring.add(*v, cv);
+            }
+        }
+        out
+    }
+
+    /// Reduce into a smaller ring (local: mod-2^k is a ring homomorphism).
+    pub fn low_bits(&self, to: Ring) -> A2 {
+        debug_assert!(to.bits() <= self.ring.bits());
+        A2 {
+            ring: to,
+            vals: self.vals.iter().map(|&v| v & to.mask()).collect(),
+            len: self.len,
+        }
+    }
+
+    /// Local per-share truncation to the top `k` bits, reducing to ring
+    /// `Z_2^k` (paper footnote 2: mod-reduction removes the 2^{ℓ-k} wrap
+    /// error; the discarded low bits may still drop a carry, making the
+    /// result at most 1 LSB *below* the exact value).
+    pub fn trc_top(&self, k: u32) -> A2 {
+        let to = Ring::new(k);
+        A2 {
+            ring: to,
+            vals: self.vals.iter().map(|&v| self.ring.trc(v, k)).collect(),
+            len: self.len,
+        }
+    }
+
+    pub fn slice(&self, lo: usize, hi: usize) -> A2 {
+        A2 {
+            ring: self.ring,
+            vals: if self.vals.is_empty() {
+                Vec::new()
+            } else {
+                self.vals[lo..hi].to_vec()
+            },
+            len: hi - lo,
+        }
+    }
+
+    pub fn concat(ring: Ring, parts: &[&A2]) -> A2 {
+        let len = parts.iter().map(|p| p.len).sum();
+        let mut vals = Vec::new();
+        for p in parts {
+            debug_assert_eq!(p.ring, ring);
+            vals.extend_from_slice(&p.vals);
+        }
+        A2 { ring, vals, len }
+    }
+}
+
+/// `Π_share`: party `owner` shares `vals` additively between P1 and P2.
+///
+/// The owner and one receiver expand a pairwise seed (zero communication);
+/// the other receiver gets `x - r` (ℓ bits per element).
+pub fn share2(ctx: &PartyCtx, owner: usize, ring: Ring, vals: Option<&[u64]>, len: usize) -> A2 {
+    let phase = ctx.phase();
+    match (owner, ctx.id) {
+        // Owner P0: seed with P1, send x - r to P2.
+        (P0, P0) => {
+            let x = vals.expect("owner must supply values");
+            debug_assert_eq!(x.len(), len);
+            let r = ctx.pair_prg(P1).ring_vec(ring, len);
+            let d: Vec<u64> = x.iter().zip(&r).map(|(&x, &r)| ring.sub(x, r)).collect();
+            ctx.net.send_ring(P2, phase, ring, &d);
+            A2::empty(ring, len)
+        }
+        (P0, P1) => A2 { ring, vals: ctx.pair_prg(P0).ring_vec(ring, len), len },
+        (P0, P2) => A2 { ring, vals: ctx.net.recv_ring(P0, phase, ring, len), len },
+        // Owner P1: private r is P1's own share, sends x - r to P2.
+        (P1, P1) => {
+            let x = vals.expect("owner must supply values");
+            let r = ctx.own_prg.borrow_mut().ring_vec(ring, len);
+            let d: Vec<u64> = x.iter().zip(&r).map(|(&x, &r)| ring.sub(x, r)).collect();
+            ctx.net.send_ring(P2, phase, ring, &d);
+            A2 { ring, vals: r, len }
+        }
+        (P1, P2) => A2 { ring, vals: ctx.net.recv_ring(P1, phase, ring, len), len },
+        (P1, P0) => A2::empty(ring, len),
+        // Owner P2: symmetric.
+        (P2, P2) => {
+            let x = vals.expect("owner must supply values");
+            let r = ctx.own_prg.borrow_mut().ring_vec(ring, len);
+            let d: Vec<u64> = x.iter().zip(&r).map(|(&x, &r)| ring.sub(x, r)).collect();
+            ctx.net.send_ring(P1, phase, ring, &d);
+            A2 { ring, vals: r, len }
+        }
+        (P2, P1) => A2 { ring, vals: ctx.net.recv_ring(P2, phase, ring, len), len },
+        (P2, P0) => A2::empty(ring, len),
+        _ => unreachable!(),
+    }
+}
+
+/// Reveal `⟦x⟧` to both P1 and P2 (one round, ℓ bits each way). P0 gets
+/// nothing and returns an empty vector.
+pub fn reveal2(ctx: &PartyCtx, x: &A2) -> Vec<u64> {
+    let phase = ctx.phase();
+    match ctx.id {
+        P1 => {
+            let theirs = ctx.net.exchange_ring(P2, phase, x.ring, &x.vals);
+            x.vals
+                .iter()
+                .zip(&theirs)
+                .map(|(&a, &b)| x.ring.add(a, b))
+                .collect()
+        }
+        P2 => {
+            let theirs = ctx.net.exchange_ring(P1, phase, x.ring, &x.vals);
+            x.vals
+                .iter()
+                .zip(&theirs)
+                .map(|(&a, &b)| x.ring.add(a, b))
+                .collect()
+        }
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R16, R4};
+    use crate::party::{run_3pc, SessionCfg};
+
+    #[test]
+    fn share_reveal_roundtrip_all_owners() {
+        for owner in [P0, P1, P2] {
+            let secret: Vec<u64> = vec![3, 9, 15, 0];
+            let sc = secret.clone();
+            let ([_, r1, r2], _) = run_3pc(SessionCfg::default(), move |ctx| {
+                let vals = if ctx.id == owner { Some(&sc[..]) } else { None };
+                let sh = share2(ctx, owner, R4, vals, 4);
+                reveal2(ctx, &sh)
+            });
+            assert_eq!(r1, secret, "owner {owner}");
+            assert_eq!(r2, secret, "owner {owner}");
+        }
+    }
+
+    #[test]
+    fn linear_ops_are_local_and_correct() {
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), |ctx| {
+            let av = [100u64, 200];
+            let bv = [5u64, 70000 % 65536];
+            let a = share2(ctx, P0, R16, if ctx.id == P0 { Some(&av[..]) } else { None }, 2);
+            let b = share2(ctx, P0, R16, if ctx.id == P0 { Some(&bv[..]) } else { None }, 2);
+            let sum = a.add(&b).add_public(ctx, &[1, 1]);
+            reveal2(ctx, &sum)
+        });
+        assert_eq!(r1, vec![106, (200 + 70000 % 65536 + 1) % 65536]);
+        // two shares + one reveal = small constant number of rounds
+        assert!(snap.max_rounds(crate::transport::Phase::Online) <= 3);
+    }
+
+    #[test]
+    fn trc_top_matches_value_within_one_lsb() {
+        let secret: Vec<u64> = vec![0x7A31, 0x00FF, 0xFFFF, 0x8000];
+        let sc = secret.clone();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let sh = share2(ctx, P0, R16, if ctx.id == P0 { Some(&sc) } else { None }, 4);
+            let t = sh.trc_top(4);
+            reveal2(ctx, &t)
+        });
+        for (got, want) in r1.iter().zip(&secret) {
+            let exact = (want >> 12) & 0xF;
+            let deficit = (exact + 16 - got) % 16;
+            assert!(deficit <= 1, "got {got} want {exact} (-1 carry allowed)");
+        }
+    }
+
+    #[test]
+    fn low_bits_matches_value_exactly() {
+        let secret: Vec<u64> = vec![0x7A31, 0x00FF, 0x1234];
+        let sc = secret.clone();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let sh = share2(ctx, P0, R16, if ctx.id == P0 { Some(&sc) } else { None }, 3);
+            reveal2(ctx, &sh.low_bits(R4))
+        });
+        assert_eq!(r1, secret.iter().map(|v| v & 0xF).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,8 @@
+//! Secret sharing schemes: 2-party additive `⟦x⟧` (held by P1/P2) and
+//! 3-party replicated `⟨x⟩` (RSS), plus share / reveal / reshare protocols.
+
+pub mod additive;
+pub mod rss;
+
+pub use additive::A2;
+pub use rss::Rss;

@@ -1,0 +1,246 @@
+//! Three-party replicated secret sharing `⟨x⟩^ℓ` (2-out-of-3).
+//!
+//! Share vector `[s0, s1, s2]` with `x = s0 + s1 + s2`; party `P_i` holds
+//! `(s_{i+1}, s_{i+2})` — equivalently, share `⟨x⟩_i` is held by `P_{i-1}`
+//! and `P_{i+1}` (paper, Preliminaries).
+
+use crate::core::ring::Ring;
+use crate::party::PartyCtx;
+
+use super::additive::A2;
+
+/// A vector of RSS-shared ring elements (this party's two share limbs).
+#[derive(Clone, Debug)]
+pub struct Rss {
+    pub ring: Ring,
+    /// `s_{id+1}`
+    pub next: Vec<u64>,
+    /// `s_{id+2}`
+    pub prev: Vec<u64>,
+}
+
+impl Rss {
+    pub fn len(&self) -> usize {
+        self.next.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.next.is_empty()
+    }
+
+    pub fn add(&self, other: &Rss) -> Rss {
+        debug_assert_eq!(self.ring, other.ring);
+        Rss {
+            ring: self.ring,
+            next: zipped(self.ring, &self.next, &other.next, u64::wrapping_add),
+            prev: zipped(self.ring, &self.prev, &other.prev, u64::wrapping_add),
+        }
+    }
+
+    pub fn sub(&self, other: &Rss) -> Rss {
+        debug_assert_eq!(self.ring, other.ring);
+        Rss {
+            ring: self.ring,
+            next: zipped(self.ring, &self.next, &other.next, u64::wrapping_sub),
+            prev: zipped(self.ring, &self.prev, &other.prev, u64::wrapping_sub),
+        }
+    }
+
+    /// Multiply by a public scalar (local).
+    pub fn scale(&self, c: u64) -> Rss {
+        Rss {
+            ring: self.ring,
+            next: self.next.iter().map(|&v| self.ring.mul(v, c)).collect(),
+            prev: self.prev.iter().map(|&v| self.ring.mul(v, c)).collect(),
+        }
+    }
+
+    pub fn slice(&self, lo: usize, hi: usize) -> Rss {
+        Rss {
+            ring: self.ring,
+            next: self.next[lo..hi].to_vec(),
+            prev: self.prev[lo..hi].to_vec(),
+        }
+    }
+}
+
+fn zipped(ring: Ring, a: &[u64], b: &[u64], op: fn(u64, u64) -> u64) -> Vec<u64> {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ring.reduce(op(x, y)))
+        .collect()
+}
+
+/// Share `vals` (known to `owner`) into RSS.
+///
+/// The two shares the owner holds are expanded from pairwise seeds (zero
+/// communication); the third share `s_owner = x - s_{o+1} - s_{o+2}` is
+/// sent to the two parties holding it (2ℓ bits total).
+pub fn share_rss(
+    ctx: &PartyCtx,
+    owner: usize,
+    ring: Ring,
+    vals: Option<&[u64]>,
+    len: usize,
+) -> Rss {
+    let phase = ctx.phase();
+    let o = owner;
+    let o1 = (o + 1) % 3;
+    let o2 = (o + 2) % 3;
+    if ctx.id == o {
+        let x = vals.expect("owner must supply values");
+        debug_assert_eq!(x.len(), len);
+        // s_{o+1} is held by P_o and P_{o+2}; s_{o+2} by P_o and P_{o+1}.
+        let s_next = ctx.pair_prg(o2).ring_vec(ring, len);
+        let s_prev = ctx.pair_prg(o1).ring_vec(ring, len);
+        let s_own: Vec<u64> = (0..len)
+            .map(|i| ring.sub(ring.sub(x[i], s_next[i]), s_prev[i]))
+            .collect();
+        ctx.net.send_ring(o1, phase, ring, &s_own);
+        ctx.net.send_ring(o2, phase, ring, &s_own);
+        Rss { ring, next: s_next, prev: s_prev }
+    } else if ctx.id == o1 {
+        // P_{o+1} holds s_{o+2} (seeded with owner) and s_o (received).
+        let s_next = ctx.pair_prg(o).ring_vec(ring, len);
+        let s_prev = ctx.net.recv_ring(o, phase, ring, len);
+        Rss { ring, next: s_next, prev: s_prev }
+    } else {
+        // P_{o+2} holds s_o (received) and s_{o+1} (seeded with owner).
+        let s_next = ctx.net.recv_ring(o, phase, ring, len);
+        let s_prev = ctx.pair_prg(o).ring_vec(ring, len);
+        Rss { ring, next: s_next, prev: s_prev }
+    }
+}
+
+/// Reveal an RSS vector to all parties: `P_i` is missing `s_i`, which its
+/// successor holds as `prev`; each party therefore sends `prev` to its
+/// predecessor (one round, ℓ bits per link).
+pub fn reveal_rss(ctx: &PartyCtx, x: &Rss) -> Vec<u64> {
+    let phase = ctx.phase();
+    ctx.net.send_ring(ctx.prev(), phase, x.ring, &x.prev);
+    let missing = ctx.net.recv_ring(ctx.next(), phase, x.ring, x.len());
+    (0..x.len())
+        .map(|i| x.ring.add(x.ring.add(x.next[i], x.prev[i]), missing[i]))
+        .collect()
+}
+
+/// Fresh zero-sharing `α_i = PRG(i,i+1) - PRG(i,i-1)` with `Σ α_i = 0`
+/// (used to re-randomize local products before disclosure).
+pub fn zero_share(ctx: &PartyCtx, ring: Ring, len: usize) -> Vec<u64> {
+    let with_next = ctx.pair_prg(ctx.next()).ring_vec(ring, len);
+    let with_prev = ctx.pair_prg(ctx.prev()).ring_vec(ring, len);
+    (0..len)
+        .map(|i| ring.sub(with_next[i], with_prev[i]))
+        .collect()
+}
+
+/// Reshare `⟦x⟧^ℓ` (2PC additive) into `⟨x⟩^ℓ` (RSS) — the second half of
+/// the paper's `Π_convert` (the ring extension LUT is the first half):
+///   P0,P1 seed s2; P0,P2 seed s1; P1 opens δ1 = ⟦x⟧_1 - s2 and P2 opens
+///   δ2 = ⟦x⟧_2 - s1 to each other; s0 = δ1 + δ2.
+pub fn reshare_a2_to_rss(ctx: &PartyCtx, x: &A2) -> Rss {
+    let phase = ctx.phase();
+    let ring = x.ring;
+    let len = x.len;
+    match ctx.id {
+        0 => {
+            let s1 = ctx.pair_prg(2).ring_vec(ring, len);
+            let s2 = ctx.pair_prg(1).ring_vec(ring, len);
+            Rss { ring, next: s1, prev: s2 }
+        }
+        1 => {
+            let s2 = ctx.pair_prg(0).ring_vec(ring, len);
+            let d1: Vec<u64> = (0..len).map(|i| ring.sub(x.vals[i], s2[i])).collect();
+            let d2 = ctx.net.exchange_ring(2, phase, ring, &d1);
+            let s0: Vec<u64> = (0..len).map(|i| ring.add(d1[i], d2[i])).collect();
+            Rss { ring, next: s2, prev: s0 }
+        }
+        2 => {
+            let s1 = ctx.pair_prg(0).ring_vec(ring, len);
+            let d2: Vec<u64> = (0..len).map(|i| ring.sub(x.vals[i], s1[i])).collect();
+            let d1 = ctx.net.exchange_ring(1, phase, ring, &d2);
+            let s0: Vec<u64> = (0..len).map(|i| ring.add(d1[i], d2[i])).collect();
+            Rss { ring, next: s0, prev: s1 }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R16, R4};
+    use crate::party::{run_3pc, SessionCfg, P0, P1, P2};
+    use crate::sharing::additive::share2;
+
+    #[test]
+    fn share_reveal_roundtrip_all_owners() {
+        for owner in [P0, P1, P2] {
+            let secret: Vec<u64> = vec![1, 2, 0xFFFF, 12345];
+            let sc = secret.clone();
+            let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+                let vals = if ctx.id == owner { Some(&sc[..]) } else { None };
+                let sh = share_rss(ctx, owner, R16, vals, 4);
+                reveal_rss(ctx, &sh)
+            });
+            for out in outs {
+                assert_eq!(out, secret, "owner {owner}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_ops() {
+        let (outs, _) = run_3pc(SessionCfg::default(), |ctx| {
+            let av = [10u64, 20];
+            let bv = [5u64, 7];
+            let a = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&av[..]) } else { None }, 2);
+            let b = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&bv[..]) } else { None }, 2);
+            let c = a.add(&b).scale(3).sub(&b);
+            reveal_rss(ctx, &c)
+        });
+        for out in outs {
+            assert_eq!(out, vec![(10 + 5) * 3 - 5, (20 + 7) * 3 - 7]);
+        }
+    }
+
+    #[test]
+    fn zero_shares_sum_to_zero() {
+        let (outs, _) = run_3pc(SessionCfg::default(), |ctx| zero_share(ctx, R4, 5));
+        for i in 0..5 {
+            let sum: u64 = outs.iter().map(|o| o[i]).sum();
+            assert_eq!(sum % 16, 0);
+        }
+    }
+
+    #[test]
+    fn reshare_preserves_value() {
+        let secret: Vec<u64> = vec![0, 1, 7, 0xABCD];
+        let sc = secret.clone();
+        let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let a2 = share2(ctx, P0, R16, if ctx.id == P0 { Some(&sc) } else { None }, 4);
+            let rss = reshare_a2_to_rss(ctx, &a2);
+            reveal_rss(ctx, &rss)
+        });
+        for out in outs {
+            assert_eq!(out, secret);
+        }
+        assert!(snap.max_rounds(crate::transport::Phase::Online) <= 3);
+    }
+
+    #[test]
+    fn rss_shares_are_consistent_across_parties() {
+        // P_i's `next` limb must equal P_{i+2}'s `prev` limb (both are s_{i+1}).
+        let secret = vec![42u64];
+        let sc = secret.clone();
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let sh = share_rss(ctx, P0, R4, if ctx.id == P0 { Some(&sc) } else { None }, 1);
+            (sh.next[0], sh.prev[0])
+        });
+        let [o0, o1, o2] = outs;
+        assert_eq!(o0.0, o2.1); // s1
+        assert_eq!(o1.0, o0.1); // s2
+        assert_eq!(o2.0, o1.1); // s0
+        assert_eq!((o0.0 + o1.0 + o2.0) % 16, 42 % 16);
+    }
+}

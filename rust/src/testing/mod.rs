@@ -1,0 +1,103 @@
+//! Miniature property-testing framework (the `proptest` crate is not
+//! available in the offline registry — DESIGN.md).
+//!
+//! Seeded generation + first-failure reporting; shrinkers are replaced by
+//! reporting the failing seed so a case can be replayed deterministically.
+
+use crate::core::prg::Prg;
+use crate::core::ring::Ring;
+
+/// A deterministic case generator for one property run.
+pub struct Gen {
+    prg: Prg,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        let mut s = [0u8; 16];
+        s[..8].copy_from_slice(&seed.to_le_bytes());
+        Gen { prg: Prg::new(s), seed }
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.prg.next_u64() % bound.max(1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.prg.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.prg.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    pub fn ring_elem(&mut self, ring: Ring) -> u64 {
+        self.prg.ring_elem(ring)
+    }
+
+    pub fn ring_vec(&mut self, ring: Ring, n: usize) -> Vec<u64> {
+        self.prg.ring_vec(ring, n)
+    }
+
+    pub fn signed_vec(&mut self, bits: u32, n: usize) -> Vec<i64> {
+        let half = 1i64 << (bits - 1);
+        (0..n).map(|_| self.i64_in(-half, half - 1)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        &options[self.usize_in(0, options.len() - 1)]
+    }
+}
+
+/// Run `cases` seeded property checks; panic with the failing seed.
+///
+/// `prop` returns `Err(description)` on failure.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::R16;
+
+    #[test]
+    fn generators_are_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..50 {
+            assert_eq!(a.u64_below(1000), b.u64_below(1000));
+        }
+    }
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("ring add commutes", 50, |g| {
+            let (a, b) = (g.ring_elem(R16), g.ring_elem(R16));
+            prop_assert!(R16.add(a, b) == R16.add(b, a), "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn check_reports_failures() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,157 @@
+//! Communication + compute metering, split by protocol phase.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Protocol phase tags. The paper splits evaluation into an input-
+/// independent offline phase (P0 generates and distributes shifted lookup
+/// tables) and an online phase; `Setup` covers one-time model sharing.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    Setup = 0,
+    Offline = 1,
+    Online = 2,
+}
+
+pub const PHASES: [Phase; 3] = [Phase::Setup, Phase::Offline, Phase::Online];
+
+const NP: usize = 3; // parties
+const NPH: usize = 3; // phases
+
+/// Shared (Arc'd) atomic counters for one MPC session.
+#[derive(Default)]
+pub struct Metrics {
+    /// bytes[from*3+to][phase]
+    bytes: [[AtomicU64; NPH]; NP * NP],
+    msgs: [[AtomicU64; NPH]; NP * NP],
+    /// rounds[party][phase]: blocking receives observed by that party
+    rounds: [[AtomicU64; NPH]; NP],
+    /// wall-clock nanoseconds each party spent inside each phase
+    compute_ns: [[AtomicU64; NPH]; NP],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_send(&self, from: usize, to: usize, phase: Phase, nbytes: usize) {
+        let link = from * NP + to;
+        self.bytes[link][phase as usize].fetch_add(nbytes as u64, Ordering::Relaxed);
+        self.msgs[link][phase as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_round(&self, party: usize, phase: Phase) {
+        self.rounds[party][phase as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_compute(&self, party: usize, phase: Phase, ns: u64) {
+        self.compute_ns[party][phase as usize].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        for l in 0..NP * NP {
+            for p in 0..NPH {
+                s.bytes[l][p] = self.bytes[l][p].load(Ordering::Relaxed);
+                s.msgs[l][p] = self.msgs[l][p].load(Ordering::Relaxed);
+            }
+        }
+        for party in 0..NP {
+            for p in 0..NPH {
+                s.rounds[party][p] = self.rounds[party][p].load(Ordering::Relaxed);
+                s.compute_ns[party][p] = self.compute_ns[party][p].load(Ordering::Relaxed);
+            }
+        }
+        s
+    }
+}
+
+/// Plain-data copy of the counters, with aggregation helpers.
+#[derive(Default, Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub bytes: [[u64; NPH]; NP * NP],
+    pub msgs: [[u64; NPH]; NP * NP],
+    pub rounds: [[u64; NPH]; NP],
+    pub compute_ns: [[u64; NPH]; NP],
+}
+
+impl MetricsSnapshot {
+    /// Total bytes on all links in a phase.
+    pub fn total_bytes(&self, phase: Phase) -> u64 {
+        (0..NP * NP).map(|l| self.bytes[l][phase as usize]).sum()
+    }
+
+    /// Heaviest directed link in a phase (the bandwidth bottleneck).
+    pub fn busiest_link_bytes(&self, phase: Phase) -> u64 {
+        (0..NP * NP)
+            .map(|l| self.bytes[l][phase as usize])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Protocol round count for a phase: the max over parties of blocking
+    /// receives (protocols batch vectors into single messages, so this
+    /// tracks sequential message dependencies).
+    pub fn max_rounds(&self, phase: Phase) -> u64 {
+        (0..NP).map(|p| self.rounds[p][phase as usize]).max().unwrap_or(0)
+    }
+
+    /// Slowest party's measured compute time in a phase.
+    pub fn max_compute_ns(&self, phase: Phase) -> u64 {
+        (0..NP)
+            .map(|p| self.compute_ns[p][phase as usize])
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn total_mb(&self, phase: Phase) -> f64 {
+        self.total_bytes(phase) as f64 / (1024.0 * 1024.0)
+    }
+
+    /// Merge another snapshot into this one (for aggregating sessions).
+    pub fn merge(&mut self, o: &MetricsSnapshot) {
+        for l in 0..NP * NP {
+            for p in 0..NPH {
+                self.bytes[l][p] += o.bytes[l][p];
+                self.msgs[l][p] += o.msgs[l][p];
+            }
+        }
+        for party in 0..NP {
+            for p in 0..NPH {
+                self.rounds[party][p] += o.rounds[party][p];
+                self.compute_ns[party][p] += o.compute_ns[party][p];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_send(0, 1, Phase::Offline, 100);
+        m.record_send(0, 1, Phase::Offline, 50);
+        m.record_send(1, 2, Phase::Online, 8);
+        m.record_round(1, Phase::Online);
+        m.record_round(2, Phase::Online);
+        m.record_round(2, Phase::Online);
+        let s = m.snapshot();
+        assert_eq!(s.total_bytes(Phase::Offline), 150);
+        assert_eq!(s.total_bytes(Phase::Online), 8);
+        assert_eq!(s.busiest_link_bytes(Phase::Offline), 150);
+        assert_eq!(s.max_rounds(Phase::Online), 2);
+        assert_eq!(s.max_rounds(Phase::Offline), 0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let m = Metrics::new();
+        m.record_send(0, 2, Phase::Online, 10);
+        let mut a = m.snapshot();
+        a.merge(&m.snapshot());
+        assert_eq!(a.total_bytes(Phase::Online), 20);
+    }
+}

@@ -1,0 +1,15 @@
+//! Party-to-party transport: byte channels, per-phase metering, and the
+//! LAN/WAN network cost model.
+//!
+//! The three parties run as threads in one process connected by
+//! `std::sync::mpsc` channels (tokio is unavailable offline — DESIGN.md).
+//! Every message is metered (bytes, message count, rounds) per directed
+//! link and per protocol phase; the bench harness combines the meter with
+//! the [`NetParams`] cost model to report LAN/WAN latency the same way the
+//! paper does (rounds x RTT + bytes / bandwidth + measured compute).
+
+pub mod metrics;
+pub mod net;
+
+pub use metrics::{Metrics, MetricsSnapshot, Phase};
+pub use net::{build_mesh, Net, NetParams};

@@ -1,0 +1,201 @@
+//! In-process mesh transport + the LAN/WAN network cost model.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::pack::{pack, unpack};
+use crate::core::ring::Ring;
+
+use super::metrics::{Metrics, MetricsSnapshot, Phase};
+
+/// Network environment parameters (paper: LAN 5 Gbps / 0.2 ms RTT, WAN
+/// 100 Mbps / 40 ms RTT).
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    pub name: &'static str,
+    pub bandwidth_bps: f64,
+    pub rtt: Duration,
+}
+
+impl NetParams {
+    pub const LAN: NetParams = NetParams {
+        name: "LAN",
+        bandwidth_bps: 5e9,
+        rtt: Duration::from_micros(200),
+    };
+    pub const WAN: NetParams = NetParams {
+        name: "WAN",
+        bandwidth_bps: 100e6,
+        rtt: Duration::from_millis(40),
+    };
+    /// No network cost (pure compute measurement).
+    pub const LOCAL: NetParams = NetParams {
+        name: "LOCAL",
+        bandwidth_bps: f64::INFINITY,
+        rtt: Duration::ZERO,
+    };
+
+    /// Modeled network time for a phase: rounds x RTT + busiest directed
+    /// link / bandwidth. Matches how the paper's WAN numbers decompose.
+    pub fn modeled_net_time(&self, snap: &MetricsSnapshot, phase: Phase) -> Duration {
+        let rounds = snap.max_rounds(phase) as f64;
+        let bytes = snap.busiest_link_bytes(phase) as f64;
+        let t = rounds * self.rtt.as_secs_f64() + bytes * 8.0 / self.bandwidth_bps;
+        Duration::from_secs_f64(t)
+    }
+
+    /// Modeled end-to-end phase time: measured compute + modeled network.
+    pub fn modeled_phase_time(&self, snap: &MetricsSnapshot, phase: Phase) -> Duration {
+        self.modeled_net_time(snap, phase) + Duration::from_nanos(snap.max_compute_ns(phase))
+    }
+}
+
+/// One party's endpoints to the other two parties.
+pub struct Net {
+    pub id: usize,
+    tx: Vec<Option<Sender<Vec<u8>>>>,
+    rx: Vec<Option<Receiver<Vec<u8>>>>,
+    pub metrics: Arc<Metrics>,
+    /// Optional real sleep injection (wan_inference example): the receiver
+    /// sleeps RTT/2 per message plus bytes/bandwidth.
+    pub realtime: Option<NetParams>,
+}
+
+impl Net {
+    pub fn send_bytes(&self, to: usize, phase: Phase, payload: Vec<u8>) {
+        debug_assert_ne!(to, self.id);
+        self.metrics.record_send(self.id, to, phase, payload.len());
+        if let Some(p) = self.realtime {
+            let t = payload.len() as f64 * 8.0 / p.bandwidth_bps;
+            std::thread::sleep(Duration::from_secs_f64(t));
+        }
+        self.tx[to]
+            .as_ref()
+            .expect("no channel to self")
+            .send(payload)
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive; counts one protocol round for this party.
+    pub fn recv_bytes(&self, from: usize, phase: Phase) -> Vec<u8> {
+        debug_assert_ne!(from, self.id);
+        let payload = self.rx[from]
+            .as_ref()
+            .expect("no channel from self")
+            .recv()
+            .expect("peer hung up");
+        if let Some(p) = self.realtime {
+            std::thread::sleep(p.rtt / 2);
+        }
+        self.metrics.record_round(self.id, phase);
+        payload
+    }
+
+    pub fn send_ring(&self, to: usize, phase: Phase, ring: Ring, vals: &[u64]) {
+        self.send_bytes(to, phase, pack(ring, vals));
+    }
+
+    pub fn recv_ring(&self, from: usize, phase: Phase, ring: Ring, n: usize) -> Vec<u64> {
+        let bytes = self.recv_bytes(from, phase);
+        debug_assert_eq!(bytes.len(), ring.packed_len(n));
+        unpack(ring, &bytes, n)
+    }
+
+    /// Simultaneous exchange with one peer (both send, then both receive):
+    /// one protocol round.
+    pub fn exchange_ring(
+        &self,
+        peer: usize,
+        phase: Phase,
+        ring: Ring,
+        vals: &[u64],
+    ) -> Vec<u64> {
+        let n = vals.len();
+        self.send_ring(peer, phase, ring, vals);
+        self.recv_ring(peer, phase, ring, n)
+    }
+}
+
+/// Build the 3-party channel mesh. Returns per-party [`Net`]s sharing one
+/// [`Metrics`].
+pub fn build_mesh(metrics: Arc<Metrics>, realtime: Option<NetParams>) -> [Net; 3] {
+    // chans[from][to]
+    let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = vec![vec![None, None, None]; 3];
+    let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> = vec![
+        vec![None, None, None],
+        vec![None, None, None],
+        vec![None, None, None],
+    ];
+    for from in 0..3 {
+        for to in 0..3 {
+            if from == to {
+                continue;
+            }
+            let (tx, rx) = channel();
+            txs[from][to] = Some(tx);
+            rxs[to][from] = Some(rx);
+        }
+    }
+    let mut nets = Vec::new();
+    for (id, (tx, rx)) in txs.into_iter().zip(rxs).enumerate() {
+        nets.push(Net {
+            id,
+            tx,
+            rx,
+            metrics: Arc::clone(&metrics),
+            realtime,
+        });
+    }
+    nets.try_into().map_err(|_| ()).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::R4;
+
+    #[test]
+    fn mesh_roundtrip() {
+        let metrics = Arc::new(Metrics::new());
+        let [n0, n1, _n2] = build_mesh(Arc::clone(&metrics), None);
+        std::thread::scope(|s| {
+            s.spawn(move || n0.send_ring(1, Phase::Online, R4, &[1, 2, 3]));
+            let got = n1.recv_ring(0, Phase::Online, R4, 3);
+            assert_eq!(got, vec![1, 2, 3]);
+        });
+        let snap = metrics.snapshot();
+        assert_eq!(snap.total_bytes(Phase::Online), 2); // 3 nibbles -> 2 bytes
+        assert_eq!(snap.max_rounds(Phase::Online), 1);
+    }
+
+    #[test]
+    fn exchange_counts_one_round_each() {
+        let metrics = Arc::new(Metrics::new());
+        let [_n0, n1, n2] = build_mesh(Arc::clone(&metrics), None);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let got = n1.exchange_ring(2, Phase::Online, R4, &[5]);
+                assert_eq!(got, vec![7]);
+            });
+            let got = n2.exchange_ring(1, Phase::Online, R4, &[7]);
+            assert_eq!(got, vec![5]);
+        });
+        let snap = metrics.snapshot();
+        assert_eq!(snap.rounds[1][Phase::Online as usize], 1);
+        assert_eq!(snap.rounds[2][Phase::Online as usize], 1);
+    }
+
+    #[test]
+    fn wan_model_dominated_by_rtt() {
+        let metrics = Metrics::new();
+        metrics.record_round(1, Phase::Online);
+        metrics.record_round(1, Phase::Online);
+        metrics.record_send(1, 2, Phase::Online, 1000);
+        let snap = metrics.snapshot();
+        let t = NetParams::WAN.modeled_net_time(&snap, Phase::Online);
+        assert!(t >= Duration::from_millis(80), "{t:?}");
+        let t_lan = NetParams::LAN.modeled_net_time(&snap, Phase::Online);
+        assert!(t_lan < Duration::from_millis(1));
+    }
+}

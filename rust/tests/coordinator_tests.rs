@@ -1,0 +1,111 @@
+//! Coordinator/serving-layer integration tests: session reuse, batching,
+//! metrics accounting, failure handling.
+
+use ppq_bert::bench_harness::prepared_model;
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::weights::synth_input;
+use ppq_bert::transport::{NetParams, Phase};
+
+fn tiny_server(max_batch: usize) -> Coordinator {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let mut sc = ServerConfig::new(cfg);
+    sc.max_batch = max_batch;
+    Coordinator::start(sc, w)
+}
+
+#[test]
+fn serves_queue_in_fifo_order() {
+    let cfg = BertConfig::tiny();
+    let mut coord = tiny_server(8);
+    let ids: Vec<u64> = (0..5)
+        .map(|i| coord.submit(synth_input(&cfg, 50 + i)))
+        .collect();
+    let results = coord.run_batch();
+    assert_eq!(results.len(), 5);
+    assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), ids);
+    assert_eq!(coord.pending(), 0);
+    assert_eq!(coord.completed(), 5);
+    coord.shutdown();
+}
+
+#[test]
+fn batch_window_limits_drain() {
+    let cfg = BertConfig::tiny();
+    let mut coord = tiny_server(2);
+    for i in 0..5 {
+        coord.submit(synth_input(&cfg, i));
+    }
+    assert_eq!(coord.run_batch().len(), 2);
+    assert_eq!(coord.pending(), 3);
+    assert_eq!(coord.run_batch().len(), 2);
+    assert_eq!(coord.run_batch().len(), 1);
+    assert_eq!(coord.run_batch().len(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn per_request_metrics_are_deltas() {
+    let cfg = BertConfig::tiny();
+    let mut coord = tiny_server(8);
+    coord.submit(synth_input(&cfg, 1));
+    coord.submit(synth_input(&cfg, 2));
+    let results = coord.run_batch();
+    // Each request pays roughly the same online bytes; neither includes
+    // the one-time setup.
+    let (a, b) = (&results[0], &results[1]);
+    assert!(a.online_bytes > 0 && b.online_bytes > 0);
+    let ratio = a.online_bytes as f64 / b.online_bytes as f64;
+    assert!((0.8..1.25).contains(&ratio), "{ratio}");
+    assert!(a.offline_bytes > a.online_bytes); // offline dominates per request
+    coord.shutdown();
+}
+
+#[test]
+fn modeled_latency_orders_lan_below_wan() {
+    let cfg = BertConfig::tiny();
+    let (w, x) = prepared_model(cfg);
+    let run = |net: NetParams| {
+        let mut sc = ServerConfig::new(cfg);
+        sc.net = net;
+        let (w2, x2) = (
+            ppq_bert::model::weights::Weights {
+                cfg,
+                tensors: w.tensors.clone(),
+                scales: w.scales.clone(),
+            },
+            x.clone(),
+        );
+        let mut coord = Coordinator::start(sc, w2);
+        coord.submit(x2);
+        let r = coord.run_batch().remove(0);
+        coord.shutdown();
+        r
+    };
+    let lan = run(NetParams::LAN);
+    let wan = run(NetParams::WAN);
+    assert!(wan.online_modeled > lan.online_modeled * 5,
+            "wan {:?} lan {:?}", wan.online_modeled, lan.online_modeled);
+}
+
+#[test]
+fn metrics_report_is_populated() {
+    let cfg = BertConfig::tiny();
+    let mut coord = tiny_server(8);
+    coord.submit(synth_input(&cfg, 3));
+    coord.run_batch();
+    let report = coord.metrics_report();
+    assert!(report.contains("completed=1"), "{report}");
+    let snap = coord.snapshot();
+    assert!(snap.total_bytes(Phase::Setup) > 0);
+    assert!(snap.max_rounds(Phase::Online) > 0);
+    coord.shutdown();
+}
+
+#[test]
+#[should_panic(expected = "assertion")]
+fn rejects_wrong_input_shape() {
+    let mut coord = tiny_server(8);
+    coord.submit(vec![0i64; 3]); // wrong length
+}

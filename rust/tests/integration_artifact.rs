@@ -1,0 +1,137 @@
+//! Cross-layer integration: the AOT HLO artifact (L1 Pallas + L2 JAX,
+//! lowered by python) must agree with the Rust native oracle bit-exactly,
+//! closing the chain of trust:
+//!   pallas == jnp ref (pytest) == HLO artifact == rust native == MPC.
+//!
+//! These tests skip (pass trivially with a notice) when `make artifacts`
+//! has not been run.
+
+use std::path::PathBuf;
+
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::weights::{read_i32_file, Weights};
+use ppq_bert::runtime::native;
+use ppq_bert::runtime::xla::{artifacts_dir, I32Tensor, XlaModel};
+
+fn artifact(name: &str) -> Option<PathBuf> {
+    let p = artifacts_dir().join(name);
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: {} missing (run `make artifacts`)", p.display());
+        None
+    }
+}
+
+#[test]
+fn bert_tiny_artifact_matches_native_oracle() {
+    let (Some(hlo), Some(wpath), Some(inpath)) = (
+        artifact("bert_tiny.hlo.txt"),
+        artifact("bert_tiny.weights.bin"),
+        artifact("bert_tiny.input.bin"),
+    ) else {
+        return;
+    };
+    let w = Weights::load(&wpath).unwrap();
+    let cfg = w.cfg;
+    let (xshape, xdata) = read_i32_file(&inpath).unwrap();
+    assert_eq!(xshape, vec![cfg.seq_len, cfg.d_model]);
+
+    // Native oracle forward.
+    let (logits_native, h_native) = native::forward(&cfg, &w, &xdata);
+
+    // XLA artifact forward: inputs are (x4, *weights in param order).
+    let model = XlaModel::load(&hlo).unwrap();
+    let mut inputs = vec![I32Tensor::from_i64(xshape, &xdata)];
+    for li in 0..cfg.n_layers {
+        for p in BertConfig::layer_params() {
+            let t = w.tensor(&format!("layer{li}.{p}"));
+            inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+        }
+    }
+    let t = w.tensor("cls.w");
+    inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+
+    let outs = model.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 2, "expected (logits, hidden)");
+    let logits_xla: Vec<i64> = outs[0].data.iter().map(|&v| v as i64).collect();
+    let h_xla: Vec<i64> = outs[1].data.iter().map(|&v| v as i64).collect();
+
+    assert_eq!(logits_xla, logits_native, "logits: artifact != native");
+    assert_eq!(h_xla, h_native, "hidden: artifact != native");
+}
+
+#[test]
+fn bert_tiny_artifact_matches_python_expectation() {
+    // The .expect.bin sidecar pins the python-side output; the artifact
+    // must reproduce it (python wrote both, so this guards artifact/weights
+    // mismatch after partial rebuilds).
+    let (Some(hlo), Some(wpath), Some(inpath), Some(expath), Some(hidpath)) = (
+        artifact("bert_tiny.hlo.txt"),
+        artifact("bert_tiny.weights.bin"),
+        artifact("bert_tiny.input.bin"),
+        artifact("bert_tiny.expect.bin"),
+        artifact("bert_tiny.hidden.bin"),
+    ) else {
+        return;
+    };
+    let w = Weights::load(&wpath).unwrap();
+    let cfg = w.cfg;
+    let (xshape, xdata) = read_i32_file(&inpath).unwrap();
+    let (_, expect_logits) = read_i32_file(&expath).unwrap();
+    let (_, expect_hidden) = read_i32_file(&hidpath).unwrap();
+
+    let model = XlaModel::load(&hlo).unwrap();
+    let mut inputs = vec![I32Tensor::from_i64(xshape, &xdata)];
+    for li in 0..cfg.n_layers {
+        for p in BertConfig::layer_params() {
+            let t = w.tensor(&format!("layer{li}.{p}"));
+            inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+        }
+    }
+    let t = w.tensor("cls.w");
+    inputs.push(I32Tensor::from_i64(t.shape.clone(), &t.data));
+    let outs = model.run(&inputs).unwrap();
+
+    let logits: Vec<i64> = outs[0].data.iter().map(|&v| v as i64).collect();
+    let hidden: Vec<i64> = outs[1].data.iter().map(|&v| v as i64).collect();
+    assert_eq!(logits, expect_logits);
+    assert_eq!(hidden, expect_hidden);
+}
+
+#[test]
+fn fc_kernel_artifact_matches_native() {
+    let Some(hlo) = artifact("fc_quant.hlo.txt") else {
+        return;
+    };
+    // Shapes/scale pinned by aot.py: x[8,64], w[64,64], scale 64.
+    let (seq, d, scale) = (8usize, 64usize, 64i64);
+    let model = XlaModel::load(&hlo).unwrap();
+    let x: Vec<i64> = (0..seq * d).map(|i| ((i * 7) % 16) as i64 - 8).collect();
+    let wdata: Vec<i64> = (0..d * d).map(|i| if (i * 13) % 2 == 0 { 1 } else { -1 }).collect();
+    let outs = model
+        .run(&[
+            I32Tensor::from_i64(vec![seq, d], &x),
+            I32Tensor::from_i64(vec![d, d], &wdata),
+        ])
+        .unwrap();
+    let got: Vec<i64> = outs[0].data.iter().map(|&v| v as i64).collect();
+    let wt = ppq_bert::model::weights::Tensor { shape: vec![d, d], data: wdata };
+    let want = native::fc_quant(&x, seq, d, &wt, scale);
+    assert_eq!(got, want, "Pallas FC artifact != native fc_quant");
+}
+
+#[test]
+fn softmax_kernel_artifact_matches_native() {
+    let Some(hlo) = artifact("softmax_quant.hlo.txt") else {
+        return;
+    };
+    // Pinned by aot.py: x[8,8], sx = TINY.sm_sx = 0.5.
+    let (rows, n, sx) = (8usize, 8usize, 0.5f64);
+    let model = XlaModel::load(&hlo).unwrap();
+    let x: Vec<i64> = (0..rows * n).map(|i| ((i * 5) % 16) as i64 - 8).collect();
+    let outs = model.run(&[I32Tensor::from_i64(vec![rows, n], &x)]).unwrap();
+    let got: Vec<i64> = outs[0].data.iter().map(|&v| v as i64).collect();
+    let want = native::softmax_quant(&x, rows, n, sx);
+    assert_eq!(got, want, "Pallas softmax artifact != native softmax_quant");
+}

@@ -1,0 +1,272 @@
+//! Property-based tests over the protocol suite (in-house mini framework,
+//! rust/src/testing — the proptest crate is unavailable offline).
+//!
+//! Each property runs many seeded random cases across a 3-party session
+//! and checks a protocol invariant end to end.
+
+use ppq_bert::core::ring::{Ring, R16, R4, R6, R8};
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::prop_assert;
+use ppq_bert::protocols::convert::{convert_to_rss, extend_ring};
+use ppq_bert::protocols::lut::{lut2_eval, lut_eval, LutTable, LutTable2};
+use ppq_bert::protocols::matmul::{rss_matmul_full, rss_matmul_trc};
+use ppq_bert::protocols::max::{max_rows, MaxStrategy};
+use ppq_bert::protocols::softmax::{softmax_rows, SoftmaxTables};
+use ppq_bert::protocols::tables;
+use ppq_bert::sharing::additive::{reveal2, share2};
+use ppq_bert::sharing::rss::{reveal_rss, share_rss};
+use ppq_bert::testing::check;
+use ppq_bert::transport::Phase;
+
+const CASES: u64 = 12;
+
+#[test]
+fn prop_share2_reveal_roundtrip() {
+    check("share2 o reveal == id (any ring, any owner)", 30, |g| {
+        let ring = *g.pick(&[R4, R8, R16, Ring::new(32)]);
+        let owner = g.usize_in(0, 2);
+        let n = g.usize_in(1, 40);
+        let secret = g.ring_vec(ring, n);
+        let sc = secret.clone();
+        let ([_, r1, r2], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let sh = share2(ctx, owner, ring, if ctx.id == owner { Some(&sc) } else { None }, sc.len());
+            reveal2(ctx, &sh)
+        });
+        prop_assert!(r1 == secret && r2 == secret, "owner {owner} ring {ring:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rss_linearity() {
+    check("RSS add/scale homomorphism", CASES, |g| {
+        let ring = *g.pick(&[R16, Ring::new(32)]);
+        let n = g.usize_in(1, 16);
+        let a = g.ring_vec(ring, n);
+        let b = g.ring_vec(ring, n);
+        let c = g.ring_elem(ring);
+        let (ac, bc) = (a.clone(), b.clone());
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share_rss(ctx, P0, ring, if ctx.id == P0 { Some(&ac) } else { None }, ac.len());
+            let y = share_rss(ctx, P1, ring, if ctx.id == P1 { Some(&bc) } else { None }, bc.len());
+            reveal_rss(ctx, &x.add(&y).scale(c))
+        });
+        for i in 0..n {
+            let want = ring.mul(ring.add(a[i], b[i]), c);
+            prop_assert!(outs[0][i] == want, "i {i}: {} != {want}", outs[0][i]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lut_computes_any_function() {
+    check("Pi_look == f for random tables", CASES, |g| {
+        let inr = *g.pick(&[R4, R6, R8]);
+        let outr = *g.pick(&[R4, R8, R16]);
+        let table: Vec<u64> = (0..inr.size()).map(|_| g.ring_elem(outr)).collect();
+        let n = g.usize_in(1, 30);
+        let xs = g.ring_vec(inr, n);
+        let (tc, xc) = (table.clone(), xs.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable { in_ring: inr, out_ring: outr, entries: tc.clone() };
+            let x = share2(ctx, P0, inr, if ctx.id == P0 { Some(&xc) } else { None }, xc.len());
+            reveal2(ctx, &lut_eval(ctx, &t, &x))
+        });
+        for (i, &x) in xs.iter().enumerate() {
+            prop_assert!(r1[i] == table[x as usize], "x {x}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lut2_matches_single_lut_composition() {
+    check("Pi_look^{b1,b2}(x,y) == T[x||y]", CASES, |g| {
+        let xr = *g.pick(&[R4, R6]);
+        let yr = R4;
+        let outr = R16;
+        let table: Vec<u64> =
+            (0..xr.size() * yr.size()).map(|_| g.ring_elem(outr)).collect();
+        let n = g.usize_in(1, 20);
+        let xs = g.ring_vec(xr, n);
+        let ys = g.ring_vec(yr, n);
+        let (tc, xc, yc) = (table.clone(), xs.clone(), ys.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable2 { x_ring: xr, y_ring: yr, out_ring: outr, entries: tc.clone() };
+            let x = share2(ctx, P0, xr, if ctx.id == P0 { Some(&xc) } else { None }, xc.len());
+            let y = share2(ctx, P0, yr, if ctx.id == P0 { Some(&yc) } else { None }, yc.len());
+            reveal2(ctx, &lut2_eval(ctx, &t, &x, &y))
+        });
+        for i in 0..n {
+            let want = table[(xs[i] as usize) * yr.size() + ys[i] as usize];
+            prop_assert!(r1[i] == want, "i {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_convert_preserves_signed_value() {
+    check("Pi_convert^{l',l} == sign-extension", CASES, |g| {
+        let from = *g.pick(&[R4, R6, R8]);
+        let to = *g.pick(&[R16, Ring::new(32)]);
+        let n = g.usize_in(1, 25);
+        let vals: Vec<i64> = (0..n)
+            .map(|_| g.i64_in(-(1 << (from.bits() - 1)), (1 << (from.bits() - 1)) - 1))
+            .collect();
+        let enc: Vec<u64> = vals.iter().map(|&v| from.encode(v)).collect();
+        let vc = vals.clone();
+        let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, from, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+            reveal_rss(ctx, &convert_to_rss(ctx, &x, to, true))
+        });
+        for i in 0..n {
+            prop_assert!(to.decode(outs[0][i]) == vc[i], "i {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmul_full_exact() {
+    check("RSS matmul == integer matmul (mod 2^16)", CASES, |g| {
+        let rows = g.usize_in(1, 4);
+        let k = g.usize_in(1, 12);
+        let m = g.usize_in(1, 4);
+        let x = g.signed_vec(4, rows * k);
+        let w = g.signed_vec(8, m * k);
+        let xe: Vec<u64> = x.iter().map(|&v| R16.encode(v)).collect();
+        let we: Vec<u64> = w.iter().map(|&v| R16.encode(v)).collect();
+        let (xc, wc) = (x.clone(), w.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let xs = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&xe) } else { None }, xe.len());
+            let ws = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&we) } else { None }, we.len());
+            reveal2(ctx, &rss_matmul_full(ctx, &xs, &ws, rows, k, m))
+        });
+        for r in 0..rows {
+            for o in 0..m {
+                let acc: i64 = (0..k).map(|j| xc[r * k + j] * wc[o * k + j]).sum();
+                prop_assert!(r1[r * m + o] == R16.encode(acc), "r{r} o{o}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alg3_trc_at_most_one_carry() {
+    check("Alg. 3 trc deviates by at most -1 LSB", CASES, |g| {
+        let rows = g.usize_in(1, 3);
+        let k = g.usize_in(1, 16);
+        let m = g.usize_in(1, 3);
+        let scale = g.i64_in(1, 512);
+        let x = g.signed_vec(4, rows * k);
+        let w: Vec<i64> = (0..m * k).map(|_| if g.u64_below(2) == 0 { -1 } else { 1 }).collect();
+        let xe: Vec<u64> = x.iter().map(|&v| R16.encode(v)).collect();
+        let we: Vec<u64> = w.iter().map(|&v| R16.encode(v * scale)).collect();
+        let (xc, wc) = (x.clone(), w.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let xs = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&xe) } else { None }, xe.len());
+            let ws = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&we) } else { None }, we.len());
+            reveal2(ctx, &rss_matmul_trc(ctx, &xs, &ws, rows, k, m, 4))
+        });
+        for r in 0..rows {
+            for o in 0..m {
+                let acc: i64 = (0..k).map(|j| xc[r * k + j] * wc[o * k + j] * scale).sum();
+                let exact = ((acc as u64) & 0xFFFF) >> 12;
+                let got = r1[r * m + o];
+                let deficit = (exact + 16 - got) % 16;
+                prop_assert!(deficit <= 1, "r{r} o{o} got {got} exact {exact}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_max_equals_plain_max() {
+    check("Pi_max == max (both strategies)", CASES, |g| {
+        let rows = g.usize_in(1, 3);
+        let n = g.usize_in(1, 12);
+        let vals = g.signed_vec(4, rows * n);
+        let strat = *g.pick(&[MaxStrategy::Tournament, MaxStrategy::Linear]);
+        let enc: Vec<u64> = vals.iter().map(|&v| R4.encode(v)).collect();
+        let vc = vals.clone();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+            reveal2(ctx, &max_rows(ctx, &x, rows, n, strat))
+        });
+        for r in 0..rows {
+            let want = *vc[r * n..(r + 1) * n].iter().max().unwrap();
+            prop_assert!(R4.decode(r1[r]) == want, "row {r} strat {strat:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_bit_exact_vs_oracle() {
+    check("secure softmax == plaintext oracle (bit-exact)", CASES, |g| {
+        let rows = g.usize_in(1, 3);
+        let n = g.usize_in(2, 12);
+        let sx = *g.pick(&[0.25f64, 0.5, 1.0]);
+        let vals = g.signed_vec(4, rows * n);
+        let enc: Vec<u64> = vals.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = SoftmaxTables::new(sx);
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&enc) } else { None }, enc.len());
+            reveal2(ctx, &softmax_rows(ctx, &t, &x, rows, n, MaxStrategy::Tournament))
+        });
+        let want = ppq_bert::runtime::native::softmax_quant(&vals, rows, n, sx);
+        for i in 0..rows * n {
+            prop_assert!(r1[i] as i64 == want[i], "i {i}: {} != {}", r1[i], want[i]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_extension_tables_consistent() {
+    check("extend_ring(signed) == sign_extend everywhere", CASES, |g| {
+        let n = g.usize_in(1, 20);
+        let vals = g.ring_vec(R4, n);
+        let vc = vals.clone();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share2(ctx, P0, R4, if ctx.id == P0 { Some(&vc) } else { None }, vc.len());
+            reveal2(ctx, &extend_ring(ctx, &x, R16, true))
+        });
+        for (i, &v) in vals.iter().enumerate() {
+            let want = ppq_bert::core::ring::sign_extend(v, R4, R16);
+            prop_assert!(r1[i] == want, "i {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_comm_independent_of_table_content() {
+    // Security-adjacent invariant: online bytes depend only on shapes,
+    // never on secret table contents or inputs.
+    check("online comm is input-independent", 6, |g| {
+        let n = g.usize_in(1, 30);
+        let xs1 = g.ring_vec(R4, n);
+        let xs2 = g.ring_vec(R4, n);
+        let run = |xs: Vec<u64>| {
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let t = tables::exp_table(0.5);
+                let x = ctx.with_phase(Phase::Setup, |c| {
+                    share2(c, P0, R4, if c.id == P0 { Some(&xs) } else { None }, xs.len())
+                });
+                lut_eval(ctx, &t, &x);
+            });
+            (
+                snap.total_bytes(Phase::Online),
+                snap.total_bytes(Phase::Offline),
+                snap.max_rounds(Phase::Online),
+            )
+        };
+        prop_assert!(run(xs1) == run(xs2), "cost leaked input dependence");
+        Ok(())
+    });
+}
