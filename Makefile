@@ -1,0 +1,20 @@
+# Build the python AOT artifacts the Rust runtime/tests consume
+# (rust/tests/integration_artifact.rs skips until these exist; running
+# them additionally needs `cargo ... --features xla`).
+.PHONY: artifacts test bench
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+test:
+	cargo build --release
+	cargo test -q
+	python3 -m pytest python/tests -q
+
+bench:
+	cargo bench --bench micro
+	cargo bench --bench batching
+	cargo bench --bench table2
+	cargo bench --bench table3
+	cargo bench --bench table4
+	cargo bench --bench fig5

@@ -1,0 +1,82 @@
+//! Batch-size sweep: cross-request round amortization in the serving
+//! coordinator.
+//!
+//! For each batch size B the coordinator drains one window of B requests
+//! as a single batched MPC pass. The headline invariant is that the
+//! window's measured online rounds are CONSTANT in B (they equal the
+//! B = 1 round count), so rounds/request — the quantity that dominates
+//! WAN latency — falls as 1/B, while online bytes/request stay flat
+//! (bytes scale linearly with B). The printed modeled latencies show what
+//! that amortization buys per request under LAN and WAN.
+//!
+//!   cargo bench --bench batching
+
+use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, Table};
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::transport::{NetParams, Phase};
+
+fn main() {
+    let cfg = BertConfig::tiny();
+    let mut t = Table::new(&[
+        "batch",
+        "window rounds",
+        "rounds/req",
+        "online MB/req",
+        "LAN window",
+        "LAN /req",
+        "WAN window",
+        "WAN /req",
+    ]);
+
+    let mut base_rounds = None;
+    for batch in [1usize, 2, 4, 8] {
+        // Fresh coordinator per sweep point so the session meter starts
+        // clean; with exactly one window served, the cumulative Online
+        // meter IS the window's delta.
+        let (w, _) = prepared_model(cfg);
+        let mut sc = ServerConfig::new(cfg);
+        sc.max_batch = batch;
+        let mut coord = Coordinator::start(sc, w);
+        for x in prepared_inputs(&cfg, batch) {
+            coord.submit(x);
+        }
+        let results = coord.run_batch();
+        assert_eq!(results.len(), batch);
+        let r0 = &results[0];
+        assert_eq!(r0.batch_size, batch);
+
+        let rounds = r0.window_online_rounds;
+        match base_rounds {
+            None => base_rounds = Some(rounds),
+            Some(b1) => assert_eq!(
+                rounds, b1,
+                "online rounds must be constant in batch size (B=1: {b1}, B={batch}: {rounds})"
+            ),
+        }
+
+        let online_mb_req: f64 = results
+            .iter()
+            .map(|r| r.online_bytes as f64 / 1048576.0)
+            .sum::<f64>()
+            / batch as f64;
+        let snap = coord.snapshot();
+        let lan_window = NetParams::LAN.modeled_phase_time(&snap, Phase::Online);
+        let wan_window = NetParams::WAN.modeled_phase_time(&snap, Phase::Online);
+        t.row(vec![
+            batch.to_string(),
+            rounds.to_string(),
+            format!("{:.1}", rounds as f64 / batch as f64),
+            format!("{online_mb_req:.3}"),
+            fmt_dur(lan_window),
+            fmt_dur(lan_window / batch as u32),
+            fmt_dur(wan_window),
+            fmt_dur(wan_window / batch as u32),
+        ]);
+        coord.shutdown();
+    }
+    t.print(
+        "cross-request batching: online rounds/window constant in B -> rounds/request fall 1/B \
+         (BERT-tiny; WAN = 40 ms RTT, where round amortization dominates)",
+    );
+}

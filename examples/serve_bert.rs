@@ -56,7 +56,8 @@ fn main() {
     println!("router: active buckets after submit: {:?}", router.active_buckets());
 
     let mut table = Table::new(&[
-        "req", "tokens", "bucket", "class-logits", "compute", "LAN online", "online MB",
+        "req", "tokens", "bucket", "batch", "class-logits", "window compute", "LAN online",
+        "online MB/req",
     ]);
     let t_serve = Instant::now();
     let mut served = 0usize;
@@ -73,6 +74,7 @@ fn main() {
                 format!("{bucket}/{}", r.id),
                 len.to_string(),
                 bucket.to_string(),
+                r.batch_size.to_string(),
                 format!("{:?}", r.logits),
                 fmt_dur(r.compute),
                 fmt_dur(r.online_modeled),
@@ -82,7 +84,10 @@ fn main() {
         }
     }
     let wall = t_serve.elapsed();
-    table.print("served requests (token streams through embedding + router)");
+    table.print(
+        "served requests (token streams through embedding + router; each bucket window \
+         is ONE batched MPC pass — rounds amortize across its requests)",
+    );
 
     latencies.sort();
     println!(

@@ -1,0 +1,8 @@
+"""Put python/ (the directory holding the `compile` package) on the
+import path so the tests run from any working directory without an
+install step."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

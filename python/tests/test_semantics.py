@@ -2,6 +2,11 @@
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+# hypothesis is an optional dev dependency (absent from the offline
+# image); skip this module rather than fail collection without it.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

@@ -37,6 +37,12 @@ pub fn prepared_model(cfg: BertConfig) -> (Weights, Vec<i64>) {
     (w, x)
 }
 
+/// `n` distinct synthetic requests for a config (batch-sweep benches and
+/// the batching integration tests).
+pub fn prepared_inputs(cfg: &BertConfig, n: usize) -> Vec<Vec<i64>> {
+    (0..n).map(|i| synth_input(cfg, 11 + i as u64)).collect()
+}
+
 /// Thread-scaling model for the single-core container (DESIGN.md
 /// §Substitutions #3): measured single-thread compute, scaled by an
 /// Amdahl curve calibrated to the paper's own 1→20-thread improvement

@@ -19,7 +19,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::core::error::{bail, Context, Result};
 
 use crate::model::config::BertConfig;
 use crate::party::SessionCfg;

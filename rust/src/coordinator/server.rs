@@ -1,4 +1,14 @@
 //! Request queue + dynamic batcher + metrics reporting.
+//!
+//! The batcher drains up to `max_batch` queued requests per window and
+//! evaluates the whole window as ONE batched MPC pass
+//! ([`Session::infer_batch`]): online rounds per window equal the
+//! single-request round count, so the per-request round cost falls by the
+//! window size while bytes/compute scale linearly. Metrics are therefore
+//! *measured per window* and attributed to requests as amortized shares —
+//! per-request deltas of a shared meter are meaningless once requests
+//! share rounds (the old `sub_snap`-per-request accounting double-counted
+//! the window's rounds onto its first request).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -17,7 +27,7 @@ pub struct ServerConfig {
     pub cfg: BertConfig,
     pub session: SessionCfg,
     /// Requests per batch window (the batcher drains up to this many
-    /// queued requests before yielding results).
+    /// queued requests into one batched MPC pass).
     pub max_batch: usize,
     /// Network model used for reported (modeled) latency.
     pub net: NetParams,
@@ -36,20 +46,31 @@ impl ServerConfig {
     }
 }
 
-/// Completed request with measured + modeled costs.
+/// Completed request with measured window costs and amortized shares.
 #[derive(Debug, Clone)]
 pub struct InferenceResult {
     pub id: u64,
     pub logits: Vec<i64>,
-    /// Wall-clock compute time of the MPC evaluation (in-process).
+    /// Wall-clock compute time of the window's MPC evaluation
+    /// (in-process). Requests in a window complete together, so every
+    /// request in the window reports the same value.
     pub compute: Duration,
-    /// Modeled end-to-end latency under the configured network (compute +
-    /// rounds x RTT + bytes/bandwidth), split by phase.
+    /// Modeled end-to-end latency of the window under the configured
+    /// network (compute + rounds x RTT + bytes/bandwidth), split by
+    /// phase. This is the latency each request experienced.
     pub offline_modeled: Duration,
     pub online_modeled: Duration,
-    /// Communication this request added (bytes).
+    /// This request's amortized share of the window's communication
+    /// (window bytes / window size; the remainder lands on the first
+    /// request so the shares sum exactly to the window total).
     pub online_bytes: u64,
     pub offline_bytes: u64,
+    /// How many requests shared this window (1 = unbatched).
+    pub batch_size: usize,
+    /// Measured online rounds of the whole window — constant in
+    /// `batch_size`, which is exactly the amortization: rounds/request is
+    /// `window_online_rounds / batch_size`.
+    pub window_online_rounds: u64,
 }
 
 /// The serving coordinator: queue in, batched MPC evaluation out.
@@ -59,6 +80,7 @@ pub struct Coordinator {
     queue: VecDeque<(u64, Vec<i64>)>,
     next_id: u64,
     completed: u64,
+    windows: u64,
     last_snap: MetricsSnapshot,
 }
 
@@ -74,6 +96,7 @@ impl Coordinator {
             queue: VecDeque::new(),
             next_id: 0,
             completed: 0,
+            windows: 0,
             last_snap,
         }
     }
@@ -91,28 +114,55 @@ impl Coordinator {
         self.queue.len()
     }
 
-    /// Drain one batch window, evaluating up to `max_batch` requests.
+    /// Drain one batch window: up to `max_batch` requests evaluated as a
+    /// single batched MPC pass, with window-measured metrics attributed as
+    /// per-request amortized shares.
     pub fn run_batch(&mut self) -> Vec<InferenceResult> {
         let n = self.queue.len().min(self.cfg.max_batch);
-        let mut out = Vec::with_capacity(n);
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut ids = Vec::with_capacity(n);
+        let mut inputs = Vec::with_capacity(n);
         for _ in 0..n {
             let (id, input) = self.queue.pop_front().unwrap();
-            let t0 = Instant::now();
-            let logits = self.session.infer(&input);
-            let compute = t0.elapsed();
-            // Per-request deltas from the session meter.
-            let snap = self.session.snapshot();
-            let mut delta = snap.clone();
-            sub_snap(&mut delta, &self.last_snap);
-            self.last_snap = snap;
+            ids.push(id);
+            inputs.push(input);
+        }
+        let t0 = Instant::now();
+        let logits = self.session.infer_batch(&inputs);
+        let compute = t0.elapsed();
+        debug_assert_eq!(logits.len(), n);
+
+        // Window-level delta from the session meter.
+        let snap = self.session.snapshot();
+        let mut delta = snap.clone();
+        sub_snap(&mut delta, &self.last_snap);
+        self.last_snap = snap;
+        self.windows += 1;
+
+        let offline_modeled = self.cfg.net.modeled_phase_time(&delta, Phase::Offline);
+        let online_modeled = self.cfg.net.modeled_phase_time(&delta, Phase::Online);
+        let window_online = delta.total_bytes(Phase::Online);
+        let window_offline = delta.total_bytes(Phase::Offline);
+        let window_rounds = delta.max_rounds(Phase::Online);
+
+        let share = |total: u64, i: usize| -> u64 {
+            // equal shares; remainder on the first request so Σ == total
+            total / n as u64 + if i == 0 { total % n as u64 } else { 0 }
+        };
+        let mut out = Vec::with_capacity(n);
+        for (i, (id, l)) in ids.into_iter().zip(logits).enumerate() {
             out.push(InferenceResult {
                 id,
-                logits,
+                logits: l,
                 compute,
-                offline_modeled: self.cfg.net.modeled_phase_time(&delta, Phase::Offline),
-                online_modeled: self.cfg.net.modeled_phase_time(&delta, Phase::Online),
-                online_bytes: delta.total_bytes(Phase::Online),
-                offline_bytes: delta.total_bytes(Phase::Offline),
+                offline_modeled,
+                online_modeled,
+                online_bytes: share(window_online, i),
+                offline_bytes: share(window_offline, i),
+                batch_size: n,
+                window_online_rounds: window_rounds,
             });
             self.completed += 1;
         }
@@ -123,6 +173,11 @@ impl Coordinator {
         self.completed
     }
 
+    /// Batch windows evaluated so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         self.session.snapshot()
     }
@@ -130,10 +185,17 @@ impl Coordinator {
     /// Human-readable metrics dump (the `repro serve` status line).
     pub fn metrics_report(&self) -> String {
         let s = self.snapshot();
+        let amort = if self.windows > 0 {
+            self.completed as f64 / self.windows as f64
+        } else {
+            0.0
+        };
         format!(
-            "completed={} pending={} setup_mb={:.2} offline_mb={:.2} online_mb={:.2} online_rounds={}",
+            "completed={} pending={} windows={} avg_batch={:.2} setup_mb={:.2} offline_mb={:.2} online_mb={:.2} online_rounds={}",
             self.completed,
             self.queue.len(),
+            self.windows,
+            amort,
             s.total_mb(Phase::Setup),
             s.total_mb(Phase::Offline),
             s.total_mb(Phase::Online),

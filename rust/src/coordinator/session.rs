@@ -1,11 +1,13 @@
-//! A long-lived 3-party MPC session: model setup once, many inferences.
+//! A long-lived 3-party MPC session: model setup once, many inferences —
+//! served in cross-request batches so a window of queued requests pays
+//! one round budget ([`crate::model::secure::secure_infer_batch`]).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::model::config::BertConfig;
-use crate::model::secure::{secure_infer, SecureBert};
+use crate::model::secure::{secure_infer_batch, SecureBert};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
@@ -14,15 +16,24 @@ use crate::transport::{build_mesh, Metrics, MetricsSnapshot};
 use crate::transport::Phase;
 
 enum Cmd {
-    /// Run one inference; only P1's command carries the input.
-    Infer { input: Option<Vec<i64>> },
+    /// Run one batched inference over `batch` sequences; only P1's command
+    /// carries the inputs (the batch size is public serving metadata all
+    /// parties need to shape the pass).
+    InferBatch {
+        batch: usize,
+        inputs: Option<Vec<Vec<i64>>>,
+    },
     Shutdown,
 }
 
 /// Handle to a running 3-party session.
 pub struct Session {
     cmd_tx: Vec<Sender<Cmd>>,
-    logits_rx: Receiver<Vec<i64>>,
+    logits_rx: Receiver<Vec<Vec<i64>>>,
+    /// Per-command completion acks from all three parties: `infer_batch`
+    /// waits for them so the session meter has quiesced before the
+    /// coordinator reads the window's delta.
+    done_rx: Receiver<()>,
     metrics: Arc<Metrics>,
     handles: Vec<JoinHandle<()>>,
     pub cfg: BertConfig,
@@ -39,6 +50,7 @@ impl Session {
         let metrics = Arc::new(Metrics::new());
         let nets = build_mesh(Arc::clone(&metrics), scfg.realtime);
         let (logits_tx, logits_rx) = channel();
+        let (done_tx, done_rx) = channel();
         let mut cmd_tx = Vec::new();
         let mut handles = Vec::new();
         let weights = Arc::new(weights);
@@ -48,6 +60,7 @@ impl Session {
             cmd_tx.push(tx);
             let weights = Arc::clone(&weights);
             let logits_tx = logits_tx.clone();
+            let done_tx = done_tx.clone();
             handles.push(std::thread::spawn(move || {
                 let ctx = make_ctx(id, net, scfg);
                 let w = if id == P0 { Some(&*weights) } else { None };
@@ -55,11 +68,20 @@ impl Session {
                 model.max_strategy = max_strategy;
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
-                        Cmd::Infer { input } => {
-                            let (logits, _) = secure_infer(&ctx, &model, input.as_deref());
+                        Cmd::InferBatch { batch, inputs } => {
+                            // Drop the queue-idle gap spent blocked in
+                            // recv() so it is not billed as phase compute.
+                            ctx.reset_timer();
+                            let (logits, _) =
+                                secure_infer_batch(&ctx, &model, batch, inputs.as_deref());
                             if id == P1 {
                                 let _ = logits_tx.send(logits);
                             }
+                            // Attribute the window's trailing wall time to
+                            // its phase before acking, so the coordinator's
+                            // per-window delta is complete.
+                            ctx.flush_timer();
+                            let _ = done_tx.send(());
                         }
                         Cmd::Shutdown => break,
                     }
@@ -67,19 +89,36 @@ impl Session {
                 ctx.flush_timer();
             }));
         }
-        Session { cmd_tx, logits_rx, metrics, handles, cfg }
+        Session { cmd_tx, logits_rx, done_rx, metrics, handles, cfg }
     }
 
-    /// Run one inference (blocking); returns the revealed logits.
-    pub fn infer(&self, input: &[i64]) -> Vec<i64> {
-        assert_eq!(input.len(), self.cfg.seq_len * self.cfg.d_model);
+    /// Run one batched inference (blocking): the whole window is evaluated
+    /// in a single MPC pass; returns the revealed logits per request, in
+    /// submission order.
+    pub fn infer_batch(&self, inputs: &[Vec<i64>]) -> Vec<Vec<i64>> {
+        assert!(!inputs.is_empty(), "empty batch");
+        for input in inputs {
+            assert_eq!(input.len(), self.cfg.seq_len * self.cfg.d_model);
+        }
         for (id, tx) in self.cmd_tx.iter().enumerate() {
-            let cmd = Cmd::Infer {
-                input: if id == P1 { Some(input.to_vec()) } else { None },
+            let cmd = Cmd::InferBatch {
+                batch: inputs.len(),
+                inputs: if id == P1 { Some(inputs.to_vec()) } else { None },
             };
             tx.send(cmd).expect("party thread gone");
         }
+        // Wait for all three parties so the meter has quiesced; the
+        // logits arrive from P1 independently.
+        for _ in 0..3 {
+            self.done_rx.recv().expect("party thread gone");
+        }
         self.logits_rx.recv().expect("party thread gone")
+    }
+
+    /// Run one single-request inference (blocking); returns the revealed
+    /// logits. Equivalent to a batch of one.
+    pub fn infer(&self, input: &[i64]) -> Vec<i64> {
+        self.infer_batch(&[input.to_vec()]).pop().unwrap()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -106,13 +145,17 @@ mod tests {
     use crate::model::weights::synth_input;
     use crate::runtime::native;
 
-    #[test]
-    fn session_serves_multiple_inferences() {
+    fn tiny_session() -> (BertConfig, Session) {
         let cfg = BertConfig::tiny();
         let mut w = Weights::synth(cfg, 42);
         native::calibrate(&cfg, &mut w, &synth_input(&cfg, 5));
         let sess = Session::start(cfg, w, SessionCfg::default(), MaxStrategy::Tournament);
+        (cfg, sess)
+    }
 
+    #[test]
+    fn session_serves_multiple_inferences() {
+        let (cfg, sess) = tiny_session();
         let x1 = synth_input(&cfg, 11);
         let l1a = sess.infer(&x1);
         let l1b = sess.infer(&x1);
@@ -126,6 +169,26 @@ mod tests {
         let snap = sess.snapshot();
         assert!(snap.total_bytes(Phase::Setup) > 0);
         assert!(snap.total_bytes(Phase::Online) > 0);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn session_serves_batched_windows() {
+        let (cfg, sess) = tiny_session();
+        let inputs: Vec<Vec<i64>> = (0..3).map(|i| synth_input(&cfg, 20 + i)).collect();
+        let batched = sess.infer_batch(&inputs);
+        assert_eq!(batched.len(), 3);
+        for (i, logits) in batched.iter().enumerate() {
+            assert_eq!(logits.len(), cfg.n_classes, "request {i}");
+            // each request's logits track its own single-request run
+            let single = sess.infer(&inputs[i]);
+            for (a, b) in logits.iter().zip(&single) {
+                assert!(
+                    (a - b).abs() <= cfg.scale_cls * 2 * cfg.d_model as i64,
+                    "request {i}: batched {logits:?} vs single {single:?}"
+                );
+            }
+        }
         sess.shutdown();
     }
 }

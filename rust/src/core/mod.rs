@@ -1,5 +1,7 @@
-//! Substrate: ring arithmetic, PRG, wire packing, data-parallel helpers.
+//! Substrate: ring arithmetic, PRG, wire packing, error plumbing,
+//! data-parallel helpers.
 
+pub mod error;
 pub mod pack;
 pub mod pool;
 pub mod prg;

@@ -1,55 +1,133 @@
-//! AES-128-CTR pseudorandom generator for correlated randomness.
+//! ChaCha20-CTR pseudorandom generator for correlated randomness.
 //!
 //! Pairwise shared seeds implement the paper's `Π_share` common-seed trick:
 //! when two parties hold the same [`Prg`] and draw in the same order, they
 //! generate identical "shared randomness" with zero communication.
-
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes128;
+//!
+//! The paper's deployment uses AES-128-CTR; the `aes`/`sha2` crates are
+//! not in the offline registry, so the stream cipher is an in-tree
+//! ChaCha20 (RFC 8439 block function, 64-bit counter variant) and seed
+//! derivation mixes the domain-separation label into the nonce/counter
+//! via FNV-1a instead of SHA-256 (DESIGN.md §Substitutions #7). Both are
+//! deterministic, which is all the simulation's correctness and metering
+//! rely on; swap in AES-NI for a hardened deployment.
 
 use super::ring::Ring;
 
-/// Deterministic AES-CTR stream.
+const CHACHA_CONST: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+fn chacha20_block(key: &[u32; 8], counter: u64, nonce: &[u32; 2], out: &mut [u8; 64]) {
+    let mut init = [0u32; 16];
+    init[..4].copy_from_slice(&CHACHA_CONST);
+    init[4..12].copy_from_slice(key);
+    init[12] = counter as u32;
+    init[13] = (counter >> 32) as u32;
+    init[14] = nonce[0];
+    init[15] = nonce[1];
+    let mut s = init;
+    for _ in 0..10 {
+        // column round
+        quarter_round(&mut s, 0, 4, 8, 12);
+        quarter_round(&mut s, 1, 5, 9, 13);
+        quarter_round(&mut s, 2, 6, 10, 14);
+        quarter_round(&mut s, 3, 7, 11, 15);
+        // diagonal round
+        quarter_round(&mut s, 0, 5, 10, 15);
+        quarter_round(&mut s, 1, 6, 11, 12);
+        quarter_round(&mut s, 2, 7, 8, 13);
+        quarter_round(&mut s, 3, 4, 9, 14);
+    }
+    for (i, w) in s.iter().enumerate() {
+        let v = w.wrapping_add(init[i]);
+        out[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn key_words(seed: [u8; 16]) -> [u32; 8] {
+    // 128-bit seed repeated into the 256-bit key slot, still under the
+    // 32-byte-key ("expand 32-byte k") constant. NOTE: this is NOT the
+    // classic ChaCha 128-bit-key mode — that mode uses the distinct
+    // "expand 16-byte k" (tau) constant to domain-separate the repeated
+    // layout. This is a nonstandard deterministic construction (injective
+    // in the seed, which is all the simulation needs); a drop-in external
+    // ChaCha configured for 128-bit keys would NOT produce this stream.
+    let mut k = [0u32; 8];
+    for i in 0..4 {
+        let w = u32::from_le_bytes(seed[i * 4..i * 4 + 4].try_into().unwrap());
+        k[i] = w;
+        k[i + 4] = w;
+    }
+    k
+}
+
+fn fnv1a64(bytes: &[u8], basis: u64) -> u64 {
+    let mut h = basis;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Deterministic ChaCha20-CTR stream.
 pub struct Prg {
-    cipher: Aes128,
-    counter: u128,
-    buf: [u8; 16],
+    key: [u32; 8],
+    counter: u64,
+    nonce: [u32; 2],
+    buf: [u8; 64],
     used: usize,
 }
 
 impl Prg {
     pub fn new(seed: [u8; 16]) -> Self {
         Prg {
-            cipher: Aes128::new(&seed.into()),
+            key: key_words(seed),
             counter: 0,
-            buf: [0u8; 16],
-            used: 16,
+            nonce: [0, 0],
+            buf: [0u8; 64],
+            used: 64,
         }
     }
 
-    /// Derive a child PRG with a domain-separation label.
+    /// Derive a child PRG with a domain-separation label: the label is
+    /// folded into the nonce and starting counter of a one-block keystream
+    /// whose first 16 bytes become the child seed.
     pub fn derive(seed: [u8; 16], label: &str) -> Self {
-        use sha2::{Digest, Sha256};
-        let mut h = Sha256::new();
-        h.update(seed);
-        h.update(label.as_bytes());
-        let d = h.finalize();
+        let h1 = fnv1a64(label.as_bytes(), 0xcbf2_9ce4_8422_2325);
+        let h2 = fnv1a64(label.as_bytes(), 0x8422_2325_cbf2_9ce4);
+        let mut block = [0u8; 64];
+        chacha20_block(
+            &key_words(seed),
+            h1,
+            &[h2 as u32, (h2 >> 32) as u32],
+            &mut block,
+        );
         let mut s = [0u8; 16];
-        s.copy_from_slice(&d[..16]);
+        s.copy_from_slice(&block[..16]);
         Prg::new(s)
     }
 
     fn refill(&mut self) {
-        self.buf = self.counter.to_le_bytes();
-        let mut block = self.buf.into();
-        self.cipher.encrypt_block(&mut block);
-        self.buf.copy_from_slice(&block);
-        self.counter += 1;
+        let (key, counter, nonce) = (self.key, self.counter, self.nonce);
+        chacha20_block(&key, counter, &nonce, &mut self.buf);
+        self.counter = self.counter.wrapping_add(1);
         self.used = 0;
     }
 
     pub fn next_u8(&mut self) -> u8 {
-        if self.used >= 16 {
+        if self.used >= 64 {
             self.refill();
         }
         let b = self.buf[self.used];
@@ -81,9 +159,9 @@ impl Prg {
     ///
     /// Perf (EXPERIMENTS.md §Perf): offline table generation draws
     /// billions of small ring elements; for bit-widths dividing 64 we
-    /// slice whole AES blocks instead of drawing byte-by-byte (~6x fewer
-    /// cipher calls for 4-bit tables). Falls back to `ring_elem` for odd
-    /// widths so the stream stays well-defined per element count.
+    /// slice whole 64-bit words instead of drawing byte-by-byte (~6x
+    /// fewer stream reads for 4-bit tables). Falls back to `ring_elem`
+    /// for odd widths so the stream stays well-defined per element count.
     pub fn ring_vec(&mut self, ring: Ring, n: usize) -> Vec<u64> {
         let bits = ring.bits();
         if 64 % bits != 0 {
@@ -94,7 +172,6 @@ impl Prg {
         let mut out = Vec::with_capacity(n);
         let mut blocks = (n + per - 1) / per;
         while blocks > 0 {
-            // pull 16 bytes (one AES block) at a time via the buffer
             let mut w = 0u64;
             for i in 0..8 {
                 w |= (self.next_u8() as u64) << (8 * i);
@@ -116,6 +193,28 @@ mod tests {
     use crate::core::ring::{R16, R4};
 
     #[test]
+    fn chacha_block_matches_rfc8439_vector() {
+        // RFC 8439 §2.3.2 test vector, adapted: key 00..1f, 32-bit counter
+        // = 1, nonce 00:00:00:09:00:00:00:4a:00:00:00:00. Our layout is
+        // (64-bit counter, 64-bit nonce) over the same four state words:
+        // state[12]=1, state[13]=0x09000000, state[14]=0x4a000000,
+        // state[15]=0.
+        let key_bytes: Vec<u8> = (0u8..32).collect();
+        let mut key = [0u32; 8];
+        for i in 0..8 {
+            key[i] = u32::from_le_bytes(key_bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        let counter = 1u64 | (0x0900_0000u64 << 32);
+        let nonce = [0x4a00_0000u32, 0];
+        let mut out = [0u8; 64];
+        chacha20_block(&key, counter, &nonce, &mut out);
+        let expect_start = [0x10u8, 0xf1, 0xe7, 0xe4, 0xd1, 0x3b, 0x59, 0x15];
+        assert_eq!(&out[..8], &expect_start);
+        let expect_end = [0xa2u8, 0x50, 0x3c, 0x4e];
+        assert_eq!(&out[60..], &expect_end);
+    }
+
+    #[test]
     fn deterministic_per_seed() {
         let mut a = Prg::new([1; 16]);
         let mut b = Prg::new([1; 16]);
@@ -131,6 +230,12 @@ mod tests {
         let mut a = Prg::derive([1; 16], "x");
         let mut b = Prg::derive([1; 16], "y");
         assert_ne!(a.next_u64(), b.next_u64());
+        // and derivation is itself deterministic
+        let mut a1 = Prg::derive([1; 16], "x");
+        let mut a2 = Prg::derive([1; 16], "x");
+        for _ in 0..20 {
+            assert_eq!(a1.next_u64(), a2.next_u64());
+        }
     }
 
     #[test]

@@ -12,15 +12,30 @@
 //! The layer dataflow mirrors `runtime::native` exactly (which mirrors the
 //! python oracle); MPC deviates only by the −1 LSB local-truncation
 //! carries at trc points.
+//!
+//! # Batched inference
+//!
+//! Every stage is evaluated over *row blocks*, so a serving window of `B`
+//! sequences runs as ONE MPC pass ([`secure_infer_batch`]): FC layers,
+//! LayerNorm, softmax and the LUT conversions are row-major over flat
+//! slices and simply see `B·s` rows; the per-(sequence, head) attention
+//! matmuls run through the sequence-batched Alg. 3 entry points
+//! (`rss_matmul_trc_seq`), which share each round's openings in a single
+//! message. Online rounds are therefore constant in both the batch size
+//! and the head count, while bytes scale linearly — the round-trip cost of
+//! an inference is amortized across the whole window (DESIGN.md §Batched
+//! serving).
 
 use crate::core::ring::{sign_extend, R16, R4};
 use crate::model::config::BertConfig;
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, P0, P1};
-use crate::protocols::convert::{convert_to_rss, extend_ring};
+use crate::protocols::convert::{convert_to_rss, extend_ring_many};
 use crate::protocols::layernorm::{layernorm_rows, LnParams};
 use crate::protocols::lut::{lut_eval, LutTable};
-use crate::protocols::matmul::{rss_matmul_full, rss_matmul_trc};
+use crate::protocols::matmul::{
+    rss_matmul_full, rss_matmul_trc, rss_matmul_trc_multi, rss_matmul_trc_seq,
+};
 use crate::protocols::max::MaxStrategy;
 use crate::protocols::relu::relu_to_rss16;
 use crate::protocols::softmax::{softmax_rows, SoftmaxTables};
@@ -138,41 +153,57 @@ impl SecureBert {
     }
 }
 
-/// Column slice of a `[rows, d]` A2 matrix: columns `[lo, hi)`.
-fn col_slice(x: &A2, rows: usize, d: usize, lo: usize, hi: usize) -> A2 {
-    let w = hi - lo;
+/// Gather the per-head column blocks of a `[batch*s, d]` activation into
+/// (sequence, head)-major row blocks `[batch*n_heads*s, dh]` so the
+/// attention matmuls for every sequence and head run as ONE
+/// sequence-batched Alg. 3 call.
+fn gather_heads(x: &A2, batch: usize, s: usize, d: usize, heads: usize, dh: usize) -> A2 {
+    let len = batch * heads * s * dh;
     if x.vals.is_empty() {
-        return A2::empty(x.ring, rows * w);
+        return A2::empty(x.ring, len);
     }
-    let mut vals = Vec::with_capacity(rows * w);
-    for r in 0..rows {
-        vals.extend_from_slice(&x.vals[r * d + lo..r * d + hi]);
+    let mut vals = Vec::with_capacity(len);
+    for b in 0..batch {
+        for hd in 0..heads {
+            for r in 0..s {
+                let base = (b * s + r) * d + hd * dh;
+                vals.extend_from_slice(&x.vals[base..base + dh]);
+            }
+        }
     }
-    A2 { ring: x.ring, vals, len: rows * w }
+    A2 { ring: x.ring, vals, len }
 }
 
-/// Write a `[rows, w]` block into columns `[lo, lo+w)` of a `[rows, d]`
-/// accumulator.
-fn col_write(dst: &mut Vec<u64>, src: &A2, rows: usize, d: usize, lo: usize, w: usize) {
-    if src.vals.is_empty() {
-        return;
+/// Inverse of [`gather_heads`]: scatter (sequence, head)-major `[·, dh]`
+/// row blocks back into a `[batch*s, d]` activation.
+fn scatter_heads(x: &A2, batch: usize, s: usize, d: usize, heads: usize, dh: usize) -> A2 {
+    let len = batch * s * d;
+    if x.vals.is_empty() {
+        return A2::empty(x.ring, len);
     }
-    if dst.is_empty() {
-        dst.resize(rows * d, 0);
+    let mut vals = vec![0u64; len];
+    for b in 0..batch {
+        for hd in 0..heads {
+            for r in 0..s {
+                let src = ((b * heads + hd) * s + r) * dh;
+                let dst = (b * s + r) * d + hd * dh;
+                vals[dst..dst + dh].copy_from_slice(&x.vals[src..src + dh]);
+            }
+        }
     }
-    for r in 0..rows {
-        dst[r * d + lo..r * d + lo + w].copy_from_slice(&src.vals[r * w..(r + 1) * w]);
-    }
+    A2 { ring: x.ring, vals, len }
 }
 
-/// Transpose RSS share matrices `[rows, cols] -> [cols, rows]` (local).
-fn transpose_rss(x: &Rss, rows: usize, cols: usize) -> Rss {
+/// Per-block transpose of RSS share matrices: `blocks` stacked
+/// `[rows, cols]` matrices -> `blocks` stacked `[cols, rows]` (local).
+fn transpose_rss_blocks(x: &Rss, blocks: usize, rows: usize, cols: usize) -> Rss {
     let tr = |v: &Vec<u64>| -> Vec<u64> {
         let mut out = vec![0u64; v.len()];
-        if !v.is_empty() {
+        for g in 0..blocks {
+            let base = g * rows * cols;
             for r in 0..rows {
                 for c in 0..cols {
-                    out[c * rows + r] = v[r * cols + c];
+                    out[base + c * rows + r] = v[base + r * cols + c];
                 }
             }
         }
@@ -187,76 +218,141 @@ fn convert_via(ctx: &PartyCtx, t: &LutTable, x: &A2) -> Rss {
     reshare_a2_to_rss(ctx, &wide)
 }
 
-/// One secure encoder layer. `h4` is `⟦·⟧^4 [s, d]`; returns the same.
-pub fn secure_layer(ctx: &PartyCtx, m: &SecureBert, li: usize, h4: &A2) -> A2 {
+/// One secure encoder layer over a batch of sequences. `h4` is `⟦·⟧^4`
+/// `[batch*s, d]` (sequences stacked along the row dimension); returns the
+/// same shape. Online rounds are constant in `batch` and in the head
+/// count: the attention matmuls run sequence-batched, softmax/LayerNorm
+/// advance all rows together, and both residual extensions share one
+/// table opening.
+pub fn secure_layer_batch(
+    ctx: &PartyCtx,
+    m: &SecureBert,
+    li: usize,
+    h4: &A2,
+    batch: usize,
+) -> A2 {
     let cfg = &m.cfg;
-    let (s, d, dh) = (cfg.seq_len, cfg.d_model, cfg.d_head());
+    let (s, d, dh, nh) = (cfg.seq_len, cfg.d_model, cfg.d_head(), cfg.n_heads);
+    let rows = batch * s;
+    debug_assert_eq!(h4.len, rows * d);
     let l = &m.layers[li];
 
     // ---- attention
     let h16 = convert_to_rss(ctx, h4, R16, true);
-    let q4 = rss_matmul_trc(ctx, &h16, &l.wq, s, d, d, 4);
-    let k4 = rss_matmul_trc(ctx, &h16, &l.wk, s, d, d, 4);
-    let v4 = rss_matmul_trc(ctx, &h16, &l.wv, s, d, d, 4);
+    // Q/K/V projections share one collapse round.
+    let qkv = rss_matmul_trc_multi(ctx, &h16, &[&l.wq, &l.wk, &l.wv], rows, d, d, 4);
+    let (q4, k4, v4) = (&qkv[0], &qkv[1], &qkv[2]);
 
-    let mut ctxcat_vals: Vec<u64> = Vec::new();
-    for hd in 0..cfg.n_heads {
-        let (lo, hi) = (hd * dh, (hd + 1) * dh);
-        let qh = col_slice(&q4, s, d, lo, hi);
-        let kh = col_slice(&k4, s, d, lo, hi);
-        let vh = col_slice(&v4, s, d, lo, hi);
-        // scores = (s_att·q) · kᵀ, trc to 4 bits
-        let qh16 = convert_via(ctx, &l.conv_att, &qh);
-        let kh16 = convert_to_rss(ctx, &kh, R16, true);
-        let scores4 = rss_matmul_trc(ctx, &qh16, &kh16, s, dh, s, 4);
-        // softmax rows
-        let attn4 = softmax_rows(ctx, &m.sm, &scores4, s, s, m.max_strategy);
-        // ctx = (s_av·attn) · v, trc to 4 bits
-        let attn16 = convert_via(ctx, &l.conv_av, &attn4);
-        let vh16 = convert_to_rss(ctx, &vh, R16, true);
-        let vt = transpose_rss(&vh16, s, dh); // [dh, s] row-major = vᵀ
-        let ctx4 = rss_matmul_trc(ctx, &attn16, &vt, s, s, dh, 4);
-        col_write(&mut ctxcat_vals, &ctx4, s, d, lo, dh);
-    }
-    let ctxcat = A2 { ring: R4, vals: ctxcat_vals, len: s * d };
+    // Regroup into (sequence, head) blocks: [batch*n_heads*s, dh].
+    let qh = gather_heads(q4, batch, s, d, nh, dh);
+    let kh = gather_heads(k4, batch, s, d, nh, dh);
+    let vh = gather_heads(v4, batch, s, d, nh, dh);
+    let blocks = batch * nh;
+
+    // scores = (s_att·q) · kᵀ per block, trc to 4 bits — one round for
+    // every sequence and head.
+    let qh16 = convert_via(ctx, &l.conv_att, &qh);
+    let kh16 = convert_to_rss(ctx, &kh, R16, true);
+    let scores4 = rss_matmul_trc_seq(ctx, &qh16, &kh16, blocks, s, dh, s, 4);
+    // softmax rows (all blocks advance level-by-level together)
+    let attn4 = softmax_rows(ctx, &m.sm, &scores4, blocks * s, s, m.max_strategy);
+    // ctx = (s_av·attn) · v per block, trc to 4 bits
+    let attn16 = convert_via(ctx, &l.conv_av, &attn4);
+    let vh16 = convert_to_rss(ctx, &vh, R16, true);
+    let vt = transpose_rss_blocks(&vh16, blocks, s, dh); // blocks of [dh, s] = vᵀ
+    let ctx4 = rss_matmul_trc_seq(ctx, &attn16, &vt, blocks, s, s, dh, 4);
+    let ctxcat = scatter_heads(&ctx4, batch, s, d, nh, dh);
 
     let ctx16 = convert_to_rss(ctx, &ctxcat, R16, true);
-    let o4 = rss_matmul_trc(ctx, &ctx16, &l.wo, s, d, d, 4);
+    let o4 = rss_matmul_trc(ctx, &ctx16, &l.wo, rows, d, d, 4);
 
-    // ---- residual + LN1 (extend both to the 16-bit ring, add locally)
-    let res16 = extend_ring(ctx, h4, R16, true).add(&extend_ring(ctx, &o4, R16, true));
-    let h1 = layernorm_rows(ctx, &l.ln1, &res16, s, d);
+    // ---- residual + LN1 (extend both operands to the 16-bit ring with a
+    // single shared opening, add locally)
+    let ext = extend_ring_many(ctx, &[h4, &o4], R16, true);
+    let res16 = ext[0].add(&ext[1]);
+    let h1 = layernorm_rows(ctx, &l.ln1, &res16, rows, d);
 
     // ---- FFN
     let h1_16 = convert_to_rss(ctx, &h1, R16, true);
-    let u4 = rss_matmul_trc(ctx, &h1_16, &l.w1, s, d, cfg.d_ff, 4);
+    let u4 = rss_matmul_trc(ctx, &h1_16, &l.w1, rows, d, cfg.d_ff, 4);
     let relu16 = relu_to_rss16(ctx, &u4);
-    let f4 = rss_matmul_trc(ctx, &relu16, &l.w2, s, cfg.d_ff, d, 4);
+    let f4 = rss_matmul_trc(ctx, &relu16, &l.w2, rows, cfg.d_ff, d, 4);
 
-    let res2 = extend_ring(ctx, &h1, R16, true).add(&extend_ring(ctx, &f4, R16, true));
-    layernorm_rows(ctx, &l.ln2, &res2, s, d)
+    let ext2 = extend_ring_many(ctx, &[&h1, &f4], R16, true);
+    let res2 = ext2[0].add(&ext2[1]);
+    layernorm_rows(ctx, &l.ln2, &res2, rows, d)
 }
 
-/// Full secure inference. P1 (data owner) supplies the already-quantized
-/// embeddings `x4` (paper: the embedding table is public and evaluated
-/// locally by the data owner). Returns the revealed signed 16-bit logits
-/// at P1/P2 (empty at P0), plus the final hidden shares.
-pub fn secure_infer(ctx: &PartyCtx, m: &SecureBert, x4: Option<&[i64]>) -> (Vec<i64>, A2) {
+/// One secure encoder layer for a single sequence (`h4` is `[s, d]`) —
+/// the `batch == 1` case of [`secure_layer_batch`].
+pub fn secure_layer(ctx: &PartyCtx, m: &SecureBert, li: usize, h4: &A2) -> A2 {
+    secure_layer_batch(ctx, m, li, h4, 1)
+}
+
+/// Batched secure inference: evaluate `batch` sequences in ONE MPC pass.
+///
+/// P1 (data owner) supplies the already-quantized embeddings of every
+/// request in the window (paper: the embedding table is public and
+/// evaluated locally by the data owner); the other parties pass `None`
+/// but must agree on `batch` (it is public serving metadata). Returns the
+/// revealed signed 16-bit logits per request at P1/P2 (empty vectors at
+/// P0), plus the final hidden shares `[batch*s, d]`.
+///
+/// Online rounds equal those of a single [`secure_infer`] call — the
+/// whole window's openings travel in the same messages — while bytes and
+/// compute scale linearly in `batch`.
+pub fn secure_infer_batch(
+    ctx: &PartyCtx,
+    m: &SecureBert,
+    batch: usize,
+    x4: Option<&[Vec<i64>]>,
+) -> (Vec<Vec<i64>>, A2) {
     let cfg = &m.cfg;
     let (s, d) = (cfg.seq_len, cfg.d_model);
-    assert!((ctx.id == P1) == x4.is_some(), "exactly P1 supplies input");
-    let enc: Option<Vec<u64>> = x4.map(|x| x.iter().map(|&v| R4.encode(v)).collect());
-    let mut h4 = share2(ctx, P1, R4, enc.as_deref(), s * d);
+    assert!(batch > 0, "empty batch");
+    assert!((ctx.id == P1) == x4.is_some(), "exactly P1 supplies inputs");
+    let enc: Option<Vec<u64>> = x4.map(|inputs| {
+        assert_eq!(inputs.len(), batch, "batch size mismatch at P1");
+        let mut flat = Vec::with_capacity(batch * s * d);
+        for x in inputs {
+            assert_eq!(x.len(), s * d, "input shape mismatch");
+            flat.extend(x.iter().map(|&v| R4.encode(v)));
+        }
+        flat
+    });
+    let mut h4 = share2(ctx, P1, R4, enc.as_deref(), batch * s * d);
     for li in 0..cfg.n_layers {
-        h4 = secure_layer(ctx, m, li, &h4);
+        h4 = secure_layer_batch(ctx, m, li, &h4, batch);
     }
-    // classifier over the CLS (first) token
-    let cls_h = h4.slice(0, d);
+    // classifier over each sequence's CLS (first) token: all `batch`
+    // logit vectors come out of one matmul collapse and one opening.
+    let cls_rows: Vec<A2> = (0..batch)
+        .map(|b| h4.slice(b * s * d, b * s * d + d))
+        .collect();
+    let cls_refs: Vec<&A2> = cls_rows.iter().collect();
+    let cls_h = A2::concat(R4, &cls_refs); // [batch, d]
     let cls16 = convert_to_rss(ctx, &cls_h, R16, true);
-    let logits16 = rss_matmul_full(ctx, &cls16, &m.cls_w, 1, d, cfg.n_classes);
+    let logits16 = rss_matmul_full(ctx, &cls16, &m.cls_w, batch, d, cfg.n_classes);
     let revealed = reveal2(ctx, &logits16);
-    let logits = revealed.iter().map(|&v| R16.decode(v)).collect();
+    let logits: Vec<Vec<i64>> = if revealed.is_empty() {
+        vec![Vec::new(); batch] // P0 learns nothing
+    } else {
+        revealed
+            .chunks(cfg.n_classes)
+            .map(|c| c.iter().map(|&v| R16.decode(v)).collect())
+            .collect()
+    };
     (logits, h4)
+}
+
+/// Full secure inference of a single sequence — the `batch == 1` case of
+/// [`secure_infer_batch`]. P1 (data owner) supplies the already-quantized
+/// embeddings `x4`. Returns the revealed signed 16-bit logits at P1/P2
+/// (empty at P0), plus the final hidden shares.
+pub fn secure_infer(ctx: &PartyCtx, m: &SecureBert, x4: Option<&[i64]>) -> (Vec<i64>, A2) {
+    let one = x4.map(|x| vec![x.to_vec()]);
+    let (mut logits, h4) = secure_infer_batch(ctx, m, 1, one.as_deref());
+    (logits.pop().unwrap(), h4)
 }
 
 /// Output-minimized secure classification: like [`secure_infer`] but the

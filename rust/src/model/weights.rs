@@ -8,7 +8,7 @@ use std::collections::HashMap;
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::core::error::{bail, Context, Result};
 
 use super::config::BertConfig;
 use crate::core::prg::Prg;

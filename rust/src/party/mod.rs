@@ -77,6 +77,14 @@ impl PartyCtx {
         self.set_phase(self.phase.get());
     }
 
+    /// Restart the phase wall-clock WITHOUT attributing the elapsed gap to
+    /// any phase. Command loops call this when a new command arrives so
+    /// queue-idle time spent blocked between commands is not billed as
+    /// phase compute.
+    pub fn reset_timer(&self) {
+        self.phase_started.set(Instant::now());
+    }
+
     /// Mutable access to the PRG shared with `other`.
     pub fn pair_prg(&self, other: usize) -> std::cell::RefMut<'_, Prg> {
         debug_assert_ne!(other, self.id);

@@ -38,6 +38,20 @@ pub fn convert_to_rss(ctx: &PartyCtx, x: &A2, to: Ring, signed: bool) -> Rss {
     reshare_a2_to_rss(ctx, &wide)
 }
 
+/// Batched ring extension: extend several equally-ringed share vectors
+/// with ONE table opening (they share the δ message — see
+/// [`super::lut::lut_eval_many`]). Used wherever independent tensors need
+/// the same extension in the same protocol step (e.g. both residual
+/// operands of a transformer layer, or every request of a serving batch),
+/// so online rounds stay constant in the number of tensors.
+pub fn extend_ring_many(ctx: &PartyCtx, xs: &[&A2], to: Ring, signed: bool) -> Vec<A2> {
+    debug_assert!(!xs.is_empty());
+    debug_assert!(xs.iter().all(|x| x.ring == xs[0].ring));
+    debug_assert!(to.bits() >= xs[0].ring.bits());
+    let t = extension_table(xs[0].ring, to, signed);
+    super::lut::lut_eval_many(ctx, &t, xs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,6 +82,25 @@ mod tests {
         assert_eq!(
             r1.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
             signed
+        );
+    }
+
+    #[test]
+    fn extend_many_shares_one_opening() {
+        let a_signed: Vec<i64> = vec![-8, 0, 7];
+        let b_signed: Vec<i64> = vec![3, -1];
+        let ae: Vec<u64> = a_signed.iter().map(|&v| R4.encode(v)).collect();
+        let be: Vec<u64> = b_signed.iter().map(|&v| R4.encode(v)).collect();
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let a = share2(ctx, P0, R4, if ctx.id == P0 { Some(&ae) } else { None }, ae.len());
+            let b = share2(ctx, P0, R4, if ctx.id == P0 { Some(&be) } else { None }, be.len());
+            let outs = extend_ring_many(ctx, &[&a, &b], R16, true);
+            let sum = outs[0].slice(0, 2).add(&outs[1]); // (-8+3, 0-1)
+            reveal2(ctx, &sum)
+        });
+        assert_eq!(
+            r1.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            vec![-5, -1]
         );
     }
 

@@ -35,6 +35,11 @@ pub struct LnParams {
 
 /// Row-wise secure LayerNorm. `r` is `[rows, n]` over `Z_2^16`; output is
 /// `[rows, n]` signed 4-bit shares.
+///
+/// Round cost is constant in `rows` (one extension, one conversion, one
+/// variance collapse, one division opening, one γ multiply — each over
+/// the whole row block), so a serving batch normalizes every sequence
+/// in the window for single-request rounds.
 pub fn layernorm_rows(ctx: &PartyCtx, p: &LnParams, r: &A2, rows: usize, n: usize) -> A2 {
     debug_assert_eq!(r.ring, R16);
     debug_assert_eq!(r.len, rows * n);

@@ -139,6 +139,25 @@ pub fn lut_eval(ctx: &PartyCtx, t: &LutTable, xs: &A2) -> A2 {
     A2 { ring: t.out_ring, vals, len: n }
 }
 
+/// `Π_look` over SEVERAL share vectors of the same table with ONE batched
+/// opening: the vectors are concatenated, evaluated as one batch (one
+/// online round, one δ message each way) and split back. This is the
+/// batched-open entry point the serving batcher uses so that a window of
+/// B requests opens all its δ values together — rounds stay constant in
+/// B while bytes scale linearly.
+pub fn lut_eval_many(ctx: &PartyCtx, t: &LutTable, xs: &[&A2]) -> Vec<A2> {
+    debug_assert!(!xs.is_empty());
+    let cat = A2::concat(t.in_ring, xs);
+    let out = lut_eval(ctx, t, &cat);
+    let mut parts = Vec::with_capacity(xs.len());
+    let mut off = 0usize;
+    for x in xs {
+        parts.push(out.slice(off, off + x.len));
+        off += x.len;
+    }
+    parts
+}
+
 /// Offline half for two-input tables. `fresh_y = false` uses one Δ' per
 /// `group` consecutive elements (the shared-input optimization).
 fn lut2_offline(
@@ -396,6 +415,25 @@ mod tests {
             reveal2(ctx, &lut_eval(ctx, &t, &xs))
         });
         assert_eq!(r1, vec![0x0000, 0x0007, 0xFFF8, 0xFFFF]);
+    }
+
+    #[test]
+    fn lut_eval_many_matches_separate_evals_in_one_round() {
+        let t_spec = |v: u64| (v * 3 + 1) & 0xFF;
+        let xs_a: Vec<u64> = vec![0, 5, 9];
+        let xs_b: Vec<u64> = vec![15, 2];
+        let (ac, bc) = (xs_a.clone(), xs_b.clone());
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable::from_fn(R4, R8, t_spec);
+            let a = ctx.with_phase(Phase::Setup, |c| share_from_p0(c, R4, &ac));
+            let b = ctx.with_phase(Phase::Setup, |c| share_from_p0(c, R4, &bc));
+            let outs = lut_eval_many(ctx, &t, &[&a, &b]);
+            (reveal2(ctx, &outs[0]), reveal2(ctx, &outs[1]))
+        });
+        assert_eq!(r1.0, xs_a.iter().map(|&v| t_spec(v)).collect::<Vec<_>>());
+        assert_eq!(r1.1, xs_b.iter().map(|&v| t_spec(v)).collect::<Vec<_>>());
+        // one δ exchange + two reveals ≤ 3 online rounds
+        assert!(snap.max_rounds(Phase::Online) <= 3);
     }
 
     #[test]

@@ -100,15 +100,88 @@ pub fn rss_matmul_full(
     k: usize,
     m: usize,
 ) -> A2 {
+    rss_matmul_full_seq(ctx, x, w, 1, rows, k, m)
+}
+
+/// Sequence-batched Alg. 3: `x` stacks `batch` independent row blocks
+/// (`[batch*rows, k]`) and `w` stacks `batch` per-block weight/operand
+/// matrices (`[batch*m, k]`); block `b` of the output is
+/// `x_b · w_bᵀ  [rows, m]`. All `batch` products share one zero-sharing
+/// draw and ONE collapse message, so the online round cost is constant in
+/// `batch` while bytes scale linearly — this is what lets a serving
+/// window (and the per-head attention matmuls inside it) amortize MPC
+/// rounds across requests.
+pub fn rss_matmul_full_seq(
+    ctx: &PartyCtx,
+    x: &Rss,
+    w: &Rss,
+    batch: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+) -> A2 {
     let ring = x.ring;
     debug_assert_eq!(w.ring, ring);
-    let n = rows * m;
-    let mut z = local_cross_mm(ctx, x, w, rows, k, m);
+    debug_assert_eq!(x.len(), batch * rows * k);
+    debug_assert_eq!(w.len(), batch * m * k);
+    let n = batch * rows * m;
+    let mut z = Vec::with_capacity(n);
+    for b in 0..batch {
+        let xb = x.slice(b * rows * k, (b + 1) * rows * k);
+        let wb = w.slice(b * m * k, (b + 1) * m * k);
+        z.extend(local_cross_mm(ctx, &xb, &wb, rows, k, m));
+    }
     let alpha = zero_share(ctx, ring, n);
     for (v, a) in z.iter_mut().zip(&alpha) {
         *v = ring.add(*v, *a);
     }
     collapse_to_a2(ctx, ring, z, n)
+}
+
+/// Sequence-batched Alg. 3 with truncation (see [`rss_matmul_full_seq`]).
+pub fn rss_matmul_trc_seq(
+    ctx: &PartyCtx,
+    x: &Rss,
+    w: &Rss,
+    batch: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    trc_bits: u32,
+) -> A2 {
+    rss_matmul_full_seq(ctx, x, w, batch, rows, k, m).trc_top(trc_bits)
+}
+
+/// One `x [rows, k]` against SEVERAL `[m, k]` weight matrices with a
+/// single collapse round (the Q/K/V projections of a transformer layer).
+/// Returns one truncated output per weight matrix.
+pub fn rss_matmul_trc_multi(
+    ctx: &PartyCtx,
+    x: &Rss,
+    ws: &[&Rss],
+    rows: usize,
+    k: usize,
+    m: usize,
+    trc_bits: u32,
+) -> Vec<A2> {
+    debug_assert!(!ws.is_empty());
+    let ring = x.ring;
+    let per = rows * m;
+    let n = ws.len() * per;
+    let mut z = Vec::with_capacity(n);
+    for w in ws {
+        debug_assert_eq!(w.ring, ring);
+        debug_assert_eq!(w.len(), m * k);
+        z.extend(local_cross_mm(ctx, x, w, rows, k, m));
+    }
+    let alpha = zero_share(ctx, ring, n);
+    for (v, a) in z.iter_mut().zip(&alpha) {
+        *v = ring.add(*v, *a);
+    }
+    let cat = collapse_to_a2(ctx, ring, z, n);
+    (0..ws.len())
+        .map(|i| cat.slice(i * per, (i + 1) * per).trc_top(trc_bits))
+        .collect()
 }
 
 /// Elementwise RSS product over the full ring (no truncation).
@@ -265,6 +338,61 @@ mod tests {
         // comm: P0->P1 16 bits per output element, one round (plus reveal)
         let online = snap.total_bytes(Phase::Online);
         assert!(online >= 4 * 2, "{online}");
+    }
+
+    #[test]
+    fn seq_batched_matmul_matches_per_block_in_one_round() {
+        // Two independent 2x2 @ 2x2 products; the batched call must agree
+        // with two separate calls and collapse in a single round.
+        let x_vals = enc(R16, &[1, 2, 3, 4, /* block 2 */ -1, 0, 2, 5]);
+        let w_vals = enc(R16, &[1, 1, 2, -1, /* block 2 */ 3, 0, -2, 1]);
+        let (xc, wc) = (x_vals.clone(), w_vals.clone());
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = ctx.with_phase(Phase::Setup, |c| {
+                share_rss(c, P1, R16, if c.id == P1 { Some(&xc) } else { None }, 8)
+            });
+            let w = ctx.with_phase(Phase::Setup, |c| {
+                share_rss(c, P0, R16, if c.id == P0 { Some(&wc) } else { None }, 8)
+            });
+            let out = rss_matmul_full_seq(ctx, &x, &w, 2, 2, 2, 2);
+            ctx.with_phase(Phase::Setup, |c| reveal2(c, &out))
+        });
+        // block 1: [[1,2],[3,4]] x [[1,1],[2,-1]]^T = [[3,0],[7,2]]
+        // block 2: [[-1,0],[2,5]] x [[3,0],[-2,1]]^T = [[-3,2],[6,1]]
+        assert_eq!(
+            r1.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            vec![3, 0, 7, 2, -3, 2, 6, 1]
+        );
+        // both blocks collapsed in ONE P0->P1 message
+        assert_eq!(snap.max_rounds(Phase::Online), 1);
+    }
+
+    #[test]
+    fn multi_weight_matmul_matches_separate_calls() {
+        let x_vals = enc(R16, &[1, -2, 3, 0, 4, -1]); // [2,3]
+        let wa = enc(R16, &[1, 0, 1, -1, 1, 0]); // [2,3]
+        let wb = enc(R16, &[2, 2, 2, 0, 0, 1]); // [2,3]
+        let (xc, wac, wbc) = (x_vals.clone(), wa.clone(), wb.clone());
+        let ([_, r1, _], _) = run_3pc(SessionCfg::default(), move |ctx| {
+            let x = share_rss(ctx, P1, R16, if ctx.id == P1 { Some(&xc) } else { None }, 6);
+            let a = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&wac) } else { None }, 6);
+            let b = share_rss(ctx, P0, R16, if ctx.id == P0 { Some(&wbc) } else { None }, 6);
+            let outs = rss_matmul_trc_multi(ctx, &x, &[&a, &b], 2, 3, 2, 16);
+            (reveal2(ctx, &outs[0]), reveal2(ctx, &outs[1]))
+        });
+        // trc_bits == ring bits => no truncation, exact values.
+        // x @ wa^T: [[1-2+3... ]] compute: row1 [1,-2,3]: a0=[1,0,1] -> 4; a1=[-1,1,0] -> -3
+        //           row2 [0,4,-1]: a0 -> -1; a1 -> 4
+        assert_eq!(
+            r1.0.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            vec![4, -3, -1, 4]
+        );
+        // x @ wb^T: row1: b0=[2,2,2] -> 4; b1=[0,0,1] -> 3
+        //           row2: b0 -> 6; b1 -> -1
+        assert_eq!(
+            r1.1.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
+            vec![4, 3, 6, -1]
+        );
     }
 
     #[test]

@@ -39,7 +39,9 @@ pub fn max_table() -> LutTable2 {
 
 /// Row-wise oblivious max: `x` is `[rows, n]` of signed 4-bit shares;
 /// returns one share per row. All rows advance together, so the round
-/// count is per-level, not per-row.
+/// count is per-level, not per-row — a serving batch of B sequences
+/// (B× the rows at the same `n`) costs exactly the single-sequence
+/// rounds, which is what keeps the batched softmax round-constant.
 pub fn max_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize, strat: MaxStrategy) -> A2 {
     debug_assert_eq!(x.ring, R4);
     debug_assert_eq!(x.len, rows * n);
@@ -154,6 +156,15 @@ mod tests {
         let vals = vec![1i64, 2, 3, 4, /* row2 */ -5, -6, -7, -8];
         let (got, _) = run_max(vals, 2, 4, MaxStrategy::Tournament);
         assert_eq!(got, vec![4, -5]);
+    }
+
+    #[test]
+    fn rounds_depend_on_width_not_rows() {
+        let vals_1: Vec<i64> = (0..8).map(|i| (i % 15) - 7).collect();
+        let vals_4: Vec<i64> = (0..32).map(|i| (i % 15) - 7).collect();
+        let (_, r1) = run_max(vals_1, 1, 8, MaxStrategy::Tournament);
+        let (_, r4) = run_max(vals_4, 4, 8, MaxStrategy::Tournament);
+        assert_eq!(r4, r1, "4x the rows must not add rounds");
     }
 
     #[test]

@@ -1,14 +1,28 @@
-//! The paper's protocol suite.
+//! The paper's protocol suite — a module-level map from each source file
+//! to the algorithm/section of *Privacy-Preserving Inference for
+//! Quantized BERT Models* it implements.
 //!
-//! * [`lut`] — secure lookup tables: `Π_look` (Alg. 1), the multi-input
-//!   `Π_look^{b1,b2}` (Alg. 2) and the shared-input-Δ optimization
-//! * [`matmul`] — RSS linear algebra with high-bit truncation (Alg. 3)
-//! * [`convert`] — share conversion `Π_convert^{ℓ',ℓ}` via LUT + reshare
-//! * [`max`] — oblivious maximum `Π_max` (tournament / linear)
-//! * [`softmax`] — the quantized softmax pipeline (§Softmax, Fig. 4)
-//! * [`relu`] — LUT ReLU emitting FC-ready 16-bit shares (§ReLU)
-//! * [`layernorm`] — quantized LayerNorm (§LayerNorm)
-//! * [`tables`] — table contents pinned against the python oracle
+//! | module | paper artifact | notes |
+//! |--------|----------------|-------|
+//! | [`lut`] | `Π_look` (Alg. 1), `Π_look^{b1,b2}` (Alg. 2), §Communication Optimization | single-input, multi-input, shared-input-Δ and multi-table batched openings |
+//! | [`matmul`] | Alg. 3 (binary-weight FC inner product with high-bit truncation) | RSS linear algebra; sequence-batched and multi-weight entry points collapse a whole serving window in one round |
+//! | [`convert`] | `Π_convert^{ℓ',ℓ}` (§Lookup Table for Share Conversion) | ring extension by LUT + reshare — the step that removes truncation protocols entirely |
+//! | [`softmax`] | §Softmax, Fig. 4 (multi-input softmax LUT) | max-shift, `T_exp`, denominator mid-bits, shared-Δ' division |
+//! | [`max`] | `Π_max` (§Softmax; paper cites Asharov et al. oblivious sort) | tournament / linear / full-sort realizations, benched in `benches/micro.rs` |
+//! | [`sort`] | the sort substrate `Π_max` cites | bitonic network over (min, max) two-table lookups with shared openings |
+//! | [`relu`] | §ReLU (after Lu et al. NDSS'25) | one LUT straight to FC-ready 16-bit shares |
+//! | [`layernorm`] | §LayerNorm | mean/variance over `Z_2^16`/`Z_2^32`, `(6,4)`-bit division LUT with row-shared Δ' |
+//! | [`argmax`] | output minimization (§System Architecture: the client learns only the class) | (value, index) tournament over `lut2_eval_multi` |
+//! | [`tables`] | the LUT contents (Fig. 4 tables, `T_ln`, ReLU/GELU) | pinned bit-exactly against the python oracle `kernels/ref.py` |
+//!
+//! Batch semantics: every protocol here is row-major over flat slices and
+//! takes explicit row/shape arguments, so a serving batch is just more
+//! rows — online rounds are shape-bounded, never row-bounded. The
+//! dedicated batched entry points (`matmul::rss_matmul_full_seq`,
+//! `matmul::rss_matmul_trc_multi`, `lut::lut_eval_many`,
+//! `convert::extend_ring_many`, `sharing::additive::reveal2_many`) exist
+//! for the places where *independent tensors* must share one opening
+//! message; see DESIGN.md §Batched serving.
 
 pub mod argmax;
 pub mod convert;

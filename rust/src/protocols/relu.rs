@@ -2,6 +2,11 @@
 //! table maps the signed 4-bit input directly to 16-bit additive shares
 //! (the next FC layer consumes 16-bit RSS), so activation + ring
 //! extension cost one table evaluation.
+//!
+//! Batch semantics: the op is elementwise over a flat slice, so a
+//! serving window of B sequences is just a B×-longer input — all
+//! openings travel in the one `Π_look` message and online rounds are
+//! constant in B (asserted by `rounds_constant_in_batch` below).
 
 use crate::core::ring::{R16, R4};
 use crate::party::PartyCtx;
@@ -66,6 +71,25 @@ mod tests {
             assert!(got[4] >= 6); // gelu(7) ~ 7
             assert_eq!(got[0], 0); // gelu(-8) ~ 0
         }
+    }
+
+    #[test]
+    fn rounds_constant_in_batch() {
+        use crate::transport::Phase;
+        let run = |n: usize| {
+            let enc: Vec<u64> = (0..n).map(|i| R4.encode((i % 16) as i64 - 8)).collect();
+            let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let x = ctx.with_phase(Phase::Setup, |c| {
+                    share2(c, P0, R4, if c.id == P0 { Some(&enc) } else { None }, enc.len())
+                });
+                relu_to_rss16(ctx, &x);
+            });
+            (snap.max_rounds(Phase::Online), snap.total_bytes(Phase::Online))
+        };
+        let (r1, b1) = run(64);
+        let (r4, b4) = run(256); // a 4x batch
+        assert_eq!(r4, r1, "rounds must not grow with batch");
+        assert!(b4 > b1 * 3, "bytes scale with batch: {b1} -> {b4}");
     }
 
     #[test]

@@ -42,6 +42,12 @@ impl SoftmaxTables {
 
 /// Row-wise secure softmax: `x` is `[rows, n]` signed 4-bit shares;
 /// returns `[rows, n]` unsigned 4-bit shares.
+///
+/// Rounds are bounded by the row *width* `n` (⌈log₂ n⌉ max-tournament
+/// levels + 3 table openings), never by `rows`: a serving batch stacks
+/// more rows — every sequence and head of the window — and each step's
+/// openings ride in one message, so batched inference pays
+/// single-request rounds.
 pub fn softmax_rows(
     ctx: &PartyCtx,
     t: &SoftmaxTables,

@@ -160,26 +160,42 @@ pub fn share2(ctx: &PartyCtx, owner: usize, ring: Ring, vals: Option<&[u64]>, le
 /// Reveal `⟦x⟧` to both P1 and P2 (one round, ℓ bits each way). P0 gets
 /// nothing and returns an empty vector.
 pub fn reveal2(ctx: &PartyCtx, x: &A2) -> Vec<u64> {
+    reveal2_many(ctx, &[x]).pop().unwrap()
+}
+
+/// Batched reveal: open several shared vectors (possibly of different
+/// rings) in ONE exchange round — the per-request openings of a serving
+/// batch ride in a single message, so the round cost is constant in the
+/// number of vectors. P0 gets empty vectors.
+pub fn reveal2_many(ctx: &PartyCtx, xs: &[&A2]) -> Vec<Vec<u64>> {
+    use crate::core::pack::{pack, unpack};
     let phase = ctx.phase();
-    match ctx.id {
-        P1 => {
-            let theirs = ctx.net.exchange_ring(P2, phase, x.ring, &x.vals);
-            x.vals
-                .iter()
-                .zip(&theirs)
-                .map(|(&a, &b)| x.ring.add(a, b))
-                .collect()
-        }
-        P2 => {
-            let theirs = ctx.net.exchange_ring(P1, phase, x.ring, &x.vals);
-            x.vals
-                .iter()
-                .zip(&theirs)
-                .map(|(&a, &b)| x.ring.add(a, b))
-                .collect()
-        }
-        _ => Vec::new(),
+    if ctx.id != P1 && ctx.id != P2 {
+        return xs.iter().map(|_| Vec::new()).collect();
     }
+    let peer = if ctx.id == P1 { P2 } else { P1 };
+    let mut payload = Vec::new();
+    for x in xs {
+        debug_assert!(x.holds_share());
+        payload.extend(pack(x.ring, &x.vals));
+    }
+    ctx.net.send_bytes(peer, phase, payload);
+    let theirs = ctx.net.recv_bytes(peer, phase);
+    let mut off = 0usize;
+    let mut out = Vec::with_capacity(xs.len());
+    for x in xs {
+        let nb = x.ring.packed_len(x.len);
+        let their = unpack(x.ring, &theirs[off..off + nb], x.len);
+        off += nb;
+        out.push(
+            x.vals
+                .iter()
+                .zip(&their)
+                .map(|(&a, &b)| x.ring.add(a, b))
+                .collect(),
+        );
+    }
+    out
 }
 
 #[cfg(test)]
@@ -232,6 +248,33 @@ mod tests {
             let deficit = (exact + 16 - got) % 16;
             assert!(deficit <= 1, "got {got} want {exact} (-1 carry allowed)");
         }
+    }
+
+    #[test]
+    fn reveal2_many_opens_in_one_round() {
+        // Three vectors over two rings open together: values exact, and
+        // the whole opening costs one blocking receive per party.
+        let (a, b, c): (Vec<u64>, Vec<u64>, Vec<u64>) =
+            (vec![1, 2, 3], vec![0xFFFF, 42], vec![7; 5]);
+        let (ac, bc, cc) = (a.clone(), b.clone(), c.clone());
+        let ([_, r1, r2], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let sa = ctx.with_phase(crate::transport::Phase::Setup, |c2| {
+                share2(c2, P0, R4, if c2.id == P0 { Some(&ac) } else { None }, ac.len())
+            });
+            let sb = ctx.with_phase(crate::transport::Phase::Setup, |c2| {
+                share2(c2, P0, R16, if c2.id == P0 { Some(&bc) } else { None }, bc.len())
+            });
+            let scv = ctx.with_phase(crate::transport::Phase::Setup, |c2| {
+                share2(c2, P0, R4, if c2.id == P0 { Some(&cc) } else { None }, cc.len())
+            });
+            reveal2_many(ctx, &[&sa, &sb, &scv])
+        });
+        for out in [&r1, &r2] {
+            assert_eq!(out[0], a);
+            assert_eq!(out[1], b);
+            assert_eq!(out[2], c);
+        }
+        assert_eq!(snap.max_rounds(crate::transport::Phase::Online), 1);
     }
 
     #[test]

@@ -20,10 +20,10 @@ const NPH: usize = 3; // phases
 /// Shared (Arc'd) atomic counters for one MPC session.
 #[derive(Default)]
 pub struct Metrics {
-    /// bytes[from*3+to][phase]
+    /// `bytes[from*3+to][phase]`
     bytes: [[AtomicU64; NPH]; NP * NP],
     msgs: [[AtomicU64; NPH]; NP * NP],
-    /// rounds[party][phase]: blocking receives observed by that party
+    /// `rounds[party][phase]`: blocking receives observed by that party
     rounds: [[AtomicU64; NPH]; NP],
     /// wall-clock nanoseconds each party spent inside each phase
     compute_ns: [[AtomicU64; NPH]; NP],

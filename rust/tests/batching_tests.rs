@@ -1,0 +1,185 @@
+//! Cross-request batching integration: a window of B requests evaluated
+//! by `secure_infer_batch` must (a) produce the same logits as B
+//! independent `secure_infer` calls up to the local-truncation carry
+//! budget, and (b) cost the SAME number of online rounds as a single
+//! request — that equality is the amortization the serving layer sells.
+
+use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::secure::{secure_infer, secure_infer_batch, SecureBert};
+use ppq_bert::model::weights::Weights;
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::transport::Phase;
+
+fn clone_weights(w: &Weights, cfg: BertConfig) -> Weights {
+    Weights {
+        cfg,
+        tensors: w.tensors.clone(),
+        scales: w.scales.clone(),
+    }
+}
+
+/// Carry tolerance used by the session tests: batched and independent
+/// runs draw different share randomness, so logits may differ by the
+/// accumulated −1 LSB truncation carries, bounded through the classifier.
+fn carry_tolerance(cfg: &BertConfig) -> i64 {
+    cfg.scale_cls * 2 * cfg.d_model as i64
+}
+
+#[test]
+fn batched_logits_match_independent_inference() {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let batch = 3usize;
+    let inputs = prepared_inputs(&cfg, batch);
+
+    let (wc, inc) = (clone_weights(&w, cfg), inputs.clone());
+    let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
+        let m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&wc) } else { None });
+        let (batched, h4) = secure_infer_batch(
+            ctx,
+            &m,
+            batch,
+            if ctx.id == P1 { Some(&inc) } else { None },
+        );
+        assert_eq!(h4.len, batch * cfg.seq_len * cfg.d_model);
+        // same session, same model shares: per-request singles
+        let singles: Vec<Vec<i64>> = inc
+            .iter()
+            .map(|x| {
+                secure_infer(ctx, &m, if ctx.id == P1 { Some(x) } else { None }).0
+            })
+            .collect();
+        (batched, singles)
+    });
+    let (batched, singles) = &outs[1]; // P1's revealed logits
+    assert_eq!(batched.len(), batch);
+    let tol = carry_tolerance(&cfg);
+    for i in 0..batch {
+        assert_eq!(batched[i].len(), cfg.n_classes);
+        for (a, b) in batched[i].iter().zip(&singles[i]) {
+            assert!(
+                (a - b).abs() <= tol,
+                "request {i}: batched {:?} vs single {:?}",
+                batched[i],
+                singles[i]
+            );
+        }
+    }
+    // P2 sees identical logits (both hold the opened values).
+    assert_eq!(outs[1].0, outs[2].0);
+    // P0 learns nothing.
+    assert!(outs[0].0.iter().all(|l| l.is_empty()));
+}
+
+/// The amortization claim, measured: online rounds for a B = 4 window
+/// equal the B = 1 round count exactly, while online bytes grow with B.
+#[test]
+fn batch_of_four_costs_single_request_rounds() {
+    let cfg = BertConfig::tiny();
+
+    let run = |batch: usize| -> (u64, u64, u64) {
+        let (w, _) = prepared_model(cfg);
+        let inputs = prepared_inputs(&cfg, batch);
+        let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&w) } else { None });
+            secure_infer_batch(ctx, &m, batch, if ctx.id == P1 { Some(&inputs) } else { None });
+        });
+        (
+            snap.max_rounds(Phase::Online),
+            snap.max_rounds(Phase::Offline),
+            snap.total_bytes(Phase::Online),
+        )
+    };
+
+    let (rounds1, off_rounds1, bytes1) = run(1);
+    let (rounds4, off_rounds4, bytes4) = run(4);
+    assert_eq!(
+        rounds4, rounds1,
+        "online rounds must not grow with batch size"
+    );
+    assert_eq!(
+        off_rounds4, off_rounds1,
+        "offline rounds must not grow with batch size"
+    );
+    // bytes DO scale with the batch (rounds amortize, volume doesn't)
+    assert!(
+        bytes4 > bytes1 * 3,
+        "expected ~4x online bytes, got {bytes1} -> {bytes4}"
+    );
+    assert!(rounds1 > 0 && bytes1 > 0);
+}
+
+/// Coordinator accounting: a full window is one MPC pass; per-request
+/// results carry amortized byte shares that sum to the window total, and
+/// the window's measured rounds match an unbatched window's.
+#[test]
+fn coordinator_amortizes_rounds_across_window() {
+    let cfg = BertConfig::tiny();
+
+    // Unbatched reference window.
+    let single_rounds = {
+        let (w, x) = prepared_model(cfg);
+        let mut sc = ServerConfig::new(cfg);
+        sc.max_batch = 1;
+        let mut coord = Coordinator::start(sc, w);
+        coord.submit(x);
+        let r = coord.run_batch().remove(0);
+        coord.shutdown();
+        assert_eq!(r.batch_size, 1);
+        r.window_online_rounds
+    };
+
+    let (w, _) = prepared_model(cfg);
+    let mut sc = ServerConfig::new(cfg);
+    sc.max_batch = 4;
+    let mut coord = Coordinator::start(sc, w);
+    let ids: Vec<u64> = prepared_inputs(&cfg, 4)
+        .into_iter()
+        .map(|x| coord.submit(x))
+        .collect();
+    let results = coord.run_batch();
+    assert_eq!(results.len(), 4);
+    assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), ids);
+    assert_eq!(coord.windows(), 1);
+
+    let snap = coord.snapshot();
+    let window_online = snap.total_bytes(Phase::Online);
+    let window_offline = snap.total_bytes(Phase::Offline);
+    for r in &results {
+        assert_eq!(r.batch_size, 4);
+        assert_eq!(
+            r.window_online_rounds, single_rounds,
+            "a 4-request window must cost single-request rounds"
+        );
+        assert!(r.online_bytes > 0);
+    }
+    // Amortized shares conserve the window totals exactly.
+    assert_eq!(results.iter().map(|r| r.online_bytes).sum::<u64>(), window_online);
+    assert_eq!(results.iter().map(|r| r.offline_bytes).sum::<u64>(), window_offline);
+    coord.shutdown();
+}
+
+/// Batching composes with the serving knobs: a sorted-max session batched
+/// at B = 2 still serves correct-shaped logits per request.
+#[test]
+fn batched_window_with_sort_strategy() {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let mut sc = ServerConfig::new(cfg);
+    sc.max_batch = 2;
+    sc.max_strategy = MaxStrategy::Sort;
+    let mut coord = Coordinator::start(sc, w);
+    for x in prepared_inputs(&cfg, 2) {
+        coord.submit(x);
+    }
+    let results = coord.run_batch();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert_eq!(r.logits.len(), cfg.n_classes);
+        assert_eq!(r.batch_size, 2);
+    }
+    coord.shutdown();
+}
