@@ -1,7 +1,7 @@
 # Build the python AOT artifacts the Rust runtime/tests consume
 # (rust/tests/integration_artifact.rs skips until these exist; running
 # them additionally needs `cargo ... --features xla`).
-.PHONY: artifacts test bench
+.PHONY: artifacts test bench doccheck
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -11,9 +11,18 @@ test:
 	cargo test -q
 	python3 -m pytest python/tests -q
 
+# Documentation gates (mirrors the CI doc job): rustdoc warnings denied,
+# missing_docs denied, and every `DESIGN.md §` citation must name a real
+# section.
+doccheck:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo rustc --release --lib -- -D missing-docs
+	tools/check_design_citations.sh
+
 bench:
 	cargo bench --bench micro
 	cargo bench --bench batching
+	cargo bench --bench offline
 	cargo bench --bench table2
 	cargo bench --bench table3
 	cargo bench --bench table4

@@ -40,6 +40,11 @@ fn main() {
     let mut sc = ServerConfig::new(cfg);
     sc.max_batch = 4;
     sc.net = NetParams::LAN;
+    // Keep one full-window correlation tape warm per bucket: window LUT
+    // material is generated off the request path, so a warm window's
+    // request-path offline communication is zero (pool hits/misses are
+    // printed below; DESIGN.md §Offline preprocessing).
+    sc.prep_depth = 1;
     let t0 = Instant::now();
     let mut router = Router::new(sc, 42, buckets);
 
@@ -54,10 +59,13 @@ fn main() {
         meta.push((routed, len));
     }
     println!("router: active buckets after submit: {:?}", router.active_buckets());
+    // Idle-time preprocessing: generate each bucket's next-window LUT
+    // material before draining, so the windows below are warm.
+    router.maintain_pools();
 
     let mut table = Table::new(&[
-        "req", "tokens", "bucket", "batch", "class-logits", "window compute", "LAN online",
-        "online MB/req",
+        "req", "tokens", "bucket", "batch", "pool", "class-logits", "window compute",
+        "LAN online", "online MB/req",
     ]);
     let t_serve = Instant::now();
     let mut served = 0usize;
@@ -75,6 +83,9 @@ fn main() {
                 len.to_string(),
                 bucket.to_string(),
                 r.batch_size.to_string(),
+                if r.window_pool_misses == 0 { "warm".into() } else {
+                    format!("{}h/{}m", r.window_pool_hits, r.window_pool_misses)
+                },
                 format!("{:?}", r.logits),
                 fmt_dur(r.compute),
                 fmt_dur(r.online_modeled),
@@ -98,5 +109,9 @@ fn main() {
         fmt_dur(t0.elapsed()),
     );
     println!("aggregate online communication: {:.2} MB", router.total_online_mb());
+    let (hits, misses) = router.pool_stats();
+    println!(
+        "correlation pool: {hits} hits / {misses} misses (misses = LUT material generated on the request path — partial tail windows are the usual cause)"
+    );
     router.shutdown();
 }

@@ -26,13 +26,16 @@ use crate::sharing::additive::{reveal2, A2};
 use crate::sharing::rss::{reshare_a2_to_rss, share_rss, Rss};
 use crate::transport::Phase;
 
+/// CrypTen's fixed-point fractional bits.
 pub const FRAC: u32 = 16;
 
 /// CrypTen's comparison cost over Z_2^64 (A2B conversion + msb circuit):
 /// ~l·log(l) bits per element offline + l bits online, log(l) rounds.
 pub const CMP_BYTES_PER_ELEM: usize = 64 * 6 / 8; // online bytes
-pub const CMP_OFFLINE_BYTES_PER_ELEM: usize = 64 * 8; // beaver triples for AND layers
-pub const CMP_ROUNDS: u64 = 6; // log2(64)
+/// Offline beaver-triple bytes per compared element (AND layers).
+pub const CMP_OFFLINE_BYTES_PER_ELEM: usize = 64 * 8;
+/// Comparison round count: log2(64).
+pub const CMP_ROUNDS: u64 = 6;
 
 fn encode_fx(v: f64) -> u64 {
     R64.encode((v * (1u64 << FRAC) as f64).round() as i64)

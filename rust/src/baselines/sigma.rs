@@ -13,6 +13,7 @@ pub const COMM_MB: [(usize, f64); 4] = [(8, 43.28), (16, 89.24), (32, 189.17), (
 /// Published end-to-end latency (ms) for BERT-base under LAN (paper
 /// Table 2): 4-thread CPU and GPU figures.
 pub const LATENCY_CPU4_MS: f64 = 12311.4;
+/// Published GPU end-to-end latency (ms), same setting.
 pub const LATENCY_GPU_MS: f64 = 4667.9;
 
 /// Interpolated/extrapolated communication in MB for a token count.

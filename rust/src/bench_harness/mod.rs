@@ -43,8 +43,8 @@ pub fn prepared_inputs(cfg: &BertConfig, n: usize) -> Vec<Vec<i64>> {
     (0..n).map(|i| synth_input(cfg, 11 + i as u64)).collect()
 }
 
-/// Thread-scaling model for the single-core container (DESIGN.md
-/// §Substitutions #3): measured single-thread compute, scaled by an
+/// Thread-scaling model for the single-core container
+/// (DESIGN.md §Substitutions #3): measured single-thread compute, scaled by an
 /// Amdahl curve calibrated to the paper's own 1→20-thread improvement
 /// (their Fig. 5 shows ~6.5× online speedup from 1→20 threads on the
 /// protocol's parallelizable fraction ≈ 0.92).
@@ -60,6 +60,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(header: &[&str]) -> Table {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -67,11 +68,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells);
     }
 
+    /// Print the table with a title line, right-aligned columns.
     pub fn print(&self, title: &str) {
         println!("\n== {title}");
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -95,6 +98,7 @@ impl Table {
     }
 }
 
+/// Human-readable duration (s / ms / µs picked by magnitude).
 pub fn fmt_dur(d: Duration) -> String {
     if d.as_secs_f64() >= 1.0 {
         format!("{:.2}s", d.as_secs_f64())

@@ -14,6 +14,7 @@
 //! net = lan            # lan | wan | local
 //! max_strategy = tournament   # tournament | linear | sort
 //! buckets = 8,16,32
+//! prep_depth = 2       # ahead-of-time correlation tapes per bucket
 //! ```
 
 use std::collections::HashMap;
@@ -35,6 +36,7 @@ pub struct ConfigFile {
 }
 
 impl ConfigFile {
+    /// Parse INI-subset text (`[section]`, `key = value`, `#` comments).
     pub fn parse(text: &str) -> Result<ConfigFile> {
         let mut out = ConfigFile::default();
         let mut section = String::from("");
@@ -61,12 +63,14 @@ impl ConfigFile {
         Ok(out)
     }
 
+    /// Read and parse a config file from disk.
     pub fn load(path: &Path) -> Result<ConfigFile> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Raw string value of `[section] key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
@@ -117,6 +121,9 @@ impl ConfigFile {
             Some("tournament") | None => MaxStrategy::Tournament,
             Some(other) => bail!("unknown max_strategy `{other}`"),
         };
+        if let Some(p) = self.get_usize("serving", "prep_depth")? {
+            sc.prep_depth = p;
+        }
         Ok(sc)
     }
 
@@ -150,6 +157,7 @@ threads = 8
 net = wan
 max_strategy = sort
 buckets = 8, 16
+prep_depth = 3
 "#;
 
     #[test]
@@ -170,6 +178,7 @@ buckets = 8, 16
         assert_eq!(sc.session.threads, 8);
         assert_eq!(sc.net.name, "WAN");
         assert_eq!(sc.max_strategy, MaxStrategy::Sort);
+        assert_eq!(sc.prep_depth, 3);
         assert_eq!(c.buckets().unwrap(), Some(vec![8, 16]));
     }
 
@@ -180,6 +189,7 @@ buckets = 8, 16
         assert_eq!(sc.cfg.d_model, 64); // tiny preset
         assert_eq!(sc.net.name, "LAN");
         assert_eq!(sc.max_strategy, MaxStrategy::Tournament);
+        assert_eq!(sc.prep_depth, 0);
         assert_eq!(c.buckets().unwrap(), None);
     }
 

@@ -74,10 +74,24 @@ impl Router {
         out
     }
 
+    /// Run every active bucket's preprocessing loop body once: cover the
+    /// window each bucket would cut next (so partial tail windows are
+    /// warm) and top each pool back up to the configured `prep_depth`
+    /// (DESIGN.md §Offline preprocessing). Serving drivers call this
+    /// while the queues are idle.
+    pub fn maintain_pools(&mut self) {
+        for coord in self.buckets.values_mut() {
+            coord.prep_next_window();
+            coord.maintain_pool();
+        }
+    }
+
+    /// Queued requests across all buckets.
     pub fn pending(&self) -> usize {
         self.buckets.values().map(|c| c.pending()).sum()
     }
 
+    /// Buckets with a started session, ascending.
     pub fn active_buckets(&self) -> Vec<usize> {
         self.buckets.keys().copied().collect()
     }
@@ -90,6 +104,18 @@ impl Router {
             .sum()
     }
 
+    /// Aggregate correlation-pool (hits, misses) across buckets.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        self.buckets
+            .values()
+            .map(|c| {
+                let s = c.snapshot();
+                (s.pool_hits(), s.pool_misses())
+            })
+            .fold((0, 0), |(h, m), (bh, bm)| (h + bh, m + bm))
+    }
+
+    /// Stop every bucket's session threads.
     pub fn shutdown(self) {
         for (_, c) in self.buckets {
             c.shutdown();

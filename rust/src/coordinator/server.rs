@@ -1,4 +1,5 @@
-//! Request queue + dynamic batcher + metrics reporting.
+//! Request queue + dynamic batcher + correlation-pool maintenance +
+//! metrics reporting.
 //!
 //! The batcher drains up to `max_batch` queued requests per window and
 //! evaluates the whole window as ONE batched MPC pass
@@ -9,7 +10,17 @@
 //! per-request deltas of a shared meter are meaningless once requests
 //! share rounds (the old `sub_snap`-per-request accounting double-counted
 //! the window's rounds onto its first request).
+//!
+//! On top of batching, the coordinator runs the preprocessing loop of
+//! DESIGN.md §Offline preprocessing: [`Coordinator::maintain_pool`] keeps
+//! a pool of ahead-of-time correlation tapes (one per future window)
+//! filled to [`ServerConfig::prep_depth`], and [`Coordinator::run_batch`]
+//! serves a warm window with **zero** offline-phase communication on the
+//! request path — misses (pool dry, or a partial tail window of a size
+//! that was never prepped) fall back to inline generation and are counted
+//! by the `pool_misses` meter.
 
+use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -24,17 +35,27 @@ use super::session::Session;
 /// Serving configuration.
 #[derive(Clone, Copy)]
 pub struct ServerConfig {
+    /// Model shape served by this coordinator's session.
     pub cfg: BertConfig,
+    /// MPC session parameters (seed, threads, realtime injection).
     pub session: SessionCfg,
     /// Requests per batch window (the batcher drains up to this many
     /// queued requests into one batched MPC pass).
     pub max_batch: usize,
     /// Network model used for reported (modeled) latency.
     pub net: NetParams,
+    /// Which `Π_max` realization softmax uses.
     pub max_strategy: MaxStrategy,
+    /// Target depth of the ahead-of-time correlation pool: how many
+    /// full-window (`max_batch`) tapes [`Coordinator::maintain_pool`]
+    /// keeps ready. 0 disables preprocessing (every window generates its
+    /// LUT material inline, as the paper's accounting-only split did).
+    pub prep_depth: usize,
 }
 
 impl ServerConfig {
+    /// Defaults: window of 8, LAN model, tournament max, preprocessing
+    /// disabled.
     pub fn new(cfg: BertConfig) -> Self {
         ServerConfig {
             cfg,
@@ -42,6 +63,7 @@ impl ServerConfig {
             max_batch: 8,
             net: NetParams::LAN,
             max_strategy: MaxStrategy::Tournament,
+            prep_depth: 0,
         }
     }
 }
@@ -49,7 +71,10 @@ impl ServerConfig {
 /// Completed request with measured window costs and amortized shares.
 #[derive(Debug, Clone)]
 pub struct InferenceResult {
+    /// Submission id (FIFO order).
     pub id: u64,
+    /// Revealed class logits (empty at P0's view — the coordinator runs
+    /// in-process, so this is P1's opened output).
     pub logits: Vec<i64>,
     /// Wall-clock compute time of the window's MPC evaluation
     /// (in-process). Requests in a window complete together, so every
@@ -57,13 +82,18 @@ pub struct InferenceResult {
     pub compute: Duration,
     /// Modeled end-to-end latency of the window under the configured
     /// network (compute + rounds x RTT + bytes/bandwidth), split by
-    /// phase. This is the latency each request experienced.
+    /// phase. This is the latency each request experienced. With a warm
+    /// correlation pool the offline component is zero — the material was
+    /// generated off the request path.
     pub offline_modeled: Duration,
+    /// Modeled online-phase window latency (see `offline_modeled`).
     pub online_modeled: Duration,
     /// This request's amortized share of the window's communication
     /// (window bytes / window size; the remainder lands on the first
     /// request so the shares sum exactly to the window total).
     pub online_bytes: u64,
+    /// Amortized share of request-path offline bytes (0 for a warm
+    /// window).
     pub offline_bytes: u64,
     /// How many requests shared this window (1 = unbatched).
     pub batch_size: usize,
@@ -71,6 +101,12 @@ pub struct InferenceResult {
     /// `batch_size`, which is exactly the amortization: rounds/request is
     /// `window_online_rounds / batch_size`.
     pub window_online_rounds: u64,
+    /// Correlation-pool hits of this window (LUT invocations served from
+    /// ahead-of-time material).
+    pub window_pool_hits: u64,
+    /// Correlation-pool misses of this window (LUT invocations that
+    /// generated material inline on the request path).
+    pub window_pool_misses: u64,
 }
 
 /// The serving coordinator: queue in, batched MPC evaluation out.
@@ -81,24 +117,36 @@ pub struct Coordinator {
     next_id: u64,
     completed: u64,
     windows: u64,
+    /// Client-side mirror of the party-local tape pools: tapes available
+    /// per window size. Kept exact because pools change only through
+    /// [`Coordinator::prep_window`] and [`Coordinator::run_batch`], which
+    /// issue the same commands to all three parties.
+    pool: HashMap<usize, usize>,
+    prepped_windows: u64,
     last_snap: MetricsSnapshot,
 }
 
 impl Coordinator {
-    /// Start the coordinator: spawns the 3-party session and performs the
-    /// one-time model setup (weight sharing).
+    /// Start the coordinator: spawns the 3-party session, performs the
+    /// one-time model setup (weight sharing), and — when
+    /// `prep_depth > 0` — prefills the correlation pool so even the
+    /// first window is served warm.
     pub fn start(cfg: ServerConfig, weights: Weights) -> Coordinator {
         let session = Session::start(cfg.cfg, weights, cfg.session, cfg.max_strategy);
         let last_snap = session.snapshot();
-        Coordinator {
+        let mut c = Coordinator {
             cfg,
             session,
             queue: VecDeque::new(),
             next_id: 0,
             completed: 0,
             windows: 0,
+            pool: HashMap::new(),
+            prepped_windows: 0,
             last_snap,
-        }
+        };
+        c.maintain_pool();
+        c
     }
 
     /// Enqueue a request (quantized embeddings); returns its id.
@@ -110,13 +158,73 @@ impl Coordinator {
         id
     }
 
+    /// Queued, not-yet-served requests.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// Generate one ahead-of-time correlation tape for a future
+    /// `batch`-request window (offline-phase traffic only, off the
+    /// request path). The pool is window-size keyed; a window only
+    /// consumes a tape of exactly its size.
+    pub fn prep_window(&mut self, batch: usize) {
+        self.session.prep(batch);
+        *self.pool.entry(batch).or_insert(0) += 1;
+        self.prepped_windows += 1;
+        // Preprocessing happened between windows: advance the delta base
+        // so the next window's request-path accounting excludes it.
+        self.last_snap = self.session.snapshot();
+    }
+
+    /// The preprocessing loop body (DESIGN.md §Offline preprocessing):
+    /// top the pool of full-size (`max_batch`) window tapes back up to
+    /// `prep_depth`. Called automatically at start and after every
+    /// window; serving drivers may also call it whenever the queue is
+    /// idle. In this in-process simulation the "background" loop runs
+    /// synchronously between windows — the point is that it runs *off*
+    /// the metered request path.
+    pub fn maintain_pool(&mut self) {
+        let target = self.cfg.prep_depth;
+        let batch = self.cfg.max_batch;
+        while self.pooled(batch) < target {
+            self.prep_window(batch);
+        }
+    }
+
+    /// Ahead-of-time cover for the window the batcher would cut right
+    /// now: if requests are queued and no tape of that exact window size
+    /// is pooled, generate one. Serving drivers call this between submit
+    /// and drain so partial tail windows (size < `max_batch`) are served
+    /// warm too.
+    ///
+    /// Contract: call this immediately before [`Coordinator::run_batch`],
+    /// with no submits in between. Tapes are consumed only by an
+    /// exact-size window, so a tape prepped for a queue length that
+    /// grows before the drain stays pooled until a window of that size
+    /// recurs (at most `max_batch - 1` such tapes can accumulate; each
+    /// is one wasted offline pass plus its resident share material).
+        let n = self.queue.len().min(self.cfg.max_batch);
+        if n > 0 && self.pooled(n) == 0 {
+            self.prep_window(n);
+        }
+    }
+
+    /// Tapes currently pooled for windows of exactly `batch` requests.
+    pub fn pooled(&self, batch: usize) -> usize {
+        self.pool.get(&batch).copied().unwrap_or(0)
+    }
+
+    /// Total prep commands issued over this coordinator's lifetime.
+    pub fn prepped_windows(&self) -> u64 {
+        self.prepped_windows
+    }
+
     /// Drain one batch window: up to `max_batch` requests evaluated as a
     /// single batched MPC pass, with window-measured metrics attributed as
-    /// per-request amortized shares.
+    /// per-request amortized shares. A pooled correlation tape of the
+    /// window's exact size is consumed if present (warm window: zero
+    /// request-path offline communication), then the pool is topped back
+    /// up off the request path.
     pub fn run_batch(&mut self) -> Vec<InferenceResult> {
         let n = self.queue.len().min(self.cfg.max_batch);
         if n == 0 {
@@ -129,6 +237,13 @@ impl Coordinator {
             ids.push(id);
             inputs.push(input);
         }
+        // Mirror the party-local pool consumption (the session pops a
+        // tape iff one exists for exactly this window size).
+        if let Some(c) = self.pool.get_mut(&n) {
+            if *c > 0 {
+                *c -= 1;
+            }
+        }
         let t0 = Instant::now();
         let logits = self.session.infer_batch(&inputs);
         let compute = t0.elapsed();
@@ -137,7 +252,7 @@ impl Coordinator {
         // Window-level delta from the session meter.
         let snap = self.session.snapshot();
         let mut delta = snap.clone();
-        sub_snap(&mut delta, &self.last_snap);
+        delta.saturating_sub_assign(&self.last_snap);
         self.last_snap = snap;
         self.windows += 1;
 
@@ -146,6 +261,8 @@ impl Coordinator {
         let window_online = delta.total_bytes(Phase::Online);
         let window_offline = delta.total_bytes(Phase::Offline);
         let window_rounds = delta.max_rounds(Phase::Online);
+        let pool_hits = delta.pool_hits();
+        let pool_misses = delta.pool_misses();
 
         let share = |total: u64, i: usize| -> u64 {
             // equal shares; remainder on the first request so Σ == total
@@ -163,12 +280,19 @@ impl Coordinator {
                 offline_bytes: share(window_offline, i),
                 batch_size: n,
                 window_online_rounds: window_rounds,
+                window_pool_hits: pool_hits,
+                window_pool_misses: pool_misses,
             });
             self.completed += 1;
         }
+        // Refill for the next window — off the request path; the delta
+        // base advances inside prep_window so preprocessing bytes never
+        // land in a window's accounting.
+        self.maintain_pool();
         out
     }
 
+    /// Requests served so far.
     pub fn completed(&self) -> u64 {
         self.completed
     }
@@ -178,6 +302,7 @@ impl Coordinator {
         self.windows
     }
 
+    /// Copy of the session's cumulative meter.
     pub fn snapshot(&self) -> MetricsSnapshot {
         self.session.snapshot()
     }
@@ -191,11 +316,14 @@ impl Coordinator {
             0.0
         };
         format!(
-            "completed={} pending={} windows={} avg_batch={:.2} setup_mb={:.2} offline_mb={:.2} online_mb={:.2} online_rounds={}",
+            "completed={} pending={} windows={} avg_batch={:.2} prepped={} pool_hits={} pool_misses={} setup_mb={:.2} offline_mb={:.2} online_mb={:.2} online_rounds={}",
             self.completed,
             self.queue.len(),
             self.windows,
             amort,
+            self.prepped_windows,
+            s.pool_hits(),
+            s.pool_misses(),
             s.total_mb(Phase::Setup),
             s.total_mb(Phase::Offline),
             s.total_mb(Phase::Online),
@@ -203,22 +331,8 @@ impl Coordinator {
         )
     }
 
+    /// Stop the session threads.
     pub fn shutdown(self) {
         self.session.shutdown();
-    }
-}
-
-fn sub_snap(a: &mut MetricsSnapshot, b: &MetricsSnapshot) {
-    for l in 0..9 {
-        for p in 0..3 {
-            a.bytes[l][p] = a.bytes[l][p].saturating_sub(b.bytes[l][p]);
-            a.msgs[l][p] = a.msgs[l][p].saturating_sub(b.msgs[l][p]);
-        }
-    }
-    for party in 0..3 {
-        for p in 0..3 {
-            a.rounds[party][p] = a.rounds[party][p].saturating_sub(b.rounds[party][p]);
-            a.compute_ns[party][p] = a.compute_ns[party][p].saturating_sub(b.compute_ns[party][p]);
-        }
     }
 }

@@ -1,13 +1,18 @@
 //! A long-lived 3-party MPC session: model setup once, many inferences —
 //! served in cross-request batches so a window of queued requests pays
-//! one round budget ([`crate::model::secure::secure_infer_batch`]).
+//! one round budget ([`crate::model::secure::secure_infer_batch`]), plus
+//! an ahead-of-time preprocessing command that fills each party's
+//! correlation pool so warm windows run with zero offline-phase traffic
+//! (DESIGN.md §Offline preprocessing).
 
+use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::model::config::BertConfig;
-use crate::model::secure::{secure_infer_batch, SecureBert};
+use crate::model::secure::{prep_infer_batch, secure_infer_batch, SecureBert};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
@@ -23,6 +28,10 @@ enum Cmd {
         batch: usize,
         inputs: Option<Vec<Vec<i64>>>,
     },
+    /// Generate one window's correlation tape for a `batch`-sequence pass
+    /// ahead of time and stash it in the party-local pool. Entirely
+    /// input-independent (`Phase::Offline` traffic only).
+    Prep { batch: usize },
     Shutdown,
 }
 
@@ -31,11 +40,12 @@ pub struct Session {
     cmd_tx: Vec<Sender<Cmd>>,
     logits_rx: Receiver<Vec<Vec<i64>>>,
     /// Per-command completion acks from all three parties: `infer_batch`
-    /// waits for them so the session meter has quiesced before the
-    /// coordinator reads the window's delta.
+    /// and `prep` wait for them so the session meter has quiesced before
+    /// the coordinator reads the window's delta.
     done_rx: Receiver<()>,
     metrics: Arc<Metrics>,
     handles: Vec<JoinHandle<()>>,
+    /// The model shape this session serves (fixed per session).
     pub cfg: BertConfig,
 }
 
@@ -66,20 +76,49 @@ impl Session {
                 let w = if id == P0 { Some(&*weights) } else { None };
                 let mut model = SecureBert::setup(&ctx, cfg, w);
                 model.max_strategy = max_strategy;
+                // Party-local pool of ahead-of-time correlation tapes,
+                // keyed by window size. Every party receives the same
+                // command sequence, so all three pools evolve in lockstep
+                // and the pop-vs-generate decision below is symmetric.
+                let mut corr_pool: HashMap<
+                    usize,
+                    VecDeque<Vec<crate::protocols::prep::Correlation>>,
+                > = HashMap::new();
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::InferBatch { batch, inputs } => {
                             // Drop the queue-idle gap spent blocked in
                             // recv() so it is not billed as phase compute.
                             ctx.reset_timer();
+                            if let Some(tape) =
+                                corr_pool.get_mut(&batch).and_then(|q| q.pop_front())
+                            {
+                                ctx.install_corr(tape);
+                            }
                             let (logits, _) =
                                 secure_infer_batch(&ctx, &model, batch, inputs.as_deref());
+                            // A correctly-planned tape is consumed exactly;
+                            // anything left behind means the plan drifted
+                            // from the online pass.
+                            debug_assert_eq!(
+                                ctx.corr_pending(),
+                                0,
+                                "correlation tape not fully consumed (plan drift)"
+                            );
+                            ctx.clear_corr();
                             if id == P1 {
                                 let _ = logits_tx.send(logits);
                             }
                             // Attribute the window's trailing wall time to
                             // its phase before acking, so the coordinator's
                             // per-window delta is complete.
+                            ctx.flush_timer();
+                            let _ = done_tx.send(());
+                        }
+                        Cmd::Prep { batch } => {
+                            ctx.reset_timer();
+                            let tape = prep_infer_batch(&ctx, &model, batch);
+                            corr_pool.entry(batch).or_default().push_back(tape);
                             ctx.flush_timer();
                             let _ = done_tx.send(());
                         }
@@ -94,7 +133,9 @@ impl Session {
 
     /// Run one batched inference (blocking): the whole window is evaluated
     /// in a single MPC pass; returns the revealed logits per request, in
-    /// submission order.
+    /// submission order. If a correlation tape for this window size is
+    /// pooled (see [`Session::prep`]) the pass consumes it and performs
+    /// zero offline-phase communication.
     pub fn infer_batch(&self, inputs: &[Vec<i64>]) -> Vec<Vec<i64>> {
         assert!(!inputs.is_empty(), "empty batch");
         for input in inputs {
@@ -115,16 +156,32 @@ impl Session {
         self.logits_rx.recv().expect("party thread gone")
     }
 
+    /// Generate one window's worth of LUT correlations for a future
+    /// `batch`-sequence inference and pool it party-locally (blocking
+    /// until all three parties have stashed their tape). Offline-phase
+    /// traffic only — entirely off the request path.
+    pub fn prep(&self, batch: usize) {
+        assert!(batch > 0, "empty prep window");
+        for tx in &self.cmd_tx {
+            tx.send(Cmd::Prep { batch }).expect("party thread gone");
+        }
+        for _ in 0..3 {
+            self.done_rx.recv().expect("party thread gone");
+        }
+    }
+
     /// Run one single-request inference (blocking); returns the revealed
     /// logits. Equivalent to a batch of one.
     pub fn infer(&self, input: &[i64]) -> Vec<i64> {
         self.infer_batch(&[input.to_vec()]).pop().unwrap()
     }
 
+    /// Copy of the session's cumulative meter.
     pub fn snapshot(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
+    /// Stop the party threads and join them.
     pub fn shutdown(self) {
         for tx in &self.cmd_tx {
             let _ = tx.send(Cmd::Shutdown);
@@ -189,6 +246,49 @@ mod tests {
                 );
             }
         }
+        sess.shutdown();
+    }
+
+    #[test]
+    fn prepped_window_serves_with_zero_offline_delta() {
+        let (cfg, sess) = tiny_session();
+        let inputs: Vec<Vec<i64>> = (0..2).map(|i| synth_input(&cfg, 30 + i)).collect();
+        sess.prep(2);
+        let pre = sess.snapshot();
+        assert!(pre.total_bytes(Phase::Offline) > 0, "prep generated offline traffic");
+        let logits = sess.infer_batch(&inputs);
+        assert_eq!(logits.len(), 2);
+        let mut delta = sess.snapshot();
+        delta.saturating_sub_assign(&pre);
+        assert_eq!(
+            delta.total_bytes(Phase::Offline),
+            0,
+            "warm window must perform no offline-phase communication"
+        );
+        assert!(delta.total_bytes(Phase::Online) > 0);
+        assert_eq!(delta.prep_misses.iter().max().copied().unwrap(), 0);
+        assert!(delta.prep_hits.iter().max().copied().unwrap() > 0);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn pool_is_window_size_keyed() {
+        let (cfg, sess) = tiny_session();
+        sess.prep(2); // tape for a 2-window only
+        let pre = sess.snapshot();
+        // A 1-window must NOT consume the 2-window tape: inline fallback.
+        let _ = sess.infer(&synth_input(&cfg, 77));
+        let mut delta = sess.snapshot();
+        delta.saturating_sub_assign(&pre);
+        assert!(delta.total_bytes(Phase::Offline) > 0, "cold window generates inline");
+        assert!(delta.prep_misses.iter().max().copied().unwrap() > 0);
+        // The pooled 2-tape is still intact and serves the next 2-window.
+        let pre = sess.snapshot();
+        let inputs: Vec<Vec<i64>> = (0..2).map(|i| synth_input(&cfg, 40 + i)).collect();
+        sess.infer_batch(&inputs);
+        let mut delta = sess.snapshot();
+        delta.saturating_sub_assign(&pre);
+        assert_eq!(delta.total_bytes(Phase::Offline), 0);
         sess.shutdown();
     }
 }

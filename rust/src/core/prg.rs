@@ -91,6 +91,7 @@ pub struct Prg {
 }
 
 impl Prg {
+    /// A fresh generator keyed by `seed` (counter-mode ChaCha20 stream).
     pub fn new(seed: [u8; 16]) -> Self {
         Prg {
             key: key_words(seed),
@@ -126,6 +127,7 @@ impl Prg {
         self.used = 0;
     }
 
+    /// Next keystream byte.
     pub fn next_u8(&mut self) -> u8 {
         if self.used >= 64 {
             self.refill();
@@ -135,6 +137,7 @@ impl Prg {
         b
     }
 
+    /// Next 64 keystream bits (little-endian).
     pub fn next_u64(&mut self) -> u64 {
         let mut v = [0u8; 8];
         for b in v.iter_mut() {

@@ -11,25 +11,35 @@ pub struct Ring {
     bits: u32,
 }
 
+/// `Z_2^4` — the activation ring.
 pub const R4: Ring = Ring { bits: 4 };
+/// `Z_2^6` — the LayerNorm difference ring.
 pub const R6: Ring = Ring { bits: 6 };
+/// `Z_2^8` — the softmax denominator / argmax index ring.
 pub const R8: Ring = Ring { bits: 8 };
+/// `Z_2^10` — used by wide-table ablations.
 pub const R10: Ring = Ring { bits: 10 };
+/// `Z_2^16` — the linear-layer (RSS) ring.
 pub const R16: Ring = Ring { bits: 16 };
+/// `Z_2^32` — the LayerNorm variance-accumulation ring.
 pub const R32: Ring = Ring { bits: 32 };
+/// `Z_2^64` — full-width ring.
 pub const R64: Ring = Ring { bits: 64 };
 
 impl Ring {
+    /// The ring `Z_2^bits` (`1 ..= 64`).
     pub const fn new(bits: u32) -> Self {
         assert!(bits >= 1 && bits <= 64);
         Ring { bits }
     }
 
+    /// Bit width ℓ of the ring.
     #[inline(always)]
     pub const fn bits(self) -> u32 {
         self.bits
     }
 
+    /// Bit mask selecting the ring's ℓ low bits.
     #[inline(always)]
     pub const fn mask(self) -> u64 {
         if self.bits == 64 {
@@ -46,26 +56,31 @@ impl Ring {
         1usize << self.bits
     }
 
+    /// Reduce a value into the ring (`v mod 2^ℓ`).
     #[inline(always)]
     pub const fn reduce(self, v: u64) -> u64 {
         v & self.mask()
     }
 
+    /// `a + b mod 2^ℓ`.
     #[inline(always)]
     pub const fn add(self, a: u64, b: u64) -> u64 {
         (a.wrapping_add(b)) & self.mask()
     }
 
+    /// `a - b mod 2^ℓ`.
     #[inline(always)]
     pub const fn sub(self, a: u64, b: u64) -> u64 {
         (a.wrapping_sub(b)) & self.mask()
     }
 
+    /// `a · b mod 2^ℓ`.
     #[inline(always)]
     pub const fn mul(self, a: u64, b: u64) -> u64 {
         (a.wrapping_mul(b)) & self.mask()
     }
 
+    /// `-a mod 2^ℓ`.
     #[inline(always)]
     pub const fn neg(self, a: u64) -> u64 {
         (a.wrapping_neg()) & self.mask()

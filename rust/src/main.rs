@@ -2,7 +2,7 @@
 //!
 //! Subcommands (hand-rolled parser; clap is not in the offline registry):
 //!   repro infer  [--config tiny|base] [--seq N] [--threads T] [--net lan|wan|local]
-//!   repro serve  [--config tiny|base] [--requests N] [--batch B]
+//!   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D]
 //!   repro oracle [--artifacts DIR]        run the PJRT plaintext oracle
 //!   repro comm   [--seq N]                print metered comm (Table-4 row)
 //!   repro help
@@ -108,18 +108,28 @@ fn cmd_serve(flags: HashMap<String, String>) {
     let cfg = config_from(&flags);
     let n: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(4);
     let batch: usize = flags.get("batch").map(|s| s.parse().unwrap()).unwrap_or(4);
+    let prep: usize = flags.get("prep").map(|s| s.parse().unwrap()).unwrap_or(0);
     let (w, _) = prepared_model(cfg);
     let mut scfg = ServerConfig::new(cfg);
     scfg.max_batch = batch;
+    scfg.prep_depth = prep;
     let mut coord = Coordinator::start(scfg, w);
     for i in 0..n {
         coord.submit(synth_input(&cfg, 100 + i as u64));
     }
     let t0 = std::time::Instant::now();
     while coord.pending() > 0 {
+        if prep > 0 {
+            coord.prep_next_window(); // idle-time cover for partial tail windows
+        }
         let results = coord.run_batch();
         for r in &results {
-            println!("served request {} in {}", r.id, fmt_dur(r.compute));
+            println!(
+                "served request {} in {} ({})",
+                r.id,
+                fmt_dur(r.compute),
+                if r.window_pool_misses == 0 { "warm pool" } else { "cold pool" },
+            );
         }
     }
     let dt = t0.elapsed();
@@ -177,7 +187,7 @@ const HELP: &str = "repro — privacy-preserving quantized BERT inference (3-par
 
 USAGE:
   repro infer  [--config tiny|base] [--seq N] [--layers L] [--threads T] [--net lan|wan|local]
-  repro serve  [--config tiny|base] [--requests N] [--batch B] [--conf FILE]
+  repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--conf FILE]
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N]
   repro help

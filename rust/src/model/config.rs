@@ -3,11 +3,17 @@
 /// Architecture and quantization hyperparameters of the 1w/4a BERT.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BertConfig {
+    /// Encoder layer count.
     pub n_layers: usize,
+    /// Hidden width `d`.
     pub d_model: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Feed-forward inner width.
     pub d_ff: usize,
+    /// Sequence length (fixed per session/bucket).
     pub seq_len: usize,
+    /// Classifier output classes.
     pub n_classes: usize,
     /// Classifier weight scale (logits stay 16-bit; no requantization).
     pub scale_cls: i64,
@@ -15,6 +21,7 @@ pub struct BertConfig {
     pub sm_sx: f64,
     /// LayerNorm variance dequantization scale and epsilon.
     pub ln_sv: f64,
+    /// LayerNorm epsilon (folded into `T_ln`).
     pub ln_eps: f64,
 }
 
@@ -57,10 +64,12 @@ impl BertConfig {
         BertConfig { seq_len, ..Self::base() }
     }
 
+    /// Same config at a different depth (reduced-depth measurement).
     pub fn with_layers(self, n_layers: usize) -> Self {
         BertConfig { n_layers, ..self }
     }
 
+    /// Per-head width `d_model / n_heads`.
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
     }

@@ -11,8 +11,11 @@ use crate::core::prg::Prg;
 
 /// Public (revealed) embedding table + positional embeddings.
 pub struct PublicEmbedding {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Embedding width (must match the model's `d_model`).
     pub d_model: usize,
+    /// Longest supported sequence (positional table length).
     pub max_seq: usize,
     /// float token embeddings [vocab, d]
     tok: Vec<f32>,

@@ -22,24 +22,25 @@
 //! matmuls run through the sequence-batched Alg. 3 entry points
 //! (`rss_matmul_trc_seq`), which share each round's openings in a single
 //! message. Online rounds are therefore constant in both the batch size
-//! and the head count, while bytes scale linearly — the round-trip cost of
-//! an inference is amortized across the whole window (DESIGN.md §Batched
-//! serving).
+//! and the head count, while bytes scale linearly — the round-trip cost
+//! of an inference is amortized across the whole window
+//! (DESIGN.md §Batched serving).
 
 use crate::core::ring::{sign_extend, R16, R4};
 use crate::model::config::BertConfig;
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, P0, P1};
-use crate::protocols::convert::{convert_to_rss, extend_ring_many};
-use crate::protocols::layernorm::{layernorm_rows, LnParams};
+use crate::protocols::convert::{convert_to_rss, extend_ring_many, extension_plan};
+use crate::protocols::layernorm::{layernorm_plan, layernorm_rows, LnParams};
 use crate::protocols::lut::{lut_eval, LutTable};
 use crate::protocols::matmul::{
     rss_matmul_full, rss_matmul_trc, rss_matmul_trc_multi, rss_matmul_trc_seq,
 };
 use crate::protocols::max::MaxStrategy;
+use crate::protocols::prep::{run_plan, Correlation, PlanOp};
 use crate::protocols::relu::relu_to_rss16;
-use crate::protocols::softmax::{softmax_rows, SoftmaxTables};
-use crate::protocols::tables::ln_div_table;
+use crate::protocols::softmax::{softmax_plan, softmax_rows, SoftmaxTables};
+use crate::protocols::tables::{ln_div_table, relu16_table};
 use crate::sharing::additive::{reveal2, share2};
 use crate::sharing::rss::{reshare_a2_to_rss, share_rss};
 use crate::sharing::{A2, Rss};
@@ -63,7 +64,9 @@ pub struct SecureLayer {
 
 /// The secure model held by one party after setup.
 pub struct SecureBert {
+    /// The architecture being served.
     pub cfg: BertConfig,
+    /// Which `Π_max` realization softmax uses (serving knob).
     pub max_strategy: MaxStrategy,
     layers: Vec<SecureLayer>,
     cls_w: Rss,
@@ -151,6 +154,66 @@ impl SecureBert {
             }
         })
     }
+}
+
+/// Preprocessing plan for one [`secure_layer_batch`] call: the exact
+/// sequence of LUT invocations (tables, batch sizes, Δ' groupings) the
+/// layer will consume for a window of `batch` sequences, derived from
+/// public shapes only (model config + batch size + `MaxStrategy`).
+/// Mirrors the layer dataflow below step for step; the warm/cold parity
+/// tests in `rust/tests/prep_tests.rs` pin the alignment
+/// (DESIGN.md §Offline preprocessing).
+pub fn plan_layer_batch(m: &SecureBert, li: usize, batch: usize) -> Vec<PlanOp> {
+    let cfg = &m.cfg;
+    let (s, d, dh, nh) = (cfg.seq_len, cfg.d_model, cfg.d_head(), cfg.n_heads);
+    let rows = batch * s;
+    let blocks = batch * nh;
+    let l = &m.layers[li];
+    let ext = |n: usize| extension_plan(R4, R16, true, n);
+    let mut ops = Vec::new();
+    // ---- attention
+    ops.push(ext(rows * d)); // h4 → h16
+    ops.push(PlanOp::lut(l.conv_att.clone(), blocks * s * dh)); // s_att·q extension
+    ops.push(ext(blocks * s * dh)); // k heads
+    ops.extend(softmax_plan(&m.sm, blocks * s, s, m.max_strategy));
+    ops.push(PlanOp::lut(l.conv_av.clone(), blocks * s * s)); // s_av·attn extension
+    ops.push(ext(blocks * s * dh)); // v heads
+    ops.push(ext(rows * d)); // attention context
+    // ---- residual 1 + LN1 (both operands share one opening)
+    ops.push(ext(2 * rows * d));
+    ops.extend(layernorm_plan(&l.ln1, rows, d));
+    // ---- FFN
+    ops.push(ext(rows * d)); // h1 → FC1
+    ops.push(PlanOp::lut(relu16_table(), rows * cfg.d_ff));
+    // ---- residual 2 + LN2
+    ops.push(ext(2 * rows * d));
+    ops.extend(layernorm_plan(&l.ln2, rows, d));
+    ops
+}
+
+/// Preprocessing plan for a whole [`secure_infer_batch`] window of
+/// `batch` sequences: every layer's plan in order plus the classifier's
+/// CLS-row conversion. This is the `spec` the serving coordinator's
+/// correlation pool is keyed by — one plan per (model, bucket shape,
+/// window size) triple. See DESIGN.md §Offline preprocessing.
+pub fn plan_infer_batch(m: &SecureBert, batch: usize) -> Vec<PlanOp> {
+    let mut ops = Vec::new();
+    for li in 0..m.cfg.n_layers {
+        ops.extend(plan_layer_batch(m, li, batch));
+    }
+    // classifier: one 4→16 conversion over the batch's CLS rows
+    ops.push(extension_plan(R4, R16, true, batch * m.cfg.d_model));
+    ops
+}
+
+/// Produce the full correlation tape for a `batch`-sequence window ahead
+/// of time: executes [`plan_infer_batch`] under `Phase::Offline` with
+/// zero dependence on any request. Install the result with
+/// `PartyCtx::install_corr` and the next [`secure_infer_batch`] of the
+/// same shape performs **no** offline-phase communication
+/// (DESIGN.md §Offline preprocessing).
+pub fn prep_infer_batch(ctx: &PartyCtx, m: &SecureBert, batch: usize) -> Vec<Correlation> {
+    run_plan(ctx, &plan_infer_batch(m, batch))
 }
 
 /// Gather the per-head column blocks of a `[batch*s, d]` activation into

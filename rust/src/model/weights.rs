@@ -1,8 +1,8 @@
 //! Model weights: loading the python-generated artifact
 //! (`artifacts/bert_tiny.weights.bin`, format in python model.py
 //! `write_weights`) and generating synthetic BERT-base-scale weights in
-//! Rust (the BiT checkpoint is unreachable offline — DESIGN.md
-//! §Substitutions #1).
+//! Rust (the BiT checkpoint is unreachable offline —
+//! DESIGN.md §Substitutions #1).
 
 use std::collections::HashMap;
 use std::io::Read;
@@ -16,11 +16,14 @@ use crate::core::prg::Prg;
 /// A named integer tensor (row-major, values are *signed* logical values).
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Flat row-major signed values.
     pub data: Vec<i64>,
 }
 
 impl Tensor {
+    /// Element count (product of dimensions).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -28,18 +31,23 @@ impl Tensor {
 
 /// Full weight set: tensors + calibrated per-op scales.
 pub struct Weights {
+    /// The architecture these weights are shaped for.
     pub cfg: BertConfig,
+    /// Named tensors (`layer{i}.wq`, `cls.w`, ...).
     pub tensors: HashMap<String, Tensor>,
+    /// Named calibrated scales (`layer{i}.s_qkv`, ...).
     pub scales: HashMap<String, i64>,
 }
 
 impl Weights {
+    /// Tensor by name (panics on a missing name — a shape-config bug).
     pub fn tensor(&self, name: &str) -> &Tensor {
         self.tensors
             .get(name)
             .unwrap_or_else(|| panic!("missing tensor {name}"))
     }
 
+    /// Scale by name (panics on a missing name).
     pub fn scale(&self, name: &str) -> i64 {
         *self
             .scales

@@ -6,25 +6,43 @@
 //! pairwise-shared PRGs and the metrics sink come from the session runner.
 
 use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::core::prg::Prg;
+use crate::protocols::prep::{CorrShape, Correlation};
 use crate::transport::{build_mesh, Metrics, MetricsSnapshot, Net, NetParams, Phase};
 
+/// Party id of the model owner.
 pub const P0: usize = 0;
+/// Party id of the data owner.
 pub const P1: usize = 1;
+/// Party id of the computing assistant.
 pub const P2: usize = 2;
 
 /// Per-party execution context handed to SPMD protocol code.
 pub struct PartyCtx {
+    /// This party's id (`P0` | `P1` | `P2`).
     pub id: usize,
+    /// Channels to the other two parties (+ the shared metrics sink).
     pub net: Net,
     /// PRG shared with each other party (same stream on both sides; both
     /// parties must draw in lockstep — guaranteed by SPMD protocol code).
     pair_prg: [RefCell<Prg>; 3],
     /// This party's private PRG.
     pub own_prg: RefCell<Prg>,
+    /// Pairwise PRGs dedicated to *preprocessing* (correlation
+    /// generation). Domain-separated from `pair_prg` so producing LUT
+    /// material ahead of time consumes exactly the PRG positions inline
+    /// generation would — warm- and cold-pool runs stay bit-for-bit
+    /// identical (DESIGN.md §Offline preprocessing).
+    prep_pair_prg: [RefCell<Prg>; 3],
+    /// This party's private preprocessing PRG (P0's Δ stream).
+    prep_own_prg: RefCell<Prg>,
+    /// FIFO of ahead-of-time correlations for the *next* online pass;
+    /// filled by `install_corr`, drained shape-checked by `pop_corr`.
+    corr_store: RefCell<VecDeque<Correlation>>,
     phase: Cell<Phase>,
     phase_started: Cell<Instant>,
     /// Worker threads available for data-parallel protocol steps.
@@ -37,17 +55,23 @@ impl PartyCtx {
     /// deployment — communication-free either way).
     pub fn new(id: usize, net: Net, master_seed: [u8; 16], threads: usize) -> PartyCtx {
         let mk_pair = |other: usize| RefCell::new(Prg::derive(master_seed, &pair_label(id, other)));
+        let mk_prep =
+            |other: usize| RefCell::new(Prg::derive(master_seed, &format!("prep-{}", pair_label(id, other))));
         PartyCtx {
             id,
             net,
             pair_prg: [mk_pair(0), mk_pair(1), mk_pair(2)],
             own_prg: RefCell::new(Prg::derive(master_seed, &format!("own-{id}"))),
+            prep_pair_prg: [mk_prep(0), mk_prep(1), mk_prep(2)],
+            prep_own_prg: RefCell::new(Prg::derive(master_seed, &format!("prep-own-{id}"))),
+            corr_store: RefCell::new(VecDeque::new()),
             phase: Cell::new(Phase::Online),
             phase_started: Cell::new(Instant::now()),
             threads,
         }
     }
 
+    /// The currently active protocol phase (messages are tagged with it).
     pub fn phase(&self) -> Phase {
         self.phase.get()
     }
@@ -91,10 +115,60 @@ impl PartyCtx {
         self.pair_prg[other].borrow_mut()
     }
 
+    /// Mutable access to the *preprocessing* PRG shared with `other`
+    /// (used only by the correlation producers in `protocols::prep`).
+    pub fn prep_pair_prg(&self, other: usize) -> std::cell::RefMut<'_, Prg> {
+        debug_assert_ne!(other, self.id);
+        self.prep_pair_prg[other].borrow_mut()
+    }
+
+    /// Mutable access to this party's private preprocessing PRG.
+    pub fn prep_own_prg(&self) -> std::cell::RefMut<'_, Prg> {
+        self.prep_own_prg.borrow_mut()
+    }
+
+    /// Queue an ahead-of-time correlation tape for consumption by the
+    /// next online pass (appended after any still-pending items).
+    pub fn install_corr(&self, tape: Vec<Correlation>) {
+        self.corr_store.borrow_mut().extend(tape);
+    }
+
+    /// Pop the next stored correlation iff its shape matches `shape`.
+    /// A mismatching front means the tape no longer aligns with the
+    /// online pass (plan drift): the remainder is dropped so every party
+    /// symmetrically falls back to inline generation instead of consuming
+    /// material produced for a different lookup.
+    pub fn pop_corr(&self, shape: &CorrShape) -> Option<Correlation> {
+        let mut q = self.corr_store.borrow_mut();
+        match q.front() {
+            Some(front) if front.shape == *shape => q.pop_front(),
+            Some(_) => {
+                q.clear();
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Correlations still queued (0 after a fully-consumed tape).
+    pub fn corr_pending(&self) -> usize {
+        self.corr_store.borrow().len()
+    }
+
+    /// Drop any queued correlations; returns how many were discarded.
+    pub fn clear_corr(&self) -> usize {
+        let mut q = self.corr_store.borrow_mut();
+        let n = q.len();
+        q.clear();
+        n
+    }
+
+    /// The party after this one in the P0 → P1 → P2 → P0 cycle.
     pub fn next(&self) -> usize {
         (self.id + 1) % 3
     }
 
+    /// The party before this one in the cycle.
     pub fn prev(&self) -> usize {
         (self.id + 2) % 3
     }
@@ -103,6 +177,7 @@ impl PartyCtx {
 /// Session configuration.
 #[derive(Clone, Copy)]
 pub struct SessionCfg {
+    /// Seed every per-party and pairwise PRG stream is derived from.
     pub master_seed: [u8; 16],
     /// Worker threads per party for data-parallel steps.
     pub threads: usize,

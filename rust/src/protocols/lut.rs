@@ -19,20 +19,39 @@
 //! The table *content* is a deployment secret of P0 (it encodes private
 //! scale factors); in this SPMD simulation every party constructs the
 //! [`LutTable`] object but only P0's closure ever reads the entries.
+//!
+//! # Offline/online split
+//!
+//! Every protocol here is decomposed into an input-independent producer
+//! living in [`super::prep`] (`lut_offline` / `lut2_offline` /
+//! `lut2_multi_offline`) and a pure online consumer in this module
+//! ([`lut_online`], [`lut2_online_shared_y`], [`lut2_multi_online`]).
+//! The classic entry points (`lut_eval`, `lut2_eval_shared_y`,
+//! `lut2_eval_multi`) first try to *pop* a matching ahead-of-time
+//! [`Correlation`] from the party's store and only fall back to inline
+//! generation on a miss — see DESIGN.md §Offline preprocessing for the
+//! correlation lifecycle.
 
 use crate::core::ring::Ring;
 use crate::party::{PartyCtx, P0, P1, P2};
 use crate::sharing::A2;
 
+use super::prep::{self, CorrShape, Correlation};
+
 /// A public-shape, P0-content lookup table for `f: Z_2^{ℓ'} -> Z_2^ℓ`.
 #[derive(Clone)]
 pub struct LutTable {
+    /// Input ring `Z_2^{ℓ'}` (the index domain).
     pub in_ring: Ring,
+    /// Output ring `Z_2^ℓ`.
     pub out_ring: Ring,
+    /// Table contents — secret to P0 in a real deployment.
     pub entries: Vec<u64>,
 }
 
 impl LutTable {
+    /// Tabulate `f` over the whole input ring, reducing outputs into
+    /// `out_ring`.
     pub fn from_fn(in_ring: Ring, out_ring: Ring, f: impl Fn(u64) -> u64) -> Self {
         let entries = (0..in_ring.size() as u64)
             .map(|v| out_ring.reduce(f(v)))
@@ -40,6 +59,7 @@ impl LutTable {
         LutTable { in_ring, out_ring, entries }
     }
 
+    /// Number of entries (= `in_ring.size()`).
     pub fn size(&self) -> usize {
         self.entries.len()
     }
@@ -49,13 +69,18 @@ impl LutTable {
 /// row-major (`x‖y`, i.e. entry `x * 2^b2 + y`).
 #[derive(Clone)]
 pub struct LutTable2 {
+    /// Outer input ring `Z_2^{b1}`.
     pub x_ring: Ring,
+    /// Inner input ring `Z_2^{b2}`.
     pub y_ring: Ring,
+    /// Output ring `Z_2^ℓ`.
     pub out_ring: Ring,
+    /// Row-major table contents — secret to P0 in a real deployment.
     pub entries: Vec<u64>,
 }
 
 impl LutTable2 {
+    /// Tabulate `f` over the full `x‖y` product domain.
     pub fn from_fn(x_ring: Ring, y_ring: Ring, out_ring: Ring, f: impl Fn(u64, u64) -> u64) -> Self {
         let mut entries = Vec::with_capacity(x_ring.size() * y_ring.size());
         for x in 0..x_ring.size() as u64 {
@@ -67,63 +92,21 @@ impl LutTable2 {
     }
 }
 
-/// Offline half of `Π_look` for a batch of `n` independent lookups of the
-/// same table: P0 derives fresh (Δ_i, shifted-table_i) pairs; P1's shares
-/// come from the pairwise seed, P2 receives the correction in one message.
-///
-/// Returns this party's table shares (concatenated) and Δ shares.
-fn lut_offline(ctx: &PartyCtx, t: &LutTable, n: usize) -> (Vec<u64>, Vec<u64>) {
-    let size = t.size();
-    let (inr, outr) = (t.in_ring, t.out_ring);
-    let phase = ctx.phase();
-    match ctx.id {
-        P0 => {
-            // Fresh private Δs; shifted tables; share via seed-with-P1.
-            // Randomness is drawn in bulk (one table-share vec + one Δ vec)
-            // so both sides of the pairwise stream stay in lockstep while
-            // using the fast block-sliced PRG path (§Perf).
-            let mut own = ctx.own_prg.borrow_mut();
-            let mut pair = ctx.pair_prg(P1);
-            let mut corr = pair.ring_vec(outr, n * size);
-            let mut dcorr = pair.ring_vec(inr, n);
-            for i in 0..n {
-                let delta = own.ring_elem(inr);
-                let base = i * size;
-                for j in 0..size {
-                    let shifted = t.entries[(j + delta as usize) % size];
-                    corr[base + j] = outr.sub(shifted, corr[base + j]);
-                }
-                dcorr[i] = inr.sub(delta, dcorr[i]);
-            }
-            ctx.net.send_ring(P2, phase, outr, &corr);
-            ctx.net.send_ring(P2, phase, inr, &dcorr);
-            (Vec::new(), Vec::new())
-        }
-        P1 => {
-            let mut pair = ctx.pair_prg(P0);
-            let tsh = pair.ring_vec(outr, n * size);
-            let dsh = pair.ring_vec(inr, n);
-            (tsh, dsh)
-        }
-        P2 => {
-            let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
-            let dsh = ctx.net.recv_ring(P0, phase, inr, n);
-            (tsh, dsh)
-        }
-        _ => unreachable!(),
-    }
-}
-
-/// `Π_look` on a batch: one fresh masked table per element, one online
-/// round (P1/P2 exchange all δ values in a single message).
-pub fn lut_eval(ctx: &PartyCtx, t: &LutTable, xs: &A2) -> A2 {
+/// Online half of `Π_look` (Alg. 1): open `δ = x − Δ` in one P1↔P2
+/// exchange and index this party's share of the Δ-shifted table. All
+/// table material comes from `corr` ([`super::prep::lut_offline`]), so
+/// the only communication here is the δ opening — `Phase::Online`
+/// exactly matches the paper's online column
+/// (DESIGN.md §Offline preprocessing).
+pub fn lut_online(ctx: &PartyCtx, t: &LutTable, corr: &Correlation, xs: &A2) -> A2 {
     debug_assert_eq!(xs.ring, t.in_ring);
     let n = xs.len;
     let size = t.size();
-    let (tsh, dsh) = ctx.with_phase(crate::transport::Phase::Offline, |c| lut_offline(c, t, n));
+    debug_assert_eq!(corr.shape, CorrShape::lut1(t, n));
     if ctx.id == P0 {
         return A2::empty(t.out_ring, n);
     }
+    let (tsh, dsh) = (&corr.tsh[0], &corr.dx);
     // Online: open δ = x - Δ.
     let delta_sh: Vec<u64> = (0..n)
         .map(|i| t.in_ring.sub(xs.vals[i], dsh[i]))
@@ -137,6 +120,17 @@ pub fn lut_eval(ctx: &PartyCtx, t: &LutTable, xs: &A2) -> A2 {
         })
         .collect();
     A2 { ring: t.out_ring, vals, len: n }
+}
+
+/// `Π_look` on a batch: one fresh masked table per element, one online
+/// round (P1/P2 exchange all δ values in a single message). Consumes an
+/// ahead-of-time correlation when the store holds one of matching shape
+/// (zero offline-phase traffic on the request path); otherwise generates
+/// inline under `Phase::Offline` — see [`super::prep::acquire`].
+pub fn lut_eval(ctx: &PartyCtx, t: &LutTable, xs: &A2) -> A2 {
+    let n = xs.len;
+    let corr = prep::acquire(ctx, CorrShape::lut1(t, n), |c| prep::lut_offline(c, t, n));
+    lut_online(ctx, t, &corr, xs)
 }
 
 /// `Π_look` over SEVERAL share vectors of the same table with ONE batched
@@ -158,88 +152,32 @@ pub fn lut_eval_many(ctx: &PartyCtx, t: &LutTable, xs: &[&A2]) -> Vec<A2> {
     parts
 }
 
-/// Offline half for two-input tables. `fresh_y = false` uses one Δ' per
-/// `group` consecutive elements (the shared-input optimization).
-fn lut2_offline(
-    ctx: &PartyCtx,
-    t: &LutTable2,
-    n: usize,
-    groups: usize,
-) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
-    let (bx, by, outr) = (t.x_ring, t.y_ring, t.out_ring);
-    let (sx, sy) = (bx.size(), by.size());
-    let size = sx * sy;
-    let phase = ctx.phase();
-    match ctx.id {
-        P0 => {
-            let mut own = ctx.own_prg.borrow_mut();
-            let mut pair = ctx.pair_prg(P1);
-            // one Δ' per group; bulk randomness draws (§Perf)
-            let dys: Vec<u64> = (0..groups).map(|_| own.ring_elem(by)).collect();
-            let per_group = n / groups;
-            let mut corr = pair.ring_vec(outr, n * size);
-            let mut dxc = pair.ring_vec(bx, n);
-            let mut dyc = pair.ring_vec(by, groups);
-            for g in 0..groups {
-                let dy = dys[g] as usize;
-                for e in 0..per_group {
-                    let i = g * per_group + e;
-                    let dx = own.ring_elem(bx);
-                    let base = i * size;
-                    for u in 0..sx {
-                        // inner index shift: precompute the dy-rotated row
-                        let src_row = (bx.add(u as u64, dx) as usize) * sy;
-                        for v in 0..sy {
-                            let src = src_row + ((v + dy) & (sy - 1));
-                            corr[base + u * sy + v] =
-                                outr.sub(t.entries[src], corr[base + u * sy + v]);
-                        }
-                    }
-                    dxc[i] = bx.sub(dx, dxc[i]);
-                }
-                dyc[g] = by.sub(dys[g], dyc[g]);
-            }
-            ctx.net.send_ring(P2, phase, outr, &corr);
-            ctx.net.send_ring(P2, phase, bx, &dxc);
-            ctx.net.send_ring(P2, phase, by, &dyc);
-            (Vec::new(), Vec::new(), Vec::new())
-        }
-        P1 => {
-            let mut pair = ctx.pair_prg(P0);
-            let tsh = pair.ring_vec(outr, n * size);
-            let dxs = pair.ring_vec(bx, n);
-            let dys = pair.ring_vec(by, groups);
-            (tsh, dxs, dys)
-        }
-        P2 => {
-            let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
-            let dxs = ctx.net.recv_ring(P0, phase, bx, n);
-            let dys = ctx.net.recv_ring(P0, phase, by, groups);
-            (tsh, dxs, dys)
-        }
-        _ => unreachable!(),
-    }
-}
-
-/// `Π_look^{b1,b2}` with the shared-y optimization: `xs` has
-/// `groups * per_group` elements; `ys` has one element per group. Each
-/// group's lookups reuse one opened `y − Δ'`.
+/// Online half of `Π_look^{b1,b2}` (Alg. 2) with the shared-y grouping:
+/// `xs` has `groups * per_group` elements; `ys` has one element per
+/// group. Each group's lookups reuse one opened `y − Δ'`. All table
+/// material comes from `corr` ([`super::prep::lut2_offline`]).
 ///
 /// Online cost: open `n` b1-bit values + `groups` b2-bit values, one round.
-pub fn lut2_eval_shared_y(ctx: &PartyCtx, t: &LutTable2, xs: &A2, ys: &A2) -> A2 {
+pub fn lut2_online_shared_y(
+    ctx: &PartyCtx,
+    t: &LutTable2,
+    corr: &Correlation,
+    xs: &A2,
+    ys: &A2,
+) -> A2 {
     debug_assert_eq!(xs.ring, t.x_ring);
     debug_assert_eq!(ys.ring, t.y_ring);
     let n = xs.len;
     let groups = ys.len;
     debug_assert!(groups > 0 && n % groups == 0);
+    debug_assert_eq!(corr.shape, CorrShape::lut2(t, n, groups));
     let per_group = n / groups;
     let (sx, sy) = (t.x_ring.size(), t.y_ring.size());
     let size = sx * sy;
-    let (tsh, dxs, dys) =
-        ctx.with_phase(crate::transport::Phase::Offline, |c| lut2_offline(c, t, n, groups));
     if ctx.id == P0 {
         return A2::empty(t.out_ring, n);
     }
+    let (tsh, dxs, dys) = (&corr.tsh[0], &corr.dx, &corr.dy);
     // Open δx (n values) and δy (groups values) in one combined message.
     let my_dx: Vec<u64> = (0..n).map(|i| t.x_ring.sub(xs.vals[i], dxs[i])).collect();
     let my_dy: Vec<u64> = (0..groups).map(|g| t.y_ring.sub(ys.vals[g], dys[g])).collect();
@@ -263,19 +201,33 @@ pub fn lut2_eval_shared_y(ctx: &PartyCtx, t: &LutTable2, xs: &A2, ys: &A2) -> A2
     A2 { ring: t.out_ring, vals, len: n }
 }
 
+/// `Π_look^{b1,b2}` with the shared-y optimization: pool-or-inline
+/// correlation acquisition ([`super::prep::acquire`]) followed by
+/// [`lut2_online_shared_y`].
+pub fn lut2_eval_shared_y(ctx: &PartyCtx, t: &LutTable2, xs: &A2, ys: &A2) -> A2 {
+    let (n, groups) = (xs.len, ys.len);
+    let corr = prep::acquire(ctx, CorrShape::lut2(t, n, groups), |c| {
+        prep::lut2_offline(c, t, n, groups)
+    });
+    lut2_online_shared_y(ctx, t, &corr, xs, ys)
+}
+
 /// `Π_look^{b1,b2}` with independent y per element (groups == n).
 pub fn lut2_eval(ctx: &PartyCtx, t: &LutTable2, xs: &A2, ys: &A2) -> A2 {
     debug_assert_eq!(xs.len, ys.len);
     lut2_eval_shared_y(ctx, t, xs, ys)
 }
 
-/// Evaluate SEVERAL two-input tables on the SAME inputs with one opening —
-/// the full form of the paper's §Communication Optimization ("by setting
-/// Δ^(1) = Δ^(2) ... we only need to open x − Δ once ... reduces the
-/// online communication cost by up to 50%"). Each table still gets a
-/// fresh masked copy offline (content security); only the openings are
-/// shared. Used by the sorting network's (min, max) compare-exchange.
-pub fn lut2_eval_multi(ctx: &PartyCtx, ts: &[&LutTable2], xs: &A2, ys: &A2) -> Vec<A2> {
+/// Online half of the shared-opening multi-table lookup: ONE `(δx, δy)`
+/// opening pair serves every table in `ts`. All masked-table material
+/// comes from `corr` ([`super::prep::lut2_multi_offline`]).
+pub fn lut2_multi_online(
+    ctx: &PartyCtx,
+    ts: &[&LutTable2],
+    corr: &Correlation,
+    xs: &A2,
+    ys: &A2,
+) -> Vec<A2> {
     debug_assert!(!ts.is_empty());
     let t0 = ts[0];
     for t in ts {
@@ -286,67 +238,13 @@ pub fn lut2_eval_multi(ctx: &PartyCtx, ts: &[&LutTable2], xs: &A2, ys: &A2) -> V
     debug_assert_eq!(ys.ring, t0.y_ring);
     debug_assert_eq!(xs.len, ys.len);
     let n = xs.len;
+    debug_assert_eq!(corr.shape, CorrShape::lut2_multi(ts, n));
     let (sx, sy) = (t0.x_ring.size(), t0.y_ring.size());
     let size = sx * sy;
-    let phase_off = crate::transport::Phase::Offline;
-
-    // Offline: ONE (Δ, Δ') pair per element, one masked copy per table.
-    let (tshs, dxs, dys) = ctx.with_phase(phase_off, |ctx| match ctx.id {
-        P0 => {
-            let mut own = ctx.own_prg.borrow_mut();
-            let mut pair = ctx.pair_prg(P1);
-            let mut all_corr: Vec<Vec<u64>> = Vec::with_capacity(ts.len());
-            let dxv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.x_ring)).collect();
-            let dyv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.y_ring)).collect();
-            for t in ts {
-                let mut corr = pair.ring_vec(t.out_ring, n * size);
-                for i in 0..n {
-                    let (dx, dy) = (dxv[i] as usize, dyv[i] as usize);
-                    let base = i * size;
-                    for u in 0..sx {
-                        let src_row = ((u + dx) & (sx - 1)) * sy;
-                        for v in 0..sy {
-                            let src = src_row + ((v + dy) & (sy - 1));
-                            corr[base + u * sy + v] =
-                                t.out_ring.sub(t.entries[src], corr[base + u * sy + v]);
-                        }
-                    }
-                }
-                ctx.net.send_ring(P2, ctx.phase(), t.out_ring, &corr);
-                all_corr.push(Vec::new());
-            }
-            let mut dxc = pair.ring_vec(t0.x_ring, n);
-            let mut dyc = pair.ring_vec(t0.y_ring, n);
-            for i in 0..n {
-                dxc[i] = t0.x_ring.sub(dxv[i], dxc[i]);
-                dyc[i] = t0.y_ring.sub(dyv[i], dyc[i]);
-            }
-            ctx.net.send_ring(P2, ctx.phase(), t0.x_ring, &dxc);
-            ctx.net.send_ring(P2, ctx.phase(), t0.y_ring, &dyc);
-            (all_corr, Vec::new(), Vec::new())
-        }
-        P1 => {
-            let mut pair = ctx.pair_prg(P0);
-            let tshs: Vec<Vec<u64>> =
-                ts.iter().map(|t| pair.ring_vec(t.out_ring, n * size)).collect();
-            let dxs = pair.ring_vec(t0.x_ring, n);
-            let dys = pair.ring_vec(t0.y_ring, n);
-            (tshs, dxs, dys)
-        }
-        P2 => {
-            let tshs: Vec<Vec<u64>> = ts
-                .iter()
-                .map(|t| ctx.net.recv_ring(P0, ctx.phase(), t.out_ring, n * size))
-                .collect();
-            let dxs = ctx.net.recv_ring(P0, ctx.phase(), t0.x_ring, n);
-            let dys = ctx.net.recv_ring(P0, ctx.phase(), t0.y_ring, n);
-            (tshs, dxs, dys)
-        }
-        _ => unreachable!(),
-    });
     if ctx.id == P0 {
         return ts.iter().map(|t| A2::empty(t.out_ring, n)).collect();
     }
+    let (tshs, dxs, dys) = (&corr.tsh, &corr.dx, &corr.dy);
 
     // Online: ONE opening pair serves every table.
     let my_dx: Vec<u64> = (0..n).map(|i| t0.x_ring.sub(xs.vals[i], dxs[i])).collect();
@@ -372,6 +270,22 @@ pub fn lut2_eval_multi(ctx: &PartyCtx, ts: &[&LutTable2], xs: &A2, ys: &A2) -> V
             A2 { ring: t.out_ring, vals, len: n }
         })
         .collect()
+}
+
+/// Evaluate SEVERAL two-input tables on the SAME inputs with one opening —
+/// the full form of the paper's §Communication Optimization ("by setting
+/// Δ^(1) = Δ^(2) ... we only need to open x − Δ once ... reduces the
+/// online communication cost by up to 50%"). Each table still gets a
+/// fresh masked copy offline (content security); only the openings are
+/// shared. Used by the sorting network's (min, max) compare-exchange.
+/// Pool-or-inline correlation acquisition like [`lut_eval`].
+pub fn lut2_eval_multi(ctx: &PartyCtx, ts: &[&LutTable2], xs: &A2, ys: &A2) -> Vec<A2> {
+    debug_assert!(!ts.is_empty());
+    let n = xs.len;
+    let corr = prep::acquire(ctx, CorrShape::lut2_multi(ts, n), |c| {
+        prep::lut2_multi_offline(c, ts, n)
+    });
+    lut2_multi_online(ctx, ts, &corr, xs, ys)
 }
 
 #[cfg(test)]

@@ -7,15 +7,16 @@
 //! 2-input 4x4-bit table `T(a‖b) = max(a, b)` evaluated in a reduction
 //! tree (`Tournament`, ceil(log2 n) rounds) or a left fold (`Linear`,
 //! n-1 rounds — the WAN-ablation strawman). Both are oblivious: every
-//! comparison path is taken for every input. See DESIGN.md
-//! §Substitutions #5; the round/communication tradeoff is benched in
-//! `benches/micro.rs`.
+//! comparison path is taken for every input. See
+//! DESIGN.md §Substitutions #5; the round/communication tradeoff is
+//! benched in `benches/micro.rs`.
 
 use crate::core::ring::R4;
 use crate::party::PartyCtx;
 use crate::sharing::A2;
 
 use super::lut::{lut2_eval, LutTable2};
+use super::prep::PlanOp;
 
 /// Which Π_max realization to use.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -35,6 +36,30 @@ pub fn max_table() -> LutTable2 {
     LutTable2::from_fn(R4, R4, R4, |a, b| {
         R4.encode(R4.decode(a).max(R4.decode(b)))
     })
+}
+
+/// Preprocessing plan for [`max_rows`]: the exact LUT-call sequence (in
+/// order, with batch geometry) a `max_rows(rows, n, strat)` evaluation
+/// will consume. Mirrors the reduction structure below step for step —
+/// the correlation store's warm/cold parity tests pin the alignment
+/// (DESIGN.md §Offline preprocessing).
+pub fn max_plan(rows: usize, n: usize, strat: MaxStrategy) -> Vec<PlanOp> {
+    let t = max_table();
+    match strat {
+        MaxStrategy::Tournament => {
+            let mut ops = Vec::new();
+            let mut width = n;
+            while width > 1 {
+                let half = width / 2;
+                let odd = width % 2 == 1;
+                ops.push(PlanOp::lut2(t.clone(), rows * half, rows * half));
+                width = half + usize::from(odd);
+            }
+            ops
+        }
+        MaxStrategy::Sort => super::sort::sort_max_plan(rows, n),
+        MaxStrategy::Linear => (1..n).map(|_| PlanOp::lut2(t.clone(), rows, rows)).collect(),
+    }
 }
 
 /// Row-wise oblivious max: `x` is `[rows, n]` of signed 4-bit shares;

@@ -1,0 +1,510 @@
+//! Ahead-of-time correlation store for LUT material — the true
+//! offline/online split (DESIGN.md §Offline preprocessing).
+//!
+//! The paper's evaluation decomposes every lookup protocol into an
+//! input-*independent* offline half (P0 derives a fresh mask Δ, shifts
+//! the table by it, and additively shares both — Alg. 1/2) and an online
+//! half that only opens `δ = x − Δ` and indexes the shared table. The
+//! protocols in [`super::lut`] historically ran both halves back to back,
+//! merely *tagging* the offline traffic with [`Phase::Offline`]. This
+//! module makes the split architectural:
+//!
+//! * **Producers** ([`lut_offline`], [`lut2_offline`], [`lut2_multi_offline`])
+//!   generate one protocol invocation's worth of correlated randomness —
+//!   a [`Correlation`] — with no dependence on any secret input. They can
+//!   run at any time, on any schedule, entirely off the request path.
+//! * **Consumers** ([`super::lut::lut_online`] and friends) turn a
+//!   `Correlation` plus live inputs into shares of the lookup result with
+//!   online-phase communication only.
+//! * A **plan** ([`PlanOp`], [`run_plan`]) is the deterministic sequence
+//!   of producer calls a future online pass will consume, derived from
+//!   public shapes alone (model config + batch size — see
+//!   `model::secure::plan_infer_batch`). [`run_plan`] executes it into a
+//!   *tape* of correlations that `PartyCtx::install_corr` queues for
+//!   consumption.
+//! * [`acquire`] is the bridge the online wrappers use: pop the next
+//!   correlation from the store when its shape matches (a pool **hit** —
+//!   zero offline communication on the request path), otherwise fall
+//!   back to inline generation (a **miss**, counted by
+//!   `Metrics::record_prep`).
+//!
+//! Randomness domains: producers draw from the *preprocessing* PRG
+//! streams (`PartyCtx::prep_pair_prg` / `PartyCtx::prep_own_prg`), which
+//! are domain-separated from the streams the online protocols use
+//! (sharing, reshares, zero-sharings). Generating a window's material
+//! ahead of time therefore consumes exactly the same PRG positions as
+//! generating it inline would — a warm-pool inference is bit-for-bit
+//! identical to a cold one (asserted by `rust/tests/prep_tests.rs`).
+//!
+//! All three parties must make identical pop-vs-generate decisions (the
+//! pairwise streams advance in lockstep), which holds because the
+//! decision depends only on public shape metadata that every party — P0
+//! included, although it stores no share data — records identically.
+
+use crate::party::{PartyCtx, P0, P1, P2};
+use crate::transport::Phase;
+
+use super::lut::{LutTable, LutTable2};
+
+/// Which lookup-protocol flavor a correlation was produced for.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CorrKind {
+    /// Single-input `Π_look` (Alg. 1): one Δ and one masked table per
+    /// element.
+    Lut1,
+    /// Two-input `Π_look^{b1,b2}` (Alg. 2) with the shared-Δ' grouping:
+    /// one Δ per element, one Δ' per group.
+    Lut2SharedY,
+    /// Several two-input tables evaluated on the same inputs with one
+    /// shared (Δ, Δ') opening (§Communication Optimization).
+    Lut2Multi,
+}
+
+/// Public shape metadata of one correlation — everything the three
+/// parties must agree on to match a stored correlation against an online
+/// lookup. Deliberately content-free: table *entries* are P0's secret,
+/// so matching is by protocol flavor, ring widths and batch geometry
+/// only; end-to-end misalignment is caught by the warm/cold parity tests
+/// instead.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct CorrShape {
+    /// Protocol flavor.
+    pub kind: CorrKind,
+    /// Bit width of the (outer) input ring.
+    pub x_bits: u32,
+    /// Bit width of the inner input ring (0 for [`CorrKind::Lut1`]).
+    pub y_bits: u32,
+    /// Output ring bit widths, one per table sharing the opening.
+    pub out_bits: Vec<u32>,
+    /// Number of lookups in the batch.
+    pub n: usize,
+    /// Number of Δ' groups (0 for [`CorrKind::Lut1`]; `n` when every
+    /// element has its own Δ').
+    pub groups: usize,
+}
+
+impl CorrShape {
+    /// Shape of a batch of `n` single-input lookups of `t`.
+    pub fn lut1(t: &LutTable, n: usize) -> CorrShape {
+        CorrShape {
+            kind: CorrKind::Lut1,
+            x_bits: t.in_ring.bits(),
+            y_bits: 0,
+            out_bits: vec![t.out_ring.bits()],
+            n,
+            groups: 0,
+        }
+    }
+
+    /// Shape of `n` two-input lookups of `t` with `groups` shared-Δ'
+    /// groups.
+    pub fn lut2(t: &LutTable2, n: usize, groups: usize) -> CorrShape {
+        CorrShape {
+            kind: CorrKind::Lut2SharedY,
+            x_bits: t.x_ring.bits(),
+            y_bits: t.y_ring.bits(),
+            out_bits: vec![t.out_ring.bits()],
+            n,
+            groups,
+        }
+    }
+
+    /// Shape of `n` shared-opening multi-table lookups of `ts`.
+    pub fn lut2_multi(ts: &[&LutTable2], n: usize) -> CorrShape {
+        CorrShape {
+            kind: CorrKind::Lut2Multi,
+            x_bits: ts[0].x_ring.bits(),
+            y_bits: ts[0].y_ring.bits(),
+            out_bits: ts.iter().map(|t| t.out_ring.bits()).collect(),
+            n,
+            groups: n,
+        }
+    }
+}
+
+/// One protocol invocation's worth of correlated randomness, as held by
+/// one party: this party's additive shares of the masked table(s) and of
+/// the masks. At P0 the share vectors are empty (P0 keeps no share of
+/// its own tables); the shape metadata is still populated so P0's
+/// pop-vs-generate decisions stay in lockstep with P1/P2.
+#[derive(Debug)]
+pub struct Correlation {
+    /// The public shape this material was produced for.
+    pub shape: CorrShape,
+    /// Masked-table shares, one vector per table (`n * table_size`
+    /// entries each; empty at P0).
+    pub tsh: Vec<Vec<u64>>,
+    /// Δ shares for the (outer) input, length `n` (empty at P0).
+    pub dx: Vec<u64>,
+    /// Δ' shares for the inner input, length `groups` (empty at P0 and
+    /// for [`CorrKind::Lut1`]).
+    pub dy: Vec<u64>,
+}
+
+/// Offline half of `Π_look` (Alg. 1) for a batch of `n` independent
+/// lookups of `t`: P0 derives fresh `(Δ_i, shifted-table_i)` pairs from
+/// the preprocessing PRG streams; P1's shares come from the pairwise
+/// prep seed, P2 receives the correction in one `Phase::Offline` message
+/// per vector. Input-independent — callable arbitrarily far ahead of
+/// the online lookup that consumes the result
+/// (DESIGN.md §Offline preprocessing).
+pub fn lut_offline(ctx: &PartyCtx, t: &LutTable, n: usize) -> Correlation {
+    ctx.with_phase(Phase::Offline, |ctx| {
+        let size = t.size();
+        let (inr, outr) = (t.in_ring, t.out_ring);
+        let phase = ctx.phase();
+        let shape = CorrShape::lut1(t, n);
+        match ctx.id {
+            P0 => {
+                // Fresh private Δs; shifted tables; share via seed-with-P1.
+                // Randomness is drawn in bulk (one table-share vec + one Δ
+                // vec) so both sides of the pairwise stream stay in
+                // lockstep while using the fast block-sliced PRG path
+                // (EXPERIMENTS.md §Perf).
+                let mut own = ctx.prep_own_prg();
+                let mut pair = ctx.prep_pair_prg(P1);
+                let mut corr = pair.ring_vec(outr, n * size);
+                let mut dcorr = pair.ring_vec(inr, n);
+                for i in 0..n {
+                    let delta = own.ring_elem(inr);
+                    let base = i * size;
+                    for j in 0..size {
+                        let shifted = t.entries[(j + delta as usize) % size];
+                        corr[base + j] = outr.sub(shifted, corr[base + j]);
+                    }
+                    dcorr[i] = inr.sub(delta, dcorr[i]);
+                }
+                ctx.net.send_ring(P2, phase, outr, &corr);
+                ctx.net.send_ring(P2, phase, inr, &dcorr);
+                Correlation { shape, tsh: vec![Vec::new()], dx: Vec::new(), dy: Vec::new() }
+            }
+            P1 => {
+                let mut pair = ctx.prep_pair_prg(P0);
+                let tsh = pair.ring_vec(outr, n * size);
+                let dx = pair.ring_vec(inr, n);
+                Correlation { shape, tsh: vec![tsh], dx, dy: Vec::new() }
+            }
+            P2 => {
+                let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
+                let dx = ctx.net.recv_ring(P0, phase, inr, n);
+                Correlation { shape, tsh: vec![tsh], dx, dy: Vec::new() }
+            }
+            _ => unreachable!(),
+        }
+    })
+}
+
+/// Offline half of `Π_look^{b1,b2}` (Alg. 2) for `n` lookups of `t` with
+/// `groups` shared-Δ' groups (`groups == n` gives every element its own
+/// Δ'; fewer groups is the paper's shared-input optimization). Input-
+/// independent, like [`lut_offline`].
+pub fn lut2_offline(ctx: &PartyCtx, t: &LutTable2, n: usize, groups: usize) -> Correlation {
+    debug_assert!(groups > 0 && n % groups == 0);
+    ctx.with_phase(Phase::Offline, |ctx| {
+        let (bx, by, outr) = (t.x_ring, t.y_ring, t.out_ring);
+        let (sx, sy) = (bx.size(), by.size());
+        let size = sx * sy;
+        let phase = ctx.phase();
+        let shape = CorrShape::lut2(t, n, groups);
+        match ctx.id {
+            P0 => {
+                let mut own = ctx.prep_own_prg();
+                let mut pair = ctx.prep_pair_prg(P1);
+                // one Δ' per group; bulk randomness draws (EXPERIMENTS.md §Perf)
+                let dys: Vec<u64> = (0..groups).map(|_| own.ring_elem(by)).collect();
+                let per_group = n / groups;
+                let mut corr = pair.ring_vec(outr, n * size);
+                let mut dxc = pair.ring_vec(bx, n);
+                let mut dyc = pair.ring_vec(by, groups);
+                for g in 0..groups {
+                    let dy = dys[g] as usize;
+                    for e in 0..per_group {
+                        let i = g * per_group + e;
+                        let dx = own.ring_elem(bx);
+                        let base = i * size;
+                        for u in 0..sx {
+                            // inner index shift: precompute the dy-rotated row
+                            let src_row = (bx.add(u as u64, dx) as usize) * sy;
+                            for v in 0..sy {
+                                let src = src_row + ((v + dy) & (sy - 1));
+                                corr[base + u * sy + v] =
+                                    outr.sub(t.entries[src], corr[base + u * sy + v]);
+                            }
+                        }
+                        dxc[i] = bx.sub(dx, dxc[i]);
+                    }
+                    dyc[g] = by.sub(dys[g], dyc[g]);
+                }
+                ctx.net.send_ring(P2, phase, outr, &corr);
+                ctx.net.send_ring(P2, phase, bx, &dxc);
+                ctx.net.send_ring(P2, phase, by, &dyc);
+                Correlation { shape, tsh: vec![Vec::new()], dx: Vec::new(), dy: Vec::new() }
+            }
+            P1 => {
+                let mut pair = ctx.prep_pair_prg(P0);
+                let tsh = pair.ring_vec(outr, n * size);
+                let dx = pair.ring_vec(bx, n);
+                let dy = pair.ring_vec(by, groups);
+                Correlation { shape, tsh: vec![tsh], dx, dy }
+            }
+            P2 => {
+                let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
+                let dx = ctx.net.recv_ring(P0, phase, bx, n);
+                let dy = ctx.net.recv_ring(P0, phase, by, groups);
+                Correlation { shape, tsh: vec![tsh], dx, dy }
+            }
+            _ => unreachable!(),
+        }
+    })
+}
+
+/// Offline half of the shared-opening multi-table lookup
+/// (§Communication Optimization): ONE `(Δ, Δ')` pair per element serves
+/// every table in `ts`; each table still gets its own fresh masked copy
+/// (content security). Input-independent, like [`lut_offline`].
+pub fn lut2_multi_offline(ctx: &PartyCtx, ts: &[&LutTable2], n: usize) -> Correlation {
+    debug_assert!(!ts.is_empty());
+    let t0 = ts[0];
+    let (sx, sy) = (t0.x_ring.size(), t0.y_ring.size());
+    let size = sx * sy;
+    ctx.with_phase(Phase::Offline, |ctx| {
+        let phase = ctx.phase();
+        let shape = CorrShape::lut2_multi(ts, n);
+        match ctx.id {
+            P0 => {
+                let mut own = ctx.prep_own_prg();
+                let mut pair = ctx.prep_pair_prg(P1);
+                let dxv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.x_ring)).collect();
+                let dyv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.y_ring)).collect();
+                for t in ts {
+                    let mut corr = pair.ring_vec(t.out_ring, n * size);
+                    for i in 0..n {
+                        let (dx, dy) = (dxv[i] as usize, dyv[i] as usize);
+                        let base = i * size;
+                        for u in 0..sx {
+                            let src_row = ((u + dx) & (sx - 1)) * sy;
+                            for v in 0..sy {
+                                let src = src_row + ((v + dy) & (sy - 1));
+                                corr[base + u * sy + v] =
+                                    t.out_ring.sub(t.entries[src], corr[base + u * sy + v]);
+                            }
+                        }
+                    }
+                    ctx.net.send_ring(P2, phase, t.out_ring, &corr);
+                }
+                let mut dxc = pair.ring_vec(t0.x_ring, n);
+                let mut dyc = pair.ring_vec(t0.y_ring, n);
+                for i in 0..n {
+                    dxc[i] = t0.x_ring.sub(dxv[i], dxc[i]);
+                    dyc[i] = t0.y_ring.sub(dyv[i], dyc[i]);
+                }
+                ctx.net.send_ring(P2, phase, t0.x_ring, &dxc);
+                ctx.net.send_ring(P2, phase, t0.y_ring, &dyc);
+                Correlation {
+                    shape,
+                    tsh: vec![Vec::new(); ts.len()],
+                    dx: Vec::new(),
+                    dy: Vec::new(),
+                }
+            }
+            P1 => {
+                let mut pair = ctx.prep_pair_prg(P0);
+                let tsh: Vec<Vec<u64>> =
+                    ts.iter().map(|t| pair.ring_vec(t.out_ring, n * size)).collect();
+                let dx = pair.ring_vec(t0.x_ring, n);
+                let dy = pair.ring_vec(t0.y_ring, n);
+                Correlation { shape, tsh, dx, dy }
+            }
+            P2 => {
+                let tsh: Vec<Vec<u64>> = ts
+                    .iter()
+                    .map(|t| ctx.net.recv_ring(P0, phase, t.out_ring, n * size))
+                    .collect();
+                let dx = ctx.net.recv_ring(P0, phase, t0.x_ring, n);
+                let dy = ctx.net.recv_ring(P0, phase, t0.y_ring, n);
+                Correlation { shape, tsh, dx, dy }
+            }
+            _ => unreachable!(),
+        }
+    })
+}
+
+/// Pop the next stored correlation when its shape matches `shape`
+/// (recorded as a pool **hit**), otherwise generate inline via `produce`
+/// (a **miss** — the offline traffic lands on the request path). All
+/// parties reach the same branch because the store contents and `shape`
+/// are determined by public metadata only.
+pub fn acquire(
+    ctx: &PartyCtx,
+    shape: CorrShape,
+    produce: impl FnOnce(&PartyCtx) -> Correlation,
+) -> Correlation {
+    match ctx.pop_corr(&shape) {
+        Some(c) => {
+            ctx.net.metrics.record_prep(ctx.id, true);
+            c
+        }
+        None => {
+            ctx.net.metrics.record_prep(ctx.id, false);
+            produce(ctx)
+        }
+    }
+}
+
+/// One step of a preprocessing plan: which producer to run, against
+/// which table(s), at which batch geometry. A plan is derived purely
+/// from public shapes (model config, batch size, `MaxStrategy`), so the
+/// coordinator can generate a whole window's material before any
+/// request exists — see `model::secure::plan_infer_batch`.
+pub enum PlanOp {
+    /// A [`lut_offline`] invocation.
+    Lut {
+        /// Table to mask (P0's entries are the secret content).
+        t: LutTable,
+        /// Batch size of the future lookup.
+        n: usize,
+    },
+    /// A [`lut2_offline`] invocation.
+    Lut2 {
+        /// Two-input table to mask.
+        t: LutTable2,
+        /// Batch size of the future lookup.
+        n: usize,
+        /// Shared-Δ' group count of the future lookup.
+        groups: usize,
+    },
+    /// A [`lut2_multi_offline`] invocation.
+    Lut2Multi {
+        /// Tables sharing one future opening.
+        ts: Vec<LutTable2>,
+        /// Batch size of the future lookup.
+        n: usize,
+    },
+}
+
+impl PlanOp {
+    /// Plan one single-input lookup batch.
+    pub fn lut(t: LutTable, n: usize) -> PlanOp {
+        PlanOp::Lut { t, n }
+    }
+
+    /// Plan one two-input lookup batch with `groups` shared-Δ' groups.
+    pub fn lut2(t: LutTable2, n: usize, groups: usize) -> PlanOp {
+        PlanOp::Lut2 { t, n, groups }
+    }
+
+    /// Plan one shared-opening multi-table lookup batch.
+    pub fn lut2_multi(ts: Vec<LutTable2>, n: usize) -> PlanOp {
+        PlanOp::Lut2Multi { ts, n }
+    }
+
+    /// The shape the produced correlation will carry.
+    pub fn shape(&self) -> CorrShape {
+        match self {
+            PlanOp::Lut { t, n } => CorrShape::lut1(t, *n),
+            PlanOp::Lut2 { t, n, groups } => CorrShape::lut2(t, *n, *groups),
+            PlanOp::Lut2Multi { ts, n } => {
+                let refs: Vec<&LutTable2> = ts.iter().collect();
+                CorrShape::lut2_multi(&refs, *n)
+            }
+        }
+    }
+}
+
+/// Execute a preprocessing plan in order, producing the correlation tape
+/// the matching online pass will consume front to back. All traffic is
+/// `Phase::Offline`; the call is input-independent.
+pub fn run_plan(ctx: &PartyCtx, plan: &[PlanOp]) -> Vec<Correlation> {
+    plan.iter()
+        .map(|op| match op {
+            PlanOp::Lut { t, n } => lut_offline(ctx, t, *n),
+            PlanOp::Lut2 { t, n, groups } => lut2_offline(ctx, t, *n, *groups),
+            PlanOp::Lut2Multi { ts, n } => {
+                let refs: Vec<&LutTable2> = ts.iter().collect();
+                lut2_multi_offline(ctx, &refs, *n)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::{R4, R8};
+    use crate::party::{run_3pc, SessionCfg};
+    use crate::protocols::lut::{lut_eval, lut_online};
+    use crate::sharing::additive::{reveal2, share2};
+    use crate::sharing::A2;
+
+    fn share_from_p0(ctx: &PartyCtx, vals: &[u64]) -> A2 {
+        share2(ctx, P0, R4, if ctx.id == P0 { Some(vals) } else { None }, vals.len())
+    }
+
+    #[test]
+    fn producer_then_consumer_matches_inline_eval() {
+        let t_spec = |v: u64| (v * 5 + 2) & 0xFF;
+        let inputs: Vec<u64> = (0..16).collect();
+        let ic = inputs.clone();
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable::from_fn(R4, R8, t_spec);
+            // produce the correlation ahead of the input even existing
+            let corr = lut_offline(ctx, &t, ic.len());
+            let xs = share_from_p0(ctx, &ic);
+            reveal2(ctx, &lut_online(ctx, &t, &corr, &xs))
+        });
+        assert_eq!(r1, inputs.iter().map(|&v| t_spec(v)).collect::<Vec<_>>());
+        assert!(snap.total_bytes(Phase::Offline) > 0);
+    }
+
+    #[test]
+    fn store_pop_matches_shape_and_counts_hits() {
+        let t_spec = |v: u64| (v + 1) & 0xF;
+        let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable::from_fn(R4, R4, t_spec);
+            let tape = run_plan(ctx, &[PlanOp::lut(t.clone(), 8)]);
+            ctx.install_corr(tape);
+            let xs = share_from_p0(ctx, &[3u64; 8]);
+            lut_eval(ctx, &t, &xs); // consumes the stored correlation
+            assert_eq!(ctx.corr_pending(), 0);
+            lut_eval(ctx, &t, &xs); // store empty -> inline miss
+        });
+        assert_eq!(snap.prep_hits.iter().max().copied().unwrap_or(0), 1);
+        assert_eq!(snap.prep_misses.iter().max().copied().unwrap_or(0), 1);
+    }
+
+    #[test]
+    fn shape_mismatch_clears_tape_and_falls_back() {
+        let ([_, r1, _], snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let t = LutTable::from_fn(R4, R4, |v| v);
+            // tape produced for the WRONG batch size
+            let tape = run_plan(ctx, &[PlanOp::lut(t.clone(), 4)]);
+            ctx.install_corr(tape);
+            let xs = share_from_p0(ctx, &[7u64; 8]);
+            let out = reveal2(ctx, &lut_eval(ctx, &t, &xs));
+            assert_eq!(ctx.corr_pending(), 0, "drift guard must drop the tape");
+            out
+        });
+        assert_eq!(r1, vec![7u64; 8]);
+        assert_eq!(snap.prep_hits.iter().max().copied().unwrap_or(0), 0);
+        assert!(snap.prep_misses.iter().max().copied().unwrap_or(0) >= 1);
+    }
+
+    #[test]
+    fn plan_shapes_match_produced_correlations() {
+        let (outs, _) = run_3pc(SessionCfg::default(), |ctx| {
+            let t1 = LutTable::from_fn(R4, R8, |v| v * 2);
+            let t2 = LutTable2::from_fn(R4, R4, R4, |x, y| (x + y) & 0xF);
+            let plan = vec![
+                PlanOp::lut(t1, 6),
+                PlanOp::lut2(t2.clone(), 12, 3),
+                PlanOp::lut2_multi(vec![t2.clone(), t2], 5),
+            ];
+            let shapes: Vec<CorrShape> = plan.iter().map(|op| op.shape()).collect();
+            let tape = run_plan(ctx, &plan);
+            (shapes, tape.into_iter().map(|c| c.shape).collect::<Vec<_>>())
+        });
+        for (shapes, produced) in outs {
+            assert_eq!(shapes, produced);
+        }
+    }
+}

@@ -13,6 +13,7 @@
 use crate::core::ring::R4;
 use crate::party::PartyCtx;
 use crate::protocols::lut::{lut2_eval_multi, LutTable2};
+use crate::protocols::prep::PlanOp;
 use crate::sharing::A2;
 
 /// The (min, max) compare-exchange tables over signed 4-bit values.
@@ -127,6 +128,25 @@ pub fn bitonic_sort_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize) -> A2 {
         },
         len: rows * n,
     }
+}
+
+/// Preprocessing plan for [`sort_max_rows`]: one shared-opening
+/// (min, max) multi-table correlation per bitonic level, sized
+/// `rows * |level|`. Mirrors [`bitonic_sort_rows`]'s level loop exactly
+/// (DESIGN.md §Offline preprocessing).
+pub fn sort_max_plan(rows: usize, n: usize) -> Vec<PlanOp> {
+    if n == 1 {
+        return Vec::new();
+    }
+    let mut m = 1usize;
+    while m < n {
+        m <<= 1;
+    }
+    let (tmin, tmax) = minmax_tables();
+    bitonic_levels(m)
+        .iter()
+        .map(|level| PlanOp::lut2_multi(vec![tmin.clone(), tmax.clone()], rows * level.len()))
+        .collect()
 }
 
 /// `Π_max` via sorting (the paper's stated realization): sort ascending,

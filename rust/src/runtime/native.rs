@@ -13,11 +13,13 @@ use crate::protocols::tables;
 
 const MASK16: u64 = 0xFFFF;
 
+/// Decode a 4-bit ring value to its signed representative.
 #[inline]
 pub fn signed4(v: u64) -> i64 {
     (((v & 0xF) ^ 0x8) as i64) - 0x8
 }
 
+/// The pipeline's `trc(·, 4)` on a 16-bit accumulator (top 4 bits, signed).
 #[inline]
 pub fn trc16_to4(acc: i64) -> i64 {
     signed4(((acc as u64) & MASK16) >> 12)
@@ -78,6 +80,7 @@ pub fn softmax_quant(x: &[i64], rows: usize, n: usize, sx: f64) -> Vec<i64> {
     out
 }
 
+/// Elementwise ReLU on quantized values (ref.relu_quant).
 pub fn relu_quant(x: &[i64]) -> Vec<i64> {
     x.iter().map(|&v| v.max(0)).collect()
 }

@@ -8,8 +8,8 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects.
 //!
 //! The `xla` (xla_extension) crate is not in the offline registry, so the
-//! real loader is gated behind the `xla` cargo feature (DESIGN.md
-//! §Substitutions #8). Without the feature, [`XlaModel`] is a stub whose
+//! real loader is gated behind the `xla` cargo feature
+//! (DESIGN.md §Substitutions #8). Without the feature, [`XlaModel`] is a stub whose
 //! `load`/`run` report the missing runtime; artifact-driven tests detect
 //! missing artifacts first and skip, so the default build stays green.
 
@@ -24,16 +24,20 @@ use crate::core::error::{Context, Error};
 /// An int32 tensor argument/result.
 #[derive(Clone, Debug, PartialEq)]
 pub struct I32Tensor {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Flat row-major contents.
     pub data: Vec<i32>,
 }
 
 impl I32Tensor {
+    /// Build a tensor, checking `shape` against `data.len()`.
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         I32Tensor { shape, data }
     }
 
+    /// Narrowing conversion from the crate's i64 tensors.
     pub fn from_i64(shape: Vec<usize>, data: &[i64]) -> Self {
         I32Tensor::new(shape, data.iter().map(|&v| v as i32).collect())
     }
@@ -43,6 +47,7 @@ impl I32Tensor {
 #[cfg(feature = "xla")]
 pub struct XlaModel {
     exe: xla::PjRtLoadedExecutable,
+    /// HLO artifact stem (for report lines).
     pub name: String,
 }
 
@@ -106,6 +111,7 @@ impl XlaModel {
 /// Stub standing in for the PJRT loader when the `xla` feature is off.
 #[cfg(not(feature = "xla"))]
 pub struct XlaModel {
+    /// HLO artifact stem (for report lines).
     pub name: String,
 }
 

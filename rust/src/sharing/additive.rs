@@ -10,6 +10,7 @@ use crate::party::{PartyCtx, P0, P1, P2};
 /// A vector of 2PC-additively-shared ring elements (this party's share).
 #[derive(Clone, Debug)]
 pub struct A2 {
+    /// The ring the shares live in.
     pub ring: Ring,
     /// This party's share; empty at P0.
     pub vals: Vec<u64>,
@@ -18,10 +19,12 @@ pub struct A2 {
 }
 
 impl A2 {
+    /// A share-less placeholder of logical length `len` (P0's view).
     pub fn empty(ring: Ring, len: usize) -> A2 {
         A2 { ring, vals: Vec::new(), len }
     }
 
+    /// Whether this party holds actual share data (false at P0).
     pub fn holds_share(&self) -> bool {
         !self.vals.is_empty() || self.len == 0
     }
@@ -92,6 +95,7 @@ impl A2 {
         }
     }
 
+    /// Sub-range `[lo, hi)` of the shared vector (local).
     pub fn slice(&self, lo: usize, hi: usize) -> A2 {
         A2 {
             ring: self.ring,
@@ -104,6 +108,8 @@ impl A2 {
         }
     }
 
+    /// Concatenate equally-ringed shared vectors (local) — the substrate
+    /// of every batched single-opening entry point.
     pub fn concat(ring: Ring, parts: &[&A2]) -> A2 {
         let len = parts.iter().map(|p| p.len).sum();
         let mut vals = Vec::new();

@@ -12,6 +12,7 @@ use super::additive::A2;
 /// A vector of RSS-shared ring elements (this party's two share limbs).
 #[derive(Clone, Debug)]
 pub struct Rss {
+    /// The ring the shares live in.
     pub ring: Ring,
     /// `s_{id+1}`
     pub next: Vec<u64>,
@@ -20,14 +21,17 @@ pub struct Rss {
 }
 
 impl Rss {
+    /// Number of shared elements.
     pub fn len(&self) -> usize {
         self.next.len()
     }
 
+    /// Whether the vector is empty.
     pub fn is_empty(&self) -> bool {
         self.next.is_empty()
     }
 
+    /// Local addition of two shared vectors.
     pub fn add(&self, other: &Rss) -> Rss {
         debug_assert_eq!(self.ring, other.ring);
         Rss {
@@ -37,6 +41,7 @@ impl Rss {
         }
     }
 
+    /// Local subtraction.
     pub fn sub(&self, other: &Rss) -> Rss {
         debug_assert_eq!(self.ring, other.ring);
         Rss {
@@ -55,6 +60,7 @@ impl Rss {
         }
     }
 
+    /// Sub-range `[lo, hi)` of the shared vector (local).
     pub fn slice(&self, lo: usize, hi: usize) -> Rss {
         Rss {
             ring: self.ring,

@@ -10,41 +10,50 @@ use crate::core::ring::Ring;
 /// A deterministic case generator for one property run.
 pub struct Gen {
     prg: Prg,
+    /// The case seed (reported on failure for replay).
     pub seed: u64,
 }
 
 impl Gen {
+    /// A generator for the case with this `seed`.
     pub fn new(seed: u64) -> Gen {
         let mut s = [0u8; 16];
         s[..8].copy_from_slice(&seed.to_le_bytes());
         Gen { prg: Prg::new(s), seed }
     }
 
+    /// Uniform draw in `[0, bound)` (`bound` clamped to ≥ 1).
     pub fn u64_below(&mut self, bound: u64) -> u64 {
         self.prg.next_u64() % bound.max(1)
     }
 
+    /// Uniform draw in `[lo, hi]`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         lo + (self.prg.next_u64() as usize) % (hi - lo + 1)
     }
 
+    /// Uniform signed draw in `[lo, hi]`.
     pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
         lo + (self.prg.next_u64() % ((hi - lo + 1) as u64)) as i64
     }
 
+    /// Uniform ring element.
     pub fn ring_elem(&mut self, ring: Ring) -> u64 {
         self.prg.ring_elem(ring)
     }
 
+    /// Vector of uniform ring elements.
     pub fn ring_vec(&mut self, ring: Ring, n: usize) -> Vec<u64> {
         self.prg.ring_vec(ring, n)
     }
 
+    /// Vector of uniform signed `bits`-bit values.
     pub fn signed_vec(&mut self, bits: u32, n: usize) -> Vec<i64> {
         let half = 1i64 << (bits - 1);
         (0..n).map(|_| self.i64_in(-half, half - 1)).collect()
     }
 
+    /// Uniform choice from a non-empty slice.
     pub fn pick<'a, T>(&mut self, options: &'a [T]) -> &'a T {
         &options[self.usize_in(0, options.len() - 1)]
     }

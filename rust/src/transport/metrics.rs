@@ -7,11 +7,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// tables) and an online phase; `Setup` covers one-time model sharing.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Phase {
+    /// One-time model sharing (weights, LN parameters, classifier).
     Setup = 0,
+    /// Input-independent preprocessing (shifted-table generation).
     Offline = 1,
+    /// Everything on the request path (δ openings, reshares, reveals).
     Online = 2,
 }
 
+/// All phases in meter order (iteration helper for reports).
 pub const PHASES: [Phase; 3] = [Phase::Setup, Phase::Offline, Phase::Online];
 
 const NP: usize = 3; // parties
@@ -27,27 +31,49 @@ pub struct Metrics {
     rounds: [[AtomicU64; NPH]; NP],
     /// wall-clock nanoseconds each party spent inside each phase
     compute_ns: [[AtomicU64; NPH]; NP],
+    /// Correlation-store hits per party: LUT protocol invocations served
+    /// from ahead-of-time material (DESIGN.md §Offline preprocessing).
+    prep_hits: [AtomicU64; NP],
+    /// Correlation-store misses per party: LUT protocol invocations that
+    /// fell back to inline (request-path) offline generation.
+    prep_misses: [AtomicU64; NP],
 }
 
 impl Metrics {
+    /// Fresh zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one message of `nbytes` on the `from -> to` link.
     pub fn record_send(&self, from: usize, to: usize, phase: Phase, nbytes: usize) {
         let link = from * NP + to;
         self.bytes[link][phase as usize].fetch_add(nbytes as u64, Ordering::Relaxed);
         self.msgs[link][phase as usize].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one blocking receive (protocol round) observed by `party`.
     pub fn record_round(&self, party: usize, phase: Phase) {
         self.rounds[party][phase as usize].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Attribute `ns` nanoseconds of wall-clock compute to `party`/`phase`.
     pub fn record_compute(&self, party: usize, phase: Phase, ns: u64) {
         self.compute_ns[party][phase as usize].fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record one correlation-store lookup: `hit` means the LUT material
+    /// came from the ahead-of-time pool, a miss means it was generated
+    /// inline on the request path.
+    pub fn record_prep(&self, party: usize, hit: bool) {
+        if hit {
+            self.prep_hits[party].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.prep_misses[party].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Copy the live counters into a plain-data snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut s = MetricsSnapshot::default();
         for l in 0..NP * NP {
@@ -61,6 +87,8 @@ impl Metrics {
                 s.rounds[party][p] = self.rounds[party][p].load(Ordering::Relaxed);
                 s.compute_ns[party][p] = self.compute_ns[party][p].load(Ordering::Relaxed);
             }
+            s.prep_hits[party] = self.prep_hits[party].load(Ordering::Relaxed);
+            s.prep_misses[party] = self.prep_misses[party].load(Ordering::Relaxed);
         }
         s
     }
@@ -69,10 +97,18 @@ impl Metrics {
 /// Plain-data copy of the counters, with aggregation helpers.
 #[derive(Default, Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Bytes sent per directed link (`from*3+to`) per phase.
     pub bytes: [[u64; NPH]; NP * NP],
+    /// Messages sent per directed link per phase.
     pub msgs: [[u64; NPH]; NP * NP],
+    /// Blocking receives per party per phase.
     pub rounds: [[u64; NPH]; NP],
+    /// Wall-clock nanoseconds per party per phase.
     pub compute_ns: [[u64; NPH]; NP],
+    /// Correlation-store hits per party (see [`Metrics::record_prep`]).
+    pub prep_hits: [u64; NP],
+    /// Correlation-store misses per party.
+    pub prep_misses: [u64; NP],
 }
 
 impl MetricsSnapshot {
@@ -104,8 +140,21 @@ impl MetricsSnapshot {
             .unwrap_or(0)
     }
 
+    /// Total bytes in a phase, in MiB.
     pub fn total_mb(&self, phase: Phase) -> f64 {
         self.total_bytes(phase) as f64 / (1024.0 * 1024.0)
+    }
+
+    /// Correlation-pool hits in this snapshot (parties record the same
+    /// count by SPMD symmetry; the max is reported defensively).
+    pub fn pool_hits(&self) -> u64 {
+        self.prep_hits.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Correlation-pool misses in this snapshot (inline offline
+    /// generations that landed on the request path).
+    pub fn pool_misses(&self) -> u64 {
+        self.prep_misses.iter().copied().max().unwrap_or(0)
     }
 
     /// Merge another snapshot into this one (for aggregating sessions).
@@ -121,6 +170,32 @@ impl MetricsSnapshot {
                 self.rounds[party][p] += o.rounds[party][p];
                 self.compute_ns[party][p] += o.compute_ns[party][p];
             }
+            self.prep_hits[party] += o.prep_hits[party];
+            self.prep_misses[party] += o.prep_misses[party];
+        }
+    }
+
+    /// Subtract an earlier snapshot counter-wise (saturating), leaving
+    /// the delta between two observation points — the coordinator's
+    /// per-window accounting and the warm-pool tests both difference the
+    /// cumulative session meter this way.
+    pub fn saturating_sub_assign(&mut self, earlier: &MetricsSnapshot) {
+        for l in 0..NP * NP {
+            for p in 0..NPH {
+                self.bytes[l][p] = self.bytes[l][p].saturating_sub(earlier.bytes[l][p]);
+                self.msgs[l][p] = self.msgs[l][p].saturating_sub(earlier.msgs[l][p]);
+            }
+        }
+        for party in 0..NP {
+            for p in 0..NPH {
+                self.rounds[party][p] =
+                    self.rounds[party][p].saturating_sub(earlier.rounds[party][p]);
+                self.compute_ns[party][p] =
+                    self.compute_ns[party][p].saturating_sub(earlier.compute_ns[party][p]);
+            }
+            self.prep_hits[party] = self.prep_hits[party].saturating_sub(earlier.prep_hits[party]);
+            self.prep_misses[party] =
+                self.prep_misses[party].saturating_sub(earlier.prep_misses[party]);
         }
     }
 }
@@ -144,6 +219,22 @@ mod tests {
         assert_eq!(s.busiest_link_bytes(Phase::Offline), 150);
         assert_eq!(s.max_rounds(Phase::Online), 2);
         assert_eq!(s.max_rounds(Phase::Offline), 0);
+    }
+
+    #[test]
+    fn prep_counters_and_delta() {
+        let m = Metrics::new();
+        m.record_prep(1, true);
+        m.record_prep(1, true);
+        m.record_prep(1, false);
+        let a = m.snapshot();
+        assert_eq!(a.pool_hits(), 2);
+        assert_eq!(a.pool_misses(), 1);
+        m.record_prep(1, true);
+        let mut b = m.snapshot();
+        b.saturating_sub_assign(&a);
+        assert_eq!(b.pool_hits(), 1);
+        assert_eq!(b.pool_misses(), 0);
     }
 
     #[test]

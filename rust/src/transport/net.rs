@@ -13,17 +13,22 @@ use super::metrics::{Metrics, MetricsSnapshot, Phase};
 /// 100 Mbps / 40 ms RTT).
 #[derive(Clone, Copy, Debug)]
 pub struct NetParams {
+    /// Environment label used in reports ("LAN", "WAN", "LOCAL").
     pub name: &'static str,
+    /// Link bandwidth in bits per second.
     pub bandwidth_bps: f64,
+    /// Round-trip time.
     pub rtt: Duration,
 }
 
 impl NetParams {
+    /// The paper's LAN environment: 5 Gbps, 0.2 ms RTT.
     pub const LAN: NetParams = NetParams {
         name: "LAN",
         bandwidth_bps: 5e9,
         rtt: Duration::from_micros(200),
     };
+    /// The paper's WAN environment: 100 Mbps, 40 ms RTT.
     pub const WAN: NetParams = NetParams {
         name: "WAN",
         bandwidth_bps: 100e6,
@@ -53,9 +58,11 @@ impl NetParams {
 
 /// One party's endpoints to the other two parties.
 pub struct Net {
+    /// The party this endpoint belongs to.
     pub id: usize,
     tx: Vec<Option<Sender<Vec<u8>>>>,
     rx: Vec<Option<Receiver<Vec<u8>>>>,
+    /// Session-wide shared meter (bytes/rounds/compute per phase).
     pub metrics: Arc<Metrics>,
     /// Optional real sleep injection (wan_inference example): the receiver
     /// sleeps RTT/2 per message plus bytes/bandwidth.
@@ -63,6 +70,7 @@ pub struct Net {
 }
 
 impl Net {
+    /// Send a raw payload to `to`, metering it under `phase`.
     pub fn send_bytes(&self, to: usize, phase: Phase, payload: Vec<u8>) {
         debug_assert_ne!(to, self.id);
         self.metrics.record_send(self.id, to, phase, payload.len());
@@ -92,10 +100,12 @@ impl Net {
         payload
     }
 
+    /// Send `vals` bit-tightly packed for `ring` (see `core::pack`).
     pub fn send_ring(&self, to: usize, phase: Phase, ring: Ring, vals: &[u64]) {
         self.send_bytes(to, phase, pack(ring, vals));
     }
 
+    /// Blocking receive of `n` ring elements (one protocol round).
     pub fn recv_ring(&self, from: usize, phase: Phase, ring: Ring, n: usize) -> Vec<u64> {
         let bytes = self.recv_bytes(from, phase);
         debug_assert_eq!(bytes.len(), ring.packed_len(n));

@@ -1,0 +1,223 @@
+//! Offline/online split integration: a warm correlation pool must move
+//! ALL offline-phase communication off the request path without changing
+//! anything the request path computes.
+//!
+//! The three pinned properties (DESIGN.md §Offline preprocessing):
+//!   1. a warm-pool `secure_infer_batch` window records ZERO
+//!      `Phase::Offline` bytes and rounds;
+//!   2. its modeled request-path latency is strictly below the cold-pool
+//!      window's (same online traffic, no offline component);
+//!   3. warm and cold logits agree BIT-FOR-BIT — preprocessing draws
+//!      from dedicated PRG streams, so generating material ahead of time
+//!      consumes exactly the randomness inline generation would.
+
+use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
+use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::secure::{plan_infer_batch, prep_infer_batch, SecureBert};
+use ppq_bert::model::weights::Weights;
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::transport::{MetricsSnapshot, NetParams, Phase};
+
+fn clone_weights(w: &Weights, cfg: BertConfig) -> Weights {
+    Weights {
+        cfg,
+        tensors: w.tensors.clone(),
+        scales: w.scales.clone(),
+    }
+}
+
+/// Serve one window of `batch` requests on a fresh session, optionally
+/// prepping its correlation tape first. Returns the logits and the
+/// request-path (infer-only) meter delta.
+fn serve_window(
+    cfg: BertConfig,
+    w: Weights,
+    inputs: &[Vec<i64>],
+    warm: bool,
+) -> (Vec<Vec<i64>>, MetricsSnapshot) {
+    let sess = Session::start(cfg, w, SessionCfg::default(), MaxStrategy::Tournament);
+    if warm {
+        sess.prep(inputs.len());
+    }
+    let pre = sess.snapshot();
+    let logits = sess.infer_batch(inputs);
+    let mut delta = sess.snapshot();
+    delta.saturating_sub_assign(&pre);
+    sess.shutdown();
+    (logits, delta)
+}
+
+/// The headline invariant at B = 1 and B = 4: warm windows perform zero
+/// offline-phase communication, pay strictly less modeled request-path
+/// latency than cold windows, and produce bit-identical logits.
+#[test]
+fn warm_pool_has_zero_offline_traffic_and_identical_logits() {
+    let cfg = BertConfig::tiny();
+    for batch in [1usize, 4] {
+        let (w, _) = prepared_model(cfg);
+        let inputs = prepared_inputs(&cfg, batch);
+
+        let (cold_logits, cold) = serve_window(cfg, clone_weights(&w, cfg), &inputs, false);
+        let (warm_logits, warm) = serve_window(cfg, w, &inputs, true);
+
+        // 1. zero offline-phase communication on the warm request path
+        assert!(cold.total_bytes(Phase::Offline) > 0, "B={batch}: cold window is offline-heavy");
+        assert!(cold.max_rounds(Phase::Offline) > 0);
+        assert_eq!(warm.total_bytes(Phase::Offline), 0, "B={batch}: warm offline bytes");
+        assert_eq!(warm.max_rounds(Phase::Offline), 0, "B={batch}: warm offline rounds");
+        // every LUT invocation was served from the pool
+        assert_eq!(warm.pool_misses(), 0, "B={batch}");
+        assert!(warm.pool_hits() > 0, "B={batch}");
+        assert_eq!(cold.pool_hits(), 0, "B={batch}");
+
+        // online traffic is untouched by pooling
+        assert_eq!(
+            warm.total_bytes(Phase::Online),
+            cold.total_bytes(Phase::Online),
+            "B={batch}: pooling must not change online bytes"
+        );
+        assert_eq!(warm.max_rounds(Phase::Online), cold.max_rounds(Phase::Online));
+
+        // 2. strictly less modeled request-path time (deterministic
+        //    network model over the measured counters; compute excluded)
+        for net in [NetParams::LAN, NetParams::WAN] {
+            let path = |d: &MetricsSnapshot| {
+                net.modeled_net_time(d, Phase::Offline) + net.modeled_net_time(d, Phase::Online)
+            };
+            assert!(
+                path(&warm) < path(&cold),
+                "B={batch} {}: warm {:?} !< cold {:?}",
+                net.name,
+                path(&warm),
+                path(&cold)
+            );
+        }
+
+        // 3. bit-for-bit logits parity
+        assert_eq!(warm_logits, cold_logits, "B={batch}: warm/cold logits must be identical");
+    }
+}
+
+/// The preprocessing plan mirrors the online pass exactly: the tape is
+/// consumed item for item (every acquire is a hit, nothing left over).
+#[test]
+fn prep_tape_aligns_with_online_consumption() {
+    let cfg = BertConfig::tiny();
+    for batch in [1usize, 2, 3] {
+        let (w, _) = prepared_model(cfg);
+        let inputs = prepared_inputs(&cfg, batch);
+        let (wc, inc) = (w, inputs);
+        let (plan_lens, snap) = {
+            let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+                let m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&wc) } else { None });
+                let plan_len = plan_infer_batch(&m, batch).len();
+                let tape = prep_infer_batch(ctx, &m, batch);
+                assert_eq!(tape.len(), plan_len);
+                ctx.install_corr(tape);
+                ppq_bert::model::secure::secure_infer_batch(
+                    ctx,
+                    &m,
+                    batch,
+                    if ctx.id == P1 { Some(&inc) } else { None },
+                );
+                assert_eq!(ctx.corr_pending(), 0, "tape fully consumed");
+                plan_len
+            });
+            (outs, snap)
+        };
+        let plan_len = plan_lens[0] as u64;
+        assert!(plan_len > 0);
+        assert_eq!(snap.pool_hits(), plan_len, "B={batch}: every plan op consumed as a hit");
+        assert_eq!(snap.pool_misses(), 0, "B={batch}");
+    }
+}
+
+/// The plan covers every MaxStrategy (the softmax max-reduction is the
+/// only strategy-dependent LUT sequence).
+#[test]
+fn prep_covers_every_max_strategy() {
+    let cfg = BertConfig::tiny();
+    for strat in [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort] {
+        let (w, _) = prepared_model(cfg);
+        let inputs = prepared_inputs(&cfg, 2);
+        let (wc, inc) = (w, inputs);
+        let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let mut m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&wc) } else { None });
+            m.max_strategy = strat;
+            let tape = prep_infer_batch(ctx, &m, 2);
+            ctx.install_corr(tape);
+            ppq_bert::model::secure::secure_infer_batch(
+                ctx,
+                &m,
+                2,
+                if ctx.id == P1 { Some(&inc) } else { None },
+            );
+            assert_eq!(ctx.corr_pending(), 0);
+        });
+        assert_eq!(snap.pool_misses(), 0, "{strat:?}: plan must cover the whole pass");
+    }
+}
+
+/// Coordinator-level lifecycle: a prefilled pool serves full windows
+/// warm (zero request-path offline bytes in the per-request accounting),
+/// the pool refills between windows, and the report exposes the hit/miss
+/// counters.
+#[test]
+fn coordinator_pool_serves_windows_warm() {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let mut sc = ServerConfig::new(cfg);
+    sc.max_batch = 2;
+    sc.prep_depth = 1;
+    let mut coord = Coordinator::start(sc, w);
+    assert_eq!(coord.pooled(2), 1, "start() prefills the pool");
+
+    for x in prepared_inputs(&cfg, 4) {
+        coord.submit(x);
+    }
+    // two full windows, both warm (run_batch refills between windows)
+    for window in 0..2 {
+        let results = coord.run_batch();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.window_pool_misses, 0, "window {window} must be warm");
+            assert!(r.window_pool_hits > 0);
+            assert_eq!(r.offline_bytes, 0, "warm window request-path offline bytes");
+            assert!(r.online_bytes > 0);
+            assert_eq!(r.offline_modeled, std::time::Duration::ZERO);
+        }
+    }
+    assert_eq!(coord.pooled(2), 1, "pool topped back up after draining");
+    assert!(coord.prepped_windows() >= 3);
+    let report = coord.metrics_report();
+    assert!(report.contains("pool_hits="), "{report}");
+    assert!(report.contains("pool_misses=0"), "{report}");
+    coord.shutdown();
+}
+
+/// A partial tail window (no tape of its size pooled) falls back to
+/// inline generation: correct results, misses counted, full-size pool
+/// left intact.
+#[test]
+fn partial_window_falls_back_inline() {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let mut sc = ServerConfig::new(cfg);
+    sc.max_batch = 4;
+    sc.prep_depth = 1;
+    let mut coord = Coordinator::start(sc, w);
+    for x in prepared_inputs(&cfg, 3) {
+        coord.submit(x); // window of 3 != prepped size 4
+    }
+    let results = coord.run_batch();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(r.window_pool_misses > 0, "cold tail window counts misses");
+        assert!(r.offline_bytes > 0, "inline generation lands on the request path");
+        assert_eq!(r.logits.len(), cfg.n_classes);
+    }
+    assert_eq!(coord.pooled(4), 1, "the full-size tape is untouched");
+    coord.shutdown();
+}

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Verify that every `DESIGN.md §<Section>` citation in the Rust sources,
+# benches and examples names a section heading that actually exists in
+# DESIGN.md (prefix match, parentheticals and `:`-subtitles stripped).
+# CI runs this next to the rustdoc job; run locally as
+#   tools/check_design_citations.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+mapfile -t headings < <(grep -E '^#{2,3} ' DESIGN.md | sed -E 's/^#+ +//; s/ \(.*\)//; s/:.*//')
+if [ "${#headings[@]}" -eq 0 ]; then
+  echo "no headings found in DESIGN.md?" >&2
+  exit 1
+fi
+
+fail=0
+count=0
+while IFS= read -r cite; do
+  count=$((count + 1))
+  text="${cite#DESIGN.md §}"
+  ok=0
+  for h in "${headings[@]}"; do
+    case "$text" in
+      "$h"*) ok=1; break ;;
+    esac
+  done
+  if [ "$ok" -eq 0 ]; then
+    echo "unmatched DESIGN.md citation: §$text" >&2
+    fail=1
+  fi
+done < <(grep -rhoE 'DESIGN\.md §[A-Za-z][A-Za-z0-9/ -]*' rust benches examples | sort -u)
+
+if [ "$count" -eq 0 ]; then
+  echo "no DESIGN.md § citations found — grep pattern broken?" >&2
+  exit 1
+fi
+echo "checked $count distinct DESIGN.md § citations against ${#headings[@]} headings"
+exit "$fail"
