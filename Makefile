@@ -1,7 +1,7 @@
 # Build the python AOT artifacts the Rust runtime/tests consume
 # (rust/tests/integration_artifact.rs skips until these exist; running
 # them additionally needs `cargo ... --features xla`).
-.PHONY: artifacts test bench doccheck
+.PHONY: artifacts test bench doccheck smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -19,8 +19,15 @@ doccheck:
 	cargo rustc --release --lib -- -D missing-docs
 	tools/check_design_citations.sh
 
+# Multi-process deployment smoke: three `repro party` processes on
+# localhost + one remote client, logits diffed against the in-process
+# backend (DESIGN.md §Transport backends).
+smoke:
+	tools/smoke_multiprocess.sh
+
 bench:
 	cargo bench --bench micro
+	cargo bench --bench transport
 	cargo bench --bench batching
 	cargo bench --bench offline
 	cargo bench --bench table2

@@ -1,0 +1,77 @@
+//! Transport backend micro-costs (beyond the paper): what does moving a
+//! party message through the in-process mesh vs. loopback TCP cost, and
+//! what does that do to an end-to-end tiny-model window? Quantifies the
+//! overhead of deployability — protocol bytes/rounds are identical
+//! across backends by construction (see rust/tests/transport_tests.rs),
+//! so only wall-clock differs.
+//!
+//! Run: `cargo bench --bench transport`
+
+use std::sync::Arc;
+
+use ppq_bert::bench_harness::{fmt_dur, prepared_model, time_median, Table};
+use ppq_bert::core::ring::R16;
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::secure::{secure_infer, SecureBert};
+use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
+use ppq_bert::transport::{build_mesh, loopback_mesh, Metrics, Net, Phase};
+
+/// One ping-pong exchange of `n` 16-bit ring elements between P1 and P2.
+fn pingpong(nets: [Net; 3], n: usize, iters: usize) -> std::time::Duration {
+    let [_n0, n1, n2] = nets;
+    let vals: Vec<u64> = (0..n as u64).map(|v| v % 1000).collect();
+    let mut out = std::time::Duration::ZERO;
+    std::thread::scope(|s| {
+        let v = vals.clone();
+        s.spawn(move || {
+            for _ in 0..iters {
+                let _ = n2.exchange_ring(1, Phase::Online, R16, &v);
+            }
+        });
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            let _ = n1.exchange_ring(2, Phase::Online, R16, &vals);
+        }
+        out = t0.elapsed() / iters as u32;
+    });
+    out
+}
+
+/// Setup + one single-request inference over pre-built endpoints.
+fn infer_over(nets: [Net; 3]) {
+    let cfg = BertConfig::tiny();
+    let (weights, x) = prepared_model(cfg);
+    std::thread::scope(|s| {
+        for net in nets {
+            let (weights, x) = (&weights, &x);
+            s.spawn(move || {
+                let ctx = PartyCtx::new(net.id, net, SessionCfg::default().master_seed, 1);
+                let model = SecureBert::setup(&ctx, cfg, (ctx.id == P0).then_some(weights));
+                let xin = (ctx.id == P1).then(|| x.clone());
+                let _ = secure_infer(&ctx, &model, xin.as_deref());
+            });
+        }
+    });
+}
+
+fn main() {
+    let session = SessionCfg::default().master_seed;
+    let mesh = || build_mesh(Arc::new(Metrics::new()), None);
+    let tcp = || loopback_mesh(Arc::new(Metrics::new()), session, None).expect("loopback mesh");
+
+    let mut t = Table::new(&["exchange size", "mesh", "tcp loopback"]);
+    for &n in &[1usize, 1_000, 100_000] {
+        let iters = if n >= 100_000 { 20 } else { 200 };
+        t.row(vec![
+            format!("{n} x u16"),
+            fmt_dur(pingpong(mesh(), n, iters)),
+            fmt_dur(pingpong(tcp(), n, iters)),
+        ]);
+    }
+    t.print("one exchange_ring round trip (P1 <-> P2, median behavior over many iters)");
+
+    let mut t = Table::new(&["end-to-end (tiny, 1 request)", "wall"]);
+    t.row(vec!["mesh".into(), fmt_dur(time_median(3, || infer_over(mesh())))]);
+    t.row(vec!["tcp loopback".into(), fmt_dur(time_median(3, || infer_over(tcp())))]);
+    t.print("setup + secure_infer across backends (same bytes/rounds by construction)");
+}

@@ -1,0 +1,91 @@
+//! Multi-process-shape secure inference over real TCP sockets — the
+//! deployment mode of DESIGN.md §Transport backends, in one runnable
+//! process: three party endpoints (the exact `repro party` serving
+//! bodies) on loopback sockets, plus a thin client that submits a
+//! request and reads the logits, then cross-checks the result against
+//! the in-process mesh backend.
+//!
+//! For a real 3-process deployment, run the same thing as processes:
+//!   repro party --id 0 & repro party --id 1 & repro party --id 2 &
+//!   repro infer --remote --halt
+//!
+//! Run: `cargo run --release --example tcp_inference`
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use ppq_bert::bench_harness::{fmt_dur, prepared_model};
+use ppq_bert::coordinator::remote::{run_party, session_id, PartyOpts, RemoteClient};
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::party::SessionCfg;
+use ppq_bert::transport::{Phase, PHASES};
+
+fn main() {
+    let cfg = BertConfig::tiny();
+    println!(
+        "tcp deployment: {} layers, d={}, seq={} — 3 party endpoints + 1 client on loopback",
+        cfg.n_layers, cfg.d_model, cfg.seq_len
+    );
+
+    // Bind the three listeners first so every party knows its peers'
+    // real addresses (a deployment would use fixed --listen addresses).
+    let listeners: Vec<TcpListener> =
+        (0..3).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind")).collect();
+    let addrs: [String; 3] = listeners
+        .iter()
+        .map(|l| l.local_addr().expect("addr").to_string())
+        .collect::<Vec<_>>()
+        .try_into()
+        .unwrap();
+    println!("party addresses: {}", addrs.join(", "));
+
+    let mut parties = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let mut opts = PartyOpts::new(id, cfg);
+        for p in 0..3 {
+            if p != id {
+                opts.peers[p] = Some(addrs[p].clone());
+            }
+        }
+        parties.push(std::thread::spawn(move || run_party(listener, opts)));
+    }
+
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+    let mut client =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect");
+    let (_, x) = prepared_model(cfg);
+    let t0 = std::time::Instant::now();
+    let logits = client.infer(&x).expect("remote inference");
+    println!("remote logits: {logits:?}  (wall {} incl. model setup)", fmt_dur(t0.elapsed()));
+
+    // The merged per-party meters reconstruct the session meter exactly.
+    let snap = client.snapshot().expect("metrics");
+    for (phase, name) in PHASES.iter().zip(["setup", "offline", "online"]) {
+        println!(
+            "  {name:8} {:>8.2} MB  {:>5} rounds",
+            snap.total_mb(*phase),
+            snap.max_rounds(*phase)
+        );
+    }
+
+    // Cross-check against the in-process mesh backend.
+    let (weights, x2) = prepared_model(cfg);
+    let mut coord = Coordinator::start(ServerConfig::new(cfg), weights);
+    coord.submit(x2);
+    let local = coord.run_batch().pop().expect("one result").logits;
+    let local_online = coord.snapshot().total_bytes(Phase::Online);
+    coord.shutdown();
+    assert_eq!(logits, local, "TCP deployment diverged from the in-process mesh");
+    assert_eq!(snap.total_bytes(Phase::Online), local_online);
+    println!(
+        "parity: logits and metered online bytes ({:.2} MB) identical to the in-process mesh",
+        snap.total_mb(Phase::Online)
+    );
+
+    client.shutdown().expect("shutdown");
+    for p in parties {
+        p.join().expect("party thread").expect("party error");
+    }
+    println!("deployment halted cleanly");
+}

@@ -1,7 +1,9 @@
 //! WAN-condition secure inference with *real* injected network delays
-//! (not just the cost model): every message pays bytes/bandwidth at the
-//! sender and RTT/2 at the receiver, demonstrating why the paper's
-//! round-lean protocols matter over wide-area links.
+//! (not just the cost model): every message pays RTT/2 plus
+//! bytes/bandwidth at the receiver (the sender's compute overlaps the
+//! modeled flight time, matching `NetParams::modeled_net_time`),
+//! demonstrating why the paper's round-lean protocols matter over
+//! wide-area links.
 //!
 //! Uses a scaled-down WAN (RTT 4 ms instead of 40 ms) on the tiny model so
 //! the demo finishes quickly; the printed *modeled* numbers use the

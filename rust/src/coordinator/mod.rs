@@ -9,11 +9,13 @@
 //! 3-party deployment).
 
 pub mod config_file;
+pub mod remote;
 pub mod router;
 pub mod server;
 pub mod session;
 
 pub use config_file::ConfigFile;
+pub use remote::{PartyOpts, RemoteClient};
 pub use router::Router;
 pub use server::{Coordinator, InferenceResult, ServerConfig};
 pub use session::Session;

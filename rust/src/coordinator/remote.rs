@@ -1,0 +1,411 @@
+//! Multi-process 3-party deployment: one party per process over the TCP
+//! backend, plus the thin client protocol that submits inference
+//! requests and reads logits (DESIGN.md §Transport backends).
+//!
+//! [`run_party`] is the body of `repro party --id N --listen ADDR
+//! --peers A,B`: establish the TCP mesh, perform the one-time model
+//! setup (P0 synthesizes and shares the calibrated weights), then serve
+//! clients from the same listener. [`RemoteClient`] is the other end —
+//! `repro infer --remote` and `examples/tcp_inference.rs` use it to run
+//! an inference against the three processes and to collect each party's
+//! local meter (the three snapshots merge into exactly the shared
+//! in-process meter, so LAN/WAN accounting is backend-independent).
+
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::error::{bail, Context, Result};
+use crate::core::prg::Prg;
+use crate::model::config::BertConfig;
+use crate::model::secure::{secure_infer_batch, SecureBert};
+use crate::model::weights::{synth_input, Weights};
+use crate::party::{PartyCtx, SessionCfg, P0, P1};
+use crate::protocols::max::MaxStrategy;
+use crate::runtime::native;
+use crate::transport::tcp::{accept_peer, dial_retry, TcpMesh, TcpTransport};
+use crate::transport::wire::{self, Accepted, Tag};
+use crate::transport::{Metrics, MetricsSnapshot, Net};
+
+/// Largest window a serving party accepts from a client (a corrupt or
+/// hostile batch field must not drive a huge MPC pass).
+pub const MAX_CLIENT_BATCH: usize = 4096;
+
+/// Configuration of one party process.
+pub struct PartyOpts {
+    /// This process's party id (`0 | 1 | 2`).
+    pub id: usize,
+    /// `peers[p]` = party `p`'s listen address (both other parties).
+    pub peers: [Option<String>; 3],
+    /// Model shape served by this deployment (all parties must agree).
+    pub cfg: BertConfig,
+    /// Session parameters; the wire handshakes verify
+    /// [`session_id`]`(master_seed, cfg)`, so deployments with
+    /// different seeds (see [`seed_from_label`]) or model shapes
+    /// cannot mesh.
+    pub scfg: SessionCfg,
+    /// Which `Π_max` realization softmax uses.
+    pub max_strategy: MaxStrategy,
+    /// Seed for P0's synthetic calibrated weights (ignored by P1/P2).
+    pub weights_seed: u64,
+}
+
+impl PartyOpts {
+    /// Defaults for a deployment of `cfg` as party `id`: default session
+    /// seed, tournament max, the bench harness's weight seed (42).
+    pub fn new(id: usize, cfg: BertConfig) -> PartyOpts {
+        PartyOpts {
+            id,
+            peers: [None, None, None],
+            cfg,
+            scfg: SessionCfg::default(),
+            max_strategy: MaxStrategy::Tournament,
+            weights_seed: 42,
+        }
+    }
+}
+
+/// The default localhost listen addresses used by `repro party` /
+/// `repro infer --remote` when none are given (party 0, 1, 2 in order).
+pub fn default_addrs() -> [String; 3] {
+    ["127.0.0.1:9100", "127.0.0.1:9101", "127.0.0.1:9102"].map(String::from)
+}
+
+/// The wire session id every connection handshake verifies: the shared
+/// master seed *mixed with the model shape*, so a party or client
+/// configured for a different shape (e.g. a stray `--seq`) — which
+/// would otherwise mesh cleanly and deadlock or refuse asymmetrically
+/// mid-request — fails loudly at connect time instead. The raw master
+/// seed still drives the protocol PRGs; only the handshake id is
+/// shape-bound.
+pub fn session_id(master_seed: [u8; 16], cfg: &BertConfig) -> [u8; 16] {
+    let label = format!(
+        "wire-session-s{}-d{}-l{}-h{}-f{}-c{}",
+        cfg.seq_len, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.n_classes
+    );
+    let mut prg = Prg::derive(master_seed, &label);
+    let mut id = [0u8; 16];
+    for b in id.iter_mut() {
+        *b = prg.next_u8();
+    }
+    id
+}
+
+/// Derive a master seed from a human-readable deployment label
+/// (`repro party --session LABEL`): independent deployments on one
+/// host get distinct seeds — and therefore distinct wire session ids —
+/// so a mis-wired `--peers` across deployments is rejected by the
+/// handshake instead of meshing two unrelated sessions together.
+pub fn seed_from_label(label: &str) -> [u8; 16] {
+    let mut prg = Prg::derive(*b"ppq-bert-session", &format!("deployment-{label}"));
+    let mut s = [0u8; 16];
+    for b in s.iter_mut() {
+        *b = prg.next_u8();
+    }
+    s
+}
+
+/// Run one party over an already-bound listener: establish the mesh, do
+/// model setup, then serve clients until one sends `Shutdown`. Blocks
+/// for the lifetime of the deployment.
+pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
+    assert!(opts.id < 3, "party id out of range");
+    let session = session_id(opts.scfg.master_seed, &opts.cfg);
+    let TcpMesh { chans, listener, parked_clients } =
+        TcpTransport::new(opts.id, listener, opts.peers.clone(), session).establish()?;
+    let metrics = Arc::new(Metrics::new());
+    let net = Net::new(opts.id, chans, Arc::clone(&metrics), opts.scfg.realtime);
+    // Protocol PRGs derive from the RAW master seed (bit-for-bit parity
+    // with in-process sessions); only the handshake uses the shape-bound
+    // session id.
+    let ctx = PartyCtx::new(opts.id, net, opts.scfg.master_seed, opts.scfg.threads);
+    let weights = (opts.id == P0).then(|| {
+        let mut w = Weights::synth(opts.cfg, opts.weights_seed);
+        native::calibrate(&opts.cfg, &mut w, &synth_input(&opts.cfg, 5));
+        w
+    });
+    let mut model = SecureBert::setup(&ctx, opts.cfg, weights.as_ref());
+    model.max_strategy = opts.max_strategy;
+    ctx.flush_timer();
+
+    // Clients are served ONE AT A TIME, in FIFO arrival order (parked
+    // connections first — `VecDeque` front — then fresh accepts). The
+    // deployment has no cross-party ordering protocol, so its contract
+    // is a single live client (like the in-process Coordinator owning
+    // its Session): a second client is simply queued until the first
+    // disconnects. Production fan-in belongs in one client-side
+    // coordinator process, not in N racing clients.
+    let mut pending: std::collections::VecDeque<TcpStream> = parked_clients.into();
+    loop {
+        let stream = match pending.pop_front() {
+            Some(s) => s,
+            None => {
+                match accept_peer(&listener, &session, opts.id as u8) {
+                    Some((s, Accepted::Client)) => s,
+                    Some((_, Accepted::Party(p))) => {
+                        bail!("party {p} connected after the mesh was established")
+                    }
+                    // Garbage/reset/silent connection: drop it, keep serving.
+                    None => continue,
+                }
+            }
+        };
+        if serve_client(&ctx, &model, &metrics, stream)? {
+            return Ok(());
+        }
+    }
+}
+
+/// Bind `listen` and run the party there (the `repro party` entry).
+pub fn run_party_addr(listen: &str, opts: PartyOpts) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("bind listen address {listen}"))?;
+    run_party(listener, opts)
+}
+
+/// Serve one client connection until it disconnects (`Ok(false)`) or
+/// requests deployment shutdown (`Ok(true)`). The party must outlive
+/// its clients: read failures, write failures (client crashed before
+/// reading a reply), and malformed frames all drop the *connection*,
+/// never the process — `Err` is reserved for states where the three
+/// parties can no longer be in lockstep.
+fn serve_client(
+    ctx: &PartyCtx,
+    model: &SecureBert,
+    metrics: &Metrics,
+    stream: TcpStream,
+) -> Result<bool> {
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("clone client stream")?);
+    let mut writer = stream;
+    // A failed reply write means the client is gone; drop it.
+    macro_rules! send_or_drop {
+        ($tag:expr, $payload:expr) => {
+            if wire::write_frame(&mut writer, $tag, $payload).is_err() {
+                return Ok(false);
+            }
+        };
+    }
+    loop {
+        let (tag, payload) = match wire::read_frame(&mut reader) {
+            Ok(f) => f,
+            // Client went away; wait for the next one.
+            Err(_) => return Ok(false),
+        };
+        match tag {
+            Tag::InferRequest => {
+                let Ok((batch, per_len, inputs)) = wire::decode_infer_request(&payload) else {
+                    // Malformed from a handshaken client: tell it (best
+                    // effort) and drop the connection, not the party.
+                    let _ = wire::write_frame(&mut writer, Tag::Error, b"malformed infer request");
+                    return Ok(false);
+                };
+                // Refusals must keep the three parties in lockstep: a
+                // request the MPC pass cannot serve is answered with an
+                // Error frame (party stays up) — and the checks that
+                // gate the pass use only metadata EVERY party receives
+                // (batch, per_len), so all three refuse symmetrically
+                // for the common misconfigurations (e.g. a client built
+                // for a different model shape).
+                let want = model.cfg.seq_len * model.cfg.d_model;
+                let refusal = if batch == 0 || batch > MAX_CLIENT_BATCH {
+                    Some(format!("window of {batch} not servable (max {MAX_CLIENT_BATCH})"))
+                } else if per_len != want {
+                    Some(format!(
+                        "request shaped for {per_len} values/input, this deployment serves {want}"
+                    ))
+                } else {
+                    None
+                };
+                if let Some(reason) = refusal {
+                    send_or_drop!(Tag::Error, reason.as_bytes());
+                    continue;
+                }
+                // These two can only fail at P1 (nobody else sees the
+                // rows), which means a broken or hostile client already
+                // desynced the parties — refuse, then resync by
+                // dropping the deployment (the other parties are
+                // blocked inside the pass and cannot be recalled).
+                if (ctx.id == P1) != inputs.is_some() {
+                    let msg = "inputs must travel to P1 (the data owner) exactly";
+                    let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
+                    bail!("{msg}");
+                }
+                if let Some(inputs) = &inputs {
+                    if inputs.len() != batch {
+                        let msg = format!(
+                            "client sent {} inputs for a {batch}-request window",
+                            inputs.len()
+                        );
+                        let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
+                        bail!("{msg}");
+                    }
+                }
+                // Don't bill queue-idle time spent waiting for the frame.
+                ctx.reset_timer();
+                let (logits, _) = secure_infer_batch(ctx, model, batch, inputs.as_deref());
+                ctx.flush_timer();
+                if ctx.id == P1 {
+                    send_or_drop!(Tag::Logits, &wire::encode_logits(&logits));
+                }
+                send_or_drop!(Tag::Done, &[]);
+            }
+            Tag::MetricsReq => {
+                send_or_drop!(Tag::MetricsSnap, &metrics.snapshot().to_bytes());
+            }
+            Tag::Shutdown => {
+                let _ = wire::write_frame(&mut writer, Tag::Done, &[]);
+                return Ok(true);
+            }
+            other => {
+                // Protocol violation from a handshaken client: drop the
+                // connection, keep the party serving.
+                let msg = format!("unexpected client frame {other:?}");
+                let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
+                return Ok(false);
+            }
+        }
+    }
+}
+
+struct PartyConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A client of a 3-process deployment: one connection per party,
+/// mirroring the in-process `Session` command fan-out (the window size
+/// is public serving metadata all parties need; the inputs travel only
+/// to P1, and only P1 returns logits).
+pub struct RemoteClient {
+    parties: Vec<PartyConn>,
+}
+
+impl RemoteClient {
+    /// Dial all three parties (`addrs[i]` = party `i`), retrying each
+    /// until `timeout`, and verify the handshakes: every address must
+    /// answer with the expected party id and the shared session id.
+    pub fn connect(addrs: &[String; 3], session: [u8; 16], timeout: Duration) -> Result<RemoteClient> {
+        let mut parties = Vec::with_capacity(3);
+        for (id, addr) in addrs.iter().enumerate() {
+            let mut stream = dial_retry(addr, timeout)?;
+            stream.set_nodelay(true).context("set_nodelay")?;
+            let acked = wire::client_handshake(&mut stream, &session)
+                .with_context(|| format!("client handshake with party {id} at {addr}"))?;
+            if acked as usize != id {
+                bail!("{addr} answered as party {acked}, expected party {id}");
+            }
+            let reader = BufReader::new(stream.try_clone().context("clone client stream")?);
+            parties.push(PartyConn { reader, writer: stream });
+        }
+        Ok(RemoteClient { parties })
+    }
+
+    /// Run one batched inference across the deployment (blocking):
+    /// submits the window to all three parties, waits for every party's
+    /// quiesce ack, and returns P1's revealed logits in submission
+    /// order. A deployment-side refusal (shape mismatch, oversized
+    /// window) comes back as an `Err` carrying the party's reason; the
+    /// connections stay usable because every party refuses in lockstep.
+    pub fn infer_batch(&mut self, inputs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        if inputs.is_empty() {
+            bail!("empty batch");
+        }
+        let batch = inputs.len();
+        let per_len = inputs[0].len();
+        if inputs.iter().any(|x| x.len() != per_len) {
+            bail!("all inputs in a window must have the same length");
+        }
+        // Encode (and implicitly size-check, via write_frame's MAX_FRAME
+        // bound against a growable Vec) every party's payload BEFORE the
+        // first socket write: if any frame is unsendable — e.g. P1's
+        // data payload exceeds MAX_FRAME — no party may have received
+        // the window, else the others would enter the pass and block on
+        // peers that never got it.
+        let mut frames = Vec::with_capacity(3);
+        for id in 0..3 {
+            let payload = wire::encode_infer_request(batch, per_len, (id == P1).then_some(inputs));
+            let mut frame = Vec::with_capacity(payload.len() + 5);
+            wire::write_frame(&mut frame, Tag::InferRequest, &payload)
+                .with_context(|| format!("request for party {id} is unsendable"))?;
+            frames.push(frame);
+        }
+        for (conn, frame) in self.parties.iter_mut().zip(&frames) {
+            conn.writer.write_all(frame).context("submit window")?;
+        }
+        // Every party answers exactly one terminal frame (Done or
+        // Error), P1 with a Logits frame before its Done — read them
+        // all so a refused window leaves the connections in sync.
+        let mut logits = None;
+        let mut refused = None;
+        for (id, conn) in self.parties.iter_mut().enumerate() {
+            let (tag, payload) = wire::read_frame(&mut conn.reader)?;
+            match tag {
+                Tag::Error => {
+                    refused.get_or_insert(format!(
+                        "party {id} refused: {}",
+                        String::from_utf8_lossy(&payload)
+                    ));
+                    continue;
+                }
+                Tag::Logits if id == P1 => {
+                    logits = Some(wire::decode_logits(&payload)?);
+                    let (tag, _) = wire::read_frame(&mut conn.reader)?;
+                    if tag != Tag::Done {
+                        bail!("expected Done from party {id}, got {tag:?}");
+                    }
+                }
+                Tag::Done if id != P1 => {}
+                other => bail!("unexpected reply {other:?} from party {id}"),
+            }
+        }
+        if let Some(reason) = refused {
+            bail!("{reason}");
+        }
+        let logits = logits.context("deployment returned no logits")?;
+        if logits.len() != batch {
+            bail!("got {} logit vectors for a {batch}-request window", logits.len());
+        }
+        Ok(logits)
+    }
+
+    /// Single-request convenience wrapper around
+    /// [`infer_batch`](RemoteClient::infer_batch).
+    pub fn infer(&mut self, input: &[i64]) -> Result<Vec<i64>> {
+        Ok(self.infer_batch(&[input.to_vec()])?.pop().unwrap())
+    }
+
+    /// Fetch and merge every party's local meter. Sends are counted at
+    /// the sender and rounds at the receiver, so the merge reconstructs
+    /// the shared in-process session meter exactly — per-link bytes and
+    /// per-phase rounds are backend-independent.
+    pub fn snapshot(&mut self) -> Result<MetricsSnapshot> {
+        let mut merged = MetricsSnapshot::default();
+        for (id, conn) in self.parties.iter_mut().enumerate() {
+            wire::write_frame(&mut conn.writer, Tag::MetricsReq, &[])?;
+            let (tag, payload) = wire::read_frame(&mut conn.reader)?;
+            if tag != Tag::MetricsSnap {
+                bail!("expected MetricsSnap from party {id}, got {tag:?}");
+            }
+            let snap = MetricsSnapshot::from_bytes(&payload)
+                .with_context(|| format!("party {id}: malformed metrics snapshot"))?;
+            merged.merge(&snap);
+        }
+        Ok(merged)
+    }
+
+    /// Ask every party process to exit (each acks before this returns).
+    pub fn shutdown(mut self) -> Result<()> {
+        for conn in self.parties.iter_mut() {
+            wire::write_frame(&mut conn.writer, Tag::Shutdown, &[])?;
+        }
+        for (id, conn) in self.parties.iter_mut().enumerate() {
+            let (tag, _) = wire::read_frame(&mut conn.reader)?;
+            if tag != Tag::Done {
+                bail!("party {id}: expected shutdown ack, got {tag:?}");
+            }
+        }
+        Ok(())
+    }
+}

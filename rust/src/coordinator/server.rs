@@ -203,6 +203,7 @@ impl Coordinator {
     /// grows before the drain stays pooled until a window of that size
     /// recurs (at most `max_batch - 1` such tapes can accumulate; each
     /// is one wasted offline pass plus its resident share material).
+    pub fn prep_next_window(&mut self) {
         let n = self.queue.len().min(self.cfg.max_batch);
         if n > 0 && self.pooled(n) == 0 {
             self.prep_window(n);

@@ -16,7 +16,7 @@ use crate::model::secure::{prep_infer_batch, secure_infer_batch, SecureBert};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
-use crate::transport::{build_mesh, Metrics, MetricsSnapshot};
+use crate::transport::{build_mesh, Metrics, MetricsSnapshot, Net};
 #[cfg(test)]
 use crate::transport::Phase;
 
@@ -50,7 +50,8 @@ pub struct Session {
 }
 
 impl Session {
-    /// Spawn the three party threads; P0 shares the model (Setup phase).
+    /// Spawn the three party threads over the default in-process mesh;
+    /// P0 shares the model (Setup phase).
     pub fn start(
         cfg: BertConfig,
         weights: Weights,
@@ -59,6 +60,22 @@ impl Session {
     ) -> Session {
         let metrics = Arc::new(Metrics::new());
         let nets = build_mesh(Arc::clone(&metrics), scfg.realtime);
+        Self::start_over(nets, cfg, weights, scfg, max_strategy)
+    }
+
+    /// Spawn the party threads over ALREADY-established transport
+    /// endpoints (any backend; `nets[i]` must belong to party `i`). The
+    /// session meter is `nets[0]`'s [`Metrics`] handle — pass endpoints
+    /// sharing one meter (as `build_mesh` and `loopback_mesh` produce)
+    /// if whole-session snapshots should cover all three parties.
+    pub fn start_over(
+        nets: [Net; 3],
+        cfg: BertConfig,
+        weights: Weights,
+        scfg: SessionCfg,
+        max_strategy: MaxStrategy,
+    ) -> Session {
+        let metrics = Arc::clone(&nets[0].metrics);
         let (logits_tx, logits_rx) = channel();
         let (done_tx, done_rx) = channel();
         let mut cmd_tx = Vec::new();
@@ -226,6 +243,25 @@ mod tests {
         let snap = sess.snapshot();
         assert!(snap.total_bytes(Phase::Setup) > 0);
         assert!(snap.total_bytes(Phase::Online) > 0);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn session_runs_over_loopback_tcp() {
+        // Session spawning is backend-agnostic: same session, real
+        // sockets. (Bit-for-bit parity with the mesh is pinned in
+        // rust/tests/transport_tests.rs.)
+        let cfg = BertConfig::tiny();
+        let mut w = Weights::synth(cfg, 42);
+        native::calibrate(&cfg, &mut w, &synth_input(&cfg, 5));
+        let scfg = SessionCfg::default();
+        let metrics = Arc::new(Metrics::new());
+        let nets =
+            crate::transport::loopback_mesh(Arc::clone(&metrics), scfg.master_seed, None).unwrap();
+        let sess = Session::start_over(nets, cfg, w, scfg, MaxStrategy::Tournament);
+        let logits = sess.infer(&synth_input(&cfg, 11));
+        assert_eq!(logits.len(), cfg.n_classes);
+        assert!(sess.snapshot().total_bytes(Phase::Online) > 0);
         sess.shutdown();
     }
 

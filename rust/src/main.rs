@@ -2,46 +2,83 @@
 //!
 //! Subcommands (hand-rolled parser; clap is not in the offline registry):
 //!   repro infer  [--config tiny|base] [--seq N] [--threads T] [--net lan|wan|local]
+//!                [--remote [A,B,C]] [--halt]      run against a 3-process deployment
 //!   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D]
+//!   repro party  --id N [--listen ADDR] [--peers A,B] [--config tiny|base] ...
 //!   repro oracle [--artifacts DIR]        run the PJRT plaintext oracle
 //!   repro comm   [--seq N]                print metered comm (Table-4 row)
 //!   repro help
+//!
+//! Flags take a value (`--seq 16`) or are boolean (`--halt`); a flag
+//! followed by another flag or by nothing is boolean. Positional tokens
+//! after the subcommand are rejected with the usage message.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
+use ppq_bert::coordinator::remote::{
+    default_addrs, run_party_addr, seed_from_label, session_id, PartyOpts, RemoteClient,
+};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
 use ppq_bert::model::config::BertConfig;
 use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
-use ppq_bert::transport::{NetParams, Phase};
+use ppq_bert::transport::{NetParams, Phase, PHASES};
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Parse `--key value` / `--bool` flags. A valueless flag (trailing, or
+/// followed by another `--flag`) maps to the empty string — check with
+/// `contains_key`. Positional tokens are an error.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
     let mut out = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            out.insert(key.to_string(), val);
-            i += 2;
-        } else {
-            i += 1;
+        let Some(key) = args[i].strip_prefix("--") else {
+            return Err(format!("unexpected positional argument `{}`", args[i]));
+        };
+        if key.is_empty() {
+            return Err("empty flag `--`".to_string());
+        }
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                out.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+            _ => {
+                out.insert(key.to_string(), String::new());
+                i += 1;
+            }
         }
     }
-    out
+    Ok(out)
+}
+
+/// Exit with the usage message (exit code 2, the conventional CLI
+/// usage-error code).
+fn usage_error(msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{HELP}");
+    std::process::exit(2);
+}
+
+/// A flag's value parsed as `T`, or `default` when absent; a present
+/// but unparsable (or valueless) flag is a usage error.
+fn flag_parse<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    match flags.get(key) {
+        None => default,
+        Some(v) => v
+            .parse()
+            .unwrap_or_else(|_| usage_error(&format!("--{key} needs a value (got `{v}`)"))),
+    }
 }
 
 fn config_from(flags: &HashMap<String, String>) -> BertConfig {
     let mut cfg = match flags.get("config").map(|s| s.as_str()) {
         Some("base") => BertConfig::base(),
-        _ => BertConfig::tiny(),
+        Some("tiny") | None => BertConfig::tiny(),
+        Some(other) => usage_error(&format!("unknown --config `{other}` (tiny|base)")),
     };
-    if let Some(s) = flags.get("seq") {
-        cfg.seq_len = s.parse().expect("--seq N");
-    }
-    if let Some(l) = flags.get("layers") {
-        cfg.n_layers = l.parse().expect("--layers N");
-    }
+    cfg.seq_len = flag_parse(flags, "seq", cfg.seq_len);
+    cfg.n_layers = flag_parse(flags, "layers", cfg.n_layers);
     cfg
 }
 
@@ -49,14 +86,32 @@ fn net_from(flags: &HashMap<String, String>) -> NetParams {
     match flags.get("net").map(|s| s.as_str()) {
         Some("wan") => NetParams::WAN,
         Some("local") => NetParams::LOCAL,
-        _ => NetParams::LAN,
+        Some("lan") | None => NetParams::LAN,
+        Some(other) => usage_error(&format!("unknown --net `{other}` (lan|wan|local)")),
+    }
+}
+
+/// `--remote [A,B,C]`: the three party addresses, defaulting to the
+/// localhost deployment `repro party` uses by default.
+fn remote_addrs(flags: &HashMap<String, String>) -> [String; 3] {
+    let v = flags.get("remote").map(|s| s.as_str()).unwrap_or("");
+    if v.is_empty() {
+        return default_addrs();
+    }
+    let parts: Vec<String> = v.split(',').map(|s| s.trim().to_string()).collect();
+    match <[String; 3]>::try_from(parts) {
+        Ok(a) => a,
+        Err(_) => usage_error("--remote wants three comma-separated addresses (party 0,1,2)"),
     }
 }
 
 fn cmd_infer(flags: HashMap<String, String>) {
+    if flags.contains_key("remote") {
+        return cmd_infer_remote(flags);
+    }
     let cfg = config_from(&flags);
     let net = net_from(&flags);
-    let threads: usize = flags.get("threads").map(|s| s.parse().unwrap()).unwrap_or(1);
+    let threads: usize = flag_parse(&flags, "threads", 1);
     println!(
         "secure inference: {} layers, d={}, seq={}, threads={}, net={}",
         cfg.n_layers, cfg.d_model, cfg.seq_len, threads, net.name
@@ -84,13 +139,118 @@ fn cmd_infer(flags: HashMap<String, String>) {
     coord.shutdown();
 }
 
+/// Run one inference against a live 3-process deployment (`repro party`
+/// x 3): submit the same synthetic request `repro infer` uses
+/// in-process, so logits are directly comparable, then print the merged
+/// per-phase meter collected from the parties. `--halt` additionally
+/// shuts the deployment down afterwards.
+fn cmd_infer_remote(flags: HashMap<String, String>) {
+    let cfg = config_from(&flags);
+    let addrs = remote_addrs(&flags);
+    println!(
+        "remote secure inference: {} layers, d={}, seq={} via {}",
+        cfg.n_layers, cfg.d_model, cfg.seq_len, addrs.join(", ")
+    );
+    let seed = match flags.get("session").filter(|s| !s.is_empty()) {
+        Some(label) => seed_from_label(label),
+        None => SessionCfg::default().master_seed,
+    };
+    let session = session_id(seed, &cfg);
+    let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
+        .unwrap_or_else(|e| {
+            eprintln!("error: connect to deployment: {e}");
+            std::process::exit(1);
+        });
+    let x = synth_input(&cfg, 11);
+    let t0 = std::time::Instant::now();
+    let logits = client.infer(&x).unwrap_or_else(|e| {
+        eprintln!("error: remote inference: {e}");
+        std::process::exit(1);
+    });
+    let dt = t0.elapsed();
+    println!("request 0: logits {logits:?}  wall {}", fmt_dur(dt));
+    match client.snapshot() {
+        Ok(s) => {
+            for (phase, name) in PHASES.iter().zip(["setup", "offline", "online"]) {
+                println!(
+                    "  {name:8} {:.2} MB  {} rounds",
+                    s.total_mb(*phase),
+                    s.max_rounds(*phase)
+                );
+            }
+        }
+        Err(e) => eprintln!("warning: metrics fetch failed: {e}"),
+    }
+    if flags.contains_key("halt") {
+        if let Err(e) = client.shutdown() {
+            eprintln!("warning: shutdown: {e}");
+        } else {
+            println!("deployment halted");
+        }
+    }
+}
+
+/// One party of a multi-process deployment: blocks until a client sends
+/// a shutdown request.
+fn cmd_party(flags: HashMap<String, String>) {
+    let id: usize = match flags.get("id").map(|s| s.parse()) {
+        Some(Ok(id)) if id < 3 => id,
+        _ => usage_error("party needs --id 0|1|2"),
+    };
+    let cfg = config_from(&flags);
+    let defaults = default_addrs();
+    let listen = flags
+        .get("listen")
+        .filter(|s| !s.is_empty())
+        .cloned()
+        .unwrap_or_else(|| defaults[id].clone());
+    let mut opts = PartyOpts::new(id, cfg);
+    opts.scfg.threads = flag_parse(&flags, "threads", 1);
+    opts.weights_seed = flag_parse(&flags, "weights-seed", 42);
+    if let Some(label) = flags.get("session").filter(|s| !s.is_empty()) {
+        opts.scfg.master_seed = seed_from_label(label);
+    }
+    let peer_ids: Vec<usize> = (0..3).filter(|&p| p != id).collect();
+    match flags.get("peers").map(|s| s.as_str()) {
+        None | Some("") => {
+            for &p in &peer_ids {
+                opts.peers[p] = Some(defaults[p].clone());
+            }
+        }
+        Some(list) => {
+            let parts: Vec<&str> = list.split(',').map(|s| s.trim()).collect();
+            if parts.len() != 2 {
+                usage_error("--peers wants the other two parties' addresses, ascending id order");
+            }
+            for (&p, addr) in peer_ids.iter().zip(parts) {
+                opts.peers[p] = Some(addr.to_string());
+            }
+        }
+    }
+    println!(
+        "party {id}: listening on {listen}, peers {:?}, model {} layers d={} seq={}",
+        peer_ids
+            .iter()
+            .map(|&p| opts.peers[p].clone().unwrap())
+            .collect::<Vec<_>>(),
+        opts.cfg.n_layers,
+        opts.cfg.d_model,
+        opts.cfg.seq_len,
+    );
+    if let Err(e) = run_party_addr(&listen, opts) {
+        eprintln!("error: party {id}: {e}");
+        std::process::exit(1);
+    }
+    println!("party {id}: shutdown requested, exiting");
+}
+
 fn cmd_serve(flags: HashMap<String, String>) {
     // --conf FILE takes precedence over individual flags.
     if let Some(path) = flags.get("conf") {
         let cf = ppq_bert::coordinator::ConfigFile::load(std::path::Path::new(path))
             .expect("parse config file");
         let sc = cf.server_config().expect("build server config");
-        let n: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(4);
+        let n: usize = flag_parse(&flags, "requests", 4);
         let (w, _) = prepared_model(sc.cfg);
         let mut coord = Coordinator::start(sc, w);
         for i in 0..n {
@@ -106,9 +266,9 @@ fn cmd_serve(flags: HashMap<String, String>) {
         return;
     }
     let cfg = config_from(&flags);
-    let n: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(4);
-    let batch: usize = flags.get("batch").map(|s| s.parse().unwrap()).unwrap_or(4);
-    let prep: usize = flags.get("prep").map(|s| s.parse().unwrap()).unwrap_or(0);
+    let n: usize = flag_parse(&flags, "requests", 4);
+    let batch: usize = flag_parse(&flags, "batch", 4);
+    let prep: usize = flag_parse(&flags, "prep", 0);
     let (w, _) = prepared_model(cfg);
     let mut scfg = ServerConfig::new(cfg);
     scfg.max_batch = batch;
@@ -187,21 +347,42 @@ const HELP: &str = "repro — privacy-preserving quantized BERT inference (3-par
 
 USAGE:
   repro infer  [--config tiny|base] [--seq N] [--layers L] [--threads T] [--net lan|wan|local]
+  repro infer  --remote [ADDR0,ADDR1,ADDR2] [--session LABEL] [--halt]
+                                             run against `repro party` processes
   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--conf FILE]
+  repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
+               [--layers L] [--threads T] [--weights-seed S] [--session LABEL]
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N]
   repro help
+
+Multi-process quickstart (three terminals + a client, all defaults):
+  repro party --id 0 & repro party --id 1 & repro party --id 2 &
+  repro infer --remote --halt
 ";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
-    let flags = parse_flags(&args[1.min(args.len())..]);
+    if cmd == "--help" || cmd == "-h" {
+        print!("{HELP}");
+        return;
+    }
+    let flags = match parse_flags(&args[1.min(args.len())..]) {
+        Ok(f) => f,
+        Err(e) => usage_error(&e),
+    };
+    if flags.contains_key("help") {
+        print!("{HELP}");
+        return;
+    }
     match cmd {
         "infer" => cmd_infer(flags),
         "serve" => cmd_serve(flags),
+        "party" => cmd_party(flags),
         "oracle" => cmd_oracle(flags),
         "comm" => cmd_comm(flags),
-        _ => print!("{HELP}"),
+        "help" => print!("{HELP}"),
+        other => usage_error(&format!("unknown subcommand `{other}`")),
     }
 }

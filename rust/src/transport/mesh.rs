@@ -1,0 +1,127 @@
+//! In-process mesh backend: the three parties run as threads in one
+//! process connected by unbounded `std::sync::mpsc` channels — the
+//! default for tests and benches (bit-exact, zero setup cost, and
+//! sends never block so `exchange_ring` cannot deadlock).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::core::error::{Context, Result};
+
+use super::metrics::{Metrics, Phase};
+use super::net::{Net, NetParams, PartyChannels, PeerChannel, Transport};
+
+/// One mpsc link to a peer. The phase tag is accepted for interface
+/// parity with the TCP backend but not carried on the wire: within one
+/// process the SPMD phase agreement needs no enforcement.
+struct MeshChannel {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl PeerChannel for MeshChannel {
+    fn send(&self, _phase: Phase, payload: Vec<u8>) -> Result<()> {
+        self.tx.send(payload).ok().context("peer hung up")
+    }
+
+    fn recv(&self, _phase: Phase) -> Result<Vec<u8>> {
+        self.rx.recv().ok().context("peer hung up")
+    }
+}
+
+/// One party's pre-wired mpsc channel set (built by [`build_mesh_transports`]).
+pub struct MeshTransport {
+    id: usize,
+    chans: PartyChannels,
+}
+
+impl Transport for MeshTransport {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn open(self: Box<Self>) -> Result<PartyChannels> {
+        Ok(self.chans)
+    }
+}
+
+/// Wire up the full 3-party mpsc mesh and split it into one
+/// [`MeshTransport`] per party (establishment is trivially infallible —
+/// the channel pairs already exist).
+pub fn build_mesh_transports() -> [MeshTransport; 3] {
+    // links[from][to]
+    let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = vec![vec![None, None, None]; 3];
+    let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> = vec![
+        vec![None, None, None],
+        vec![None, None, None],
+        vec![None, None, None],
+    ];
+    for from in 0..3 {
+        for to in 0..3 {
+            if from == to {
+                continue;
+            }
+            let (tx, rx) = channel();
+            txs[from][to] = Some(tx);
+            rxs[to][from] = Some(rx);
+        }
+    }
+    let mut out = Vec::new();
+    for (id, (tx, rx)) in txs.into_iter().zip(rxs).enumerate() {
+        let mut chans: PartyChannels = [None, None, None];
+        for (peer, (tx, rx)) in tx.into_iter().zip(rx).enumerate() {
+            if let (Some(tx), Some(rx)) = (tx, rx) {
+                chans[peer] = Some(Box::new(MeshChannel { tx, rx }) as Box<dyn PeerChannel>);
+            }
+        }
+        out.push(MeshTransport { id, chans });
+    }
+    out.try_into().map_err(|_| ()).unwrap()
+}
+
+/// Build the 3-party in-process mesh. Returns per-party [`Net`]s sharing
+/// one [`Metrics`] — the historical entry point every in-process session
+/// goes through; semantics are unchanged by the backend refactor.
+pub fn build_mesh(metrics: Arc<Metrics>, realtime: Option<NetParams>) -> [Net; 3] {
+    build_mesh_transports().map(|t| {
+        Net::over(Box::new(t), Arc::clone(&metrics), realtime)
+            .expect("in-process mesh cannot fail to open")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ring::R4;
+
+    #[test]
+    fn mesh_roundtrip() {
+        let metrics = Arc::new(Metrics::new());
+        let [n0, n1, _n2] = build_mesh(Arc::clone(&metrics), None);
+        std::thread::scope(|s| {
+            s.spawn(move || n0.send_ring(1, Phase::Online, R4, &[1, 2, 3]));
+            let got = n1.recv_ring(0, Phase::Online, R4, 3);
+            assert_eq!(got, vec![1, 2, 3]);
+        });
+        let snap = metrics.snapshot();
+        assert_eq!(snap.total_bytes(Phase::Online), 2); // 3 nibbles -> 2 bytes
+        assert_eq!(snap.max_rounds(Phase::Online), 1);
+    }
+
+    #[test]
+    fn exchange_counts_one_round_each() {
+        let metrics = Arc::new(Metrics::new());
+        let [_n0, n1, n2] = build_mesh(Arc::clone(&metrics), None);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let got = n1.exchange_ring(2, Phase::Online, R4, &[5]);
+                assert_eq!(got, vec![7]);
+            });
+            let got = n2.exchange_ring(1, Phase::Online, R4, &[7]);
+            assert_eq!(got, vec![5]);
+        });
+        let snap = metrics.snapshot();
+        assert_eq!(snap.rounds[1][Phase::Online as usize], 1);
+        assert_eq!(snap.rounds[2][Phase::Online as usize], 1);
+    }
+}

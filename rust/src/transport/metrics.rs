@@ -175,6 +175,60 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Serialize to a fixed-size little-endian byte vector (the
+    /// [`MetricsSnap`](crate::transport::wire::Tag::MetricsSnap) wire
+    /// payload: remote parties report their local meters to the client,
+    /// which [`merge`](MetricsSnapshot::merge)s them — sends are counted
+    /// at the sender and rounds at the receiver, so the merged snapshot
+    /// equals the shared in-process meter exactly).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity((NP * NP * NPH * 2 + NP * NPH * 2 + NP * 2) * 8);
+        let mut push = |v: u64| out.extend_from_slice(&v.to_le_bytes());
+        for l in 0..NP * NP {
+            for p in 0..NPH {
+                push(self.bytes[l][p]);
+                push(self.msgs[l][p]);
+            }
+        }
+        for party in 0..NP {
+            for p in 0..NPH {
+                push(self.rounds[party][p]);
+                push(self.compute_ns[party][p]);
+            }
+            push(self.prep_hits[party]);
+            push(self.prep_misses[party]);
+        }
+        out
+    }
+
+    /// Inverse of [`to_bytes`](MetricsSnapshot::to_bytes); `None` on a
+    /// length mismatch.
+    pub fn from_bytes(bytes: &[u8]) -> Option<MetricsSnapshot> {
+        let expect = (NP * NP * NPH * 2 + NP * NPH * 2 + NP * 2) * 8;
+        if bytes.len() != expect {
+            return None;
+        }
+        let mut it = bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()));
+        let mut s = MetricsSnapshot::default();
+        for l in 0..NP * NP {
+            for p in 0..NPH {
+                s.bytes[l][p] = it.next()?;
+                s.msgs[l][p] = it.next()?;
+            }
+        }
+        for party in 0..NP {
+            for p in 0..NPH {
+                s.rounds[party][p] = it.next()?;
+                s.compute_ns[party][p] = it.next()?;
+            }
+            s.prep_hits[party] = it.next()?;
+            s.prep_misses[party] = it.next()?;
+        }
+        Some(s)
+    }
+
     /// Subtract an earlier snapshot counter-wise (saturating), leaving
     /// the delta between two observation points — the coordinator's
     /// per-window accounting and the warm-pool tests both difference the
@@ -235,6 +289,24 @@ mod tests {
         b.saturating_sub_assign(&a);
         assert_eq!(b.pool_hits(), 1);
         assert_eq!(b.pool_misses(), 0);
+    }
+
+    #[test]
+    fn snapshot_bytes_roundtrip() {
+        let m = Metrics::new();
+        m.record_send(0, 1, Phase::Setup, 77);
+        m.record_round(2, Phase::Online);
+        m.record_compute(1, Phase::Offline, 123);
+        m.record_prep(0, true);
+        let s = m.snapshot();
+        let got = MetricsSnapshot::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(got.bytes, s.bytes);
+        assert_eq!(got.msgs, s.msgs);
+        assert_eq!(got.rounds, s.rounds);
+        assert_eq!(got.compute_ns, s.compute_ns);
+        assert_eq!(got.prep_hits, s.prep_hits);
+        assert_eq!(got.prep_misses, s.prep_misses);
+        assert!(MetricsSnapshot::from_bytes(&s.to_bytes()[1..]).is_none());
     }
 
     #[test]

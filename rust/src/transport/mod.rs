@@ -1,15 +1,32 @@
-//! Party-to-party transport: byte channels, per-phase metering, and the
-//! LAN/WAN network cost model.
+//! Party-to-party transport: pluggable byte channels, per-phase
+//! metering, and the LAN/WAN network cost model.
 //!
-//! The three parties run as threads in one process connected by
-//! `std::sync::mpsc` channels (tokio is unavailable offline — DESIGN.md).
-//! Every message is metered (bytes, message count, rounds) per directed
-//! link and per protocol phase; the bench harness combines the meter with
-//! the [`NetParams`] cost model to report LAN/WAN latency the same way the
-//! paper does (rounds x RTT + bytes / bandwidth + measured compute).
+//! The layer is backend-agnostic (DESIGN.md §Transport backends): every
+//! message goes through [`Net`], which meters it (bytes, message count,
+//! rounds) per directed link and per protocol phase and then hands the
+//! payload to a boxed [`PeerChannel`]. Two backends implement the
+//! [`Transport`]/[`PeerChannel`] trait pair:
+//!
+//! * [`mesh`] — the in-process `std::sync::mpsc` mesh (three parties as
+//!   threads in one process); bit-exact, zero setup, the default for
+//!   tests and benches.
+//! * [`tcp`] — `std::net::TcpStream` with a length-prefixed framed wire
+//!   protocol ([`wire`]) for real multi-process deployment
+//!   (`repro party`, `coordinator::remote`).
+//!
+//! Because metering lives above the backend, both produce identical
+//! [`MetricsSnapshot`]s for the same protocol run; the bench harness
+//! combines the meter with the [`NetParams`] cost model to report
+//! LAN/WAN latency the same way the paper does (rounds x RTT + bytes /
+//! bandwidth + measured compute).
 
+pub mod mesh;
 pub mod metrics;
 pub mod net;
+pub mod tcp;
+pub mod wire;
 
-pub use metrics::{Metrics, MetricsSnapshot, Phase};
-pub use net::{build_mesh, Net, NetParams};
+pub use mesh::build_mesh;
+pub use metrics::{Metrics, MetricsSnapshot, Phase, PHASES};
+pub use net::{Net, NetParams, PartyChannels, PeerChannel, Transport};
+pub use tcp::{loopback_mesh, TcpTransport};

@@ -1,9 +1,18 @@
-//! In-process mesh transport + the LAN/WAN network cost model.
+//! Backend-agnostic party endpoint ([`Net`]), the [`Transport`] /
+//! [`PeerChannel`] trait pair, and the LAN/WAN network cost model.
+//!
+//! [`Net`] is the single type protocol code talks to: it owns one boxed
+//! [`PeerChannel`] per peer and does all metering (bytes, messages,
+//! rounds) itself, *above* the backend — so the in-process mesh
+//! (`transport::mesh`) and the TCP backend (`transport::tcp`) produce
+//! identical [`MetricsSnapshot`]s for the same protocol run, and the
+//! LAN/WAN numbers stay comparable across deployments
+//! (DESIGN.md §Transport backends).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::core::error::{Error, Result};
 use crate::core::pack::{pack, unpack};
 use crate::core::ring::Ring;
 
@@ -56,45 +65,110 @@ impl NetParams {
     }
 }
 
-/// One party's endpoints to the other two parties.
+/// A bidirectional byte channel to ONE peer party.
+///
+/// Contract (what [`Net`] relies on, identically for every backend):
+/// * `send` never blocks on the peer making progress — payloads are
+///   queued (mesh: unbounded mpsc; tcp: per-link writer thread), which
+///   is what makes the simultaneous-exchange pattern (`exchange_ring`:
+///   both sides send, then both receive) deadlock-free even when a
+///   window's payload exceeds any socket buffer.
+/// * `recv` blocks until the peer's next payload for `phase` arrives;
+///   framing/tag violations are an [`Error`], not garbage bytes.
+/// * Metering is NOT the channel's job: [`Net`] records bytes/rounds
+///   above the backend, so meters agree bit-for-bit across backends.
+pub trait PeerChannel: Send {
+    /// Queue `payload` for delivery to the peer, tagged with `phase`.
+    fn send(&self, phase: Phase, payload: Vec<u8>) -> Result<()>;
+    /// Block until the peer's next payload arrives; verifies the frame's
+    /// phase tag matches `phase` where the backend carries one.
+    fn recv(&self, phase: Phase) -> Result<Vec<u8>>;
+}
+
+/// One party's channel set: `chans[p]` is the link to party `p`
+/// (`None` at the party's own slot).
+pub type PartyChannels = [Option<Box<dyn PeerChannel>>; 3];
+
+/// A transport backend: establishes one party's channels to its two
+/// peers. Implementations: [`MeshTransport`] (in-process mpsc, the
+/// default for tests/benches) and [`TcpTransport`] (real sockets for
+/// multi-process deployment).
+///
+/// [`MeshTransport`]: super::mesh::MeshTransport
+/// [`TcpTransport`]: super::tcp::TcpTransport
+pub trait Transport {
+    /// This party's id (`0 | 1 | 2`).
+    fn id(&self) -> usize;
+    /// Establish the channels (handshakes, connection retry, …).
+    fn open(self: Box<Self>) -> Result<PartyChannels>;
+}
+
+/// One party's endpoints to the other two parties, over any backend.
 pub struct Net {
     /// The party this endpoint belongs to.
     pub id: usize,
-    tx: Vec<Option<Sender<Vec<u8>>>>,
-    rx: Vec<Option<Receiver<Vec<u8>>>>,
-    /// Session-wide shared meter (bytes/rounds/compute per phase).
+    chans: PartyChannels,
+    /// Session-wide shared meter (bytes/rounds/compute per phase). In a
+    /// multi-process deployment each party holds its own [`Metrics`] and
+    /// fills only its own slots; merging the three snapshots recovers
+    /// the exact in-process meter (see `MetricsSnapshot::merge`).
     pub metrics: Arc<Metrics>,
-    /// Optional real sleep injection (wan_inference example): the receiver
-    /// sleeps RTT/2 per message plus bytes/bandwidth.
+    /// Optional real sleep injection (wan_inference example): the
+    /// receiver sleeps RTT/2 plus bytes/bandwidth per message, matching
+    /// the `NetParams::modeled_net_time` decomposition.
     pub realtime: Option<NetParams>,
 }
 
 impl Net {
+    /// Wrap already-established channels into an endpoint.
+    pub fn new(
+        id: usize,
+        chans: PartyChannels,
+        metrics: Arc<Metrics>,
+        realtime: Option<NetParams>,
+    ) -> Net {
+        Net { id, chans, metrics, realtime }
+    }
+
+    /// Establish a backend and wrap it: `Net::over(Box::new(transport),
+    /// metrics, realtime)`. The returned endpoint behaves identically
+    /// for every backend; only delivery differs.
+    pub fn over(
+        transport: Box<dyn Transport>,
+        metrics: Arc<Metrics>,
+        realtime: Option<NetParams>,
+    ) -> Result<Net> {
+        let id = transport.id();
+        Ok(Net::new(id, transport.open()?, metrics, realtime))
+    }
+
+    fn chan(&self, peer: usize) -> &dyn PeerChannel {
+        self.chans[peer].as_deref().expect("no channel to self")
+    }
+
     /// Send a raw payload to `to`, metering it under `phase`.
     pub fn send_bytes(&self, to: usize, phase: Phase, payload: Vec<u8>) {
         debug_assert_ne!(to, self.id);
         self.metrics.record_send(self.id, to, phase, payload.len());
-        if let Some(p) = self.realtime {
-            let t = payload.len() as f64 * 8.0 / p.bandwidth_bps;
-            std::thread::sleep(Duration::from_secs_f64(t));
+        if let Err(e) = self.chan(to).send(phase, payload) {
+            panic!("send to party {to} failed: {e}");
         }
-        self.tx[to]
-            .as_ref()
-            .expect("no channel to self")
-            .send(payload)
-            .expect("peer hung up");
     }
 
-    /// Blocking receive; counts one protocol round for this party.
+    /// Blocking receive; counts one protocol round for this party. When
+    /// realtime injection is on, the receiver pays the modeled transfer
+    /// cost here — RTT/2 plus bytes/bandwidth — so the sender's compute
+    /// overlaps the modeled flight time exactly as
+    /// `NetParams::modeled_net_time` assumes.
     pub fn recv_bytes(&self, from: usize, phase: Phase) -> Vec<u8> {
         debug_assert_ne!(from, self.id);
-        let payload = self.rx[from]
-            .as_ref()
-            .expect("no channel from self")
-            .recv()
-            .expect("peer hung up");
+        let payload = match self.chan(from).recv(phase) {
+            Ok(p) => p,
+            Err(e) => panic!("recv from party {from} failed: {e}"),
+        };
         if let Some(p) = self.realtime {
-            std::thread::sleep(p.rtt / 2);
+            let transfer = payload.len() as f64 * 8.0 / p.bandwidth_bps;
+            std::thread::sleep(p.rtt / 2 + Duration::from_secs_f64(transfer));
         }
         self.metrics.record_round(self.id, phase);
         payload
@@ -105,11 +179,30 @@ impl Net {
         self.send_bytes(to, phase, pack(ring, vals));
     }
 
-    /// Blocking receive of `n` ring elements (one protocol round).
-    pub fn recv_ring(&self, from: usize, phase: Phase, ring: Ring, n: usize) -> Vec<u64> {
+    /// Blocking receive of `n` ring elements (one protocol round),
+    /// validating the frame length. A malformed or truncated frame is a
+    /// hard [`Error`] in every build profile — essential once frames
+    /// arrive over TCP instead of a same-process channel.
+    pub fn try_recv_ring(&self, from: usize, phase: Phase, ring: Ring, n: usize) -> Result<Vec<u64>> {
         let bytes = self.recv_bytes(from, phase);
-        debug_assert_eq!(bytes.len(), ring.packed_len(n));
-        unpack(ring, &bytes, n)
+        if bytes.len() != ring.packed_len(n) {
+            return Err(Error::msg(format!(
+                "party {}: frame from party {from} is {} bytes, expected {} ({n} x {}-bit elements)",
+                self.id,
+                bytes.len(),
+                ring.packed_len(n),
+                ring.bits(),
+            )));
+        }
+        Ok(unpack(ring, &bytes, n))
+    }
+
+    /// Blocking receive of `n` ring elements (one protocol round);
+    /// panics with the [`try_recv_ring`](Net::try_recv_ring) error on a
+    /// malformed frame.
+    pub fn recv_ring(&self, from: usize, phase: Phase, ring: Ring, n: usize) -> Vec<u64> {
+        self.try_recv_ring(from, phase, ring, n)
+            .unwrap_or_else(|e| panic!("recv_ring: {e}"))
     }
 
     /// Simultaneous exchange with one peer (both send, then both receive):
@@ -127,74 +220,11 @@ impl Net {
     }
 }
 
-/// Build the 3-party channel mesh. Returns per-party [`Net`]s sharing one
-/// [`Metrics`].
-pub fn build_mesh(metrics: Arc<Metrics>, realtime: Option<NetParams>) -> [Net; 3] {
-    // chans[from][to]
-    let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = vec![vec![None, None, None]; 3];
-    let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> = vec![
-        vec![None, None, None],
-        vec![None, None, None],
-        vec![None, None, None],
-    ];
-    for from in 0..3 {
-        for to in 0..3 {
-            if from == to {
-                continue;
-            }
-            let (tx, rx) = channel();
-            txs[from][to] = Some(tx);
-            rxs[to][from] = Some(rx);
-        }
-    }
-    let mut nets = Vec::new();
-    for (id, (tx, rx)) in txs.into_iter().zip(rxs).enumerate() {
-        nets.push(Net {
-            id,
-            tx,
-            rx,
-            metrics: Arc::clone(&metrics),
-            realtime,
-        });
-    }
-    nets.try_into().map_err(|_| ()).unwrap()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::ring::R4;
-
-    #[test]
-    fn mesh_roundtrip() {
-        let metrics = Arc::new(Metrics::new());
-        let [n0, n1, _n2] = build_mesh(Arc::clone(&metrics), None);
-        std::thread::scope(|s| {
-            s.spawn(move || n0.send_ring(1, Phase::Online, R4, &[1, 2, 3]));
-            let got = n1.recv_ring(0, Phase::Online, R4, 3);
-            assert_eq!(got, vec![1, 2, 3]);
-        });
-        let snap = metrics.snapshot();
-        assert_eq!(snap.total_bytes(Phase::Online), 2); // 3 nibbles -> 2 bytes
-        assert_eq!(snap.max_rounds(Phase::Online), 1);
-    }
-
-    #[test]
-    fn exchange_counts_one_round_each() {
-        let metrics = Arc::new(Metrics::new());
-        let [_n0, n1, n2] = build_mesh(Arc::clone(&metrics), None);
-        std::thread::scope(|s| {
-            s.spawn(move || {
-                let got = n1.exchange_ring(2, Phase::Online, R4, &[5]);
-                assert_eq!(got, vec![7]);
-            });
-            let got = n2.exchange_ring(1, Phase::Online, R4, &[7]);
-            assert_eq!(got, vec![5]);
-        });
-        let snap = metrics.snapshot();
-        assert_eq!(snap.rounds[1][Phase::Online as usize], 1);
-        assert_eq!(snap.rounds[2][Phase::Online as usize], 1);
-    }
+    use crate::core::ring::{R16, R4};
+    use crate::transport::mesh::build_mesh;
 
     #[test]
     fn wan_model_dominated_by_rtt() {
@@ -207,5 +237,61 @@ mod tests {
         assert!(t >= Duration::from_millis(80), "{t:?}");
         let t_lan = NetParams::LAN.modeled_net_time(&snap, Phase::Online);
         assert!(t_lan < Duration::from_millis(1));
+    }
+
+    #[test]
+    fn malformed_frame_is_an_error_not_garbage() {
+        let metrics = Arc::new(Metrics::new());
+        let [n0, n1, _n2] = build_mesh(Arc::clone(&metrics), None);
+        std::thread::scope(|s| {
+            // 3 R4 elements pack into 2 bytes; claim 5 were sent.
+            s.spawn(move || n0.send_ring(1, Phase::Online, R4, &[1, 2, 3]));
+            let err = n1.try_recv_ring(0, Phase::Online, R4, 5).unwrap_err();
+            assert!(err.to_string().contains("expected 3"), "{err}");
+        });
+    }
+
+    #[test]
+    fn realtime_cost_lands_on_the_receiver() {
+        // A slow modeled link must not slow the *sender*: the send
+        // returns immediately, the receiver pays RTT/2 + bytes/bw.
+        let slow = NetParams {
+            name: "SLOW",
+            bandwidth_bps: 8.0 * 100_000.0, // 100 kB/s -> 10 ms for 1 kB
+            rtt: Duration::from_millis(20),
+        };
+        let metrics = Arc::new(Metrics::new());
+        let [n0, n1, _n2] = build_mesh(Arc::clone(&metrics), Some(slow));
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let t0 = std::time::Instant::now();
+                n0.send_bytes(1, Phase::Online, vec![0u8; 1000]);
+                assert!(
+                    t0.elapsed() < Duration::from_millis(5),
+                    "sender must not sleep for modeled transfer"
+                );
+            });
+            let t0 = std::time::Instant::now();
+            let got = n1.recv_bytes(0, Phase::Online);
+            assert_eq!(got.len(), 1000);
+            // receiver pays RTT/2 (10 ms) + transfer (10 ms)
+            assert!(t0.elapsed() >= Duration::from_millis(18), "{:?}", t0.elapsed());
+        });
+    }
+
+    #[test]
+    fn exchange_is_deadlock_free_for_large_payloads() {
+        let metrics = Arc::new(Metrics::new());
+        let [_n0, n1, n2] = build_mesh(Arc::clone(&metrics), None);
+        let big: Vec<u64> = (0..200_000).map(|i| i % 13).collect();
+        std::thread::scope(|s| {
+            let b = big.clone();
+            s.spawn(move || {
+                let got = n1.exchange_ring(2, Phase::Online, R16, &b);
+                assert_eq!(got.len(), b.len());
+            });
+            let got = n2.exchange_ring(1, Phase::Online, R16, &big);
+            assert_eq!(got, big);
+        });
     }
 }

@@ -1,0 +1,467 @@
+//! Framed wire protocol for the TCP transport backend and the thin
+//! client protocol (DESIGN.md §Transport backends).
+//!
+//! Every message on a socket is one *frame*:
+//!
+//! ```text
+//! [len: u32 LE] [tag: u8] [payload: len bytes]
+//! ```
+//!
+//! `len` counts the payload only and is bounded by [`MAX_FRAME`] so a
+//! corrupt or adversarial length prefix fails loudly instead of
+//! allocating gigabytes. The tag is either a protocol [`Phase`] (party
+//! traffic: the receiver checks that the sender's phase matches its own,
+//! which SPMD protocol code guarantees) or one of the handshake/client
+//! control tags below.
+//!
+//! Connection establishment is a one-round handshake: the dialer sends
+//! [`Tag::PartyHello`] (or [`Tag::ClientHello`]) carrying the wire
+//! version, the 16-byte session id (the master seed fingerprint all
+//! parties share), and — for parties — the claimed `from` id and the
+//! intended `to` id. The acceptor verifies version, session, and that it
+//! really is party `to`, then answers [`Tag::HelloAck`] with its own id;
+//! a mismatch is a hard [`Error`], so a process wired to the wrong
+//! address or session fails at connect time, not mid-protocol.
+
+use std::io::{Read, Write};
+
+use crate::core::error::{bail, Context, Error, Result};
+use crate::transport::metrics::Phase;
+
+/// Wire protocol version; bumped on any incompatible framing change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Refuse frames whose length prefix exceeds this (1 GiB): a corrupt or
+/// hostile prefix must not drive allocation.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Frame tags: protocol phases for party traffic, plus handshake and
+/// client-protocol control frames.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tag {
+    /// Party traffic metered under [`Phase::Setup`].
+    Setup,
+    /// Party traffic metered under [`Phase::Offline`].
+    Offline,
+    /// Party traffic metered under [`Phase::Online`].
+    Online,
+    /// Dialer → acceptor party handshake (version, session, from, to).
+    PartyHello,
+    /// Acceptor → dialer handshake reply (version, session, own id).
+    HelloAck,
+    /// Client → party handshake (version, session).
+    ClientHello,
+    /// Client → party: run one batched inference window.
+    InferRequest,
+    /// P1 → client: the revealed logits of a window.
+    Logits,
+    /// Party → client: window complete (the quiesce ack).
+    Done,
+    /// Client → party: send back your local metrics snapshot.
+    MetricsReq,
+    /// Party → client: serialized [`MetricsSnapshot`] reply.
+    ///
+    /// [`MetricsSnapshot`]: crate::transport::MetricsSnapshot
+    MetricsSnap,
+    /// Client → party: stop serving and exit the process.
+    Shutdown,
+    /// Party → client: the request was refused (payload = UTF-8 reason).
+    /// The party stays up and keeps serving.
+    Error,
+}
+
+impl Tag {
+    /// The wire byte for this tag.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Tag::Setup => 0,
+            Tag::Offline => 1,
+            Tag::Online => 2,
+            Tag::PartyHello => 3,
+            Tag::HelloAck => 4,
+            Tag::ClientHello => 5,
+            Tag::InferRequest => 6,
+            Tag::Logits => 7,
+            Tag::Done => 8,
+            Tag::MetricsReq => 9,
+            Tag::MetricsSnap => 10,
+            Tag::Shutdown => 11,
+            Tag::Error => 12,
+        }
+    }
+
+    /// Parse a wire byte; unknown bytes are an [`Error`].
+    pub fn from_u8(b: u8) -> Result<Tag> {
+        Ok(match b {
+            0 => Tag::Setup,
+            1 => Tag::Offline,
+            2 => Tag::Online,
+            3 => Tag::PartyHello,
+            4 => Tag::HelloAck,
+            5 => Tag::ClientHello,
+            6 => Tag::InferRequest,
+            7 => Tag::Logits,
+            8 => Tag::Done,
+            9 => Tag::MetricsReq,
+            10 => Tag::MetricsSnap,
+            11 => Tag::Shutdown,
+            12 => Tag::Error,
+            other => bail!("unknown wire tag {other}"),
+        })
+    }
+
+    /// The tag carrying party traffic of `phase`.
+    pub fn from_phase(p: Phase) -> Tag {
+        match p {
+            Phase::Setup => Tag::Setup,
+            Phase::Offline => Tag::Offline,
+            Phase::Online => Tag::Online,
+        }
+    }
+
+    /// The phase this tag meters under, if it is a phase tag.
+    pub fn to_phase(self) -> Option<Phase> {
+        match self {
+            Tag::Setup => Some(Phase::Setup),
+            Tag::Offline => Some(Phase::Offline),
+            Tag::Online => Some(Phase::Online),
+            _ => None,
+        }
+    }
+}
+
+/// Write one `[len][tag][payload]` frame. Does NOT flush — the caller
+/// (the per-link writer) flushes once its queue momentarily drains, so
+/// bursts of frames share one syscall without delaying the last frame.
+pub fn write_frame(w: &mut impl Write, tag: Tag, payload: &[u8]) -> Result<()> {
+    let len = u32::try_from(payload.len()).ok().filter(|&l| l <= MAX_FRAME);
+    let len = len.with_context(|| format!("frame too large ({} bytes)", payload.len()))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[tag.as_u8()])?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame; errors on EOF, an unknown tag, or an oversized
+/// length prefix.
+pub fn read_frame(r: &mut impl Read) -> Result<(Tag, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head).context("read frame header")?;
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME ({MAX_FRAME})");
+    }
+    let tag = Tag::from_u8(head[4])?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    Ok((tag, payload))
+}
+
+/// The party-to-party handshake contents.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct PartyHello {
+    /// Session id (all parties derive it from the shared master seed).
+    pub session: [u8; 16],
+    /// The dialing party's id.
+    pub from: u8,
+    /// The party id the dialer believes it is connecting to.
+    pub to: u8,
+}
+
+impl PartyHello {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = vec![WIRE_VERSION];
+        out.extend_from_slice(&self.session);
+        out.push(self.from);
+        out.push(self.to);
+        out
+    }
+
+    fn decode(payload: &[u8]) -> Result<PartyHello> {
+        if payload.len() != 19 {
+            bail!("party hello: bad length {}", payload.len());
+        }
+        if payload[0] != WIRE_VERSION {
+            bail!("wire version mismatch: peer {} vs ours {WIRE_VERSION}", payload[0]);
+        }
+        let mut session = [0u8; 16];
+        session.copy_from_slice(&payload[1..17]);
+        Ok(PartyHello { session, from: payload[17], to: payload[18] })
+    }
+}
+
+fn ack_payload(session: &[u8; 16], id: u8) -> Vec<u8> {
+    let mut out = vec![WIRE_VERSION];
+    out.extend_from_slice(session);
+    out.push(id);
+    out
+}
+
+fn decode_ack(payload: &[u8], session: &[u8; 16]) -> Result<u8> {
+    if payload.len() != 18 || payload[0] != WIRE_VERSION {
+        bail!("malformed hello ack");
+    }
+    if &payload[1..17] != session {
+        bail!("hello ack: session id mismatch");
+    }
+    Ok(payload[17])
+}
+
+/// Dialer side of the party handshake: send a [`PartyHello`], wait for
+/// the [`Tag::HelloAck`], and verify the acceptor really is party `to`.
+pub fn dial_handshake(stream: &mut (impl Read + Write), hello: PartyHello) -> Result<()> {
+    write_frame(stream, Tag::PartyHello, &hello.encode())?;
+    stream.flush()?;
+    let (tag, payload) = read_frame(stream)?;
+    if tag != Tag::HelloAck {
+        bail!("expected HelloAck, got {tag:?}");
+    }
+    let acked = decode_ack(&payload, &hello.session)?;
+    if acked != hello.to {
+        bail!("dialed party {} but party {acked} answered", hello.to);
+    }
+    Ok(())
+}
+
+/// What an accepted connection turned out to be.
+pub enum Accepted {
+    /// A peer party's mesh link (its id).
+    Party(u8),
+    /// A serving client.
+    Client,
+}
+
+/// Acceptor side of the handshake: read the hello frame, verify session
+/// and that the dialer addressed *this* party (`own_id`), and ack. A
+/// wrong session, wrong `to` id, or version skew is a hard error (the
+/// acceptor does not ack, so the dialer errors symmetrically).
+pub fn accept_handshake(
+    stream: &mut (impl Read + Write),
+    session: &[u8; 16],
+    own_id: u8,
+) -> Result<Accepted> {
+    let (tag, payload) = read_frame(stream)?;
+    match tag {
+        Tag::PartyHello => {
+            let hello = PartyHello::decode(&payload)?;
+            if hello.session != *session {
+                bail!("party {} connected with a different session id", hello.from);
+            }
+            if hello.to != own_id {
+                bail!(
+                    "party {} dialed party {} but reached party {own_id} (check --peers order)",
+                    hello.from,
+                    hello.to
+                );
+            }
+            if hello.from as usize >= 3 || hello.from == own_id {
+                bail!("invalid peer party id {}", hello.from);
+            }
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id))?;
+            stream.flush()?;
+            Ok(Accepted::Party(hello.from))
+        }
+        Tag::ClientHello => {
+            if payload.len() != 17 || payload[0] != WIRE_VERSION {
+                bail!("malformed client hello");
+            }
+            if &payload[1..17] != session {
+                bail!("client connected with a different session id");
+            }
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id))?;
+            stream.flush()?;
+            Ok(Accepted::Client)
+        }
+        other => Err(Error::msg(format!("expected a hello frame, got {other:?}"))),
+    }
+}
+
+/// Client side of the client handshake: returns the party id that
+/// answered (the client checks it against the id it meant to dial).
+pub fn client_handshake(stream: &mut (impl Read + Write), session: &[u8; 16]) -> Result<u8> {
+    let mut payload = vec![WIRE_VERSION];
+    payload.extend_from_slice(session);
+    write_frame(stream, Tag::ClientHello, &payload)?;
+    stream.flush()?;
+    let (tag, payload) = read_frame(stream)?;
+    if tag != Tag::HelloAck {
+        bail!("expected HelloAck, got {tag:?}");
+    }
+    decode_ack(&payload, session)
+}
+
+// ---- client protocol payload encodings (all little-endian) ----
+
+/// Encode an [`Tag::InferRequest`] payload: the public window size and
+/// per-request length (sent to every party so shape validation is
+/// symmetric) plus — only toward P1, the data owner — the flattened
+/// quantized inputs.
+pub fn encode_infer_request(batch: usize, per_len: usize, inputs: Option<&[Vec<i64>]>) -> Vec<u8> {
+    let n = inputs.map(|v| v.len()).unwrap_or(0);
+    let mut out = Vec::with_capacity(12 + n * per_len * 8);
+    out.extend_from_slice(&(batch as u32).to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(per_len as u32).to_le_bytes());
+    if let Some(inputs) = inputs {
+        for x in inputs {
+            debug_assert_eq!(x.len(), per_len);
+            for &v in x {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Decode an [`Tag::InferRequest`] payload into
+/// `(batch, per_len, inputs)`; `inputs` is `None` when the request
+/// carried no data rows (P0/P2). Hostile header fields are an
+/// [`Error`], never an overflow or out-of-bounds index.
+pub fn decode_infer_request(payload: &[u8]) -> Result<(usize, usize, Option<Vec<Vec<i64>>>)> {
+    if payload.len() < 12 {
+        bail!("infer request: truncated header");
+    }
+    let rd32 = |o: usize| u32::from_le_bytes(payload[o..o + 4].try_into().unwrap()) as usize;
+    let (batch, n, per_len) = (rd32(0), rd32(4), rd32(8));
+    let body = n
+        .checked_mul(per_len)
+        .and_then(|v| v.checked_mul(8))
+        .filter(|&v| v == payload.len() - 12);
+    if body.is_none() {
+        bail!(
+            "infer request: body is {} bytes, expected {n} x {per_len} values",
+            payload.len() - 12,
+        );
+    }
+    if n == 0 {
+        return Ok((batch, per_len, None));
+    }
+    let mut inputs = Vec::with_capacity(n);
+    for i in 0..n {
+        let base = 12 + i * per_len * 8;
+        inputs.push(
+            payload[base..base + per_len * 8]
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        );
+    }
+    Ok((batch, per_len, Some(inputs)))
+}
+
+/// Encode a [`Tag::Logits`] payload: `n` logit vectors of equal length.
+pub fn encode_logits(logits: &[Vec<i64>]) -> Vec<u8> {
+    let per_len = logits.first().map(|l| l.len()).unwrap_or(0);
+    let mut out = Vec::with_capacity(8 + logits.len() * per_len * 8);
+    out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(per_len as u32).to_le_bytes());
+    for l in logits {
+        debug_assert_eq!(l.len(), per_len);
+        for &v in l {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a [`Tag::Logits`] payload.
+pub fn decode_logits(payload: &[u8]) -> Result<Vec<Vec<i64>>> {
+    if payload.len() < 8 {
+        bail!("logits: truncated header");
+    }
+    let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let per_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let body = n
+        .checked_mul(per_len)
+        .and_then(|v| v.checked_mul(8))
+        .filter(|&v| v == payload.len() - 8);
+    if body.is_none() {
+        bail!("logits: bad body length");
+    }
+    Ok((0..n)
+        .map(|i| {
+            let base = 8 + i * per_len * 8;
+            payload[base..base + per_len * 8]
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_all_tags() {
+        for (tag, payload) in [
+            (Tag::Online, vec![1u8, 2, 3]),
+            (Tag::Setup, Vec::new()),
+            (Tag::Logits, vec![0u8; 1000]),
+            (Tag::Shutdown, Vec::new()),
+        ] {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, tag, &payload).unwrap();
+            let (t, p) = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!((t, p), (tag, payload));
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let mut buf = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        buf.push(Tag::Online.as_u8());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("MAX_FRAME"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        let mut buf = 0u32.to_le_bytes().to_vec();
+        buf.push(200);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn tag_bytes_roundtrip() {
+        for b in 0..13u8 {
+            assert_eq!(Tag::from_u8(b).unwrap().as_u8(), b);
+        }
+        assert!(Tag::from_u8(13).is_err());
+    }
+
+    #[test]
+    fn infer_request_roundtrip() {
+        let inputs = vec![vec![1i64, -2, 3], vec![4, 5, -6]];
+        let enc = encode_infer_request(2, 3, Some(&inputs));
+        let (batch, per_len, got) = decode_infer_request(&enc).unwrap();
+        assert_eq!((batch, per_len, got), (2, 3, Some(inputs)));
+        let enc = encode_infer_request(3, 7, None);
+        assert_eq!(decode_infer_request(&enc).unwrap(), (3, 7, None));
+        assert!(decode_infer_request(&enc[..8]).is_err());
+    }
+
+    #[test]
+    fn hostile_infer_request_header_is_an_error_not_a_panic() {
+        // n * per_len * 8 wraps to 0 in 64-bit arithmetic: 2^31 * 2^31 * 8
+        // = 2^65. The checked math must refuse it instead of indexing.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes()); // batch
+        payload.extend_from_slice(&(1u32 << 31).to_le_bytes()); // n
+        payload.extend_from_slice(&(1u32 << 31).to_le_bytes()); // per_len
+        assert!(decode_infer_request(&payload).is_err());
+        let mut logits = Vec::new();
+        logits.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        logits.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        assert!(decode_logits(&logits).is_err());
+    }
+
+    #[test]
+    fn logits_roundtrip() {
+        let logits = vec![vec![7i64, -9], vec![0, 1]];
+        assert_eq!(decode_logits(&encode_logits(&logits)).unwrap(), logits);
+        assert_eq!(decode_logits(&encode_logits(&[])).unwrap(), Vec::<Vec<i64>>::new());
+    }
+}

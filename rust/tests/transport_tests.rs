@@ -1,0 +1,240 @@
+//! Cross-backend transport parity and wire-protocol integration tests
+//! (DESIGN.md §Transport backends).
+//!
+//! The load-bearing claim of the pluggable transport layer is that the
+//! backend is *unobservable* above `Net`: the same protocol run over the
+//! in-process mesh and over loopback TCP must produce bit-identical
+//! logits AND an identical meter (per-link bytes/messages, per-party
+//! rounds, per phase) — otherwise LAN/WAN numbers would stop being
+//! comparable across deployments.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
+use ppq_bert::coordinator::remote::{run_party, session_id, PartyOpts, RemoteClient};
+use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::secure::{secure_infer_batch, SecureBert};
+use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
+use ppq_bert::transport::wire::{self, Accepted, PartyHello, Tag};
+use ppq_bert::transport::{build_mesh, loopback_mesh, Metrics, MetricsSnapshot, PHASES};
+
+/// Run `secure_infer_batch` (setup + one 2-request window) over
+/// pre-built endpoints; returns P1's logits and the shared meter.
+fn run_window_over(
+    nets: [ppq_bert::transport::Net; 3],
+    metrics: &Arc<Metrics>,
+    scfg: SessionCfg,
+) -> (Vec<Vec<i64>>, MetricsSnapshot) {
+    let cfg = BertConfig::tiny();
+    let (weights, _) = prepared_model(cfg);
+    let inputs = prepared_inputs(&cfg, 2);
+    let mut p1_logits = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for net in nets {
+            let (weights, inputs) = (&weights, &inputs);
+            handles.push(s.spawn(move || {
+                let ctx = PartyCtx::new(net.id, net, scfg.master_seed, scfg.threads);
+                let w = (ctx.id == P0).then_some(weights);
+                let model = SecureBert::setup(&ctx, cfg, w);
+                let x = (ctx.id == P1).then(|| inputs.clone());
+                let (logits, _) = secure_infer_batch(&ctx, &model, 2, x.as_deref());
+                ctx.flush_timer();
+                (ctx.id, logits)
+            }));
+        }
+        for h in handles {
+            let (id, logits) = h.join().expect("party thread panicked");
+            if id == P1 {
+                p1_logits = logits;
+            }
+        }
+    });
+    (p1_logits, metrics.snapshot())
+}
+
+#[test]
+fn tcp_backend_matches_mesh_bit_for_bit() {
+    let scfg = SessionCfg::default();
+
+    let mesh_metrics = Arc::new(Metrics::new());
+    let mesh_nets = build_mesh(Arc::clone(&mesh_metrics), None);
+    let (mesh_logits, mesh_snap) = run_window_over(mesh_nets, &mesh_metrics, scfg);
+
+    let tcp_metrics = Arc::new(Metrics::new());
+    let tcp_nets =
+        loopback_mesh(Arc::clone(&tcp_metrics), scfg.master_seed, None).expect("loopback mesh");
+    let (tcp_logits, tcp_snap) = run_window_over(tcp_nets, &tcp_metrics, scfg);
+
+    // Bit-identical logits: all randomness comes from the seeded PRGs,
+    // so the transport must not influence a single share.
+    assert!(!mesh_logits.is_empty() && mesh_logits[0].len() == BertConfig::tiny().n_classes);
+    assert_eq!(mesh_logits, tcp_logits);
+
+    // Identical meter: bytes and messages per directed link, rounds per
+    // party, for every phase (compute_ns is wall time and may differ).
+    assert_eq!(mesh_snap.bytes, tcp_snap.bytes, "per-link bytes diverged across backends");
+    assert_eq!(mesh_snap.msgs, tcp_snap.msgs, "per-link messages diverged across backends");
+    assert_eq!(mesh_snap.rounds, tcp_snap.rounds, "per-party rounds diverged across backends");
+    for phase in PHASES {
+        assert_eq!(mesh_snap.total_bytes(phase), tcp_snap.total_bytes(phase));
+        assert_eq!(mesh_snap.max_rounds(phase), tcp_snap.max_rounds(phase));
+    }
+    assert!(mesh_snap.total_bytes(ppq_bert::transport::Phase::Online) > 0);
+}
+
+#[test]
+fn wire_frame_roundtrip_over_a_socket() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let payload: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+    let sent = payload.clone();
+    let t = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::write_frame(&mut s, Tag::Online, &sent).unwrap();
+        wire::write_frame(&mut s, Tag::Done, &[]).unwrap();
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let (tag, got) = wire::read_frame(&mut conn).unwrap();
+    assert_eq!((tag, got), (Tag::Online, payload));
+    let (tag, got) = wire::read_frame(&mut conn).unwrap();
+    assert_eq!((tag, got.len()), (Tag::Done, 0));
+    t.join().unwrap();
+}
+
+#[test]
+fn handshake_rejects_wrong_party_id() {
+    let session = *b"handshake-test-1";
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // The dialer believes it is connecting to party 2, but party 1
+    // answers: the acceptor must error (and therefore never ack, so the
+    // dialer fails symmetrically).
+    let t = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::dial_handshake(&mut s, PartyHello { session, from: 0, to: 2 })
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let err = wire::accept_handshake(&mut conn, &session, 1).unwrap_err();
+    assert!(err.to_string().contains("reached party 1"), "{err}");
+    drop(conn); // close so the dialer's pending ack read fails
+    assert!(t.join().unwrap().is_err());
+}
+
+#[test]
+fn handshake_rejects_wrong_session() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let t = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let _ = wire::dial_handshake(
+            &mut s,
+            PartyHello { session: *b"one-session-id-A", from: 2, to: 1 },
+        );
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let err = wire::accept_handshake(&mut conn, b"other-session-id", 1).unwrap_err();
+    assert!(err.to_string().contains("session"), "{err}");
+    drop(conn);
+    t.join().unwrap();
+}
+
+#[test]
+fn handshake_accepts_matching_party() {
+    let session = *b"handshake-test-2";
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let t = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::dial_handshake(&mut s, PartyHello { session, from: 2, to: 0 })
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    match wire::accept_handshake(&mut conn, &session, 0).unwrap() {
+        Accepted::Party(from) => assert_eq!(from, 2),
+        Accepted::Client => panic!("expected a party link"),
+    }
+    t.join().unwrap().unwrap();
+}
+
+#[test]
+fn session_id_binds_model_shape() {
+    // Parties (or clients) configured for different model shapes must
+    // fail the handshake at connect time, not deadlock mid-request.
+    let seed = SessionCfg::default().master_seed;
+    let tiny = BertConfig::tiny();
+    let mut other = tiny;
+    other.seq_len *= 2;
+    assert_ne!(session_id(seed, &tiny), session_id(seed, &other));
+    assert_eq!(session_id(seed, &tiny), session_id(seed, &BertConfig::tiny()));
+    // ...and different deployment labels must not mesh either.
+    use ppq_bert::coordinator::remote::seed_from_label;
+    assert_ne!(seed_from_label("ci"), seed_from_label("prod"));
+    assert_ne!(session_id(seed_from_label("ci"), &tiny), session_id(seed, &tiny));
+}
+
+/// Full multi-process-shape deployment on localhost (three `run_party`
+/// bodies as threads — the process version is exercised by
+/// `tools/smoke_multiprocess.sh` / `make smoke`): a remote client's
+/// logits must equal the in-process coordinator's for the same model,
+/// seed, and input, and the merged per-party meters must equal the
+/// in-process session meter.
+#[test]
+fn remote_deployment_matches_in_process_coordinator() {
+    let cfg = BertConfig::tiny();
+
+    // In-process reference (default weights seed 42, input seed 11 —
+    // the same pair prepared_model/`repro infer` use).
+    let (weights, x) = prepared_model(cfg);
+    let mut coord = Coordinator::start(ServerConfig::new(cfg), weights);
+    coord.submit(x.clone());
+    let local_logits = coord.run_batch().pop().expect("one result").logits;
+    let local_snap = coord.snapshot();
+    coord.shutdown();
+
+    // Three party "processes" over real loopback sockets.
+    let listeners: Vec<TcpListener> =
+        (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: [String; 3] = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect::<Vec<_>>()
+        .try_into()
+        .unwrap();
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+    let mut handles = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let mut opts = PartyOpts::new(id, cfg);
+        for p in 0..3 {
+            if p != id {
+                opts.peers[p] = Some(addrs[p].clone());
+            }
+        }
+        handles.push(std::thread::spawn(move || run_party(listener, opts)));
+    }
+
+    let mut client =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(20)).expect("connect");
+    let remote_logits = client.infer(&x).expect("remote inference");
+    assert_eq!(remote_logits, local_logits, "remote deployment diverged from in-process run");
+
+    // Merged per-party meters == the shared in-process meter.
+    let merged = client.snapshot().expect("metrics");
+    assert_eq!(merged.bytes, local_snap.bytes);
+    assert_eq!(merged.msgs, local_snap.msgs);
+    assert_eq!(merged.rounds, local_snap.rounds);
+
+    // A mis-shaped request is refused in lockstep by all parties — the
+    // deployment must stay up and keep serving afterwards.
+    let err = client.infer(&x[..x.len() - 1]).unwrap_err();
+    assert!(err.to_string().contains("refused"), "{err}");
+    let again = client.infer(&x).expect("deployment still serving after a refusal");
+    assert_eq!(again.len(), cfg.n_classes);
+
+    client.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party exited with error");
+    }
+}

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Multi-process deployment smoke test (CI `smoke` job / `make smoke`):
+# spawn the three `repro party` processes on localhost, run one remote
+# inference through the thin client, and diff its logits against the
+# in-process mesh result for the same model/seed/input. Exercises the
+# real process boundary the in-thread tests cannot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${BIN:-target/release/repro}
+if [ ! -x "$BIN" ]; then
+  cargo build --release
+fi
+
+# Unprivileged localhost ports; override PORT_BASE if they collide.
+PORT_BASE=${PORT_BASE:-9140}
+ADDR0="127.0.0.1:$PORT_BASE"
+ADDR1="127.0.0.1:$((PORT_BASE + 1))"
+ADDR2="127.0.0.1:$((PORT_BASE + 2))"
+
+PIDS=()
+cleanup() {
+  for pid in "${PIDS[@]:-}"; do
+    kill "$pid" 2>/dev/null || true
+  done
+}
+trap cleanup EXIT
+
+"$BIN" party --id 0 --listen "$ADDR0" --peers "$ADDR1,$ADDR2" & PIDS+=($!)
+"$BIN" party --id 1 --listen "$ADDR1" --peers "$ADDR0,$ADDR2" & PIDS+=($!)
+"$BIN" party --id 2 --listen "$ADDR2" --peers "$ADDR0,$ADDR1" & PIDS+=($!)
+
+# The client retries its dial internally; --halt shuts the parties down
+# after the inference so the background processes exit cleanly.
+remote_out=$("$BIN" infer --remote "$ADDR0,$ADDR1,$ADDR2" --halt)
+echo "$remote_out"
+local_out=$("$BIN" infer)
+
+extract_logits() { grep -o 'logits \[[^]]*\]' | head -n1; }
+remote_logits=$(echo "$remote_out" | extract_logits)
+local_logits=$(echo "$local_out" | extract_logits)
+
+if [ -z "$remote_logits" ]; then
+  echo "FAIL: no logits in remote output" >&2
+  exit 1
+fi
+if [ "$remote_logits" != "$local_logits" ]; then
+  echo "FAIL: remote vs in-process logits differ:" >&2
+  echo "  remote:     $remote_logits" >&2
+  echo "  in-process: $local_logits" >&2
+  exit 1
+fi
+
+# The parties were asked to halt; give them a moment and confirm.
+for pid in "${PIDS[@]}"; do
+  for _ in $(seq 50); do
+    kill -0 "$pid" 2>/dev/null || break
+    sleep 0.1
+  done
+done
+
+echo "OK: multi-process deployment reproduced the in-process logits: $remote_logits"
