@@ -1,7 +1,7 @@
 # Build the python AOT artifacts the Rust runtime/tests consume
 # (rust/tests/integration_artifact.rs skips until these exist; running
 # them additionally needs `cargo ... --features xla`).
-.PHONY: artifacts test bench doccheck smoke
+.PHONY: artifacts test bench bench-quick doccheck smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -20,10 +20,21 @@ doccheck:
 	tools/check_design_citations.sh
 
 # Multi-process deployment smoke: three `repro party` processes on
-# localhost + one remote client, logits diffed against the in-process
-# backend (DESIGN.md §Transport backends).
+# localhost, one remote client diffed against the in-process backend,
+# then K=4 concurrent clients through the wire-path batcher with an
+# in-process bit-exactness check (DESIGN.md §Concurrent serving).
 smoke:
 	tools/smoke_multiprocess.sh
+
+# CI bench smoke: reduced transport + batching sweeps, recording the
+# perf trajectory as JSON-lines ({"bench":…,"wall_ms":…,"bytes":…,
+# "rounds":…}) in BENCH_ci.json (uploaded as a CI artifact).
+bench-quick:
+	rm -f BENCH_ci.json
+	cargo bench --bench transport -- --quick --json BENCH_ci.json
+	cargo bench --bench batching -- --quick --json BENCH_ci.json
+	@echo "--- BENCH_ci.json"
+	@cat BENCH_ci.json
 
 bench:
 	cargo bench --bench micro

@@ -10,13 +10,15 @@
 //! that amortization buys per request under LAN and WAN.
 //!
 //!   cargo bench --bench batching
+//!   cargo bench --bench batching -- --quick --json BENCH_ci.json   (CI smoke)
 
-use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, Table};
+use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, BenchOpts, Table};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
 use ppq_bert::model::config::BertConfig;
 use ppq_bert::transport::{NetParams, Phase};
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
     let cfg = BertConfig::tiny();
     let mut t = Table::new(&[
         "batch",
@@ -29,8 +31,9 @@ fn main() {
         "WAN /req",
     ]);
 
+    let sweep: &[usize] = if opts.quick { &[1, 4] } else { &[1, 2, 4, 8] };
     let mut base_rounds = None;
-    for batch in [1usize, 2, 4, 8] {
+    for &batch in sweep {
         // Fresh coordinator per sweep point so the session meter starts
         // clean; with exactly one window served, the cumulative Online
         // meter IS the window's delta.
@@ -63,6 +66,12 @@ fn main() {
         let snap = coord.snapshot();
         let lan_window = NetParams::LAN.modeled_phase_time(&snap, Phase::Online);
         let wan_window = NetParams::WAN.modeled_phase_time(&snap, Phase::Online);
+        opts.record(
+            &format!("batching/window_b{batch}"),
+            r0.compute,
+            snap.total_bytes(Phase::Online),
+            rounds,
+        );
         t.row(vec![
             batch.to_string(),
             rounds.to_string(),

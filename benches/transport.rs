@@ -6,10 +6,11 @@
 //! so only wall-clock differs.
 //!
 //! Run: `cargo bench --bench transport`
+//! CI smoke: `cargo bench --bench transport -- --quick --json BENCH_ci.json`
 
 use std::sync::Arc;
 
-use ppq_bert::bench_harness::{fmt_dur, prepared_model, time_median, Table};
+use ppq_bert::bench_harness::{fmt_dur, prepared_model, time_once, BenchOpts, Table};
 use ppq_bert::core::ring::R16;
 use ppq_bert::model::config::BertConfig;
 use ppq_bert::model::secure::{secure_infer, SecureBert};
@@ -55,23 +56,70 @@ fn infer_over(nets: [Net; 3]) {
 }
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
     let session = SessionCfg::default().master_seed;
-    let mesh = || build_mesh(Arc::new(Metrics::new()), None);
-    let tcp = || loopback_mesh(Arc::new(Metrics::new()), session, None).expect("loopback mesh");
 
+    let sizes: &[usize] = if opts.quick { &[1, 1_000] } else { &[1, 1_000, 100_000] };
     let mut t = Table::new(&["exchange size", "mesh", "tcp loopback"]);
-    for &n in &[1usize, 1_000, 100_000] {
-        let iters = if n >= 100_000 { 20 } else { 200 };
-        t.row(vec![
-            format!("{n} x u16"),
-            fmt_dur(pingpong(mesh(), n, iters)),
-            fmt_dur(pingpong(tcp(), n, iters)),
-        ]);
+    for &n in sizes {
+        let iters = if opts.quick {
+            20
+        } else if n >= 100_000 {
+            20
+        } else {
+            200
+        };
+        let mesh_metrics = Arc::new(Metrics::new());
+        let mesh_nets = build_mesh(Arc::clone(&mesh_metrics), None);
+        let mesh_dur = pingpong(mesh_nets, n, iters);
+        let snap = mesh_metrics.snapshot();
+        opts.record(
+            &format!("transport/pingpong_mesh_{n}"),
+            mesh_dur,
+            snap.total_bytes(Phase::Online) / iters as u64,
+            1,
+        );
+        let tcp_metrics = Arc::new(Metrics::new());
+        let tcp_nets =
+            loopback_mesh(Arc::clone(&tcp_metrics), session, None).expect("loopback mesh");
+        let tcp_dur = pingpong(tcp_nets, n, iters);
+        let snap = tcp_metrics.snapshot();
+        opts.record(
+            &format!("transport/pingpong_tcp_{n}"),
+            tcp_dur,
+            snap.total_bytes(Phase::Online) / iters as u64,
+            1,
+        );
+        t.row(vec![format!("{n} x u16"), fmt_dur(mesh_dur), fmt_dur(tcp_dur)]);
     }
-    t.print("one exchange_ring round trip (P1 <-> P2, median behavior over many iters)");
+    t.print("one exchange_ring round trip (P1 <-> P2, averaged over many iters)");
 
     let mut t = Table::new(&["end-to-end (tiny, 1 request)", "wall"]);
-    t.row(vec!["mesh".into(), fmt_dur(time_median(3, || infer_over(mesh())))]);
-    t.row(vec!["tcp loopback".into(), fmt_dur(time_median(3, || infer_over(tcp())))]);
+    {
+        let metrics = Arc::new(Metrics::new());
+        let nets = build_mesh(Arc::clone(&metrics), None);
+        let wall = time_once(|| infer_over(nets));
+        let snap = metrics.snapshot();
+        opts.record(
+            "transport/infer_mesh_tiny",
+            wall,
+            snap.total_bytes(Phase::Online),
+            snap.max_rounds(Phase::Online),
+        );
+        t.row(vec!["mesh".into(), fmt_dur(wall)]);
+    }
+    {
+        let metrics = Arc::new(Metrics::new());
+        let nets = loopback_mesh(Arc::clone(&metrics), session, None).expect("loopback mesh");
+        let wall = time_once(|| infer_over(nets));
+        let snap = metrics.snapshot();
+        opts.record(
+            "transport/infer_tcp_tiny",
+            wall,
+            snap.total_bytes(Phase::Online),
+            snap.max_rounds(Phase::Online),
+        );
+        t.row(vec!["tcp loopback".into(), fmt_dur(wall)]);
+    }
     t.print("setup + secure_infer across backends (same bytes/rounds by construction)");
 }

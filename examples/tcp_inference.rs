@@ -1,30 +1,34 @@
 //! Multi-process-shape secure inference over real TCP sockets — the
-//! deployment mode of DESIGN.md §Transport backends, in one runnable
+//! deployment mode of DESIGN.md §Concurrent serving, in one runnable
 //! process: three party endpoints (the exact `repro party` serving
-//! bodies) on loopback sockets, plus a thin client that submits a
-//! request and reads the logits, then cross-checks the result against
-//! the in-process mesh backend.
+//! bodies) on loopback sockets, a thin client that cross-checks its
+//! logits against the in-process mesh backend, and then TWO concurrent
+//! clients whose simultaneous requests share a single batched MPC
+//! window across the wire.
 //!
 //! For a real 3-process deployment, run the same thing as processes:
 //!   repro party --id 0 & repro party --id 1 & repro party --id 2 &
+//!   repro loadgen --clients 4 --requests 2 --check
 //!   repro infer --remote --halt
 //!
 //! Run: `cargo run --release --example tcp_inference`
 
 use std::net::TcpListener;
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
 use ppq_bert::coordinator::remote::{run_party, session_id, PartyOpts, RemoteClient};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
 use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
 use ppq_bert::transport::{Phase, PHASES};
 
 fn main() {
     let cfg = BertConfig::tiny();
     println!(
-        "tcp deployment: {} layers, d={}, seq={} — 3 party endpoints + 1 client on loopback",
+        "tcp deployment: {} layers, d={}, seq={} — 3 party endpoints + concurrent clients",
         cfg.n_layers, cfg.d_model, cfg.seq_len
     );
 
@@ -43,6 +47,9 @@ fn main() {
     let mut parties = Vec::new();
     for (id, listener) in listeners.into_iter().enumerate() {
         let mut opts = PartyOpts::new(id, cfg);
+        // Generous linger so the concurrency demo below deterministically
+        // folds both clients into one window.
+        opts.serve.linger = Duration::from_millis(600);
         for p in 0..3 {
             if p != id {
                 opts.peers[p] = Some(addrs[p].clone());
@@ -81,6 +88,39 @@ fn main() {
     println!(
         "parity: logits and metered online bytes ({:.2} MB) identical to the in-process mesh",
         snap.total_mb(Phase::Online)
+    );
+
+    // Two MORE clients submit simultaneously: the wire-path batcher
+    // folds their requests into ONE batched MPC pass (cross-client
+    // round amortization over real sockets).
+    let barrier = Arc::new(Barrier::new(2));
+    let mut workers = Vec::new();
+    for k in 0..2u64 {
+        let addrs = addrs.clone();
+        let barrier = Arc::clone(&barrier);
+        workers.push(std::thread::spawn(move || {
+            let mut c = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
+                .expect("connect concurrent client");
+            barrier.wait();
+            let x = synth_input(&cfg, 600 + k);
+            let id = c.submit(&x).expect("submit");
+            c.wait(id).expect("wait")
+        }));
+    }
+    let dones: Vec<_> = workers.into_iter().map(|w| w.join().expect("client thread")).collect();
+    for (k, d) in dones.iter().enumerate() {
+        println!(
+            "concurrent client {k}: window {} batch {}  ({} online rounds for the window, \
+             {:.2} MB amortized online bytes/request)",
+            d.wid(),
+            d.batch(),
+            d.window_online_rounds(),
+            d.amortized_online_bytes() as f64 / 1048576.0,
+        );
+    }
+    assert!(
+        dones.iter().all(|d| d.batch() == 2),
+        "the two concurrent clients must share one window"
     );
 
     client.shutdown().expect("shutdown");

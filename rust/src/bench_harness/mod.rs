@@ -1,12 +1,76 @@
 //! Bench harness utilities (criterion is not available offline): warmup +
-//! median-of-N timing, table formatting, and the shared model/session
-//! builders used by `benches/*.rs`.
+//! median-of-N timing, table formatting, the shared model/session
+//! builders used by `benches/*.rs`, and the CI bench-record sink
+//! (`--quick --json FILE` — see `make bench-quick`).
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::model::config::BertConfig;
 use crate::model::weights::{synth_input, Weights};
 use crate::runtime::native;
+
+/// Bench CLI options shared by `benches/*.rs` (`cargo bench --bench X
+/// -- [--quick] [--json FILE]`): `--quick` shrinks the sweep for the CI
+/// `bench-smoke` job, `--json FILE` appends one JSON record per
+/// measurement so the perf trajectory is machine-readable.
+pub struct BenchOpts {
+    /// Run a reduced sweep with fewer iterations (CI smoke mode).
+    pub quick: bool,
+    /// Append JSON-lines records (`{"bench":…,"wall_ms":…,"bytes":…,
+    /// "rounds":…}`) to this file.
+    pub json: Option<PathBuf>,
+}
+
+impl BenchOpts {
+    /// Parse the bench binary's own argv (everything after `--`).
+    /// Unknown flags abort with a usage message rather than silently
+    /// benchmarking the wrong thing.
+    pub fn from_env_args() -> BenchOpts {
+        let mut opts = BenchOpts { quick: false, json: None };
+        let mut args = std::env::args().skip(1);
+        while let Some(arg) = args.next() {
+            match arg.as_str() {
+                "--quick" => opts.quick = true,
+                "--json" => match args.next() {
+                    Some(path) => opts.json = Some(PathBuf::from(path)),
+                    None => {
+                        eprintln!("--json needs a file path");
+                        std::process::exit(2);
+                    }
+                },
+                // cargo bench passes --bench through to the binary
+                "--bench" => {}
+                other => {
+                    eprintln!("unknown bench flag `{other}` (supported: --quick, --json FILE)");
+                    std::process::exit(2);
+                }
+            }
+        }
+        opts
+    }
+
+    /// Append one measurement record (no-op without `--json`). The
+    /// schema is deliberately tiny — bench name, wall milliseconds,
+    /// metered bytes and rounds — one JSON object per line.
+    pub fn record(&self, bench: &str, wall: Duration, bytes: u64, rounds: u64) {
+        let Some(path) = &self.json else { return };
+        use std::io::Write as _;
+        let line = format!(
+            "{{\"bench\":\"{bench}\",\"wall_ms\":{:.3},\"bytes\":{bytes},\"rounds\":{rounds}}}\n",
+            wall.as_secs_f64() * 1e3,
+        );
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path);
+        match file {
+            Ok(mut f) => {
+                if let Err(e) = f.write_all(line.as_bytes()) {
+                    eprintln!("warning: bench record write failed: {e}");
+                }
+            }
+            Err(e) => eprintln!("warning: bench record open {}: {e}", path.display()),
+        }
+    }
+}
 
 /// Median-of-`n` wall-clock measurement with one warmup run.
 pub fn time_median<F: FnMut()>(n: usize, mut f: F) -> Duration {

@@ -15,7 +15,7 @@ pub mod server;
 pub mod session;
 
 pub use config_file::ConfigFile;
-pub use remote::{PartyOpts, RemoteClient};
+pub use remote::{Completed, PartyOpts, RemoteClient, ServeOpts};
 pub use router::Router;
 pub use server::{Coordinator, InferenceResult, ServerConfig};
 pub use session::Session;

@@ -1,36 +1,92 @@
-//! Multi-process 3-party deployment: one party per process over the TCP
-//! backend, plus the thin client protocol that submits inference
-//! requests and reads logits (DESIGN.md §Transport backends).
+//! Multi-process 3-party deployment with a CONCURRENT serving frontend
+//! (DESIGN.md §Concurrent serving).
 //!
-//! [`run_party`] is the body of `repro party --id N --listen ADDR
-//! --peers A,B`: establish the TCP mesh, perform the one-time model
-//! setup (P0 synthesizes and shares the calibrated weights), then serve
-//! clients from the same listener. [`RemoteClient`] is the other end —
-//! `repro infer --remote` and `examples/tcp_inference.rs` use it to run
-//! an inference against the three processes and to collect each party's
-//! local meter (the three snapshots merge into exactly the shared
-//! in-process meter, so LAN/WAN accounting is backend-independent).
+//! Each party process accepts many simultaneous client connections: one
+//! reader thread per client feeds a shared admission queue, and a
+//! wire-path dynamic batcher drains up to `max_batch` requests arriving
+//! within a `batch_linger` window into ONE batched MPC pass
+//! ([`super::session::serve_window`]) — so cross-CLIENT requests
+//! amortize protocol rounds exactly like the in-process `Coordinator`'s
+//! cross-request windows.
+//!
+//! The window composition problem — three independent processes must
+//! evaluate identical windows in identical order, but client frames race
+//! across three sockets — is solved by making **P1 the sequencer**. P1
+//! is the data owner: it already receives every request's inputs, so it
+//! alone admits requests (bounded queue, per-connection in-flight caps,
+//! shape checks), cuts windows, and broadcasts each window's *manifest*
+//! (window id + request ids, in row order) to P0/P2 over dedicated
+//! control links. P0/P2 need nothing from clients but a response route
+//! ([`wire::Tag::Bind`]): they evaluate whatever the manifest says and
+//! ack completions back to bound connections. Control frames travel
+//! outside the metered transport, so per-link bytes/rounds stay
+//! bit-identical to the in-process coordinator for the same windows —
+//! and no client misbehavior can desynchronize the parties, because the
+//! parties' command stream has a single author.
+//!
+//! [`run_party`] is the body of `repro party --id N`; [`RemoteClient`]
+//! is the other end — it submits pipelined requests, waits for
+//! completions carrying per-request amortized window metrics
+//! ([`wire::WindowReport`]), and merges the parties' local meters into
+//! exactly the shared in-process meter.
 
-use std::io::{BufReader, Write};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::core::error::{bail, Context, Result};
 use crate::core::prg::Prg;
 use crate::model::config::BertConfig;
-use crate::model::secure::{secure_infer_batch, SecureBert};
+use crate::model::secure::SecureBert;
 use crate::model::weights::{synth_input, Weights};
-use crate::party::{PartyCtx, SessionCfg, P0, P1};
+use crate::party::{PartyCtx, SessionCfg, P0, P1, P2};
 use crate::protocols::max::MaxStrategy;
 use crate::runtime::native;
 use crate::transport::tcp::{accept_peer, dial_retry, TcpMesh, TcpTransport};
-use crate::transport::wire::{self, Accepted, Tag};
-use crate::transport::{Metrics, MetricsSnapshot, Net};
+use crate::transport::wire::{self, Accepted, ServeStats, Tag, WindowReport};
+use crate::transport::{Metrics, MetricsSnapshot, Net, Phase};
 
-/// Largest window a serving party accepts from a client (a corrupt or
-/// hostile batch field must not drive a huge MPC pass).
-pub const MAX_CLIENT_BATCH: usize = 4096;
+use super::session::{prep_into_pool, serve_window, CorrPool};
+
+/// Wire-path serving knobs of one party process (the deployment-side
+/// mirror of `ServerConfig`'s batching knobs; all three parties should
+/// run the same values, but only P1's — the sequencer's — are live for
+/// admission and window cutting).
+#[derive(Clone, Copy)]
+pub struct ServeOpts {
+    /// Requests per batch window: the batcher drains up to this many
+    /// queued requests into one batched MPC pass.
+    pub max_batch: usize,
+    /// How long a freshly opened window lingers for more requests
+    /// before it is cut (it cuts early when `max_batch` is reached).
+    pub linger: Duration,
+    /// Admission queue bound: requests arriving while this many are
+    /// already queued are refused with a clean [`Tag::Refused`] frame.
+    pub queue_cap: usize,
+    /// Per-connection cap on admitted-but-unfinished requests.
+    pub max_inflight: usize,
+    /// Ahead-of-time correlation tapes (for `max_batch`-sized windows)
+    /// to keep pooled; produced while the queue is idle. 0 disables
+    /// preprocessing.
+    pub prep_depth: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            max_batch: 8,
+            linger: Duration::from_millis(20),
+            queue_cap: 256,
+            max_inflight: 64,
+            prep_depth: 0,
+        }
+    }
+}
 
 /// Configuration of one party process.
 pub struct PartyOpts {
@@ -49,11 +105,14 @@ pub struct PartyOpts {
     pub max_strategy: MaxStrategy,
     /// Seed for P0's synthetic calibrated weights (ignored by P1/P2).
     pub weights_seed: u64,
+    /// Wire-path batching/backpressure knobs.
+    pub serve: ServeOpts,
 }
 
 impl PartyOpts {
     /// Defaults for a deployment of `cfg` as party `id`: default session
-    /// seed, tournament max, the bench harness's weight seed (42).
+    /// seed, tournament max, the bench harness's weight seed (42), and
+    /// default serving knobs.
     pub fn new(id: usize, cfg: BertConfig) -> PartyOpts {
         PartyOpts {
             id,
@@ -62,6 +121,7 @@ impl PartyOpts {
             scfg: SessionCfg::default(),
             max_strategy: MaxStrategy::Tournament,
             weights_seed: 42,
+            serve: ServeOpts::default(),
         }
     }
 }
@@ -106,13 +166,337 @@ pub fn seed_from_label(label: &str) -> [u8; 16] {
     s
 }
 
+/// The control-plane authentication token: derived from the deployment
+/// MASTER SEED (not from the shareable wire session id, which travels
+/// in the clear in every hello frame), so only a holder of the
+/// deployment credential — i.e. a real party — can stand up the
+/// P1 → P0/P2 control link. P0/P2 verify it before honoring any
+/// claimed control connection; a client that merely knows the session
+/// id cannot hijack or desynchronize the serving control plane.
+pub fn control_token(master_seed: [u8; 16], cfg: &BertConfig) -> [u8; 16] {
+    let label = format!(
+        "control-plane-s{}-d{}-l{}-h{}-f{}-c{}",
+        cfg.seq_len, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.n_classes
+    );
+    let mut prg = Prg::derive(master_seed, &label);
+    let mut t = [0u8; 16];
+    for b in t.iter_mut() {
+        *b = prg.next_u8();
+    }
+    t
+}
+
+/// A client connection's send half, shared between its reader thread
+/// (acks, refusals, metrics) and the serving thread (logits, Done).
+type ClientWriter = Arc<Mutex<TcpStream>>;
+
+/// Write one frame under the connection's writer lock (whole-frame
+/// atomicity between the reader thread's replies and the serving
+/// thread's results).
+fn send_frame(writer: &ClientWriter, tag: Tag, payload: &[u8]) -> Result<()> {
+    let mut w = writer.lock().expect("client writer poisoned");
+    wire::write_frame(&mut *w, tag, payload)
+}
+
+/// Admission bookkeeping for one live P1 client connection.
+struct ConnState {
+    /// Admitted-but-unfinished requests from this connection.
+    inflight: usize,
+    /// The sequence number the connection must use next (strictly
+    /// sequential, so request ids cannot be reused or spoofed).
+    next_seq: u32,
+}
+
+/// An admitted request waiting for a window slot.
+struct Pending {
+    id: u64,
+    conn: u32,
+    input: Vec<i64>,
+}
+
+#[derive(Default)]
+struct AdmissionQueue {
+    queue: VecDeque<Pending>,
+    /// Live P1 client connections (registered by their reader threads).
+    conns: HashMap<u32, ConnState>,
+    /// A drain was requested: refuse new work, serve the queue, exit.
+    draining: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    windows: AtomicU64,
+    served: AtomicU64,
+    refused: AtomicU64,
+    preps: AtomicU64,
+}
+
+/// State shared between a party's serving thread, its per-client reader
+/// threads, and its accept loop.
+struct Shared {
+    /// Live client connections' send halves, by local connection id.
+    writers: Mutex<HashMap<u32, ClientWriter>>,
+    /// P0/P2 response routing: P1 connection-id namespace → local conn.
+    binds: Mutex<HashMap<u32, u32>>,
+    /// Connections awaiting the drain ack (empty `Done`) at exit.
+    shutdown_waiters: Mutex<Vec<ClientWriter>>,
+    /// The serving loop has exited; late `Shutdown` frames self-ack.
+    exited: AtomicBool,
+    counters: Counters,
+    metrics: Arc<Metrics>,
+    /// P1's admission queue (unused at P0/P2).
+    admission: Mutex<AdmissionQueue>,
+    admission_cv: Condvar,
+    opts: ServeOpts,
+    id: usize,
+    /// Values per request (`seq_len * d_model`) this deployment serves.
+    input_len: usize,
+}
+
+/// Validate and enqueue one request at P1. Returns `None` when admitted
+/// or the refusal reason — every check is local to P1, the single
+/// admission point, so refusals can never desynchronize the parties (a
+/// refused request is simply never scheduled). The sequence number is
+/// consumed by every well-formed submission, refused or not, so the
+/// client's counter and the connection's stay aligned across refusals.
+fn admit(shared: &Shared, conn: u32, seq: u32, input: Vec<i64>) -> Option<String> {
+    let mut adm = shared.admission.lock().expect("admission poisoned");
+    let queue_len = adm.queue.len();
+    let draining = adm.draining;
+    let st = match adm.conns.get_mut(&conn) {
+        Some(st) => st,
+        None => return Some("connection not registered".to_string()),
+    };
+    if seq != st.next_seq {
+        return Some(format!("out-of-order request seq {seq} (expected {})", st.next_seq));
+    }
+    st.next_seq += 1;
+    if draining {
+        return Some("deployment is draining".to_string());
+    }
+    if input.len() != shared.input_len {
+        return Some(format!(
+            "request shaped for {} values, this deployment serves {}",
+            input.len(),
+            shared.input_len
+        ));
+    }
+    if queue_len >= shared.opts.queue_cap {
+        return Some(format!("admission queue full ({queue_len} queued)"));
+    }
+    if st.inflight >= shared.opts.max_inflight {
+        return Some(format!(
+            "{} requests already in flight (cap {})",
+            st.inflight, shared.opts.max_inflight
+        ));
+    }
+    st.inflight += 1;
+    adm.queue.push_back(Pending { id: wire::request_id(conn, seq), conn, input });
+    shared.admission_cv.notify_all();
+    None
+}
+
+/// Drop a disconnected client: its queued-but-uncut requests leave the
+/// admission queue immediately (window slots are never leaked to dead
+/// connections), its response routes are forgotten, and requests
+/// already cut into an in-flight window simply have their replies
+/// dropped.
+fn disconnect(shared: &Shared, conn: u32) {
+    shared.writers.lock().expect("writers poisoned").remove(&conn);
+    if shared.id == P1 {
+        let mut adm = shared.admission.lock().expect("admission poisoned");
+        adm.conns.remove(&conn);
+        adm.queue.retain(|p| p.conn != conn);
+        shared.admission_cv.notify_all();
+    } else {
+        shared.binds.lock().expect("binds poisoned").retain(|_, c| *c != conn);
+    }
+}
+
+/// Ack every connection that requested shutdown with an empty `Done`
+/// (exactly once per waiter: the list is drained under its lock).
+fn ack_shutdown_waiters(shared: &Shared) {
+    let waiters =
+        std::mem::take(&mut *shared.shutdown_waiters.lock().expect("waiters poisoned"));
+    for w in waiters {
+        let _ = send_frame(&w, Tag::Done, &[]);
+    }
+}
+
+/// Per-client reader thread: parse frames, admit requests (P1) or
+/// register response routes (P0/P2), answer metrics/stats queries, and
+/// clean up on disconnect. Protocol violations drop the *connection*,
+/// never the party.
+fn client_reader(shared: Arc<Shared>, conn: u32, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // A wedged client must not stall the serving thread's reply writes.
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer: ClientWriter = Arc::new(Mutex::new(stream));
+    shared.writers.lock().expect("writers poisoned").insert(conn, Arc::clone(&writer));
+    if shared.id == P1 {
+        let mut adm = shared.admission.lock().expect("admission poisoned");
+        adm.conns.insert(conn, ConnState { inflight: 0, next_seq: 0 });
+    }
+    let mut reader = BufReader::new(reader_stream);
+    loop {
+        let Ok((tag, payload)) = wire::read_frame(&mut reader) else {
+            break;
+        };
+        match tag {
+            Tag::InferRequest if shared.id == P1 => match wire::decode_infer_request(&payload) {
+                Ok((seq, input)) => {
+                    let id = wire::request_id(conn, seq);
+                    if let Some(reason) = admit(&shared, conn, seq, input) {
+                        shared.counters.refused.fetch_add(1, Ordering::Relaxed);
+                        if send_frame(&writer, Tag::Refused, &wire::encode_refused(id, &reason))
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                }
+                Err(_) => {
+                    let _ = send_frame(&writer, Tag::Error, b"malformed infer request");
+                    break;
+                }
+            },
+            Tag::Bind if shared.id != P1 => match wire::decode_bind(&payload) {
+                Ok(ns) => {
+                    // First registration wins, and a connection may bind
+                    // exactly ONE namespace — so squatting N namespaces
+                    // costs N live connections, and a squatted victim
+                    // fails loudly at connect time (never silently; the
+                    // acks being routed carry window metadata only, no
+                    // request data).
+                    let verdict = {
+                        use std::collections::hash_map::Entry;
+                        let mut binds = shared.binds.lock().expect("binds poisoned");
+                        if binds.values().any(|c| *c == conn) {
+                            Err("connection already bound a namespace")
+                        } else {
+                            match binds.entry(ns) {
+                                Entry::Occupied(_) => Err("namespace already bound"),
+                                Entry::Vacant(e) => {
+                                    e.insert(conn);
+                                    Ok(())
+                                }
+                            }
+                        }
+                    };
+                    if let Err(reason) = verdict {
+                        let _ = send_frame(&writer, Tag::Error, reason.as_bytes());
+                        break;
+                    }
+                    if send_frame(&writer, Tag::BindAck, &[]).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    let _ = send_frame(&writer, Tag::Error, b"malformed bind");
+                    break;
+                }
+            },
+            Tag::MetricsReq => {
+                let snap = shared.metrics.snapshot().to_bytes();
+                if send_frame(&writer, Tag::MetricsSnap, &snap).is_err() {
+                    break;
+                }
+            }
+            Tag::StatsReq => {
+                let queued = if shared.id == P1 {
+                    shared.admission.lock().expect("admission poisoned").queue.len() as u64
+                } else {
+                    0
+                };
+                let stats = ServeStats {
+                    windows: shared.counters.windows.load(Ordering::Relaxed),
+                    served: shared.counters.served.load(Ordering::Relaxed),
+                    refused: shared.counters.refused.load(Ordering::Relaxed),
+                    preps: shared.counters.preps.load(Ordering::Relaxed),
+                    queued,
+                };
+                if send_frame(&writer, Tag::Stats, &stats.to_bytes()).is_err() {
+                    break;
+                }
+            }
+            Tag::Shutdown => {
+                shared
+                    .shutdown_waiters
+                    .lock()
+                    .expect("waiters poisoned")
+                    .push(Arc::clone(&writer));
+                if shared.id == P1 {
+                    let mut adm = shared.admission.lock().expect("admission poisoned");
+                    adm.draining = true;
+                    shared.admission_cv.notify_all();
+                }
+                // If the serving loop already exited (e.g. another
+                // client's drain finished first), ack immediately —
+                // nobody else will drain the waiter list again.
+                if shared.exited.load(Ordering::SeqCst) {
+                    ack_shutdown_waiters(&shared);
+                }
+            }
+            other => {
+                let msg = format!("unexpected client frame {other:?}");
+                let _ = send_frame(&writer, Tag::Error, msg.as_bytes());
+                break;
+            }
+        }
+    }
+    disconnect(&shared, conn);
+}
+
+/// The party's accept loop (runs for the process lifetime): handshake
+/// every connection, spawn a reader thread per client, hand the control
+/// link to the serving thread, and drop everything else.
+fn accept_loop(
+    listener: TcpListener,
+    session: [u8; 16],
+    coord_token: [u8; 16],
+    shared: Arc<Shared>,
+    conn_alloc: Arc<AtomicU32>,
+    coord_tx: Sender<TcpStream>,
+) {
+    loop {
+        let Some((stream, accepted)) =
+            accept_peer(&listener, &session, shared.id as u8, &conn_alloc)
+        else {
+            continue;
+        };
+        match accepted {
+            Accepted::Client(conn) => {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || client_reader(shared, conn, stream));
+            }
+            // Only a token-bearing link (proof of the master seed, i.e.
+            // the real P1) may become the control plane; forgeries are
+            // dropped. The serving thread honors the first verified
+            // link; a failed send means it already has one (or exited).
+            Accepted::Coordinator { token } => {
+                if token == coord_token {
+                    let _ = coord_tx.send(stream);
+                }
+            }
+            // The mesh is long established; a late party link is a
+            // misconfiguration — drop it, keep serving.
+            Accepted::Party(_) => {}
+        }
+    }
+}
+
 /// Run one party over an already-bound listener: establish the mesh, do
-/// model setup, then serve clients until one sends `Shutdown`. Blocks
-/// for the lifetime of the deployment.
+/// model setup, then serve clients concurrently until a drain completes.
+/// Blocks for the lifetime of the deployment.
 pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
     assert!(opts.id < 3, "party id out of range");
     let session = session_id(opts.scfg.master_seed, &opts.cfg);
-    let TcpMesh { chans, listener, parked_clients } =
+    let coord_token = control_token(opts.scfg.master_seed, &opts.cfg);
+    let TcpMesh { chans, listener, parked_clients, parked_coords, conn_alloc } =
         TcpTransport::new(opts.id, listener, opts.peers.clone(), session).establish()?;
     let metrics = Arc::new(Metrics::new());
     let net = Net::new(opts.id, chans, Arc::clone(&metrics), opts.scfg.realtime);
@@ -129,32 +513,44 @@ pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
     model.max_strategy = opts.max_strategy;
     ctx.flush_timer();
 
-    // Clients are served ONE AT A TIME, in FIFO arrival order (parked
-    // connections first — `VecDeque` front — then fresh accepts). The
-    // deployment has no cross-party ordering protocol, so its contract
-    // is a single live client (like the in-process Coordinator owning
-    // its Session): a second client is simply queued until the first
-    // disconnects. Production fan-in belongs in one client-side
-    // coordinator process, not in N racing clients.
-    let mut pending: std::collections::VecDeque<TcpStream> = parked_clients.into();
-    loop {
-        let stream = match pending.pop_front() {
-            Some(s) => s,
-            None => {
-                match accept_peer(&listener, &session, opts.id as u8) {
-                    Some((s, Accepted::Client)) => s,
-                    Some((_, Accepted::Party(p))) => {
-                        bail!("party {p} connected after the mesh was established")
-                    }
-                    // Garbage/reset/silent connection: drop it, keep serving.
-                    None => continue,
-                }
-            }
-        };
-        if serve_client(&ctx, &model, &metrics, stream)? {
-            return Ok(());
+    let shared = Arc::new(Shared {
+        writers: Mutex::new(HashMap::new()),
+        binds: Mutex::new(HashMap::new()),
+        shutdown_waiters: Mutex::new(Vec::new()),
+        exited: AtomicBool::new(false),
+        counters: Counters::default(),
+        metrics,
+        admission: Mutex::new(AdmissionQueue::default()),
+        admission_cv: Condvar::new(),
+        opts: opts.serve,
+        id: opts.id,
+        input_len: opts.cfg.seq_len * opts.cfg.d_model,
+    });
+    let (coord_tx, coord_rx) = channel();
+    for (stream, token) in parked_coords {
+        if token == coord_token {
+            let _ = coord_tx.send(stream);
         }
     }
+    for (stream, conn) in parked_clients {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || client_reader(shared, conn, stream));
+    }
+    {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            accept_loop(listener, session, coord_token, shared, conn_alloc, coord_tx)
+        });
+    }
+
+    let out = if opts.id == P1 {
+        serve_as_sequencer(&ctx, &model, &opts, &shared)
+    } else {
+        serve_from_manifests(&ctx, &model, &shared, coord_rx)
+    };
+    shared.exited.store(true, Ordering::SeqCst);
+    ack_shutdown_waiters(&shared);
+    out
 }
 
 /// Bind `listen` and run the party there (the `repro party` entry).
@@ -164,216 +560,502 @@ pub fn run_party_addr(listen: &str, opts: PartyOpts) -> Result<()> {
     run_party(listener, opts)
 }
 
-/// Serve one client connection until it disconnects (`Ok(false)`) or
-/// requests deployment shutdown (`Ok(true)`). The party must outlive
-/// its clients: read failures, write failures (client crashed before
-/// reading a reply), and malformed frames all drop the *connection*,
-/// never the process — `Err` is reserved for states where the three
-/// parties can no longer be in lockstep.
-fn serve_client(
+/// Write one control frame to both control links. A control write can
+/// only fail when a peer process died — at that point the deployment is
+/// over, so the error propagates.
+fn direct(links: &mut [TcpStream], tag: Tag, payload: &[u8]) -> Result<()> {
+    for link in links.iter_mut() {
+        wire::write_frame(link, tag, payload).context("control link write")?;
+    }
+    Ok(())
+}
+
+/// What the sequencer decided to do next.
+enum Action {
+    /// Evaluate one window over these admitted requests (row order).
+    Serve(Vec<Pending>),
+    /// The queue is idle and the correlation pool is below target.
+    Prep,
+    /// A drain was requested and the queue is empty.
+    Exit,
+}
+
+/// Decide the sequencer's next step. The first queued request opens a
+/// linger deadline; the window cuts at `max_batch` requests, at the
+/// deadline, or when a drain is requested — whichever comes first.
+/// While the queue is idle the pool is topped up, and once a drain was
+/// requested and the queue has emptied the deployment exits.
+fn next_action(shared: &Shared, pooled_full: usize) -> Action {
+    let sopts = shared.opts;
+    let mut adm = shared.admission.lock().expect("admission poisoned");
+    loop {
+        if adm.queue.is_empty() {
+            if adm.draining {
+                return Action::Exit;
+            }
+            if pooled_full < sopts.prep_depth {
+                return Action::Prep;
+            }
+            let (guard, _) = shared
+                .admission_cv
+                .wait_timeout(adm, Duration::from_millis(500))
+                .expect("admission poisoned");
+            adm = guard;
+            continue;
+        }
+        let deadline = Instant::now() + sopts.linger;
+        while adm.queue.len() < sopts.max_batch && !adm.draining {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = shared
+                .admission_cv
+                .wait_timeout(adm, deadline - now)
+                .expect("admission poisoned");
+            adm = guard;
+            if adm.queue.is_empty() {
+                // every lingering request disconnected; reconsider
+                break;
+            }
+        }
+        let n = adm.queue.len().min(sopts.max_batch);
+        if n == 0 {
+            continue;
+        }
+        return Action::Serve(adm.queue.drain(..n).collect());
+    }
+}
+
+/// This party's [`WindowReport`] for a window it just measured.
+fn window_report(
+    delta: &MetricsSnapshot,
+    wid: u64,
+    pos: usize,
+    batch: usize,
+    wall_ns: u64,
+) -> WindowReport {
+    WindowReport {
+        wid,
+        pos: pos as u32,
+        batch: batch as u32,
+        online_rounds: delta.max_rounds(Phase::Online),
+        online_bytes: delta.total_bytes(Phase::Online),
+        offline_bytes: delta.total_bytes(Phase::Offline),
+        wall_ns,
+    }
+}
+
+/// Send a window result frame to the client connection `conn`, if it is
+/// still alive. A failed or timed-out write (client crashed, or wedged
+/// past its 10 s write budget) disconnects the client immediately: the
+/// serving thread must not pay that stall again on the next window, and
+/// a partially written frame has corrupted the stream anyway. (The
+/// connection's reader thread re-runs the cleanup harmlessly on EOF.)
+fn reply(shared: &Shared, conn: u32, tag: Tag, payload: &[u8]) {
+    let writer = shared.writers.lock().expect("writers poisoned").get(&conn).cloned();
+    if let Some(writer) = writer {
+        if send_frame(&writer, tag, payload).is_err() {
+            disconnect(shared, conn);
+        }
+    }
+}
+
+/// P1's serving loop: dial the control links, then alternate between
+/// cutting windows (manifest → batched pass → per-request responses)
+/// and topping up the correlation pool while idle.
+fn serve_as_sequencer(
     ctx: &PartyCtx,
     model: &SecureBert,
-    metrics: &Metrics,
-    stream: TcpStream,
-) -> Result<bool> {
-    let _ = stream.set_nodelay(true);
-    let mut reader = BufReader::new(stream.try_clone().context("clone client stream")?);
-    let mut writer = stream;
-    // A failed reply write means the client is gone; drop it.
-    macro_rules! send_or_drop {
-        ($tag:expr, $payload:expr) => {
-            if wire::write_frame(&mut writer, $tag, $payload).is_err() {
-                return Ok(false);
-            }
-        };
+    opts: &PartyOpts,
+    shared: &Shared,
+) -> Result<()> {
+    let session = session_id(opts.scfg.master_seed, &opts.cfg);
+    let token = control_token(opts.scfg.master_seed, &opts.cfg);
+    let mut links = Vec::new();
+    for p in [P0, P2] {
+        let addr = opts.peers[p]
+            .as_deref()
+            .with_context(|| format!("party 1: no address for peer {p}"))?;
+        let mut stream = dial_retry(addr, Duration::from_secs(30))?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        let acked = wire::coord_handshake(&mut stream, &session, &token)
+            .with_context(|| format!("control-link handshake with party {p} at {addr}"))?;
+        if acked as usize != p {
+            bail!("{addr} answered the control link as party {acked}, expected {p}");
+        }
+        links.push(stream);
     }
+
+    let sopts = shared.opts;
+    let mut corr_pool = CorrPool::new();
+    let prep_full = |links: &mut [TcpStream], pool: &mut CorrPool| -> Result<()> {
+        direct(links, Tag::Prep, &wire::encode_prep(sopts.max_batch as u32))?;
+        ctx.reset_timer();
+        prep_into_pool(ctx, model, pool, sopts.max_batch);
+        ctx.flush_timer();
+        shared.counters.preps.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    };
+    // Prefill so even the first window can be served warm.
+    for _ in 0..sopts.prep_depth {
+        prep_full(links.as_mut_slice(), &mut corr_pool)?;
+    }
+    let mut next_wid = 0u64;
     loop {
-        let (tag, payload) = match wire::read_frame(&mut reader) {
-            Ok(f) => f,
-            // Client went away; wait for the next one.
-            Err(_) => return Ok(false),
-        };
-        match tag {
-            Tag::InferRequest => {
-                let Ok((batch, per_len, inputs)) = wire::decode_infer_request(&payload) else {
-                    // Malformed from a handshaken client: tell it (best
-                    // effort) and drop the connection, not the party.
-                    let _ = wire::write_frame(&mut writer, Tag::Error, b"malformed infer request");
-                    return Ok(false);
-                };
-                // Refusals must keep the three parties in lockstep: a
-                // request the MPC pass cannot serve is answered with an
-                // Error frame (party stays up) — and the checks that
-                // gate the pass use only metadata EVERY party receives
-                // (batch, per_len), so all three refuse symmetrically
-                // for the common misconfigurations (e.g. a client built
-                // for a different model shape).
-                let want = model.cfg.seq_len * model.cfg.d_model;
-                let refusal = if batch == 0 || batch > MAX_CLIENT_BATCH {
-                    Some(format!("window of {batch} not servable (max {MAX_CLIENT_BATCH})"))
-                } else if per_len != want {
-                    Some(format!(
-                        "request shaped for {per_len} values/input, this deployment serves {want}"
-                    ))
-                } else {
-                    None
-                };
-                if let Some(reason) = refusal {
-                    send_or_drop!(Tag::Error, reason.as_bytes());
-                    continue;
-                }
-                // These two can only fail at P1 (nobody else sees the
-                // rows), which means a broken or hostile client already
-                // desynced the parties — refuse, then resync by
-                // dropping the deployment (the other parties are
-                // blocked inside the pass and cannot be recalled).
-                if (ctx.id == P1) != inputs.is_some() {
-                    let msg = "inputs must travel to P1 (the data owner) exactly";
-                    let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
-                    bail!("{msg}");
-                }
-                if let Some(inputs) = &inputs {
-                    if inputs.len() != batch {
-                        let msg = format!(
-                            "client sent {} inputs for a {batch}-request window",
-                            inputs.len()
-                        );
-                        let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
-                        bail!("{msg}");
-                    }
-                }
-                // Don't bill queue-idle time spent waiting for the frame.
-                ctx.reset_timer();
-                let (logits, _) = secure_infer_batch(ctx, model, batch, inputs.as_deref());
-                ctx.flush_timer();
-                if ctx.id == P1 {
-                    send_or_drop!(Tag::Logits, &wire::encode_logits(&logits));
-                }
-                send_or_drop!(Tag::Done, &[]);
+        let pooled_full = corr_pool.get(&sopts.max_batch).map(|q| q.len()).unwrap_or(0);
+        match next_action(shared, pooled_full) {
+            Action::Prep => prep_full(links.as_mut_slice(), &mut corr_pool)?,
+            Action::Serve(items) => {
+                let wid = next_wid;
+                next_wid += 1;
+                serve_one_window(ctx, model, shared, &mut links, &mut corr_pool, wid, items)?;
             }
-            Tag::MetricsReq => {
-                send_or_drop!(Tag::MetricsSnap, &metrics.snapshot().to_bytes());
-            }
-            Tag::Shutdown => {
-                let _ = wire::write_frame(&mut writer, Tag::Done, &[]);
-                return Ok(true);
-            }
-            other => {
-                // Protocol violation from a handshaken client: drop the
-                // connection, keep the party serving.
-                let msg = format!("unexpected client frame {other:?}");
-                let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
-                return Ok(false);
+            Action::Exit => {
+                direct(&mut links, Tag::Exit, &[])?;
+                return Ok(());
             }
         }
     }
 }
 
+/// Evaluate one window at P1: broadcast the manifest, run the batched
+/// pass (consuming a pooled tape if one matches), fan the logits and
+/// per-request window reports back out to the owning connections, and
+/// release the requests' in-flight budget.
+fn serve_one_window(
+    ctx: &PartyCtx,
+    model: &SecureBert,
+    shared: &Shared,
+    links: &mut [TcpStream],
+    corr_pool: &mut CorrPool,
+    wid: u64,
+    items: Vec<Pending>,
+) -> Result<()> {
+    let batch = items.len();
+    let mut routes = Vec::with_capacity(batch);
+    let mut inputs = Vec::with_capacity(batch);
+    for p in items {
+        routes.push((p.id, p.conn));
+        inputs.push(p.input);
+    }
+    let ids: Vec<u64> = routes.iter().map(|&(id, _)| id).collect();
+    direct(links, Tag::Manifest, &wire::encode_manifest(wid, &ids))?;
+
+    let pre = shared.metrics.snapshot();
+    ctx.reset_timer();
+    let t0 = Instant::now();
+    let logits = serve_window(ctx, model, corr_pool, batch, Some(&inputs));
+    ctx.flush_timer();
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let mut delta = shared.metrics.snapshot();
+    delta.saturating_sub_assign(&pre);
+
+    for (pos, (&(id, conn), lg)) in routes.iter().zip(&logits).enumerate() {
+        reply(shared, conn, Tag::Logits, &wire::encode_logits(id, lg));
+        let report = window_report(&delta, wid, pos, batch, wall_ns);
+        reply(shared, conn, Tag::Done, &wire::encode_done(id, &report));
+    }
+    {
+        let mut adm = shared.admission.lock().expect("admission poisoned");
+        for &(_, conn) in &routes {
+            if let Some(st) = adm.conns.get_mut(&conn) {
+                st.inflight = st.inflight.saturating_sub(1);
+            }
+        }
+    }
+    shared.counters.windows.fetch_add(1, Ordering::Relaxed);
+    shared.counters.served.fetch_add(batch as u64, Ordering::Relaxed);
+    Ok(())
+}
+
+/// P0/P2's serving loop: wait for P1's control link, then evaluate
+/// exactly the windows (and preprocessing) its directives name, acking
+/// completions to [`Tag::Bind`]-registered client connections.
+fn serve_from_manifests(
+    ctx: &PartyCtx,
+    model: &SecureBert,
+    shared: &Shared,
+    coord_rx: Receiver<TcpStream>,
+) -> Result<()> {
+    let stream = coord_rx.recv().ok().context("control link never arrived")?;
+    let mut control = BufReader::new(stream);
+    let mut corr_pool = CorrPool::new();
+    loop {
+        let (tag, payload) =
+            wire::read_frame(&mut control).context("control link read (party 1 gone?)")?;
+        match tag {
+            Tag::Manifest => {
+                let (wid, ids) = wire::decode_manifest(&payload)?;
+                let batch = ids.len();
+                let pre = shared.metrics.snapshot();
+                ctx.reset_timer();
+                let t0 = Instant::now();
+                let _ = serve_window(ctx, model, &mut corr_pool, batch, None);
+                ctx.flush_timer();
+                let wall_ns = t0.elapsed().as_nanos() as u64;
+                let mut delta = shared.metrics.snapshot();
+                delta.saturating_sub_assign(&pre);
+                for (pos, &id) in ids.iter().enumerate() {
+                    let local = {
+                        let binds = shared.binds.lock().expect("binds poisoned");
+                        binds.get(&wire::conn_of(id)).copied()
+                    };
+                    let Some(local) = local else { continue };
+                    let report = window_report(&delta, wid, pos, batch, wall_ns);
+                    reply(shared, local, Tag::Done, &wire::encode_done(id, &report));
+                }
+                shared.counters.windows.fetch_add(1, Ordering::Relaxed);
+                shared.counters.served.fetch_add(batch as u64, Ordering::Relaxed);
+            }
+            Tag::Prep => {
+                let batch = wire::decode_prep(&payload)? as usize;
+                ctx.reset_timer();
+                prep_into_pool(ctx, model, &mut corr_pool, batch);
+                ctx.flush_timer();
+                shared.counters.preps.fetch_add(1, Ordering::Relaxed);
+            }
+            Tag::Exit => return Ok(()),
+            other => bail!("unexpected control frame {other:?}"),
+        }
+    }
+}
+
+/// What the client wants out of its reorder-buffer pump.
+enum Want {
+    /// A terminal frame (Done or Refused) for this request id.
+    Request(u64),
+    /// A metrics snapshot reply.
+    Snapshot,
+    /// A serving-stats reply.
+    Stats,
+    /// The drain ack (empty `Done`).
+    Drained,
+}
+
+/// One party connection of a [`RemoteClient`], with reorder buffers for
+/// frames that arrive while the client is waiting on something else
+/// (pipelined requests complete in window order, not submission order).
 struct PartyConn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    done: HashMap<u64, WindowReport>,
+    logits: HashMap<u64, Vec<i64>>,
+    refused: HashMap<u64, String>,
+    snaps: VecDeque<MetricsSnapshot>,
+    stats: VecDeque<ServeStats>,
+    drained: bool,
 }
 
-/// A client of a 3-process deployment: one connection per party,
-/// mirroring the in-process `Session` command fan-out (the window size
-/// is public serving metadata all parties need; the inputs travel only
-/// to P1, and only P1 returns logits).
+impl PartyConn {
+    fn satisfied(&self, want: &Want) -> bool {
+        match want {
+            Want::Request(id) => self.done.contains_key(id) || self.refused.contains_key(id),
+            Want::Snapshot => !self.snaps.is_empty(),
+            Want::Stats => !self.stats.is_empty(),
+            Want::Drained => self.drained,
+        }
+    }
+
+    /// Read frames until `want` is satisfied, buffering everything else.
+    fn pump(&mut self, want: Want) -> Result<()> {
+        while !self.satisfied(&want) {
+            let (tag, payload) = wire::read_frame(&mut self.reader)?;
+            match tag {
+                Tag::Logits => {
+                    let (id, lg) = wire::decode_logits(&payload)?;
+                    self.logits.insert(id, lg);
+                }
+                Tag::Done if payload.is_empty() => self.drained = true,
+                Tag::Done => {
+                    let (id, report) = wire::decode_done(&payload)?;
+                    self.done.insert(id, report);
+                }
+                Tag::Refused => {
+                    let (id, reason) = wire::decode_refused(&payload)?;
+                    self.refused.insert(id, reason);
+                }
+                Tag::MetricsSnap => self.snaps.push_back(
+                    MetricsSnapshot::from_bytes(&payload).context("malformed metrics snapshot")?,
+                ),
+                Tag::Stats => self.stats.push_back(ServeStats::from_bytes(&payload)?),
+                Tag::Error => bail!("party reported: {}", String::from_utf8_lossy(&payload)),
+                other => bail!("unexpected frame {other:?} from party"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One served request: P1's revealed logits plus each party's window
+/// report for the window the request rode in.
+#[derive(Clone, Debug)]
+pub struct Completed {
+    /// The request id [`RemoteClient::submit`] returned.
+    pub id: u64,
+    /// Revealed class logits.
+    pub logits: Vec<i64>,
+    /// Per-party window reports, indexed by party id.
+    pub reports: [WindowReport; 3],
+}
+
+impl Completed {
+    /// How many requests (possibly from other clients) shared the
+    /// window this request rode in.
+    pub fn batch(&self) -> usize {
+        self.reports[P1].batch as usize
+    }
+
+    /// The deployment-wide window id (P1 cut order).
+    pub fn wid(&self) -> u64 {
+        self.reports[P1].wid
+    }
+
+    /// This request's row position inside its window.
+    pub fn pos(&self) -> usize {
+        self.reports[P1].pos as usize
+    }
+
+    /// The window's online protocol rounds (max over the parties'
+    /// local counts) — constant in the window size; rounds/request is
+    /// this divided by [`batch`](Completed::batch).
+    pub fn window_online_rounds(&self) -> u64 {
+        self.reports.iter().map(|r| r.online_rounds).max().unwrap_or(0)
+    }
+
+    /// The window's total online bytes (sends are counted at the
+    /// sender, so the parties' reports sum to the window total).
+    pub fn window_online_bytes(&self) -> u64 {
+        self.reports.iter().map(|r| r.online_bytes).sum()
+    }
+
+    /// The window's total request-path offline bytes (0 when it was
+    /// served from a warm correlation pool).
+    pub fn window_offline_bytes(&self) -> u64 {
+        self.reports.iter().map(|r| r.offline_bytes).sum()
+    }
+
+    /// This request's amortized share of the window's online bytes.
+    pub fn amortized_online_bytes(&self) -> u64 {
+        self.window_online_bytes() / (self.reports[P1].batch.max(1) as u64)
+    }
+}
+
+/// A client of a 3-process deployment: one connection per party. The
+/// inputs travel only to P1 (the data owner and sequencer); P0/P2 only
+/// ever see a response route for this client's request-id namespace.
+/// Many clients may be connected at once — their requests share batch
+/// windows (DESIGN.md §Concurrent serving).
 pub struct RemoteClient {
     parties: Vec<PartyConn>,
+    /// P1-assigned connection id: the namespace of this client's ids.
+    conn: u32,
+    next_seq: u32,
 }
 
 impl RemoteClient {
     /// Dial all three parties (`addrs[i]` = party `i`), retrying each
-    /// until `timeout`, and verify the handshakes: every address must
-    /// answer with the expected party id and the shared session id.
-    pub fn connect(addrs: &[String; 3], session: [u8; 16], timeout: Duration) -> Result<RemoteClient> {
+    /// until `timeout`, verify the handshakes, and register this
+    /// client's response route at P0/P2.
+    pub fn connect(
+        addrs: &[String; 3],
+        session: [u8; 16],
+        timeout: Duration,
+    ) -> Result<RemoteClient> {
         let mut parties = Vec::with_capacity(3);
+        let mut p1_conn = 0u32;
         for (id, addr) in addrs.iter().enumerate() {
             let mut stream = dial_retry(addr, timeout)?;
             stream.set_nodelay(true).context("set_nodelay")?;
-            let acked = wire::client_handshake(&mut stream, &session)
+            let (acked, conn) = wire::client_handshake(&mut stream, &session)
                 .with_context(|| format!("client handshake with party {id} at {addr}"))?;
             if acked as usize != id {
                 bail!("{addr} answered as party {acked}, expected party {id}");
             }
+            if id == P1 {
+                p1_conn = conn;
+            }
             let reader = BufReader::new(stream.try_clone().context("clone client stream")?);
-            parties.push(PartyConn { reader, writer: stream });
+            parties.push(PartyConn {
+                reader,
+                writer: stream,
+                done: HashMap::new(),
+                logits: HashMap::new(),
+                refused: HashMap::new(),
+                snaps: VecDeque::new(),
+                stats: VecDeque::new(),
+                drained: false,
+            });
         }
-        Ok(RemoteClient { parties })
+        let mut client = RemoteClient { parties, conn: p1_conn, next_seq: 0 };
+        let bind = wire::encode_bind(p1_conn);
+        for id in [P0, P2] {
+            wire::write_frame(&mut client.parties[id].writer, Tag::Bind, &bind)?;
+            let (tag, payload) = wire::read_frame(&mut client.parties[id].reader)?;
+            match tag {
+                Tag::BindAck => {}
+                Tag::Error => {
+                    bail!("party {id} refused bind: {}", String::from_utf8_lossy(&payload))
+                }
+                other => bail!("expected BindAck from party {id}, got {other:?}"),
+            }
+        }
+        Ok(client)
     }
 
-    /// Run one batched inference across the deployment (blocking):
-    /// submits the window to all three parties, waits for every party's
-    /// quiesce ack, and returns P1's revealed logits in submission
-    /// order. A deployment-side refusal (shape mismatch, oversized
-    /// window) comes back as an `Err` carrying the party's reason; the
-    /// connections stay usable because every party refuses in lockstep.
+    /// Submit one request without waiting for it. Pipelined requests —
+    /// from this client and every other connected client — arriving
+    /// within the deployment's linger window share one batched MPC
+    /// pass. Returns the request id for [`wait`](RemoteClient::wait).
+    pub fn submit(&mut self, input: &[i64]) -> Result<u64> {
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.checked_add(1).context("request seq overflow")?;
+        let payload = wire::encode_infer_request(seq, input);
+        wire::write_frame(&mut self.parties[P1].writer, Tag::InferRequest, &payload)
+            .context("submit request")?;
+        Ok(wire::request_id(self.conn, seq))
+    }
+
+    /// Block until request `id` completes on all three parties. An
+    /// admission refusal (backpressure, bad shape, draining) is an
+    /// `Err` naming P1's reason — the connection stays usable, and no
+    /// other party ever saw the refused request.
+    pub fn wait(&mut self, id: u64) -> Result<Completed> {
+        self.parties[P1].pump(Want::Request(id))?;
+        if let Some(reason) = self.parties[P1].refused.remove(&id) {
+            bail!("party 1 refused request {id}: {reason}");
+        }
+        let mut reports = [WindowReport::default(); 3];
+        reports[P1] = self.parties[P1].done.remove(&id).expect("pump guarantees done");
+        let logits =
+            self.parties[P1].logits.remove(&id).context("party 1 sent Done without Logits")?;
+        for p in [P0, P2] {
+            self.parties[p].pump(Want::Request(id))?;
+            reports[p] = self.parties[p].done.remove(&id).expect("pump guarantees done");
+        }
+        Ok(Completed { id, logits, reports })
+    }
+
+    /// Submit a batch of requests and wait for all of them; returns the
+    /// logits in submission order. (They may be served across one or
+    /// several windows, together with other clients' requests.)
     pub fn infer_batch(&mut self, inputs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
         if inputs.is_empty() {
             bail!("empty batch");
         }
-        let batch = inputs.len();
-        let per_len = inputs[0].len();
-        if inputs.iter().any(|x| x.len() != per_len) {
-            bail!("all inputs in a window must have the same length");
+        let ids: Vec<u64> = inputs.iter().map(|x| self.submit(x)).collect::<Result<_>>()?;
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            out.push(self.wait(id)?.logits);
         }
-        // Encode (and implicitly size-check, via write_frame's MAX_FRAME
-        // bound against a growable Vec) every party's payload BEFORE the
-        // first socket write: if any frame is unsendable — e.g. P1's
-        // data payload exceeds MAX_FRAME — no party may have received
-        // the window, else the others would enter the pass and block on
-        // peers that never got it.
-        let mut frames = Vec::with_capacity(3);
-        for id in 0..3 {
-            let payload = wire::encode_infer_request(batch, per_len, (id == P1).then_some(inputs));
-            let mut frame = Vec::with_capacity(payload.len() + 5);
-            wire::write_frame(&mut frame, Tag::InferRequest, &payload)
-                .with_context(|| format!("request for party {id} is unsendable"))?;
-            frames.push(frame);
-        }
-        for (conn, frame) in self.parties.iter_mut().zip(&frames) {
-            conn.writer.write_all(frame).context("submit window")?;
-        }
-        // Every party answers exactly one terminal frame (Done or
-        // Error), P1 with a Logits frame before its Done — read them
-        // all so a refused window leaves the connections in sync.
-        let mut logits = None;
-        let mut refused = None;
-        for (id, conn) in self.parties.iter_mut().enumerate() {
-            let (tag, payload) = wire::read_frame(&mut conn.reader)?;
-            match tag {
-                Tag::Error => {
-                    refused.get_or_insert(format!(
-                        "party {id} refused: {}",
-                        String::from_utf8_lossy(&payload)
-                    ));
-                    continue;
-                }
-                Tag::Logits if id == P1 => {
-                    logits = Some(wire::decode_logits(&payload)?);
-                    let (tag, _) = wire::read_frame(&mut conn.reader)?;
-                    if tag != Tag::Done {
-                        bail!("expected Done from party {id}, got {tag:?}");
-                    }
-                }
-                Tag::Done if id != P1 => {}
-                other => bail!("unexpected reply {other:?} from party {id}"),
-            }
-        }
-        if let Some(reason) = refused {
-            bail!("{reason}");
-        }
-        let logits = logits.context("deployment returned no logits")?;
-        if logits.len() != batch {
-            bail!("got {} logit vectors for a {batch}-request window", logits.len());
-        }
-        Ok(logits)
+        Ok(out)
     }
 
-    /// Single-request convenience wrapper around
-    /// [`infer_batch`](RemoteClient::infer_batch).
+    /// Single-request convenience wrapper: submit + wait, returning the
+    /// logits.
     pub fn infer(&mut self, input: &[i64]) -> Result<Vec<i64>> {
-        Ok(self.infer_batch(&[input.to_vec()])?.pop().unwrap())
+        let id = self.submit(input)?;
+        Ok(self.wait(id)?.logits)
     }
 
     /// Fetch and merge every party's local meter. Sends are counted at
@@ -382,29 +1064,34 @@ impl RemoteClient {
     /// per-phase rounds are backend-independent.
     pub fn snapshot(&mut self) -> Result<MetricsSnapshot> {
         let mut merged = MetricsSnapshot::default();
-        for (id, conn) in self.parties.iter_mut().enumerate() {
-            wire::write_frame(&mut conn.writer, Tag::MetricsReq, &[])?;
-            let (tag, payload) = wire::read_frame(&mut conn.reader)?;
-            if tag != Tag::MetricsSnap {
-                bail!("expected MetricsSnap from party {id}, got {tag:?}");
-            }
-            let snap = MetricsSnapshot::from_bytes(&payload)
-                .with_context(|| format!("party {id}: malformed metrics snapshot"))?;
-            merged.merge(&snap);
+        for p in 0..3 {
+            wire::write_frame(&mut self.parties[p].writer, Tag::MetricsReq, &[])?;
+            self.parties[p].pump(Want::Snapshot)?;
+            merged.merge(&self.parties[p].snaps.pop_front().expect("pump guarantees snap"));
         }
         Ok(merged)
     }
 
-    /// Ask every party process to exit (each acks before this returns).
+    /// Fetch one party's serving counters (windows cut, requests
+    /// served/refused, preps, queue depth).
+    pub fn stats(&mut self, party: usize) -> Result<ServeStats> {
+        assert!(party < 3, "party id out of range");
+        wire::write_frame(&mut self.parties[party].writer, Tag::StatsReq, &[])?;
+        self.parties[party].pump(Want::Stats)?;
+        Ok(self.parties[party].stats.pop_front().expect("pump guarantees stats"))
+    }
+
+    /// Ask the deployment to drain and exit: P1 stops admitting new
+    /// requests, serves every queued window, then directs P0/P2 to
+    /// exit; each party acks with an empty `Done` once it is done.
     pub fn shutdown(mut self) -> Result<()> {
-        for conn in self.parties.iter_mut() {
-            wire::write_frame(&mut conn.writer, Tag::Shutdown, &[])?;
+        for p in 0..3 {
+            wire::write_frame(&mut self.parties[p].writer, Tag::Shutdown, &[])?;
         }
-        for (id, conn) in self.parties.iter_mut().enumerate() {
-            let (tag, _) = wire::read_frame(&mut conn.reader)?;
-            if tag != Tag::Done {
-                bail!("party {id}: expected shutdown ack, got {tag:?}");
-            }
+        for p in 0..3 {
+            self.parties[p]
+                .pump(Want::Drained)
+                .with_context(|| format!("party {p} drain ack"))?;
         }
         Ok(())
     }

@@ -16,9 +16,49 @@ use crate::model::secure::{prep_infer_batch, secure_infer_batch, SecureBert};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
+use crate::protocols::prep::Correlation;
 use crate::transport::{build_mesh, Metrics, MetricsSnapshot, Net};
 #[cfg(test)]
 use crate::transport::Phase;
+
+/// A party-local pool of ahead-of-time correlation tapes, keyed by
+/// window size. All parties must mutate their pools through the same
+/// command sequence (session commands in-process, P1's control-link
+/// directives in a multi-process deployment) so the pop-vs-generate
+/// decision inside [`serve_window`] stays symmetric.
+pub type CorrPool = HashMap<usize, VecDeque<Vec<Correlation>>>;
+
+/// Evaluate one batch window at this party: consume a pooled
+/// correlation tape of exactly `batch` requests if one exists (warm
+/// window — zero request-path offline communication), run the batched
+/// MPC pass, and verify the tape was consumed exactly. This is the
+/// per-window body shared by the in-process [`Session`] command loop
+/// and the multi-process serving loop (`coordinator::remote`).
+pub fn serve_window(
+    ctx: &PartyCtx,
+    model: &SecureBert,
+    pool: &mut CorrPool,
+    batch: usize,
+    inputs: Option<&[Vec<i64>]>,
+) -> Vec<Vec<i64>> {
+    if let Some(tape) = pool.get_mut(&batch).and_then(|q| q.pop_front()) {
+        ctx.install_corr(tape);
+    }
+    let (logits, _) = secure_infer_batch(ctx, model, batch, inputs);
+    // A correctly-planned tape is consumed exactly; anything left
+    // behind means the plan drifted from the online pass.
+    debug_assert_eq!(ctx.corr_pending(), 0, "correlation tape not fully consumed (plan drift)");
+    ctx.clear_corr();
+    logits
+}
+
+/// Generate one window's correlation tape ahead of time and stash it in
+/// the party-local pool (offline-phase traffic only; shared by the
+/// in-process [`Session`] and the multi-process serving loop).
+pub fn prep_into_pool(ctx: &PartyCtx, model: &SecureBert, pool: &mut CorrPool, batch: usize) {
+    let tape = prep_infer_batch(ctx, model, batch);
+    pool.entry(batch).or_default().push_back(tape);
+}
 
 enum Cmd {
     /// Run one batched inference over `batch` sequences; only P1's command
@@ -96,33 +136,22 @@ impl Session {
                 // Party-local pool of ahead-of-time correlation tapes,
                 // keyed by window size. Every party receives the same
                 // command sequence, so all three pools evolve in lockstep
-                // and the pop-vs-generate decision below is symmetric.
-                let mut corr_pool: HashMap<
-                    usize,
-                    VecDeque<Vec<crate::protocols::prep::Correlation>>,
-                > = HashMap::new();
+                // and the pop-vs-generate decision inside serve_window is
+                // symmetric.
+                let mut corr_pool = CorrPool::new();
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::InferBatch { batch, inputs } => {
                             // Drop the queue-idle gap spent blocked in
                             // recv() so it is not billed as phase compute.
                             ctx.reset_timer();
-                            if let Some(tape) =
-                                corr_pool.get_mut(&batch).and_then(|q| q.pop_front())
-                            {
-                                ctx.install_corr(tape);
-                            }
-                            let (logits, _) =
-                                secure_infer_batch(&ctx, &model, batch, inputs.as_deref());
-                            // A correctly-planned tape is consumed exactly;
-                            // anything left behind means the plan drifted
-                            // from the online pass.
-                            debug_assert_eq!(
-                                ctx.corr_pending(),
-                                0,
-                                "correlation tape not fully consumed (plan drift)"
+                            let logits = serve_window(
+                                &ctx,
+                                &model,
+                                &mut corr_pool,
+                                batch,
+                                inputs.as_deref(),
                             );
-                            ctx.clear_corr();
                             if id == P1 {
                                 let _ = logits_tx.send(logits);
                             }
@@ -134,8 +163,7 @@ impl Session {
                         }
                         Cmd::Prep { batch } => {
                             ctx.reset_timer();
-                            let tape = prep_infer_batch(&ctx, &model, batch);
-                            corr_pool.entry(batch).or_default().push_back(tape);
+                            prep_into_pool(&ctx, &model, &mut corr_pool, batch);
                             ctx.flush_timer();
                             let _ = done_tx.send(());
                         }

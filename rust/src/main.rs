@@ -13,17 +13,19 @@
 //! followed by another flag or by nothing is boolean. Positional tokens
 //! after the subcommand are rejected with the usage message.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
 use ppq_bert::coordinator::remote::{
-    default_addrs, run_party_addr, seed_from_label, session_id, PartyOpts, RemoteClient,
+    default_addrs, run_party_addr, seed_from_label, session_id, Completed, PartyOpts, RemoteClient,
 };
-use ppq_bert::coordinator::{Coordinator, ServerConfig};
+use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
 use ppq_bert::model::config::BertConfig;
 use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
+use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::transport::{NetParams, Phase, PHASES};
 
 /// Parse `--key value` / `--bool` flags. A valueless flag (trailing, or
@@ -125,7 +127,8 @@ fn cmd_infer(flags: HashMap<String, String>) {
     let results = coord.run_batch();
     for r in &results {
         println!(
-            "request {}: logits {:?}  compute {}  modeled offline {}  online {}  comm offline {:.2} MB online {:.2} MB",
+            "request {}: logits {:?}  compute {}  modeled offline {}  online {}  \
+             comm offline {:.2} MB online {:.2} MB",
             r.id,
             r.logits,
             fmt_dur(r.compute),
@@ -163,12 +166,23 @@ fn cmd_infer_remote(flags: HashMap<String, String>) {
         });
     let x = synth_input(&cfg, 11);
     let t0 = std::time::Instant::now();
-    let logits = client.infer(&x).unwrap_or_else(|e| {
+    let id = client.submit(&x).unwrap_or_else(|e| {
+        eprintln!("error: submit: {e}");
+        std::process::exit(1);
+    });
+    let done = client.wait(id).unwrap_or_else(|e| {
         eprintln!("error: remote inference: {e}");
         std::process::exit(1);
     });
     let dt = t0.elapsed();
-    println!("request 0: logits {logits:?}  wall {}", fmt_dur(dt));
+    println!(
+        "request {id}: logits {:?}  wall {}  (window {}, batch {}, {} online rounds)",
+        done.logits,
+        fmt_dur(dt),
+        done.wid(),
+        done.batch(),
+        done.window_online_rounds(),
+    );
     match client.snapshot() {
         Ok(s) => {
             for (phase, name) in PHASES.iter().zip(["setup", "offline", "online"]) {
@@ -207,6 +221,15 @@ fn cmd_party(flags: HashMap<String, String>) {
     let mut opts = PartyOpts::new(id, cfg);
     opts.scfg.threads = flag_parse(&flags, "threads", 1);
     opts.weights_seed = flag_parse(&flags, "weights-seed", 42);
+    opts.serve.max_batch = flag_parse(&flags, "max-batch", opts.serve.max_batch);
+    opts.serve.linger = Duration::from_millis(flag_parse(
+        &flags,
+        "linger",
+        opts.serve.linger.as_millis() as u64,
+    ));
+    opts.serve.queue_cap = flag_parse(&flags, "queue-cap", opts.serve.queue_cap);
+    opts.serve.max_inflight = flag_parse(&flags, "max-inflight", opts.serve.max_inflight);
+    opts.serve.prep_depth = flag_parse(&flags, "prep", opts.serve.prep_depth);
     if let Some(label) = flags.get("session").filter(|s| !s.is_empty()) {
         opts.scfg.master_seed = seed_from_label(label);
     }
@@ -242,6 +265,154 @@ fn cmd_party(flags: HashMap<String, String>) {
         std::process::exit(1);
     }
     println!("party {id}: shutdown requested, exiting");
+}
+
+/// Multi-client load driver against a live 3-process deployment:
+/// `--clients K` threads each submit `--requests N` pipelined requests
+/// simultaneously, so the deployment's wire-path batcher folds requests
+/// from DIFFERENT clients into shared windows. Prints throughput and
+/// amortization stats; `--check` additionally replays the observed
+/// window compositions through a fresh in-process session and demands
+/// bit-identical logits (requires a fresh deployment with the default
+/// weights seed), `--halt` shuts the deployment down afterwards.
+fn cmd_loadgen(flags: HashMap<String, String>) {
+    let cfg = config_from(&flags);
+    let addrs = remote_addrs(&flags);
+    let clients: usize = flag_parse(&flags, "clients", 4);
+    let requests: usize = flag_parse(&flags, "requests", 1);
+    if clients == 0 || requests == 0 {
+        usage_error("loadgen needs --clients >= 1 and --requests >= 1");
+    }
+    let seed = match flags.get("session").filter(|s| !s.is_empty()) {
+        Some(label) => seed_from_label(label),
+        None => SessionCfg::default().master_seed,
+    };
+    let session = session_id(seed, &cfg);
+    println!(
+        "loadgen: {clients} concurrent clients x {requests} requests via {}",
+        addrs.join(", ")
+    );
+
+    let barrier = Arc::new(Barrier::new(clients));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for k in 0..clients {
+        let addrs = addrs.clone();
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(
+            move || -> std::result::Result<Vec<(usize, Completed)>, String> {
+                let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
+                    .map_err(|e| format!("client {k}: connect: {e}"))?;
+                barrier.wait();
+                let mut ids = Vec::new();
+                for j in 0..requests {
+                    let ridx = k * requests + j;
+                    let x = synth_input(&cfg, 100 + ridx as u64);
+                    let id = client.submit(&x).map_err(|e| format!("client {k}: submit: {e}"))?;
+                    ids.push((ridx, id));
+                }
+                let mut out = Vec::new();
+                for (ridx, id) in ids {
+                    let done = client.wait(id).map_err(|e| format!("client {k}: wait: {e}"))?;
+                    out.push((ridx, done));
+                }
+                Ok(out)
+            },
+        ));
+    }
+    let mut completed: Vec<(usize, Completed)> = Vec::new();
+    for h in handles {
+        match h.join().expect("client thread panicked") {
+            Ok(mut v) => completed.append(&mut v),
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
+    // Observed window compositions, in cut order.
+    let mut windows: BTreeMap<u64, Vec<(usize, Completed)>> = BTreeMap::new();
+    for (ridx, c) in completed {
+        windows.entry(c.wid()).or_default().push((ridx, c));
+    }
+    for reqs in windows.values_mut() {
+        reqs.sort_by_key(|(_, c)| c.pos());
+    }
+    let total = clients * requests;
+    let avg_batch = total as f64 / windows.len() as f64;
+    let rounds_per_req: f64 = windows
+        .values()
+        .map(|reqs| reqs[0].1.window_online_rounds() as f64)
+        .sum::<f64>()
+        / total as f64;
+    println!(
+        "served {total} requests in {} ({:.2} req/s): {} windows, avg batch {avg_batch:.2}, \
+         {rounds_per_req:.1} amortized online rounds/request",
+        fmt_dur(wall),
+        total as f64 / wall.as_secs_f64(),
+        windows.len(),
+    );
+
+    let mut probe = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
+        .unwrap_or_else(|e| {
+            eprintln!("error: probe connect: {e}");
+            std::process::exit(1);
+        });
+    match probe.stats(1) {
+        Ok(s) => println!(
+            "party 1 stats: windows={} served={} refused={} preps={} queued={}",
+            s.windows, s.served, s.refused, s.preps, s.queued
+        ),
+        Err(e) => eprintln!("warning: stats fetch failed: {e}"),
+    }
+
+    if flags.contains_key("check") {
+        let seen = windows.len() as u64;
+        if let Ok(s) = probe.stats(1) {
+            if s.windows != seen {
+                eprintln!(
+                    "error: --check needs a fresh deployment (it served {} windows, \
+                     loadgen saw {seen})",
+                    s.windows
+                );
+                std::process::exit(1);
+            }
+        }
+        // Replay the observed window compositions through a fresh
+        // in-process session: logits must be bit-identical.
+        let (w, _) = prepared_model(cfg);
+        let scfg = SessionCfg { master_seed: seed, ..SessionCfg::default() };
+        let sess = Session::start(cfg, w, scfg, MaxStrategy::Tournament);
+        let mut mismatches = 0usize;
+        for (wid, reqs) in &windows {
+            let inputs: Vec<Vec<i64>> = reqs
+                .iter()
+                .map(|(ridx, _)| synth_input(&cfg, 100 + *ridx as u64))
+                .collect();
+            let logits = sess.infer_batch(&inputs);
+            for ((ridx, c), l) in reqs.iter().zip(&logits) {
+                if &c.logits != l {
+                    mismatches += 1;
+                    eprintln!("MISMATCH: request {ridx} (window {wid})");
+                }
+            }
+        }
+        sess.shutdown();
+        if mismatches > 0 {
+            eprintln!("FAIL: {mismatches} logits mismatched the in-process replay");
+            std::process::exit(1);
+        }
+        println!("CHECK OK: all {total} logits bit-identical to the in-process replay");
+    }
+    if flags.contains_key("halt") {
+        if let Err(e) = probe.shutdown() {
+            eprintln!("warning: shutdown: {e}");
+        } else {
+            println!("deployment halted");
+        }
+    }
 }
 
 fn cmd_serve(flags: HashMap<String, String>) {
@@ -349,15 +520,21 @@ USAGE:
   repro infer  [--config tiny|base] [--seq N] [--layers L] [--threads T] [--net lan|wan|local]
   repro infer  --remote [ADDR0,ADDR1,ADDR2] [--session LABEL] [--halt]
                                              run against `repro party` processes
+  repro loadgen [--clients K] [--requests N] [--remote [ADDRS]] [--session LABEL]
+                [--check] [--halt]            K concurrent clients; --check replays
+                                             the observed windows in-process and
+                                             demands bit-identical logits
   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--conf FILE]
   repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
                [--layers L] [--threads T] [--weights-seed S] [--session LABEL]
+               [--max-batch B] [--linger MS] [--queue-cap Q] [--max-inflight I] [--prep D]
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N]
   repro help
 
-Multi-process quickstart (three terminals + a client, all defaults):
+Multi-process quickstart (three terminals + any number of clients):
   repro party --id 0 & repro party --id 1 & repro party --id 2 &
+  repro loadgen --clients 4 --requests 2 --check
   repro infer --remote --halt
 ";
 
@@ -378,6 +555,7 @@ fn main() {
     }
     match cmd {
         "infer" => cmd_infer(flags),
+        "loadgen" => cmd_loadgen(flags),
         "serve" => cmd_serve(flags),
         "party" => cmd_party(flags),
         "oracle" => cmd_oracle(flags),

@@ -55,8 +55,9 @@ impl PartyCtx {
     /// deployment — communication-free either way).
     pub fn new(id: usize, net: Net, master_seed: [u8; 16], threads: usize) -> PartyCtx {
         let mk_pair = |other: usize| RefCell::new(Prg::derive(master_seed, &pair_label(id, other)));
-        let mk_prep =
-            |other: usize| RefCell::new(Prg::derive(master_seed, &format!("prep-{}", pair_label(id, other))));
+        let mk_prep = |other: usize| {
+            RefCell::new(Prg::derive(master_seed, &format!("prep-{}", pair_label(id, other))))
+        };
         PartyCtx {
             id,
             net,
@@ -213,10 +214,7 @@ where
 {
     let metrics = Arc::new(Metrics::new());
     let nets = build_mesh(Arc::clone(&metrics), cfg.realtime);
-    let mut outs: Vec<Option<T>> = Vec::new();
-    for _ in 0..3 {
-        outs.push(None);
-    }
+    let mut outs: Vec<Option<T>> = (0..3).map(|_| None).collect();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (id, net) in nets.into_iter().enumerate() {

@@ -139,6 +139,7 @@ pub fn rss_matmul_full_seq(
 }
 
 /// Sequence-batched Alg. 3 with truncation (see [`rss_matmul_full_seq`]).
+#[allow(clippy::too_many_arguments)]
 pub fn rss_matmul_trc_seq(
     ctx: &PartyCtx,
     x: &Rss,

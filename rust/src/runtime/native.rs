@@ -86,6 +86,7 @@ pub fn relu_quant(x: &[i64]) -> Vec<i64> {
 }
 
 /// Quantized LayerNorm over each length-`n` row (ref.layernorm_quant).
+#[allow(clippy::too_many_arguments)]
 pub fn layernorm_quant(
     r16: &[i64],
     rows: usize,

@@ -21,6 +21,7 @@
 use std::io::BufReader;
 use std::io::{BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -47,10 +48,16 @@ pub const HANDSHAKE_READ_TIMEOUT: Duration = Duration::from_secs(10);
 /// a completed handshake: accept errors (e.g. `ECONNABORTED` from a
 /// connection reset while queued), silent connections, wrong
 /// session/id. The party outlives every stray connection.
+///
+/// `conn_alloc` hands out this party's client connection ids: a fresh
+/// id is drawn per accept and acked back to client hellos (gaps from
+/// party/coordinator handshakes are harmless — ids only need to be
+/// unique per party process).
 pub fn accept_peer(
     listener: &TcpListener,
     session: &[u8; 16],
     own_id: u8,
+    conn_alloc: &AtomicU32,
 ) -> Option<(TcpStream, Accepted)> {
     let (mut stream, _) = match listener.accept() {
         Ok(conn) => conn,
@@ -60,8 +67,9 @@ pub fn accept_peer(
             return None;
         }
     };
+    let conn = conn_alloc.fetch_add(1, Ordering::Relaxed);
     let _ = stream.set_read_timeout(Some(HANDSHAKE_READ_TIMEOUT));
-    match wire::accept_handshake(&mut stream, session, own_id) {
+    match wire::accept_handshake(&mut stream, session, own_id, conn) {
         Ok(accepted) => {
             let _ = stream.set_read_timeout(None);
             Some((stream, accepted))
@@ -148,15 +156,23 @@ pub fn dial_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
 }
 
 /// An established TCP mesh endpoint: the party's channels plus the
-/// still-open listener (for serving clients) and any client connections
-/// that raced the mesh handshake.
+/// still-open listener (for serving clients) and any client or
+/// control-link connections that raced the mesh handshake.
 pub struct TcpMesh {
     /// Channels to the two peers.
     pub chans: PartyChannels,
     /// The party's listener, still accepting (clients connect here).
     pub listener: TcpListener,
-    /// Client connections accepted (and acked) during mesh setup.
-    pub parked_clients: Vec<TcpStream>,
+    /// Client connections accepted (and acked) during mesh setup, with
+    /// the connection id each was assigned.
+    pub parked_clients: Vec<(TcpStream, u32)>,
+    /// Claimed control links that raced the mesh handshake, with the
+    /// control token each presented (the serving loop verifies tokens
+    /// before honoring any of them).
+    pub parked_coords: Vec<(TcpStream, [u8; 16])>,
+    /// The connection-id allocator the serving accept loop continues
+    /// from (parked clients already consumed ids from it).
+    pub conn_alloc: Arc<AtomicU32>,
 }
 
 /// TCP backend configuration for ONE party process.
@@ -166,6 +182,7 @@ pub struct TcpTransport {
     /// `peers[p]` = party `p`'s listen address (used when `p < id`).
     peers: [Option<String>; 3],
     session: [u8; 16],
+    conn_alloc: Arc<AtomicU32>,
     /// Per-dial connect budget (see [`DIAL_TIMEOUT`]).
     pub dial_timeout: Duration,
 }
@@ -181,17 +198,26 @@ impl TcpTransport {
         session: [u8; 16],
     ) -> TcpTransport {
         assert!(id < 3, "party id out of range");
-        TcpTransport { id, listener, peers, session, dial_timeout: DIAL_TIMEOUT }
+        TcpTransport {
+            id,
+            listener,
+            peers,
+            session,
+            conn_alloc: Arc::new(AtomicU32::new(1)),
+            dial_timeout: DIAL_TIMEOUT,
+        }
     }
 
     /// Establish the full mesh: dial every lower-id peer (with retry +
     /// handshake), accept every higher-id peer (verifying its
-    /// handshake), and park any clients that connected early. Handshake
-    /// violations — wrong party id, wrong session, version skew — are
-    /// hard errors on both sides.
+    /// handshake), and park any clients (or an early control link) that
+    /// connected before the mesh was up. Handshake violations — wrong
+    /// party id, wrong session, version skew — are hard errors on both
+    /// sides.
     pub fn establish(self) -> Result<TcpMesh> {
         let mut chans: PartyChannels = [None, None, None];
         let mut parked = Vec::new();
+        let mut parked_coords = Vec::new();
         for p in 0..self.id {
             let addr = self.peers[p]
                 .as_deref()
@@ -213,7 +239,8 @@ impl TcpTransport {
             // for the real peers — the same tolerance the serving loop
             // applies. A *misdialed* peer still fails loudly on its own
             // side (it never gets an ack).
-            let Some((stream, accepted)) = accept_peer(&self.listener, &self.session, self.id as u8)
+            let Some((stream, accepted)) =
+                accept_peer(&self.listener, &self.session, self.id as u8, &self.conn_alloc)
             else {
                 continue;
             };
@@ -228,10 +255,17 @@ impl TcpTransport {
                         None => bail!("party {}: duplicate connection from party {from}", self.id),
                     }
                 }
-                Accepted::Client => parked.push(stream),
+                Accepted::Client(conn) => parked.push((stream, conn)),
+                Accepted::Coordinator { token } => parked_coords.push((stream, token)),
             }
         }
-        Ok(TcpMesh { chans, listener: self.listener, parked_clients: parked })
+        Ok(TcpMesh {
+            chans,
+            listener: self.listener,
+            parked_clients: parked,
+            parked_coords,
+            conn_alloc: self.conn_alloc,
+        })
     }
 }
 

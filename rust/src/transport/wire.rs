@@ -1,5 +1,6 @@
-//! Framed wire protocol for the TCP transport backend and the thin
-//! client protocol (DESIGN.md §Transport backends).
+//! Framed wire protocol for the TCP transport backend, the concurrent
+//! client protocol, and the P1-led serving control plane
+//! (DESIGN.md §Transport backends, §Concurrent serving).
 //!
 //! Every message on a socket is one *frame*:
 //!
@@ -11,17 +12,27 @@
 //! corrupt or adversarial length prefix fails loudly instead of
 //! allocating gigabytes. The tag is either a protocol [`Phase`] (party
 //! traffic: the receiver checks that the sender's phase matches its own,
-//! which SPMD protocol code guarantees) or one of the handshake/client
-//! control tags below.
+//! which SPMD protocol code guarantees) or one of the handshake, client,
+//! or control-plane tags below.
 //!
 //! Connection establishment is a one-round handshake: the dialer sends
-//! [`Tag::PartyHello`] (or [`Tag::ClientHello`]) carrying the wire
-//! version, the 16-byte session id (the master seed fingerprint all
-//! parties share), and — for parties — the claimed `from` id and the
-//! intended `to` id. The acceptor verifies version, session, and that it
-//! really is party `to`, then answers [`Tag::HelloAck`] with its own id;
-//! a mismatch is a hard [`Error`], so a process wired to the wrong
-//! address or session fails at connect time, not mid-protocol.
+//! [`Tag::PartyHello`] (mesh links), [`Tag::ClientHello`] (serving
+//! clients) or [`Tag::CoordHello`] (P1's serving control link) carrying
+//! the wire version and the 16-byte session id — control links
+//! additionally present a control token derived from the deployment
+//! master seed, so a mere session-id holder cannot impersonate the
+//! control plane. The acceptor verifies version, session, and — for
+//! parties — that it really is the intended `to` party, then answers
+//! [`Tag::HelloAck`] with its own id plus the connection id it
+//! assigned. A mismatch is a hard [`Error`], so a process wired to the
+//! wrong address or session fails at connect time, not mid-protocol.
+//!
+//! Serving requests are identified by a 64-bit *request id*
+//! ([`request_id`]): the P1-assigned connection id in the high 32 bits
+//! and the client's per-connection sequence number in the low 32 bits.
+//! P1 validates ownership (a connection may only submit ids in its own
+//! namespace); P0/P2 use the id's connection half purely to route
+//! completion acks to the right [`Tag::Bind`]-registered connection.
 
 use std::io::{Read, Write};
 
@@ -29,14 +40,16 @@ use crate::core::error::{bail, Context, Error, Result};
 use crate::transport::metrics::Phase;
 
 /// Wire protocol version; bumped on any incompatible framing change.
-pub const WIRE_VERSION: u8 = 1;
+/// Version 2 introduced per-request frames, connection ids in hello
+/// acks, and the serving control plane (manifests).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Refuse frames whose length prefix exceeds this (1 GiB): a corrupt or
 /// hostile prefix must not drive allocation.
 pub const MAX_FRAME: u32 = 1 << 30;
 
-/// Frame tags: protocol phases for party traffic, plus handshake and
-/// client-protocol control frames.
+/// Frame tags: protocol phases for party traffic, handshake frames,
+/// client-protocol frames, and the P1 → P0/P2 serving control plane.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Tag {
     /// Party traffic metered under [`Phase::Setup`].
@@ -47,15 +60,17 @@ pub enum Tag {
     Online,
     /// Dialer → acceptor party handshake (version, session, from, to).
     PartyHello,
-    /// Acceptor → dialer handshake reply (version, session, own id).
+    /// Acceptor → dialer handshake reply (version, session, own id,
+    /// assigned connection id).
     HelloAck,
     /// Client → party handshake (version, session).
     ClientHello,
-    /// Client → party: run one batched inference window.
+    /// Client → P1: submit ONE inference request (seq, quantized input).
     InferRequest,
-    /// P1 → client: the revealed logits of a window.
+    /// P1 → client: the revealed logits of one completed request.
     Logits,
-    /// Party → client: window complete (the quiesce ack).
+    /// Party → client: request complete (payload = id + window report),
+    /// or — with an empty payload — a shutdown/drain ack.
     Done,
     /// Client → party: send back your local metrics snapshot.
     MetricsReq,
@@ -63,11 +78,31 @@ pub enum Tag {
     ///
     /// [`MetricsSnapshot`]: crate::transport::MetricsSnapshot
     MetricsSnap,
-    /// Client → party: stop serving and exit the process.
+    /// Client → party: drain outstanding windows, then exit the process.
     Shutdown,
-    /// Party → client: the request was refused (payload = UTF-8 reason).
-    /// The party stays up and keeps serving.
+    /// Party → client: connection-level protocol error (payload = UTF-8
+    /// reason). The party stays up; the connection is dropped.
     Error,
+    /// P1 → P0/P2 control-link handshake (version, session, from id).
+    CoordHello,
+    /// P1 → P0/P2: evaluate one batch window (wid + request ids).
+    Manifest,
+    /// P1 → P0/P2: generate one correlation tape for a future window.
+    Prep,
+    /// P1 → P0/P2: the deployment is draining; exit after this frame.
+    Exit,
+    /// Client → P0/P2: route completions for a P1 connection-id
+    /// namespace to this connection.
+    Bind,
+    /// P0/P2 → client: [`Tag::Bind`] accepted.
+    BindAck,
+    /// P1 → client: one request was refused (payload = id + UTF-8
+    /// reason). The connection stays usable; other requests proceed.
+    Refused,
+    /// Client → party: send back your serving counters.
+    StatsReq,
+    /// Party → client: serialized [`ServeStats`] reply.
+    Stats,
 }
 
 impl Tag {
@@ -87,6 +122,15 @@ impl Tag {
             Tag::MetricsSnap => 10,
             Tag::Shutdown => 11,
             Tag::Error => 12,
+            Tag::CoordHello => 13,
+            Tag::Manifest => 14,
+            Tag::Prep => 15,
+            Tag::Exit => 16,
+            Tag::Bind => 17,
+            Tag::BindAck => 18,
+            Tag::Refused => 19,
+            Tag::StatsReq => 20,
+            Tag::Stats => 21,
         }
     }
 
@@ -106,6 +150,15 @@ impl Tag {
             10 => Tag::MetricsSnap,
             11 => Tag::Shutdown,
             12 => Tag::Error,
+            13 => Tag::CoordHello,
+            14 => Tag::Manifest,
+            15 => Tag::Prep,
+            16 => Tag::Exit,
+            17 => Tag::Bind,
+            18 => Tag::BindAck,
+            19 => Tag::Refused,
+            20 => Tag::StatsReq,
+            21 => Tag::Stats,
             other => bail!("unknown wire tag {other}"),
         })
     }
@@ -157,6 +210,17 @@ pub fn read_frame(r: &mut impl Read) -> Result<(Tag, Vec<u8>)> {
     Ok((tag, payload))
 }
 
+/// The 64-bit request id: the P1-assigned connection id in the high 32
+/// bits, the client's per-connection sequence number in the low 32.
+pub fn request_id(conn: u32, seq: u32) -> u64 {
+    ((conn as u64) << 32) | seq as u64
+}
+
+/// The connection-id namespace a request id belongs to.
+pub fn conn_of(id: u64) -> u32 {
+    (id >> 32) as u32
+}
+
 /// The party-to-party handshake contents.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub struct PartyHello {
@@ -190,21 +254,23 @@ impl PartyHello {
     }
 }
 
-fn ack_payload(session: &[u8; 16], id: u8) -> Vec<u8> {
+fn ack_payload(session: &[u8; 16], id: u8, conn: u32) -> Vec<u8> {
     let mut out = vec![WIRE_VERSION];
     out.extend_from_slice(session);
     out.push(id);
+    out.extend_from_slice(&conn.to_le_bytes());
     out
 }
 
-fn decode_ack(payload: &[u8], session: &[u8; 16]) -> Result<u8> {
-    if payload.len() != 18 || payload[0] != WIRE_VERSION {
+fn decode_ack(payload: &[u8], session: &[u8; 16]) -> Result<(u8, u32)> {
+    if payload.len() != 22 || payload[0] != WIRE_VERSION {
         bail!("malformed hello ack");
     }
     if &payload[1..17] != session {
         bail!("hello ack: session id mismatch");
     }
-    Ok(payload[17])
+    let conn = u32::from_le_bytes(payload[18..22].try_into().unwrap());
+    Ok((payload[17], conn))
 }
 
 /// Dialer side of the party handshake: send a [`PartyHello`], wait for
@@ -216,7 +282,7 @@ pub fn dial_handshake(stream: &mut (impl Read + Write), hello: PartyHello) -> Re
     if tag != Tag::HelloAck {
         bail!("expected HelloAck, got {tag:?}");
     }
-    let acked = decode_ack(&payload, &hello.session)?;
+    let (acked, _) = decode_ack(&payload, &hello.session)?;
     if acked != hello.to {
         bail!("dialed party {} but party {acked} answered", hello.to);
     }
@@ -227,18 +293,32 @@ pub fn dial_handshake(stream: &mut (impl Read + Write), hello: PartyHello) -> Re
 pub enum Accepted {
     /// A peer party's mesh link (its id).
     Party(u8),
-    /// A serving client.
-    Client,
+    /// A serving client; carries the connection id the acceptor assigned
+    /// (and acked back to the client).
+    Client(u32),
+    /// A claimed serving control link (manifests, prep directives,
+    /// exit). Carries the dialer's control token — the CALLER must
+    /// verify it against `remote::control_token` before honoring the
+    /// link: the token is derived from the deployment's master seed,
+    /// which the session id alone does not reveal, so a client cannot
+    /// impersonate P1's control plane.
+    Coordinator {
+        /// The control token the dialer presented.
+        token: [u8; 16],
+    },
 }
 
 /// Acceptor side of the handshake: read the hello frame, verify session
-/// and that the dialer addressed *this* party (`own_id`), and ack. A
-/// wrong session, wrong `to` id, or version skew is a hard error (the
-/// acceptor does not ack, so the dialer errors symmetrically).
+/// (and, for parties, that the dialer addressed *this* party), then ack
+/// with this party's id and — for clients — the freshly assigned
+/// connection id `conn`. A wrong session, wrong `to` id, or version
+/// skew is a hard error (the acceptor does not ack, so the dialer
+/// errors symmetrically).
 pub fn accept_handshake(
     stream: &mut (impl Read + Write),
     session: &[u8; 16],
     own_id: u8,
+    conn: u32,
 ) -> Result<Accepted> {
     let (tag, payload) = read_frame(stream)?;
     match tag {
@@ -257,7 +337,7 @@ pub fn accept_handshake(
             if hello.from as usize >= 3 || hello.from == own_id {
                 bail!("invalid peer party id {}", hello.from);
             }
-            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id))?;
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, 0))?;
             stream.flush()?;
             Ok(Accepted::Party(hello.from))
         }
@@ -268,17 +348,35 @@ pub fn accept_handshake(
             if &payload[1..17] != session {
                 bail!("client connected with a different session id");
             }
-            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id))?;
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, conn))?;
             stream.flush()?;
-            Ok(Accepted::Client)
+            Ok(Accepted::Client(conn))
+        }
+        Tag::CoordHello => {
+            if payload.len() != 34 || payload[0] != WIRE_VERSION {
+                bail!("malformed coordinator hello");
+            }
+            if &payload[1..17] != session {
+                bail!("coordinator connected with a different session id");
+            }
+            if payload[17] != 1 {
+                bail!("control link must come from party 1, not party {}", payload[17]);
+            }
+            let mut token = [0u8; 16];
+            token.copy_from_slice(&payload[18..34]);
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, 0))?;
+            stream.flush()?;
+            Ok(Accepted::Coordinator { token })
         }
         other => Err(Error::msg(format!("expected a hello frame, got {other:?}"))),
     }
 }
 
 /// Client side of the client handshake: returns the party id that
-/// answered (the client checks it against the id it meant to dial).
-pub fn client_handshake(stream: &mut (impl Read + Write), session: &[u8; 16]) -> Result<u8> {
+/// answered plus the connection id it assigned (the client checks the
+/// id against the party it meant to dial; P1's connection id is the
+/// request-id namespace for this connection).
+pub fn client_handshake(stream: &mut (impl Read + Write), session: &[u8; 16]) -> Result<(u8, u32)> {
     let mut payload = vec![WIRE_VERSION];
     payload.extend_from_slice(session);
     write_frame(stream, Tag::ClientHello, &payload)?;
@@ -290,103 +388,291 @@ pub fn client_handshake(stream: &mut (impl Read + Write), session: &[u8; 16]) ->
     decode_ack(&payload, session)
 }
 
+/// P1 side of the control-link handshake: presents the control `token`
+/// (proof of holding the deployment master seed) and returns the party
+/// id that answered (P1 checks it against the party it meant to dial).
+pub fn coord_handshake(
+    stream: &mut (impl Read + Write),
+    session: &[u8; 16],
+    token: &[u8; 16],
+) -> Result<u8> {
+    let mut payload = vec![WIRE_VERSION];
+    payload.extend_from_slice(session);
+    payload.push(1);
+    payload.extend_from_slice(token);
+    write_frame(stream, Tag::CoordHello, &payload)?;
+    stream.flush()?;
+    let (tag, payload) = read_frame(stream)?;
+    if tag != Tag::HelloAck {
+        bail!("expected HelloAck, got {tag:?}");
+    }
+    Ok(decode_ack(&payload, session)?.0)
+}
+
 // ---- client protocol payload encodings (all little-endian) ----
 
-/// Encode an [`Tag::InferRequest`] payload: the public window size and
-/// per-request length (sent to every party so shape validation is
-/// symmetric) plus — only toward P1, the data owner — the flattened
-/// quantized inputs.
-pub fn encode_infer_request(batch: usize, per_len: usize, inputs: Option<&[Vec<i64>]>) -> Vec<u8> {
-    let n = inputs.map(|v| v.len()).unwrap_or(0);
-    let mut out = Vec::with_capacity(12 + n * per_len * 8);
-    out.extend_from_slice(&(batch as u32).to_le_bytes());
-    out.extend_from_slice(&(n as u32).to_le_bytes());
-    out.extend_from_slice(&(per_len as u32).to_le_bytes());
-    if let Some(inputs) = inputs {
-        for x in inputs {
-            debug_assert_eq!(x.len(), per_len);
-            for &v in x {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
+/// Encode a [`Tag::InferRequest`] payload: the per-connection sequence
+/// number plus ONE request's flattened quantized input (sent only to
+/// P1, the data owner).
+pub fn encode_infer_request(seq: u32, input: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + input.len() * 8);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(input.len() as u32).to_le_bytes());
+    for &v in input {
+        out.extend_from_slice(&v.to_le_bytes());
     }
     out
 }
 
-/// Decode an [`Tag::InferRequest`] payload into
-/// `(batch, per_len, inputs)`; `inputs` is `None` when the request
-/// carried no data rows (P0/P2). Hostile header fields are an
-/// [`Error`], never an overflow or out-of-bounds index.
-pub fn decode_infer_request(payload: &[u8]) -> Result<(usize, usize, Option<Vec<Vec<i64>>>)> {
-    if payload.len() < 12 {
+/// Decode a [`Tag::InferRequest`] payload into `(seq, input)`. Hostile
+/// header fields are an [`Error`], never an overflow or out-of-bounds
+/// index.
+pub fn decode_infer_request(payload: &[u8]) -> Result<(u32, Vec<i64>)> {
+    if payload.len() < 8 {
         bail!("infer request: truncated header");
     }
-    let rd32 = |o: usize| u32::from_le_bytes(payload[o..o + 4].try_into().unwrap()) as usize;
-    let (batch, n, per_len) = (rd32(0), rd32(4), rd32(8));
-    let body = n
-        .checked_mul(per_len)
-        .and_then(|v| v.checked_mul(8))
-        .filter(|&v| v == payload.len() - 12);
-    if body.is_none() {
+    let seq = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    let per_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let body_ok = per_len
+        .checked_mul(8)
+        .map(|v| v == payload.len() - 8)
+        .unwrap_or(false);
+    if !body_ok {
         bail!(
-            "infer request: body is {} bytes, expected {n} x {per_len} values",
-            payload.len() - 12,
+            "infer request: body is {} bytes, expected {per_len} values",
+            payload.len() - 8,
         );
     }
-    if n == 0 {
-        return Ok((batch, per_len, None));
-    }
-    let mut inputs = Vec::with_capacity(n);
-    for i in 0..n {
-        let base = 12 + i * per_len * 8;
-        inputs.push(
-            payload[base..base + per_len * 8]
-                .chunks_exact(8)
-                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
-                .collect(),
-        );
-    }
-    Ok((batch, per_len, Some(inputs)))
+    let input = payload[8..]
+        .chunks_exact(8)
+        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((seq, input))
 }
 
-/// Encode a [`Tag::Logits`] payload: `n` logit vectors of equal length.
-pub fn encode_logits(logits: &[Vec<i64>]) -> Vec<u8> {
-    let per_len = logits.first().map(|l| l.len()).unwrap_or(0);
-    let mut out = Vec::with_capacity(8 + logits.len() * per_len * 8);
+/// Encode a [`Tag::Logits`] payload: the request id plus its revealed
+/// logit vector.
+pub fn encode_logits(id: u64, logits: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + logits.len() * 8);
+    out.extend_from_slice(&id.to_le_bytes());
     out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
-    out.extend_from_slice(&(per_len as u32).to_le_bytes());
-    for l in logits {
-        debug_assert_eq!(l.len(), per_len);
-        for &v in l {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
+    for &v in logits {
+        out.extend_from_slice(&v.to_le_bytes());
     }
     out
 }
 
-/// Decode a [`Tag::Logits`] payload.
-pub fn decode_logits(payload: &[u8]) -> Result<Vec<Vec<i64>>> {
-    if payload.len() < 8 {
+/// Decode a [`Tag::Logits`] payload into `(id, logits)`.
+pub fn decode_logits(payload: &[u8]) -> Result<(u64, Vec<i64>)> {
+    if payload.len() < 12 {
         bail!("logits: truncated header");
     }
-    let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    let per_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
-    let body = n
-        .checked_mul(per_len)
-        .and_then(|v| v.checked_mul(8))
-        .filter(|&v| v == payload.len() - 8);
-    if body.is_none() {
+    let id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let n = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    let body_ok = n.checked_mul(8).map(|v| v == payload.len() - 12).unwrap_or(false);
+    if !body_ok {
         bail!("logits: bad body length");
     }
-    Ok((0..n)
-        .map(|i| {
-            let base = 8 + i * per_len * 8;
-            payload[base..base + per_len * 8]
-                .chunks_exact(8)
-                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
-                .collect()
+    let logits = payload[12..]
+        .chunks_exact(8)
+        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((id, logits))
+}
+
+/// Per-window serving metrics a party attaches to each request's
+/// [`Tag::Done`] ack: what THIS party measured for the window the
+/// request rode in. Bytes are this party's sends only — summing the
+/// three parties' reports gives the window total (sends are counted at
+/// the sender), and the per-request amortized share is the total
+/// divided by `batch`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct WindowReport {
+    /// Deployment-wide window counter (P1 cut order, starting at 0).
+    pub wid: u64,
+    /// This request's row position inside the window.
+    pub pos: u32,
+    /// How many requests shared the window (1 = unbatched).
+    pub batch: u32,
+    /// This party's online-phase blocking receives during the window —
+    /// constant in `batch`, which is the amortization being sold.
+    pub online_rounds: u64,
+    /// Online-phase bytes this party sent during the window.
+    pub online_bytes: u64,
+    /// Offline-phase bytes this party sent during the window (0 for a
+    /// window served from a warm correlation pool).
+    pub offline_bytes: u64,
+    /// Wall-clock nanoseconds of the window's MPC pass at this party.
+    pub wall_ns: u64,
+}
+
+impl WindowReport {
+    const LEN: usize = 48;
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.wid.to_le_bytes());
+        out.extend_from_slice(&self.pos.to_le_bytes());
+        out.extend_from_slice(&self.batch.to_le_bytes());
+        out.extend_from_slice(&self.online_rounds.to_le_bytes());
+        out.extend_from_slice(&self.online_bytes.to_le_bytes());
+        out.extend_from_slice(&self.offline_bytes.to_le_bytes());
+        out.extend_from_slice(&self.wall_ns.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Result<WindowReport> {
+        if b.len() != Self::LEN {
+            bail!("window report: bad length {}", b.len());
+        }
+        let u64_at = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        let u32_at = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        Ok(WindowReport {
+            wid: u64_at(0),
+            pos: u32_at(8),
+            batch: u32_at(12),
+            online_rounds: u64_at(16),
+            online_bytes: u64_at(24),
+            offline_bytes: u64_at(32),
+            wall_ns: u64_at(40),
         })
-        .collect())
+    }
+}
+
+/// Encode a [`Tag::Done`] payload: the request id plus the serving
+/// party's [`WindowReport`] for the window it rode in.
+pub fn encode_done(id: u64, report: &WindowReport) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + WindowReport::LEN);
+    out.extend_from_slice(&id.to_le_bytes());
+    report.encode_into(&mut out);
+    out
+}
+
+/// Decode a [`Tag::Done`] payload into `(id, report)`.
+pub fn decode_done(payload: &[u8]) -> Result<(u64, WindowReport)> {
+    if payload.len() != 8 + WindowReport::LEN {
+        bail!("done: bad length {}", payload.len());
+    }
+    let id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    Ok((id, WindowReport::decode(&payload[8..])?))
+}
+
+/// Encode a [`Tag::Refused`] payload: the refused request id plus a
+/// human-readable reason.
+pub fn encode_refused(id: u64, reason: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + reason.len());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(reason.as_bytes());
+    out
+}
+
+/// Decode a [`Tag::Refused`] payload into `(id, reason)`.
+pub fn decode_refused(payload: &[u8]) -> Result<(u64, String)> {
+    if payload.len() < 8 {
+        bail!("refused: truncated");
+    }
+    let id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    Ok((id, String::from_utf8_lossy(&payload[8..]).into_owned()))
+}
+
+/// Encode a [`Tag::Manifest`] payload: the window id plus the request
+/// ids composing the window, in row order.
+pub fn encode_manifest(wid: u64, ids: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + ids.len() * 8);
+    out.extend_from_slice(&wid.to_le_bytes());
+    out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+    for &id in ids {
+        out.extend_from_slice(&id.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a [`Tag::Manifest`] payload into `(wid, ids)`; an empty or
+/// length-inconsistent manifest is an [`Error`].
+pub fn decode_manifest(payload: &[u8]) -> Result<(u64, Vec<u64>)> {
+    if payload.len() < 12 {
+        bail!("manifest: truncated header");
+    }
+    let wid = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let n = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    let body_ok = n.checked_mul(8).map(|v| v == payload.len() - 12).unwrap_or(false);
+    if !body_ok || n == 0 {
+        bail!("manifest: bad body ({} ids, {} bytes)", n, payload.len() - 12);
+    }
+    let ids = payload[12..]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((wid, ids))
+}
+
+/// Encode a [`Tag::Prep`] payload: the window size to produce a
+/// correlation tape for.
+pub fn encode_prep(batch: u32) -> Vec<u8> {
+    batch.to_le_bytes().to_vec()
+}
+
+/// Decode a [`Tag::Prep`] payload.
+pub fn decode_prep(payload: &[u8]) -> Result<u32> {
+    if payload.len() != 4 {
+        bail!("prep directive: bad length {}", payload.len());
+    }
+    Ok(u32::from_le_bytes(payload.try_into().unwrap()))
+}
+
+/// Encode a [`Tag::Bind`] payload: the P1 connection-id namespace whose
+/// completions should route to the sending connection.
+pub fn encode_bind(p1_conn: u32) -> Vec<u8> {
+    p1_conn.to_le_bytes().to_vec()
+}
+
+/// Decode a [`Tag::Bind`] payload.
+pub fn decode_bind(payload: &[u8]) -> Result<u32> {
+    if payload.len() != 4 {
+        bail!("bind: bad length {}", payload.len());
+    }
+    Ok(u32::from_le_bytes(payload.try_into().unwrap()))
+}
+
+/// A party's serving counters (the [`Tag::Stats`] payload): how much
+/// traffic its wire-path batcher has absorbed.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct ServeStats {
+    /// Batch windows evaluated (manifest count at P0/P2).
+    pub windows: u64,
+    /// Requests completed across all windows.
+    pub served: u64,
+    /// Requests refused at admission (backpressure, bad shape; P1 only).
+    pub refused: u64,
+    /// Ahead-of-time correlation tapes produced.
+    pub preps: u64,
+    /// Requests admitted but not yet served (P1 only; queue depth at
+    /// snapshot time).
+    pub queued: u64,
+}
+
+impl ServeStats {
+    /// Serialize for the wire (five u64 LE).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(40);
+        for v in [self.windows, self.served, self.refused, self.preps, self.queued] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`to_bytes`](ServeStats::to_bytes).
+    pub fn from_bytes(payload: &[u8]) -> Result<ServeStats> {
+        if payload.len() != 40 {
+            bail!("stats: bad length {}", payload.len());
+        }
+        let at = |o: usize| u64::from_le_bytes(payload[o..o + 8].try_into().unwrap());
+        Ok(ServeStats {
+            windows: at(0),
+            served: at(8),
+            refused: at(16),
+            preps: at(24),
+            queued: at(32),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +687,7 @@ mod tests {
             (Tag::Setup, Vec::new()),
             (Tag::Logits, vec![0u8; 1000]),
             (Tag::Shutdown, Vec::new()),
+            (Tag::Manifest, vec![9u8; 20]),
         ] {
             let mut buf = Vec::new();
             write_frame(&mut buf, tag, &payload).unwrap();
@@ -426,42 +713,96 @@ mod tests {
 
     #[test]
     fn tag_bytes_roundtrip() {
-        for b in 0..13u8 {
+        for b in 0..22u8 {
             assert_eq!(Tag::from_u8(b).unwrap().as_u8(), b);
         }
-        assert!(Tag::from_u8(13).is_err());
+        assert!(Tag::from_u8(22).is_err());
+    }
+
+    #[test]
+    fn request_id_packs_conn_and_seq() {
+        let id = request_id(7, 42);
+        assert_eq!(conn_of(id), 7);
+        assert_eq!(id & 0xffff_ffff, 42);
+        assert_eq!(conn_of(request_id(u32::MAX, u32::MAX)), u32::MAX);
     }
 
     #[test]
     fn infer_request_roundtrip() {
-        let inputs = vec![vec![1i64, -2, 3], vec![4, 5, -6]];
-        let enc = encode_infer_request(2, 3, Some(&inputs));
-        let (batch, per_len, got) = decode_infer_request(&enc).unwrap();
-        assert_eq!((batch, per_len, got), (2, 3, Some(inputs)));
-        let enc = encode_infer_request(3, 7, None);
-        assert_eq!(decode_infer_request(&enc).unwrap(), (3, 7, None));
-        assert!(decode_infer_request(&enc[..8]).is_err());
+        let input = vec![1i64, -2, 3];
+        let enc = encode_infer_request(9, &input);
+        assert_eq!(decode_infer_request(&enc).unwrap(), (9, input));
+        assert!(decode_infer_request(&enc[..6]).is_err());
+        // Length-inconsistent header is an error, not a bad slice.
+        let mut bad = encode_infer_request(9, &[1, 2]);
+        bad.truncate(bad.len() - 8);
+        assert!(decode_infer_request(&bad).is_err());
     }
 
     #[test]
-    fn hostile_infer_request_header_is_an_error_not_a_panic() {
-        // n * per_len * 8 wraps to 0 in 64-bit arithmetic: 2^31 * 2^31 * 8
-        // = 2^65. The checked math must refuse it instead of indexing.
+    fn hostile_headers_are_errors_not_panics() {
+        // per_len * 8 wrapping must be refused by checked math.
         let mut payload = Vec::new();
-        payload.extend_from_slice(&1u32.to_le_bytes()); // batch
-        payload.extend_from_slice(&(1u32 << 31).to_le_bytes()); // n
-        payload.extend_from_slice(&(1u32 << 31).to_le_bytes()); // per_len
+        payload.extend_from_slice(&1u32.to_le_bytes()); // seq
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // per_len
         assert!(decode_infer_request(&payload).is_err());
         let mut logits = Vec::new();
-        logits.extend_from_slice(&(1u32 << 31).to_le_bytes());
-        logits.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        logits.extend_from_slice(&7u64.to_le_bytes());
+        logits.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_logits(&logits).is_err());
+        let mut manifest = Vec::new();
+        manifest.extend_from_slice(&0u64.to_le_bytes());
+        manifest.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_manifest(&manifest).is_err());
     }
 
     #[test]
     fn logits_roundtrip() {
-        let logits = vec![vec![7i64, -9], vec![0, 1]];
-        assert_eq!(decode_logits(&encode_logits(&logits)).unwrap(), logits);
-        assert_eq!(decode_logits(&encode_logits(&[])).unwrap(), Vec::<Vec<i64>>::new());
+        let logits = vec![7i64, -9, 0, 1];
+        let enc = encode_logits(request_id(3, 5), &logits);
+        assert_eq!(decode_logits(&enc).unwrap(), (request_id(3, 5), logits));
+        assert_eq!(decode_logits(&encode_logits(1, &[])).unwrap(), (1, Vec::new()));
+    }
+
+    #[test]
+    fn done_report_roundtrip() {
+        let report = WindowReport {
+            wid: 3,
+            pos: 1,
+            batch: 4,
+            online_rounds: 110,
+            online_bytes: 123_456,
+            offline_bytes: 0,
+            wall_ns: 9_999,
+        };
+        let enc = encode_done(request_id(2, 8), &report);
+        assert_eq!(decode_done(&enc).unwrap(), (request_id(2, 8), report));
+        assert!(decode_done(&enc[..10]).is_err());
+    }
+
+    #[test]
+    fn refused_roundtrip() {
+        let enc = encode_refused(77, "queue full");
+        assert_eq!(decode_refused(&enc).unwrap(), (77, "queue full".to_string()));
+        assert!(decode_refused(&enc[..4]).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let ids = vec![request_id(1, 0), request_id(2, 0), request_id(1, 1)];
+        let enc = encode_manifest(5, &ids);
+        assert_eq!(decode_manifest(&enc).unwrap(), (5, ids));
+        // empty manifests are refused
+        assert!(decode_manifest(&encode_manifest(5, &[])).is_err());
+    }
+
+    #[test]
+    fn prep_bind_stats_roundtrip() {
+        assert_eq!(decode_prep(&encode_prep(8)).unwrap(), 8);
+        assert!(decode_prep(&[1, 2]).is_err());
+        assert_eq!(decode_bind(&encode_bind(12)).unwrap(), 12);
+        let stats = ServeStats { windows: 2, served: 7, refused: 1, preps: 3, queued: 0 };
+        assert_eq!(ServeStats::from_bytes(&stats.to_bytes()).unwrap(), stats);
+        assert!(ServeStats::from_bytes(&[0u8; 39]).is_err());
     }
 }

@@ -1,0 +1,281 @@
+//! Concurrent multi-client serving over TCP
+//! (DESIGN.md §Concurrent serving): the wire-path admission queue +
+//! cross-client dynamic batcher must fold simultaneous clients into
+//! shared MPC windows
+//! WITHOUT changing a single bit of the protocol — logits and the
+//! per-link/per-phase meter must equal an in-process session evaluating
+//! the same window compositions — while backpressure and client
+//! disconnects stay strictly local to the affected request.
+
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use ppq_bert::bench_harness::prepared_model;
+use ppq_bert::coordinator::remote::{
+    run_party, session_id, Completed, PartyOpts, RemoteClient, ServeOpts,
+};
+use ppq_bert::coordinator::Session;
+use ppq_bert::core::error::Result;
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::weights::synth_input;
+use ppq_bert::party::SessionCfg;
+use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::transport::Phase;
+
+/// Spawn a full 3-party deployment (real loopback sockets, one thread
+/// per party process body) with the given serving knobs.
+fn spawn_deployment(
+    cfg: BertConfig,
+    serve: ServeOpts,
+) -> ([String; 3], [u8; 16], Vec<JoinHandle<Result<()>>>) {
+    let listeners: Vec<TcpListener> =
+        (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: [String; 3] = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect::<Vec<_>>()
+        .try_into()
+        .unwrap();
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+    let mut handles = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let mut opts = PartyOpts::new(id, cfg);
+        opts.serve = serve;
+        for p in 0..3 {
+            if p != id {
+                opts.peers[p] = Some(addrs[p].clone());
+            }
+        }
+        handles.push(std::thread::spawn(move || run_party(listener, opts)));
+    }
+    (addrs, session, handles)
+}
+
+/// THE acceptance pin: 4 concurrent loopback-TCP clients receive logits
+/// bit-identical to sequential submission of the same window through an
+/// in-process session, the party-side window count drops below 4
+/// (cross-client batching actually engaged), and the merged per-party
+/// meters equal the in-process meter per directed link and per phase.
+#[test]
+fn four_concurrent_clients_batch_into_one_window_matching_in_process() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts {
+        max_batch: 4,
+        linger: Duration::from_secs(5),
+        ..ServeOpts::default()
+    };
+    let (addrs, session, handles) = spawn_deployment(cfg, serve);
+
+    // Connect all 4 clients first (so submissions race only the linger,
+    // not the dial path), then submit simultaneously. Every client
+    // blocks in wait() while the others are still outstanding; the
+    // batcher cuts ONE window the moment the 4th request is admitted.
+    let barrier = Arc::new(Barrier::new(4));
+    let (tx, rx) = mpsc::channel();
+    let mut clients = Vec::new();
+    for k in 0..4usize {
+        let addrs = addrs.clone();
+        let barrier = Arc::clone(&barrier);
+        let tx = tx.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut client =
+                RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect");
+            barrier.wait();
+            let x = synth_input(&cfg, 200 + k as u64);
+            let id = client.submit(&x).expect("submit");
+            let done = client.wait(id).expect("wait");
+            tx.send((k, done)).unwrap();
+        }));
+    }
+    drop(tx);
+    let mut completed: Vec<(usize, Completed)> = rx.iter().collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    assert_eq!(completed.len(), 4);
+
+    // Batching actually happened: fewer windows than clients.
+    let mut probe =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("probe");
+    let stats = probe.stats(1).expect("stats");
+    assert_eq!(stats.served, 4);
+    assert!(stats.windows < 4, "expected cross-client batching, got {} windows", stats.windows);
+    assert_eq!(stats.windows, 1, "pre-connected clients under a long linger share one window");
+    for (k, c) in &completed {
+        assert_eq!(c.batch(), 4, "client {k}");
+        assert_eq!(c.wid(), 0, "client {k}");
+        // the window's amortized metrics reached every client
+        assert!(c.window_online_rounds() > 0 && c.window_online_bytes() > 0, "client {k}");
+    }
+    let merged = probe.snapshot().expect("metrics");
+
+    // Replay the window's exact composition through an in-process
+    // session: requests submitted sequentially, evaluated as one
+    // window. Logits must be BIT-identical and the meter must match.
+    completed.sort_by_key(|(_, c)| (c.wid(), c.pos()));
+    let (w, _) = prepared_model(cfg);
+    let sess = Session::start(cfg, w, SessionCfg::default(), MaxStrategy::Tournament);
+    let inputs: Vec<Vec<i64>> =
+        completed.iter().map(|(k, _)| synth_input(&cfg, 200 + *k as u64)).collect();
+    let replay = sess.infer_batch(&inputs);
+    for (i, (k, c)) in completed.iter().enumerate() {
+        assert_eq!(
+            c.logits, replay[i],
+            "client {k}: concurrent wire-path logits diverged from sequential in-process"
+        );
+    }
+    let local = sess.snapshot();
+    sess.shutdown();
+    assert_eq!(merged.bytes, local.bytes, "per-link bytes diverged from in-process");
+    assert_eq!(merged.msgs, local.msgs, "per-link messages diverged from in-process");
+    assert_eq!(merged.rounds, local.rounds, "per-party rounds diverged from in-process");
+    assert!(merged.total_bytes(Phase::Online) > 0);
+
+    probe.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party error");
+    }
+}
+
+/// Backpressure: overflowing the bounded admission queue is refused
+/// with a clean per-request `Refused` frame naming the reason; the
+/// refused request never reaches P0/P2 at all (single admission point —
+/// refusal is symmetric by construction), and the deployment — and the
+/// refused client's own connection — keep serving afterwards.
+#[test]
+fn queue_overflow_is_refused_cleanly_and_deployment_survives() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts {
+        max_batch: 8,
+        linger: Duration::from_millis(1500),
+        queue_cap: 2,
+        max_inflight: 64,
+        prep_depth: 0,
+    };
+    let (addrs, session, handles) = spawn_deployment(cfg, serve);
+    let mut client =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect");
+    let x = synth_input(&cfg, 300);
+
+    // Three rapid submissions: two fill the queue (cap 2) and linger;
+    // the third must bounce off the full queue.
+    let id1 = client.submit(&x).expect("submit 1");
+    let id2 = client.submit(&x).expect("submit 2");
+    let id3 = client.submit(&x).expect("submit 3");
+    let err = client.wait(id3).unwrap_err();
+    assert!(err.to_string().contains("queue full"), "{err}");
+
+    // The admitted window still completes for the first two...
+    let d1 = client.wait(id1).expect("wait 1");
+    let d2 = client.wait(id2).expect("wait 2");
+    assert_eq!((d1.batch(), d2.batch()), (2, 2));
+
+    // ...and the refusal stayed local to P1: P0/P2 saw exactly the one
+    // served window, nothing else.
+    let s1 = client.stats(1).expect("stats p1");
+    assert_eq!((s1.windows, s1.served, s1.refused), (1, 2, 1));
+    for p in [0usize, 2] {
+        let s = client.stats(p).expect("stats");
+        assert_eq!((s.windows, s.served, s.refused), (1, 2, 0), "party {p}");
+    }
+
+    // The same connection keeps working after its refusal.
+    let again = client.infer(&x).expect("deployment still serving after refusal");
+    assert_eq!(again.len(), cfg.n_classes);
+
+    client.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party error");
+    }
+}
+
+/// Backpressure: the per-connection in-flight cap refuses cleanly and
+/// the capacity is released once the window completes.
+#[test]
+fn per_connection_inflight_cap_refuses_cleanly() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts {
+        max_batch: 8,
+        linger: Duration::from_millis(1500),
+        queue_cap: 64,
+        max_inflight: 1,
+        prep_depth: 0,
+    };
+    let (addrs, session, handles) = spawn_deployment(cfg, serve);
+    let mut client =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect");
+    let x = synth_input(&cfg, 310);
+
+    let id1 = client.submit(&x).expect("submit 1");
+    let id2 = client.submit(&x).expect("submit 2");
+    let err = client.wait(id2).unwrap_err();
+    assert!(err.to_string().contains("in flight"), "{err}");
+    let d1 = client.wait(id1).expect("wait 1");
+    assert_eq!(d1.batch(), 1);
+
+    // In-flight budget released on completion: the next request serves.
+    let again = client.infer(&x).expect("capacity released after completion");
+    assert_eq!(again.len(), cfg.n_classes);
+
+    client.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party error");
+    }
+}
+
+/// A mid-stream client disconnect drops ONLY that client's queued
+/// requests: its window slot is reclaimed before the cut (the next
+/// window holds exactly the surviving client's work), the deployment
+/// keeps serving, and the surviving requests' logits still match an
+/// in-process window of the same composition bit-for-bit.
+#[test]
+fn client_disconnect_drops_only_its_requests() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts {
+        max_batch: 8,
+        linger: Duration::from_millis(2500),
+        queue_cap: 64,
+        max_inflight: 64,
+        prep_depth: 0,
+    };
+    let (addrs, session, handles) = spawn_deployment(cfg, serve);
+
+    // Client A submits one request, then vanishes while its window is
+    // still lingering.
+    let mut a = RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect a");
+    a.submit(&synth_input(&cfg, 400)).expect("submit a");
+    drop(a);
+    // Give the party reader threads a moment to observe the EOF.
+    std::thread::sleep(Duration::from_millis(400));
+
+    let mut b = RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect b");
+    let xb1 = synth_input(&cfg, 401);
+    let xb2 = synth_input(&cfg, 402);
+    let id1 = b.submit(&xb1).expect("submit b1");
+    let id2 = b.submit(&xb2).expect("submit b2");
+    let d1 = b.wait(id1).expect("wait b1");
+    let d2 = b.wait(id2).expect("wait b2");
+
+    // A's slot was reclaimed before the cut: the one window that ran
+    // holds exactly B's two requests.
+    assert_eq!((d1.batch(), d2.batch()), (2, 2));
+    assert_eq!(d1.wid(), 0);
+    assert_eq!((d1.pos(), d2.pos()), (0, 1));
+    let s1 = b.stats(1).expect("stats");
+    assert_eq!((s1.windows, s1.served), (1, 2));
+
+    // Bit-for-bit parity with the same composition in-process.
+    let (w, _) = prepared_model(cfg);
+    let sess = Session::start(cfg, w, SessionCfg::default(), MaxStrategy::Tournament);
+    let replay = sess.infer_batch(&[xb1, xb2]);
+    sess.shutdown();
+    assert_eq!(d1.logits, replay[0]);
+    assert_eq!(d2.logits, replay[1]);
+
+    b.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party error");
+    }
+}

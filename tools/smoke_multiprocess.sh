@@ -1,9 +1,16 @@
 #!/usr/bin/env bash
 # Multi-process deployment smoke test (CI `smoke` job / `make smoke`):
-# spawn the three `repro party` processes on localhost, run one remote
-# inference through the thin client, and diff its logits against the
-# in-process mesh result for the same model/seed/input. Exercises the
-# real process boundary the in-thread tests cannot.
+#
+# 1. Spawn three `repro party` processes, run ONE remote inference
+#    through the thin client, and diff its logits against the
+#    in-process mesh result for the same model/seed/input.
+# 2. Spawn a SECOND fresh deployment and drive it with K=4 concurrent
+#    clients (`repro loadgen --check`): the wire-path batcher must fold
+#    the clients into shared windows and every logits vector must be
+#    bit-identical to an in-process replay of the same windows.
+#
+# Exercises the real process boundary (and the real client concurrency)
+# the in-thread tests cannot.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,9 +21,6 @@ fi
 
 # Unprivileged localhost ports; override PORT_BASE if they collide.
 PORT_BASE=${PORT_BASE:-9140}
-ADDR0="127.0.0.1:$PORT_BASE"
-ADDR1="127.0.0.1:$((PORT_BASE + 1))"
-ADDR2="127.0.0.1:$((PORT_BASE + 2))"
 
 PIDS=()
 cleanup() {
@@ -26,9 +30,19 @@ cleanup() {
 }
 trap cleanup EXIT
 
-"$BIN" party --id 0 --listen "$ADDR0" --peers "$ADDR1,$ADDR2" & PIDS+=($!)
-"$BIN" party --id 1 --listen "$ADDR1" --peers "$ADDR0,$ADDR2" & PIDS+=($!)
-"$BIN" party --id 2 --listen "$ADDR2" --peers "$ADDR0,$ADDR1" & PIDS+=($!)
+spawn_deployment() { # $1 = first port, rest = extra party flags
+  local port=$1
+  shift
+  ADDR0="127.0.0.1:$port"
+  ADDR1="127.0.0.1:$((port + 1))"
+  ADDR2="127.0.0.1:$((port + 2))"
+  "$BIN" party --id 0 --listen "$ADDR0" --peers "$ADDR1,$ADDR2" "$@" & PIDS+=($!)
+  "$BIN" party --id 1 --listen "$ADDR1" --peers "$ADDR0,$ADDR2" "$@" & PIDS+=($!)
+  "$BIN" party --id 2 --listen "$ADDR2" --peers "$ADDR0,$ADDR1" "$@" & PIDS+=($!)
+}
+
+# ---- scenario 1: single client, logits diffed vs in-process ----
+spawn_deployment "$PORT_BASE"
 
 # The client retries its dial internally; --halt shuts the parties down
 # after the inference so the background processes exit cleanly.
@@ -50,8 +64,30 @@ if [ "$remote_logits" != "$local_logits" ]; then
   echo "  in-process: $local_logits" >&2
   exit 1
 fi
+echo "OK: single remote client reproduced the in-process logits: $remote_logits"
 
-# The parties were asked to halt; give them a moment and confirm.
+# ---- scenario 2: K=4 concurrent clients on a FRESH deployment ----
+# (fresh because loadgen --check replays the deployment's full window
+# history through an in-process session; a generous linger makes the
+# concurrent clients share windows deterministically.)
+spawn_deployment "$((PORT_BASE + 10))" --max-batch 8 --linger 1000
+
+loadgen_out=$("$BIN" loadgen --clients 4 --requests 2 \
+  --remote "$ADDR0,$ADDR1,$ADDR2" --check --halt)
+echo "$loadgen_out"
+if ! echo "$loadgen_out" | grep -q "CHECK OK"; then
+  echo "FAIL: concurrent loadgen did not verify against the in-process replay" >&2
+  exit 1
+fi
+# cross-client batching must actually have engaged: 8 requests, < 8 windows
+windows=$(echo "$loadgen_out" | grep -o 'windows=[0-9]*' | head -n1 | cut -d= -f2)
+if [ -n "$windows" ] && [ "$windows" -ge 8 ]; then
+  echo "FAIL: 8 requests were served in $windows windows (no cross-client batching)" >&2
+  exit 1
+fi
+echo "OK: 4 concurrent clients x 2 requests batched into $windows windows, bit-identical logits"
+
+# All parties were asked to halt; give them a moment and confirm.
 for pid in "${PIDS[@]}"; do
   for _ in $(seq 50); do
     kill -0 "$pid" 2>/dev/null || break
@@ -59,4 +95,4 @@ for pid in "${PIDS[@]}"; do
   done
 done
 
-echo "OK: multi-process deployment reproduced the in-process logits: $remote_logits"
+echo "OK: multi-process smoke passed (single client + concurrent clients)"
