@@ -33,6 +33,7 @@ bench-quick:
 	rm -f BENCH_ci.json
 	cargo bench --bench transport -- --quick --json BENCH_ci.json
 	cargo bench --bench batching -- --quick --json BENCH_ci.json
+	cargo bench --bench offline -- --quick --json BENCH_ci.json
 	@echo "--- BENCH_ci.json"
 	@cat BENCH_ci.json
 

@@ -1,5 +1,7 @@
 //! Warm vs cold correlation pool: the offline/online split as a measured
-//! architectural property (DESIGN.md §Offline preprocessing).
+//! architectural property (DESIGN.md §Offline preprocessing), plus the
+//! per-op offline cost breakdown derived from the secure op graph
+//! (DESIGN.md §Secure op graph).
 //!
 //! For each batch size B the coordinator serves one window of B requests
 //! twice: once with an empty pool (cold — every lookup generates its
@@ -12,15 +14,27 @@
 //! `rust/tests/prep_tests.rs` asserts along with bit-for-bit logits
 //! parity.
 //!
+//! The second table walks the graph's offline plan (share-less dry
+//! build — no session) and prints each node's correlation count and
+//! modeled P0→P2 bytes; `rust/tests/graph_tests.rs` pins these modeled
+//! bytes equal to the metered cold-window traffic.
+//!
 //!   cargo bench --bench offline
+//!   CI smoke: cargo bench --bench offline -- --quick --json BENCH_ci.json
 
-use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, Table};
+use std::time::Duration;
+
+use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, BenchOpts, Table};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
-use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::secure::bert_graph_dry;
+use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::transport::{MetricsSnapshot, NetParams, Phase};
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
     let cfg = BertConfig::tiny();
+    let batches: &[usize] = if opts.quick { &[1] } else { &[1, 4] };
     let mut t = Table::new(&[
         "batch",
         "pool",
@@ -32,7 +46,7 @@ fn main() {
         "WAN req-path",
     ]);
 
-    for batch in [1usize, 4] {
+    for &batch in batches {
         for warm in [false, true] {
             // Fresh coordinator per point so the per-window delta in the
             // InferenceResult is exactly this window's request path.
@@ -77,6 +91,12 @@ fn main() {
                 fmt_dur(req_path(NetParams::LAN, &delta)),
                 fmt_dur(req_path(NetParams::WAN, &delta)),
             ]);
+            opts.record(
+                &format!("offline/b{batch}/{}", if warm { "warm" } else { "cold" }),
+                r0.compute,
+                window_offline_bytes,
+                r0.window_online_rounds,
+            );
             coord.shutdown();
         }
     }
@@ -84,4 +104,42 @@ fn main() {
         "offline/online split: a warm correlation pool moves ALL offline traffic off the \
          request path (online rounds/bytes identical warm vs cold; BERT-tiny, window = batch)",
     );
+
+    // Per-op offline cost from the graph walk: what each node of the
+    // secure op graph will consume for one window, as modeled P0→P2
+    // correction bytes (no session needed — the dry build carries no
+    // shares but all shapes).
+    let plan_batch = if opts.quick { 1 } else { 4 };
+    let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament));
+    let mut per_node: Vec<(String, usize, u64)> = Vec::new();
+    for e in g.plan_entries(plan_batch) {
+        let merged = match per_node.last_mut() {
+            Some(last) if last.0 == e.node => {
+                last.1 += 1;
+                last.2 += e.bytes;
+                true
+            }
+            _ => false,
+        };
+        if !merged {
+            per_node.push((e.node.clone(), 1, e.bytes));
+        }
+    }
+    let mut t2 = Table::new(&["node", "correlations", "offline KiB"]);
+    let mut total = 0u64;
+    for (node, count, bytes) in &per_node {
+        total += bytes;
+        t2.row(vec![
+            node.clone(),
+            count.to_string(),
+            format!("{:.1}", *bytes as f64 / 1024.0),
+        ]);
+        opts.record(&format!("offline/plan/b{plan_batch}/{node}"), Duration::ZERO, *bytes, 0);
+    }
+    t2.print(&format!(
+        "per-op offline tape of `{}` (graph walk, B = {plan_batch} window): {:.2} MiB total — \
+         also dumpable via `repro plan --json`",
+        g.name(),
+        total as f64 / 1048576.0,
+    ));
 }

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use ppq_bert::bench_harness::{fmt_dur, prepared_model, time_once, BenchOpts, Table};
 use ppq_bert::core::ring::R16;
 use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{secure_infer, SecureBert};
+use ppq_bert::model::secure::{bert_graph_default, secure_infer};
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
 use ppq_bert::transport::{build_mesh, loopback_mesh, Metrics, Net, Phase};
 
@@ -47,7 +47,7 @@ fn infer_over(nets: [Net; 3]) {
             let (weights, x) = (&weights, &x);
             s.spawn(move || {
                 let ctx = PartyCtx::new(net.id, net, SessionCfg::default().master_seed, 1);
-                let model = SecureBert::setup(&ctx, cfg, (ctx.id == P0).then_some(weights));
+                let model = bert_graph_default(&ctx, &cfg, (ctx.id == P0).then_some(weights));
                 let xin = (ctx.id == P1).then(|| x.clone());
                 let _ = secure_infer(&ctx, &model, xin.as_deref());
             });

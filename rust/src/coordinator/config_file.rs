@@ -84,7 +84,8 @@ impl ConfigFile {
         }
     }
 
-    /// Build the model config (preset + overrides).
+    /// Build the model config (preset + overrides), structurally
+    /// validated so impossible shapes fail at load time.
     pub fn bert_config(&self) -> Result<BertConfig> {
         let mut cfg = match self.get("model", "preset") {
             Some("base") => BertConfig::base(),
@@ -96,6 +97,9 @@ impl ConfigFile {
         }
         if let Some(l) = self.get_usize("model", "layers")? {
             cfg.n_layers = l;
+        }
+        if let Err(e) = cfg.validate() {
+            bail!("invalid [model] config: {e}");
         }
         Ok(cfg)
     }
@@ -200,6 +204,17 @@ prep_depth = 3
         let c = ConfigFile::parse("[model]\npreset = gpt99").unwrap();
         assert!(c.bert_config().is_err());
         let c = ConfigFile::parse("[model]\nseq_len = banana").unwrap();
+        assert!(c.bert_config().is_err());
+    }
+
+    #[test]
+    fn rejects_structurally_invalid_shapes() {
+        // parseable, but fails BertConfig::validate at load time
+        let c = ConfigFile::parse("[model]\nseq_len = 0").unwrap();
+        assert!(c.bert_config().is_err());
+        let c = ConfigFile::parse("[model]\nlayers = 0").unwrap();
+        assert!(c.bert_config().is_err());
+        let c = ConfigFile::parse("[model]\nseq_len = 4096").unwrap();
         assert!(c.bert_config().is_err());
     }
 }

@@ -41,8 +41,9 @@ use std::time::{Duration, Instant};
 
 use crate::core::error::{bail, Context, Result};
 use crate::core::prg::Prg;
-use crate::model::config::BertConfig;
-use crate::model::secure::SecureBert;
+use crate::model::config::{BertConfig, LayerQuantConfig};
+use crate::model::graph::SecureGraph;
+use crate::model::secure::bert_graph;
 use crate::model::weights::{synth_input, Weights};
 use crate::party::{PartyCtx, SessionCfg, P0, P1, P2};
 use crate::protocols::max::MaxStrategy;
@@ -509,8 +510,8 @@ pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
         native::calibrate(&opts.cfg, &mut w, &synth_input(&opts.cfg, 5));
         w
     });
-    let mut model = SecureBert::setup(&ctx, opts.cfg, weights.as_ref());
-    model.max_strategy = opts.max_strategy;
+    let per_layer = LayerQuantConfig::uniform(&opts.cfg, opts.max_strategy);
+    let model = bert_graph(&ctx, &opts.cfg, &per_layer, weights.as_ref());
     ctx.flush_timer();
 
     let shared = Arc::new(Shared {
@@ -666,7 +667,7 @@ fn reply(shared: &Shared, conn: u32, tag: Tag, payload: &[u8]) {
 /// and topping up the correlation pool while idle.
 fn serve_as_sequencer(
     ctx: &PartyCtx,
-    model: &SecureBert,
+    model: &SecureGraph,
     opts: &PartyOpts,
     shared: &Shared,
 ) -> Result<()> {
@@ -703,7 +704,8 @@ fn serve_as_sequencer(
     }
     let mut next_wid = 0u64;
     loop {
-        let pooled_full = corr_pool.get(&sopts.max_batch).map(|q| q.len()).unwrap_or(0);
+        let key = (model.fingerprint(), sopts.max_batch);
+        let pooled_full = corr_pool.get(&key).map(|q| q.len()).unwrap_or(0);
         match next_action(shared, pooled_full) {
             Action::Prep => prep_full(links.as_mut_slice(), &mut corr_pool)?,
             Action::Serve(items) => {
@@ -725,7 +727,7 @@ fn serve_as_sequencer(
 /// release the requests' in-flight budget.
 fn serve_one_window(
     ctx: &PartyCtx,
-    model: &SecureBert,
+    model: &SecureGraph,
     shared: &Shared,
     links: &mut [TcpStream],
     corr_pool: &mut CorrPool,
@@ -774,7 +776,7 @@ fn serve_one_window(
 /// completions to [`Tag::Bind`]-registered client connections.
 fn serve_from_manifests(
     ctx: &PartyCtx,
-    model: &SecureBert,
+    model: &SecureGraph,
     shared: &Shared,
     coord_rx: Receiver<TcpStream>,
 ) -> Result<()> {

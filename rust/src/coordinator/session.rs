@@ -11,8 +11,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::model::config::BertConfig;
-use crate::model::secure::{prep_infer_batch, secure_infer_batch, SecureBert};
+use crate::model::config::{BertConfig, LayerQuantConfig};
+use crate::model::graph::SecureGraph;
+use crate::model::secure::{bert_graph, secure_infer_batch};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
@@ -22,42 +23,51 @@ use crate::transport::{build_mesh, Metrics, MetricsSnapshot, Net};
 use crate::transport::Phase;
 
 /// A party-local pool of ahead-of-time correlation tapes, keyed by
-/// window size. All parties must mutate their pools through the same
-/// command sequence (session commands in-process, P1's control-link
-/// directives in a multi-process deployment) so the pop-vs-generate
-/// decision inside [`serve_window`] stays symmetric.
-pub type CorrPool = HashMap<usize, VecDeque<Vec<Correlation>>>;
+/// ([`SecureGraph::fingerprint`], window size). Each session/party
+/// thread owns one pool and fills it by walking its own graph, so a
+/// tape is only ever consumed by the graph instance whose walk produced
+/// it (tapes embed that graph's masked table contents; the fingerprint
+/// key guards against structural drift, it does not make tapes from
+/// look-alike graphs interchangeable). All parties must mutate their
+/// pools through the same command sequence (session commands
+/// in-process, P1's control-link directives in a multi-process
+/// deployment) so the pop-vs-generate decision inside [`serve_window`]
+/// stays symmetric.
+pub type CorrPool = HashMap<(u64, usize), VecDeque<Vec<Correlation>>>;
 
 /// Evaluate one batch window at this party: consume a pooled
-/// correlation tape of exactly `batch` requests if one exists (warm
-/// window — zero request-path offline communication), run the batched
-/// MPC pass, and verify the tape was consumed exactly. This is the
-/// per-window body shared by the in-process [`Session`] command loop
-/// and the multi-process serving loop (`coordinator::remote`).
+/// correlation tape keyed by exactly (this graph, `batch`) if one
+/// exists (warm window — zero request-path offline communication),
+/// walk the graph as one batched MPC pass, and verify the tape was
+/// consumed exactly. This is the per-window body shared by the
+/// in-process [`Session`] command loop and the multi-process serving
+/// loop (`coordinator::remote`).
 pub fn serve_window(
     ctx: &PartyCtx,
-    model: &SecureBert,
+    model: &SecureGraph,
     pool: &mut CorrPool,
     batch: usize,
     inputs: Option<&[Vec<i64>]>,
 ) -> Vec<Vec<i64>> {
-    if let Some(tape) = pool.get_mut(&batch).and_then(|q| q.pop_front()) {
+    let key = (model.fingerprint(), batch);
+    if let Some(tape) = pool.get_mut(&key).and_then(|q| q.pop_front()) {
         ctx.install_corr(tape);
     }
     let (logits, _) = secure_infer_batch(ctx, model, batch, inputs);
-    // A correctly-planned tape is consumed exactly; anything left
-    // behind means the plan drifted from the online pass.
+    // A graph-derived tape is consumed exactly; anything left behind
+    // means an op's plan diverged from its eval body.
     debug_assert_eq!(ctx.corr_pending(), 0, "correlation tape not fully consumed (plan drift)");
     ctx.clear_corr();
     logits
 }
 
-/// Generate one window's correlation tape ahead of time and stash it in
-/// the party-local pool (offline-phase traffic only; shared by the
+/// Generate one window's correlation tape ahead of time — by walking
+/// the same graph the window will evaluate — and stash it in the
+/// party-local pool (offline-phase traffic only; shared by the
 /// in-process [`Session`] and the multi-process serving loop).
-pub fn prep_into_pool(ctx: &PartyCtx, model: &SecureBert, pool: &mut CorrPool, batch: usize) {
-    let tape = prep_infer_batch(ctx, model, batch);
-    pool.entry(batch).or_default().push_back(tape);
+pub fn prep_into_pool(ctx: &PartyCtx, model: &SecureGraph, pool: &mut CorrPool, batch: usize) {
+    let tape = model.prep(ctx, batch);
+    pool.entry((model.fingerprint(), batch)).or_default().push_back(tape);
 }
 
 enum Cmd {
@@ -131,13 +141,13 @@ impl Session {
             handles.push(std::thread::spawn(move || {
                 let ctx = make_ctx(id, net, scfg);
                 let w = if id == P0 { Some(&*weights) } else { None };
-                let mut model = SecureBert::setup(&ctx, cfg, w);
-                model.max_strategy = max_strategy;
+                let per_layer = LayerQuantConfig::uniform(&cfg, max_strategy);
+                let model = bert_graph(&ctx, &cfg, &per_layer, w);
                 // Party-local pool of ahead-of-time correlation tapes,
-                // keyed by window size. Every party receives the same
-                // command sequence, so all three pools evolve in lockstep
-                // and the pop-vs-generate decision inside serve_window is
-                // symmetric.
+                // keyed by (graph, window size). Every party receives the
+                // same command sequence, so all three pools evolve in
+                // lockstep and the pop-vs-generate decision inside
+                // serve_window is symmetric.
                 let mut corr_pool = CorrPool::new();
                 while let Ok(cmd) = rx.recv() {
                     match cmd {

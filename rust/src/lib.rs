@@ -10,7 +10,8 @@
 //! Layering (see DESIGN.md):
 //! * `core`, `sharing`, `transport`, `party` — MPC substrates
 //! * `protocols` — the paper's contribution (Alg. 1–3 + §Nonlinear)
-//! * `model` — the quantized BERT pipeline over shares
+//! * `model` — the secure op-graph IR and the graph builders (BERT,
+//!   MLP) that express the quantized pipelines over shares
 //! * `runtime` — PJRT loader for the JAX/Pallas AOT artifacts + the
 //!   native plaintext oracle
 //! * `coordinator` — serving layer (router, batcher, sessions)

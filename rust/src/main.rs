@@ -4,6 +4,7 @@
 //!   repro infer  [--config tiny|base] [--seq N] [--threads T] [--net lan|wan|local]
 //!                [--remote [A,B,C]] [--halt]      run against a 3-process deployment
 //!   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D]
+//!   repro plan   [--config tiny|base] [--batch B] [--json]   per-op offline tape dump
 //!   repro party  --id N [--listen ADDR] [--peers A,B] [--config tiny|base] ...
 //!   repro oracle [--artifacts DIR]        run the PJRT plaintext oracle
 //!   repro comm   [--seq N]                print metered comm (Table-4 row)
@@ -81,7 +82,19 @@ fn config_from(flags: &HashMap<String, String>) -> BertConfig {
     };
     cfg.seq_len = flag_parse(flags, "seq", cfg.seq_len);
     cfg.n_layers = flag_parse(flags, "layers", cfg.n_layers);
+    if let Err(e) = cfg.validate() {
+        usage_error(&format!("invalid model config: {e}"));
+    }
     cfg
+}
+
+fn max_strategy_from(flags: &HashMap<String, String>) -> MaxStrategy {
+    match flags.get("max").map(|s| s.as_str()) {
+        Some("linear") => MaxStrategy::Linear,
+        Some("sort") => MaxStrategy::Sort,
+        Some("tournament") | None => MaxStrategy::Tournament,
+        Some(other) => usage_error(&format!("unknown --max `{other}` (tournament|linear|sort)")),
+    }
 }
 
 fn net_from(flags: &HashMap<String, String>) -> NetParams {
@@ -472,6 +485,85 @@ fn cmd_serve(flags: HashMap<String, String>) {
     coord.shutdown();
 }
 
+/// Dump the per-op offline tape of a serving window: walk the secure op
+/// graph (share-less dry build — no session, no weights) and print, for
+/// every planned correlation, the consuming node, its public shape and
+/// its modeled offline bytes, plus totals. `--json` emits the same tape
+/// as NDJSON (one object per correlation, then one `TOTAL` record).
+fn cmd_plan(flags: HashMap<String, String>) {
+    use ppq_bert::model::config::LayerQuantConfig;
+    use ppq_bert::model::secure::bert_graph_dry;
+    use ppq_bert::protocols::prep::CorrKind;
+
+    let cfg = config_from(&flags);
+    let batch: usize = flag_parse(&flags, "batch", 1);
+    if batch == 0 {
+        usage_error("--batch must be >= 1");
+    }
+    let strat = max_strategy_from(&flags);
+    let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, strat));
+    let entries = g.plan_entries(batch);
+    let total_bytes: u64 = entries.iter().map(|e| e.bytes).sum();
+    let json = flags.contains_key("json");
+    if !json {
+        println!(
+            "offline tape of `{}` (fingerprint {:016x}), window of {batch}, {:?} max:",
+            g.name(),
+            g.fingerprint(),
+            strat
+        );
+        println!(
+            "{:<28} {:<10} {:>6} {:>5} {:>9} {:>12}",
+            "node", "kind", "bits", "tabs", "n", "bytes"
+        );
+    }
+    for e in &entries {
+        let kind = match e.shape.kind {
+            CorrKind::Lut1 => "lut1",
+            CorrKind::Lut2SharedY => "lut2",
+            CorrKind::Lut2Multi => "lut2multi",
+        };
+        let out_bits: Vec<String> = e.shape.out_bits.iter().map(|b| b.to_string()).collect();
+        if json {
+            println!(
+                "{{\"node\":\"{}\",\"kind\":\"{kind}\",\"x_bits\":{},\"y_bits\":{},\
+                 \"out_bits\":[{}],\"n\":{},\"groups\":{},\"bytes\":{}}}",
+                e.node,
+                e.shape.x_bits,
+                e.shape.y_bits,
+                out_bits.join(","),
+                e.shape.n,
+                e.shape.groups,
+                e.bytes
+            );
+        } else {
+            let bits = format!("{}/{}", e.shape.x_bits, e.shape.y_bits);
+            println!(
+                "{:<28} {:<10} {:>6} {:>5} {:>9} {:>12}",
+                e.node,
+                kind,
+                bits,
+                e.shape.out_bits.len(),
+                e.shape.n,
+                e.bytes
+            );
+        }
+    }
+    if json {
+        println!(
+            "{{\"node\":\"TOTAL\",\"ops\":{},\"batch\":{batch},\"bytes\":{total_bytes}}}",
+            entries.len()
+        );
+    } else {
+        println!(
+            "total: {} correlations, {:.2} MiB P0->P2 offline traffic ({} graph nodes)",
+            entries.len(),
+            total_bytes as f64 / 1048576.0,
+            g.node_count()
+        );
+    }
+}
+
 fn cmd_oracle(flags: HashMap<String, String>) {
     use ppq_bert::model::weights::{read_i32_file, Weights};
     use ppq_bert::runtime::xla::{artifacts_dir, I32Tensor, XlaModel};
@@ -525,6 +617,11 @@ USAGE:
                                              the observed windows in-process and
                                              demands bit-identical logits
   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--conf FILE]
+  repro plan   [--config tiny|base] [--seq N] [--layers L] [--batch B]
+               [--max tournament|linear|sort] [--json]
+                                             dump the per-op offline tape a
+                                             B-request window will consume
+                                             (graph walk; --json = NDJSON)
   repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
                [--layers L] [--threads T] [--weights-seed S] [--session LABEL]
                [--max-batch B] [--linger MS] [--queue-cap Q] [--max-inflight I] [--prep D]
@@ -557,6 +654,7 @@ fn main() {
         "infer" => cmd_infer(flags),
         "loadgen" => cmd_loadgen(flags),
         "serve" => cmd_serve(flags),
+        "plan" => cmd_plan(flags),
         "party" => cmd_party(flags),
         "oracle" => cmd_oracle(flags),
         "comm" => cmd_comm(flags),

@@ -1,4 +1,8 @@
-//! Model + quantization configuration (mirrors python/compile/model.py).
+//! Model + quantization configuration (mirrors python/compile/model.py),
+//! including the per-layer quantization knobs the op-graph builders
+//! consume (DESIGN.md §Secure op graph).
+
+use crate::protocols::max::MaxStrategy;
 
 /// Architecture and quantization hyperparameters of the 1w/4a BERT.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -17,11 +21,12 @@ pub struct BertConfig {
     pub n_classes: usize,
     /// Classifier weight scale (logits stay 16-bit; no requantization).
     pub scale_cls: i64,
-    /// Softmax input dequantization scale `s_x`.
+    /// Softmax input dequantization scale `s_x` (per-layer default; see
+    /// [`LayerQuantConfig`]).
     pub sm_sx: f64,
-    /// LayerNorm variance dequantization scale and epsilon.
+    /// LayerNorm variance dequantization scale (per-layer default).
     pub ln_sv: f64,
-    /// LayerNorm epsilon (folded into `T_ln`).
+    /// LayerNorm epsilon, folded into `T_ln` (per-layer default).
     pub ln_eps: f64,
 }
 
@@ -29,7 +34,7 @@ impl BertConfig {
     /// The 2-layer test configuration matching `python model.TINY` (and
     /// the `bert_tiny` AOT artifact).
     pub fn tiny() -> Self {
-        BertConfig {
+        let cfg = BertConfig {
             n_layers: 2,
             d_model: 64,
             n_heads: 2,
@@ -40,12 +45,14 @@ impl BertConfig {
             sm_sx: 0.5,
             ln_sv: 4.0,
             ln_eps: 1.0,
-        }
+        };
+        cfg.validate().expect("tiny preset");
+        cfg
     }
 
     /// BERT-base (the paper's benchmark model).
     pub fn base() -> Self {
-        BertConfig {
+        let cfg = BertConfig {
             n_layers: 12,
             d_model: 768,
             n_heads: 12,
@@ -56,17 +63,76 @@ impl BertConfig {
             sm_sx: 0.5,
             ln_sv: 4.0,
             ln_eps: 1.0,
-        }
+        };
+        cfg.validate().expect("base preset");
+        cfg
     }
 
     /// BERT-base at a different sequence length (benches sweep this).
     pub fn base_with_seq(seq_len: usize) -> Self {
-        BertConfig { seq_len, ..Self::base() }
+        let cfg = BertConfig { seq_len, ..Self::base() };
+        cfg.validate().expect("base_with_seq");
+        cfg
     }
 
     /// Same config at a different depth (reduced-depth measurement).
     pub fn with_layers(self, n_layers: usize) -> Self {
-        BertConfig { n_layers, ..self }
+        let cfg = BertConfig { n_layers, ..self };
+        cfg.validate().expect("with_layers");
+        cfg
+    }
+
+    /// Structural validation: every constructor and the config-file
+    /// loader call this, so an impossible shape fails loudly at
+    /// configuration time instead of deep inside setup or a table
+    /// builder. Checks head divisibility, nonzero scales, and the
+    /// sequence/table bounds the 8-bit softmax/argmax index rings
+    /// assume.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_layers == 0 {
+            return Err("n_layers must be >= 1".into());
+        }
+        if self.d_model == 0 || self.n_heads == 0 {
+            return Err("d_model and n_heads must be nonzero".into());
+        }
+        if self.d_model % self.n_heads != 0 {
+            return Err(format!(
+                "d_model ({}) must be divisible by n_heads ({})",
+                self.d_model, self.n_heads
+            ));
+        }
+        if self.d_ff == 0 {
+            return Err("d_ff must be nonzero".into());
+        }
+        if self.seq_len == 0 {
+            return Err("seq_len must be >= 1".into());
+        }
+        if self.seq_len > 128 {
+            return Err(format!(
+                "seq_len {} exceeds 128 (the 8-bit softmax-denominator and \
+                 argmax-index rings bound the row width)",
+                self.seq_len
+            ));
+        }
+        if self.n_classes == 0 {
+            return Err("n_classes must be >= 1".into());
+        }
+        if self.n_classes > 256 {
+            return Err(format!(
+                "n_classes {} exceeds 256 (the argmax head carries class \
+                 indices in the 8-bit ring)",
+                self.n_classes
+            ));
+        }
+        if self.scale_cls == 0 {
+            return Err("scale_cls must be nonzero".into());
+        }
+        for (name, v) in [("sm_sx", self.sm_sx), ("ln_sv", self.ln_sv), ("ln_eps", self.ln_eps)] {
+            if v.is_nan() || v <= 0.0 {
+                return Err(format!("{name} must be positive"));
+            }
+        }
+        Ok(())
     }
 
     /// Per-head width `d_model / n_heads`.
@@ -86,6 +152,42 @@ impl BertConfig {
     }
 }
 
+/// Per-layer quantization + protocol knobs — the paper's *fine-grained
+/// layer-wise quantization* as an actual API: each encoder layer of a
+/// graph built by `model::secure::bert_graph` carries its own softmax
+/// scale, LayerNorm scale/epsilon (baked into that layer's LUT
+/// contents) and `Π_max` realization, instead of one global knob
+/// (DESIGN.md §Secure op graph).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerQuantConfig {
+    /// Softmax input dequantization scale `s_x` of this layer's `T_exp`.
+    pub sm_sx: f64,
+    /// LayerNorm variance dequantization scale of this layer's `T_ln`.
+    pub ln_sv: f64,
+    /// LayerNorm epsilon folded into this layer's `T_ln`.
+    pub ln_eps: f64,
+    /// Which `Π_max` realization this layer's softmax uses.
+    pub max_strategy: MaxStrategy,
+}
+
+impl LayerQuantConfig {
+    /// This layer's knobs copied from the model-wide defaults.
+    pub fn from_bert(cfg: &BertConfig, strat: MaxStrategy) -> LayerQuantConfig {
+        LayerQuantConfig {
+            sm_sx: cfg.sm_sx,
+            ln_sv: cfg.ln_sv,
+            ln_eps: cfg.ln_eps,
+            max_strategy: strat,
+        }
+    }
+
+    /// A uniform per-layer vector (every layer = the model-wide
+    /// defaults) — what the pre-graph global-knob API amounted to.
+    pub fn uniform(cfg: &BertConfig, strat: MaxStrategy) -> Vec<LayerQuantConfig> {
+        vec![Self::from_bert(cfg, strat); cfg.n_layers]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +203,77 @@ mod tests {
     fn base_is_bert_base() {
         let c = BertConfig::base();
         assert_eq!((c.n_layers, c.d_model, c.n_heads, c.d_ff), (12, 768, 12, 3072));
+    }
+
+    #[test]
+    fn presets_validate() {
+        assert!(BertConfig::tiny().validate().is_ok());
+        assert!(BertConfig::base().validate().is_ok());
+        assert!(BertConfig::base_with_seq(64).validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_indivisible_heads() {
+        let mut c = BertConfig::tiny();
+        c.n_heads = 3; // 64 % 3 != 0
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("divisible"), "{err}");
+    }
+
+    #[test]
+    fn rejects_zero_layers() {
+        let mut c = BertConfig::tiny();
+        c.n_layers = 0;
+        assert!(c.validate().unwrap_err().contains("n_layers"));
+    }
+
+    #[test]
+    fn rejects_zero_scale_cls() {
+        let mut c = BertConfig::tiny();
+        c.scale_cls = 0;
+        assert!(c.validate().unwrap_err().contains("scale_cls"));
+    }
+
+    #[test]
+    fn rejects_nonpositive_table_scales() {
+        for field in ["sm_sx", "ln_sv", "ln_eps"] {
+            let mut c = BertConfig::tiny();
+            match field {
+                "sm_sx" => c.sm_sx = 0.0,
+                "ln_sv" => c.ln_sv = -1.0,
+                _ => c.ln_eps = f64::NAN,
+            }
+            let err = c.validate().unwrap_err();
+            assert!(err.contains(field), "{field}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_seq_out_of_bounds() {
+        let mut c = BertConfig::tiny();
+        c.seq_len = 0;
+        assert!(c.validate().unwrap_err().contains("seq_len"));
+        c.seq_len = 129;
+        assert!(c.validate().unwrap_err().contains("128"));
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        let mut c = BertConfig::tiny();
+        c.d_ff = 0;
+        assert!(c.validate().unwrap_err().contains("d_ff"));
+        let mut c = BertConfig::tiny();
+        c.n_classes = 0;
+        assert!(c.validate().unwrap_err().contains("n_classes"));
+        c.n_classes = 300; // wraps the 8-bit argmax index ring
+        assert!(c.validate().unwrap_err().contains("256"));
+    }
+
+    #[test]
+    fn uniform_layer_configs_cover_every_layer() {
+        let cfg = BertConfig::tiny();
+        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        assert_eq!(per.len(), cfg.n_layers);
+        assert!(per.iter().all(|l| l.sm_sx == cfg.sm_sx));
     }
 }

@@ -1,0 +1,447 @@
+//! The secure op-graph IR: one declarative model description that
+//! derives both the offline preprocessing plan and the online MPC pass
+//! (DESIGN.md §Secure op graph).
+//!
+//! Historically the offline tape for a window was assembled by
+//! hand-maintained `*_plan` free functions that mirrored the online call
+//! sequence instruction for instruction — every protocol change risked
+//! silent plan/pass drift. This module replaces that mirror with a typed
+//! graph of [`SecureOp`] nodes: each op declares its input/output share
+//! types, how its output shapes follow from its input shapes, the
+//! correlations its online body will consume ([`SecureOp::plan`]), and
+//! the online body itself ([`SecureOp::eval`]). Walking the same graph
+//! once in *plan* mode and once in *eval* mode therefore cannot drift:
+//! the tape is derived from the object that executes.
+//!
+//! Builders (`model::secure::bert_graph`, `model::secure::mlp_graph`)
+//! assemble graphs; the serving layer (`coordinator::session`,
+//! `coordinator::remote`) pools correlation tapes keyed by
+//! ([`SecureGraph::fingerprint`], window size) and evaluates windows by
+//! walking the graph.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use crate::core::ring::Ring;
+use crate::party::PartyCtx;
+use crate::protocols::prep::{run_plan, Correlation, PlanOp};
+use crate::sharing::additive::share2;
+use crate::sharing::{A2, Rss};
+
+/// How a wire's payload is shared between the parties.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum VKind {
+    /// 2PC additive `⟦x⟧` between P1/P2 (empty at P0).
+    Additive,
+    /// 3-party replicated `⟨x⟩` (RSS).
+    Replicated,
+    /// Revealed cleartext rows (the graph's public outputs).
+    Clear,
+}
+
+/// The type of one graph wire: sharing kind + ring bit width
+/// (0 for [`VKind::Clear`]).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct VType {
+    /// Sharing kind.
+    pub kind: VKind,
+    /// Ring bit width `ℓ` of `Z_2^ℓ` (0 for cleartext).
+    pub bits: u32,
+}
+
+impl VType {
+    /// A 2PC-additive wire over `Z_2^bits`.
+    pub const fn a2(bits: u32) -> VType {
+        VType { kind: VKind::Additive, bits }
+    }
+
+    /// An RSS wire over `Z_2^bits`.
+    pub const fn rss(bits: u32) -> VType {
+        VType { kind: VKind::Replicated, bits }
+    }
+
+    /// A cleartext (revealed) wire.
+    pub const fn clear() -> VType {
+        VType { kind: VKind::Clear, bits: 0 }
+    }
+}
+
+/// A runtime tensor traveling along a graph wire.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// 2PC additive shares.
+    A2(A2),
+    /// RSS shares.
+    Rss(Rss),
+    /// Revealed cleartext, one row per batch item (empty rows at parties
+    /// that learn nothing).
+    Clear(Vec<Vec<i64>>),
+}
+
+impl Value {
+    /// The sharing kind this value carries (compact panic messages —
+    /// never Debug-dump a share payload).
+    pub fn kind(&self) -> VKind {
+        match self {
+            Value::A2(_) => VKind::Additive,
+            Value::Rss(_) => VKind::Replicated,
+            Value::Clear(_) => VKind::Clear,
+        }
+    }
+
+    /// The additive-share payload; panics on a kind mismatch (the graph
+    /// builder typechecks wires, so this indicates an op bug).
+    pub fn as_a2(&self) -> &A2 {
+        match self {
+            Value::A2(x) => x,
+            other => panic!("expected an additive tensor, got {:?}", other.kind()),
+        }
+    }
+
+    /// The RSS payload; panics on a kind mismatch.
+    pub fn as_rss(&self) -> &Rss {
+        match self {
+            Value::Rss(x) => x,
+            other => panic!("expected an RSS tensor, got {:?}", other.kind()),
+        }
+    }
+
+    /// The cleartext rows; panics on a kind mismatch.
+    pub fn as_clear(&self) -> &[Vec<i64>] {
+        match self {
+            Value::Clear(rows) => rows,
+            other => panic!("expected cleartext rows, got {:?}", other.kind()),
+        }
+    }
+}
+
+/// One secure operation: the unit the offline plan and the online pass
+/// are BOTH derived from (DESIGN.md §Secure op graph).
+///
+/// Contract:
+/// * `in_types`/`out_types` declare the wire types; the builder rejects
+///   mis-typed edges at graph-construction time.
+/// * `out_lens` propagates public shapes (element counts) from input to
+///   output wires; it must depend on shapes only, never on share data.
+/// * `plan` lists, in consumption order, every correlation
+///   ([`PlanOp`]) the op's `eval` body will acquire for inputs of the
+///   given lengths. An op whose body performs no lookups returns the
+///   default empty plan.
+/// * `eval` runs the online body SPMD-style; it must acquire
+///   correlations in exactly the order `plan` declared (the serving
+///   layer asserts the tape is consumed with no leftovers and no
+///   inline fallbacks).
+pub trait SecureOp: Send {
+    /// Display name used in plan dumps and progress output
+    /// (e.g. `layer3.attention.scores`).
+    fn name(&self) -> String;
+
+    /// Input wire types, in argument order.
+    fn in_types(&self) -> Vec<VType>;
+
+    /// Output wire types, in result order.
+    fn out_types(&self) -> Vec<VType>;
+
+    /// Output element counts as a function of the input element counts.
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize>;
+
+    /// The correlations the online body consumes, in order, for inputs
+    /// of these lengths. Defaults to none.
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        let _ = in_lens;
+        Vec::new()
+    }
+
+    /// The online body: turn input tensors into output tensors.
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value>;
+}
+
+/// Wire index inside one [`SecureGraph`].
+pub type WireId = usize;
+
+struct Node {
+    op: Box<dyn SecureOp>,
+    ins: Vec<WireId>,
+    outs: Vec<WireId>,
+}
+
+/// One planned correlation of a graph walk, attributed to the node that
+/// will consume it (the `repro plan` dump and `benches/offline.rs` rows).
+#[derive(Debug)]
+pub struct PlanEntry {
+    /// Display name of the consuming node.
+    pub node: String,
+    /// Public shape of the correlation.
+    pub shape: crate::protocols::prep::CorrShape,
+    /// Modeled offline bytes (the P0 → P2 correction traffic this
+    /// correlation costs to produce).
+    pub bytes: u64,
+}
+
+/// Incrementally builds a typed [`SecureGraph`]; every edge is checked
+/// against the declared op types at `push` time.
+pub struct GraphBuilder {
+    name: String,
+    input_party: usize,
+    input_ring: Ring,
+    item_len: usize,
+    wire_types: Vec<VType>,
+    nodes: Vec<Node>,
+    outputs: Vec<WireId>,
+}
+
+impl GraphBuilder {
+    /// Start a graph whose single input wire is shared additively over
+    /// `input_ring` by `input_party`, `item_len` elements per batch
+    /// item. Returns the builder and the input wire.
+    pub fn new(
+        name: &str,
+        input_party: usize,
+        input_ring: Ring,
+        item_len: usize,
+    ) -> (GraphBuilder, WireId) {
+        let b = GraphBuilder {
+            name: name.to_string(),
+            input_party,
+            input_ring,
+            item_len,
+            wire_types: vec![VType::a2(input_ring.bits())],
+            nodes: Vec::new(),
+            outputs: Vec::new(),
+        };
+        (b, 0)
+    }
+
+    /// Append an op consuming the given wires; returns its output wires.
+    /// Panics when an input wire's type does not match the op's declared
+    /// input types (the "typed" in typed secure op graph).
+    pub fn push(&mut self, op: impl SecureOp + 'static, ins: &[WireId]) -> Vec<WireId> {
+        let want = op.in_types();
+        assert_eq!(
+            want.len(),
+            ins.len(),
+            "node `{}`: expected {} inputs, got {}",
+            op.name(),
+            want.len(),
+            ins.len()
+        );
+        for (&w, t) in ins.iter().zip(&want) {
+            assert_eq!(
+                self.wire_types[w],
+                *t,
+                "node `{}`: wire {w} type mismatch",
+                op.name()
+            );
+        }
+        let mut outs = Vec::new();
+        for t in op.out_types() {
+            self.wire_types.push(t);
+            outs.push(self.wire_types.len() - 1);
+        }
+        self.nodes.push(Node { op: Box::new(op), ins: ins.to_vec(), outs: outs.clone() });
+        outs
+    }
+
+    /// Mark a wire as a graph output (kept alive through evaluation and
+    /// returned by [`SecureGraph::eval`], in declaration order).
+    pub fn output(&mut self, w: WireId) {
+        assert!(w < self.wire_types.len(), "output wire out of range");
+        self.outputs.push(w);
+    }
+
+    /// Seal the graph and compute its structural fingerprint.
+    pub fn finish(self) -> SecureGraph {
+        let mut g = SecureGraph {
+            name: self.name,
+            input_party: self.input_party,
+            input_ring: self.input_ring,
+            item_len: self.item_len,
+            wire_types: self.wire_types,
+            nodes: self.nodes,
+            outputs: self.outputs,
+            fingerprint: 0,
+        };
+        let mut h = DefaultHasher::new();
+        g.item_len.hash(&mut h);
+        g.input_party.hash(&mut h);
+        g.input_ring.bits().hash(&mut h);
+        g.wire_types.hash(&mut h);
+        g.outputs.hash(&mut h);
+        for node in &g.nodes {
+            node.op.name().hash(&mut h);
+            node.ins.hash(&mut h);
+            node.outs.hash(&mut h);
+        }
+        // The batch-1 correlation shapes capture every plan-relevant
+        // knob (LUT geometries, Δ' groupings, the Π_max realization).
+        for op in g.plan(1) {
+            op.shape().hash(&mut h);
+        }
+        g.fingerprint = h.finish();
+        g
+    }
+}
+
+/// A sealed secure op graph: the single source of truth for one model's
+/// offline plan AND online pass (DESIGN.md §Secure op graph).
+pub struct SecureGraph {
+    name: String,
+    input_party: usize,
+    input_ring: Ring,
+    item_len: usize,
+    wire_types: Vec<VType>,
+    nodes: Vec<Node>,
+    outputs: Vec<WireId>,
+    fingerprint: u64,
+}
+
+impl SecureGraph {
+    /// Display name (e.g. `bert(l=2,d=64,s=8)`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Input elements per batch item (the per-request flat tensor size).
+    pub fn item_len(&self) -> usize {
+        self.item_len
+    }
+
+    /// Node count (plan dumps, tests).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Structural fingerprint: hashes the node sequence, wire types and
+    /// batch-1 correlation shapes. Shapes are deliberately content-free
+    /// (table entries are P0's secret), so equal fingerprints mean
+    /// *structurally* compatible plans — NOT interchangeable tapes: a
+    /// correlation embeds the producing graph's masked table contents,
+    /// so a tape must only ever be consumed by the graph instance whose
+    /// walk produced it. The serving layer keeps one pool per
+    /// session/graph and uses (fingerprint, window size) as its key — a
+    /// guard against structural drift within that pool, never a license
+    /// to share tapes across graphs that merely hash alike.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Propagated element count of every wire for a `batch`-item window.
+    fn wire_lens(&self, batch: usize) -> Vec<usize> {
+        let mut lens = vec![0usize; self.wire_types.len()];
+        lens[0] = batch * self.item_len;
+        for node in &self.nodes {
+            let in_lens: Vec<usize> = node.ins.iter().map(|&w| lens[w]).collect();
+            let out_lens = node.op.out_lens(&in_lens);
+            debug_assert_eq!(out_lens.len(), node.outs.len());
+            for (&w, l) in node.outs.iter().zip(out_lens) {
+                lens[w] = l;
+            }
+        }
+        lens
+    }
+
+    /// The offline preprocessing plan of a `batch`-item window: every
+    /// correlation the online pass will consume, in consumption order —
+    /// derived by walking the same nodes [`SecureGraph::eval`] runs.
+    pub fn plan(&self, batch: usize) -> Vec<PlanOp> {
+        let lens = self.wire_lens(batch);
+        let mut ops = Vec::new();
+        for node in &self.nodes {
+            let in_lens: Vec<usize> = node.ins.iter().map(|&w| lens[w]).collect();
+            ops.extend(node.op.plan(&in_lens));
+        }
+        ops
+    }
+
+    /// Like [`SecureGraph::plan`], but attributed per node with modeled
+    /// offline bytes — the `repro plan` tape dump.
+    pub fn plan_entries(&self, batch: usize) -> Vec<PlanEntry> {
+        let lens = self.wire_lens(batch);
+        let mut entries = Vec::new();
+        for node in &self.nodes {
+            let in_lens: Vec<usize> = node.ins.iter().map(|&w| lens[w]).collect();
+            for op in node.op.plan(&in_lens) {
+                let shape = op.shape();
+                let bytes = shape.offline_bytes();
+                entries.push(PlanEntry { node: node.op.name(), shape, bytes });
+            }
+        }
+        entries
+    }
+
+    /// Produce a `batch`-window correlation tape ahead of time by
+    /// executing the graph-derived plan (`Phase::Offline` traffic only;
+    /// input-independent). Install with `PartyCtx::install_corr` and the
+    /// next matching [`SecureGraph::eval`] performs no offline-phase
+    /// communication.
+    pub fn prep(&self, ctx: &PartyCtx, batch: usize) -> Vec<Correlation> {
+        run_plan(ctx, &self.plan(batch))
+    }
+
+    /// Run the online pass for a `batch`-item window: the input party
+    /// supplies `batch` flat tensors of [`SecureGraph::item_len`]
+    /// signed values (everyone else passes `None` but must agree on
+    /// `batch` — it is public serving metadata), then every node
+    /// evaluates in graph order. Returns the output wires' values in
+    /// [`GraphBuilder::output`] declaration order.
+    pub fn eval(&self, ctx: &PartyCtx, batch: usize, inputs: Option<&[Vec<i64>]>) -> Vec<Value> {
+        assert!(batch > 0, "empty batch");
+        assert!(
+            (ctx.id == self.input_party) == inputs.is_some(),
+            "exactly the input party supplies inputs"
+        );
+        let enc: Option<Vec<u64>> = inputs.map(|items| {
+            assert_eq!(items.len(), batch, "batch size mismatch at the input party");
+            let mut flat = Vec::with_capacity(batch * self.item_len);
+            for x in items {
+                assert_eq!(x.len(), self.item_len, "input shape mismatch");
+                flat.extend(x.iter().map(|&v| self.input_ring.encode(v)));
+            }
+            flat
+        });
+        let shared = share2(
+            ctx,
+            self.input_party,
+            self.input_ring,
+            enc.as_deref(),
+            batch * self.item_len,
+        );
+
+        // Free each wire after its last consumer (outputs stay alive).
+        let mut last_use = vec![usize::MAX; self.wire_types.len()];
+        for (ni, node) in self.nodes.iter().enumerate() {
+            for &w in &node.ins {
+                last_use[w] = ni;
+            }
+        }
+        for &w in &self.outputs {
+            last_use[w] = usize::MAX;
+        }
+
+        let mut vals: Vec<Option<Value>> = (0..self.wire_types.len()).map(|_| None).collect();
+        vals[0] = Some(Value::A2(shared));
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let outs = {
+                let ins: Vec<&Value> = node
+                    .ins
+                    .iter()
+                    .map(|&w| vals[w].as_ref().expect("wire evaluated before its producer"))
+                    .collect();
+                node.op.eval(ctx, &ins)
+            };
+            debug_assert_eq!(outs.len(), node.outs.len(), "node `{}` arity", node.op.name());
+            for (&w, v) in node.outs.iter().zip(outs) {
+                vals[w] = Some(v);
+            }
+            for &w in &node.ins {
+                if last_use[w] == ni {
+                    vals[w] = None;
+                }
+            }
+        }
+        self.outputs
+            .iter()
+            .map(|&w| vals[w].take().expect("graph output never produced"))
+            .collect()
+    }
+}

@@ -1,7 +1,9 @@
-//! The quantized BERT model: configuration, weights, and the secure
-//! (MPC) inference pipeline.
+//! The quantized BERT model: configuration, weights, the secure op-graph
+//! IR ([`graph`]) and the graph builders ([`secure`]) that express the
+//! MPC inference pipeline (DESIGN.md §Secure op graph).
 
 pub mod config;
 pub mod embedding;
+pub mod graph;
 pub mod secure;
 pub mod weights;

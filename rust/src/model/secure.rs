@@ -1,4 +1,10 @@
-//! The secure quantized BERT pipeline — the paper's system, end to end.
+//! The secure quantized model pipelines, expressed as op graphs: this
+//! module provides the [`SecureOp`] implementations (attention stages,
+//! softmax, LayerNorm residuals, FFN, classifier heads) and the graph
+//! *builders* ([`bert_graph`], [`mlp_graph`]) that assemble them — the
+//! paper's system, end to end, as a declarative description from which
+//! BOTH the offline preprocessing plan and the online MPC pass are
+//! derived (DESIGN.md §Secure op graph).
 //!
 //! Representation invariants between ops:
 //! * activations travel as `⟦·⟧^4` (2PC additive, signed or unsigned 4-bit)
@@ -13,208 +19,51 @@
 //! python oracle); MPC deviates only by the −1 LSB local-truncation
 //! carries at trc points.
 //!
+//! # Fine-grained layer-wise quantization
+//!
+//! Each encoder layer of a built graph carries its OWN scales, LUT
+//! tables and `Π_max` realization ([`LayerQuantConfig`]) — the paper's
+//! layer-wise quantization as a per-layer API rather than global
+//! `BertConfig` knobs. [`LayerQuantConfig::uniform`] reproduces the old
+//! global behavior.
+//!
 //! # Batched inference
 //!
-//! Every stage is evaluated over *row blocks*, so a serving window of `B`
+//! Every op is evaluated over *row blocks*, so a serving window of `B`
 //! sequences runs as ONE MPC pass ([`secure_infer_batch`]): FC layers,
 //! LayerNorm, softmax and the LUT conversions are row-major over flat
 //! slices and simply see `B·s` rows; the per-(sequence, head) attention
 //! matmuls run through the sequence-batched Alg. 3 entry points
 //! (`rss_matmul_trc_seq`), which share each round's openings in a single
 //! message. Online rounds are therefore constant in both the batch size
-//! and the head count, while bytes scale linearly — the round-trip cost
-//! of an inference is amortized across the whole window
-//! (DESIGN.md §Batched serving).
+//! and the head count, while bytes scale linearly (DESIGN.md §Batched
+//! serving).
 
-use crate::core::ring::{sign_extend, R16, R4};
-use crate::model::config::BertConfig;
+use crate::core::prg::Prg;
+use crate::core::ring::{sign_extend, Ring, R16, R32, R4, R6};
+use crate::model::config::{BertConfig, LayerQuantConfig};
+use crate::model::graph::{GraphBuilder, SecureGraph, SecureOp, VType, Value};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, P0, P1};
-use crate::protocols::convert::{convert_to_rss, extend_ring_many, extension_plan};
-use crate::protocols::layernorm::{layernorm_plan, layernorm_rows, LnParams};
+use crate::protocols::argmax::{argmax_rows, gt_table, max_table8};
+use crate::protocols::convert::{convert_to_rss, extend_ring_many, extension_table};
+use crate::protocols::layernorm::{layernorm_rows, LnParams};
 use crate::protocols::lut::{lut_eval, LutTable};
 use crate::protocols::matmul::{
     rss_matmul_full, rss_matmul_trc, rss_matmul_trc_multi, rss_matmul_trc_seq,
 };
-use crate::protocols::max::MaxStrategy;
-use crate::protocols::prep::{run_plan, Correlation, PlanOp};
+use crate::protocols::max::{max_table, tournament_level_sizes, MaxStrategy};
+use crate::protocols::prep::PlanOp;
 use crate::protocols::relu::relu_to_rss16;
-use crate::protocols::softmax::{softmax_plan, softmax_rows, SoftmaxTables};
+use crate::protocols::softmax::{softmax_rows, SoftmaxTables};
+use crate::protocols::sort::{bitonic_level_sizes, minmax_tables};
 use crate::protocols::tables::{ln_div_table, relu16_table};
-use crate::sharing::additive::{reveal2, share2};
-use crate::sharing::rss::{reshare_a2_to_rss, share_rss};
+use crate::sharing::additive::reveal2;
 use crate::sharing::{A2, Rss};
 use crate::transport::Phase;
 
-/// One layer's shared parameters + scale-folded conversion tables.
-pub struct SecureLayer {
-    wq: Rss,
-    wk: Rss,
-    wv: Rss,
-    wo: Rss,
-    w1: Rss,
-    w2: Rss,
-    ln1: LnParams,
-    ln2: LnParams,
-    /// 4→16 extension with `s_att` folded in (signed input).
-    conv_att: LutTable,
-    /// 4→16 extension with `s_av` folded in (unsigned input).
-    conv_av: LutTable,
-}
-
-/// The secure model held by one party after setup.
-pub struct SecureBert {
-    /// The architecture being served.
-    pub cfg: BertConfig,
-    /// Which `Π_max` realization softmax uses (serving knob).
-    pub max_strategy: MaxStrategy,
-    layers: Vec<SecureLayer>,
-    cls_w: Rss,
-    sm: SoftmaxTables,
-}
-
-fn share_scaled_sign(
-    ctx: &PartyCtx,
-    w: Option<&Weights>,
-    name: &str,
-    scale_name: &str,
-    shape_hint: (usize, usize),
-) -> Rss {
-    let len = shape_hint.0 * shape_hint.1;
-    let vals: Option<Vec<u64>> = w.map(|w| {
-        let t = w.tensor(name);
-        let s = w.scale(scale_name);
-        debug_assert_eq!(t.numel(), len);
-        t.data.iter().map(|&v| R16.encode(v * s)).collect()
-    });
-    share_rss(ctx, P0, R16, vals.as_deref(), len)
-}
-
-impl SecureBert {
-    /// Model-owner setup: P0 supplies the (calibrated) weights; all three
-    /// parties end with their share of every `W'`, γ', β and the
-    /// scale-folded conversion tables. Runs under `Phase::Setup`.
-    pub fn setup(ctx: &PartyCtx, cfg: BertConfig, weights: Option<&Weights>) -> SecureBert {
-        assert!(
-            (ctx.id == P0) == weights.is_some(),
-            "exactly P0 supplies weights"
-        );
-        ctx.with_phase(Phase::Setup, |ctx| {
-            let d = cfg.d_model;
-            let mut layers = Vec::with_capacity(cfg.n_layers);
-            for li in 0..cfg.n_layers {
-                let p = |n: &str| format!("layer{li}.{n}");
-                let sc = |w: &Weights, n: &str| w.scale(&format!("layer{li}.s_{n}"));
-                let ln = |g: &str, gs: &str, b: &str| -> LnParams {
-                    let gamma_vals: Option<Vec<u64>> = weights.map(|w| {
-                        let s = sc(w, gs);
-                        w.tensor(&p(g)).data.iter().map(|&v| R16.encode(v * s)).collect()
-                    });
-                    let beta_vals: Option<Vec<u64>> = weights
-                        .map(|w| w.tensor(&p(b)).data.iter().map(|&v| R4.encode(v)).collect());
-                    LnParams {
-                        gamma: share_rss(ctx, P0, R16, gamma_vals.as_deref(), d),
-                        beta: share2(ctx, P0, R4, beta_vals.as_deref(), d),
-                        table: ln_div_table(cfg.ln_sv, cfg.ln_eps),
-                    }
-                };
-                // conversion tables with folded activation-matmul scales;
-                // only P0's entries are real (the content is its secret).
-                let s_att = weights.map(|w| sc(w, "att")).unwrap_or(0);
-                let s_av = weights.map(|w| sc(w, "av")).unwrap_or(0);
-                layers.push(SecureLayer {
-                    wq: share_scaled_sign(ctx, weights, &p("wq"), &p("s_qkv"), (d, d)),
-                    wk: share_scaled_sign(ctx, weights, &p("wk"), &p("s_qkv"), (d, d)),
-                    wv: share_scaled_sign(ctx, weights, &p("wv"), &p("s_qkv"), (d, d)),
-                    wo: share_scaled_sign(ctx, weights, &p("wo"), &p("s_o"), (d, d)),
-                    w1: share_scaled_sign(ctx, weights, &p("w1"), &p("s_f1"), (cfg.d_ff, d)),
-                    w2: share_scaled_sign(ctx, weights, &p("w2"), &p("s_f2"), (d, cfg.d_ff)),
-                    ln1: ln("ln1_g", "g1", "ln1_b"),
-                    ln2: ln("ln2_g", "g2", "ln2_b"),
-                    conv_att: LutTable::from_fn(R4, R16, move |i| {
-                        R16.encode(R4.decode(i) * s_att)
-                    }),
-                    conv_av: LutTable::from_fn(R4, R16, move |i| R16.encode(i as i64 * s_av)),
-                });
-            }
-            let cls_vals: Option<Vec<u64>> = weights.map(|w| {
-                w.tensor("cls.w")
-                    .data
-                    .iter()
-                    .map(|&v| R16.encode(v * cfg.scale_cls))
-                    .collect()
-            });
-            let cls_w = share_rss(ctx, P0, R16, cls_vals.as_deref(), cfg.n_classes * d);
-            SecureBert {
-                cfg,
-                max_strategy: MaxStrategy::Tournament,
-                layers,
-                cls_w,
-                sm: SoftmaxTables::new(cfg.sm_sx),
-            }
-        })
-    }
-}
-
-/// Preprocessing plan for one [`secure_layer_batch`] call: the exact
-/// sequence of LUT invocations (tables, batch sizes, Δ' groupings) the
-/// layer will consume for a window of `batch` sequences, derived from
-/// public shapes only (model config + batch size + `MaxStrategy`).
-/// Mirrors the layer dataflow below step for step; the warm/cold parity
-/// tests in `rust/tests/prep_tests.rs` pin the alignment
-/// (DESIGN.md §Offline preprocessing).
-pub fn plan_layer_batch(m: &SecureBert, li: usize, batch: usize) -> Vec<PlanOp> {
-    let cfg = &m.cfg;
-    let (s, d, dh, nh) = (cfg.seq_len, cfg.d_model, cfg.d_head(), cfg.n_heads);
-    let rows = batch * s;
-    let blocks = batch * nh;
-    let l = &m.layers[li];
-    let ext = |n: usize| extension_plan(R4, R16, true, n);
-    let mut ops = Vec::new();
-    // ---- attention
-    ops.push(ext(rows * d)); // h4 → h16
-    ops.push(PlanOp::lut(l.conv_att.clone(), blocks * s * dh)); // s_att·q extension
-    ops.push(ext(blocks * s * dh)); // k heads
-    ops.extend(softmax_plan(&m.sm, blocks * s, s, m.max_strategy));
-    ops.push(PlanOp::lut(l.conv_av.clone(), blocks * s * s)); // s_av·attn extension
-    ops.push(ext(blocks * s * dh)); // v heads
-    ops.push(ext(rows * d)); // attention context
-    // ---- residual 1 + LN1 (both operands share one opening)
-    ops.push(ext(2 * rows * d));
-    ops.extend(layernorm_plan(&l.ln1, rows, d));
-    // ---- FFN
-    ops.push(ext(rows * d)); // h1 → FC1
-    ops.push(PlanOp::lut(relu16_table(), rows * cfg.d_ff));
-    // ---- residual 2 + LN2
-    ops.push(ext(2 * rows * d));
-    ops.extend(layernorm_plan(&l.ln2, rows, d));
-    ops
-}
-
-/// Preprocessing plan for a whole [`secure_infer_batch`] window of
-/// `batch` sequences: every layer's plan in order plus the classifier's
-/// CLS-row conversion. This is the `spec` the serving coordinator's
-/// correlation pool is keyed by — one plan per (model, bucket shape,
-/// window size) triple. See DESIGN.md §Offline preprocessing.
-pub fn plan_infer_batch(m: &SecureBert, batch: usize) -> Vec<PlanOp> {
-    let mut ops = Vec::new();
-    for li in 0..m.cfg.n_layers {
-        ops.extend(plan_layer_batch(m, li, batch));
-    }
-    // classifier: one 4→16 conversion over the batch's CLS rows
-    ops.push(extension_plan(R4, R16, true, batch * m.cfg.d_model));
-    ops
-}
-
-/// Produce the full correlation tape for a `batch`-sequence window ahead
-/// of time: executes [`plan_infer_batch`] under `Phase::Offline` with
-/// zero dependence on any request. Install the result with
-/// `PartyCtx::install_corr` and the next [`secure_infer_batch`] of the
-/// same shape performs **no** offline-phase communication
-/// (DESIGN.md §Offline preprocessing).
-pub fn prep_infer_batch(ctx: &PartyCtx, m: &SecureBert, batch: usize) -> Vec<Correlation> {
-    run_plan(ctx, &plan_infer_batch(m, batch))
-}
+// ---------------------------------------------------------------------------
+// Local data-movement helpers shared by the attention ops.
 
 /// Gather the per-head column blocks of a `[batch*s, d]` activation into
 /// (sequence, head)-major row blocks `[batch*n_heads*s, dh]` so the
@@ -278,167 +127,884 @@ fn transpose_rss_blocks(x: &Rss, blocks: usize, rows: usize, cols: usize) -> Rss
 /// 4→16 conversion through a caller-supplied table followed by reshare.
 fn convert_via(ctx: &PartyCtx, t: &LutTable, x: &A2) -> Rss {
     let wide = lut_eval(ctx, t, x);
-    reshare_a2_to_rss(ctx, &wide)
+    crate::sharing::rss::reshare_a2_to_rss(ctx, &wide)
 }
 
-/// One secure encoder layer over a batch of sequences. `h4` is `⟦·⟧^4`
-/// `[batch*s, d]` (sequences stacked along the row dimension); returns the
-/// same shape. Online rounds are constant in `batch` and in the head
-/// count: the attention matmuls run sequence-batched, softmax/LayerNorm
-/// advance all rows together, and both residual extensions share one
-/// table opening.
-pub fn secure_layer_batch(
-    ctx: &PartyCtx,
-    m: &SecureBert,
-    li: usize,
-    h4: &A2,
-    batch: usize,
-) -> A2 {
-    let cfg = &m.cfg;
+/// The signed 4→16 extension plan op everyone shares.
+fn ext4to16_plan(n: usize) -> PlanOp {
+    PlanOp::lut(extension_table(R4, R16, true), n)
+}
+
+// ---------------------------------------------------------------------------
+// Op implementations.
+
+/// `Π_convert^{ℓ',ℓ}`: additive → RSS via the sign-extension table.
+struct ConvertOp {
+    from: Ring,
+    to: Ring,
+    signed: bool,
+    label: String,
+}
+
+impl SecureOp for ConvertOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(self.from.bits())]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::rss(self.to.bits())]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0]]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        vec![PlanOp::lut(extension_table(self.from, self.to, self.signed), in_lens[0])]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        vec![Value::Rss(convert_to_rss(ctx, inputs[0].as_a2(), self.to, self.signed))]
+    }
+}
+
+/// Q/K/V projections sharing one collapse round, regrouped into
+/// (sequence, head)-major blocks.
+struct QkvHeadsOp {
+    wq: Rss,
+    wk: Rss,
+    wv: Rss,
+    s: usize,
+    d: usize,
+    nh: usize,
+    label: String,
+}
+
+impl SecureOp for QkvHeadsOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::rss(16)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4); 3]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0]; 3] // nh * dh == d, so the regrouping preserves length
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let h16 = inputs[0].as_rss();
+        let rows = h16.len() / self.d;
+        let batch = rows / self.s;
+        let dh = self.d / self.nh;
+        let ws: [&Rss; 3] = [&self.wq, &self.wk, &self.wv];
+        let qkv = rss_matmul_trc_multi(ctx, h16, &ws, rows, self.d, self.d, 4);
+        qkv.iter()
+            .map(|x| Value::A2(gather_heads(x, batch, self.s, self.d, self.nh, dh)))
+            .collect()
+    }
+}
+
+/// Attention scores per (sequence, head) block: `(s_att·q) · kᵀ`,
+/// truncated to 4 bits — the scale rides in the conversion table.
+struct ScoresOp {
+    conv_att: LutTable,
+    s: usize,
+    dh: usize,
+    label: String,
+}
+
+impl SecureOp for ScoresOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4); 2]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0] / self.dh * self.s]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        vec![PlanOp::lut(self.conv_att.clone(), in_lens[0]), ext4to16_plan(in_lens[1])]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let (qh, kh) = (inputs[0].as_a2(), inputs[1].as_a2());
+        let blocks = qh.len / (self.s * self.dh);
+        let qh16 = convert_via(ctx, &self.conv_att, qh);
+        let kh16 = convert_to_rss(ctx, kh, R16, true);
+        let scores4 = rss_matmul_trc_seq(ctx, &qh16, &kh16, blocks, self.s, self.dh, self.s, 4);
+        vec![Value::A2(scores4)]
+    }
+}
+
+/// Row-wise secure softmax over `[rows, n]` blocks, with this layer's
+/// tables and `Π_max` realization.
+struct SoftmaxOp {
+    t: SoftmaxTables,
+    n: usize,
+    strat: MaxStrategy,
+    label: String,
+}
+
+impl SoftmaxOp {
+    /// The `Π_max` correlations the reduction will consume — per-level
+    /// shapes come from the shared level-structure helpers
+    /// (`max::tournament_level_sizes`, `sort::bitonic_level_sizes`), so
+    /// the plan cannot drift from the reduction the online body runs.
+    fn max_plan_ops(&self, rows: usize) -> Vec<PlanOp> {
+        match self.strat {
+            MaxStrategy::Tournament => tournament_level_sizes(self.n)
+                .into_iter()
+                .map(|half| PlanOp::lut2(max_table(), rows * half, rows * half))
+                .collect(),
+            MaxStrategy::Sort => {
+                let (tmin, tmax) = minmax_tables();
+                bitonic_level_sizes(self.n)
+                    .into_iter()
+                    .map(|ces| PlanOp::lut2_multi(vec![tmin.clone(), tmax.clone()], rows * ces))
+                    .collect()
+            }
+            MaxStrategy::Linear => (1..self.n)
+                .map(|_| PlanOp::lut2(max_table(), rows, rows))
+                .collect(),
+        }
+    }
+}
+
+impl SecureOp for SoftmaxOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0]]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        let rows = in_lens[0] / self.n;
+        let mut ops = self.max_plan_ops(rows);
+        ops.push(PlanOp::lut(self.t.exp.clone(), rows * self.n));
+        ops.push(PlanOp::lut(self.t.mid.clone(), rows));
+        ops.push(PlanOp::lut2(self.t.div.clone(), rows * self.n, rows));
+        ops
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let x = inputs[0].as_a2();
+        let rows = x.len / self.n;
+        vec![Value::A2(softmax_rows(ctx, &self.t, x, rows, self.n, self.strat))]
+    }
+}
+
+/// Attention context per block: `(s_av·attn) · v`, truncated to 4 bits.
+struct AttnVOp {
+    conv_av: LutTable,
+    s: usize,
+    dh: usize,
+    label: String,
+}
+
+impl SecureOp for AttnVOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4); 2]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[1]]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        vec![PlanOp::lut(self.conv_av.clone(), in_lens[0]), ext4to16_plan(in_lens[1])]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let (attn4, vh) = (inputs[0].as_a2(), inputs[1].as_a2());
+        let blocks = vh.len / (self.s * self.dh);
+        let attn16 = convert_via(ctx, &self.conv_av, attn4);
+        let vh16 = convert_to_rss(ctx, vh, R16, true);
+        let vt = transpose_rss_blocks(&vh16, blocks, self.s, self.dh); // blocks of [dh, s] = vᵀ
+        let ctx4 = rss_matmul_trc_seq(ctx, &attn16, &vt, blocks, self.s, self.s, self.dh, 4);
+        vec![Value::A2(ctx4)]
+    }
+}
+
+/// Scatter the head blocks back to `[batch*s, d]` and apply the output
+/// projection `W_o`.
+struct OutProjOp {
+    wo: Rss,
+    s: usize,
+    d: usize,
+    nh: usize,
+    label: String,
+}
+
+impl SecureOp for OutProjOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0]] // blocks*s*dh == batch*s*d
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        vec![ext4to16_plan(in_lens[0])]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let ctxh = inputs[0].as_a2();
+        let dh = self.d / self.nh;
+        let batch = ctxh.len / (self.nh * self.s * dh);
+        let rows = batch * self.s;
+        let ctxcat = scatter_heads(ctxh, batch, self.s, self.d, self.nh, dh);
+        let ctx16 = convert_to_rss(ctx, &ctxcat, R16, true);
+        let o4 = rss_matmul_trc(ctx, &ctx16, &self.wo, rows, self.d, self.d, 4);
+        vec![Value::A2(o4)]
+    }
+}
+
+/// Residual add + LayerNorm: both operands extend to `Z_2^16` with a
+/// single shared table opening, sum locally, then normalize row-wise
+/// with this layer's `T_ln`.
+struct ResidualLnOp {
+    ln: LnParams,
+    d: usize,
+    label: String,
+}
+
+impl SecureOp for ResidualLnOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4); 2]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0]]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        let n = in_lens[0];
+        let rows = n / self.d;
+        vec![
+            ext4to16_plan(in_lens[0] + in_lens[1]), // both residual operands, one opening
+            ext4to16_plan(rows),                    // μ4 → μ16
+            PlanOp::lut(extension_table(R6, R32, true), n), // a6 → Z_2^32
+            PlanOp::lut2(self.ln.table.clone(), n, rows), // T_ln, Δ' per row
+            ext4to16_plan(n),                       // u4 → u16
+        ]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let (a, b) = (inputs[0].as_a2(), inputs[1].as_a2());
+        let rows = a.len / self.d;
+        let ext = extend_ring_many(ctx, &[a, b], R16, true);
+        let res16 = ext[0].add(&ext[1]);
+        vec![Value::A2(layernorm_rows(ctx, &self.ln, &res16, rows, self.d))]
+    }
+}
+
+/// Feed-forward block: FC1 → ReLU (one LUT straight to 16-bit RSS) → FC2.
+struct FfnOp {
+    w1: Rss,
+    w2: Rss,
+    d: usize,
+    d_ff: usize,
+    label: String,
+}
+
+impl SecureOp for FfnOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0]]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        let rows = in_lens[0] / self.d;
+        vec![
+            ext4to16_plan(in_lens[0]), // h → FC1
+            PlanOp::lut(relu16_table(), rows * self.d_ff),
+        ]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let h = inputs[0].as_a2();
+        let rows = h.len / self.d;
+        let h16 = convert_to_rss(ctx, h, R16, true);
+        let u4 = rss_matmul_trc(ctx, &h16, &self.w1, rows, self.d, self.d_ff, 4);
+        let relu16 = relu_to_rss16(ctx, &u4);
+        let f4 = rss_matmul_trc(ctx, &relu16, &self.w2, rows, self.d_ff, self.d, 4);
+        vec![Value::A2(f4)]
+    }
+}
+
+/// Select each sequence's CLS (first) token row — local data movement.
+struct ClsSelectOp {
+    s: usize,
+    d: usize,
+    label: String,
+}
+
+impl SecureOp for ClsSelectOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0] / self.s]
+    }
+
+    fn eval(&self, _ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let h4 = inputs[0].as_a2();
+        let batch = h4.len / (self.s * self.d);
+        let cls_rows: Vec<A2> = (0..batch)
+            .map(|b| h4.slice(b * self.s * self.d, b * self.s * self.d + self.d))
+            .collect();
+        let cls_refs: Vec<&A2> = cls_rows.iter().collect();
+        vec![Value::A2(A2::concat(h4.ring, &cls_refs))]
+    }
+}
+
+/// Classifier head: one matmul collapse and one opening for the whole
+/// window's logit vectors, revealed at P1/P2 (P0 learns nothing).
+struct ClassifierOp {
+    w: Rss,
+    d: usize,
+    n_classes: usize,
+    label: String,
+}
+
+impl SecureOp for ClassifierOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::clear()]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0] / self.d]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        vec![ext4to16_plan(in_lens[0])]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let cls_h = inputs[0].as_a2();
+        let batch = cls_h.len / self.d;
+        let cls16 = convert_to_rss(ctx, cls_h, R16, true);
+        let logits16 = rss_matmul_full(ctx, &cls16, &self.w, batch, self.d, self.n_classes);
+        let revealed = reveal2(ctx, &logits16);
+        let rows: Vec<Vec<i64>> = if revealed.is_empty() {
+            vec![Vec::new(); batch] // P0 learns nothing
+        } else {
+            revealed
+                .chunks(self.n_classes)
+                .map(|c| c.iter().map(|&v| R16.decode(v)).collect())
+                .collect()
+        };
+        vec![Value::Clear(rows)]
+    }
+}
+
+/// Output-minimized classifier head: only the *argmax index* of the
+/// logits is ever opened — the logit values stay secret
+/// (`protocols::argmax`).
+struct ArgmaxHeadOp {
+    w: Rss,
+    d: usize,
+    n_classes: usize,
+    label: String,
+}
+
+impl SecureOp for ArgmaxHeadOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::clear()]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0] / self.d]
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        let batch = in_lens[0] / self.d;
+        let mut ops = vec![ext4to16_plan(in_lens[0])];
+        // The (value, index) tournament: one [T_max, T_gt] shared
+        // opening per level, in the eval body's table order.
+        for half in tournament_level_sizes(self.n_classes) {
+            ops.push(PlanOp::lut2_multi(vec![max_table8(), gt_table()], batch * half));
+        }
+        ops
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let cls_h = inputs[0].as_a2();
+        let batch = cls_h.len / self.d;
+        let cls16 = convert_to_rss(ctx, cls_h, R16, true);
+        let logits16 = rss_matmul_full(ctx, &cls16, &self.w, batch, self.d, self.n_classes);
+        // Requantize logits to 4 bits (local trc), take the oblivious argmax.
+        let logits4 = logits16.trc_top(4);
+        let idx = argmax_rows(ctx, &logits4, batch, self.n_classes);
+        let opened = reveal2(ctx, &idx);
+        let rows: Vec<Vec<i64>> = if opened.is_empty() {
+            vec![Vec::new(); batch]
+        } else {
+            opened.iter().map(|&v| vec![v as i64]).collect()
+        };
+        vec![Value::Clear(rows)]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter sharing: live (MPC setup) vs dry (plan-only graphs).
+
+/// How the builder obtains shared parameters: the live source runs the
+/// real `Π_share` protocols under `Phase::Setup`; the dry source yields
+/// share-less placeholders for plan-only graphs (`repro plan`, byte
+/// accounting) that are never evaluated.
+trait Params {
+    fn rss(&mut self, ring: Ring, vals: Option<Vec<u64>>, len: usize) -> Rss;
+    fn a2(&mut self, ring: Ring, vals: Option<Vec<u64>>, len: usize) -> A2;
+}
+
+struct LiveParams<'a> {
+    ctx: &'a PartyCtx,
+}
+
+impl Params for LiveParams<'_> {
+    fn rss(&mut self, ring: Ring, vals: Option<Vec<u64>>, len: usize) -> Rss {
+        crate::sharing::rss::share_rss(self.ctx, P0, ring, vals.as_deref(), len)
+    }
+
+    fn a2(&mut self, ring: Ring, vals: Option<Vec<u64>>, len: usize) -> A2 {
+        crate::sharing::additive::share2(self.ctx, P0, ring, vals.as_deref(), len)
+    }
+}
+
+struct DryParams;
+
+impl Params for DryParams {
+    fn rss(&mut self, ring: Ring, _vals: Option<Vec<u64>>, _len: usize) -> Rss {
+        Rss { ring, next: Vec::new(), prev: Vec::new() }
+    }
+
+    fn a2(&mut self, ring: Ring, _vals: Option<Vec<u64>>, len: usize) -> A2 {
+        A2::empty(ring, len)
+    }
+}
+
+/// Which classifier head a BERT graph ends in.
+enum Head {
+    Logits,
+    Argmax,
+}
+
+// ---------------------------------------------------------------------------
+// Builders.
+
+fn share_scaled_sign(
+    ps: &mut dyn Params,
+    w: Option<&Weights>,
+    name: &str,
+    scale_name: &str,
+    shape_hint: (usize, usize),
+) -> Rss {
+    let len = shape_hint.0 * shape_hint.1;
+    let vals: Option<Vec<u64>> = w.map(|w| {
+        let t = w.tensor(name);
+        let s = w.scale(scale_name);
+        debug_assert_eq!(t.numel(), len);
+        t.data.iter().map(|&v| R16.encode(v * s)).collect()
+    });
+    ps.rss(R16, vals, len)
+}
+
+/// Assemble the secure BERT op graph. Weight sharing happens in the
+/// exact per-layer order `wq wk wv wo w1 w2 ln1(γ,β) ln2(γ,β)`, then the
+/// classifier — the same `Π_share` sequence the pre-graph setup ran, so
+/// graphs are bit-compatible with it.
+fn build_bert(
+    cfg: &BertConfig,
+    per_layer: &[LayerQuantConfig],
+    weights: Option<&Weights>,
+    head: Head,
+    ps: &mut dyn Params,
+) -> SecureGraph {
+    cfg.validate().expect("invalid BertConfig");
+    assert_eq!(per_layer.len(), cfg.n_layers, "one LayerQuantConfig per layer");
     let (s, d, dh, nh) = (cfg.seq_len, cfg.d_model, cfg.d_head(), cfg.n_heads);
-    let rows = batch * s;
-    debug_assert_eq!(h4.len, rows * d);
-    let l = &m.layers[li];
+    let (mut b, mut h4) = GraphBuilder::new(
+        &format!("bert(l={},d={},s={})", cfg.n_layers, d, s),
+        P1,
+        R4,
+        s * d,
+    );
+    for (li, lq) in per_layer.iter().enumerate() {
+        let p = |n: &str| format!("layer{li}.{n}");
+        let wq = share_scaled_sign(ps, weights, &p("wq"), &p("s_qkv"), (d, d));
+        let wk = share_scaled_sign(ps, weights, &p("wk"), &p("s_qkv"), (d, d));
+        let wv = share_scaled_sign(ps, weights, &p("wv"), &p("s_qkv"), (d, d));
+        let wo = share_scaled_sign(ps, weights, &p("wo"), &p("s_o"), (d, d));
+        let w1 = share_scaled_sign(ps, weights, &p("w1"), &p("s_f1"), (cfg.d_ff, d));
+        let w2 = share_scaled_sign(ps, weights, &p("w2"), &p("s_f2"), (d, cfg.d_ff));
+        let mut ln = |g: &str, gs: &str, beta: &str| -> LnParams {
+            let gamma_vals: Option<Vec<u64>> = weights.map(|w| {
+                let sc = w.scale(&p(gs));
+                w.tensor(&p(g)).data.iter().map(|&v| R16.encode(v * sc)).collect()
+            });
+            let beta_vals: Option<Vec<u64>> =
+                weights.map(|w| w.tensor(&p(beta)).data.iter().map(|&v| R4.encode(v)).collect());
+            LnParams {
+                gamma: ps.rss(R16, gamma_vals, d),
+                beta: ps.a2(R4, beta_vals, d),
+                table: ln_div_table(lq.ln_sv, lq.ln_eps),
+            }
+        };
+        let ln1 = ln("ln1_g", "s_g1", "ln1_b");
+        let ln2 = ln("ln2_g", "s_g2", "ln2_b");
+        // conversion tables with folded activation-matmul scales; only
+        // P0's entries are real (the content is its secret).
+        let s_att = weights.map(|w| w.scale(&p("s_att"))).unwrap_or(0);
+        let s_av = weights.map(|w| w.scale(&p("s_av"))).unwrap_or(0);
+        let conv_att = LutTable::from_fn(R4, R16, move |i| R16.encode(R4.decode(i) * s_att));
+        let conv_av = LutTable::from_fn(R4, R16, move |i| R16.encode(i as i64 * s_av));
 
-    // ---- attention
-    let h16 = convert_to_rss(ctx, h4, R16, true);
-    // Q/K/V projections share one collapse round.
-    let qkv = rss_matmul_trc_multi(ctx, &h16, &[&l.wq, &l.wk, &l.wv], rows, d, d, 4);
-    let (q4, k4, v4) = (&qkv[0], &qkv[1], &qkv[2]);
-
-    // Regroup into (sequence, head) blocks: [batch*n_heads*s, dh].
-    let qh = gather_heads(q4, batch, s, d, nh, dh);
-    let kh = gather_heads(k4, batch, s, d, nh, dh);
-    let vh = gather_heads(v4, batch, s, d, nh, dh);
-    let blocks = batch * nh;
-
-    // scores = (s_att·q) · kᵀ per block, trc to 4 bits — one round for
-    // every sequence and head.
-    let qh16 = convert_via(ctx, &l.conv_att, &qh);
-    let kh16 = convert_to_rss(ctx, &kh, R16, true);
-    let scores4 = rss_matmul_trc_seq(ctx, &qh16, &kh16, blocks, s, dh, s, 4);
-    // softmax rows (all blocks advance level-by-level together)
-    let attn4 = softmax_rows(ctx, &m.sm, &scores4, blocks * s, s, m.max_strategy);
-    // ctx = (s_av·attn) · v per block, trc to 4 bits
-    let attn16 = convert_via(ctx, &l.conv_av, &attn4);
-    let vh16 = convert_to_rss(ctx, &vh, R16, true);
-    let vt = transpose_rss_blocks(&vh16, blocks, s, dh); // blocks of [dh, s] = vᵀ
-    let ctx4 = rss_matmul_trc_seq(ctx, &attn16, &vt, blocks, s, s, dh, 4);
-    let ctxcat = scatter_heads(&ctx4, batch, s, d, nh, dh);
-
-    let ctx16 = convert_to_rss(ctx, &ctxcat, R16, true);
-    let o4 = rss_matmul_trc(ctx, &ctx16, &l.wo, rows, d, d, 4);
-
-    // ---- residual + LN1 (extend both operands to the 16-bit ring with a
-    // single shared opening, add locally)
-    let ext = extend_ring_many(ctx, &[h4, &o4], R16, true);
-    let res16 = ext[0].add(&ext[1]);
-    let h1 = layernorm_rows(ctx, &l.ln1, &res16, rows, d);
-
-    // ---- FFN
-    let h1_16 = convert_to_rss(ctx, &h1, R16, true);
-    let u4 = rss_matmul_trc(ctx, &h1_16, &l.w1, rows, d, cfg.d_ff, 4);
-    let relu16 = relu_to_rss16(ctx, &u4);
-    let f4 = rss_matmul_trc(ctx, &relu16, &l.w2, rows, cfg.d_ff, d, 4);
-
-    let ext2 = extend_ring_many(ctx, &[&h1, &f4], R16, true);
-    let res2 = ext2[0].add(&ext2[1]);
-    layernorm_rows(ctx, &l.ln2, &res2, rows, d)
+        let h16 = b.push(
+            ConvertOp { from: R4, to: R16, signed: true, label: p("convert") },
+            &[h4],
+        )[0];
+        let qkv = b.push(QkvHeadsOp { wq, wk, wv, s, d, nh, label: p("attention.qkv") }, &[h16]);
+        let scores = b.push(
+            ScoresOp { conv_att, s, dh, label: p("attention.scores") },
+            &[qkv[0], qkv[1]],
+        )[0];
+        let attn = b.push(
+            SoftmaxOp {
+                t: SoftmaxTables::new(lq.sm_sx),
+                n: s,
+                strat: lq.max_strategy,
+                label: p("attention.softmax"),
+            },
+            &[scores],
+        )[0];
+        let ctxh = b.push(
+            AttnVOp { conv_av, s, dh, label: p("attention.context") },
+            &[attn, qkv[2]],
+        )[0];
+        let o4 = b.push(OutProjOp { wo, s, d, nh, label: p("attention.out_proj") }, &[ctxh])[0];
+        let h1 = b.push(ResidualLnOp { ln: ln1, d, label: p("res_ln1") }, &[h4, o4])[0];
+        let f4 = b.push(FfnOp { w1, w2, d, d_ff: cfg.d_ff, label: p("ffn") }, &[h1])[0];
+        h4 = b.push(ResidualLnOp { ln: ln2, d, label: p("res_ln2") }, &[h1, f4])[0];
+    }
+    let cls_vals: Option<Vec<u64>> = weights.map(|w| {
+        w.tensor("cls.w")
+            .data
+            .iter()
+            .map(|&v| R16.encode(v * cfg.scale_cls))
+            .collect()
+    });
+    let cls_w = ps.rss(R16, cls_vals, cfg.n_classes * d);
+    let cls = b.push(ClsSelectOp { s, d, label: "cls.select".into() }, &[h4])[0];
+    let out = match head {
+        Head::Logits => b.push(
+            ClassifierOp { w: cls_w, d, n_classes: cfg.n_classes, label: "cls.logits".into() },
+            &[cls],
+        )[0],
+        Head::Argmax => b.push(
+            ArgmaxHeadOp { w: cls_w, d, n_classes: cfg.n_classes, label: "cls.argmax".into() },
+            &[cls],
+        )[0],
+    };
+    b.output(out);
+    b.output(h4);
+    b.finish()
 }
 
-/// One secure encoder layer for a single sequence (`h4` is `[s, d]`) —
-/// the `batch == 1` case of [`secure_layer_batch`].
-pub fn secure_layer(ctx: &PartyCtx, m: &SecureBert, li: usize, h4: &A2) -> A2 {
-    secure_layer_batch(ctx, m, li, h4, 1)
+/// Model-owner setup as a graph builder: P0 supplies the (calibrated)
+/// weights; all three parties end with their shares of every `W'`, γ',
+/// β and the scale-folded conversion tables, wired into a
+/// [`SecureGraph`] whose outputs are `[logits, final hidden]`. Each
+/// layer carries its own [`LayerQuantConfig`]. Runs under
+/// `Phase::Setup`.
+pub fn bert_graph(
+    ctx: &PartyCtx,
+    cfg: &BertConfig,
+    per_layer: &[LayerQuantConfig],
+    weights: Option<&Weights>,
+) -> SecureGraph {
+    assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
+    ctx.with_phase(Phase::Setup, |ctx| {
+        build_bert(cfg, per_layer, weights, Head::Logits, &mut LiveParams { ctx })
+    })
 }
 
-/// Batched secure inference: evaluate `batch` sequences in ONE MPC pass.
+/// [`bert_graph`] with uniform per-layer knobs and the tournament
+/// `Π_max` — the common serving default.
+pub fn bert_graph_default(
+    ctx: &PartyCtx,
+    cfg: &BertConfig,
+    weights: Option<&Weights>,
+) -> SecureGraph {
+    bert_graph(ctx, cfg, &LayerQuantConfig::uniform(cfg, MaxStrategy::Tournament), weights)
+}
+
+/// [`bert_graph`] variant ending in the output-minimized argmax head:
+/// the parties only ever open the predicted class index, never the
+/// logits. Outputs are `[class rows, final hidden]`.
+pub fn bert_classify_graph(
+    ctx: &PartyCtx,
+    cfg: &BertConfig,
+    per_layer: &[LayerQuantConfig],
+    weights: Option<&Weights>,
+) -> SecureGraph {
+    assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
+    ctx.with_phase(Phase::Setup, |ctx| {
+        build_bert(cfg, per_layer, weights, Head::Argmax, &mut LiveParams { ctx })
+    })
+}
+
+/// Build the BERT graph with share-less placeholder parameters: plans,
+/// shapes, fingerprints and byte accounting all work (they are derived
+/// from public shapes only); evaluating a dry graph is a bug. This is
+/// what `repro plan` and the offline bench walk — no session, no
+/// weights, no communication.
+pub fn bert_graph_dry(cfg: &BertConfig, per_layer: &[LayerQuantConfig]) -> SecureGraph {
+    build_bert(cfg, per_layer, None, Head::Logits, &mut DryParams)
+}
+
+// ---------------------------------------------------------------------------
+// A second, non-BERT builder: the IR is not transformer-shaped.
+
+/// Shape of the standalone MLP classifier graph ([`mlp_graph`]) — a
+/// second builder over the same op set, proving the IR is architecture-
+/// agnostic: flat input → FC/ReLU/FC block → revealed logits.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MlpConfig {
+    /// Input feature width (elements per request).
+    pub d_in: usize,
+    /// Hidden width of the FC→ReLU→FC block.
+    pub d_hidden: usize,
+    /// Classifier output classes.
+    pub n_classes: usize,
+    /// Classifier weight scale.
+    pub scale_cls: i64,
+}
+
+impl MlpConfig {
+    /// A small test shape.
+    pub fn tiny() -> MlpConfig {
+        MlpConfig { d_in: 32, d_hidden: 64, n_classes: 4, scale_cls: 16 }
+    }
+}
+
+/// P0's plaintext MLP parameters (±1 weights with folded scales, like
+/// the BERT synth path).
+pub struct MlpWeights {
+    /// FC1 `[d_hidden, d_in]`, row-major, ±1.
+    pub w1: Vec<i64>,
+    /// FC2 `[d_in, d_hidden]`, row-major, ±1.
+    pub w2: Vec<i64>,
+    /// Classifier `[n_classes, d_in]`, row-major, ±1.
+    pub wcls: Vec<i64>,
+    /// Scale folded into `W1'`.
+    pub s1: i64,
+    /// Scale folded into `W2'`.
+    pub s2: i64,
+}
+
+impl MlpWeights {
+    /// Deterministic synthetic parameters for `cfg`.
+    pub fn synth(cfg: &MlpConfig, seed: u64) -> MlpWeights {
+        let mut seed_bytes = [3u8; 16];
+        seed_bytes[..8].copy_from_slice(&seed.to_le_bytes());
+        let mut prg = Prg::new(seed_bytes);
+        let mut sign = |n: usize| -> Vec<i64> {
+            (0..n).map(|_| if prg.next_u8() & 1 == 1 { 1 } else { -1 }).collect()
+        };
+        MlpWeights {
+            w1: sign(cfg.d_hidden * cfg.d_in),
+            w2: sign(cfg.d_in * cfg.d_hidden),
+            wcls: sign(cfg.n_classes * cfg.d_in),
+            s1: 2048,
+            s2: 2048,
+        }
+    }
+}
+
+fn build_mlp(cfg: &MlpConfig, weights: Option<&MlpWeights>, ps: &mut dyn Params) -> SecureGraph {
+    assert!(cfg.d_in > 0 && cfg.d_hidden > 0 && cfg.n_classes > 0, "invalid MlpConfig");
+    let (mut b, x) = GraphBuilder::new(
+        &format!("mlp(d={},h={},c={})", cfg.d_in, cfg.d_hidden, cfg.n_classes),
+        P1,
+        R4,
+        cfg.d_in,
+    );
+    let enc = |v: &[i64], s: i64| -> Vec<u64> { v.iter().map(|&w| R16.encode(w * s)).collect() };
+    let w1 = ps.rss(R16, weights.map(|w| enc(&w.w1, w.s1)), cfg.d_hidden * cfg.d_in);
+    let w2 = ps.rss(R16, weights.map(|w| enc(&w.w2, w.s2)), cfg.d_in * cfg.d_hidden);
+    let wcls = ps.rss(
+        R16,
+        weights.map(|w| enc(&w.wcls, cfg.scale_cls)),
+        cfg.n_classes * cfg.d_in,
+    );
+    let h = b.push(
+        FfnOp { w1, w2, d: cfg.d_in, d_ff: cfg.d_hidden, label: "mlp.ffn".into() },
+        &[x],
+    )[0];
+    let logits = b.push(
+        ClassifierOp { w: wcls, d: cfg.d_in, n_classes: cfg.n_classes, label: "mlp.logits".into() },
+        &[h],
+    )[0];
+    b.output(logits);
+    b.output(h);
+    b.finish()
+}
+
+/// Build the MLP classifier graph; P0 supplies the weights. Runs under
+/// `Phase::Setup`. Outputs are `[logits, hidden]`, like [`bert_graph`].
+pub fn mlp_graph(ctx: &PartyCtx, cfg: &MlpConfig, weights: Option<&MlpWeights>) -> SecureGraph {
+    assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
+    ctx.with_phase(Phase::Setup, |ctx| build_mlp(cfg, weights, &mut LiveParams { ctx }))
+}
+
+/// Share-less MLP graph for planning/accounting (see [`bert_graph_dry`]).
+pub fn mlp_graph_dry(cfg: &MlpConfig) -> SecureGraph {
+    build_mlp(cfg, None, &mut DryParams)
+}
+
+// ---------------------------------------------------------------------------
+// Inference entry points (thin wrappers over the graph walk).
+
+/// Batched secure inference: evaluate `batch` sequences in ONE MPC pass
+/// by walking `g`.
 ///
 /// P1 (data owner) supplies the already-quantized embeddings of every
 /// request in the window (paper: the embedding table is public and
 /// evaluated locally by the data owner); the other parties pass `None`
-/// but must agree on `batch` (it is public serving metadata). Returns the
-/// revealed signed 16-bit logits per request at P1/P2 (empty vectors at
-/// P0), plus the final hidden shares `[batch*s, d]`.
+/// but must agree on `batch` (it is public serving metadata). Returns
+/// the revealed signed 16-bit logits per request at P1/P2 (empty
+/// vectors at P0), plus the final hidden shares.
 ///
 /// Online rounds equal those of a single [`secure_infer`] call — the
-/// whole window's openings travel in the same messages — while bytes and
-/// compute scale linearly in `batch`.
+/// whole window's openings travel in the same messages — while bytes
+/// and compute scale linearly in `batch`.
 pub fn secure_infer_batch(
     ctx: &PartyCtx,
-    m: &SecureBert,
+    g: &SecureGraph,
     batch: usize,
     x4: Option<&[Vec<i64>]>,
 ) -> (Vec<Vec<i64>>, A2) {
-    let cfg = &m.cfg;
-    let (s, d) = (cfg.seq_len, cfg.d_model);
-    assert!(batch > 0, "empty batch");
-    assert!((ctx.id == P1) == x4.is_some(), "exactly P1 supplies inputs");
-    let enc: Option<Vec<u64>> = x4.map(|inputs| {
-        assert_eq!(inputs.len(), batch, "batch size mismatch at P1");
-        let mut flat = Vec::with_capacity(batch * s * d);
-        for x in inputs {
-            assert_eq!(x.len(), s * d, "input shape mismatch");
-            flat.extend(x.iter().map(|&v| R4.encode(v)));
-        }
-        flat
-    });
-    let mut h4 = share2(ctx, P1, R4, enc.as_deref(), batch * s * d);
-    for li in 0..cfg.n_layers {
-        h4 = secure_layer_batch(ctx, m, li, &h4, batch);
-    }
-    // classifier over each sequence's CLS (first) token: all `batch`
-    // logit vectors come out of one matmul collapse and one opening.
-    let cls_rows: Vec<A2> = (0..batch)
-        .map(|b| h4.slice(b * s * d, b * s * d + d))
-        .collect();
-    let cls_refs: Vec<&A2> = cls_rows.iter().collect();
-    let cls_h = A2::concat(R4, &cls_refs); // [batch, d]
-    let cls16 = convert_to_rss(ctx, &cls_h, R16, true);
-    let logits16 = rss_matmul_full(ctx, &cls16, &m.cls_w, batch, d, cfg.n_classes);
-    let revealed = reveal2(ctx, &logits16);
-    let logits: Vec<Vec<i64>> = if revealed.is_empty() {
-        vec![Vec::new(); batch] // P0 learns nothing
-    } else {
-        revealed
-            .chunks(cfg.n_classes)
-            .map(|c| c.iter().map(|&v| R16.decode(v)).collect())
-            .collect()
+    let mut outs = g.eval(ctx, batch, x4);
+    let hidden = match outs.pop() {
+        Some(Value::A2(h)) => h,
+        _ => panic!("graph without a hidden-state output"),
     };
-    (logits, h4)
+    let logits = match outs.pop() {
+        Some(Value::Clear(rows)) => rows,
+        _ => panic!("graph without a logits output"),
+    };
+    (logits, hidden)
 }
 
 /// Full secure inference of a single sequence — the `batch == 1` case of
 /// [`secure_infer_batch`]. P1 (data owner) supplies the already-quantized
 /// embeddings `x4`. Returns the revealed signed 16-bit logits at P1/P2
 /// (empty at P0), plus the final hidden shares.
-pub fn secure_infer(ctx: &PartyCtx, m: &SecureBert, x4: Option<&[i64]>) -> (Vec<i64>, A2) {
+pub fn secure_infer(ctx: &PartyCtx, g: &SecureGraph, x4: Option<&[i64]>) -> (Vec<i64>, A2) {
     let one = x4.map(|x| vec![x.to_vec()]);
-    let (mut logits, h4) = secure_infer_batch(ctx, m, 1, one.as_deref());
+    let (mut logits, h4) = secure_infer_batch(ctx, g, 1, one.as_deref());
     (logits.pop().unwrap(), h4)
 }
 
-/// Output-minimized secure classification: like [`secure_infer`] but the
-/// parties only ever open the *argmax index* of the logits — the logit
-/// values themselves stay secret (`protocols::argmax`). Returns the
-/// predicted class at P1/P2.
-pub fn secure_classify(ctx: &PartyCtx, m: &SecureBert, x4: Option<&[i64]>) -> u64 {
-    let cfg = &m.cfg;
-    let d = cfg.d_model;
-    assert!((ctx.id == P1) == x4.is_some(), "exactly P1 supplies input");
-    let enc: Option<Vec<u64>> = x4.map(|x| x.iter().map(|&v| R4.encode(v)).collect());
-    let mut h4 = share2(ctx, P1, R4, enc.as_deref(), cfg.seq_len * d);
-    for li in 0..cfg.n_layers {
-        h4 = secure_layer(ctx, m, li, &h4);
-    }
-    let cls_h = h4.slice(0, d);
-    let cls16 = convert_to_rss(ctx, &cls_h, R16, true);
-    let logits16 = rss_matmul_full(ctx, &cls16, &m.cls_w, 1, d, cfg.n_classes);
-    // Requantize logits to 4 bits (local trc) and take the oblivious argmax.
-    let logits4 = logits16.trc_top(4);
-    let idx = crate::protocols::argmax::argmax_rows(ctx, &logits4, 1, cfg.n_classes);
-    let opened = reveal2(ctx, &idx);
-    opened.first().copied().unwrap_or(0)
+/// Output-minimized secure classification over a graph built by
+/// [`bert_classify_graph`]: the parties only ever open the *argmax
+/// index* of the logits — the logit values themselves stay secret.
+/// Returns the predicted class at P1/P2 (0 at P0, which learns nothing).
+pub fn secure_classify(ctx: &PartyCtx, g: &SecureGraph, x4: Option<&[i64]>) -> u64 {
+    let one = x4.map(|x| vec![x.to_vec()]);
+    let outs = g.eval(ctx, 1, one.as_deref());
+    let rows = outs[0].as_clear();
+    rows.first().and_then(|r| r.first()).map(|&v| v as u64).unwrap_or(0)
 }
 
 /// Decode a revealed/shared signed-4-bit A2 into plain values (test aid:

@@ -20,7 +20,11 @@ pub fn gt_table() -> LutTable2 {
     LutTable2::from_fn(R4, R4, R8, |a, b| u64::from(R4.decode(b) > R4.decode(a)))
 }
 
-fn max_table8() -> LutTable2 {
+/// The winner-value table of the argmax tournament (signed 4-bit max).
+/// Public so the op graph's argmax head can plan the per-level
+/// `[T_max, T_gt]` shared-opening correlations [`argmax_rows`] consumes,
+/// in that table order.
+pub fn max_table8() -> LutTable2 {
     LutTable2::from_fn(R4, R4, R4, |a, b| R4.encode(R4.decode(a).max(R4.decode(b))))
 }
 
@@ -49,9 +53,11 @@ pub fn argmax_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize) -> A2 {
         },
         len: rows * n,
     };
+    // Level structure shared with the op graph's argmax-head plan via
+    // [`crate::protocols::max::tournament_level_sizes`], so the
+    // tournament cannot drift from the planned correlations.
     let mut width = n;
-    while width > 1 {
-        let half = width / 2;
+    for half in crate::protocols::max::tournament_level_sizes(n) {
         let odd = width % 2 == 1;
         let gather = |v: &Vec<u64>, off: usize| -> Vec<u64> {
             let mut out = Vec::with_capacity(rows * half);

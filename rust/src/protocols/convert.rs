@@ -13,9 +13,12 @@ use crate::sharing::rss::reshare_a2_to_rss;
 use crate::sharing::{A2, Rss};
 
 use super::lut::{lut_eval, LutTable};
-use super::prep::PlanOp;
 
 /// Build the ring-extension table `T(i) = i` (unsigned) or sign-extended.
+/// The op graph plans one `PlanOp::lut` of this table per extension
+/// (an `extend_ring_many` over several tensors is ONE concatenated
+/// lookup, so it plans one op with the summed length) — see
+/// DESIGN.md §Secure op graph.
 pub fn extension_table(from: Ring, to: Ring, signed: bool) -> LutTable {
     LutTable::from_fn(from, to, move |v| {
         if signed {
@@ -24,14 +27,6 @@ pub fn extension_table(from: Ring, to: Ring, signed: bool) -> LutTable {
             v
         }
     })
-}
-
-/// Preprocessing plan for one [`extend_ring`] / [`extend_ring_many`]
-/// invocation of combined length `n` (an `extend_ring_many` over several
-/// tensors is ONE concatenated lookup, so its plan is one op with the
-/// summed length). See DESIGN.md §Offline preprocessing.
-pub fn extension_plan(from: Ring, to: Ring, signed: bool, n: usize) -> PlanOp {
-    PlanOp::lut(extension_table(from, to, signed), n)
 }
 
 /// `⟦x⟧^{ℓ'} -> ⟦x⟧^ℓ` (2PC additive stays 2PC additive).

@@ -13,16 +13,19 @@
 //! setup; β is 2PC-additively shared. Matches `ref.layernorm_quant` up to
 //! the −1 LSB local-truncation carries (mean, variance, γ rescale).
 
-use crate::core::ring::{R16, R32, R4, R6};
+use crate::core::ring::{R16, R32, R6};
 use crate::party::PartyCtx;
 use crate::sharing::{A2, Rss};
 
-use super::convert::{convert_to_rss, extend_ring, extension_table};
+use super::convert::{convert_to_rss, extend_ring};
 use super::lut::{lut2_eval_shared_y, LutTable2};
 use super::matmul::{rss_inner_self, rss_mul_trc};
-use super::prep::PlanOp;
 
-/// Model-owner LayerNorm parameters, already shared.
+/// Model-owner LayerNorm parameters, already shared. The graph op that
+/// wraps [`layernorm_rows`] plans its four lookups (mean re-extension,
+/// 6→32-bit variance extension, the row-shared `T_ln` division, the
+/// γ-multiply re-conversion) in this consumption order — see
+/// DESIGN.md §Secure op graph.
 pub struct LnParams {
     /// `⌊2^12·s_γ⌋ · sign(γ)` over `Z_2^16`, RSS, length `n`.
     pub gamma: Rss,
@@ -30,19 +33,6 @@ pub struct LnParams {
     pub beta: A2,
     /// The `(6,4)`-bit division table `T_ln`.
     pub table: LutTable2,
-}
-
-/// Preprocessing plan for [`layernorm_rows`]: mean re-extension,
-/// 6→32-bit variance extension, the row-shared `T_ln` division, and the
-/// γ-multiply re-conversion, in consumption order
-/// (DESIGN.md §Offline preprocessing).
-pub fn layernorm_plan(p: &LnParams, rows: usize, n: usize) -> Vec<PlanOp> {
-    vec![
-        PlanOp::lut(extension_table(R4, R16, true), rows), // μ4 → μ16
-        PlanOp::lut(extension_table(R6, R32, true), rows * n), // a6 → Z_2^32
-        PlanOp::lut2(p.table.clone(), rows * n, rows),     // T_ln, Δ' per row
-        PlanOp::lut(extension_table(R4, R16, true), rows * n), // u4 → u16
-    ]
 }
 
 /// Row-wise secure LayerNorm. `r` is `[rows, n]` over `Z_2^16`; output is
@@ -132,6 +122,7 @@ fn tile_a2(x: &A2, times: usize) -> A2 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::ring::R4;
     use crate::party::{run_3pc, SessionCfg, P0, P1};
     use crate::protocols::tables::ln_div_table;
     use crate::sharing::additive::{reveal2, share2};

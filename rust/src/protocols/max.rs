@@ -16,7 +16,6 @@ use crate::party::PartyCtx;
 use crate::sharing::A2;
 
 use super::lut::{lut2_eval, LutTable2};
-use super::prep::PlanOp;
 
 /// Which Π_max realization to use.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -38,28 +37,21 @@ pub fn max_table() -> LutTable2 {
     })
 }
 
-/// Preprocessing plan for [`max_rows`]: the exact LUT-call sequence (in
-/// order, with batch geometry) a `max_rows(rows, n, strat)` evaluation
-/// will consume. Mirrors the reduction structure below step for step —
-/// the correlation store's warm/cold parity tests pin the alignment
-/// (DESIGN.md §Offline preprocessing).
-pub fn max_plan(rows: usize, n: usize, strat: MaxStrategy) -> Vec<PlanOp> {
-    let t = max_table();
-    match strat {
-        MaxStrategy::Tournament => {
-            let mut ops = Vec::new();
-            let mut width = n;
-            while width > 1 {
-                let half = width / 2;
-                let odd = width % 2 == 1;
-                ops.push(PlanOp::lut2(t.clone(), rows * half, rows * half));
-                width = half + usize::from(odd);
-            }
-            ops
-        }
-        MaxStrategy::Sort => super::sort::sort_max_plan(rows, n),
-        MaxStrategy::Linear => (1..n).map(|_| PlanOp::lut2(t.clone(), rows, rows)).collect(),
+/// Pair counts of the tournament reduction, level by level, for a row
+/// width of `n` — the public structure the op graph's softmax node
+/// plans its per-level `T_max` correlations from (each level is one
+/// `rows * half` two-input lookup batch). Shared with [`max_rows`] so
+/// the plan and the reduction cannot drift.
+pub fn tournament_level_sizes(n: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut width = n;
+    while width > 1 {
+        let half = width / 2;
+        let odd = width % 2 == 1;
+        sizes.push(half);
+        width = half + usize::from(odd);
     }
+    sizes
 }
 
 /// Row-wise oblivious max: `x` is `[rows, n]` of signed 4-bit shares;
@@ -73,11 +65,13 @@ pub fn max_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize, strat: MaxStrateg
     let t = max_table();
     match strat {
         MaxStrategy::Tournament => {
-            // Current survivors per row, processed level by level.
+            // Current survivors per row, processed level by level; the
+            // level structure comes from [`tournament_level_sizes`] —
+            // the same helper the op graph plans correlations from, so
+            // the reduction cannot drift from the plan.
             let mut cur = x.clone();
             let mut width = n;
-            while width > 1 {
-                let half = width / 2;
+            for half in tournament_level_sizes(n) {
                 let odd = width % 2 == 1;
                 // Gather (a, b) pairs across all rows into flat batches.
                 let gather = |vals: &Vec<u64>, off: usize| -> Vec<u64> {

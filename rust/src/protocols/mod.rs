@@ -5,7 +5,7 @@
 //! | module | paper artifact | notes |
 //! |--------|----------------|-------|
 //! | [`lut`] | `Π_look` (Alg. 1), `Π_look^{b1,b2}` (Alg. 2), §Communication Optimization | single-input, multi-input, shared-input-Δ and multi-table batched openings — online halves only; offline halves live in [`prep`] |
-//! | [`prep`] | the offline phase as a subsystem (Alg. 1/2 offline halves) | ahead-of-time correlation producers, the per-party correlation store, and preprocessing plans; DESIGN.md §Offline preprocessing |
+//! | [`prep`] | the offline phase as a subsystem (Alg. 1/2 offline halves) | ahead-of-time correlation producers and the per-party correlation store; preprocessing plans are derived by walking the secure op graph (`model::graph`), DESIGN.md §Secure op graph |
 //! | [`matmul`] | Alg. 3 (binary-weight FC inner product with high-bit truncation) | RSS linear algebra; sequence-batched and multi-weight entry points collapse a whole serving window in one round |
 //! | [`convert`] | `Π_convert^{ℓ',ℓ}` (§Lookup Table for Share Conversion) | ring extension by LUT + reshare — the step that removes truncation protocols entirely |
 //! | [`softmax`] | §Softmax, Fig. 4 (multi-input softmax LUT) | max-shift, `T_exp`, denominator mid-bits, shared-Δ' division |

@@ -18,10 +18,12 @@
 //!   online-phase communication only.
 //! * A **plan** ([`PlanOp`], [`run_plan`]) is the deterministic sequence
 //!   of producer calls a future online pass will consume, derived from
-//!   public shapes alone (model config + batch size — see
-//!   `model::secure::plan_infer_batch`). [`run_plan`] executes it into a
-//!   *tape* of correlations that `PartyCtx::install_corr` queues for
-//!   consumption.
+//!   public shapes alone. Plans are produced by walking the secure op
+//!   graph (`model::graph::SecureGraph::plan`) — each op declares the
+//!   correlations its own online body consumes, so the plan cannot
+//!   drift from the pass (DESIGN.md §Secure op graph). [`run_plan`]
+//!   executes it into a *tape* of correlations that
+//!   `PartyCtx::install_corr` queues for consumption.
 //! * [`acquire`] is the bridge the online wrappers use: pop the next
 //!   correlation from the store when its shape matches (a pool **hit** —
 //!   zero offline communication on the request path), otherwise fall
@@ -41,13 +43,14 @@
 //! decision depends only on public shape metadata that every party — P0
 //! included, although it stores no share data — records identically.
 
+use crate::core::ring::Ring;
 use crate::party::{PartyCtx, P0, P1, P2};
 use crate::transport::Phase;
 
 use super::lut::{LutTable, LutTable2};
 
 /// Which lookup-protocol flavor a correlation was produced for.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum CorrKind {
     /// Single-input `Π_look` (Alg. 1): one Δ and one masked table per
     /// element.
@@ -66,7 +69,7 @@ pub enum CorrKind {
 /// so matching is by protocol flavor, ring widths and batch geometry
 /// only; end-to-end misalignment is caught by the warm/cold parity tests
 /// instead.
-#[derive(Clone, PartialEq, Eq, Debug)]
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
 pub struct CorrShape {
     /// Protocol flavor.
     pub kind: CorrKind,
@@ -119,6 +122,34 @@ impl CorrShape {
             n,
             groups: n,
         }
+    }
+
+    /// Table-size entries one masked instance holds (`2^x_bits` for a
+    /// single-input lookup, `2^{x_bits+y_bits}` for two-input flavors).
+    fn table_size(&self) -> usize {
+        let x = 1usize << self.x_bits;
+        match self.kind {
+            CorrKind::Lut1 => x,
+            CorrKind::Lut2SharedY | CorrKind::Lut2Multi => x << self.y_bits,
+        }
+    }
+
+    /// Modeled offline bytes this correlation costs to produce: the
+    /// P0 → P2 correction traffic of its producer (masked-table share
+    /// vectors plus the Δ/Δ' corrections), bit-tight packed exactly as
+    /// `Net::send_ring` sends them. The `repro plan` dump and
+    /// `benches/offline.rs` sum these per graph node.
+    pub fn offline_bytes(&self) -> u64 {
+        let size = self.table_size();
+        let mut bytes = 0u64;
+        for &ob in &self.out_bits {
+            bytes += Ring::new(ob).packed_len(self.n * size) as u64;
+        }
+        bytes += Ring::new(self.x_bits).packed_len(self.n) as u64;
+        if self.kind != CorrKind::Lut1 {
+            bytes += Ring::new(self.y_bits).packed_len(self.groups) as u64;
+        }
+        bytes
     }
 }
 
@@ -355,7 +386,8 @@ pub fn acquire(
 /// which table(s), at which batch geometry. A plan is derived purely
 /// from public shapes (model config, batch size, `MaxStrategy`), so the
 /// coordinator can generate a whole window's material before any
-/// request exists — see `model::secure::plan_infer_batch`.
+/// request exists — see `model::graph::SecureGraph::plan`, which
+/// assembles a window's plan by walking the op graph.
 pub enum PlanOp {
     /// A [`lut_offline`] invocation.
     Lut {

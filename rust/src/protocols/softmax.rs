@@ -19,8 +19,7 @@ use crate::party::PartyCtx;
 use crate::sharing::A2;
 
 use super::lut::{lut_eval, lut2_eval_shared_y, LutTable, LutTable2};
-use super::max::{max_plan, max_rows, MaxStrategy};
-use super::prep::PlanOp;
+use super::max::{max_rows, MaxStrategy};
 use super::tables;
 
 /// Precomputed softmax tables (built once per model, reused every layer —
@@ -43,17 +42,6 @@ impl SoftmaxTables {
             div: tables::div_table(),
         }
     }
-}
-
-/// Preprocessing plan for [`softmax_rows`]: the max-reduction plan
-/// followed by the `T_exp`, `T_mid` and row-shared `T_div` lookups, in
-/// consumption order (DESIGN.md §Offline preprocessing).
-pub fn softmax_plan(t: &SoftmaxTables, rows: usize, n: usize, strat: MaxStrategy) -> Vec<PlanOp> {
-    let mut ops = max_plan(rows, n, strat);
-    ops.push(PlanOp::lut(t.exp.clone(), rows * n));
-    ops.push(PlanOp::lut(t.mid.clone(), rows));
-    ops.push(PlanOp::lut2(t.div.clone(), rows * n, rows));
-    ops
 }
 
 /// Row-wise secure softmax: `x` is `[rows, n]` signed 4-bit shares;

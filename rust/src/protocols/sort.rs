@@ -13,7 +13,6 @@
 use crate::core::ring::R4;
 use crate::party::PartyCtx;
 use crate::protocols::lut::{lut2_eval_multi, LutTable2};
-use crate::protocols::prep::PlanOp;
 use crate::sharing::A2;
 
 /// The (min, max) compare-exchange tables over signed 4-bit values.
@@ -130,23 +129,21 @@ pub fn bitonic_sort_rows(ctx: &PartyCtx, x: &A2, rows: usize, n: usize) -> A2 {
     }
 }
 
-/// Preprocessing plan for [`sort_max_rows`]: one shared-opening
-/// (min, max) multi-table correlation per bitonic level, sized
-/// `rows * |level|`. Mirrors [`bitonic_sort_rows`]'s level loop exactly
-/// (DESIGN.md §Offline preprocessing).
-pub fn sort_max_plan(rows: usize, n: usize) -> Vec<PlanOp> {
-    if n == 1 {
+/// Compare-exchange counts of the bitonic network for a row width of
+/// `n` (after padding to the next power of two), level by level — the
+/// public structure the op graph's softmax node plans its per-level
+/// (min, max) shared-opening correlations from. Shared with
+/// [`bitonic_sort_rows`]'s level loop so the plan and the network
+/// cannot drift.
+pub fn bitonic_level_sizes(n: usize) -> Vec<usize> {
+    if n <= 1 {
         return Vec::new();
     }
     let mut m = 1usize;
     while m < n {
         m <<= 1;
     }
-    let (tmin, tmax) = minmax_tables();
-    bitonic_levels(m)
-        .iter()
-        .map(|level| PlanOp::lut2_multi(vec![tmin.clone(), tmax.clone()], rows * level.len()))
-        .collect()
+    bitonic_levels(m).iter().map(|level| level.len()).collect()
 }
 
 /// `Π_max` via sorting (the paper's stated realization): sort ascending,

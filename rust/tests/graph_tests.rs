@@ -1,0 +1,211 @@
+//! Secure op-graph consistency: the SAME graph object derives the
+//! offline plan and runs the online pass, so for every builder × batch
+//! size × `Π_max` realization the graph-derived tape must be consumed
+//! exactly — no leftovers, no inline fallbacks — and a warm (prepped)
+//! window's logits must be bit-identical to a cold one's
+//! (DESIGN.md §Secure op graph).
+
+use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::secure::{
+    bert_classify_graph, bert_graph, bert_graph_dry, mlp_graph, mlp_graph_dry, secure_classify,
+    secure_infer_batch, MlpConfig, MlpWeights,
+};
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::transport::{MetricsSnapshot, Phase};
+
+const STRATS: [MaxStrategy; 3] = [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort];
+
+/// One BERT window on a fresh session: build the graph, optionally prep
+/// its tape through the graph walk, evaluate, and return (P1 logits,
+/// meter, plan length).
+fn run_bert(
+    strat: MaxStrategy,
+    batch: usize,
+    warm: bool,
+) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let inputs = prepared_inputs(&cfg, batch);
+    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+        let per = LayerQuantConfig::uniform(&cfg, strat);
+        let g = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&w) } else { None });
+        let plan_len = g.plan(batch).len();
+        if warm {
+            let tape = g.prep(ctx, batch);
+            assert_eq!(tape.len(), plan_len);
+            ctx.install_corr(tape);
+        }
+        let (logits, _) =
+            secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
+        assert_eq!(ctx.corr_pending(), 0, "tape not fully consumed (plan drift)");
+        (logits, plan_len)
+    });
+    let (logits, plan_len) = outs[1].clone();
+    (logits, snap, plan_len)
+}
+
+/// One MLP window (the non-BERT builder) on a fresh session.
+fn run_mlp(batch: usize, warm: bool) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
+    let mcfg = MlpConfig::tiny();
+    let inputs: Vec<Vec<i64>> = (0..batch)
+        .map(|b| (0..mcfg.d_in).map(|i| ((i + 3 * b) % 15) as i64 - 7).collect())
+        .collect();
+    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+        let mw = if ctx.id == P0 { Some(MlpWeights::synth(&mcfg, 7)) } else { None };
+        let g = mlp_graph(ctx, &mcfg, mw.as_ref());
+        let plan_len = g.plan(batch).len();
+        if warm {
+            let tape = g.prep(ctx, batch);
+            assert_eq!(tape.len(), plan_len);
+            ctx.install_corr(tape);
+        }
+        let (logits, _) =
+            secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
+        assert_eq!(ctx.corr_pending(), 0, "tape not fully consumed (plan drift)");
+        (logits, plan_len)
+    });
+    let (logits, plan_len) = outs[1].clone();
+    (logits, snap, plan_len)
+}
+
+/// The headline property: every builder × batch ∈ {1, 4} × every
+/// `Π_max` strategy consumes its graph-derived tape exactly (warm run:
+/// hits == plan length, zero misses; cold run: misses == plan length)
+/// and warm-vs-cold logits are bit-identical.
+#[test]
+fn plan_consistency_every_builder_batch_strategy() {
+    for strat in STRATS {
+        for batch in [1usize, 4] {
+            let (cold_logits, cold, plan_len) = run_bert(strat, batch, false);
+            let (warm_logits, warm, _) = run_bert(strat, batch, true);
+            assert!(plan_len > 0);
+            assert_eq!(cold.pool_misses(), plan_len as u64, "{strat:?} B={batch}: cold misses");
+            assert_eq!(cold.pool_hits(), 0, "{strat:?} B={batch}");
+            assert_eq!(warm.pool_hits(), plan_len as u64, "{strat:?} B={batch}: warm hits");
+            assert_eq!(warm.pool_misses(), 0, "{strat:?} B={batch}: warm misses");
+            assert_eq!(warm_logits, cold_logits, "{strat:?} B={batch}: warm/cold logits");
+        }
+    }
+    for batch in [1usize, 4] {
+        let (cold_logits, cold, plan_len) = run_mlp(batch, false);
+        let (warm_logits, warm, _) = run_mlp(batch, true);
+        assert!(plan_len > 0);
+        assert_eq!(cold.pool_misses(), plan_len as u64, "mlp B={batch}: cold misses");
+        assert_eq!(warm.pool_hits(), plan_len as u64, "mlp B={batch}: warm hits");
+        assert_eq!(warm.pool_misses(), 0, "mlp B={batch}");
+        assert_eq!(warm_logits, cold_logits, "mlp B={batch}: warm/cold logits");
+    }
+}
+
+/// The dry (share-less) builder models offline cost exactly: a cold
+/// window's metered `Phase::Offline` bytes equal the dry graph's
+/// per-op byte accounting, summed.
+#[test]
+fn dry_plan_bytes_match_metered_offline_traffic() {
+    for batch in [1usize, 2] {
+        let (_, cold, _) = run_bert(MaxStrategy::Tournament, batch, false);
+        let cfg = BertConfig::tiny();
+        let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament));
+        let modeled: u64 = g.plan_entries(batch).iter().map(|e| e.bytes).sum();
+        assert_eq!(
+            cold.total_bytes(Phase::Offline),
+            modeled,
+            "B={batch}: modeled per-op bytes must equal the metered offline traffic"
+        );
+    }
+}
+
+/// Fingerprints key the serving tape pools: equal for structurally
+/// identical graphs (live and dry builds included), different across
+/// strategies and across builders.
+#[test]
+fn fingerprints_track_graph_structure() {
+    let cfg = BertConfig::tiny();
+    let fp = |strat: MaxStrategy| {
+        bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, strat)).fingerprint()
+    };
+    assert_eq!(fp(MaxStrategy::Tournament), fp(MaxStrategy::Tournament));
+    assert_ne!(fp(MaxStrategy::Tournament), fp(MaxStrategy::Sort));
+    assert_ne!(fp(MaxStrategy::Tournament), fp(MaxStrategy::Linear));
+    assert_ne!(fp(MaxStrategy::Tournament), mlp_graph_dry(&MlpConfig::tiny()).fingerprint());
+
+    // The live build (with real shares) has the same structure, hence
+    // the same fingerprint, as the dry build.
+    let (w, _) = prepared_model(cfg);
+    let (fps, _) = run_3pc(SessionCfg::default(), move |ctx| {
+        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&w) } else { None }).fingerprint()
+    });
+    assert_eq!(fps[0], fp(MaxStrategy::Tournament));
+    assert_eq!(fps[0], fps[1]);
+    assert_eq!(fps[1], fps[2]);
+}
+
+/// Per-layer knobs are a real per-layer API: mixing strategies across
+/// layers builds, plans, and serves a consistent warm window.
+#[test]
+fn mixed_per_layer_strategies_stay_plan_consistent() {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let inputs = prepared_inputs(&cfg, 2);
+    let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+        let mut per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        per[1].max_strategy = MaxStrategy::Sort;
+        per[1].sm_sx = 0.25; // per-layer softmax scale
+        let g = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&w) } else { None });
+        let tape = g.prep(ctx, 2);
+        ctx.install_corr(tape);
+        secure_infer_batch(ctx, &g, 2, if ctx.id == P1 { Some(&inputs) } else { None });
+        assert_eq!(ctx.corr_pending(), 0);
+    });
+    assert_eq!(snap.pool_misses(), 0, "mixed per-layer plan must cover the pass");
+    assert!(snap.pool_hits() > 0);
+}
+
+/// The output-minimized classify head is also graph-derived: its tape
+/// (including the argmax tournament's correlations) is consumed exactly
+/// and warm/cold classes agree.
+#[test]
+fn classify_graph_is_plan_consistent() {
+    let cfg = BertConfig::tiny();
+    let run = |warm: bool| -> (u64, MetricsSnapshot) {
+        let (w, x) = prepared_model(cfg);
+        let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+            let weights = if ctx.id == P0 { Some(&w) } else { None };
+            let g = bert_classify_graph(ctx, &cfg, &per, weights);
+            if warm {
+                let tape = g.prep(ctx, 1);
+                ctx.install_corr(tape);
+            }
+            let class = secure_classify(ctx, &g, if ctx.id == P1 { Some(&x) } else { None });
+            assert_eq!(ctx.corr_pending(), 0);
+            class
+        });
+        (outs[1], snap)
+    };
+    let (cold_class, _) = run(false);
+    let (warm_class, warm_snap) = run(true);
+    assert_eq!(warm_snap.pool_misses(), 0, "classify tape must cover argmax too");
+    assert!(warm_snap.pool_hits() > 0);
+    assert_eq!(warm_class, cold_class);
+    assert!(warm_class < cfg.n_classes as u64);
+}
+
+/// Batch scaling is derived from shapes: the plan for B = 4 has the same
+/// op sequence as B = 1 with 4× the element counts (groups included).
+#[test]
+fn plan_scales_linearly_with_batch() {
+    let cfg = BertConfig::tiny();
+    let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament));
+    let p1 = g.plan_entries(1);
+    let p4 = g.plan_entries(4);
+    assert_eq!(p1.len(), p4.len(), "same op sequence regardless of batch");
+    for (a, b) in p1.iter().zip(&p4) {
+        assert_eq!(a.node, b.node);
+        assert_eq!(a.shape.kind, b.shape.kind);
+        assert_eq!(b.shape.n, 4 * a.shape.n, "{}: n must scale by the batch", a.node);
+    }
+}

@@ -13,8 +13,8 @@
 
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{plan_infer_batch, prep_infer_batch, SecureBert};
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::secure::{bert_graph, secure_infer_batch};
 use ppq_bert::model::weights::Weights;
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::protocols::max::MaxStrategy;
@@ -100,8 +100,10 @@ fn warm_pool_has_zero_offline_traffic_and_identical_logits() {
     }
 }
 
-/// The preprocessing plan mirrors the online pass exactly: the tape is
-/// consumed item for item (every acquire is a hit, nothing left over).
+/// The graph-derived tape aligns with the online walk exactly: the tape
+/// is consumed item for item (every acquire is a hit, nothing left
+/// over). The exhaustive builder × batch × strategy sweep lives in
+/// `rust/tests/graph_tests.rs`; this pins the session-facing shape.
 #[test]
 fn prep_tape_aligns_with_online_consumption() {
     let cfg = BertConfig::tiny();
@@ -111,17 +113,13 @@ fn prep_tape_aligns_with_online_consumption() {
         let (wc, inc) = (w, inputs);
         let (plan_lens, snap) = {
             let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-                let m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&wc) } else { None });
-                let plan_len = plan_infer_batch(&m, batch).len();
-                let tape = prep_infer_batch(ctx, &m, batch);
+                let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+                let m = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&wc) } else { None });
+                let plan_len = m.plan(batch).len();
+                let tape = m.prep(ctx, batch);
                 assert_eq!(tape.len(), plan_len);
                 ctx.install_corr(tape);
-                ppq_bert::model::secure::secure_infer_batch(
-                    ctx,
-                    &m,
-                    batch,
-                    if ctx.id == P1 { Some(&inc) } else { None },
-                );
+                secure_infer_batch(ctx, &m, batch, if ctx.id == P1 { Some(&inc) } else { None });
                 assert_eq!(ctx.corr_pending(), 0, "tape fully consumed");
                 plan_len
             });
@@ -134,8 +132,8 @@ fn prep_tape_aligns_with_online_consumption() {
     }
 }
 
-/// The plan covers every MaxStrategy (the softmax max-reduction is the
-/// only strategy-dependent LUT sequence).
+/// The graph walk covers every MaxStrategy (the softmax max-reduction
+/// is the only strategy-dependent LUT sequence).
 #[test]
 fn prep_covers_every_max_strategy() {
     let cfg = BertConfig::tiny();
@@ -144,16 +142,11 @@ fn prep_covers_every_max_strategy() {
         let inputs = prepared_inputs(&cfg, 2);
         let (wc, inc) = (w, inputs);
         let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let mut m = SecureBert::setup(ctx, cfg, if ctx.id == P0 { Some(&wc) } else { None });
-            m.max_strategy = strat;
-            let tape = prep_infer_batch(ctx, &m, 2);
+            let per = LayerQuantConfig::uniform(&cfg, strat);
+            let m = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&wc) } else { None });
+            let tape = m.prep(ctx, 2);
             ctx.install_corr(tape);
-            ppq_bert::model::secure::secure_infer_batch(
-                ctx,
-                &m,
-                2,
-                if ctx.id == P1 { Some(&inc) } else { None },
-            );
+            secure_infer_batch(ctx, &m, 2, if ctx.id == P1 { Some(&inc) } else { None });
             assert_eq!(ctx.corr_pending(), 0);
         });
         assert_eq!(snap.pool_misses(), 0, "{strat:?}: plan must cover the whole pass");
