@@ -22,14 +22,18 @@
 //!   cargo bench --bench offline
 //!   CI smoke: cargo bench --bench offline -- --quick --json BENCH_ci.json
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, BenchOpts, Table};
+use ppq_bert::coordinator::session::{prep_into_pool, serve_window};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
 use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
-use ppq_bert::model::secure::bert_graph_dry;
+use ppq_bert::model::secure::{bert_graph, bert_graph_dry};
+use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
 use ppq_bert::protocols::max::MaxStrategy;
-use ppq_bert::transport::{MetricsSnapshot, NetParams, Phase};
+use ppq_bert::protocols::tape_store::{TapePool, TapeStore};
+use ppq_bert::transport::{build_mesh, Metrics, MetricsSnapshot, NetParams, Phase};
 
 fn main() {
     let opts = BenchOpts::from_env_args();
@@ -142,4 +146,98 @@ fn main() {
         g.name(),
         total as f64 / 1048576.0,
     ));
+
+    // Restart-to-first-warm-window: the durability path measured end to
+    // end (DESIGN.md §Durability & recovery). Three parties prep one
+    // window's correlation tape, persist their pools through
+    // `TapeStore`, and the deployment is discarded. The timed region is
+    // everything a restarted deployment does before its first logits:
+    // open the stores, stream the tapes back (CRC-checked), rebuild the
+    // model setup, and serve one window — which must consume the
+    // reloaded tape, i.e. carry zero request-path offline bytes.
+    let session_label = *b"bench-recovery-0";
+    let scfg = SessionCfg::default();
+    let (weights, input) = prepared_model(cfg);
+    let weights = Arc::new(weights);
+    let dirs: Vec<std::path::PathBuf> = (0..3)
+        .map(|id| std::env::temp_dir().join(format!("ppq_bench_recovery_p{id}")))
+        .collect();
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+
+    // Seed the stores: one warm tape per party, persisted, then dropped
+    // (as a crash would drop it).
+    let nets = build_mesh(Arc::new(Metrics::new()), None);
+    let mut seed = Vec::new();
+    for (id, net) in nets.into_iter().enumerate() {
+        let weights = Arc::clone(&weights);
+        let dir = dirs[id].clone();
+        seed.push(std::thread::spawn(move || {
+            let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
+            let w = if id == P0 { Some(&*weights) } else { None };
+            let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+            let model = bert_graph(&ctx, &cfg, &per_layer, w);
+            let mut pool = TapePool::new();
+            prep_into_pool(&ctx, &model, &mut pool, 1);
+            let store = TapeStore::new(dir, id, session_label).expect("open tape store");
+            store.save_pool(&pool).expect("persist pool");
+            ctx.flush_timer();
+        }));
+    }
+    for h in seed {
+        h.join().expect("seed party");
+    }
+
+    let restart_metrics = Arc::new(Metrics::new());
+    let nets = build_mesh(Arc::clone(&restart_metrics), None);
+    let (logits_tx, logits_rx) = std::sync::mpsc::channel();
+    let start = Instant::now();
+    let mut restarted = Vec::new();
+    for (id, net) in nets.into_iter().enumerate() {
+        let weights = Arc::clone(&weights);
+        let dir = dirs[id].clone();
+        let input = input.clone();
+        let logits_tx = logits_tx.clone();
+        restarted.push(std::thread::spawn(move || {
+            let store = TapeStore::new(dir, id, session_label).expect("open tape store");
+            let (mut pool, warnings) = store.load_pool();
+            assert!(warnings.is_empty(), "tape reload warnings: {warnings:?}");
+            let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
+            let w = if id == P0 { Some(&*weights) } else { None };
+            let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+            let model = bert_graph(&ctx, &cfg, &per_layer, w);
+            let inputs = if id == P1 { Some(vec![input]) } else { None };
+            let logits = serve_window(&ctx, &model, &mut pool, 1, inputs.as_deref());
+            ctx.flush_timer();
+            if id == P1 {
+                let _ = logits_tx.send(logits);
+            }
+        }));
+    }
+    for h in restarted {
+        h.join().expect("restarted party");
+    }
+    let wall = start.elapsed();
+    let logits = logits_rx.recv().expect("warm logits after restart");
+    assert!(!logits.is_empty() && logits[0].len() == cfg.n_classes);
+    let d = restart_metrics.snapshot();
+    let offline_bytes = d.total_bytes(Phase::Offline);
+    assert_eq!(offline_bytes, 0, "the restarted window must consume the reloaded tape (warm)");
+    opts.record("recovery_warm_window", wall, offline_bytes, d.max_rounds(Phase::Online));
+    for dir in &dirs {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    let mut t3 = Table::new(&["restart path", "wall", "req-path offline B", "online rounds"]);
+    t3.row(vec![
+        "tape reload + setup + 1 window".to_string(),
+        fmt_dur(wall),
+        offline_bytes.to_string(),
+        d.max_rounds(Phase::Online).to_string(),
+    ]);
+    t3.print(
+        "restart-to-first-warm-window: a party rebuilt from its durable tape store serves its \
+         first window with zero request-path offline traffic (DESIGN.md §Durability & recovery)",
+    );
 }

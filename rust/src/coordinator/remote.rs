@@ -1,5 +1,6 @@
 //! Multi-process 3-party deployment with a CONCURRENT serving frontend
-//! (DESIGN.md §Concurrent serving).
+//! (DESIGN.md §Concurrent serving) and crash recovery (DESIGN.md
+//! §Durability & recovery).
 //!
 //! Each party process accepts many simultaneous client connections: one
 //! reader thread per client feeds a shared admission queue, and a
@@ -24,6 +25,26 @@
 //! and no client misbehavior can desynchronize the parties, because the
 //! parties' command stream has a single author.
 //!
+//! **Durability & recovery.** A party started with `--tape-dir` persists
+//! its correlation pool and a boundary snapshot ([`RecoveryState`]) at
+//! every completed event (window or prep), via
+//! [`protocols::tape_store`](crate::protocols::tape_store). When a party
+//! dies, the survivors' in-flight window aborts (caught, its requests
+//! refused with clean [`wire::Tag::Refused`] frames) and every party
+//! enters the same recovery loop: drop all mesh links, re-establish them
+//! fresh (the restarted party rejoins through the ordinary handshake,
+//! presenting its persisted epoch), deterministically re-run Setup, then
+//! reconcile boundaries — parties are at most ONE completed event apart,
+//! so the party that is ahead rolls that event back (two-deep cursor
+//! history) and pool depths are aligned per key by dropping from the
+//! FRONT, where aborted windows burned their tapes. After reconcile the
+//! restarted party's pools are warm again: its next window runs with
+//! zero offline bytes and logits bit-identical to an uninterrupted
+//! deployment. P1 wakes control-blocked followers with
+//! [`wire::Tag::Resync`] on every attempt and re-dials both control
+//! links after success; a deployment that cannot recover within the
+//! reconnect budget refuses its queue and drains with exit code 0.
+//!
 //! [`run_party`] is the body of `repro party --id N`; [`RemoteClient`]
 //! is the other end — it submits pipelined requests, waits for
 //! completions carrying per-request amortized window metrics
@@ -34,6 +55,8 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -47,12 +70,17 @@ use crate::model::secure::bert_graph;
 use crate::model::weights::{synth_input, Weights};
 use crate::party::{PartyCtx, SessionCfg, P0, P1, P2};
 use crate::protocols::max::MaxStrategy;
+use crate::protocols::tape_store::{RecoveryState, TapeStore};
 use crate::runtime::native;
-use crate::transport::tcp::{accept_peer, dial_retry, TcpMesh, TcpTransport};
+use crate::transport::tcp::{accept_peer, dial_retry, reestablish, TcpMesh, TcpTransport};
 use crate::transport::wire::{self, Accepted, ServeStats, Tag, WindowReport};
-use crate::transport::{Metrics, MetricsSnapshot, Net, Phase};
+use crate::transport::{Metrics, MetricsSnapshot, Net, PartyChannels, Phase};
 
 use super::session::{prep_into_pool, serve_window, CorrPool};
+
+/// Fault-injection sentinel: a window id that is never reached, so the
+/// armed-fault atomic can live disarmed at this value.
+const FAULT_DISARMED: u64 = u64::MAX;
 
 /// Wire-path serving knobs of one party process (the deployment-side
 /// mirror of `ServerConfig`'s batching knobs; all three parties should
@@ -108,12 +136,27 @@ pub struct PartyOpts {
     pub weights_seed: u64,
     /// Wire-path batching/backpressure knobs.
     pub serve: ServeOpts,
+    /// Directory for the durable correlation store. `None` disables
+    /// persistence: the party still recovers its mesh after a peer
+    /// failure, but restarts cold (DESIGN.md §Durability & recovery).
+    pub tape_dir: Option<PathBuf>,
+    /// Fault injection: abort the process (as if `kill -9`'d) when this
+    /// window id reaches its manifest. `None` disarms. Can also be
+    /// armed remotely over the wire ([`Tag::Fault`]).
+    pub fault_window: Option<u64>,
+    /// How many times a recovery re-runs mesh re-establishment before
+    /// the party gives up and drains.
+    pub reconnect_attempts: u32,
+    /// Pause between recovery attempts; also the per-attempt budget for
+    /// waiting on rejoining peers.
+    pub reconnect_backoff: Duration,
 }
 
 impl PartyOpts {
     /// Defaults for a deployment of `cfg` as party `id`: default session
-    /// seed, tournament max, the bench harness's weight seed (42), and
-    /// default serving knobs.
+    /// seed, tournament max, the bench harness's weight seed (42),
+    /// default serving knobs, no durable store, and a one-minute
+    /// reconnect budget (60 attempts x 1 s backoff).
     pub fn new(id: usize, cfg: BertConfig) -> PartyOpts {
         PartyOpts {
             id,
@@ -123,6 +166,10 @@ impl PartyOpts {
             max_strategy: MaxStrategy::Tournament,
             weights_seed: 42,
             serve: ServeOpts::default(),
+            tape_dir: None,
+            fault_window: None,
+            reconnect_attempts: 60,
+            reconnect_backoff: Duration::from_secs(1),
         }
     }
 }
@@ -252,6 +299,18 @@ struct Shared {
     id: usize,
     /// Values per request (`seq_len * d_model`) this deployment serves.
     input_len: usize,
+    /// Current recovery epoch: acked in every handshake (so rejoining
+    /// peers adopt it) and reported in [`ServeStats`] as the number of
+    /// completed recoveries.
+    epoch: AtomicU64,
+    /// Gauge: correlation tapes currently pooled (all keys).
+    tapes: AtomicU64,
+    /// Fault injection: window id to abort at ([`FAULT_DISARMED`] when
+    /// unarmed); armed by `--fault-window` or a [`Tag::Fault`] frame.
+    fault_window: AtomicU64,
+    /// Window wall-latency histogram, log2-millisecond buckets
+    /// ([`wire::latency_bucket`]).
+    lat_hist: Mutex<[u64; wire::LAT_BUCKETS]>,
 }
 
 /// Validate and enqueue one request at P1. Returns `None` when admitted
@@ -325,9 +384,9 @@ fn ack_shutdown_waiters(shared: &Shared) {
 }
 
 /// Per-client reader thread: parse frames, admit requests (P1) or
-/// register response routes (P0/P2), answer metrics/stats queries, and
-/// clean up on disconnect. Protocol violations drop the *connection*,
-/// never the party.
+/// register response routes (P0/P2), answer metrics/stats queries, arm
+/// fault injection, and clean up on disconnect. Protocol violations
+/// drop the *connection*, never the party.
 fn client_reader(shared: Arc<Shared>, conn: u32, stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     // A wedged client must not stall the serving thread's reply writes.
@@ -413,17 +472,36 @@ fn client_reader(shared: Arc<Shared>, conn: u32, stream: TcpStream) {
                 } else {
                     0
                 };
+                let lat_hist = *shared.lat_hist.lock().expect("latency histogram poisoned");
                 let stats = ServeStats {
                     windows: shared.counters.windows.load(Ordering::Relaxed),
                     served: shared.counters.served.load(Ordering::Relaxed),
                     refused: shared.counters.refused.load(Ordering::Relaxed),
                     preps: shared.counters.preps.load(Ordering::Relaxed),
                     queued,
+                    tapes: shared.tapes.load(Ordering::Relaxed),
+                    epoch: shared.epoch.load(Ordering::Relaxed),
+                    lat_hist,
                 };
                 if send_frame(&writer, Tag::Stats, &stats.to_bytes()).is_err() {
                     break;
                 }
             }
+            Tag::Fault => match wire::decode_fault(&payload) {
+                Ok(window) => {
+                    shared.fault_window.store(window, Ordering::SeqCst);
+                    // Acked (BindAck doubles as the generic empty ack)
+                    // so a test driver knows the fault is armed before
+                    // it submits the requests that trip it.
+                    if send_frame(&writer, Tag::BindAck, &[]).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    let _ = send_frame(&writer, Tag::Error, b"malformed fault frame");
+                    break;
+                }
+            },
             Tag::Shutdown => {
                 shared
                     .shutdown_waiters
@@ -453,8 +531,9 @@ fn client_reader(shared: Arc<Shared>, conn: u32, stream: TcpStream) {
 }
 
 /// The party's accept loop (runs for the process lifetime): handshake
-/// every connection, spawn a reader thread per client, hand the control
-/// link to the serving thread, and drop everything else.
+/// every connection, spawn a reader thread per client, hand control
+/// links to the serving thread, and park rejoining party links for the
+/// recovery loop.
 fn accept_loop(
     listener: TcpListener,
     session: [u8; 16],
@@ -462,10 +541,12 @@ fn accept_loop(
     shared: Arc<Shared>,
     conn_alloc: Arc<AtomicU32>,
     coord_tx: Sender<TcpStream>,
+    party_tx: Sender<(u8, TcpStream, u64)>,
 ) {
     loop {
+        let epoch = shared.epoch.load(Ordering::SeqCst);
         let Some((stream, accepted)) =
-            accept_peer(&listener, &session, shared.id as u8, &conn_alloc)
+            accept_peer(&listener, &session, shared.id as u8, &conn_alloc, epoch)
         else {
             continue;
         };
@@ -476,43 +557,481 @@ fn accept_loop(
             }
             // Only a token-bearing link (proof of the master seed, i.e.
             // the real P1) may become the control plane; forgeries are
-            // dropped. The serving thread honors the first verified
-            // link; a failed send means it already has one (or exited).
+            // dropped. The serving thread honors the newest verified
+            // link; a failed send means it already exited.
             Accepted::Coordinator { token } => {
                 if token == coord_token {
                     let _ = coord_tx.send(stream);
                 }
             }
-            // The mesh is long established; a late party link is a
-            // misconfiguration — drop it, keep serving.
-            Accepted::Party(_) => {}
+            // A peer re-dialing after a failure: parked for the
+            // recovery loop, which drains this channel during mesh
+            // re-establishment (latest connection per peer wins).
+            Accepted::Party { id, epoch } => {
+                let _ = party_tx.send((id, stream, epoch));
+            }
         }
     }
 }
 
-/// Run one party over an already-bound listener: establish the mesh, do
-/// model setup, then serve clients concurrently until a drain completes.
-/// Blocks for the lifetime of the deployment.
-pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
-    assert!(opts.id < 3, "party id out of range");
-    let session = session_id(opts.scfg.master_seed, &opts.cfg);
-    let coord_token = control_token(opts.scfg.master_seed, &opts.cfg);
-    let TcpMesh { chans, listener, parked_clients, parked_coords, conn_alloc } =
-        TcpTransport::new(opts.id, listener, opts.peers.clone(), session).establish()?;
-    let metrics = Arc::new(Metrics::new());
-    let net = Net::new(opts.id, chans, Arc::clone(&metrics), opts.scfg.realtime);
+/// The rebuildable half of a party process: everything a recovery tears
+/// down and reconstructs — the mesh channels (inside the `Net`), the
+/// PRG streams, and the graph instance with its masked tables. The
+/// correlation pool and the boundary record live OUTSIDE this struct so
+/// they survive rebuilds.
+struct PartyState {
+    ctx: PartyCtx,
+    model: SecureGraph,
+}
+
+/// Build a party's protocol state over established channels: fresh
+/// PRGs, then the (deterministic) Setup pass. Used both at startup and
+/// on every recovery rebuild — re-running Setup re-derives the same
+/// graph instance bit-for-bit, which is what keeps persisted tapes
+/// valid across restarts.
+fn build_state(
+    opts: &PartyOpts,
+    chans: PartyChannels,
+    metrics: &Arc<Metrics>,
+    weights: Option<&Weights>,
+) -> PartyState {
+    let net = Net::new(opts.id, chans, Arc::clone(metrics), opts.scfg.realtime);
     // Protocol PRGs derive from the RAW master seed (bit-for-bit parity
     // with in-process sessions); only the handshake uses the shape-bound
     // session id.
     let ctx = PartyCtx::new(opts.id, net, opts.scfg.master_seed, opts.scfg.threads);
+    let per_layer = LayerQuantConfig::uniform(&opts.cfg, opts.max_strategy);
+    let model = bert_graph(&ctx, &opts.cfg, &per_layer, weights);
+    ctx.flush_timer();
+    PartyState { ctx, model }
+}
+
+/// Advance the boundary record past one completed event and snapshot
+/// the cursors (two-deep, so a later reconcile can roll this event
+/// back).
+fn advance_boundary(
+    ctx: &PartyCtx,
+    recov: &mut RecoveryState,
+    last_prep_key: Option<(u64, usize)>,
+) {
+    recov.prev_cursors = recov.cursors;
+    recov.cursors = ctx.prg_cursors();
+    recov.seq += 1;
+    recov.last_prep_key = last_prep_key;
+}
+
+/// Persist the pool and boundary record (when a store is configured)
+/// and refresh the pooled-tapes gauge. Persistence failures are
+/// reported but never fatal: the party keeps serving, it just restarts
+/// colder.
+fn persist(store: Option<&TapeStore>, pool: &CorrPool, recov: &RecoveryState, shared: &Shared) {
+    shared
+        .tapes
+        .store(pool.values().map(|q| q.len() as u64).sum(), Ordering::Relaxed);
+    if let Some(store) = store {
+        if let Err(e) = store.save_pool(pool) {
+            eprintln!("party {}: tape save failed: {e:#}", shared.id);
+        }
+        if let Err(e) = store.save_state(recov) {
+            eprintln!("party {}: state save failed: {e:#}", shared.id);
+        }
+    }
+}
+
+/// Record one window's wall latency into the log2-millisecond histogram.
+fn record_latency(shared: &Shared, wall_ns: u64) {
+    let bucket = wire::latency_bucket(wall_ns / 1_000_000);
+    shared.lat_hist.lock().expect("latency histogram poisoned")[bucket] += 1;
+}
+
+/// Encode this party's per-key pool depths for the reconcile exchange:
+/// `[count u64][(fingerprint u64, batch u64, depth u64)]*`, empty
+/// queues omitted.
+fn encode_depths(pool: &CorrPool) -> Vec<u8> {
+    let live: Vec<(&(u64, usize), usize)> =
+        pool.iter().filter(|(_, q)| !q.is_empty()).map(|(k, q)| (k, q.len())).collect();
+    let mut out = Vec::with_capacity(8 + live.len() * 24);
+    out.extend_from_slice(&(live.len() as u64).to_le_bytes());
+    for (&(fp, batch), depth) in live {
+        out.extend_from_slice(&fp.to_le_bytes());
+        out.extend_from_slice(&(batch as u64).to_le_bytes());
+        out.extend_from_slice(&(depth as u64).to_le_bytes());
+    }
+    out
+}
+
+/// Strict decode of a peer's depth map (length-validated before any
+/// allocation; trailing bytes rejected).
+fn decode_depths(bytes: &[u8]) -> Result<HashMap<(u64, usize), u64>> {
+    if bytes.len() < 8 {
+        bail!("depth map: truncated header");
+    }
+    let n = u64::from_le_bytes(bytes[..8].try_into().expect("8 bytes")) as usize;
+    let body = &bytes[8..];
+    if n.checked_mul(24) != Some(body.len()) {
+        bail!("depth map: {} entries do not fit {} bytes", n, body.len());
+    }
+    let mut map = HashMap::with_capacity(n);
+    for chunk in body.chunks_exact(24) {
+        let fp = u64::from_le_bytes(chunk[..8].try_into().expect("8 bytes"));
+        let batch = u64::from_le_bytes(chunk[8..16].try_into().expect("8 bytes")) as usize;
+        let depth = u64::from_le_bytes(chunk[16..24].try_into().expect("8 bytes"));
+        map.insert((fp, batch), depth);
+    }
+    Ok(map)
+}
+
+/// Two-round boundary reconciliation over a freshly (re)built mesh
+/// (DESIGN.md §Durability & recovery). Every startup and every recovery
+/// passes through here — on a fresh three-party start it is a no-op
+/// byte exchange.
+///
+/// Round 1 agrees on the common boundary: parties exchange their
+/// (completed-event seq, epoch); everyone adopts the MAX epoch and the
+/// MIN seq. The event sequencing (P1 authors all directives; control
+/// frames are processed serially) guarantees parties are at most ONE
+/// completed event apart at a crash, so a party that is ahead rolls its
+/// last event back: cursors step to the previous snapshot, and a
+/// prep's tape is popped from the BACK of its queue (if an aborted
+/// window did not already consume it). Anything further apart means a
+/// party lost its durable state — unrecoverable warm, hard error.
+///
+/// Round 2 aligns pool depths: per key, each queue drops from the
+/// FRONT down to the minimum depth across parties. The front is where
+/// an aborted window already burned its tape on the parties that
+/// started it (the tape is popped BEFORE any communication), so the
+/// surviving tapes pair up FIFO across all three parties.
+///
+/// Returns whether a completed WINDOW was rolled back — P1 then
+/// re-enqueues that window's requests so their clients still get
+/// answers.
+fn reconcile(
+    state: &PartyState,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
+    shared: &Shared,
+) -> Result<bool> {
+    let net = &state.ctx.net;
+    let others: Vec<usize> = (0..3).filter(|&p| p != shared.id).collect();
+
+    // Round 1: boundary seq + epoch.
+    let mut msg = Vec::with_capacity(16);
+    msg.extend_from_slice(&recov.seq.to_le_bytes());
+    msg.extend_from_slice(&recov.epoch.to_le_bytes());
+    for &p in &others {
+        net.send_ctl(p, msg.clone())?;
+    }
+    let mut min_seq = recov.seq;
+    let mut max_seq = recov.seq;
+    let mut epoch = recov.epoch;
+    for &p in &others {
+        let r = net.recv_ctl(p)?;
+        if r.len() != 16 {
+            bail!("reconcile: bad boundary frame from party {p}");
+        }
+        let s = u64::from_le_bytes(r[..8].try_into().expect("8 bytes"));
+        let e = u64::from_le_bytes(r[8..16].try_into().expect("8 bytes"));
+        min_seq = min_seq.min(s);
+        max_seq = max_seq.max(s);
+        epoch = epoch.max(e);
+    }
+    if max_seq - min_seq > 1 {
+        bail!(
+            "reconcile: boundaries diverge by {} events (min {min_seq}, max {max_seq}); \
+             a party lost its durable state and cannot rejoin warm",
+            max_seq - min_seq
+        );
+    }
+    let mut rolled_back_window = false;
+    if recov.seq > min_seq {
+        // This party completed an event its peers never saw finish:
+        // roll it back to the common boundary.
+        state.ctx.seek_prgs(&recov.prev_cursors);
+        match recov.last_prep_key {
+            Some(key) => {
+                if let Some(q) = pool.get_mut(&key) {
+                    // The rolled-back prep pushed at the back. (If an
+                    // aborted window already consumed the queue down,
+                    // the depth round below settles the rest.)
+                    q.pop_back();
+                }
+            }
+            None => rolled_back_window = true,
+        }
+        recov.seq = min_seq;
+        recov.cursors = recov.prev_cursors;
+        recov.last_prep_key = None;
+    } else {
+        state.ctx.seek_prgs(&recov.cursors);
+    }
+    recov.epoch = epoch;
+    shared.epoch.store(epoch, Ordering::SeqCst);
+
+    // Round 2: pool depths, dropped from the FRONT to the common depth.
+    for &p in &others {
+        net.send_ctl(p, encode_depths(pool))?;
+    }
+    let mut targets: HashMap<(u64, usize), u64> =
+        pool.iter().map(|(&k, q)| (k, q.len() as u64)).collect();
+    for &p in &others {
+        let theirs = decode_depths(&net.recv_ctl(p)?)
+            .with_context(|| format!("reconcile: depth map from party {p}"))?;
+        for (k, depth) in targets.iter_mut() {
+            *depth = (*depth).min(theirs.get(k).copied().unwrap_or(0));
+        }
+    }
+    for (k, target) in targets {
+        if let Some(q) = pool.get_mut(&k) {
+            while q.len() as u64 > target {
+                q.pop_front();
+            }
+        }
+    }
+    pool.retain(|_, q| !q.is_empty());
+    Ok(rolled_back_window)
+}
+
+/// One recovery attempt, shared by all parties: drop the old mesh
+/// (closing our sockets cascades peers still blocked in protocol recvs
+/// into their own recovery), re-establish it fresh, re-run Setup, and
+/// reconcile boundaries. On success the state slot holds the rebuilt
+/// party and the pool/boundary record are persisted at the agreed
+/// boundary; returns whether a completed window was rolled back.
+#[allow(clippy::too_many_arguments)]
+fn try_rejoin(
+    slot: &mut Option<PartyState>,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
+    opts: &PartyOpts,
+    shared: &Shared,
+    store: Option<&TapeStore>,
+    weights: Option<&Weights>,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
+) -> Result<bool> {
+    slot.take();
+    let session = session_id(opts.scfg.master_seed, &opts.cfg);
+    let target = shared.epoch.load(Ordering::SeqCst);
+    let per_attempt = opts.reconnect_backoff.max(Duration::from_millis(200));
+    let metrics = Arc::clone(&shared.metrics);
+    // The Setup rebuild runs real protocol communication: a peer dying
+    // mid-rejoin panics the Net, which must fail this attempt, not the
+    // party.
+    let attempt = catch_unwind(AssertUnwindSafe(|| -> Result<(PartyState, bool)> {
+        let (chans, _) = reestablish(opts.id, &opts.peers, session, target, party_rx, per_attempt)?;
+        let st = build_state(opts, chans, &metrics, weights);
+        let replay = reconcile(&st, pool, recov, shared)?;
+        Ok((st, replay))
+    }));
+    match attempt {
+        Ok(Ok((st, replay))) => {
+            *slot = Some(st);
+            persist(store, pool, recov, shared);
+            Ok(replay)
+        }
+        Ok(Err(e)) => Err(e),
+        Err(_) => bail!("rejoin attempt panicked (a peer died mid-rejoin)"),
+    }
+}
+
+/// P0/P2's recovery loop: bump the epoch (adopting a Resync's target if
+/// one triggered us) and retry [`try_rejoin`] under the reconnect
+/// budget. `false` means the budget is exhausted and the party should
+/// drain.
+#[allow(clippy::too_many_arguments)]
+fn recover_follower(
+    slot: &mut Option<PartyState>,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
+    opts: &PartyOpts,
+    shared: &Shared,
+    store: Option<&TapeStore>,
+    weights: Option<&Weights>,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
+    hint: u64,
+) -> bool {
+    let target = (shared.epoch.load(Ordering::SeqCst) + 1).max(hint);
+    shared.epoch.store(target, Ordering::SeqCst);
+    let attempts = opts.reconnect_attempts.max(1);
+    for attempt in 0..attempts {
+        match try_rejoin(slot, pool, recov, opts, shared, store, weights, party_rx) {
+            Ok(_) => {
+                eprintln!("party {}: recovered into epoch {}", opts.id, recov.epoch);
+                return true;
+            }
+            Err(e) => {
+                eprintln!("party {}: rejoin {}/{} failed: {e:#}", opts.id, attempt + 1, attempts)
+            }
+        }
+        std::thread::sleep(opts.reconnect_backoff);
+    }
+    false
+}
+
+/// P1's recovery loop. Besides rejoining the mesh it (a) wakes
+/// followers blocked on the old control links with a [`Tag::Resync`]
+/// frame — re-sent on EVERY attempt, so mismatched retry budgets still
+/// converge — and (b) re-dials both control links fresh after success
+/// (the old links carried in-flight directives and are poison). On a
+/// rolled-back window its requests are re-enqueued at the queue front.
+/// `false` means the deployment is over: the queue has been refused and
+/// the party should drain.
+#[allow(clippy::too_many_arguments)]
+fn recover_sequencer(
+    slot: &mut Option<PartyState>,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
+    opts: &PartyOpts,
+    shared: &Shared,
+    store: Option<&TapeStore>,
+    weights: Option<&Weights>,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
+    links: &mut Vec<TcpStream>,
+    last_window: &mut Option<Vec<Pending>>,
+) -> bool {
+    let target = shared.epoch.load(Ordering::SeqCst) + 1;
+    shared.epoch.store(target, Ordering::SeqCst);
+    let attempts = opts.reconnect_attempts.max(1);
+    for attempt in 0..attempts {
+        for link in links.iter_mut() {
+            // Best effort: a dead link errors harmlessly; a follower
+            // blocked on a control read either sees this frame or the
+            // link's death — both routes lead it into recovery.
+            let _ = wire::write_frame(link, Tag::Resync, &wire::encode_resync(target));
+        }
+        match try_rejoin(slot, pool, recov, opts, shared, store, weights, party_rx) {
+            Ok(rolled_back_window) => match dial_control_links(opts) {
+                Ok(new_links) => {
+                    *links = new_links;
+                    if rolled_back_window {
+                        if let Some(items) = last_window.take() {
+                            requeue_front(shared, items);
+                        }
+                    }
+                    eprintln!("party {}: recovered into epoch {}", opts.id, recov.epoch);
+                    return true;
+                }
+                Err(e) => {
+                    eprintln!("party {}: control-link redial failed: {e:#}", opts.id);
+                    break;
+                }
+            },
+            Err(e) => {
+                eprintln!("party {}: rejoin {}/{} failed: {e:#}", opts.id, attempt + 1, attempts)
+            }
+        }
+        std::thread::sleep(opts.reconnect_backoff);
+    }
+    refuse_all_queued(shared, "deployment lost a party and could not recover");
+    let _ = direct(links.as_mut_slice(), Tag::Exit, &[]);
+    false
+}
+
+/// Refuse every queued request and flip the deployment into draining
+/// (the clean end state of a failed recovery: every client gets a
+/// terminal frame, nothing hangs).
+fn refuse_all_queued(shared: &Shared, reason: &str) {
+    let items: Vec<Pending> = {
+        let mut adm = shared.admission.lock().expect("admission poisoned");
+        adm.draining = true;
+        let drained: Vec<Pending> = adm.queue.drain(..).collect();
+        for p in &drained {
+            if let Some(st) = adm.conns.get_mut(&p.conn) {
+                st.inflight = st.inflight.saturating_sub(1);
+            }
+        }
+        shared.admission_cv.notify_all();
+        drained
+    };
+    for p in items {
+        shared.counters.refused.fetch_add(1, Ordering::Relaxed);
+        reply(shared, p.conn, Tag::Refused, &wire::encode_refused(p.id, reason));
+    }
+}
+
+/// Refuse the requests of an aborted window with clean [`Tag::Refused`]
+/// frames and release their in-flight budget. The refusal is symmetric
+/// by construction: only P1 ever replies to requests, and a client's
+/// `wait` checks P1's verdict before pumping P0/P2, so no reorder
+/// buffer is left expecting frames that will never come.
+fn refuse_routes(shared: &Shared, routes: &[(u64, u32)], reason: &str) {
+    for &(id, conn) in routes {
+        shared.counters.refused.fetch_add(1, Ordering::Relaxed);
+        reply(shared, conn, Tag::Refused, &wire::encode_refused(id, reason));
+    }
+    let mut adm = shared.admission.lock().expect("admission poisoned");
+    for &(_, conn) in routes {
+        if let Some(st) = adm.conns.get_mut(&conn) {
+            st.inflight = st.inflight.saturating_sub(1);
+        }
+    }
+}
+
+/// Put a rolled-back window's requests back at the FRONT of the queue
+/// (original order preserved) and re-charge their in-flight budget —
+/// their clients already hold P1's first reply, and the replay's
+/// duplicate frames are idempotent in the client's reorder buffer.
+fn requeue_front(shared: &Shared, items: Vec<Pending>) {
+    let mut adm = shared.admission.lock().expect("admission poisoned");
+    for p in items.into_iter().rev() {
+        if let Some(st) = adm.conns.get_mut(&p.conn) {
+            st.inflight += 1;
+        }
+        adm.queue.push_front(p);
+    }
+    shared.admission_cv.notify_all();
+}
+
+/// Arm fault injection on the party at `addr`: dial it as a client and
+/// send a [`Tag::Fault`] frame for `window`, waiting for the ack so the
+/// fault is guaranteed armed before the caller submits the requests
+/// meant to trip it (used by `repro loadgen --fault`).
+pub fn arm_fault(addr: &str, session: [u8; 16], window: u64, timeout: Duration) -> Result<()> {
+    let mut stream = dial_retry(addr, timeout)?;
+    stream.set_nodelay(true).context("set_nodelay")?;
+    wire::client_handshake(&mut stream, &session)
+        .with_context(|| format!("fault-arm handshake with {addr}"))?;
+    wire::write_frame(&mut stream, Tag::Fault, &wire::encode_fault(window))?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone fault stream")?);
+    let (tag, payload) = wire::read_frame(&mut reader)?;
+    match tag {
+        Tag::BindAck => Ok(()),
+        Tag::Error => bail!("fault arm refused: {}", String::from_utf8_lossy(&payload)),
+        other => bail!("expected fault ack, got {other:?}"),
+    }
+}
+
+/// Run one party over an already-bound listener: restore the durable
+/// store (if any), establish the mesh, do model setup, reconcile
+/// boundaries with the peers, then serve clients concurrently until a
+/// drain completes. Blocks for the lifetime of the deployment.
+pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
+    assert!(opts.id < 3, "party id out of range");
+    let session = session_id(opts.scfg.master_seed, &opts.cfg);
+    let coord_token = control_token(opts.scfg.master_seed, &opts.cfg);
+    let store = match &opts.tape_dir {
+        Some(dir) => Some(TapeStore::new(dir.clone(), opts.id, session)?),
+        None => None,
+    };
+    let loaded = store.as_ref().and_then(|s| s.load_state());
+    // Without a valid boundary snapshot the restored tapes could not be
+    // consumed in PRG lockstep with the peers — start cold.
+    let (mut corr_pool, warnings) = match (&store, &loaded) {
+        (Some(s), Some(_)) => s.load_pool(),
+        _ => (CorrPool::new(), Vec::new()),
+    };
+    for w in &warnings {
+        eprintln!("party {}: {w}", opts.id);
+    }
+    let mut transport = TcpTransport::new(opts.id, listener, opts.peers.clone(), session);
+    transport.epoch = loaded.map(|s| s.epoch).unwrap_or(0);
+    let TcpMesh { chans, listener, parked_clients, parked_coords, conn_alloc, epoch } =
+        transport.establish()?;
+    let metrics = Arc::new(Metrics::new());
     let weights = (opts.id == P0).then(|| {
         let mut w = Weights::synth(opts.cfg, opts.weights_seed);
         native::calibrate(&opts.cfg, &mut w, &synth_input(&opts.cfg, 5));
         w
     });
-    let per_layer = LayerQuantConfig::uniform(&opts.cfg, opts.max_strategy);
-    let model = bert_graph(&ctx, &opts.cfg, &per_layer, weights.as_ref());
-    ctx.flush_timer();
 
     let shared = Arc::new(Shared {
         writers: Mutex::new(HashMap::new()),
@@ -520,14 +1039,19 @@ pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
         shutdown_waiters: Mutex::new(Vec::new()),
         exited: AtomicBool::new(false),
         counters: Counters::default(),
-        metrics,
+        metrics: Arc::clone(&metrics),
         admission: Mutex::new(AdmissionQueue::default()),
         admission_cv: Condvar::new(),
         opts: opts.serve,
         id: opts.id,
         input_len: opts.cfg.seq_len * opts.cfg.d_model,
+        epoch: AtomicU64::new(loaded.map(|s| s.epoch).unwrap_or(0).max(epoch)),
+        tapes: AtomicU64::new(corr_pool.values().map(|q| q.len() as u64).sum()),
+        fault_window: AtomicU64::new(opts.fault_window.unwrap_or(FAULT_DISARMED)),
+        lat_hist: Mutex::new([0u64; wire::LAT_BUCKETS]),
     });
     let (coord_tx, coord_rx) = channel();
+    let (party_tx, party_rx) = channel();
     for (stream, token) in parked_coords {
         if token == coord_token {
             let _ = coord_tx.send(stream);
@@ -540,14 +1064,88 @@ pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
     {
         let shared = Arc::clone(&shared);
         std::thread::spawn(move || {
-            accept_loop(listener, session, coord_token, shared, conn_alloc, coord_tx)
+            accept_loop(listener, session, coord_token, shared, conn_alloc, coord_tx, party_tx)
         });
     }
 
+    let state = build_state(&opts, chans, &metrics, weights.as_ref());
+    let mut recov = match loaded {
+        Some(st) => st,
+        None => {
+            let cursors = state.ctx.prg_cursors();
+            RecoveryState { seq: 0, cursors, prev_cursors: cursors, last_prep_key: None, epoch: 0 }
+        }
+    };
+    recov.epoch = recov.epoch.max(shared.epoch.load(Ordering::SeqCst));
+    let mut slot = Some(state);
+    // Every startup — a fresh deployment, or a restarted party rejoining
+    // a recovering one — passes through the same boundary reconciliation
+    // (a no-op byte exchange when everyone is at boundary 0). A restart
+    // has no retained window to replay, so the rollback flag is moot.
+    //
+    // The first exchange can lose a race against a survivor's recovery
+    // attempt cycle (its attempt times out waiting for the OTHER peer
+    // and drops this party's fresh link), so failures retry under the
+    // reconnect budget, rebuilding the mesh per attempt. No epoch is
+    // minted here: a restarted party JOINS whatever recovery is in
+    // progress, it does not start one.
+    let mut reconciled = false;
+    for attempt in 0..opts.reconnect_attempts.max(1) {
+        let res = if attempt == 0 {
+            let st = slot.as_ref().expect("state present");
+            reconcile(st, &mut corr_pool, &mut recov, &shared).map(|_| ())
+        } else {
+            try_rejoin(
+                &mut slot,
+                &mut corr_pool,
+                &mut recov,
+                &opts,
+                &shared,
+                store.as_ref(),
+                weights.as_ref(),
+                &party_rx,
+            )
+            .map(|_| ())
+        };
+        match res {
+            Ok(()) => {
+                reconciled = true;
+                break;
+            }
+            Err(e) => {
+                eprintln!("party {}: startup reconciliation failed: {e:#}; retrying", opts.id);
+                std::thread::sleep(opts.reconnect_backoff);
+            }
+        }
+    }
+    if !reconciled {
+        bail!("startup boundary reconciliation failed within the reconnect budget");
+    }
+    persist(store.as_ref(), &corr_pool, &recov, &shared);
+
     let out = if opts.id == P1 {
-        serve_as_sequencer(&ctx, &model, &opts, &shared)
+        serve_as_sequencer(
+            &mut slot,
+            &mut corr_pool,
+            &mut recov,
+            &opts,
+            &shared,
+            store.as_ref(),
+            weights.as_ref(),
+            &party_rx,
+        )
     } else {
-        serve_from_manifests(&ctx, &model, &shared, coord_rx)
+        serve_from_manifests(
+            &mut slot,
+            &mut corr_pool,
+            &mut recov,
+            &opts,
+            &shared,
+            store.as_ref(),
+            weights.as_ref(),
+            &coord_rx,
+            &party_rx,
+        )
     };
     shared.exited.store(true, Ordering::SeqCst);
     ack_shutdown_waiters(&shared);
@@ -562,13 +1160,36 @@ pub fn run_party_addr(listen: &str, opts: PartyOpts) -> Result<()> {
 }
 
 /// Write one control frame to both control links. A control write can
-/// only fail when a peer process died — at that point the deployment is
-/// over, so the error propagates.
+/// only fail when a peer process died — the error routes the sequencer
+/// into recovery.
 fn direct(links: &mut [TcpStream], tag: Tag, payload: &[u8]) -> Result<()> {
     for link in links.iter_mut() {
         wire::write_frame(link, tag, payload).context("control link write")?;
     }
     Ok(())
+}
+
+/// Dial both control links ([P0, P2]) and run the coordinator
+/// handshake on each; used at startup and after every recovery (the
+/// links are always rebuilt fresh).
+fn dial_control_links(opts: &PartyOpts) -> Result<Vec<TcpStream>> {
+    let session = session_id(opts.scfg.master_seed, &opts.cfg);
+    let token = control_token(opts.scfg.master_seed, &opts.cfg);
+    let mut links = Vec::new();
+    for p in [P0, P2] {
+        let addr = opts.peers[p]
+            .as_deref()
+            .with_context(|| format!("party 1: no address for peer {p}"))?;
+        let mut stream = dial_retry(addr, Duration::from_secs(30))?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        let acked = wire::coord_handshake(&mut stream, &session, &token)
+            .with_context(|| format!("control-link handshake with party {p} at {addr}"))?;
+        if acked as usize != p {
+            bail!("{addr} answered the control link as party {acked}, expected {p}");
+        }
+        links.push(stream);
+    }
+    Ok(links)
 }
 
 /// What the sequencer decided to do next.
@@ -662,59 +1283,158 @@ fn reply(shared: &Shared, conn: u32, tag: Tag, payload: &[u8]) {
     }
 }
 
-/// P1's serving loop: dial the control links, then alternate between
-/// cutting windows (manifest → batched pass → per-request responses)
-/// and topping up the correlation pool while idle.
-fn serve_as_sequencer(
-    ctx: &PartyCtx,
-    model: &SecureGraph,
+/// Run one pool top-up at P1 (broadcast the directive, generate
+/// locally), with abort handling: a mid-prep peer death rolls into
+/// recovery. `false` means recovery failed and the party should drain.
+#[allow(clippy::too_many_arguments)]
+fn sequencer_prep(
+    slot: &mut Option<PartyState>,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
     opts: &PartyOpts,
     shared: &Shared,
-) -> Result<()> {
-    let session = session_id(opts.scfg.master_seed, &opts.cfg);
-    let token = control_token(opts.scfg.master_seed, &opts.cfg);
-    let mut links = Vec::new();
-    for p in [P0, P2] {
-        let addr = opts.peers[p]
-            .as_deref()
-            .with_context(|| format!("party 1: no address for peer {p}"))?;
-        let mut stream = dial_retry(addr, Duration::from_secs(30))?;
-        stream.set_nodelay(true).context("set_nodelay")?;
-        let acked = wire::coord_handshake(&mut stream, &session, &token)
-            .with_context(|| format!("control-link handshake with party {p} at {addr}"))?;
-        if acked as usize != p {
-            bail!("{addr} answered the control link as party {acked}, expected {p}");
-        }
-        links.push(stream);
-    }
-
-    let sopts = shared.opts;
-    let mut corr_pool = CorrPool::new();
-    let prep_full = |links: &mut [TcpStream], pool: &mut CorrPool| -> Result<()> {
-        direct(links, Tag::Prep, &wire::encode_prep(sopts.max_batch as u32))?;
-        ctx.reset_timer();
-        prep_into_pool(ctx, model, pool, sopts.max_batch);
-        ctx.flush_timer();
-        shared.counters.preps.fetch_add(1, Ordering::Relaxed);
-        Ok(())
+    store: Option<&TapeStore>,
+    weights: Option<&Weights>,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
+    links: &mut Vec<TcpStream>,
+    last_window: &mut Option<Vec<Pending>>,
+) -> bool {
+    let batch = shared.opts.max_batch;
+    let res = {
+        let st = slot.as_ref().expect("state present");
+        catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            direct(links.as_mut_slice(), Tag::Prep, &wire::encode_prep(batch as u32))?;
+            st.ctx.reset_timer();
+            prep_into_pool(&st.ctx, &st.model, pool, batch);
+            st.ctx.flush_timer();
+            Ok(())
+        }))
     };
-    // Prefill so even the first window can be served warm.
-    for _ in 0..sopts.prep_depth {
-        prep_full(links.as_mut_slice(), &mut corr_pool)?;
+    match res {
+        Ok(Ok(())) => {
+            shared.counters.preps.fetch_add(1, Ordering::Relaxed);
+            let st = slot.as_ref().expect("state present");
+            let key = (st.model.fingerprint(), batch);
+            advance_boundary(&st.ctx, recov, Some(key));
+            persist(store, pool, recov, shared);
+            true
+        }
+        Ok(Err(e)) => {
+            eprintln!("party {}: prep aborted: {e:#}; recovering", opts.id);
+            recover_sequencer(
+                slot, pool, recov, opts, shared, store, weights, party_rx, links, last_window,
+            )
+        }
+        Err(_) => {
+            eprintln!("party {}: prep aborted (a peer died); recovering", opts.id);
+            recover_sequencer(
+                slot, pool, recov, opts, shared, store, weights, party_rx, links, last_window,
+            )
+        }
     }
+}
+
+/// P1's serving loop: dial the control links, then alternate between
+/// cutting windows (manifest → batched pass → per-request responses)
+/// and topping up the correlation pool while idle. Aborted events roll
+/// into the recovery loop; a spent reconnect budget drains cleanly.
+#[allow(clippy::too_many_arguments)]
+fn serve_as_sequencer(
+    slot: &mut Option<PartyState>,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
+    opts: &PartyOpts,
+    shared: &Shared,
+    store: Option<&TapeStore>,
+    weights: Option<&Weights>,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
+) -> Result<()> {
+    let mut links = dial_control_links(opts)?;
+    let sopts = shared.opts;
     let mut next_wid = 0u64;
+    let mut last_window: Option<Vec<Pending>> = None;
+    // Prefill so even the first window is served warm — skipped to the
+    // extent restored tapes already cover the target depth.
     loop {
-        let key = (model.fingerprint(), sopts.max_batch);
-        let pooled_full = corr_pool.get(&key).map(|q| q.len()).unwrap_or(0);
+        let key = {
+            let st = slot.as_ref().expect("state present");
+            (st.model.fingerprint(), sopts.max_batch)
+        };
+        if pool.get(&key).map(|q| q.len()).unwrap_or(0) >= sopts.prep_depth {
+            break;
+        }
+        if !sequencer_prep(
+            slot, pool, recov, opts, shared, store, weights, party_rx, &mut links,
+            &mut last_window,
+        ) {
+            return Ok(());
+        }
+    }
+    loop {
+        let key = {
+            let st = slot.as_ref().expect("state present");
+            (st.model.fingerprint(), sopts.max_batch)
+        };
+        let pooled_full = pool.get(&key).map(|q| q.len()).unwrap_or(0);
         match next_action(shared, pooled_full) {
-            Action::Prep => prep_full(links.as_mut_slice(), &mut corr_pool)?,
+            Action::Prep => {
+                if !sequencer_prep(
+                    slot, pool, recov, opts, shared, store, weights, party_rx, &mut links,
+                    &mut last_window,
+                ) {
+                    return Ok(());
+                }
+            }
             Action::Serve(items) => {
                 let wid = next_wid;
                 next_wid += 1;
-                serve_one_window(ctx, model, shared, &mut links, &mut corr_pool, wid, items)?;
+                if shared.fault_window.load(Ordering::SeqCst) == wid {
+                    // Fault injection: die exactly as if kill -9'd at
+                    // this window's cut.
+                    std::process::abort();
+                }
+                let routes: Vec<(u64, u32)> = items.iter().map(|p| (p.id, p.conn)).collect();
+                let inputs: Vec<Vec<i64>> = items.iter().map(|p| p.input.clone()).collect();
+                let res = {
+                    let st = slot.as_ref().expect("state present");
+                    catch_unwind(AssertUnwindSafe(|| {
+                        serve_one_window(st, shared, &mut links, pool, wid, &routes, &inputs)
+                    }))
+                };
+                match res {
+                    Ok(Ok(())) => {
+                        let st = slot.as_ref().expect("state present");
+                        advance_boundary(&st.ctx, recov, None);
+                        persist(store, pool, recov, shared);
+                        last_window = Some(items);
+                    }
+                    Ok(Err(e)) => {
+                        eprintln!("party {}: window {wid} aborted: {e:#}; recovering", opts.id);
+                        refuse_routes(shared, &routes, "window aborted: a party failed mid-window");
+                        if !recover_sequencer(
+                            slot, pool, recov, opts, shared, store, weights, party_rx, &mut links,
+                            &mut last_window,
+                        ) {
+                            return Ok(());
+                        }
+                    }
+                    Err(_) => {
+                        eprintln!(
+                            "party {}: window {wid} aborted (a peer died); recovering",
+                            opts.id
+                        );
+                        refuse_routes(shared, &routes, "window aborted: a party failed mid-window");
+                        if !recover_sequencer(
+                            slot, pool, recov, opts, shared, store, weights, party_rx, &mut links,
+                            &mut last_window,
+                        ) {
+                            return Ok(());
+                        }
+                    }
+                }
             }
             Action::Exit => {
-                direct(&mut links, Tag::Exit, &[])?;
+                let _ = direct(links.as_mut_slice(), Tag::Exit, &[]);
                 return Ok(());
             }
         }
@@ -726,30 +1446,25 @@ fn serve_as_sequencer(
 /// per-request window reports back out to the owning connections, and
 /// release the requests' in-flight budget.
 fn serve_one_window(
-    ctx: &PartyCtx,
-    model: &SecureGraph,
+    state: &PartyState,
     shared: &Shared,
     links: &mut [TcpStream],
     corr_pool: &mut CorrPool,
     wid: u64,
-    items: Vec<Pending>,
+    routes: &[(u64, u32)],
+    inputs: &[Vec<i64>],
 ) -> Result<()> {
-    let batch = items.len();
-    let mut routes = Vec::with_capacity(batch);
-    let mut inputs = Vec::with_capacity(batch);
-    for p in items {
-        routes.push((p.id, p.conn));
-        inputs.push(p.input);
-    }
+    let batch = routes.len();
     let ids: Vec<u64> = routes.iter().map(|&(id, _)| id).collect();
     direct(links, Tag::Manifest, &wire::encode_manifest(wid, &ids))?;
 
     let pre = shared.metrics.snapshot();
-    ctx.reset_timer();
+    state.ctx.reset_timer();
     let t0 = Instant::now();
-    let logits = serve_window(ctx, model, corr_pool, batch, Some(&inputs));
-    ctx.flush_timer();
+    let logits = serve_window(&state.ctx, &state.model, corr_pool, batch, Some(inputs));
+    state.ctx.flush_timer();
     let wall_ns = t0.elapsed().as_nanos() as u64;
+    record_latency(shared, wall_ns);
     let mut delta = shared.metrics.snapshot();
     delta.saturating_sub_assign(&pre);
 
@@ -760,7 +1475,7 @@ fn serve_one_window(
     }
     {
         let mut adm = shared.admission.lock().expect("admission poisoned");
-        for &(_, conn) in &routes {
+        for &(_, conn) in routes {
             if let Some(st) = adm.conns.get_mut(&conn) {
                 st.inflight = st.inflight.saturating_sub(1);
             }
@@ -771,51 +1486,157 @@ fn serve_one_window(
     Ok(())
 }
 
+/// Evaluate one manifested window at P0/P2 and ack completions to
+/// bound client connections.
+fn run_manifest(state: &PartyState, pool: &mut CorrPool, shared: &Shared, wid: u64, ids: &[u64]) {
+    let batch = ids.len();
+    let pre = shared.metrics.snapshot();
+    state.ctx.reset_timer();
+    let t0 = Instant::now();
+    let _ = serve_window(&state.ctx, &state.model, pool, batch, None);
+    state.ctx.flush_timer();
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    record_latency(shared, wall_ns);
+    let mut delta = shared.metrics.snapshot();
+    delta.saturating_sub_assign(&pre);
+    for (pos, &id) in ids.iter().enumerate() {
+        let local = {
+            let binds = shared.binds.lock().expect("binds poisoned");
+            binds.get(&wire::conn_of(id)).copied()
+        };
+        let Some(local) = local else { continue };
+        let report = window_report(&delta, wid, pos, batch, wall_ns);
+        reply(shared, local, Tag::Done, &wire::encode_done(id, &report));
+    }
+    shared.counters.windows.fetch_add(1, Ordering::Relaxed);
+    shared.counters.served.fetch_add(batch as u64, Ordering::Relaxed);
+}
+
+/// Take the newest verified control link from the accept loop's
+/// channel, draining any stale links parked by abandoned recovery
+/// attempts (latest wins). `None` when nothing arrives within `budget`.
+fn wait_control(coord_rx: &Receiver<TcpStream>, budget: Duration) -> Option<TcpStream> {
+    let mut stream = coord_rx.recv_timeout(budget).ok()?;
+    while let Ok(newer) = coord_rx.try_recv() {
+        stream = newer;
+    }
+    Some(stream)
+}
+
+/// How long a follower waits for a (re)dialed control link: the full
+/// reconnect budget plus slack for P1's setup rebuild.
+fn control_wait_budget(opts: &PartyOpts) -> Duration {
+    opts.reconnect_backoff.saturating_mul(opts.reconnect_attempts.max(1))
+        + Duration::from_secs(5)
+}
+
 /// P0/P2's serving loop: wait for P1's control link, then evaluate
 /// exactly the windows (and preprocessing) its directives name, acking
-/// completions to [`Tag::Bind`]-registered client connections.
+/// completions to [`Tag::Bind`]-registered client connections. A dead
+/// control link, a [`Tag::Resync`] for a newer epoch, or an aborted
+/// event all roll into the recovery loop; a spent reconnect budget
+/// drains cleanly (exit 0).
+#[allow(clippy::too_many_arguments)]
 fn serve_from_manifests(
-    ctx: &PartyCtx,
-    model: &SecureGraph,
+    slot: &mut Option<PartyState>,
+    pool: &mut CorrPool,
+    recov: &mut RecoveryState,
+    opts: &PartyOpts,
     shared: &Shared,
-    coord_rx: Receiver<TcpStream>,
+    store: Option<&TapeStore>,
+    weights: Option<&Weights>,
+    coord_rx: &Receiver<TcpStream>,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
 ) -> Result<()> {
-    let stream = coord_rx.recv().ok().context("control link never arrived")?;
-    let mut control = BufReader::new(stream);
-    let mut corr_pool = CorrPool::new();
+    let budget = control_wait_budget(opts);
+    let mut control = match wait_control(coord_rx, budget.max(Duration::from_secs(30))) {
+        Some(s) => BufReader::new(s),
+        None => bail!("control link never arrived"),
+    };
+    // Shared tail of every recovery trigger: rejoin (or give up and
+    // drain), then adopt the control link P1 re-dialed.
+    macro_rules! recover_or_drain {
+        ($hint:expr) => {{
+            if !recover_follower(
+                slot, pool, recov, opts, shared, store, weights, party_rx, $hint,
+            ) {
+                return Ok(());
+            }
+            match wait_control(coord_rx, budget) {
+                Some(s) => control = BufReader::new(s),
+                None => return Ok(()),
+            }
+        }};
+    }
     loop {
-        let (tag, payload) =
-            wire::read_frame(&mut control).context("control link read (party 1 gone?)")?;
+        let (tag, payload) = match wire::read_frame(&mut control) {
+            Ok(frame) => frame,
+            Err(_) => {
+                // Control link died: P1 crashed, or is recovering and
+                // already dropped its old links.
+                recover_or_drain!(0);
+                continue;
+            }
+        };
         match tag {
+            Tag::Resync => {
+                let target = wire::decode_resync(&payload)?;
+                if target <= shared.epoch.load(Ordering::SeqCst) {
+                    // A stale resync from a recovery this party already
+                    // completed (P1 re-sends per attempt).
+                    continue;
+                }
+                recover_or_drain!(target);
+            }
             Tag::Manifest => {
                 let (wid, ids) = wire::decode_manifest(&payload)?;
-                let batch = ids.len();
-                let pre = shared.metrics.snapshot();
-                ctx.reset_timer();
-                let t0 = Instant::now();
-                let _ = serve_window(ctx, model, &mut corr_pool, batch, None);
-                ctx.flush_timer();
-                let wall_ns = t0.elapsed().as_nanos() as u64;
-                let mut delta = shared.metrics.snapshot();
-                delta.saturating_sub_assign(&pre);
-                for (pos, &id) in ids.iter().enumerate() {
-                    let local = {
-                        let binds = shared.binds.lock().expect("binds poisoned");
-                        binds.get(&wire::conn_of(id)).copied()
-                    };
-                    let Some(local) = local else { continue };
-                    let report = window_report(&delta, wid, pos, batch, wall_ns);
-                    reply(shared, local, Tag::Done, &wire::encode_done(id, &report));
+                if shared.fault_window.load(Ordering::SeqCst) == wid {
+                    // Fault injection: die exactly as if kill -9'd at
+                    // this window's manifest.
+                    std::process::abort();
                 }
-                shared.counters.windows.fetch_add(1, Ordering::Relaxed);
-                shared.counters.served.fetch_add(batch as u64, Ordering::Relaxed);
+                let res = {
+                    let st = slot.as_ref().expect("state present");
+                    catch_unwind(AssertUnwindSafe(|| run_manifest(st, pool, shared, wid, &ids)))
+                };
+                match res {
+                    Ok(()) => {
+                        let st = slot.as_ref().expect("state present");
+                        advance_boundary(&st.ctx, recov, None);
+                        persist(store, pool, recov, shared);
+                    }
+                    Err(_) => {
+                        eprintln!(
+                            "party {}: window {wid} aborted (a peer died); recovering",
+                            opts.id
+                        );
+                        recover_or_drain!(0);
+                    }
+                }
             }
             Tag::Prep => {
                 let batch = wire::decode_prep(&payload)? as usize;
-                ctx.reset_timer();
-                prep_into_pool(ctx, model, &mut corr_pool, batch);
-                ctx.flush_timer();
-                shared.counters.preps.fetch_add(1, Ordering::Relaxed);
+                let res = {
+                    let st = slot.as_ref().expect("state present");
+                    catch_unwind(AssertUnwindSafe(|| {
+                        st.ctx.reset_timer();
+                        prep_into_pool(&st.ctx, &st.model, pool, batch);
+                        st.ctx.flush_timer();
+                    }))
+                };
+                match res {
+                    Ok(()) => {
+                        shared.counters.preps.fetch_add(1, Ordering::Relaxed);
+                        let st = slot.as_ref().expect("state present");
+                        let key = (st.model.fingerprint(), batch);
+                        advance_boundary(&st.ctx, recov, Some(key));
+                        persist(store, pool, recov, shared);
+                    }
+                    Err(_) => {
+                        eprintln!("party {}: prep aborted (a peer died); recovering", opts.id);
+                        recover_or_drain!(0);
+                    }
+                }
             }
             Tag::Exit => return Ok(()),
             other => bail!("unexpected control frame {other:?}"),
@@ -1019,9 +1840,11 @@ impl RemoteClient {
     }
 
     /// Block until request `id` completes on all three parties. An
-    /// admission refusal (backpressure, bad shape, draining) is an
-    /// `Err` naming P1's reason — the connection stays usable, and no
-    /// other party ever saw the refused request.
+    /// admission refusal (backpressure, bad shape, draining, or a
+    /// window aborted by a party failure) is an `Err` naming P1's
+    /// reason — the connection stays usable, and no other party owes
+    /// the refused request a frame (P1 is checked FIRST, so the
+    /// reorder buffers of P0/P2 stay valid across faults).
     pub fn wait(&mut self, id: u64) -> Result<Completed> {
         self.parties[P1].pump(Want::Request(id))?;
         if let Some(reason) = self.parties[P1].refused.remove(&id) {
@@ -1075,7 +1898,8 @@ impl RemoteClient {
     }
 
     /// Fetch one party's serving counters (windows cut, requests
-    /// served/refused, preps, queue depth).
+    /// served/refused, preps, queue depth, pooled tapes, recovery
+    /// epoch, window latency histogram).
     pub fn stats(&mut self, party: usize) -> Result<ServeStats> {
         assert!(party < 3, "party id out of range");
         wire::write_frame(&mut self.parties[party].writer, Tag::StatsReq, &[])?;
@@ -1096,5 +1920,47 @@ impl RemoteClient {
                 .with_context(|| format!("party {p} drain ack"))?;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_maps_round_trip_and_reject_hostile_input() {
+        let mut pool = CorrPool::new();
+        pool.entry((7, 2)).or_default().push_back(Vec::new());
+        pool.entry((7, 2)).or_default().push_back(Vec::new());
+        pool.entry((9, 4)).or_default().push_back(Vec::new());
+        // An empty queue is not advertised: a drained key must read as
+        // depth 0 on the other side.
+        pool.entry((11, 1)).or_default();
+        let enc = encode_depths(&pool);
+        let dec = decode_depths(&enc).unwrap();
+        assert_eq!(dec.len(), 2);
+        assert_eq!(dec[&(7, 2)], 2);
+        assert_eq!(dec[&(9, 4)], 1);
+
+        assert!(decode_depths(&[]).is_err(), "empty buffer");
+        assert!(decode_depths(&enc[..enc.len() - 1]).is_err(), "truncated entry");
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(decode_depths(&padded).is_err(), "trailing byte");
+        // A hostile count must be rejected by arithmetic, not by a huge
+        // allocation attempt.
+        assert!(decode_depths(&u64::MAX.to_le_bytes()).is_err(), "hostile count");
+    }
+
+    #[test]
+    fn default_party_opts_have_a_sane_reconnect_budget() {
+        let opts = PartyOpts::new(0, BertConfig::tiny());
+        assert!(opts.reconnect_attempts >= 1);
+        assert!(opts.reconnect_backoff > Duration::ZERO);
+        assert!(opts.tape_dir.is_none());
+        assert!(opts.fault_window.is_none());
+        // The follower's control wait must cover at least one full
+        // reconnect cycle, or a recovered mesh could drain spuriously.
+        assert!(control_wait_budget(&opts) > opts.reconnect_backoff);
     }
 }

@@ -20,7 +20,8 @@ use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
 use ppq_bert::coordinator::remote::{
-    default_addrs, run_party_addr, seed_from_label, session_id, Completed, PartyOpts, RemoteClient,
+    arm_fault, default_addrs, run_party_addr, seed_from_label, session_id, Completed, PartyOpts,
+    RemoteClient,
 };
 use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
 use ppq_bert::model::config::BertConfig;
@@ -189,12 +190,13 @@ fn cmd_infer_remote(flags: HashMap<String, String>) {
     });
     let dt = t0.elapsed();
     println!(
-        "request {id}: logits {:?}  wall {}  (window {}, batch {}, {} online rounds)",
+        "request {id}: logits {:?}  wall {}  (window {}, batch {}, {} online rounds, {} offline B)",
         done.logits,
         fmt_dur(dt),
         done.wid(),
         done.batch(),
         done.window_online_rounds(),
+        done.window_offline_bytes(),
     );
     match client.snapshot() {
         Ok(s) => {
@@ -243,6 +245,18 @@ fn cmd_party(flags: HashMap<String, String>) {
     opts.serve.queue_cap = flag_parse(&flags, "queue-cap", opts.serve.queue_cap);
     opts.serve.max_inflight = flag_parse(&flags, "max-inflight", opts.serve.max_inflight);
     opts.serve.prep_depth = flag_parse(&flags, "prep", opts.serve.prep_depth);
+    if let Some(dir) = flags.get("tape-dir").filter(|s| !s.is_empty()) {
+        opts.tape_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if flags.contains_key("fault-window") {
+        opts.fault_window = Some(flag_parse(&flags, "fault-window", 0u64));
+    }
+    opts.reconnect_attempts = flag_parse(&flags, "reconnect-attempts", opts.reconnect_attempts);
+    opts.reconnect_backoff = Duration::from_millis(flag_parse(
+        &flags,
+        "reconnect-backoff-ms",
+        opts.reconnect_backoff.as_millis() as u64,
+    ));
     if let Some(label) = flags.get("session").filter(|s| !s.is_empty()) {
         opts.scfg.master_seed = seed_from_label(label);
     }
@@ -280,6 +294,19 @@ fn cmd_party(flags: HashMap<String, String>) {
     println!("party {id}: shutdown requested, exiting");
 }
 
+/// Parse a `--fault party:N@window:W` spec: which party aborts (as if
+/// `kill -9`'d) at which window id.
+fn parse_fault_spec(spec: &str) -> Result<(usize, u64), String> {
+    let err = || format!("--fault wants `party:N@window:W`, got `{spec}`");
+    let (party, window) = spec.split_once('@').ok_or_else(err)?;
+    let party: usize = party.strip_prefix("party:").ok_or_else(err)?.parse().map_err(|_| err())?;
+    let window: u64 = window.strip_prefix("window:").ok_or_else(err)?.parse().map_err(|_| err())?;
+    if party >= 3 {
+        return Err(format!("--fault party {party} out of range (0|1|2)"));
+    }
+    Ok((party, window))
+}
+
 /// Multi-client load driver against a live 3-process deployment:
 /// `--clients K` threads each submit `--requests N` pipelined requests
 /// simultaneously, so the deployment's wire-path batcher folds requests
@@ -301,10 +328,25 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
         None => SessionCfg::default().master_seed,
     };
     let session = session_id(seed, &cfg);
+    let fault: Option<(usize, u64)> =
+        flags.get("fault").map(|spec| parse_fault_spec(spec).unwrap_or_else(|e| usage_error(&e)));
     println!(
         "loadgen: {clients} concurrent clients x {requests} requests via {}",
         addrs.join(", ")
     );
+    if let Some((party, window)) = fault {
+        // Armed (and acked) BEFORE any request is submitted, so the
+        // abort lands deterministically at that window's manifest.
+        if let Err(e) = arm_fault(&addrs[party], session, window, Duration::from_secs(30)) {
+            eprintln!("error: arm fault on party {party}: {e}");
+            std::process::exit(1);
+        }
+        println!("fault armed: party {party} aborts at window {window}");
+    }
+    // With a fault armed, refused requests (the aborted window, or a
+    // drained deployment) are an EXPECTED outcome: count them instead
+    // of failing, and let --check verify what did complete.
+    let tolerate_refusals = fault.is_some();
 
     let barrier = Arc::new(Barrier::new(clients));
     let t0 = std::time::Instant::now();
@@ -313,7 +355,7 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
         let addrs = addrs.clone();
         let barrier = Arc::clone(&barrier);
         handles.push(std::thread::spawn(
-            move || -> std::result::Result<Vec<(usize, Completed)>, String> {
+            move || -> std::result::Result<(Vec<(usize, Completed)>, usize), String> {
                 let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
                     .map_err(|e| format!("client {k}: connect: {e}"))?;
                 barrier.wait();
@@ -325,18 +367,29 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
                     ids.push((ridx, id));
                 }
                 let mut out = Vec::new();
+                let mut refused = 0usize;
                 for (ridx, id) in ids {
-                    let done = client.wait(id).map_err(|e| format!("client {k}: wait: {e}"))?;
-                    out.push((ridx, done));
+                    match client.wait(id) {
+                        Ok(done) => out.push((ridx, done)),
+                        Err(e) if tolerate_refusals => {
+                            eprintln!("client {k}: request {ridx} refused: {e}");
+                            refused += 1;
+                        }
+                        Err(e) => return Err(format!("client {k}: wait: {e}")),
+                    }
                 }
-                Ok(out)
+                Ok((out, refused))
             },
         ));
     }
     let mut completed: Vec<(usize, Completed)> = Vec::new();
+    let mut refused_total = 0usize;
     for h in handles {
         match h.join().expect("client thread panicked") {
-            Ok(mut v) => completed.append(&mut v),
+            Ok((mut v, refused)) => {
+                completed.append(&mut v);
+                refused_total += refused;
+            }
             Err(e) => {
                 eprintln!("error: {e}");
                 std::process::exit(1);
@@ -353,20 +406,27 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
     for reqs in windows.values_mut() {
         reqs.sort_by_key(|(_, c)| c.pos());
     }
-    let total = clients * requests;
-    let avg_batch = total as f64 / windows.len() as f64;
-    let rounds_per_req: f64 = windows
-        .values()
-        .map(|reqs| reqs[0].1.window_online_rounds() as f64)
-        .sum::<f64>()
-        / total as f64;
-    println!(
-        "served {total} requests in {} ({:.2} req/s): {} windows, avg batch {avg_batch:.2}, \
-         {rounds_per_req:.1} amortized online rounds/request",
-        fmt_dur(wall),
-        total as f64 / wall.as_secs_f64(),
-        windows.len(),
-    );
+    let total = windows.values().map(|reqs| reqs.len()).sum::<usize>();
+    if refused_total > 0 {
+        println!("refused {refused_total} of {} requests around the fault", clients * requests);
+    }
+    if total > 0 {
+        let avg_batch = total as f64 / windows.len() as f64;
+        let rounds_per_req: f64 = windows
+            .values()
+            .map(|reqs| reqs[0].1.window_online_rounds() as f64)
+            .sum::<f64>()
+            / total as f64;
+        println!(
+            "served {total} requests in {} ({:.2} req/s): {} windows, avg batch {avg_batch:.2}, \
+             {rounds_per_req:.1} amortized online rounds/request",
+            fmt_dur(wall),
+            total as f64 / wall.as_secs_f64(),
+            windows.len(),
+        );
+    } else {
+        println!("served 0 requests in {}", fmt_dur(wall));
+    }
 
     let mut probe = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
         .unwrap_or_else(|e| {
@@ -374,10 +434,31 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
             std::process::exit(1);
         });
     match probe.stats(1) {
-        Ok(s) => println!(
-            "party 1 stats: windows={} served={} refused={} preps={} queued={}",
-            s.windows, s.served, s.refused, s.preps, s.queued
-        ),
+        Ok(s) => {
+            println!(
+                "party 1 stats: windows={} served={} refused={} preps={} queued={} tapes={} \
+                 epoch={}",
+                s.windows, s.served, s.refused, s.preps, s.queued, s.tapes, s.epoch
+            );
+            // log2-ms window-latency histogram; bucket i covers
+            // [2^(i-1), 2^i) ms and the last bucket absorbs the rest.
+            let buckets: Vec<String> = s
+                .lat_hist
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| **n > 0)
+                .map(|(b, n)| {
+                    if b + 1 == s.lat_hist.len() {
+                        format!(">={}ms:{n}", 1u64 << (b - 1))
+                    } else {
+                        format!("<{}ms:{n}", 1u64 << b)
+                    }
+                })
+                .collect();
+            if !buckets.is_empty() {
+                println!("window latency: {}", buckets.join(" "));
+            }
+        }
         Err(e) => eprintln!("warning: stats fetch failed: {e}"),
     }
 
@@ -613,9 +694,12 @@ USAGE:
   repro infer  --remote [ADDR0,ADDR1,ADDR2] [--session LABEL] [--halt]
                                              run against `repro party` processes
   repro loadgen [--clients K] [--requests N] [--remote [ADDRS]] [--session LABEL]
-                [--check] [--halt]            K concurrent clients; --check replays
+                [--fault party:N@window:W] [--check] [--halt]
+                                             K concurrent clients; --check replays
                                              the observed windows in-process and
-                                             demands bit-identical logits
+                                             demands bit-identical logits; --fault
+                                             arms a kill -9-style abort on party N
+                                             at window W (refusals become expected)
   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--conf FILE]
   repro plan   [--config tiny|base] [--seq N] [--layers L] [--batch B]
                [--max tournament|linear|sort] [--json]
@@ -625,6 +709,11 @@ USAGE:
   repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
                [--layers L] [--threads T] [--weights-seed S] [--session LABEL]
                [--max-batch B] [--linger MS] [--queue-cap Q] [--max-inflight I] [--prep D]
+               [--tape-dir DIR] [--fault-window W]
+               [--reconnect-attempts R] [--reconnect-backoff-ms MS]
+                                             --tape-dir persists correlation tapes +
+                                             PRG cursors so a killed party restarts
+                                             warm; --fault-window aborts at window W
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N]
   repro help

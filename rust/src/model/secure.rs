@@ -35,9 +35,9 @@
 //! slices and simply see `B·s` rows; the per-(sequence, head) attention
 //! matmuls run through the sequence-batched Alg. 3 entry points
 //! (`rss_matmul_trc_seq`), which share each round's openings in a single
-//! message. Online rounds are therefore constant in both the batch size
-//! and the head count, while bytes scale linearly (DESIGN.md §Batched
-//! serving).
+//! message. Online rounds are therefore constant in both the batch
+//! size and the head count, while bytes scale linearly
+//! (DESIGN.md §Batched serving).
 
 use crate::core::prg::Prg;
 use crate::core::ring::{sign_extend, Ring, R16, R32, R4, R6};

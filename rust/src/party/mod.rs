@@ -164,6 +164,34 @@ impl PartyCtx {
         n
     }
 
+    /// Snapshot the byte position of every PRG stream this party owns.
+    /// Captured at window boundaries so a crash-recovery rebuild can
+    /// resume the exact stream state (DESIGN.md §Durability & recovery).
+    pub fn prg_cursors(&self) -> PrgCursors {
+        let pos3 = |prgs: &[RefCell<Prg>; 3]| {
+            [prgs[0].borrow().pos(), prgs[1].borrow().pos(), prgs[2].borrow().pos()]
+        };
+        PrgCursors {
+            pair: pos3(&self.pair_prg),
+            own: self.own_prg.borrow().pos(),
+            prep_pair: pos3(&self.prep_pair_prg),
+            prep_own: self.prep_own_prg.borrow().pos(),
+        }
+    }
+
+    /// Fast-forward every PRG stream to a previously captured snapshot.
+    /// Called on a freshly built context after the deterministic Setup
+    /// phase re-ran, so subsequent draws are bit-identical to the run the
+    /// snapshot was taken from.
+    pub fn seek_prgs(&self, c: &PrgCursors) {
+        for p in 0..3 {
+            self.pair_prg[p].borrow_mut().seek(c.pair[p]);
+            self.prep_pair_prg[p].borrow_mut().seek(c.prep_pair[p]);
+        }
+        self.own_prg.borrow_mut().seek(c.own);
+        self.prep_own_prg.borrow_mut().seek(c.prep_own);
+    }
+
     /// The party after this one in the P0 → P1 → P2 → P0 cycle.
     pub fn next(&self) -> usize {
         (self.id + 1) % 3
@@ -173,6 +201,22 @@ impl PartyCtx {
     pub fn prev(&self) -> usize {
         (self.id + 2) % 3
     }
+}
+
+/// Byte positions of all eight PRG streams a party owns (three pairwise +
+/// one private, for both the online and the preprocessing family), as
+/// captured by [`PartyCtx::prg_cursors`]. The slot indexed by the party's
+/// own id is unused and stays 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrgCursors {
+    /// Positions of the online pairwise streams, indexed by peer id.
+    pub pair: [u64; 3],
+    /// Position of the private online stream.
+    pub own: u64,
+    /// Positions of the preprocessing pairwise streams, indexed by peer id.
+    pub prep_pair: [u64; 3],
+    /// Position of the private preprocessing stream (P0's Δ stream).
+    pub prep_own: u64,
 }
 
 /// Session configuration.
@@ -254,6 +298,33 @@ mod tests {
         // and the three pairwise streams are distinct
         assert_ne!(a.0, b.0);
         assert_ne!(b.0, c.0);
+    }
+
+    #[test]
+    fn prg_cursors_snapshot_then_seek_restores_every_stream() {
+        let (outs, _) = run_3pc(SessionCfg::default(), |ctx| {
+            // Advance a few streams unevenly, then snapshot.
+            ctx.pair_prg(ctx.next()).next_u64();
+            ctx.prep_own_prg().next_u8();
+            let cur = ctx.prg_cursors();
+            let draw = |ctx: &PartyCtx| {
+                (
+                    ctx.pair_prg(ctx.next()).next_u64(),
+                    ctx.pair_prg(ctx.prev()).next_u64(),
+                    ctx.own_prg.borrow_mut().next_u64(),
+                    ctx.prep_pair_prg(ctx.next()).next_u64(),
+                    ctx.prep_own_prg().next_u64(),
+                )
+            };
+            let first = draw(ctx);
+            // Rewinding to the snapshot replays the identical draws.
+            ctx.seek_prgs(&cur);
+            let second = draw(ctx);
+            (first, second)
+        });
+        for (id, (first, second)) in outs.iter().enumerate() {
+            assert_eq!(first, second, "party {id}");
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! | [`layernorm`] | §LayerNorm | mean/variance over `Z_2^16`/`Z_2^32`, `(6,4)`-bit division LUT with row-shared Δ' |
 //! | [`argmax`] | output minimization (§System Architecture: the client learns only the class) | (value, index) tournament over `lut2_eval_multi` |
 //! | [`tables`] | the LUT contents (Fig. 4 tables, `T_ln`, ReLU/GELU) | pinned bit-exactly against the python oracle `kernels/ref.py` |
+//! | [`tape_store`] | durability of the offline phase (§System Architecture: the offline investment is the asset) | versioned, CRC-framed on-disk correlation tapes + PRG cursor state; streamed back into the pool on restart, DESIGN.md §Durability & recovery |
 //!
 //! Batch semantics: every protocol here is row-major over flat slices and
 //! takes explicit row/shape arguments, so a serving batch is just more
@@ -36,3 +37,4 @@ pub mod relu;
 pub mod softmax;
 pub mod sort;
 pub mod tables;
+pub mod tape_store;

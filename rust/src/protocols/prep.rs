@@ -158,7 +158,7 @@ impl CorrShape {
 /// the masks. At P0 the share vectors are empty (P0 keeps no share of
 /// its own tables); the shape metadata is still populated so P0's
 /// pop-vs-generate decisions stay in lockstep with P1/P2.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Correlation {
     /// The public shape this material was produced for.
     pub shape: CorrShape,

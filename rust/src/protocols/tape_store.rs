@@ -1,0 +1,764 @@
+//! Durable on-disk correlation store (DESIGN.md §Durability & recovery).
+//!
+//! The offline phase is the expensive asset of the whole serving stack:
+//! a party crash that loses the pooled correlation tapes re-pays every
+//! masked-table generation on the request path. This module gives each
+//! party a versioned, CRC-framed on-disk image of its
+//! [`CorrPool`](crate::coordinator::session::CorrPool) plus the PRG
+//! cursors ([`PrgCursors`]) captured at the same window boundary, so
+//! `repro party --tape-dir D` can restart with warm pools — the next
+//! window runs with zero offline bytes and logits bit-identical to an
+//! uninterrupted deployment.
+//!
+//! Layout: one tape file per (graph fingerprint, window size) key —
+//! `tape_p<party>_<fingerprint:016x>_b<batch>.bin` — holding that key's
+//! FIFO of tapes as CRC32-framed records, plus one `state_p<party>.bin`
+//! with the PRG cursors and recovery epoch. Every file opens with a
+//! versioned header binding it to (party, session id); a file that fails
+//! ANY validation — magic, version, party, session, fingerprint, frame
+//! CRC, codec round-trip, trailing bytes — is skipped wholesale, so a
+//! corrupt store degrades to inline generation at every party
+//! symmetrically (never wrong logits, never asymmetric refusal: the pool
+//! depths are reconciled across parties before serving, see
+//! `coordinator::remote`).
+//!
+//! Writes are atomic (temp file + rename) and happen off the request
+//! path: the serving loop persists at window boundaries and after each
+//! prep, i.e. exactly when the pool or the cursors change.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::core::error::{Context, Result};
+use crate::party::PrgCursors;
+
+use super::prep::{CorrKind, CorrShape, Correlation};
+
+/// The pool image this store persists: FIFOs of correlation tapes keyed
+/// by (graph fingerprint, window size). Structurally identical to
+/// `coordinator::session::CorrPool` (type aliases are interchangeable).
+pub type TapePool = HashMap<(u64, usize), VecDeque<Vec<Correlation>>>;
+
+const TAPE_MAGIC: &[u8; 8] = b"PPQTAPE1";
+const STATE_MAGIC: &[u8; 8] = b"PPQSTAT1";
+/// On-disk format version; bump on any layout change so stale stores
+/// are rejected instead of misread.
+pub const TAPE_FORMAT_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3 reflected polynomial) — in-tree, the offline
+// registry has no checksum crate.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE) of `bytes` — the frame checksum of the tape format.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level codec helpers.
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64s(out: &mut Vec<u8>, vs: &[u64]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        put_u64(out, v);
+    }
+}
+
+/// Strict cursor over an untrusted byte buffer: every read is
+/// bounds-checked and decoding must consume the buffer exactly.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.off.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.bytes(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.bytes(8)?.try_into().ok()?))
+    }
+
+    /// A length-prefixed u64 vector. The length is validated against the
+    /// remaining buffer BEFORE allocating, so hostile length fields
+    /// cannot force huge allocations.
+    fn u64s(&mut self) -> Option<Vec<u64>> {
+        let n = self.u64()? as usize;
+        if n.checked_mul(8)? > self.buf.len() - self.off {
+            return None;
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Some(v)
+    }
+
+    fn done(&self) -> bool {
+        self.off == self.buf.len()
+    }
+}
+
+fn encode_shape(out: &mut Vec<u8>, s: &CorrShape) {
+    out.push(match s.kind {
+        CorrKind::Lut1 => 0,
+        CorrKind::Lut2SharedY => 1,
+        CorrKind::Lut2Multi => 2,
+    });
+    put_u32(out, s.x_bits);
+    put_u32(out, s.y_bits);
+    put_u64(out, s.n as u64);
+    put_u64(out, s.groups as u64);
+    put_u32(out, s.out_bits.len() as u32);
+    for &b in &s.out_bits {
+        put_u32(out, b);
+    }
+}
+
+fn decode_shape(r: &mut Reader) -> Option<CorrShape> {
+    let kind = match r.u8()? {
+        0 => CorrKind::Lut1,
+        1 => CorrKind::Lut2SharedY,
+        2 => CorrKind::Lut2Multi,
+        _ => return None,
+    };
+    let x_bits = r.u32()?;
+    let y_bits = r.u32()?;
+    let n = r.u64()? as usize;
+    let groups = r.u64()? as usize;
+    let n_out = r.u32()? as usize;
+    // Shapes are per-table metadata; a hostile count is bounded by the
+    // remaining buffer (4 bytes per entry).
+    if n_out.checked_mul(4)? > r.buf.len() - r.off {
+        return None;
+    }
+    let mut out_bits = Vec::with_capacity(n_out);
+    for _ in 0..n_out {
+        out_bits.push(r.u32()?);
+    }
+    Some(CorrShape { kind, x_bits, y_bits, out_bits, n, groups })
+}
+
+fn encode_corr(out: &mut Vec<u8>, c: &Correlation) {
+    encode_shape(out, &c.shape);
+    put_u32(out, c.tsh.len() as u32);
+    for t in &c.tsh {
+        put_u64s(out, t);
+    }
+    put_u64s(out, &c.dx);
+    put_u64s(out, &c.dy);
+}
+
+fn decode_corr(r: &mut Reader) -> Option<Correlation> {
+    let shape = decode_shape(r)?;
+    let n_tsh = r.u32()? as usize;
+    if n_tsh > r.buf.len() - r.off {
+        return None;
+    }
+    let mut tsh = Vec::with_capacity(n_tsh);
+    for _ in 0..n_tsh {
+        tsh.push(r.u64s()?);
+    }
+    let dx = r.u64s()?;
+    let dy = r.u64s()?;
+    Some(Correlation { shape, tsh, dx, dy })
+}
+
+fn encode_tape(tape: &[Correlation]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, tape.len() as u32);
+    for c in tape {
+        encode_corr(&mut out, c);
+    }
+    out
+}
+
+fn decode_tape(payload: &[u8]) -> Option<Vec<Correlation>> {
+    let mut r = Reader::new(payload);
+    let n = r.u32()? as usize;
+    if n > payload.len() {
+        return None;
+    }
+    let mut tape = Vec::with_capacity(n);
+    for _ in 0..n {
+        tape.push(decode_corr(&mut r)?);
+    }
+    if !r.done() {
+        return None;
+    }
+    Some(tape)
+}
+
+// ---------------------------------------------------------------------------
+// The store.
+
+/// A party's handle on its tape directory: saves and restores the
+/// correlation pool and the PRG cursor snapshot, bound to (party id,
+/// session id) so a store can never feed material into the wrong
+/// deployment.
+pub struct TapeStore {
+    dir: PathBuf,
+    party: usize,
+    session: [u8; 16],
+}
+
+impl TapeStore {
+    /// Open (creating if needed) the tape directory for `party` in
+    /// session `session`.
+    pub fn new(dir: impl Into<PathBuf>, party: usize, session: [u8; 16]) -> Result<TapeStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating tape dir {}", dir.display()))?;
+        Ok(TapeStore { dir, party, session })
+    }
+
+    /// The directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn tape_name(&self, fp: u64, batch: usize) -> String {
+        format!("tape_p{}_{fp:016x}_b{batch}.bin", self.party)
+    }
+
+    fn state_path(&self) -> PathBuf {
+        self.dir.join(format!("state_p{}.bin", self.party))
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        let tmp = path.with_extension("bin.tmp");
+        fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+
+    fn header(&self, magic: &[u8; 8]) -> Vec<u8> {
+        let mut h = Vec::with_capacity(32);
+        h.extend_from_slice(magic);
+        put_u32(&mut h, TAPE_FORMAT_VERSION);
+        put_u32(&mut h, self.party as u32);
+        h.extend_from_slice(&self.session);
+        h
+    }
+
+    fn check_header(&self, r: &mut Reader, magic: &[u8; 8]) -> Option<()> {
+        if r.bytes(8)? != magic {
+            return None;
+        }
+        if r.u32()? != TAPE_FORMAT_VERSION {
+            return None;
+        }
+        if r.u32()? != self.party as u32 {
+            return None;
+        }
+        if r.bytes(16)? != self.session {
+            return None;
+        }
+        Some(())
+    }
+
+    /// Persist the whole pool: one file per non-empty key, stale files
+    /// for drained keys removed, each write atomic. Called at window
+    /// boundaries and after preps (off the request path).
+    pub fn save_pool(&self, pool: &TapePool) -> Result<()> {
+        let prefix = format!("tape_p{}_", self.party);
+        let live: Vec<String> = pool
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&(fp, b), _)| self.tape_name(fp, b))
+            .collect();
+        if let Ok(rd) = fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if name.starts_with(&prefix)
+                    && name.ends_with(".bin")
+                    && !live.iter().any(|l| *l == name)
+                {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+        for (&(fp, batch), q) in pool {
+            if q.is_empty() {
+                continue;
+            }
+            let mut file = self.header(TAPE_MAGIC);
+            put_u64(&mut file, fp);
+            put_u64(&mut file, batch as u64);
+            put_u32(&mut file, q.len() as u32);
+            let hcrc = crc32(&file);
+            put_u32(&mut file, hcrc);
+            for tape in q {
+                let payload = encode_tape(tape);
+                put_u32(&mut file, payload.len() as u32);
+                let pcrc = crc32(&payload);
+                file.extend_from_slice(&payload);
+                put_u32(&mut file, pcrc);
+            }
+            self.write_atomic(&self.dir.join(self.tape_name(fp, batch)), &file)?;
+        }
+        Ok(())
+    }
+
+    /// Restore every valid tape file for this (party, session). Files
+    /// failing any validation are skipped (reported in the returned
+    /// warning list) — the pool entry simply stays cold and the serving
+    /// path falls back to inline generation.
+    pub fn load_pool(&self) -> (TapePool, Vec<String>) {
+        let mut pool = TapePool::new();
+        let mut warnings = Vec::new();
+        let prefix = format!("tape_p{}_", self.party);
+        let Ok(rd) = fs::read_dir(&self.dir) else {
+            return (pool, warnings);
+        };
+        let mut paths: Vec<PathBuf> = rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(&prefix) && n.ends_with(".bin"))
+            })
+            .collect();
+        paths.sort();
+        for path in paths {
+            match self.load_tape_file(&path) {
+                Some((key, tapes)) => {
+                    pool.insert(key, tapes);
+                }
+                None => warnings.push(format!(
+                    "tape file {} failed validation; falling back to inline generation",
+                    path.display()
+                )),
+            }
+        }
+        (pool, warnings)
+    }
+
+    fn load_tape_file(&self, path: &Path) -> Option<((u64, usize), VecDeque<Vec<Correlation>>)> {
+        let bytes = fs::read(path).ok()?;
+        let mut r = Reader::new(&bytes);
+        self.check_header(&mut r, TAPE_MAGIC)?;
+        let fp = r.u64()?;
+        let batch = r.u64()? as usize;
+        let count = r.u32()? as usize;
+        let header_end = r.off;
+        if crc32(&bytes[..header_end]) != r.u32()? {
+            return None;
+        }
+        let mut tapes = VecDeque::with_capacity(count.min(bytes.len()));
+        for _ in 0..count {
+            let len = r.u32()? as usize;
+            let payload = r.bytes(len)?;
+            if crc32(payload) != r.u32()? {
+                return None;
+            }
+            tapes.push_back(decode_tape(payload)?);
+        }
+        if !r.done() {
+            return None;
+        }
+        Some(((fp, batch), tapes))
+    }
+
+    /// Persist a boundary snapshot (atomic).
+    pub fn save_state(&self, st: &RecoveryState) -> Result<()> {
+        let mut file = self.header(STATE_MAGIC);
+        put_u64(&mut file, st.seq);
+        put_cursors(&mut file, &st.cursors);
+        put_cursors(&mut file, &st.prev_cursors);
+        match st.last_prep_key {
+            Some((fp, batch)) => {
+                file.push(1);
+                put_u64(&mut file, fp);
+                put_u64(&mut file, batch as u64);
+            }
+            None => {
+                file.push(0);
+                put_u64(&mut file, 0);
+                put_u64(&mut file, 0);
+            }
+        }
+        put_u64(&mut file, st.epoch);
+        let crc = crc32(&file);
+        put_u32(&mut file, crc);
+        self.write_atomic(&self.state_path(), &file)
+    }
+
+    /// Restore the boundary snapshot; `None` when the state file is
+    /// absent or fails any validation.
+    pub fn load_state(&self) -> Option<RecoveryState> {
+        let bytes = fs::read(self.state_path()).ok()?;
+        let mut r = Reader::new(&bytes);
+        self.check_header(&mut r, STATE_MAGIC)?;
+        let seq = r.u64()?;
+        let cursors = read_cursors(&mut r)?;
+        let prev_cursors = read_cursors(&mut r)?;
+        let last_prep_key = match r.u8()? {
+            0 => {
+                r.u64()?;
+                r.u64()?;
+                None
+            }
+            1 => Some((r.u64()?, r.u64()? as usize)),
+            _ => return None,
+        };
+        let epoch = r.u64()?;
+        let body_end = r.off;
+        if crc32(&bytes[..body_end]) != r.u32()? {
+            return None;
+        }
+        if !r.done() {
+            return None;
+        }
+        Some(RecoveryState { seq, cursors, prev_cursors, last_prep_key, epoch })
+    }
+}
+
+fn put_cursors(out: &mut Vec<u8>, c: &PrgCursors) {
+    for p in 0..3 {
+        put_u64(out, c.pair[p]);
+    }
+    put_u64(out, c.own);
+    for p in 0..3 {
+        put_u64(out, c.prep_pair[p]);
+    }
+    put_u64(out, c.prep_own);
+}
+
+fn read_cursors(r: &mut Reader) -> Option<PrgCursors> {
+    let mut c = PrgCursors::default();
+    for p in 0..3 {
+        c.pair[p] = r.u64()?;
+    }
+    c.own = r.u64()?;
+    for p in 0..3 {
+        c.prep_pair[p] = r.u64()?;
+    }
+    c.prep_own = r.u64()?;
+    Some(c)
+}
+
+/// The boundary bookkeeping persisted alongside the pool — everything a
+/// restarted party needs to rejoin the deployment at its last common
+/// boundary (DESIGN.md §Durability & recovery). Survivors keep the same
+/// record in memory; recovery reconciles all three to the minimum `seq`
+/// (at most one event apart), which may require stepping ONE boundary
+/// back — hence the two-deep cursor history.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryState {
+    /// Completed boundary events (windows + preps): the deployment-wide
+    /// event sequence number this snapshot was taken at.
+    pub seq: u64,
+    /// PRG cursors at boundary `seq`.
+    pub cursors: PrgCursors,
+    /// PRG cursors one boundary earlier (`seq - 1`); equals `cursors`
+    /// at the post-setup boundary 0.
+    pub prev_cursors: PrgCursors,
+    /// If the event completing boundary `seq` was a prep, the pool key
+    /// its tape was pushed under (a rollback pops it from the back).
+    pub last_prep_key: Option<(u64, usize)>,
+    /// Recovery epoch at snapshot time.
+    pub epoch: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{BertConfig, LayerQuantConfig};
+    use crate::model::secure::{bert_graph_dry, mlp_graph_dry, MlpConfig};
+    use crate::protocols::max::MaxStrategy;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ppq_tape_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Deterministic synthetic content for a shape: the exact vector
+    /// geometry a real producer emits, with filler values (the codec is
+    /// content-agnostic; geometry is what must round-trip).
+    fn synth_corr(shape: &CorrShape, salt: u64, as_p0: bool) -> Correlation {
+        let size = match shape.kind {
+            CorrKind::Lut1 => 1usize << shape.x_bits,
+            _ => 1usize << (shape.x_bits + shape.y_bits),
+        };
+        let n_tables = shape.out_bits.len();
+        let fill = |len: usize, lane: u64| -> Vec<u64> {
+            (0..len as u64).map(|i| i.wrapping_mul(0x9e37_79b9).wrapping_add(salt + lane)).collect()
+        };
+        if as_p0 {
+            // P0 keeps shape-only records: empty share vectors.
+            return Correlation {
+                shape: shape.clone(),
+                tsh: vec![Vec::new(); n_tables],
+                dx: Vec::new(),
+                dy: Vec::new(),
+            };
+        }
+        Correlation {
+            shape: shape.clone(),
+            tsh: (0..n_tables).map(|t| fill(shape.n * size, t as u64)).collect(),
+            dx: fill(shape.n, 100),
+            dy: match shape.kind {
+                CorrKind::Lut1 => Vec::new(),
+                _ => fill(shape.groups, 200),
+            },
+        }
+    }
+
+    /// Every shape the graph builders emit: the BERT builder under all
+    /// three MaxStrategies and the MLP builder, each at window sizes 1
+    /// and 4.
+    fn all_builder_shapes() -> Vec<(u64, usize, Vec<CorrShape>)> {
+        let cfg = BertConfig::tiny();
+        let mut out = Vec::new();
+        for strat in [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort] {
+            let per_layer = LayerQuantConfig::uniform(&cfg, strat);
+            let g = bert_graph_dry(&cfg, &per_layer);
+            for batch in [1usize, 4] {
+                let shapes: Vec<CorrShape> =
+                    g.plan(batch).iter().map(|op| op.shape()).collect();
+                assert!(!shapes.is_empty(), "{strat:?} plan is empty");
+                out.push((g.fingerprint(), batch, shapes));
+            }
+        }
+        let g = mlp_graph_dry(&MlpConfig::tiny());
+        for batch in [1usize, 4] {
+            out.push((g.fingerprint(), batch, g.plan(batch).iter().map(|op| op.shape()).collect()));
+        }
+        out
+    }
+
+    fn build_pool(as_p0: bool) -> TapePool {
+        let mut pool = TapePool::new();
+        for (fp, batch, shapes) in all_builder_shapes() {
+            let tape: Vec<Correlation> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| synth_corr(s, fp.wrapping_add(i as u64), as_p0))
+                .collect();
+            pool.entry((fp, batch)).or_default().push_back(tape);
+        }
+        pool
+    }
+
+    #[test]
+    fn crc32_matches_the_standard_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_builder_shape_round_trips_bit_identically() {
+        for as_p0 in [false, true] {
+            let dir = tmp_dir(if as_p0 { "rt_p0" } else { "rt" });
+            let party = if as_p0 { 0 } else { 1 };
+            let store = TapeStore::new(&dir, party, [7; 16]).unwrap();
+            let pool = build_pool(as_p0);
+            store.save_pool(&pool).unwrap();
+            let (loaded, warnings) = store.load_pool();
+            assert!(warnings.is_empty(), "{warnings:?}");
+            assert_eq!(loaded.len(), pool.len());
+            for (key, q) in &pool {
+                assert_eq!(loaded.get(key), Some(q), "key {key:?}");
+            }
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn pool_fifo_order_and_drained_keys_survive_a_save_cycle() {
+        let dir = tmp_dir("fifo");
+        let store = TapeStore::new(&dir, 2, [9; 16]).unwrap();
+        let shapes = &all_builder_shapes()[0].2;
+        let mut pool = TapePool::new();
+        let q = pool.entry((42, 2)).or_default();
+        for i in 0..3 {
+            q.push_back(vec![synth_corr(&shapes[0], i, false)]);
+        }
+        store.save_pool(&pool).unwrap();
+        let (loaded, _) = store.load_pool();
+        assert_eq!(loaded[&(42, 2)].len(), 3);
+        assert_eq!(loaded[&(42, 2)], pool[&(42, 2)], "FIFO order preserved");
+        // Draining the key and re-saving removes the file: a reload must
+        // not resurrect consumed tapes.
+        pool.get_mut(&(42, 2)).unwrap().clear();
+        store.save_pool(&pool).unwrap();
+        let (reloaded, warnings) = store.load_pool();
+        assert!(reloaded.is_empty(), "drained key resurrected: {reloaded:?}");
+        assert!(warnings.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_and_bit_flipped_files_are_rejected_not_misread() {
+        let dir = tmp_dir("corrupt");
+        let store = TapeStore::new(&dir, 1, [7; 16]).unwrap();
+        let pool = build_pool(false);
+        store.save_pool(&pool).unwrap();
+        let files: Vec<PathBuf> = fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .collect();
+        assert!(!files.is_empty());
+        let victim = &files[0];
+        let original = fs::read(victim).unwrap();
+
+        // Truncation at several offsets: header, mid-frame, last byte.
+        for cut in [1usize, 16, original.len() / 2, original.len() - 1] {
+            fs::write(victim, &original[..cut]).unwrap();
+            let (loaded, warnings) = store.load_pool();
+            assert_eq!(loaded.len(), pool.len() - 1, "truncated at {cut} not rejected");
+            assert_eq!(warnings.len(), 1, "truncated at {cut}");
+        }
+
+        // Bit flips sprinkled across the file: header, payload, CRC.
+        for at in [0usize, 9, 13, 30, original.len() / 3, original.len() - 2] {
+            let mut bad = original.clone();
+            bad[at] ^= 0x40;
+            fs::write(victim, &bad).unwrap();
+            let (loaded, warnings) = store.load_pool();
+            assert_eq!(loaded.len(), pool.len() - 1, "bit flip at {at} not rejected");
+            assert_eq!(warnings.len(), 1, "bit flip at {at}");
+        }
+
+        // Trailing garbage is also a rejection (strict framing).
+        let mut padded = original.clone();
+        padded.push(0);
+        fs::write(victim, &padded).unwrap();
+        let (loaded, _) = store.load_pool();
+        assert_eq!(loaded.len(), pool.len() - 1, "trailing byte not rejected");
+
+        // Restoring the original bytes restores the tape.
+        fs::write(victim, &original).unwrap();
+        let (loaded, warnings) = store.load_pool();
+        assert_eq!(loaded.len(), pool.len());
+        assert!(warnings.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_session_party_or_version_is_rejected() {
+        let dir = tmp_dir("ident");
+        let store = TapeStore::new(&dir, 1, [7; 16]).unwrap();
+        store.save_pool(&build_pool(false)).unwrap();
+        let st = RecoveryState { seq: 3, epoch: 3, ..RecoveryState::default() };
+        store.save_state(&st).unwrap();
+
+        // Same dir, different session id: every file is foreign.
+        let other = TapeStore::new(&dir, 1, [8; 16]).unwrap();
+        let (loaded, warnings) = other.load_pool();
+        assert!(loaded.is_empty());
+        assert!(!warnings.is_empty(), "foreign-session tapes must be reported");
+        assert!(other.load_state().is_none());
+
+        // Different party: the files are not even scanned (name prefix),
+        // so nothing loads and nothing is misattributed.
+        let p2 = TapeStore::new(&dir, 2, [7; 16]).unwrap();
+        let (loaded, warnings) = p2.load_pool();
+        assert!(loaded.is_empty());
+        assert!(warnings.is_empty());
+
+        // The rightful owner still loads everything.
+        let (loaded, warnings) = store.load_pool();
+        assert!(!loaded.is_empty());
+        assert!(warnings.is_empty());
+        assert_eq!(store.load_state(), Some(st));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_state_round_trips_and_rejects_corruption() {
+        let dir = tmp_dir("state");
+        let store = TapeStore::new(&dir, 0, [5; 16]).unwrap();
+        assert!(store.load_state().is_none(), "no state file yet");
+        let cursors = PrgCursors {
+            pair: [0, 123, 456],
+            own: 7,
+            prep_pair: [0, 88, 99],
+            prep_own: 1 << 40,
+        };
+        let mut prev_cursors = cursors;
+        prev_cursors.own = 3;
+        for last_prep_key in [None, Some((0xfeed_beef_u64, 4usize))] {
+            let st = RecoveryState { seq: 9, cursors, prev_cursors, last_prep_key, epoch: 2 };
+            store.save_state(&st).unwrap();
+            assert_eq!(store.load_state(), Some(st));
+        }
+        let st = RecoveryState {
+            seq: 9,
+            cursors,
+            prev_cursors,
+            last_prep_key: Some((0xfeed_beef, 4)),
+            epoch: 2,
+        };
+
+        let path = dir.join("state_p0.bin");
+        let original = fs::read(&path).unwrap();
+        for at in 0..original.len() {
+            let mut bad = original.clone();
+            bad[at] ^= 0x04;
+            fs::write(&path, &bad).unwrap();
+            assert!(store.load_state().is_none(), "bit flip at {at} accepted");
+        }
+        fs::write(&path, &original[..original.len() - 1]).unwrap();
+        assert!(store.load_state().is_none(), "truncated state accepted");
+        fs::write(&path, &original).unwrap();
+        assert_eq!(store.load_state(), Some(st));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -174,6 +174,26 @@ impl Net {
         payload
     }
 
+    /// Send a recovery control-plane payload to `to` OUTSIDE the meters
+    /// (tagged `Setup` on the wire). Like the serving control links,
+    /// reconciliation traffic is deployment plumbing, not protocol
+    /// communication: keeping it unmetered preserves bit-identical
+    /// per-link bytes/rounds against in-process sessions (DESIGN.md
+    /// §Durability & recovery). Unlike [`send_bytes`](Net::send_bytes)
+    /// this returns an `Err` instead of panicking — a dead peer during
+    /// recovery is an expected outcome, not a protocol violation.
+    pub fn send_ctl(&self, to: usize, payload: Vec<u8>) -> Result<()> {
+        debug_assert_ne!(to, self.id);
+        self.chan(to).send(Phase::Setup, payload)
+    }
+
+    /// Blocking unmetered receive of a recovery control-plane payload
+    /// (counterpart of [`send_ctl`](Net::send_ctl)).
+    pub fn recv_ctl(&self, from: usize) -> Result<Vec<u8>> {
+        debug_assert_ne!(from, self.id);
+        self.chan(from).recv(Phase::Setup)
+    }
+
     /// Send `vals` bit-tightly packed for `ring` (see `core::pack`).
     pub fn send_ring(&self, to: usize, phase: Phase, ring: Ring, vals: &[u64]) {
         self.send_bytes(to, phase, pack(ring, vals));

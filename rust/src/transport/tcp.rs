@@ -22,7 +22,7 @@ use std::io::BufReader;
 use std::io::{BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::mpsc::{channel, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -58,6 +58,7 @@ pub fn accept_peer(
     session: &[u8; 16],
     own_id: u8,
     conn_alloc: &AtomicU32,
+    epoch: u64,
 ) -> Option<(TcpStream, Accepted)> {
     let (mut stream, _) = match listener.accept() {
         Ok(conn) => conn,
@@ -69,7 +70,7 @@ pub fn accept_peer(
     };
     let conn = conn_alloc.fetch_add(1, Ordering::Relaxed);
     let _ = stream.set_read_timeout(Some(HANDSHAKE_READ_TIMEOUT));
-    match wire::accept_handshake(&mut stream, session, own_id, conn) {
+    match wire::accept_handshake(&mut stream, session, own_id, conn, epoch) {
         Ok(accepted) => {
             let _ = stream.set_read_timeout(None);
             Some((stream, accepted))
@@ -106,7 +107,7 @@ impl PeerChannel for TcpChannel {
 
 /// Wrap an established, handshaken stream into a [`PeerChannel`]:
 /// spawns the link's writer thread.
-fn make_channel(stream: TcpStream) -> Result<Box<dyn PeerChannel>> {
+pub(crate) fn make_channel(stream: TcpStream) -> Result<Box<dyn PeerChannel>> {
     stream.set_nodelay(true).context("set_nodelay")?;
     let reader = BufReader::new(stream.try_clone().context("clone stream for reader")?);
     let (tx, rx) = channel::<(Tag, Vec<u8>)>();
@@ -173,6 +174,10 @@ pub struct TcpMesh {
     /// The connection-id allocator the serving accept loop continues
     /// from (parked clients already consumed ids from it).
     pub conn_alloc: Arc<AtomicU32>,
+    /// The highest recovery epoch seen across the mesh handshakes — the
+    /// deployment's current epoch (0 on a fresh deployment; higher when
+    /// this party restarted into a deployment that already recovered).
+    pub epoch: u64,
 }
 
 /// TCP backend configuration for ONE party process.
@@ -185,6 +190,9 @@ pub struct TcpTransport {
     conn_alloc: Arc<AtomicU32>,
     /// Per-dial connect budget (see [`DIAL_TIMEOUT`]).
     pub dial_timeout: Duration,
+    /// The recovery epoch this party presents in its handshakes (0 for
+    /// a fresh start; a restarted party presents its persisted epoch).
+    pub epoch: u64,
 }
 
 impl TcpTransport {
@@ -205,6 +213,7 @@ impl TcpTransport {
             session,
             conn_alloc: Arc::new(AtomicU32::new(1)),
             dial_timeout: DIAL_TIMEOUT,
+            epoch: 0,
         }
     }
 
@@ -218,17 +227,24 @@ impl TcpTransport {
         let mut chans: PartyChannels = [None, None, None];
         let mut parked = Vec::new();
         let mut parked_coords = Vec::new();
+        let mut epoch = self.epoch;
         for p in 0..self.id {
             let addr = self.peers[p]
                 .as_deref()
                 .with_context(|| format!("party {}: no address for peer {p}", self.id))?;
             let mut stream = dial_retry(addr, self.dial_timeout)?;
             stream.set_nodelay(true).context("set_nodelay")?;
-            wire::dial_handshake(
+            let peer_epoch = wire::dial_handshake(
                 &mut stream,
-                PartyHello { session: self.session, from: self.id as u8, to: p as u8 },
+                PartyHello {
+                    session: self.session,
+                    from: self.id as u8,
+                    to: p as u8,
+                    epoch: self.epoch,
+                },
             )
             .with_context(|| format!("party {}: handshake with party {p} at {addr}", self.id))?;
+            epoch = epoch.max(peer_epoch);
             chans[p] = Some(make_channel(stream)?);
         }
         let mut need: Vec<usize> = (self.id + 1..3).collect();
@@ -239,21 +255,30 @@ impl TcpTransport {
             // for the real peers — the same tolerance the serving loop
             // applies. A *misdialed* peer still fails loudly on its own
             // side (it never gets an ack).
-            let Some((stream, accepted)) =
-                accept_peer(&self.listener, &self.session, self.id as u8, &self.conn_alloc)
-            else {
+            let Some((stream, accepted)) = accept_peer(
+                &self.listener,
+                &self.session,
+                self.id as u8,
+                &self.conn_alloc,
+                self.epoch,
+            ) else {
                 continue;
             };
             match accepted {
-                Accepted::Party(from) => {
+                Accepted::Party { id: from, epoch: peer_epoch } => {
                     let from = from as usize;
-                    match need.iter().position(|&x| x == from) {
-                        Some(pos) => {
-                            need.remove(pos);
-                            chans[from] = Some(make_channel(stream)?);
-                        }
-                        None => bail!("party {}: duplicate connection from party {from}", self.id),
+                    if from <= self.id || from >= 3 {
+                        // Lower ids never dial higher ids; a hello
+                        // claiming otherwise is a misdial — drop it.
+                        continue;
                     }
+                    // Latest connection wins: a surviving peer re-dials
+                    // on every recovery attempt while this (restarted)
+                    // party is still establishing, so an earlier link
+                    // from the same peer is one the peer abandoned.
+                    need.retain(|&x| x != from);
+                    epoch = epoch.max(peer_epoch);
+                    chans[from] = Some(make_channel(stream)?);
                 }
                 Accepted::Client(conn) => parked.push((stream, conn)),
                 Accepted::Coordinator { token } => parked_coords.push((stream, token)),
@@ -265,8 +290,71 @@ impl TcpTransport {
             parked_clients: parked,
             parked_coords,
             conn_alloc: self.conn_alloc,
+            epoch,
         })
     }
+}
+
+/// Re-establish the party mesh after a failure (DESIGN.md §Durability &
+/// recovery): dial every lower-id peer afresh (with retry, presenting
+/// `epoch` in the handshake), and take every higher-id peer from
+/// `party_rx` — the serving accept loop keeps ownership of the
+/// listener and forwards freshly handshaken peer links (with the epoch
+/// each presented) into that channel. Old links must already be
+/// dropped by the caller: their in-flight window bytes are poison, so
+/// recovery always rebuilds every mesh link from zero.
+///
+/// If the same peer shows up twice (a parked link from an earlier,
+/// abandoned rejoin attempt), the latest connection wins. Returns the
+/// channels plus the highest epoch seen across the handshakes. Errors
+/// when `timeout` expires before the mesh is whole — the caller's
+/// retry budget decides whether to try again or drain.
+pub fn reestablish(
+    own_id: usize,
+    peers: &[Option<String>; 3],
+    session: [u8; 16],
+    epoch: u64,
+    party_rx: &Receiver<(u8, TcpStream, u64)>,
+    timeout: Duration,
+) -> Result<(PartyChannels, u64)> {
+    let deadline = Instant::now() + timeout;
+    let mut chans: PartyChannels = [None, None, None];
+    let mut max_epoch = epoch;
+    for p in 0..own_id {
+        let addr = peers[p]
+            .as_deref()
+            .with_context(|| format!("party {own_id}: no address for peer {p}"))?;
+        let mut stream = dial_retry(addr, timeout)?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        let peer_epoch = wire::dial_handshake(
+            &mut stream,
+            PartyHello { session, from: own_id as u8, to: p as u8, epoch },
+        )
+        .with_context(|| format!("party {own_id}: rejoin handshake with party {p} at {addr}"))?;
+        max_epoch = max_epoch.max(peer_epoch);
+        chans[p] = Some(make_channel(stream)?);
+    }
+    let mut need: Vec<usize> = (own_id + 1..3).collect();
+    while !need.is_empty() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            bail!("party {own_id}: timed out waiting for peers {need:?} to rejoin");
+        }
+        let (from, stream, peer_epoch) = party_rx
+            .recv_timeout(remaining)
+            .ok()
+            .with_context(|| format!("party {own_id}: peers {need:?} never rejoined"))?;
+        let from = from as usize;
+        if from >= 3 || from == own_id {
+            continue;
+        }
+        // Latest connection wins: an earlier link from the same peer is
+        // a leftover of a rejoin attempt the peer itself abandoned.
+        need.retain(|&x| x != from);
+        max_epoch = max_epoch.max(peer_epoch);
+        chans[from] = Some(make_channel(stream)?);
+    }
+    Ok((chans, max_epoch))
 }
 
 impl Transport for TcpTransport {

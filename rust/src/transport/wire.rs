@@ -41,8 +41,11 @@ use crate::transport::metrics::Phase;
 
 /// Wire protocol version; bumped on any incompatible framing change.
 /// Version 2 introduced per-request frames, connection ids in hello
-/// acks, and the serving control plane (manifests).
-pub const WIRE_VERSION: u8 = 2;
+/// acks, and the serving control plane (manifests). Version 3 added the
+/// recovery epoch to party hellos and acks, the [`Tag::Resync`] /
+/// [`Tag::Fault`] control frames, and the extended [`ServeStats`]
+/// payload (DESIGN.md §Durability & recovery).
+pub const WIRE_VERSION: u8 = 3;
 
 /// Refuse frames whose length prefix exceeds this (1 GiB): a corrupt or
 /// hostile prefix must not drive allocation.
@@ -103,6 +106,16 @@ pub enum Tag {
     StatsReq,
     /// Party → client: serialized [`ServeStats`] reply.
     Stats,
+    /// P1 → P0/P2 (control link): a party failed mid-deployment; tear
+    /// down the mesh and rejoin at the carried recovery epoch. Receivers
+    /// act only if the epoch is newer than their own, so a party that
+    /// already recovered (it saw the failure itself) ignores the echo.
+    Resync,
+    /// Client → party: fault-injection arm frame (payload = window id).
+    /// The party aborts — as if `kill -9`'d — when it receives the
+    /// manifest for that window. Test-only, but always decoded so the
+    /// fault schedule needs no special build.
+    Fault,
 }
 
 impl Tag {
@@ -131,6 +144,8 @@ impl Tag {
             Tag::Refused => 19,
             Tag::StatsReq => 20,
             Tag::Stats => 21,
+            Tag::Resync => 22,
+            Tag::Fault => 23,
         }
     }
 
@@ -159,6 +174,8 @@ impl Tag {
             19 => Tag::Refused,
             20 => Tag::StatsReq,
             21 => Tag::Stats,
+            22 => Tag::Resync,
+            23 => Tag::Fault,
             other => bail!("unknown wire tag {other}"),
         })
     }
@@ -230,6 +247,11 @@ pub struct PartyHello {
     pub from: u8,
     /// The party id the dialer believes it is connecting to.
     pub to: u8,
+    /// The dialer's recovery epoch: how many mesh recoveries it has
+    /// completed (0 on a fresh deployment). Both ends adopt the max of
+    /// the two epochs, so a restarted party learns the deployment's
+    /// current epoch at reconnect time.
+    pub epoch: u64,
 }
 
 impl PartyHello {
@@ -238,11 +260,12 @@ impl PartyHello {
         out.extend_from_slice(&self.session);
         out.push(self.from);
         out.push(self.to);
+        out.extend_from_slice(&self.epoch.to_le_bytes());
         out
     }
 
     fn decode(payload: &[u8]) -> Result<PartyHello> {
-        if payload.len() != 19 {
+        if payload.len() != 27 {
             bail!("party hello: bad length {}", payload.len());
         }
         if payload[0] != WIRE_VERSION {
@@ -250,49 +273,60 @@ impl PartyHello {
         }
         let mut session = [0u8; 16];
         session.copy_from_slice(&payload[1..17]);
-        Ok(PartyHello { session, from: payload[17], to: payload[18] })
+        let epoch = u64::from_le_bytes(payload[19..27].try_into().unwrap());
+        Ok(PartyHello { session, from: payload[17], to: payload[18], epoch })
     }
 }
 
-fn ack_payload(session: &[u8; 16], id: u8, conn: u32) -> Vec<u8> {
+fn ack_payload(session: &[u8; 16], id: u8, conn: u32, epoch: u64) -> Vec<u8> {
     let mut out = vec![WIRE_VERSION];
     out.extend_from_slice(session);
     out.push(id);
     out.extend_from_slice(&conn.to_le_bytes());
+    out.extend_from_slice(&epoch.to_le_bytes());
     out
 }
 
-fn decode_ack(payload: &[u8], session: &[u8; 16]) -> Result<(u8, u32)> {
-    if payload.len() != 22 || payload[0] != WIRE_VERSION {
+fn decode_ack(payload: &[u8], session: &[u8; 16]) -> Result<(u8, u32, u64)> {
+    if payload.len() != 30 || payload[0] != WIRE_VERSION {
         bail!("malformed hello ack");
     }
     if &payload[1..17] != session {
         bail!("hello ack: session id mismatch");
     }
     let conn = u32::from_le_bytes(payload[18..22].try_into().unwrap());
-    Ok((payload[17], conn))
+    let epoch = u64::from_le_bytes(payload[22..30].try_into().unwrap());
+    Ok((payload[17], conn, epoch))
 }
 
 /// Dialer side of the party handshake: send a [`PartyHello`], wait for
 /// the [`Tag::HelloAck`], and verify the acceptor really is party `to`.
-pub fn dial_handshake(stream: &mut (impl Read + Write), hello: PartyHello) -> Result<()> {
+/// Returns the acceptor's recovery epoch (the dialer adopts the max of
+/// the two).
+pub fn dial_handshake(stream: &mut (impl Read + Write), hello: PartyHello) -> Result<u64> {
     write_frame(stream, Tag::PartyHello, &hello.encode())?;
     stream.flush()?;
     let (tag, payload) = read_frame(stream)?;
     if tag != Tag::HelloAck {
         bail!("expected HelloAck, got {tag:?}");
     }
-    let (acked, _) = decode_ack(&payload, &hello.session)?;
+    let (acked, _, epoch) = decode_ack(&payload, &hello.session)?;
     if acked != hello.to {
         bail!("dialed party {} but party {acked} answered", hello.to);
     }
-    Ok(())
+    Ok(epoch)
 }
 
 /// What an accepted connection turned out to be.
 pub enum Accepted {
-    /// A peer party's mesh link (its id).
-    Party(u8),
+    /// A peer party's mesh link.
+    Party {
+        /// The dialing party's id.
+        id: u8,
+        /// The recovery epoch the dialer presented (the acceptor adopts
+        /// the max of its own and this).
+        epoch: u64,
+    },
     /// A serving client; carries the connection id the acceptor assigned
     /// (and acked back to the client).
     Client(u32),
@@ -319,6 +353,7 @@ pub fn accept_handshake(
     session: &[u8; 16],
     own_id: u8,
     conn: u32,
+    epoch: u64,
 ) -> Result<Accepted> {
     let (tag, payload) = read_frame(stream)?;
     match tag {
@@ -337,9 +372,9 @@ pub fn accept_handshake(
             if hello.from as usize >= 3 || hello.from == own_id {
                 bail!("invalid peer party id {}", hello.from);
             }
-            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, 0))?;
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, 0, epoch))?;
             stream.flush()?;
-            Ok(Accepted::Party(hello.from))
+            Ok(Accepted::Party { id: hello.from, epoch: hello.epoch })
         }
         Tag::ClientHello => {
             if payload.len() != 17 || payload[0] != WIRE_VERSION {
@@ -348,7 +383,7 @@ pub fn accept_handshake(
             if &payload[1..17] != session {
                 bail!("client connected with a different session id");
             }
-            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, conn))?;
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, conn, epoch))?;
             stream.flush()?;
             Ok(Accepted::Client(conn))
         }
@@ -364,7 +399,7 @@ pub fn accept_handshake(
             }
             let mut token = [0u8; 16];
             token.copy_from_slice(&payload[18..34]);
-            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, 0))?;
+            write_frame(stream, Tag::HelloAck, &ack_payload(session, own_id, 0, epoch))?;
             stream.flush()?;
             Ok(Accepted::Coordinator { token })
         }
@@ -385,7 +420,8 @@ pub fn client_handshake(stream: &mut (impl Read + Write), session: &[u8; 16]) ->
     if tag != Tag::HelloAck {
         bail!("expected HelloAck, got {tag:?}");
     }
-    decode_ack(&payload, session)
+    let (id, conn, _) = decode_ack(&payload, session)?;
+    Ok((id, conn))
 }
 
 /// P1 side of the control-link handshake: presents the control `token`
@@ -632,6 +668,45 @@ pub fn decode_bind(payload: &[u8]) -> Result<u32> {
     Ok(u32::from_le_bytes(payload.try_into().unwrap()))
 }
 
+/// Encode a [`Tag::Resync`] payload: the recovery epoch the deployment
+/// is rejoining at.
+pub fn encode_resync(epoch: u64) -> Vec<u8> {
+    epoch.to_le_bytes().to_vec()
+}
+
+/// Decode a [`Tag::Resync`] payload.
+pub fn decode_resync(payload: &[u8]) -> Result<u64> {
+    if payload.len() != 8 {
+        bail!("resync: bad length {}", payload.len());
+    }
+    Ok(u64::from_le_bytes(payload.try_into().unwrap()))
+}
+
+/// Encode a [`Tag::Fault`] payload: the window id at whose manifest the
+/// receiving party should abort (fault injection for tests).
+pub fn encode_fault(window: u64) -> Vec<u8> {
+    window.to_le_bytes().to_vec()
+}
+
+/// Decode a [`Tag::Fault`] payload.
+pub fn decode_fault(payload: &[u8]) -> Result<u64> {
+    if payload.len() != 8 {
+        bail!("fault: bad length {}", payload.len());
+    }
+    Ok(u64::from_le_bytes(payload.try_into().unwrap()))
+}
+
+/// The number of log2-millisecond window-latency buckets in
+/// [`ServeStats`].
+pub const LAT_BUCKETS: usize = 16;
+
+/// The histogram bucket a window wall-clock latency of `ms` falls in:
+/// bucket 0 is sub-millisecond, bucket `i` covers `[2^(i-1), 2^i)` ms,
+/// and the last bucket absorbs everything slower.
+pub fn latency_bucket(ms: u64) -> usize {
+    ((u64::BITS - ms.leading_zeros()) as usize).min(LAT_BUCKETS - 1)
+}
+
 /// A party's serving counters (the [`Tag::Stats`] payload): how much
 /// traffic its wire-path batcher has absorbed.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
@@ -647,13 +722,35 @@ pub struct ServeStats {
     /// Requests admitted but not yet served (P1 only; queue depth at
     /// snapshot time).
     pub queued: u64,
+    /// Correlation tapes currently pooled across all (fingerprint,
+    /// batch) keys — the party's warm-window headroom.
+    pub tapes: u64,
+    /// Recovery epoch: how many mesh recoveries this party has
+    /// completed (0 for an uninterrupted deployment).
+    pub epoch: u64,
+    /// Window wall-clock latency histogram in log2-millisecond buckets
+    /// (see [`latency_bucket`]).
+    pub lat_hist: [u64; LAT_BUCKETS],
 }
 
 impl ServeStats {
-    /// Serialize for the wire (five u64 LE).
+    const LEN: usize = 56 + 8 * LAT_BUCKETS;
+
+    /// Serialize for the wire (seven u64 LE plus the latency histogram).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(40);
-        for v in [self.windows, self.served, self.refused, self.preps, self.queued] {
+        let mut out = Vec::with_capacity(Self::LEN);
+        for v in [
+            self.windows,
+            self.served,
+            self.refused,
+            self.preps,
+            self.queued,
+            self.tapes,
+            self.epoch,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in self.lat_hist {
             out.extend_from_slice(&v.to_le_bytes());
         }
         out
@@ -661,16 +758,23 @@ impl ServeStats {
 
     /// Inverse of [`to_bytes`](ServeStats::to_bytes).
     pub fn from_bytes(payload: &[u8]) -> Result<ServeStats> {
-        if payload.len() != 40 {
+        if payload.len() != Self::LEN {
             bail!("stats: bad length {}", payload.len());
         }
         let at = |o: usize| u64::from_le_bytes(payload[o..o + 8].try_into().unwrap());
+        let mut lat_hist = [0u64; LAT_BUCKETS];
+        for (i, b) in lat_hist.iter_mut().enumerate() {
+            *b = at(56 + 8 * i);
+        }
         Ok(ServeStats {
             windows: at(0),
             served: at(8),
             refused: at(16),
             preps: at(24),
             queued: at(32),
+            tapes: at(40),
+            epoch: at(48),
+            lat_hist,
         })
     }
 }
@@ -713,10 +817,10 @@ mod tests {
 
     #[test]
     fn tag_bytes_roundtrip() {
-        for b in 0..22u8 {
+        for b in 0..24u8 {
             assert_eq!(Tag::from_u8(b).unwrap().as_u8(), b);
         }
-        assert!(Tag::from_u8(22).is_err());
+        assert!(Tag::from_u8(24).is_err());
     }
 
     #[test]
@@ -801,8 +905,54 @@ mod tests {
         assert_eq!(decode_prep(&encode_prep(8)).unwrap(), 8);
         assert!(decode_prep(&[1, 2]).is_err());
         assert_eq!(decode_bind(&encode_bind(12)).unwrap(), 12);
-        let stats = ServeStats { windows: 2, served: 7, refused: 1, preps: 3, queued: 0 };
+        let mut stats = ServeStats {
+            windows: 2,
+            served: 7,
+            refused: 1,
+            preps: 3,
+            queued: 0,
+            tapes: 5,
+            epoch: 1,
+            ..ServeStats::default()
+        };
+        stats.lat_hist[latency_bucket(12)] += 1;
         assert_eq!(ServeStats::from_bytes(&stats.to_bytes()).unwrap(), stats);
+        assert!(ServeStats::from_bytes(&[0u8; 40]).is_err());
         assert!(ServeStats::from_bytes(&[0u8; 39]).is_err());
+    }
+
+    #[test]
+    fn resync_and_fault_roundtrip() {
+        assert_eq!(decode_resync(&encode_resync(9)).unwrap(), 9);
+        assert!(decode_resync(&[0u8; 7]).is_err());
+        assert_eq!(decode_fault(&encode_fault(3)).unwrap(), 3);
+        assert!(decode_fault(&[0u8; 9]).is_err());
+    }
+
+    #[test]
+    fn latency_buckets_are_log2_ms() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 1);
+        assert_eq!(latency_bucket(2), 2);
+        assert_eq!(latency_bucket(3), 2);
+        assert_eq!(latency_bucket(1023), 10);
+        assert_eq!(latency_bucket(u64::MAX), LAT_BUCKETS - 1);
+    }
+
+    #[test]
+    fn party_hello_carries_the_epoch_both_ways() {
+        let hello =
+            PartyHello { session: [7u8; 16], from: 2, to: 0, epoch: 4 };
+        let decoded = PartyHello::decode(&hello.encode()).unwrap();
+        assert_eq!(decoded, hello);
+        // Truncated or wrong-version hellos are refused.
+        assert!(PartyHello::decode(&hello.encode()[..19]).is_err());
+        let mut stale = hello.encode();
+        stale[0] = WIRE_VERSION - 1;
+        assert!(PartyHello::decode(&stale).is_err());
+        // Acks echo the acceptor's epoch.
+        let ack = ack_payload(&[7u8; 16], 0, 0, 6);
+        assert_eq!(decode_ack(&ack, &[7u8; 16]).unwrap(), (0, 0, 6));
+        assert!(decode_ack(&ack[..22], &[7u8; 16]).is_err());
     }
 }

@@ -1,0 +1,319 @@
+//! Deterministic fault injection against REAL party processes
+//! (DESIGN.md §Durability & recovery): kill a party mid-deployment —
+//! via the wire-armed abort (`--fault-window` / `Tag::Fault`, which
+//! dies by `std::process::abort()` exactly at a chosen window's
+//! manifest) or a literal `SIGKILL` — and prove the recovery story
+//! end-to-end:
+//!
+//! * the window riding the killed party is refused SYMMETRICALLY (one
+//!   clean `Refused` frame from P1, no hanging client, no partial
+//!   answers from P0/P2);
+//! * a party restarted with the same `--tape-dir` rejoins warm: the
+//!   retried window consumes a persisted correlation tape (ZERO
+//!   request-path offline bytes) and its logits are bit-identical to an
+//!   in-process session;
+//! * survivors that exhaust their reconnect budget refuse their queue
+//!   and drain with exit code 0 — a lost deployment never wedges;
+//! * the control plane recovers too: killing the SEQUENCER drops both
+//!   control links, and a restarted P1 re-dials them and resumes
+//!   serving new clients.
+//!
+//! Every scenario spawns the actual `repro` binary (three OS processes
+//! over loopback TCP), so the recovery paths exercised here are the
+//! ones a real deployment runs — not in-process approximations.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use ppq_bert::bench_harness::prepared_model;
+use ppq_bert::coordinator::remote::{arm_fault, session_id, RemoteClient};
+use ppq_bert::coordinator::Session;
+use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::weights::synth_input;
+use ppq_bert::party::SessionCfg;
+use ppq_bert::protocols::max::MaxStrategy;
+
+const BIN: &str = env!("CARGO_BIN_EXE_repro");
+
+/// The three party addresses of one test deployment (each test uses its
+/// own port base so the tests can run in parallel).
+fn party_addrs(base: u16) -> [String; 3] {
+    [0u16, 1, 2].map(|i| format!("127.0.0.1:{}", base + i))
+}
+
+/// Per-(test, party) tape directories, wiped ONCE at deployment start —
+/// a restart reuses the surviving on-disk state, which is the point.
+fn fresh_tape_dirs(tag: &str) -> [PathBuf; 3] {
+    [0usize, 1, 2].map(|id| {
+        let dir = std::env::temp_dir().join(format!("ppq_fault_{tag}_p{id}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    })
+}
+
+/// Spawn one `repro party` process with the deployment's addresses plus
+/// per-test extra flags.
+fn spawn_party(base: u16, id: usize, extra: &[String]) -> Child {
+    let addrs = party_addrs(base);
+    let peers: Vec<String> = (0..3).filter(|&p| p != id).map(|p| addrs[p].clone()).collect();
+    let mut cmd = Command::new(BIN);
+    cmd.args(["party", "--id", &id.to_string(), "--listen", &addrs[id]]);
+    cmd.args(["--peers", &peers.join(",")]);
+    cmd.args(extra);
+    // Quiet by default: recovery progress goes to stderr and the
+    // interesting state is asserted over the wire.
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    cmd.spawn().expect("spawn party process")
+}
+
+/// Kill-on-drop guard so a failing assertion never leaks live party
+/// processes into the test runner.
+struct Procs(Vec<Child>);
+
+impl Drop for Procs {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Wait (bounded) for a process to exit on its own.
+fn wait_exit(child: &mut Child, timeout: Duration) -> ExitStatus {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(st) = child.try_wait().expect("poll child") {
+            return st;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("process did not exit within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn oracle_logits(cfg: BertConfig, inputs: &[Vec<i64>]) -> Vec<Vec<i64>> {
+    let (w, _) = prepared_model(cfg);
+    let sess = Session::start(cfg, w, SessionCfg::default(), MaxStrategy::Tournament);
+    let out = inputs.iter().map(|x| sess.infer_batch(std::slice::from_ref(x)).remove(0)).collect();
+    sess.shutdown();
+    out
+}
+
+/// A party dying mid-window is REFUSED symmetrically (one clean frame
+/// from P1, the client's wait returns an error, nothing hangs) — and
+/// when nobody restarts the dead party, the survivors exhaust their
+/// reconnect budget, refuse everything queued, and DRAIN with exit
+/// code 0. A lost deployment must never wedge.
+#[test]
+fn killed_party_mid_window_refuses_cleanly_and_survivors_drain() {
+    let cfg = BertConfig::tiny();
+    let base = 9310;
+    let budget =
+        ["--reconnect-attempts", "3", "--reconnect-backoff-ms", "200"].map(String::from).to_vec();
+    let mut procs = Procs(Vec::new());
+    procs.0.push(spawn_party(base, 0, &budget));
+    procs.0.push(spawn_party(base, 1, &budget));
+    let mut p2_flags = budget.clone();
+    p2_flags.extend(["--fault-window", "0"].map(String::from));
+    procs.0.push(spawn_party(base, 2, &p2_flags));
+
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+    let mut client = RemoteClient::connect(&party_addrs(base), session, Duration::from_secs(120))
+        .expect("connect");
+    let id = client.submit(&synth_input(&cfg, 500)).expect("submit");
+    let err = client.wait(id).expect_err("the window riding the killed party must be refused");
+    assert!(err.to_string().contains("refused"), "unexpected failure shape: {err}");
+
+    // P2 died by abort (non-zero), the survivors drained cleanly (zero):
+    // P1 after refusing its queue, P0 after its reconnect budget ran dry.
+    assert!(!wait_exit(&mut procs.0[2], Duration::from_secs(60)).success(), "P2 should abort");
+    assert!(wait_exit(&mut procs.0[1], Duration::from_secs(120)).success(), "P1 should drain");
+    assert!(wait_exit(&mut procs.0[0], Duration::from_secs(120)).success(), "P0 should drain");
+}
+
+/// THE durability acceptance pin: kill P2 at window 1 via the armed
+/// fault, restart it with the same `--tape-dir`, and the deployment
+/// recovers WARM — the retried window consumes a persisted correlation
+/// tape (zero request-path offline bytes on every party), its logits
+/// are bit-identical to an in-process session over the same inputs, and
+/// every party reports recovery epoch 1.
+#[test]
+fn restarted_party_with_tape_dir_serves_next_window_warm_and_bit_identical() {
+    let cfg = BertConfig::tiny();
+    let base = 9320;
+    let addrs = party_addrs(base);
+    let dirs = fresh_tape_dirs("warm");
+    let flags = |id: usize| -> Vec<String> {
+        let mut f = ["--max-batch", "1", "--prep", "3"].map(String::from).to_vec();
+        let recon = ["--reconnect-attempts", "150", "--reconnect-backoff-ms", "200"];
+        f.extend(recon.map(String::from));
+        f.push("--tape-dir".into());
+        f.push(dirs[id].to_string_lossy().into_owned());
+        f
+    };
+    let mut procs = Procs((0..3).map(|id| spawn_party(base, id, &flags(id))).collect());
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+
+    let xa = synth_input(&cfg, 510);
+    let xb = synth_input(&cfg, 511);
+    let mut c1 = RemoteClient::connect(&addrs, session, Duration::from_secs(120)).expect("connect");
+    let ida = c1.submit(&xa).expect("submit a");
+    let done_a = c1.wait(ida).expect("wait a");
+    // Prefill made even the FIRST window warm.
+    assert_eq!(done_a.window_offline_bytes(), 0, "prefilled window 0 should be warm");
+
+    // Arm the abort at window 1 (acked before we submit the request
+    // that trips it), then watch that window get refused.
+    arm_fault(&addrs[2], session, 1, Duration::from_secs(30)).expect("arm fault");
+    let idb = c1.submit(&xb).expect("submit b");
+    let err = c1.wait(idb).expect_err("window 1 must be refused when P2 aborts");
+    assert!(err.to_string().contains("refused"), "unexpected failure shape: {err}");
+    assert!(!wait_exit(&mut procs.0[2], Duration::from_secs(60)).success(), "P2 should abort");
+    drop(c1); // its P2 connection died with the old process
+
+    // Restart P2 against the SAME flags — including the same tape dir,
+    // which now holds the pre-crash pool and boundary snapshot.
+    let restart_flags = flags(2);
+    procs.0[2] = spawn_party(base, 2, &restart_flags);
+    let mut c2 = RemoteClient::connect(&addrs, session, Duration::from_secs(120))
+        .expect("reconnect after restart");
+    let idb2 = c2.submit(&xb).expect("resubmit b");
+    let done_b = c2.wait(idb2).expect("retried window must serve after the warm rejoin");
+
+    // Warm: the retried window consumed a persisted tape — zero
+    // request-path offline bytes summed over all three parties.
+    assert_eq!(
+        done_b.window_offline_bytes(),
+        0,
+        "retried window after crash-restart should be served from the durable pool"
+    );
+
+    // Bit-identical to an uninterrupted in-process session.
+    let oracle = oracle_logits(cfg, &[xa, xb]);
+    assert_eq!(done_a.logits, oracle[0], "pre-fault logits diverged");
+    assert_eq!(done_b.logits, oracle[1], "post-recovery logits diverged");
+
+    // Every party counts exactly one completed recovery, and P1's
+    // latency histogram saw both completed windows.
+    for p in 0..3 {
+        let s = c2.stats(p).expect("stats");
+        assert_eq!(s.epoch, 1, "party {p} recovery epoch");
+    }
+    let s1 = c2.stats(1).expect("stats p1");
+    assert!(s1.lat_hist.iter().sum::<u64>() >= 2, "latency histogram should cover both windows");
+    assert!(s1.tapes <= 3, "tape gauge should stay bounded by prep depth");
+
+    c2.shutdown().expect("drain");
+    for p in [0usize, 1, 2] {
+        assert!(wait_exit(&mut procs.0[p], Duration::from_secs(120)).success(), "party {p}");
+    }
+}
+
+/// Killing the SEQUENCER kills both control links — the follower-side
+/// trigger is a dead control read, not a protocol abort. A P1 restarted
+/// with its `--tape-dir` must rejoin the mesh, re-dial fresh control
+/// links, and serve new clients.
+#[test]
+fn sequencer_restart_resumes_service_for_new_clients() {
+    let cfg = BertConfig::tiny();
+    let base = 9330;
+    let addrs = party_addrs(base);
+    let dirs = fresh_tape_dirs("seq");
+    let flags = |id: usize| -> Vec<String> {
+        let recon = ["--reconnect-attempts", "150", "--reconnect-backoff-ms", "200"];
+        let mut f = recon.map(String::from).to_vec();
+        f.push("--tape-dir".into());
+        f.push(dirs[id].to_string_lossy().into_owned());
+        f
+    };
+    let mut procs = Procs((0..3).map(|id| spawn_party(base, id, &flags(id))).collect());
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+
+    let xa = synth_input(&cfg, 520);
+    let xb = synth_input(&cfg, 521);
+    let mut c1 = RemoteClient::connect(&addrs, session, Duration::from_secs(120)).expect("connect");
+    let la = c1.infer(&xa).expect("pre-kill window");
+    drop(c1);
+
+    // SIGKILL the idle sequencer, then restart it against its tape dir.
+    procs.0[1].kill().expect("kill -9 P1");
+    let _ = procs.0[1].wait();
+    let restart_flags = flags(1);
+    procs.0[1] = spawn_party(base, 1, &restart_flags);
+
+    let mut c2 = RemoteClient::connect(&addrs, session, Duration::from_secs(120))
+        .expect("reconnect after sequencer restart");
+    let idb = c2.submit(&xb).expect("submit after restart");
+    let done_b = c2.wait(idb).expect("restarted sequencer must serve new clients");
+
+    let oracle = oracle_logits(cfg, &[xa, xb]);
+    assert_eq!(la, oracle[0], "pre-kill logits diverged");
+    assert_eq!(done_b.logits, oracle[1], "post-restart logits diverged");
+    // The surviving followers each completed one recovery.
+    for p in [0usize, 2] {
+        assert_eq!(c2.stats(p).expect("stats").epoch, 1, "party {p} recovery epoch");
+    }
+
+    c2.shutdown().expect("drain");
+    for p in [0usize, 1, 2] {
+        assert!(wait_exit(&mut procs.0[p], Duration::from_secs(120)).success(), "party {p}");
+    }
+}
+
+/// The CLI end of the story: `repro loadgen --fault party:2@window:1
+/// --check` drives a deployment into the fault, tolerates the refusal,
+/// and replays every COMPLETED window through a fresh in-process
+/// session demanding bit-identical logits — green around a real crash
+/// plus restart.
+#[test]
+fn loadgen_fault_check_replays_completed_windows() {
+    let cfg = BertConfig::tiny();
+    let base = 9340;
+    let addrs = party_addrs(base);
+    let dirs = fresh_tape_dirs("loadgen");
+    let flags = |id: usize| -> Vec<String> {
+        let mut f = ["--max-batch", "1"].map(String::from).to_vec();
+        let recon = ["--reconnect-attempts", "150", "--reconnect-backoff-ms", "200"];
+        f.extend(recon.map(String::from));
+        f.push("--tape-dir".into());
+        f.push(dirs[id].to_string_lossy().into_owned());
+        f
+    };
+    let mut procs = Procs((0..3).map(|id| spawn_party(base, id, &flags(id))).collect());
+
+    let mut loadgen = Command::new(BIN)
+        .args(["loadgen", "--clients", "1", "--requests", "2"])
+        .args(["--remote", &addrs.join(",")])
+        .args(["--fault", "party:2@window:1", "--check"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn loadgen");
+
+    // The armed fault kills P2 at window 1; restart it so loadgen's
+    // post-run probe (and the deployment) can recover.
+    assert!(!wait_exit(&mut procs.0[2], Duration::from_secs(120)).success(), "P2 should abort");
+    procs.0[2] = spawn_party(base, 2, &flags(2)[..]);
+
+    let out = loadgen.wait_with_output().expect("loadgen output");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "loadgen failed:\n{stdout}");
+    assert!(stdout.contains("fault armed"), "fault was not armed:\n{stdout}");
+    assert!(stdout.contains("refused 1 of 2"), "expected exactly one refusal:\n{stdout}");
+    assert!(stdout.contains("CHECK OK"), "completed windows failed the replay check:\n{stdout}");
+
+    // The recovered deployment still serves, then drains cleanly.
+    let session = session_id(SessionCfg::default().master_seed, &cfg);
+    let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(120))
+        .expect("post-recovery connect");
+    let logits = client.infer(&synth_input(&cfg, 530)).expect("post-recovery inference");
+    assert_eq!(logits.len(), cfg.n_classes);
+    client.shutdown().expect("drain");
+    for p in [0usize, 1, 2] {
+        assert!(wait_exit(&mut procs.0[p], Duration::from_secs(120)).success(), "party {p}");
+    }
+}

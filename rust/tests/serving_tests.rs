@@ -225,6 +225,62 @@ fn per_connection_inflight_cap_refuses_cleanly() {
     }
 }
 
+/// The `--check`-style replay contract around a disruption: when one
+/// request in a pipelined stream is refused, the COMPLETED requests'
+/// window compositions still replay bit-identically through an
+/// in-process session — a refusal never shifts, reorders, or
+/// contaminates the windows around it. (The crash-induced variant of
+/// this case — a real `kill -9` fault via `repro loadgen --fault` —
+/// lives in fault_tests.rs, which drives actual processes.)
+#[test]
+fn completed_requests_around_a_refusal_replay_bit_identically() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts {
+        max_batch: 1,
+        linger: Duration::from_millis(20),
+        queue_cap: 1,
+        max_inflight: 64,
+        prep_depth: 0,
+    };
+    let (addrs, session, handles) = spawn_deployment(cfg, serve);
+    let mut client =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect");
+
+    // Rapid-fire submissions against a single-slot queue: some are
+    // admitted (each its own window, max_batch 1), at least one bounces.
+    let inputs: Vec<Vec<i64>> = (0..4).map(|i| synth_input(&cfg, 600 + i as u64)).collect();
+    let ids: Vec<u64> = inputs.iter().map(|x| client.submit(x).expect("submit")).collect();
+    let mut completed: Vec<(usize, Completed)> = Vec::new();
+    let mut refused = 0usize;
+    for (ridx, id) in ids.into_iter().enumerate() {
+        match client.wait(id) {
+            Ok(done) => completed.push((ridx, done)),
+            Err(e) => {
+                assert!(e.to_string().contains("refused"), "unexpected failure: {e}");
+                refused += 1;
+            }
+        }
+    }
+    assert!(refused >= 1, "the single-slot queue should have refused at least one request");
+    assert!(!completed.is_empty(), "some requests must have completed around the refusal");
+
+    // Replay the completed windows, in window order, through a fresh
+    // in-process session: logits must be bit-identical.
+    completed.sort_by_key(|(_, c)| (c.wid(), c.pos()));
+    let (w, _) = prepared_model(cfg);
+    let sess = Session::start(cfg, w, SessionCfg::default(), MaxStrategy::Tournament);
+    for (ridx, c) in &completed {
+        let replay = sess.infer_batch(std::slice::from_ref(&inputs[*ridx]));
+        assert_eq!(c.logits, replay[0], "request {ridx} diverged from the in-process replay");
+    }
+    sess.shutdown();
+
+    client.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party error");
+    }
+}
+
 /// A mid-stream client disconnect drops ONLY that client's queued
 /// requests: its window slot is reclaimed before the cut (the next
 /// window holds exactly the surviving client's work), the deployment

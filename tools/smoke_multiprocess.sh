@@ -8,9 +8,15 @@
 #    clients (`repro loadgen --check`): the wire-path batcher must fold
 #    the clients into shared windows and every logits vector must be
 #    bit-identical to an in-process replay of the same windows.
+# 3. Spawn a THIRD deployment with durable tape stores (`--tape-dir`),
+#    kill -9 one party between windows, restart it against the same
+#    store, and verify the deployment recovers: the in-flight attempt is
+#    refused cleanly, the retry is served from the reloaded correlation
+#    tape (zero request-path offline bytes) and its logits stay
+#    bit-identical to the in-process result.
 #
-# Exercises the real process boundary (and the real client concurrency)
-# the in-thread tests cannot.
+# Exercises the real process boundary (and the real client concurrency
+# and real SIGKILL crash recovery) the in-thread tests cannot.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,9 +42,25 @@ spawn_deployment() { # $1 = first port, rest = extra party flags
   ADDR0="127.0.0.1:$port"
   ADDR1="127.0.0.1:$((port + 1))"
   ADDR2="127.0.0.1:$((port + 2))"
-  "$BIN" party --id 0 --listen "$ADDR0" --peers "$ADDR1,$ADDR2" "$@" & PIDS+=($!)
-  "$BIN" party --id 1 --listen "$ADDR1" --peers "$ADDR0,$ADDR2" "$@" & PIDS+=($!)
-  "$BIN" party --id 2 --listen "$ADDR2" --peers "$ADDR0,$ADDR1" "$@" & PIDS+=($!)
+  spawn_party 0 "$@"
+  spawn_party 1 "$@"
+  spawn_party 2 "$@"
+}
+
+spawn_party() { # $1 = party id, rest = extra flags; honors TAPE_BASE
+  local id=$1
+  shift
+  local listen peers
+  local tape=()
+  case "$id" in
+    0) listen=$ADDR0 peers="$ADDR1,$ADDR2" ;;
+    1) listen=$ADDR1 peers="$ADDR0,$ADDR2" ;;
+    2) listen=$ADDR2 peers="$ADDR0,$ADDR1" ;;
+  esac
+  if [ -n "${TAPE_BASE:-}" ]; then
+    tape=(--tape-dir "$TAPE_BASE/p$id")
+  fi
+  "$BIN" party --id "$id" --listen "$listen" --peers "$peers" "${tape[@]}" "$@" & PIDS+=($!)
 }
 
 # ---- scenario 1: single client, logits diffed vs in-process ----
@@ -86,6 +108,61 @@ if [ -n "$windows" ] && [ "$windows" -ge 8 ]; then
   exit 1
 fi
 echo "OK: 4 concurrent clients x 2 requests batched into $windows windows, bit-identical logits"
+
+# ---- scenario 3: kill -9 + restart from the durable tape store ----
+# Durable pools (--prep 2 prefill), single-request windows so the warm
+# check is per-request. Party 2 is SIGKILLed while the deployment is
+# idle; the sequencer discovers the dead link on the next window, refuses
+# it cleanly, and re-establishes the mesh with the restarted process —
+# which rejoins warm from its persisted correlation tape.
+TAPE_BASE=$(mktemp -d)
+RECOV_FLAGS=(--prep 2 --max-batch 1 --reconnect-attempts 150 --reconnect-backoff-ms 200)
+P2_IDX=$((${#PIDS[@]} + 2))
+spawn_deployment "$((PORT_BASE + 20))" "${RECOV_FLAGS[@]}"
+
+warm_logits() { # $1 = infer output; echoes logits, fails unless warm
+  local out=$1
+  echo "$out" | extract_logits
+  if ! echo "$out" | grep -q ' 0 offline B'; then
+    echo "FAIL: window was not served from the pooled tape (offline bytes on the request path)" >&2
+    echo "$out" >&2
+    exit 1
+  fi
+}
+
+out_a=$("$BIN" infer --remote "$ADDR0,$ADDR1,$ADDR2")
+logits_a=$(warm_logits "$out_a")
+if [ "$logits_a" != "$local_logits" ]; then
+  echo "FAIL: pre-crash logits differ from in-process: $logits_a vs $local_logits" >&2
+  exit 1
+fi
+
+kill -9 "${PIDS[$P2_IDX]}"
+spawn_party 2 "${RECOV_FLAGS[@]}" # same --tape-dir via TAPE_BASE
+
+# The first window after the crash may be refused (that is the refusal
+# symmetry contract) while the survivors re-establish the mesh; retry
+# until the deployment serves again.
+out_b=""
+for attempt in $(seq 20); do
+  if out_b=$("$BIN" infer --remote "$ADDR0,$ADDR1,$ADDR2" 2>/dev/null); then
+    break
+  fi
+  out_b=""
+  sleep 1
+done
+if [ -z "$out_b" ]; then
+  echo "FAIL: deployment never recovered after party 2 was killed and restarted" >&2
+  exit 1
+fi
+logits_b=$(warm_logits "$out_b")
+if [ "$logits_b" != "$local_logits" ]; then
+  echo "FAIL: post-recovery logits differ from in-process: $logits_b vs $local_logits" >&2
+  exit 1
+fi
+"$BIN" infer --remote "$ADDR0,$ADDR1,$ADDR2" --halt >/dev/null
+unset TAPE_BASE
+echo "OK: party 2 SIGKILLed and restarted from its tape store: retry served warm (attempt $attempt), bit-identical logits"
 
 # All parties were asked to halt; give them a moment and confirm.
 for pid in "${PIDS[@]}"; do
