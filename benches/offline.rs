@@ -29,9 +29,11 @@ use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, BenchOpt
 use ppq_bert::coordinator::session::{prep_into_pool, serve_window};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
 use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
-use ppq_bert::model::secure::{bert_graph, bert_graph_dry};
+use ppq_bert::model::passes::OptConfig;
+use ppq_bert::model::secure::{bert_graph, bert_graph_dry, bert_graph_dry_opt, bert_graph_opt};
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
 use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::protocols::prep::{dedup_groups, field_count};
 use ppq_bert::protocols::tape_store::{TapePool, TapeStore};
 use ppq_bert::transport::{build_mesh, Metrics, MetricsSnapshot, NetParams, Phase};
 
@@ -239,5 +241,68 @@ fn main() {
     t3.print(
         "restart-to-first-warm-window: a party rebuilt from its durable tape store serves its \
          first window with zero request-path offline traffic (DESIGN.md §Durability & recovery)",
+    );
+
+    // Optimizer dedup: prep the same one-window tape at --opt 0 vs
+    // --opt 1. Dedup batches identical-shape P0→P2 correction fields
+    // into one message per shape group, so the prep (offline) round
+    // count drops while bytes and the produced tape stay identical
+    // (rust/tests/opt_tests.rs pins the tape field-for-field).
+    let mut t4 = Table::new(&["opt", "prep offline rounds", "offline MiB", "P0->P2 msgs"]);
+    let mut prep_rounds = [0u64; 2];
+    for level in [0u8, 1] {
+        let opt = OptConfig::from_level(level);
+        let metrics = Arc::new(Metrics::new());
+        let nets = build_mesh(Arc::clone(&metrics), None);
+        let start = Instant::now();
+        let mut parties = Vec::new();
+        for (id, net) in nets.into_iter().enumerate() {
+            let weights = Arc::clone(&weights);
+            parties.push(std::thread::spawn(move || {
+                let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
+                let w = if id == P0 { Some(&*weights) } else { None };
+                let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+                let model = bert_graph_opt(&ctx, &cfg, &per_layer, w, opt);
+                let mut pool = TapePool::new();
+                prep_into_pool(&ctx, &model, &mut pool, 1);
+                ctx.flush_timer();
+            }));
+        }
+        for h in parties {
+            h.join().expect("prep party");
+        }
+        let wall = start.elapsed();
+        let d = metrics.snapshot();
+        let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        let dry = bert_graph_dry_opt(&cfg, &per_layer, opt);
+        let plan = dry.plan(1);
+        let msgs: usize = if level == 0 {
+            plan.iter().map(|op| field_count(&op.shape())).sum()
+        } else {
+            dedup_groups(&plan).len()
+        };
+        prep_rounds[level as usize] = d.max_rounds(Phase::Offline);
+        opts.record(
+            &format!("offline/opt_dedup/opt{level}"),
+            wall,
+            d.total_bytes(Phase::Offline),
+            d.max_rounds(Phase::Offline),
+        );
+        t4.row(vec![
+            format!("--opt {level}"),
+            d.max_rounds(Phase::Offline).to_string(),
+            format!("{:.2}", d.total_bytes(Phase::Offline) as f64 / 1048576.0),
+            msgs.to_string(),
+        ]);
+    }
+    assert!(
+        prep_rounds[1] < prep_rounds[0],
+        "opt1 prep must measure strictly fewer offline rounds ({} vs {})",
+        prep_rounds[1],
+        prep_rounds[0],
+    );
+    t4.print(
+        "correlation dedup: --opt 1 preps one window with one P0->P2 message per shape group \
+         (same bytes and tape, fewer offline rounds; DESIGN.md §Graph optimizer)",
     );
 }

@@ -10,11 +10,15 @@
 
 use std::sync::Arc;
 
-use ppq_bert::bench_harness::{fmt_dur, prepared_model, time_once, BenchOpts, Table};
+use ppq_bert::bench_harness::{
+    fmt_dur, prepared_inputs, prepared_model, time_once, BenchOpts, Table,
+};
 use ppq_bert::core::ring::R16;
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer};
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::passes::OptConfig;
+use ppq_bert::model::secure::{bert_graph_default, bert_graph_opt, secure_infer, secure_infer_batch};
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
+use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::transport::{build_mesh, loopback_mesh, Metrics, Net, Phase};
 
 /// One ping-pong exchange of `n` 16-bit ring elements between P1 and P2.
@@ -50,6 +54,26 @@ fn infer_over(nets: [Net; 3]) {
                 let model = bert_graph_default(&ctx, &cfg, (ctx.id == P0).then_some(weights));
                 let xin = (ctx.id == P1).then(|| x.clone());
                 let _ = secure_infer(&ctx, &model, xin.as_deref());
+            });
+        }
+    });
+}
+
+/// Setup + one `batch`-item window sealed at an optimizer level.
+fn infer_batch_over(nets: [Net; 3], batch: usize, opt: OptConfig) {
+    let cfg = BertConfig::tiny();
+    let (weights, _) = prepared_model(cfg);
+    let inputs = prepared_inputs(&cfg, batch);
+    std::thread::scope(|s| {
+        for net in nets {
+            let (weights, inputs) = (&weights, &inputs);
+            s.spawn(move || {
+                let ctx = PartyCtx::new(net.id, net, SessionCfg::default().master_seed, 1);
+                let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+                let w = (ctx.id == P0).then_some(weights);
+                let model = bert_graph_opt(&ctx, &cfg, &per, w, opt);
+                let xin = (ctx.id == P1).then(|| inputs.clone());
+                let _ = secure_infer_batch(&ctx, &model, batch, xin.as_deref());
             });
         }
     });
@@ -122,4 +146,42 @@ fn main() {
         t.row(vec!["tcp loopback".into(), fmt_dur(wall)]);
     }
     t.print("setup + secure_infer across backends (same bytes/rounds by construction)");
+
+    // Optimizer speedup: the same tiny model served cold over the mesh
+    // at --opt 0 vs --opt 1. Round packing fuses adjacent independent
+    // LUT converts, so opt1 measures strictly fewer online rounds with
+    // identical online bytes (rust/tests/opt_tests.rs pins the logits
+    // bit-identical across the two levels).
+    let mut t = Table::new(&["batch", "opt", "online rounds", "online MB", "wall"]);
+    for &batch in &[1usize, 4] {
+        let mut rounds = [0u64; 2];
+        for level in [0u8, 1] {
+            let opt = OptConfig::from_level(level);
+            let metrics = Arc::new(Metrics::new());
+            let nets = build_mesh(Arc::clone(&metrics), None);
+            let wall = time_once(|| infer_batch_over(nets, batch, opt));
+            let snap = metrics.snapshot();
+            rounds[level as usize] = snap.max_rounds(Phase::Online);
+            opts.record(
+                &format!("transport/opt_speedup/b{batch}/opt{level}"),
+                wall,
+                snap.total_bytes(Phase::Online),
+                snap.max_rounds(Phase::Online),
+            );
+            t.row(vec![
+                batch.to_string(),
+                format!("--opt {level}"),
+                snap.max_rounds(Phase::Online).to_string(),
+                format!("{:.2}", snap.total_bytes(Phase::Online) as f64 / 1048576.0),
+                fmt_dur(wall),
+            ]);
+        }
+        assert!(
+            rounds[1] < rounds[0],
+            "B={batch}: opt1 must measure strictly fewer online rounds ({} vs {})",
+            rounds[1],
+            rounds[0],
+        );
+    }
+    t.print("optimizer speedup: --opt 1 packs adjacent LUT converts (same bytes, fewer rounds)");
 }

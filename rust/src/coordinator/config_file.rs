@@ -128,6 +128,12 @@ impl ConfigFile {
         if let Some(p) = self.get_usize("serving", "prep_depth")? {
             sc.prep_depth = p;
         }
+        if let Some(l) = self.get_usize("serving", "opt")? {
+            if l > 1 {
+                bail!("unknown opt level `{l}` (0|1)");
+            }
+            sc.opt = crate::model::passes::OptConfig::from_level(l as u8);
+        }
         Ok(sc)
     }
 

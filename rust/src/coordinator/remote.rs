@@ -66,7 +66,8 @@ use crate::core::error::{bail, Context, Result};
 use crate::core::prg::Prg;
 use crate::model::config::{BertConfig, LayerQuantConfig};
 use crate::model::graph::SecureGraph;
-use crate::model::secure::bert_graph;
+use crate::model::passes::OptConfig;
+use crate::model::secure::bert_graph_opt;
 use crate::model::weights::{synth_input, Weights};
 use crate::party::{PartyCtx, SessionCfg, P0, P1, P2};
 use crate::protocols::max::MaxStrategy;
@@ -150,6 +151,11 @@ pub struct PartyOpts {
     /// Pause between recovery attempts; also the per-attempt budget for
     /// waiting on rejoining peers.
     pub reconnect_backoff: Duration,
+    /// Optimizer pipeline the served graph is sealed with (`--opt`).
+    /// Part of the graph fingerprint, so tapes persisted at one level
+    /// are never served at another; all parties must agree, like
+    /// [`PartyOpts::max_strategy`].
+    pub opt: OptConfig,
 }
 
 impl PartyOpts {
@@ -170,6 +176,7 @@ impl PartyOpts {
             fault_window: None,
             reconnect_attempts: 60,
             reconnect_backoff: Duration::from_secs(1),
+            opt: OptConfig::none(),
         }
     }
 }
@@ -601,7 +608,7 @@ fn build_state(
     // session id.
     let ctx = PartyCtx::new(opts.id, net, opts.scfg.master_seed, opts.scfg.threads);
     let per_layer = LayerQuantConfig::uniform(&opts.cfg, opts.max_strategy);
-    let model = bert_graph(&ctx, &opts.cfg, &per_layer, weights);
+    let model = bert_graph_opt(&ctx, &opts.cfg, &per_layer, weights, opts.opt);
     ctx.flush_timer();
     PartyState { ctx, model }
 }

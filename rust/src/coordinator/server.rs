@@ -25,6 +25,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::model::config::BertConfig;
+use crate::model::passes::OptConfig;
 use crate::model::weights::Weights;
 use crate::party::SessionCfg;
 use crate::protocols::max::MaxStrategy;
@@ -51,6 +52,8 @@ pub struct ServerConfig {
     /// keeps ready. 0 disables preprocessing (every window generates its
     /// LUT material inline, as the paper's accounting-only split did).
     pub prep_depth: usize,
+    /// Optimizer pipeline the session's graph is sealed with (`--opt`).
+    pub opt: OptConfig,
 }
 
 impl ServerConfig {
@@ -64,6 +67,7 @@ impl ServerConfig {
             net: NetParams::LAN,
             max_strategy: MaxStrategy::Tournament,
             prep_depth: 0,
+            opt: OptConfig::none(),
         }
     }
 }
@@ -132,7 +136,7 @@ impl Coordinator {
     /// `prep_depth > 0` — prefills the correlation pool so even the
     /// first window is served warm.
     pub fn start(cfg: ServerConfig, weights: Weights) -> Coordinator {
-        let session = Session::start(cfg.cfg, weights, cfg.session, cfg.max_strategy);
+        let session = Session::start_opt(cfg.cfg, weights, cfg.session, cfg.max_strategy, cfg.opt);
         let last_snap = session.snapshot();
         let mut c = Coordinator {
             cfg,

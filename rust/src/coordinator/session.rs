@@ -13,7 +13,8 @@ use std::thread::JoinHandle;
 
 use crate::model::config::{BertConfig, LayerQuantConfig};
 use crate::model::graph::SecureGraph;
-use crate::model::secure::{bert_graph, secure_infer_batch};
+use crate::model::passes::OptConfig;
+use crate::model::secure::{bert_graph_opt, secure_infer_batch};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
@@ -108,9 +109,23 @@ impl Session {
         scfg: SessionCfg,
         max_strategy: MaxStrategy,
     ) -> Session {
+        Self::start_opt(cfg, weights, scfg, max_strategy, OptConfig::none())
+    }
+
+    /// [`Session::start`] with an explicit optimizer pipeline: the party
+    /// threads seal their graphs with `opt`, so the pool key (graph
+    /// fingerprint) — and hence every tape this session preps — is bound
+    /// to the optimization level (DESIGN.md §Graph optimizer).
+    pub fn start_opt(
+        cfg: BertConfig,
+        weights: Weights,
+        scfg: SessionCfg,
+        max_strategy: MaxStrategy,
+        opt: OptConfig,
+    ) -> Session {
         let metrics = Arc::new(Metrics::new());
         let nets = build_mesh(Arc::clone(&metrics), scfg.realtime);
-        Self::start_over(nets, cfg, weights, scfg, max_strategy)
+        Self::start_over_opt(nets, cfg, weights, scfg, max_strategy, opt)
     }
 
     /// Spawn the party threads over ALREADY-established transport
@@ -124,6 +139,18 @@ impl Session {
         weights: Weights,
         scfg: SessionCfg,
         max_strategy: MaxStrategy,
+    ) -> Session {
+        Self::start_over_opt(nets, cfg, weights, scfg, max_strategy, OptConfig::none())
+    }
+
+    /// [`Session::start_over`] with an explicit optimizer pipeline.
+    pub fn start_over_opt(
+        nets: [Net; 3],
+        cfg: BertConfig,
+        weights: Weights,
+        scfg: SessionCfg,
+        max_strategy: MaxStrategy,
+        opt: OptConfig,
     ) -> Session {
         let metrics = Arc::clone(&nets[0].metrics);
         let (logits_tx, logits_rx) = channel();
@@ -142,7 +169,7 @@ impl Session {
                 let ctx = make_ctx(id, net, scfg);
                 let w = if id == P0 { Some(&*weights) } else { None };
                 let per_layer = LayerQuantConfig::uniform(&cfg, max_strategy);
-                let model = bert_graph(&ctx, &cfg, &per_layer, w);
+                let model = bert_graph_opt(&ctx, &cfg, &per_layer, w, opt);
                 // Party-local pool of ahead-of-time correlation tapes,
                 // keyed by (graph, window size). Every party receives the
                 // same command sequence, so all three pools evolve in

@@ -25,6 +25,7 @@ use ppq_bert::coordinator::remote::{
 };
 use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
 use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::passes::OptConfig;
 use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
 use ppq_bert::protocols::max::MaxStrategy;
@@ -98,6 +99,15 @@ fn max_strategy_from(flags: &HashMap<String, String>) -> MaxStrategy {
     }
 }
 
+/// `--opt 0|1`: which optimizer pipeline graphs are sealed with.
+fn opt_from(flags: &HashMap<String, String>) -> OptConfig {
+    match flag_parse(flags, "opt", 0u8) {
+        0 => OptConfig::none(),
+        1 => OptConfig::o1(),
+        other => usage_error(&format!("unknown --opt `{other}` (0|1)")),
+    }
+}
+
 fn net_from(flags: &HashMap<String, String>) -> NetParams {
     match flags.get("net").map(|s| s.as_str()) {
         Some("wan") => NetParams::WAN,
@@ -136,6 +146,7 @@ fn cmd_infer(flags: HashMap<String, String>) {
     let mut scfg = ServerConfig::new(cfg);
     scfg.session = SessionCfg { threads, ..SessionCfg::default() };
     scfg.net = net;
+    scfg.opt = opt_from(&flags);
     let mut coord = Coordinator::start(scfg, w);
     coord.submit(x);
     let results = coord.run_batch();
@@ -234,6 +245,7 @@ fn cmd_party(flags: HashMap<String, String>) {
         .cloned()
         .unwrap_or_else(|| defaults[id].clone());
     let mut opts = PartyOpts::new(id, cfg);
+    opts.opt = opt_from(&flags);
     opts.scfg.threads = flag_parse(&flags, "threads", 1);
     opts.weights_seed = flag_parse(&flags, "weights-seed", 42);
     opts.serve.max_batch = flag_parse(&flags, "max-batch", opts.serve.max_batch);
@@ -478,7 +490,7 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
         // in-process session: logits must be bit-identical.
         let (w, _) = prepared_model(cfg);
         let scfg = SessionCfg { master_seed: seed, ..SessionCfg::default() };
-        let sess = Session::start(cfg, w, scfg, MaxStrategy::Tournament);
+        let sess = Session::start_opt(cfg, w, scfg, MaxStrategy::Tournament, opt_from(&flags));
         let mut mismatches = 0usize;
         for (wid, reqs) in &windows {
             let inputs: Vec<Vec<i64>> = reqs
@@ -538,6 +550,7 @@ fn cmd_serve(flags: HashMap<String, String>) {
     let mut scfg = ServerConfig::new(cfg);
     scfg.max_batch = batch;
     scfg.prep_depth = prep;
+    scfg.opt = opt_from(&flags);
     let mut coord = Coordinator::start(scfg, w);
     for i in 0..n {
         coord.submit(synth_input(&cfg, 100 + i as u64));
@@ -566,14 +579,33 @@ fn cmd_serve(flags: HashMap<String, String>) {
     coord.shutdown();
 }
 
+/// The `repro plan` NDJSON `TOTAL` record: tape totals plus the
+/// optimizer accounting (factored out so the unit tests can pin it
+/// against the modeled report).
+fn plan_total_json(report: &ppq_bert::model::passes::PlanReport, batch: usize, opt: u8) -> String {
+    format!(
+        "{{\"node\":\"TOTAL\",\"ops\":{},\"batch\":{batch},\"bytes\":{},\"opt\":{opt},\
+         \"rounds\":{},\"messages_unopt\":{},\"messages_deduped\":{}}}",
+        report.plan_ops,
+        report.total_bytes,
+        report.schedule.len(),
+        report.messages_unopt,
+        report.messages_deduped,
+    )
+}
+
 /// Dump the per-op offline tape of a serving window: walk the secure op
 /// graph (share-less dry build — no session, no weights) and print, for
 /// every planned correlation, the consuming node, its public shape and
-/// its modeled offline bytes, plus totals. `--json` emits the same tape
-/// as NDJSON (one object per correlation, then one `TOTAL` record).
+/// its modeled offline bytes, plus totals, the packed-round schedule and
+/// the per-shape dedup groups of the sealed pipeline (`--opt 0|1`).
+/// `--json` emits the same data as NDJSON (one object per correlation,
+/// one `round` object per schedule level, one `group` object per dedup
+/// group, then one `TOTAL` record).
 fn cmd_plan(flags: HashMap<String, String>) {
     use ppq_bert::model::config::LayerQuantConfig;
-    use ppq_bert::model::secure::bert_graph_dry;
+    use ppq_bert::model::passes::plan_report;
+    use ppq_bert::model::secure::bert_graph_dry_opt;
     use ppq_bert::protocols::prep::CorrKind;
 
     let cfg = config_from(&flags);
@@ -582,16 +614,24 @@ fn cmd_plan(flags: HashMap<String, String>) {
         usage_error("--batch must be >= 1");
     }
     let strat = max_strategy_from(&flags);
-    let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, strat));
+    let opt = opt_from(&flags);
+    let g = bert_graph_dry_opt(&cfg, &LayerQuantConfig::uniform(&cfg, strat), opt);
     let entries = g.plan_entries(batch);
-    let total_bytes: u64 = entries.iter().map(|e| e.bytes).sum();
+    let report = plan_report(&g, batch);
     let json = flags.contains_key("json");
+    let kind_name = |kind: CorrKind| match kind {
+        CorrKind::Lut1 => "lut1",
+        CorrKind::Lut2SharedY => "lut2",
+        CorrKind::Lut2Multi => "lut2multi",
+    };
     if !json {
         println!(
-            "offline tape of `{}` (fingerprint {:016x}), window of {batch}, {:?} max:",
+            "offline tape of `{}` (fingerprint {:016x}), window of {batch}, {:?} max, \
+             --opt {}:",
             g.name(),
             g.fingerprint(),
-            strat
+            strat,
+            opt.level()
         );
         println!(
             "{:<28} {:<10} {:>6} {:>5} {:>9} {:>12}",
@@ -599,11 +639,7 @@ fn cmd_plan(flags: HashMap<String, String>) {
         );
     }
     for e in &entries {
-        let kind = match e.shape.kind {
-            CorrKind::Lut1 => "lut1",
-            CorrKind::Lut2SharedY => "lut2",
-            CorrKind::Lut2Multi => "lut2multi",
-        };
+        let kind = kind_name(e.shape.kind);
         let out_bits: Vec<String> = e.shape.out_bits.iter().map(|b| b.to_string()).collect();
         if json {
             println!(
@@ -631,17 +667,56 @@ fn cmd_plan(flags: HashMap<String, String>) {
         }
     }
     if json {
-        println!(
-            "{{\"node\":\"TOTAL\",\"ops\":{},\"batch\":{batch},\"bytes\":{total_bytes}}}",
-            entries.len()
-        );
+        for r in &report.schedule {
+            let nodes: Vec<String> = r.nodes.iter().map(|n| format!("\"{n}\"")).collect();
+            println!("{{\"round\":{},\"nodes\":[{}]}}", r.round, nodes.join(","));
+        }
+        for grp in &report.dedup {
+            println!(
+                "{{\"group\":\"{}\",\"x_bits\":{},\"n\":{},\"count\":{},\"bytes\":{}}}",
+                kind_name(grp.shape.kind),
+                grp.shape.x_bits,
+                grp.shape.n,
+                grp.count,
+                grp.bytes
+            );
+        }
+        println!("{}", plan_total_json(&report, batch, opt.level()));
     } else {
         println!(
             "total: {} correlations, {:.2} MiB P0->P2 offline traffic ({} graph nodes)",
             entries.len(),
-            total_bytes as f64 / 1048576.0,
+            report.total_bytes as f64 / 1048576.0,
             g.node_count()
         );
+        println!(
+            "optimizer --opt {}: {} packed groups, {} dead removed, {} dead retained",
+            opt.level(),
+            g.packed_groups(),
+            g.dead_removed(),
+            g.dead_retained()
+        );
+        println!(
+            "offline correction messages: {} unopt -> {} deduped ({} shape groups)",
+            report.messages_unopt,
+            report.messages_deduped,
+            report.dedup.len()
+        );
+        println!("packed schedule ({} dependency rounds):", report.schedule.len());
+        for r in &report.schedule {
+            println!("  round {:>3}: {}", r.round, r.nodes.join("  "));
+        }
+        println!("dedup groups (first-appearance order):");
+        for grp in &report.dedup {
+            println!(
+                "  {:<10} x_bits={:<2} n={:>9}  x{:<3} {:>12} bytes",
+                kind_name(grp.shape.kind),
+                grp.shape.x_bits,
+                grp.shape.n,
+                grp.count,
+                grp.bytes
+            );
+        }
     }
 }
 
@@ -671,7 +746,8 @@ fn cmd_oracle(flags: HashMap<String, String>) {
 fn cmd_comm(flags: HashMap<String, String>) {
     let cfg = config_from(&flags);
     let (w, x) = prepared_model(cfg);
-    let scfg = ServerConfig::new(cfg);
+    let mut scfg = ServerConfig::new(cfg);
+    scfg.opt = opt_from(&flags);
     let mut coord = Coordinator::start(scfg, w);
     coord.submit(x);
     let _ = coord.run_batch();
@@ -691,31 +767,37 @@ const HELP: &str = "repro — privacy-preserving quantized BERT inference (3-par
 
 USAGE:
   repro infer  [--config tiny|base] [--seq N] [--layers L] [--threads T] [--net lan|wan|local]
+               [--opt 0|1]
   repro infer  --remote [ADDR0,ADDR1,ADDR2] [--session LABEL] [--halt]
                                              run against `repro party` processes
   repro loadgen [--clients K] [--requests N] [--remote [ADDRS]] [--session LABEL]
-                [--fault party:N@window:W] [--check] [--halt]
+                [--fault party:N@window:W] [--check] [--opt 0|1] [--halt]
                                              K concurrent clients; --check replays
                                              the observed windows in-process and
-                                             demands bit-identical logits; --fault
+                                             demands bit-identical logits (--opt
+                                             must match the deployment's); --fault
                                              arms a kill -9-style abort on party N
                                              at window W (refusals become expected)
-  repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--conf FILE]
+  repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--opt 0|1]
+               [--conf FILE]
   repro plan   [--config tiny|base] [--seq N] [--layers L] [--batch B]
-               [--max tournament|linear|sort] [--json]
+               [--max tournament|linear|sort] [--opt 0|1] [--json]
                                              dump the per-op offline tape a
-                                             B-request window will consume
-                                             (graph walk; --json = NDJSON)
+                                             B-request window will consume, the
+                                             packed-round schedule and the dedup
+                                             groups (graph walk; --json = NDJSON)
   repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
                [--layers L] [--threads T] [--weights-seed S] [--session LABEL]
                [--max-batch B] [--linger MS] [--queue-cap Q] [--max-inflight I] [--prep D]
-               [--tape-dir DIR] [--fault-window W]
+               [--tape-dir DIR] [--fault-window W] [--opt 0|1]
                [--reconnect-attempts R] [--reconnect-backoff-ms MS]
                                              --tape-dir persists correlation tapes +
                                              PRG cursors so a killed party restarts
-                                             warm; --fault-window aborts at window W
+                                             warm; --fault-window aborts at window W;
+                                             --opt seals the served graph with the
+                                             optimizer pipeline (all parties agree)
   repro oracle [--artifacts DIR]
-  repro comm   [--config tiny|base] [--seq N]
+  repro comm   [--config tiny|base] [--seq N] [--opt 0|1]
   repro help
 
 Multi-process quickstart (three terminals + any number of clients):
@@ -749,5 +831,67 @@ fn main() {
         "comm" => cmd_comm(flags),
         "help" => print!("{HELP}"),
         other => usage_error(&format!("unknown subcommand `{other}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ppq_bert::model::config::LayerQuantConfig;
+    use ppq_bert::model::passes::plan_report;
+    use ppq_bert::model::secure::bert_graph_dry_opt;
+
+    /// The NDJSON `TOTAL` record quotes exactly the modeled report:
+    /// bytes, plan ops, schedule rounds and both message counts.
+    #[test]
+    fn plan_json_total_matches_modeled_report() {
+        let cfg = BertConfig::tiny();
+        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        for (opt, level) in [(OptConfig::none(), 0u8), (OptConfig::o1(), 1)] {
+            let g = bert_graph_dry_opt(&cfg, &per, opt);
+            let report = plan_report(&g, 2);
+            let modeled: u64 = g.plan_entries(2).iter().map(|e| e.bytes).sum();
+            assert_eq!(report.total_bytes, modeled, "--opt {level}");
+            assert_eq!(report.plan_ops, g.plan(2).len(), "--opt {level}");
+            let line = plan_total_json(&report, 2, level);
+            for needle in [
+                format!("\"bytes\":{modeled}"),
+                format!("\"ops\":{}", report.plan_ops),
+                format!("\"opt\":{level}"),
+                format!("\"rounds\":{}", report.schedule.len()),
+                format!("\"messages_unopt\":{}", report.messages_unopt),
+                format!("\"messages_deduped\":{}", report.messages_deduped),
+            ] {
+                assert!(line.contains(&needle), "missing `{needle}` in `{line}`");
+            }
+        }
+    }
+
+    /// The modeled report is internally consistent: the schedule covers
+    /// every node, dedup groups partition the plan, repeated shapes
+    /// shrink the message count, and modeled bytes are opt-invariant.
+    #[test]
+    fn plan_report_accounting_is_consistent() {
+        let cfg = BertConfig::tiny();
+        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        let g0 = bert_graph_dry_opt(&cfg, &per, OptConfig::none());
+        let g1 = bert_graph_dry_opt(&cfg, &per, OptConfig::o1());
+        let r0 = plan_report(&g0, 1);
+        let r1 = plan_report(&g1, 1);
+        assert_eq!(r0.total_bytes, r1.total_bytes, "packing must not change offline bytes");
+        for (g, r) in [(&g0, &r0), (&g1, &r1)] {
+            let scheduled: usize = r.schedule.iter().map(|round| round.nodes.len()).sum();
+            assert_eq!(scheduled, g.node_count());
+            let grouped: usize = r.dedup.iter().map(|grp| grp.count).sum();
+            assert_eq!(grouped, r.plan_ops, "dedup groups must partition the plan");
+            assert_eq!(r.messages_deduped, r.dedup.len());
+            assert!(
+                r.messages_deduped < r.messages_unopt,
+                "repeated layer shapes must dedup ({} -> {})",
+                r.messages_unopt,
+                r.messages_deduped
+            );
+        }
+        assert!(g1.packed_groups() > 0, "BERT layers must yield packed groups at --opt 1");
     }
 }

@@ -23,8 +23,10 @@ use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 
 use crate::core::ring::Ring;
+use crate::model::passes::{self, OptConfig};
 use crate::party::PartyCtx;
-use crate::protocols::prep::{run_plan, Correlation, PlanOp};
+use crate::protocols::lut::LutTable;
+use crate::protocols::prep::{run_plan, run_plan_deduped, Correlation, PlanOp};
 use crate::sharing::additive::share2;
 use crate::sharing::{A2, Rss};
 
@@ -136,6 +138,23 @@ pub trait SecureOp: Send {
     /// (e.g. `layer3.attention.scores`).
     fn name(&self) -> String;
 
+    /// When this op is a plain single-LUT additive→RSS conversion, its
+    /// table + label — the marker the round-packing pass
+    /// (`model::passes`) uses to fuse adjacent independent conversions
+    /// into one shared opening. Defaults to "not packable".
+    fn lut_convert_spec(&self) -> Option<LutConvertSpec> {
+        None
+    }
+
+    /// `true` when `eval` is pure local data movement: no communication,
+    /// no PRG draws, no correlations. Only such nodes may be deleted by
+    /// dead-wire elimination — removing anything with protocol effects
+    /// would shift PRG stream positions or message order and break the
+    /// bit-identity guarantee (DESIGN.md §Graph optimizer).
+    fn is_pure_local(&self) -> bool {
+        false
+    }
+
     /// Input wire types, in argument order.
     fn in_types(&self) -> Vec<VType>;
 
@@ -159,10 +178,20 @@ pub trait SecureOp: Send {
 /// Wire index inside one [`SecureGraph`].
 pub type WireId = usize;
 
-struct Node {
-    op: Box<dyn SecureOp>,
-    ins: Vec<WireId>,
-    outs: Vec<WireId>,
+/// The packable-conversion descriptor an op exposes through
+/// [`SecureOp::lut_convert_spec`]: enough to rebuild the op inside a
+/// fused packed node (the table content rides along — it is the op).
+pub struct LutConvertSpec {
+    /// Conversion table (P0's entries are the secret content).
+    pub table: LutTable,
+    /// Display label of the original node.
+    pub label: String,
+}
+
+pub(crate) struct Node {
+    pub(crate) op: Box<dyn SecureOp>,
+    pub(crate) ins: Vec<WireId>,
+    pub(crate) outs: Vec<WireId>,
 }
 
 /// One planned correlation of a graph walk, attributed to the node that
@@ -249,8 +278,19 @@ impl GraphBuilder {
         self.outputs.push(w);
     }
 
-    /// Seal the graph and compute its structural fingerprint.
+    /// Seal the graph at `--opt 0` (no passes) — the frozen parity
+    /// baseline. Equivalent to `finish_with(OptConfig::none())`.
     pub fn finish(self) -> SecureGraph {
+        self.finish_with(OptConfig::none())
+    }
+
+    /// Seal the graph, run the optimizer pipeline `opt` enables over the
+    /// DAG (`model::passes`: dead-wire elimination, round packing),
+    /// annotate level/liveness metadata and compute the structural
+    /// fingerprint. The fingerprint incorporates `opt` (level AND pass
+    /// set), so a tape prepped at one opt level can never be served at
+    /// another (DESIGN.md §Graph optimizer).
+    pub fn finish_with(self, opt: OptConfig) -> SecureGraph {
         let mut g = SecureGraph {
             name: self.name,
             input_party: self.input_party,
@@ -259,8 +299,21 @@ impl GraphBuilder {
             wire_types: self.wire_types,
             nodes: self.nodes,
             outputs: self.outputs,
+            opt,
+            levels: Vec::new(),
+            last_use: Vec::new(),
+            dead_removed: 0,
+            dead_retained: 0,
+            packed_groups: 0,
             fingerprint: 0,
         };
+        if opt.dead_wire {
+            passes::dead_wire_eliminate(&mut g);
+        }
+        if opt.pack_rounds {
+            passes::pack_rounds(&mut g);
+        }
+        passes::annotate(&mut g);
         let mut h = DefaultHasher::new();
         g.item_len.hash(&mut h);
         g.input_party.hash(&mut h);
@@ -277,6 +330,10 @@ impl GraphBuilder {
         for op in g.plan(1) {
             op.shape().hash(&mut h);
         }
+        // The optimizer pipeline is part of the identity: equal node
+        // structure at different opt levels must key different pools
+        // (prep messaging and eval scheduling differ).
+        g.opt.hash(&mut h);
         g.fingerprint = h.finish();
         g
     }
@@ -285,14 +342,29 @@ impl GraphBuilder {
 /// A sealed secure op graph: the single source of truth for one model's
 /// offline plan AND online pass (DESIGN.md §Secure op graph).
 pub struct SecureGraph {
-    name: String,
-    input_party: usize,
-    input_ring: Ring,
-    item_len: usize,
-    wire_types: Vec<VType>,
-    nodes: Vec<Node>,
-    outputs: Vec<WireId>,
-    fingerprint: u64,
+    pub(crate) name: String,
+    pub(crate) input_party: usize,
+    pub(crate) input_ring: Ring,
+    pub(crate) item_len: usize,
+    pub(crate) wire_types: Vec<VType>,
+    pub(crate) nodes: Vec<Node>,
+    pub(crate) outputs: Vec<WireId>,
+    /// The optimizer pipeline this graph was sealed with.
+    pub(crate) opt: OptConfig,
+    /// Per-node dependency level (1-based ASAP schedule depth), computed
+    /// from wire def/use at seal time — the packed-round schedule view.
+    pub(crate) levels: Vec<usize>,
+    /// Per-wire index of the last consuming node (`usize::MAX` keeps a
+    /// wire alive through the walk) — liveness metadata `eval` consumes.
+    pub(crate) last_use: Vec<usize>,
+    /// Nodes deleted by dead-wire elimination (pure-local, unused outputs).
+    pub(crate) dead_removed: usize,
+    /// Nodes with unused outputs that were KEPT because their bodies have
+    /// protocol effects (deleting them would shift PRG/message positions).
+    pub(crate) dead_retained: usize,
+    /// Fused packed-conversion nodes the round-packing pass produced.
+    pub(crate) packed_groups: usize,
+    pub(crate) fingerprint: u64,
 }
 
 impl SecureGraph {
@@ -311,6 +383,34 @@ impl SecureGraph {
         self.nodes.len()
     }
 
+    /// The optimizer pipeline this graph was sealed with.
+    pub fn opt(&self) -> OptConfig {
+        self.opt
+    }
+
+    /// Per-node dependency level (1-based), aligned with node order —
+    /// nodes sharing a level have no def/use dependency between them.
+    pub fn levels(&self) -> &[usize] {
+        &self.levels
+    }
+
+    /// Fused packed-conversion nodes the round-packing pass produced
+    /// (0 at `--opt 0`).
+    pub fn packed_groups(&self) -> usize {
+        self.packed_groups
+    }
+
+    /// Nodes deleted by dead-wire elimination.
+    pub fn dead_removed(&self) -> usize {
+        self.dead_removed
+    }
+
+    /// Dead-output nodes retained because their bodies have protocol
+    /// effects (reported, never deleted).
+    pub fn dead_retained(&self) -> usize {
+        self.dead_retained
+    }
+
     /// Structural fingerprint: hashes the node sequence, wire types and
     /// batch-1 correlation shapes. Shapes are deliberately content-free
     /// (table entries are P0's secret), so equal fingerprints mean
@@ -326,7 +426,7 @@ impl SecureGraph {
     }
 
     /// Propagated element count of every wire for a `batch`-item window.
-    fn wire_lens(&self, batch: usize) -> Vec<usize> {
+    pub(crate) fn wire_lens(&self, batch: usize) -> Vec<usize> {
         let mut lens = vec![0usize; self.wire_types.len()];
         lens[0] = batch * self.item_len;
         for node in &self.nodes {
@@ -374,8 +474,20 @@ impl SecureGraph {
     /// input-independent). Install with `PartyCtx::install_corr` and the
     /// next matching [`SecureGraph::eval`] performs no offline-phase
     /// communication.
+    ///
+    /// When the graph was sealed with correlation dedup enabled
+    /// ([`OptConfig::dedup_corr`]), the plan executes through
+    /// [`run_plan_deduped`]: identical `CorrShape`s share one offline
+    /// correction message per party pair instead of one per plan op. The
+    /// produced tape is bit-identical either way — only the message
+    /// boundaries move (DESIGN.md §Graph optimizer).
     pub fn prep(&self, ctx: &PartyCtx, batch: usize) -> Vec<Correlation> {
-        run_plan(ctx, &self.plan(batch))
+        let plan = self.plan(batch);
+        if self.opt.dedup_corr {
+            run_plan_deduped(ctx, &plan).0
+        } else {
+            run_plan(ctx, &plan)
+        }
     }
 
     /// Run the online pass for a `batch`-item window: the input party
@@ -407,16 +519,9 @@ impl SecureGraph {
             batch * self.item_len,
         );
 
-        // Free each wire after its last consumer (outputs stay alive).
-        let mut last_use = vec![usize::MAX; self.wire_types.len()];
-        for (ni, node) in self.nodes.iter().enumerate() {
-            for &w in &node.ins {
-                last_use[w] = ni;
-            }
-        }
-        for &w in &self.outputs {
-            last_use[w] = usize::MAX;
-        }
+        // Free each wire after its last consumer (outputs stay alive) —
+        // the liveness metadata `finish_with` annotated at seal time.
+        let last_use = &self.last_use;
 
         let mut vals: Vec<Option<Value>> = (0..self.wire_types.len()).map(|_| None).collect();
         vals[0] = Some(Value::A2(shared));

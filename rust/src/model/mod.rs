@@ -5,5 +5,7 @@
 pub mod config;
 pub mod embedding;
 pub mod graph;
+pub mod passes;
+pub mod randgraph;
 pub mod secure;
 pub mod weights;

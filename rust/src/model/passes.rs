@@ -1,0 +1,331 @@
+//! Graph optimizer passes over the secure op IR
+//! (DESIGN.md §Graph optimizer).
+//!
+//! [`crate::model::graph::SecureGraph`] is a compiler target: after a
+//! builder records its straight-line node list, `finish_with` runs the
+//! passes an [`OptConfig`] enables over the DAG before sealing. The
+//! governing invariant of every pass is:
+//!
+//! > **PRG draw order is untouchable; only message boundaries move.**
+//!
+//! The protocol's local-truncation carries depend on share *values*, so
+//! any transformation that reorders a PRG draw or changes a correlation's
+//! content changes logits. The passes therefore never reorder protocol
+//! work — they only coalesce network messages that were already adjacent
+//! and mutually independent:
+//!
+//! * **Round packing** ([`pack_rounds`]): maximal runs of *adjacent*,
+//!   mutually independent single-LUT conversions (declared via
+//!   [`SecureOp::lut_convert_spec`]) fuse into one [`PackedConvertOp`]
+//!   whose online body opens every part's δ in ONE exchange and reshares
+//!   every part in ONE exchange. Each per-part payload is packed
+//!   separately and concatenated, so metered bytes are unchanged; the
+//!   round meter drops by `2·(parts−1)` per fused group.
+//! * **Correlation dedup** ([`OptConfig::dedup_corr`], implemented by
+//!   `protocols::prep::run_plan_deduped`): plan ops with identical
+//!   [`CorrShape`]s share one offline correction message per group.
+//! * **Dead-wire elimination** ([`dead_wire_eliminate`]): deletes nodes
+//!   that are pure local data movement ([`SecureOp::is_pure_local`])
+//!   with unused outputs. Dead nodes whose bodies have protocol effects
+//!   are *retained* (deleting them would shift PRG stream positions) and
+//!   only counted for reporting.
+//!
+//! [`annotate`] runs unconditionally at seal time: it computes per-node
+//! dependency levels (the packed-round schedule `repro plan` renders)
+//! and per-wire liveness (consumed by `SecureGraph::eval`).
+
+use std::collections::HashSet;
+
+use crate::model::graph::{LutConvertSpec, Node, PlanEntry, SecureGraph, SecureOp, VType, Value};
+use crate::party::PartyCtx;
+use crate::protocols::lut::lut_online_packed;
+use crate::protocols::prep::{self, CorrShape, DedupGroup, PlanOp};
+use crate::sharing::rss::reshare_a2_to_rss_many;
+use crate::sharing::A2;
+
+/// Which optimizer passes run over a graph at seal time. Hashes into
+/// `SecureGraph::fingerprint`, so pools and tapes key per pass set.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct OptConfig {
+    /// Fuse adjacent independent LUT conversions into shared rounds.
+    pub pack_rounds: bool,
+    /// Batch identical correlation shapes into shared offline messages.
+    pub dedup_corr: bool,
+    /// Delete pure-local nodes whose outputs are never consumed.
+    pub dead_wire: bool,
+}
+
+impl OptConfig {
+    /// `--opt 0`: no passes — the frozen parity baseline.
+    pub const fn none() -> OptConfig {
+        OptConfig { pack_rounds: false, dedup_corr: false, dead_wire: false }
+    }
+
+    /// `--opt 1`: every pass on.
+    pub const fn o1() -> OptConfig {
+        OptConfig { pack_rounds: true, dedup_corr: true, dead_wire: true }
+    }
+
+    /// Map a CLI `--opt` level to a pass set (any level ≥ 1 is `o1`).
+    pub fn from_level(level: u8) -> OptConfig {
+        if level == 0 {
+            OptConfig::none()
+        } else {
+            OptConfig::o1()
+        }
+    }
+
+    /// The CLI level this pass set corresponds to.
+    pub fn level(&self) -> u8 {
+        u8::from(self.pack_rounds || self.dedup_corr || self.dead_wire)
+    }
+}
+
+impl Default for OptConfig {
+    fn default() -> OptConfig {
+        OptConfig::none()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass: dead-wire elimination.
+
+/// Delete pure-local nodes none of whose outputs are consumed (by a node
+/// or as a graph output), iterating until a fixpoint so dead chains
+/// collapse. Nodes with dead outputs but protocol effects are retained
+/// and counted in `SecureGraph::dead_retained`.
+pub(crate) fn dead_wire_eliminate(g: &mut SecureGraph) {
+    loop {
+        let mut used: HashSet<usize> = g.outputs.iter().copied().collect();
+        for node in &g.nodes {
+            used.extend(node.ins.iter().copied());
+        }
+        let before = g.nodes.len();
+        let mut kept = Vec::with_capacity(before);
+        for node in g.nodes.drain(..) {
+            let dead = node.outs.iter().all(|w| !used.contains(w));
+            if dead && node.op.is_pure_local() {
+                g.dead_removed += 1;
+            } else {
+                kept.push(node);
+            }
+        }
+        g.nodes = kept;
+        if g.nodes.len() == before {
+            break;
+        }
+    }
+    // Report (but keep) dead nodes with protocol effects.
+    let mut used: HashSet<usize> = g.outputs.iter().copied().collect();
+    for node in &g.nodes {
+        used.extend(node.ins.iter().copied());
+    }
+    g.dead_retained = g
+        .nodes
+        .iter()
+        .filter(|n| !n.outs.is_empty() && n.outs.iter().all(|w| !used.contains(w)))
+        .count();
+}
+
+// ---------------------------------------------------------------------------
+// Pass: round packing.
+
+/// The fused node [`pack_rounds`] emits: several independent single-LUT
+/// conversions whose online bodies share ONE δ-opening exchange and ONE
+/// reshare exchange. The tape sequence (per-part correlations, in part
+/// order) and every PRG draw position are identical to evaluating the
+/// parts back to back; only the message count drops.
+pub(crate) struct PackedConvertOp {
+    parts: Vec<LutConvertSpec>,
+}
+
+impl SecureOp for PackedConvertOp {
+    fn name(&self) -> String {
+        let labels: Vec<&str> = self.parts.iter().map(|p| p.label.as_str()).collect();
+        format!("pack({})", labels.join("+"))
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        self.parts.iter().map(|p| VType::a2(p.table.in_ring.bits())).collect()
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        self.parts.iter().map(|p| VType::rss(p.table.out_ring.bits())).collect()
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        in_lens.to_vec()
+    }
+
+    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
+        self.parts
+            .iter()
+            .zip(in_lens)
+            .map(|(p, &n)| PlanOp::lut(p.table.clone(), n))
+            .collect()
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let xs: Vec<&A2> = inputs.iter().map(|v| v.as_a2()).collect();
+        // Acquire per part, in part order — identical tape/PRG sequence
+        // to the unfused nodes.
+        let corrs: Vec<prep::Correlation> = self
+            .parts
+            .iter()
+            .zip(&xs)
+            .map(|(p, x)| {
+                prep::acquire(ctx, CorrShape::lut1(&p.table, x.len), |c| {
+                    prep::lut_offline(c, &p.table, x.len)
+                })
+            })
+            .collect();
+        let triples: Vec<_> = self
+            .parts
+            .iter()
+            .zip(&corrs)
+            .zip(&xs)
+            .map(|((p, c), &x)| (&p.table, c, x))
+            .collect();
+        let wide = lut_online_packed(ctx, &triples);
+        let wide_refs: Vec<&A2> = wide.iter().collect();
+        reshare_a2_to_rss_many(ctx, &wide_refs)
+            .into_iter()
+            .map(Value::Rss)
+            .collect()
+    }
+}
+
+/// Fuse maximal runs of adjacent, mutually independent packable
+/// conversions into [`PackedConvertOp`] nodes. Only *consecutive* nodes
+/// fuse — the pass never reorders the node list, so every protocol call
+/// keeps its position relative to every other effectful op.
+pub(crate) fn pack_rounds(g: &mut SecureGraph) {
+    let nodes = std::mem::take(&mut g.nodes);
+    let mut out: Vec<Node> = Vec::with_capacity(nodes.len());
+    let mut run: Vec<(Node, LutConvertSpec)> = Vec::new();
+
+    fn flush(run: &mut Vec<(Node, LutConvertSpec)>, out: &mut Vec<Node>, groups: &mut usize) {
+        if run.len() >= 2 {
+            let mut parts = Vec::with_capacity(run.len());
+            let mut ins = Vec::new();
+            let mut outs = Vec::new();
+            for (node, spec) in run.drain(..) {
+                ins.extend(node.ins);
+                outs.extend(node.outs);
+                parts.push(spec);
+            }
+            out.push(Node { op: Box::new(PackedConvertOp { parts }), ins, outs });
+            *groups += 1;
+        } else {
+            out.extend(run.drain(..).map(|(node, _)| node));
+        }
+    }
+
+    for node in nodes {
+        let spec = node.op.lut_convert_spec();
+        // Independence within the run: the candidate must not consume any
+        // run member's output (converts are unary, so this is the only
+        // possible dependency).
+        let independent =
+            !run.iter().any(|(m, _)| m.outs.iter().any(|o| node.ins.contains(o)));
+        match spec {
+            Some(s) if independent => run.push((node, s)),
+            _ => {
+                flush(&mut run, &mut out, &mut g.packed_groups);
+                match node.op.lut_convert_spec() {
+                    // A dependent convert starts a fresh run.
+                    Some(s) => run.push((node, s)),
+                    None => out.push(node),
+                }
+            }
+        }
+    }
+    flush(&mut run, &mut out, &mut g.packed_groups);
+    g.nodes = out;
+}
+
+// ---------------------------------------------------------------------------
+// Annotation: levels + liveness (runs at every opt level).
+
+/// Compute per-node dependency levels (ASAP depth over wire def/use) and
+/// per-wire last-use liveness. Levels are the schedule view `repro plan`
+/// renders; liveness is consumed by `SecureGraph::eval` to free wires.
+pub(crate) fn annotate(g: &mut SecureGraph) {
+    let mut wire_level = vec![0usize; g.wire_types.len()];
+    g.levels = g
+        .nodes
+        .iter()
+        .map(|node| {
+            let lvl = node.ins.iter().map(|&w| wire_level[w]).max().unwrap_or(0) + 1;
+            for &w in &node.outs {
+                wire_level[w] = lvl;
+            }
+            lvl
+        })
+        .collect();
+
+    let mut last_use = vec![usize::MAX; g.wire_types.len()];
+    for (ni, node) in g.nodes.iter().enumerate() {
+        for &w in &node.ins {
+            last_use[w] = ni;
+        }
+    }
+    for &w in &g.outputs {
+        last_use[w] = usize::MAX;
+    }
+    g.last_use = last_use;
+}
+
+// ---------------------------------------------------------------------------
+// Modeled report: the `repro plan` view of a sealed graph.
+
+/// One dependency level of the packed schedule: every node here is
+/// mutually independent and its openings may share rounds.
+pub struct ScheduleRound {
+    /// 1-based level.
+    pub round: usize,
+    /// Display names of the nodes scheduled at this level.
+    pub nodes: Vec<String>,
+}
+
+/// The modeled optimizer report for one (graph, batch): the packed-round
+/// schedule, per-shape dedup groups and offline message counts — what
+/// `repro plan --opt` renders and the NDJSON mode emits. Derived from
+/// public shapes only (usable on dry graphs).
+pub struct PlanReport {
+    /// Nodes grouped by dependency level, in level order.
+    pub schedule: Vec<ScheduleRound>,
+    /// Plan shapes grouped by equality, first-appearance order.
+    pub dedup: Vec<DedupGroup>,
+    /// Total plan ops (= correlations on the tape).
+    pub plan_ops: usize,
+    /// Modeled total offline bytes (sum over plan entries).
+    pub total_bytes: u64,
+    /// Offline P0→P2 correction messages without dedup (one per field).
+    pub messages_unopt: usize,
+    /// Offline P0→P2 correction messages with dedup (one per group).
+    pub messages_deduped: usize,
+}
+
+/// Build the modeled [`PlanReport`] for a sealed graph and window size.
+pub fn plan_report(g: &SecureGraph, batch: usize) -> PlanReport {
+    let mut schedule: Vec<ScheduleRound> = Vec::new();
+    for (node, &lvl) in g.nodes.iter().zip(&g.levels) {
+        if schedule.last().map(|r| r.round) != Some(lvl) {
+            schedule.push(ScheduleRound { round: lvl, nodes: Vec::new() });
+        }
+        schedule.last_mut().expect("just pushed").nodes.push(node.op.name());
+    }
+    let plan = g.plan(batch);
+    let dedup = prep::dedup_groups(&plan);
+    let messages_unopt: usize = plan.iter().map(|op| prep::field_count(&op.shape())).sum();
+    let entries: Vec<PlanEntry> = g.plan_entries(batch);
+    PlanReport {
+        plan_ops: plan.len(),
+        total_bytes: entries.iter().map(|e| e.bytes).sum(),
+        messages_deduped: dedup.len(),
+        messages_unopt,
+        schedule,
+        dedup,
+    }
+}

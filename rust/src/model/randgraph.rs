@@ -1,0 +1,253 @@
+//! Seeded random secure-graph generator — the case source for the
+//! optimizer's differential-testing harness (`tests/opt_tests.rs`).
+//!
+//! Every structural decision (move kinds, wire picks, table scales,
+//! `Π_max` realizations, weight signs) is drawn from one
+//! [`crate::testing::Gen`] stream, so the SAME seed builds the SAME
+//! graph at every party (SPMD) and at every opt level — the only thing
+//! an [`OptConfig`] changes is the seal-time pass pipeline. A failing
+//! differential case is therefore replayed by its seed alone.
+//!
+//! The generator composes the real model ops (conversions, projections,
+//! softmax, residual LayerNorm, FFN, CLS select, classifier) into random
+//! DAGs over a pool of live activation wires, deliberately including:
+//!
+//! * bursts of adjacent independent conversions (round-packing fodder),
+//! * repeated table shapes across moves (correlation-dedup fodder),
+//! * dead pure-local nodes (dead-wire-elimination fodder).
+
+use crate::core::ring::{R16, R4};
+use crate::model::graph::{GraphBuilder, SecureGraph, WireId};
+use crate::model::passes::OptConfig;
+use crate::model::secure::{
+    ext_convert_op, ClassifierOp, ClsSelectOp, DryParams, FfnOp, LiveParams, LutConvertOp,
+    Params, ProjOp, ResidualLnOp, SoftmaxOp,
+};
+use crate::party::{PartyCtx, P0, P1};
+use crate::protocols::layernorm::LnParams;
+use crate::protocols::lut::LutTable;
+use crate::protocols::max::MaxStrategy;
+use crate::protocols::softmax::SoftmaxTables;
+use crate::protocols::tables::ln_div_table;
+use crate::sharing::Rss;
+use crate::testing::Gen;
+use crate::transport::Phase;
+
+/// Row width `d` of every activation wire in a generated graph.
+pub const RAND_D: usize = 8;
+/// Sequence length `s` (softmax row width, CLS-select stride).
+pub const RAND_S: usize = 4;
+/// Input elements per batch item (`s · d`).
+pub const RAND_ITEM_LEN: usize = RAND_S * RAND_D;
+
+const D_FF: usize = 16;
+const N_CLASSES: usize = 4;
+
+/// ±`scale` weight values, sign-drawn from the structure stream (public
+/// from the seed; only P0 *supplies* them to `Π_share`).
+fn sign_w(gen: &mut Gen, n: usize, scale: i64) -> Vec<u64> {
+    (0..n)
+        .map(|_| R16.encode(if gen.u64_below(2) == 1 { scale } else { -scale }))
+        .collect()
+}
+
+/// A 4→16 conversion table with a random folded scale (signed, like the
+/// attention-score tables).
+fn rand_conv_table(gen: &mut Gen) -> LutTable {
+    let sc = gen.i64_in(1, 4);
+    LutTable::from_fn(R4, R16, move |i| R16.encode(R4.decode(i) * sc))
+}
+
+fn share_rss16(
+    ps: &mut dyn Params,
+    gen: &mut Gen,
+    is_p0: bool,
+    n: usize,
+    scale: i64,
+) -> Rss {
+    // Always draw (keeps the structure stream aligned across parties and
+    // across live/dry builds); only P0 supplies the values.
+    let vals = sign_w(gen, n, scale);
+    ps.rss(R16, if is_p0 { Some(vals) } else { None }, n)
+}
+
+fn build(seed: u64, is_p0: bool, ps: &mut dyn Params, opt: OptConfig) -> SecureGraph {
+    let (s, d) = (RAND_S, RAND_D);
+    let mut gen = Gen::new(seed);
+    let (mut b, input) = GraphBuilder::new(&format!("rand(seed={seed})"), P1, R4, s * d);
+    let mut pool: Vec<WireId> = vec![input];
+
+    let n_moves = gen.usize_in(3, 6);
+    // Guarantee at least one conversion burst so the packing pass always
+    // has a fusion opportunity to exercise.
+    let forced_burst = gen.usize_in(0, n_moves - 1);
+    for mv in 0..n_moves {
+        let kind = if mv == forced_burst { 1 } else { gen.usize_in(0, 5) };
+        match kind {
+            0 => {
+                // One conversion feeding one projection.
+                let src = *gen.pick(&pool);
+                let t = rand_conv_table(&mut gen);
+                let c = b.push(LutConvertOp { table: t, label: format!("m{mv}.conv") }, &[src])[0];
+                let w = share_rss16(ps, &mut gen, is_p0, d * d, 2048);
+                pool.push(
+                    b.push(ProjOp { w, d_in: d, d_out: d, label: format!("m{mv}.proj") }, &[c])[0],
+                );
+            }
+            1 => {
+                // Burst: 2–3 ADJACENT independent conversions (sources may
+                // repeat — reads never conflict), then their projections.
+                let k = gen.usize_in(2, 3);
+                let srcs: Vec<WireId> = (0..k).map(|_| *gen.pick(&pool)).collect();
+                let convs: Vec<WireId> = srcs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &w)| {
+                        let op = if gen.u64_below(2) == 0 {
+                            ext_convert_op(R4, R16, format!("m{mv}.conv{i}"))
+                        } else {
+                            LutConvertOp {
+                                table: rand_conv_table(&mut gen),
+                                label: format!("m{mv}.conv{i}"),
+                            }
+                        };
+                        b.push(op, &[w])[0]
+                    })
+                    .collect();
+                for (i, &c) in convs.iter().enumerate() {
+                    let w = share_rss16(ps, &mut gen, is_p0, d * d, 2048);
+                    pool.push(
+                        b.push(
+                            ProjOp { w, d_in: d, d_out: d, label: format!("m{mv}.proj{i}") },
+                            &[c],
+                        )[0],
+                    );
+                }
+            }
+            2 => {
+                // Row-wise softmax with a random Π_max realization.
+                let src = *gen.pick(&pool);
+                let strat = *gen.pick(&[
+                    MaxStrategy::Tournament,
+                    MaxStrategy::Sort,
+                    MaxStrategy::Linear,
+                ]);
+                pool.push(
+                    b.push(
+                        SoftmaxOp {
+                            t: SoftmaxTables::new(0.5),
+                            n: s,
+                            strat,
+                            label: format!("m{mv}.softmax"),
+                        },
+                        &[src],
+                    )[0],
+                );
+            }
+            3 => {
+                // Residual add + LayerNorm over two live wires.
+                let a = *gen.pick(&pool);
+                let c = *gen.pick(&pool);
+                let gamma = share_rss16(ps, &mut gen, is_p0, d, 2048);
+                let beta_vals: Vec<u64> = (0..d).map(|_| R4.encode(gen.i64_in(-2, 2))).collect();
+                let beta = ps.a2(R4, if is_p0 { Some(beta_vals) } else { None }, d);
+                let ln = LnParams { gamma, beta, table: ln_div_table(4.0, 1.0) };
+                pool.push(
+                    b.push(ResidualLnOp { ln, d, label: format!("m{mv}.res_ln") }, &[a, c])[0],
+                );
+            }
+            4 => {
+                // FC → ReLU → FC block.
+                let src = *gen.pick(&pool);
+                let w1 = share_rss16(ps, &mut gen, is_p0, D_FF * d, 2048);
+                let w2 = share_rss16(ps, &mut gen, is_p0, d * D_FF, 2048);
+                pool.push(
+                    b.push(
+                        FfnOp { w1, w2, d, d_ff: D_FF, label: format!("m{mv}.ffn") },
+                        &[src],
+                    )[0],
+                );
+            }
+            _ => {
+                // Dead pure-local node: outputs never consumed — the
+                // dead-wire pass deletes it at --opt 1, and deleting it
+                // is protocol-neutral (slicing only).
+                let src = *gen.pick(&pool);
+                b.push(ClsSelectOp { s, d, label: format!("m{mv}.dead_select") }, &[src]);
+            }
+        }
+    }
+
+    let hidden = *gen.pick(&pool);
+    let cls = b.push(ClsSelectOp { s, d, label: "cls.select".into() }, &[hidden])[0];
+    let wcls = share_rss16(ps, &mut gen, is_p0, N_CLASSES * d, 16);
+    let logits = b.push(
+        ClassifierOp { w: wcls, d, n_classes: N_CLASSES, label: "cls.logits".into() },
+        &[cls],
+    )[0];
+    b.output(logits);
+    b.output(hidden);
+    b.finish_with(opt)
+}
+
+/// Build random graph `seed` live: weights are `Π_share`d under
+/// `Phase::Setup` (P0 supplies the seed-derived values), the structure
+/// is identical at every party and every opt level.
+pub fn rand_graph(ctx: &PartyCtx, seed: u64, opt: OptConfig) -> SecureGraph {
+    ctx.with_phase(Phase::Setup, |ctx| {
+        build(seed, ctx.id == P0, &mut LiveParams { ctx }, opt)
+    })
+}
+
+/// Share-less build of random graph `seed` (plans, fingerprints and byte
+/// accounting only — evaluating it is a bug, like
+/// [`crate::model::secure::bert_graph_dry`]).
+pub fn rand_graph_dry(seed: u64, opt: OptConfig) -> SecureGraph {
+    build(seed, false, &mut DryParams, opt)
+}
+
+/// Deterministic signed-4-bit input batch for random graph `seed`
+/// (drawn from a stream domain-separated from the structure stream).
+pub fn rand_inputs(seed: u64, batch: usize) -> Vec<Vec<i64>> {
+    let mut gen = Gen::new(seed ^ 0xA5A5_5A5A_DEAD_BEEF);
+    (0..batch).map(|_| gen.signed_vec(4, RAND_ITEM_LEN)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_structure() {
+        for seed in 0..20 {
+            let a = rand_graph_dry(seed, OptConfig::none());
+            let b = rand_graph_dry(seed, OptConfig::none());
+            assert_eq!(a.fingerprint(), b.fingerprint(), "seed {seed}");
+            let o = rand_graph_dry(seed, OptConfig::o1());
+            assert_ne!(a.fingerprint(), o.fingerprint(), "opt must re-key seed {seed}");
+        }
+    }
+
+    #[test]
+    fn seeds_vary_structure() {
+        let fps: std::collections::HashSet<u64> =
+            (0..20).map(|s| rand_graph_dry(s, OptConfig::none()).fingerprint()).collect();
+        assert!(fps.len() > 10, "only {} distinct graphs in 20 seeds", fps.len());
+    }
+
+    #[test]
+    fn packing_fodder_is_generated() {
+        // The forced burst guarantees fusion opportunities in most seeds.
+        let packed: usize =
+            (0..20).map(|s| rand_graph_dry(s, OptConfig::o1()).packed_groups()).sum();
+        assert!(packed > 0, "no seed produced a packed group");
+    }
+
+    #[test]
+    fn inputs_are_item_shaped() {
+        let xs = rand_inputs(3, 4);
+        assert_eq!(xs.len(), 4);
+        assert!(xs.iter().all(|x| x.len() == RAND_ITEM_LEN));
+        assert!(xs.iter().flatten().all(|&v| (-8..=7).contains(&v)));
+    }
+}

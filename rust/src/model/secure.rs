@@ -42,7 +42,8 @@
 use crate::core::prg::Prg;
 use crate::core::ring::{sign_extend, Ring, R16, R32, R4, R6};
 use crate::model::config::{BertConfig, LayerQuantConfig};
-use crate::model::graph::{GraphBuilder, SecureGraph, SecureOp, VType, Value};
+use crate::model::graph::{GraphBuilder, LutConvertSpec, SecureGraph, SecureOp, VType, Value};
+use crate::model::passes::OptConfig;
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, P0, P1};
 use crate::protocols::argmax::{argmax_rows, gt_table, max_table8};
@@ -138,25 +139,31 @@ fn ext4to16_plan(n: usize) -> PlanOp {
 // ---------------------------------------------------------------------------
 // Op implementations.
 
-/// `Π_convert^{ℓ',ℓ}`: additive → RSS via the sign-extension table.
-struct ConvertOp {
-    from: Ring,
-    to: Ring,
-    signed: bool,
-    label: String,
+/// `Π_convert^{ℓ',ℓ}`: additive → RSS through an arbitrary lookup table
+/// (the sign-extension table, or a table with a folded matmul scale).
+/// The graph's packable unit: it exposes [`SecureOp::lut_convert_spec`],
+/// so the round-packing pass may fuse adjacent independent instances
+/// into one shared opening (DESIGN.md §Graph optimizer).
+pub(crate) struct LutConvertOp {
+    pub(crate) table: LutTable,
+    pub(crate) label: String,
 }
 
-impl SecureOp for ConvertOp {
+impl SecureOp for LutConvertOp {
     fn name(&self) -> String {
         self.label.clone()
     }
 
+    fn lut_convert_spec(&self) -> Option<LutConvertSpec> {
+        Some(LutConvertSpec { table: self.table.clone(), label: self.label.clone() })
+    }
+
     fn in_types(&self) -> Vec<VType> {
-        vec![VType::a2(self.from.bits())]
+        vec![VType::a2(self.table.in_ring.bits())]
     }
 
     fn out_types(&self) -> Vec<VType> {
-        vec![VType::rss(self.to.bits())]
+        vec![VType::rss(self.table.out_ring.bits())]
     }
 
     fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
@@ -164,12 +171,18 @@ impl SecureOp for ConvertOp {
     }
 
     fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
-        vec![PlanOp::lut(extension_table(self.from, self.to, self.signed), in_lens[0])]
+        vec![PlanOp::lut(self.table.clone(), in_lens[0])]
     }
 
     fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
-        vec![Value::Rss(convert_to_rss(ctx, inputs[0].as_a2(), self.to, self.signed))]
+        vec![Value::Rss(convert_via(ctx, &self.table, inputs[0].as_a2()))]
     }
+}
+
+/// The signed sign-extension conversion node (the common case of
+/// [`LutConvertOp`]).
+pub(crate) fn ext_convert_op(from: Ring, to: Ring, label: String) -> LutConvertOp {
+    LutConvertOp { table: extension_table(from, to, true), label }
 }
 
 /// Q/K/V projections sharing one collapse round, regrouped into
@@ -214,22 +227,23 @@ impl SecureOp for QkvHeadsOp {
     }
 }
 
-/// Attention scores per (sequence, head) block: `(s_att·q) · kᵀ`,
-/// truncated to 4 bits — the scale rides in the conversion table.
-struct ScoresOp {
-    conv_att: LutTable,
+/// Attention scores per (sequence, head) block: `q16 · k16ᵀ`, truncated
+/// to 4 bits. Consumes already-converted RSS inputs — the q/k
+/// conversions are separate [`LutConvertOp`] nodes (so the packing pass
+/// can fuse their openings); the `s_att` scale rides in q's table.
+struct ScoresMatmulOp {
     s: usize,
     dh: usize,
     label: String,
 }
 
-impl SecureOp for ScoresOp {
+impl SecureOp for ScoresMatmulOp {
     fn name(&self) -> String {
         self.label.clone()
     }
 
     fn in_types(&self) -> Vec<VType> {
-        vec![VType::a2(4); 2]
+        vec![VType::rss(16); 2]
     }
 
     fn out_types(&self) -> Vec<VType> {
@@ -240,27 +254,21 @@ impl SecureOp for ScoresOp {
         vec![in_lens[0] / self.dh * self.s]
     }
 
-    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
-        vec![PlanOp::lut(self.conv_att.clone(), in_lens[0]), ext4to16_plan(in_lens[1])]
-    }
-
     fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
-        let (qh, kh) = (inputs[0].as_a2(), inputs[1].as_a2());
-        let blocks = qh.len / (self.s * self.dh);
-        let qh16 = convert_via(ctx, &self.conv_att, qh);
-        let kh16 = convert_to_rss(ctx, kh, R16, true);
-        let scores4 = rss_matmul_trc_seq(ctx, &qh16, &kh16, blocks, self.s, self.dh, self.s, 4);
+        let (qh16, kh16) = (inputs[0].as_rss(), inputs[1].as_rss());
+        let blocks = qh16.len() / (self.s * self.dh);
+        let scores4 = rss_matmul_trc_seq(ctx, qh16, kh16, blocks, self.s, self.dh, self.s, 4);
         vec![Value::A2(scores4)]
     }
 }
 
 /// Row-wise secure softmax over `[rows, n]` blocks, with this layer's
 /// tables and `Π_max` realization.
-struct SoftmaxOp {
-    t: SoftmaxTables,
-    n: usize,
-    strat: MaxStrategy,
-    label: String,
+pub(crate) struct SoftmaxOp {
+    pub(crate) t: SoftmaxTables,
+    pub(crate) n: usize,
+    pub(crate) strat: MaxStrategy,
+    pub(crate) label: String,
 }
 
 impl SoftmaxOp {
@@ -321,21 +329,23 @@ impl SecureOp for SoftmaxOp {
     }
 }
 
-/// Attention context per block: `(s_av·attn) · v`, truncated to 4 bits.
-struct AttnVOp {
-    conv_av: LutTable,
+/// Attention context per block: `attn16 · v16`, truncated to 4 bits.
+/// Like [`ScoresMatmulOp`], the attn/v conversions live in separate
+/// packable [`LutConvertOp`] nodes; the `s_av` scale rides in attn's
+/// table.
+struct AttnVMatmulOp {
     s: usize,
     dh: usize,
     label: String,
 }
 
-impl SecureOp for AttnVOp {
+impl SecureOp for AttnVMatmulOp {
     fn name(&self) -> String {
         self.label.clone()
     }
 
     fn in_types(&self) -> Vec<VType> {
-        vec![VType::a2(4); 2]
+        vec![VType::rss(16); 2]
     }
 
     fn out_types(&self) -> Vec<VType> {
@@ -346,18 +356,48 @@ impl SecureOp for AttnVOp {
         vec![in_lens[1]]
     }
 
-    fn plan(&self, in_lens: &[usize]) -> Vec<PlanOp> {
-        vec![PlanOp::lut(self.conv_av.clone(), in_lens[0]), ext4to16_plan(in_lens[1])]
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let (attn16, vh16) = (inputs[0].as_rss(), inputs[1].as_rss());
+        let blocks = vh16.len() / (self.s * self.dh);
+        let vt = transpose_rss_blocks(vh16, blocks, self.s, self.dh); // blocks of [dh, s] = vᵀ
+        let ctx4 = rss_matmul_trc_seq(ctx, attn16, &vt, blocks, self.s, self.s, self.dh, 4);
+        vec![Value::A2(ctx4)]
+    }
+}
+
+/// A plain FC projection `x16 · Wᵀ` truncated back to 4 bits — the
+/// generic linear node the random-graph generator composes with
+/// [`LutConvertOp`] (the BERT builder uses the fused attention ops
+/// instead).
+pub(crate) struct ProjOp {
+    pub(crate) w: Rss,
+    pub(crate) d_in: usize,
+    pub(crate) d_out: usize,
+    pub(crate) label: String,
+}
+
+impl SecureOp for ProjOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::rss(16)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0] / self.d_in * self.d_out]
     }
 
     fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
-        let (attn4, vh) = (inputs[0].as_a2(), inputs[1].as_a2());
-        let blocks = vh.len / (self.s * self.dh);
-        let attn16 = convert_via(ctx, &self.conv_av, attn4);
-        let vh16 = convert_to_rss(ctx, vh, R16, true);
-        let vt = transpose_rss_blocks(&vh16, blocks, self.s, self.dh); // blocks of [dh, s] = vᵀ
-        let ctx4 = rss_matmul_trc_seq(ctx, &attn16, &vt, blocks, self.s, self.s, self.dh, 4);
-        vec![Value::A2(ctx4)]
+        let x16 = inputs[0].as_rss();
+        let rows = x16.len() / self.d_in;
+        let y4 = rss_matmul_trc(ctx, x16, &self.w, rows, self.d_in, self.d_out, 4);
+        vec![Value::A2(y4)]
     }
 }
 
@@ -407,10 +447,10 @@ impl SecureOp for OutProjOp {
 /// Residual add + LayerNorm: both operands extend to `Z_2^16` with a
 /// single shared table opening, sum locally, then normalize row-wise
 /// with this layer's `T_ln`.
-struct ResidualLnOp {
-    ln: LnParams,
-    d: usize,
-    label: String,
+pub(crate) struct ResidualLnOp {
+    pub(crate) ln: LnParams,
+    pub(crate) d: usize,
+    pub(crate) label: String,
 }
 
 impl SecureOp for ResidualLnOp {
@@ -452,12 +492,12 @@ impl SecureOp for ResidualLnOp {
 }
 
 /// Feed-forward block: FC1 → ReLU (one LUT straight to 16-bit RSS) → FC2.
-struct FfnOp {
-    w1: Rss,
-    w2: Rss,
-    d: usize,
-    d_ff: usize,
-    label: String,
+pub(crate) struct FfnOp {
+    pub(crate) w1: Rss,
+    pub(crate) w2: Rss,
+    pub(crate) d: usize,
+    pub(crate) d_ff: usize,
+    pub(crate) label: String,
 }
 
 impl SecureOp for FfnOp {
@@ -497,15 +537,19 @@ impl SecureOp for FfnOp {
 }
 
 /// Select each sequence's CLS (first) token row — local data movement.
-struct ClsSelectOp {
-    s: usize,
-    d: usize,
-    label: String,
+pub(crate) struct ClsSelectOp {
+    pub(crate) s: usize,
+    pub(crate) d: usize,
+    pub(crate) label: String,
 }
 
 impl SecureOp for ClsSelectOp {
     fn name(&self) -> String {
         self.label.clone()
+    }
+
+    fn is_pure_local(&self) -> bool {
+        true // slicing only: no communication, PRG draws or correlations
     }
 
     fn in_types(&self) -> Vec<VType> {
@@ -533,11 +577,11 @@ impl SecureOp for ClsSelectOp {
 
 /// Classifier head: one matmul collapse and one opening for the whole
 /// window's logit vectors, revealed at P1/P2 (P0 learns nothing).
-struct ClassifierOp {
-    w: Rss,
-    d: usize,
-    n_classes: usize,
-    label: String,
+pub(crate) struct ClassifierOp {
+    pub(crate) w: Rss,
+    pub(crate) d: usize,
+    pub(crate) n_classes: usize,
+    pub(crate) label: String,
 }
 
 impl SecureOp for ClassifierOp {
@@ -642,13 +686,13 @@ impl SecureOp for ArgmaxHeadOp {
 /// real `Π_share` protocols under `Phase::Setup`; the dry source yields
 /// share-less placeholders for plan-only graphs (`repro plan`, byte
 /// accounting) that are never evaluated.
-trait Params {
+pub(crate) trait Params {
     fn rss(&mut self, ring: Ring, vals: Option<Vec<u64>>, len: usize) -> Rss;
     fn a2(&mut self, ring: Ring, vals: Option<Vec<u64>>, len: usize) -> A2;
 }
 
-struct LiveParams<'a> {
-    ctx: &'a PartyCtx,
+pub(crate) struct LiveParams<'a> {
+    pub(crate) ctx: &'a PartyCtx,
 }
 
 impl Params for LiveParams<'_> {
@@ -661,7 +705,7 @@ impl Params for LiveParams<'_> {
     }
 }
 
-struct DryParams;
+pub(crate) struct DryParams;
 
 impl Params for DryParams {
     fn rss(&mut self, ring: Ring, _vals: Option<Vec<u64>>, _len: usize) -> Rss {
@@ -709,6 +753,7 @@ fn build_bert(
     weights: Option<&Weights>,
     head: Head,
     ps: &mut dyn Params,
+    opt: OptConfig,
 ) -> SecureGraph {
     cfg.validate().expect("invalid BertConfig");
     assert_eq!(per_layer.len(), cfg.n_layers, "one LayerQuantConfig per layer");
@@ -749,14 +794,19 @@ fn build_bert(
         let conv_att = LutTable::from_fn(R4, R16, move |i| R16.encode(R4.decode(i) * s_att));
         let conv_av = LutTable::from_fn(R4, R16, move |i| R16.encode(i as i64 * s_av));
 
-        let h16 = b.push(
-            ConvertOp { from: R4, to: R16, signed: true, label: p("convert") },
-            &[h4],
-        )[0];
+        let h16 = b.push(ext_convert_op(R4, R16, p("convert")), &[h4])[0];
         let qkv = b.push(QkvHeadsOp { wq, wk, wv, s, d, nh, label: p("attention.qkv") }, &[h16]);
+        // q/k and attn/v conversions are separate adjacent nodes — exactly
+        // the protocol-call order the fused attention ops ran, but visible
+        // to the round-packing pass as independent packable units.
+        let q16 = b.push(
+            LutConvertOp { table: conv_att, label: p("attention.conv_q") },
+            &[qkv[0]],
+        )[0];
+        let k16 = b.push(ext_convert_op(R4, R16, p("attention.conv_k")), &[qkv[1]])[0];
         let scores = b.push(
-            ScoresOp { conv_att, s, dh, label: p("attention.scores") },
-            &[qkv[0], qkv[1]],
+            ScoresMatmulOp { s, dh, label: p("attention.scores") },
+            &[q16, k16],
         )[0];
         let attn = b.push(
             SoftmaxOp {
@@ -767,9 +817,14 @@ fn build_bert(
             },
             &[scores],
         )[0];
+        let attn16 = b.push(
+            LutConvertOp { table: conv_av, label: p("attention.conv_attn") },
+            &[attn],
+        )[0];
+        let v16 = b.push(ext_convert_op(R4, R16, p("attention.conv_v")), &[qkv[2]])[0];
         let ctxh = b.push(
-            AttnVOp { conv_av, s, dh, label: p("attention.context") },
-            &[attn, qkv[2]],
+            AttnVMatmulOp { s, dh, label: p("attention.context") },
+            &[attn16, v16],
         )[0];
         let o4 = b.push(OutProjOp { wo, s, d, nh, label: p("attention.out_proj") }, &[ctxh])[0];
         let h1 = b.push(ResidualLnOp { ln: ln1, d, label: p("res_ln1") }, &[h4, o4])[0];
@@ -797,7 +852,7 @@ fn build_bert(
     };
     b.output(out);
     b.output(h4);
-    b.finish()
+    b.finish_with(opt)
 }
 
 /// Model-owner setup as a graph builder: P0 supplies the (calibrated)
@@ -805,16 +860,30 @@ fn build_bert(
 /// β and the scale-folded conversion tables, wired into a
 /// [`SecureGraph`] whose outputs are `[logits, final hidden]`. Each
 /// layer carries its own [`LayerQuantConfig`]. Runs under
-/// `Phase::Setup`.
+/// `Phase::Setup`. Sealed at `--opt 0` — the frozen parity baseline;
+/// [`bert_graph_opt`] selects the optimizer pipeline.
 pub fn bert_graph(
     ctx: &PartyCtx,
     cfg: &BertConfig,
     per_layer: &[LayerQuantConfig],
     weights: Option<&Weights>,
 ) -> SecureGraph {
+    bert_graph_opt(ctx, cfg, per_layer, weights, OptConfig::none())
+}
+
+/// [`bert_graph`] sealed with an explicit optimizer pipeline
+/// (DESIGN.md §Graph optimizer). All `--opt` levels share the same
+/// `Π_share` setup sequence; only seal-time passes differ.
+pub fn bert_graph_opt(
+    ctx: &PartyCtx,
+    cfg: &BertConfig,
+    per_layer: &[LayerQuantConfig],
+    weights: Option<&Weights>,
+    opt: OptConfig,
+) -> SecureGraph {
     assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
     ctx.with_phase(Phase::Setup, |ctx| {
-        build_bert(cfg, per_layer, weights, Head::Logits, &mut LiveParams { ctx })
+        build_bert(cfg, per_layer, weights, Head::Logits, &mut LiveParams { ctx }, opt)
     })
 }
 
@@ -837,9 +906,20 @@ pub fn bert_classify_graph(
     per_layer: &[LayerQuantConfig],
     weights: Option<&Weights>,
 ) -> SecureGraph {
+    bert_classify_graph_opt(ctx, cfg, per_layer, weights, OptConfig::none())
+}
+
+/// [`bert_classify_graph`] sealed with an explicit optimizer pipeline.
+pub fn bert_classify_graph_opt(
+    ctx: &PartyCtx,
+    cfg: &BertConfig,
+    per_layer: &[LayerQuantConfig],
+    weights: Option<&Weights>,
+    opt: OptConfig,
+) -> SecureGraph {
     assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
     ctx.with_phase(Phase::Setup, |ctx| {
-        build_bert(cfg, per_layer, weights, Head::Argmax, &mut LiveParams { ctx })
+        build_bert(cfg, per_layer, weights, Head::Argmax, &mut LiveParams { ctx }, opt)
     })
 }
 
@@ -849,7 +929,17 @@ pub fn bert_classify_graph(
 /// what `repro plan` and the offline bench walk — no session, no
 /// weights, no communication.
 pub fn bert_graph_dry(cfg: &BertConfig, per_layer: &[LayerQuantConfig]) -> SecureGraph {
-    build_bert(cfg, per_layer, None, Head::Logits, &mut DryParams)
+    bert_graph_dry_opt(cfg, per_layer, OptConfig::none())
+}
+
+/// [`bert_graph_dry`] sealed with an explicit optimizer pipeline — what
+/// `repro plan --opt 1` and the offline bench's dedup rows walk.
+pub fn bert_graph_dry_opt(
+    cfg: &BertConfig,
+    per_layer: &[LayerQuantConfig],
+    opt: OptConfig,
+) -> SecureGraph {
+    build_bert(cfg, per_layer, None, Head::Logits, &mut DryParams, opt)
 }
 
 // ---------------------------------------------------------------------------
@@ -911,7 +1001,12 @@ impl MlpWeights {
     }
 }
 
-fn build_mlp(cfg: &MlpConfig, weights: Option<&MlpWeights>, ps: &mut dyn Params) -> SecureGraph {
+fn build_mlp(
+    cfg: &MlpConfig,
+    weights: Option<&MlpWeights>,
+    ps: &mut dyn Params,
+    opt: OptConfig,
+) -> SecureGraph {
     assert!(cfg.d_in > 0 && cfg.d_hidden > 0 && cfg.n_classes > 0, "invalid MlpConfig");
     let (mut b, x) = GraphBuilder::new(
         &format!("mlp(d={},h={},c={})", cfg.d_in, cfg.d_hidden, cfg.n_classes),
@@ -937,19 +1032,34 @@ fn build_mlp(cfg: &MlpConfig, weights: Option<&MlpWeights>, ps: &mut dyn Params)
     )[0];
     b.output(logits);
     b.output(h);
-    b.finish()
+    b.finish_with(opt)
 }
 
 /// Build the MLP classifier graph; P0 supplies the weights. Runs under
 /// `Phase::Setup`. Outputs are `[logits, hidden]`, like [`bert_graph`].
 pub fn mlp_graph(ctx: &PartyCtx, cfg: &MlpConfig, weights: Option<&MlpWeights>) -> SecureGraph {
+    mlp_graph_opt(ctx, cfg, weights, OptConfig::none())
+}
+
+/// [`mlp_graph`] sealed with an explicit optimizer pipeline.
+pub fn mlp_graph_opt(
+    ctx: &PartyCtx,
+    cfg: &MlpConfig,
+    weights: Option<&MlpWeights>,
+    opt: OptConfig,
+) -> SecureGraph {
     assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
-    ctx.with_phase(Phase::Setup, |ctx| build_mlp(cfg, weights, &mut LiveParams { ctx }))
+    ctx.with_phase(Phase::Setup, |ctx| build_mlp(cfg, weights, &mut LiveParams { ctx }, opt))
 }
 
 /// Share-less MLP graph for planning/accounting (see [`bert_graph_dry`]).
 pub fn mlp_graph_dry(cfg: &MlpConfig) -> SecureGraph {
-    build_mlp(cfg, None, &mut DryParams)
+    mlp_graph_dry_opt(cfg, OptConfig::none())
+}
+
+/// [`mlp_graph_dry`] sealed with an explicit optimizer pipeline.
+pub fn mlp_graph_dry_opt(cfg: &MlpConfig, opt: OptConfig) -> SecureGraph {
+    build_mlp(cfg, None, &mut DryParams, opt)
 }
 
 // ---------------------------------------------------------------------------

@@ -122,6 +122,55 @@ pub fn lut_online(ctx: &PartyCtx, t: &LutTable, corr: &Correlation, xs: &A2) -> 
     A2 { ring: t.out_ring, vals, len: n }
 }
 
+/// Online halves of SEVERAL independent `Π_look` batches sharing ONE
+/// δ-opening round: each part's δ vector is packed separately (bit-tight,
+/// exactly as [`lut_online`] would send it) and the payloads concatenate
+/// into a single P1↔P2 exchange. Bytes are therefore identical to
+/// evaluating the parts back to back; the round meter counts 1 instead
+/// of `parts.len()`. This is the online body of the round-packing pass's
+/// fused conversion node (DESIGN.md §Graph optimizer).
+pub fn lut_online_packed(ctx: &PartyCtx, parts: &[(&LutTable, &Correlation, &A2)]) -> Vec<A2> {
+    debug_assert!(!parts.is_empty());
+    if ctx.id == P0 {
+        return parts.iter().map(|(t, _, xs)| A2::empty(t.out_ring, xs.len)).collect();
+    }
+    let mut mine: Vec<Vec<u64>> = Vec::with_capacity(parts.len());
+    let mut payload = Vec::new();
+    for (t, corr, xs) in parts {
+        debug_assert_eq!(xs.ring, t.in_ring);
+        debug_assert_eq!(corr.shape, CorrShape::lut1(t, xs.len));
+        let dsh = &corr.dx;
+        let delta_sh: Vec<u64> = (0..xs.len).map(|i| t.in_ring.sub(xs.vals[i], dsh[i])).collect();
+        payload.extend(crate::core::pack::pack(t.in_ring, &delta_sh));
+        mine.push(delta_sh);
+    }
+    let peer = if ctx.id == P1 { P2 } else { P1 };
+    ctx.net.send_bytes(peer, ctx.phase(), payload);
+    let theirs = ctx.net.recv_bytes(peer, ctx.phase());
+    let mut off = 0usize;
+    let outs = parts
+        .iter()
+        .zip(&mine)
+        .map(|((t, corr, xs), delta_sh)| {
+            let n = xs.len;
+            let size = t.size();
+            let plen = t.in_ring.packed_len(n);
+            let their = crate::core::pack::unpack(t.in_ring, &theirs[off..off + plen], n);
+            off += plen;
+            let tsh = &corr.tsh[0];
+            let vals = (0..n)
+                .map(|i| {
+                    let delta = t.in_ring.add(delta_sh[i], their[i]);
+                    tsh[i * size + delta as usize]
+                })
+                .collect();
+            A2 { ring: t.out_ring, vals, len: n }
+        })
+        .collect();
+    debug_assert_eq!(off, theirs.len());
+    outs
+}
+
 /// `Π_look` on a batch: one fresh masked table per element, one online
 /// round (P1/P2 exchange all δ values in a single message). Consumes an
 /// ahead-of-time correlation when the store holds one of matching shape

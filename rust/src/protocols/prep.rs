@@ -180,20 +180,101 @@ pub struct Correlation {
 /// the online lookup that consumes the result
 /// (DESIGN.md §Offline preprocessing).
 pub fn lut_offline(ctx: &PartyCtx, t: &LutTable, n: usize) -> Correlation {
-    ctx.with_phase(Phase::Offline, |ctx| {
-        let size = t.size();
-        let (inr, outr) = (t.in_ring, t.out_ring);
-        let phase = ctx.phase();
-        let shape = CorrShape::lut1(t, n);
-        match ctx.id {
-            P0 => {
-                // Fresh private Δs; shifted tables; share via seed-with-P1.
-                // Randomness is drawn in bulk (one table-share vec + one Δ
-                // vec) so both sides of the pairwise stream stay in
-                // lockstep while using the fast block-sliced PRG path
-                // (EXPERIMENTS.md §Perf).
-                let mut own = ctx.prep_own_prg();
-                let mut pair = ctx.prep_pair_prg(P1);
+    ctx.with_phase(Phase::Offline, |ctx| producer_run(ctx, &ProducerRef::Lut { t, n }))
+}
+
+/// Ordered correction-field layout of one correlation: the `(ring, len)`
+/// vectors P0 sends P2, exactly in producer send order. Both sides derive
+/// it from the public shape alone, which is what lets the dedup path
+/// split a shared group message back into per-op fields.
+fn field_specs(shape: &CorrShape) -> Vec<(Ring, usize)> {
+    let size = shape.table_size();
+    let mut specs: Vec<(Ring, usize)> = shape
+        .out_bits
+        .iter()
+        .map(|&ob| (Ring::new(ob), shape.n * size))
+        .collect();
+    specs.push((Ring::new(shape.x_bits), shape.n));
+    if shape.kind != CorrKind::Lut1 {
+        specs.push((Ring::new(shape.y_bits), shape.groups));
+    }
+    specs
+}
+
+/// Number of P0→P2 correction messages one correlation costs without
+/// dedup (one per field) — the modeled message count `repro plan`
+/// reports against the deduped group count.
+pub fn field_count(shape: &CorrShape) -> usize {
+    field_specs(shape).len()
+}
+
+/// Assemble P2's correlation from its received correction fields (in
+/// [`field_specs`] order).
+fn corr_from_fields(shape: CorrShape, mut fields: Vec<Vec<u64>>) -> Correlation {
+    let tables = shape.out_bits.len();
+    debug_assert_eq!(fields.len(), tables + if shape.kind == CorrKind::Lut1 { 1 } else { 2 });
+    let dy = if shape.kind == CorrKind::Lut1 {
+        Vec::new()
+    } else {
+        fields.pop().expect("dy field")
+    };
+    let dx = fields.pop().expect("dx field");
+    Correlation { shape, tsh: fields, dx, dy }
+}
+
+/// Offline half of `Π_look^{b1,b2}` (Alg. 2) for `n` lookups of `t` with
+/// `groups` shared-Δ' groups (`groups == n` gives every element its own
+/// Δ'; fewer groups is the paper's shared-input optimization). Input-
+/// independent, like [`lut_offline`].
+pub fn lut2_offline(ctx: &PartyCtx, t: &LutTable2, n: usize, groups: usize) -> Correlation {
+    debug_assert!(groups > 0 && n % groups == 0);
+    ctx.with_phase(Phase::Offline, |ctx| producer_run(ctx, &ProducerRef::Lut2 { t, n, groups }))
+}
+
+/// Offline half of the shared-opening multi-table lookup
+/// (§Communication Optimization): ONE `(Δ, Δ')` pair per element serves
+/// every table in `ts`; each table still gets its own fresh masked copy
+/// (content security). Input-independent, like [`lut_offline`].
+pub fn lut2_multi_offline(ctx: &PartyCtx, ts: &[&LutTable2], n: usize) -> Correlation {
+    debug_assert!(!ts.is_empty());
+    ctx.with_phase(Phase::Offline, |ctx| producer_run(ctx, &ProducerRef::Lut2Multi { ts, n }))
+}
+
+// ---------------------------------------------------------------------------
+// Producer cores: draws/compute split from messaging, so the live path
+// (one message per field) and the deduped path (one message per shape
+// group) share byte-identical field payloads and PRG draw sequences.
+
+/// Borrowed view of one producer invocation (the unit [`run_plan`] and
+/// [`run_plan_deduped`] both iterate).
+enum ProducerRef<'a> {
+    Lut { t: &'a LutTable, n: usize },
+    Lut2 { t: &'a LutTable2, n: usize, groups: usize },
+    Lut2Multi { ts: &'a [&'a LutTable2], n: usize },
+}
+
+impl ProducerRef<'_> {
+    fn shape(&self) -> CorrShape {
+        match self {
+            ProducerRef::Lut { t, n } => CorrShape::lut1(t, *n),
+            ProducerRef::Lut2 { t, n, groups } => CorrShape::lut2(t, *n, *groups),
+            ProducerRef::Lut2Multi { ts, n } => CorrShape::lut2_multi(ts, *n),
+        }
+    }
+
+    /// P0: draw all randomness and compute the correction fields (in
+    /// [`field_specs`] order) WITHOUT sending them. Draw order is
+    /// identical to the historical inline producers — bulk pairwise
+    /// vectors first, per-element own-PRG masks inside the loops
+    /// (EXPERIMENTS.md §Perf) — so tapes stay bit-for-bit reproducible.
+    fn p0_fields(&self, ctx: &PartyCtx) -> Vec<Vec<u64>> {
+        let mut own = ctx.prep_own_prg();
+        let mut pair = ctx.prep_pair_prg(P1);
+        match self {
+            ProducerRef::Lut { t, n } => {
+                let n = *n;
+                let size = t.size();
+                let (inr, outr) = (t.in_ring, t.out_ring);
                 let mut corr = pair.ring_vec(outr, n * size);
                 let mut dcorr = pair.ring_vec(inr, n);
                 for i in 0..n {
@@ -205,42 +286,13 @@ pub fn lut_offline(ctx: &PartyCtx, t: &LutTable, n: usize) -> Correlation {
                     }
                     dcorr[i] = inr.sub(delta, dcorr[i]);
                 }
-                ctx.net.send_ring(P2, phase, outr, &corr);
-                ctx.net.send_ring(P2, phase, inr, &dcorr);
-                Correlation { shape, tsh: vec![Vec::new()], dx: Vec::new(), dy: Vec::new() }
+                vec![corr, dcorr]
             }
-            P1 => {
-                let mut pair = ctx.prep_pair_prg(P0);
-                let tsh = pair.ring_vec(outr, n * size);
-                let dx = pair.ring_vec(inr, n);
-                Correlation { shape, tsh: vec![tsh], dx, dy: Vec::new() }
-            }
-            P2 => {
-                let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
-                let dx = ctx.net.recv_ring(P0, phase, inr, n);
-                Correlation { shape, tsh: vec![tsh], dx, dy: Vec::new() }
-            }
-            _ => unreachable!(),
-        }
-    })
-}
-
-/// Offline half of `Π_look^{b1,b2}` (Alg. 2) for `n` lookups of `t` with
-/// `groups` shared-Δ' groups (`groups == n` gives every element its own
-/// Δ'; fewer groups is the paper's shared-input optimization). Input-
-/// independent, like [`lut_offline`].
-pub fn lut2_offline(ctx: &PartyCtx, t: &LutTable2, n: usize, groups: usize) -> Correlation {
-    debug_assert!(groups > 0 && n % groups == 0);
-    ctx.with_phase(Phase::Offline, |ctx| {
-        let (bx, by, outr) = (t.x_ring, t.y_ring, t.out_ring);
-        let (sx, sy) = (bx.size(), by.size());
-        let size = sx * sy;
-        let phase = ctx.phase();
-        let shape = CorrShape::lut2(t, n, groups);
-        match ctx.id {
-            P0 => {
-                let mut own = ctx.prep_own_prg();
-                let mut pair = ctx.prep_pair_prg(P1);
+            ProducerRef::Lut2 { t, n, groups } => {
+                let (n, groups) = (*n, *groups);
+                let (bx, by, outr) = (t.x_ring, t.y_ring, t.out_ring);
+                let (sx, sy) = (bx.size(), by.size());
+                let size = sx * sy;
                 // one Δ' per group; bulk randomness draws (EXPERIMENTS.md §Perf)
                 let dys: Vec<u64> = (0..groups).map(|_| own.ring_elem(by)).collect();
                 let per_group = n / groups;
@@ -266,48 +318,17 @@ pub fn lut2_offline(ctx: &PartyCtx, t: &LutTable2, n: usize, groups: usize) -> C
                     }
                     dyc[g] = by.sub(dys[g], dyc[g]);
                 }
-                ctx.net.send_ring(P2, phase, outr, &corr);
-                ctx.net.send_ring(P2, phase, bx, &dxc);
-                ctx.net.send_ring(P2, phase, by, &dyc);
-                Correlation { shape, tsh: vec![Vec::new()], dx: Vec::new(), dy: Vec::new() }
+                vec![corr, dxc, dyc]
             }
-            P1 => {
-                let mut pair = ctx.prep_pair_prg(P0);
-                let tsh = pair.ring_vec(outr, n * size);
-                let dx = pair.ring_vec(bx, n);
-                let dy = pair.ring_vec(by, groups);
-                Correlation { shape, tsh: vec![tsh], dx, dy }
-            }
-            P2 => {
-                let tsh = ctx.net.recv_ring(P0, phase, outr, n * size);
-                let dx = ctx.net.recv_ring(P0, phase, bx, n);
-                let dy = ctx.net.recv_ring(P0, phase, by, groups);
-                Correlation { shape, tsh: vec![tsh], dx, dy }
-            }
-            _ => unreachable!(),
-        }
-    })
-}
-
-/// Offline half of the shared-opening multi-table lookup
-/// (§Communication Optimization): ONE `(Δ, Δ')` pair per element serves
-/// every table in `ts`; each table still gets its own fresh masked copy
-/// (content security). Input-independent, like [`lut_offline`].
-pub fn lut2_multi_offline(ctx: &PartyCtx, ts: &[&LutTable2], n: usize) -> Correlation {
-    debug_assert!(!ts.is_empty());
-    let t0 = ts[0];
-    let (sx, sy) = (t0.x_ring.size(), t0.y_ring.size());
-    let size = sx * sy;
-    ctx.with_phase(Phase::Offline, |ctx| {
-        let phase = ctx.phase();
-        let shape = CorrShape::lut2_multi(ts, n);
-        match ctx.id {
-            P0 => {
-                let mut own = ctx.prep_own_prg();
-                let mut pair = ctx.prep_pair_prg(P1);
+            ProducerRef::Lut2Multi { ts, n } => {
+                let n = *n;
+                let t0 = ts[0];
+                let (sx, sy) = (t0.x_ring.size(), t0.y_ring.size());
+                let size = sx * sy;
                 let dxv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.x_ring)).collect();
                 let dyv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.y_ring)).collect();
-                for t in ts {
+                let mut fields = Vec::with_capacity(ts.len() + 2);
+                for t in ts.iter() {
                     let mut corr = pair.ring_vec(t.out_ring, n * size);
                     for i in 0..n {
                         let (dx, dy) = (dxv[i] as usize, dyv[i] as usize);
@@ -321,7 +342,7 @@ pub fn lut2_multi_offline(ctx: &PartyCtx, ts: &[&LutTable2], n: usize) -> Correl
                             }
                         }
                     }
-                    ctx.net.send_ring(P2, phase, t.out_ring, &corr);
+                    fields.push(corr);
                 }
                 let mut dxc = pair.ring_vec(t0.x_ring, n);
                 let mut dyc = pair.ring_vec(t0.y_ring, n);
@@ -329,35 +350,59 @@ pub fn lut2_multi_offline(ctx: &PartyCtx, ts: &[&LutTable2], n: usize) -> Correl
                     dxc[i] = t0.x_ring.sub(dxv[i], dxc[i]);
                     dyc[i] = t0.y_ring.sub(dyv[i], dyc[i]);
                 }
-                ctx.net.send_ring(P2, phase, t0.x_ring, &dxc);
-                ctx.net.send_ring(P2, phase, t0.y_ring, &dyc);
-                Correlation {
-                    shape,
-                    tsh: vec![Vec::new(); ts.len()],
-                    dx: Vec::new(),
-                    dy: Vec::new(),
-                }
+                fields.push(dxc);
+                fields.push(dyc);
+                fields
             }
-            P1 => {
-                let mut pair = ctx.prep_pair_prg(P0);
-                let tsh: Vec<Vec<u64>> =
-                    ts.iter().map(|t| pair.ring_vec(t.out_ring, n * size)).collect();
-                let dx = pair.ring_vec(t0.x_ring, n);
-                let dy = pair.ring_vec(t0.y_ring, n);
-                Correlation { shape, tsh, dx, dy }
-            }
-            P2 => {
-                let tsh: Vec<Vec<u64>> = ts
-                    .iter()
-                    .map(|t| ctx.net.recv_ring(P0, phase, t.out_ring, n * size))
-                    .collect();
-                let dx = ctx.net.recv_ring(P0, phase, t0.x_ring, n);
-                let dy = ctx.net.recv_ring(P0, phase, t0.y_ring, n);
-                Correlation { shape, tsh, dx, dy }
-            }
-            _ => unreachable!(),
         }
-    })
+    }
+
+    /// P1: pairwise-seeded shares only (no communication either way).
+    fn p1_corr(&self, ctx: &PartyCtx) -> Correlation {
+        let shape = self.shape();
+        let mut pair = ctx.prep_pair_prg(P0);
+        let mut fields: Vec<Vec<u64>> = field_specs(&shape)
+            .into_iter()
+            .map(|(ring, len)| pair.ring_vec(ring, len))
+            .collect();
+        // P1's fields follow the same layout P2 receives.
+        let dy = if shape.kind == CorrKind::Lut1 { Vec::new() } else { fields.pop().expect("dy") };
+        let dx = fields.pop().expect("dx");
+        Correlation { shape, tsh: fields, dx, dy }
+    }
+
+    /// P0's shape-only correlation record (share vectors stay empty).
+    fn p0_corr(&self) -> Correlation {
+        let shape = self.shape();
+        let tables = shape.out_bits.len();
+        Correlation { shape, tsh: vec![Vec::new(); tables], dx: Vec::new(), dy: Vec::new() }
+    }
+}
+
+/// The live (non-deduped) producer path: P0 sends one message per field,
+/// P2 receives one per field — byte- and draw-identical to the historical
+/// inline producers. Caller must already be under `Phase::Offline`.
+fn producer_run(ctx: &PartyCtx, p: &ProducerRef<'_>) -> Correlation {
+    let phase = ctx.phase();
+    let shape = p.shape();
+    match ctx.id {
+        P0 => {
+            let fields = p.p0_fields(ctx);
+            for ((ring, _), vals) in field_specs(&shape).into_iter().zip(&fields) {
+                ctx.net.send_ring(P2, phase, ring, vals);
+            }
+            p.p0_corr()
+        }
+        P1 => p.p1_corr(ctx),
+        P2 => {
+            let fields: Vec<Vec<u64>> = field_specs(&shape)
+                .into_iter()
+                .map(|(ring, len)| ctx.net.recv_ring(P0, phase, ring, len))
+                .collect();
+            corr_from_fields(shape, fields)
+        }
+        _ => unreachable!(),
+    }
 }
 
 /// Pop the next stored correlation when its shape matches `shape`
@@ -457,6 +502,161 @@ pub fn run_plan(ctx: &PartyCtx, plan: &[PlanOp]) -> Vec<Correlation> {
             }
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Correlation dedup: identical shapes share one offline message batch.
+
+/// One dedup group: every plan op whose [`CorrShape`] equals `shape`
+/// shares a single P0→P2 correction message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DedupGroup {
+    /// The shared shape.
+    pub shape: CorrShape,
+    /// Plan ops in the group.
+    pub count: usize,
+    /// Modeled offline bytes of the whole group (count × per-op bytes).
+    pub bytes: u64,
+}
+
+/// What [`run_plan_deduped`] did: the groups (first-appearance order)
+/// plus the message accounting the savings are quoted from.
+#[derive(Clone, Debug)]
+pub struct DedupStats {
+    /// Shape groups in first-appearance order.
+    pub groups: Vec<DedupGroup>,
+    /// P0→P2 messages the non-deduped path would have sent (per field).
+    pub messages_unopt: usize,
+}
+
+impl DedupStats {
+    /// Total plan ops covered.
+    pub fn ops(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// P0→P2 messages actually sent (one per group).
+    pub fn messages_deduped(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Group a plan's shapes by equality, in first-appearance order — the
+/// pure model of [`run_plan_deduped`]'s message batching, usable on dry
+/// graphs (`repro plan --opt`).
+pub fn dedup_groups(plan: &[PlanOp]) -> Vec<DedupGroup> {
+    let mut groups: Vec<DedupGroup> = Vec::new();
+    for op in plan {
+        let shape = op.shape();
+        match groups.iter_mut().find(|g| g.shape == shape) {
+            Some(g) => {
+                g.count += 1;
+                g.bytes += shape.offline_bytes();
+            }
+            None => {
+                let bytes = shape.offline_bytes();
+                groups.push(DedupGroup { shape, count: 1, bytes });
+            }
+        }
+    }
+    groups
+}
+
+/// Execute a preprocessing plan with correlation dedup: every party draws
+/// its randomness in exact plan order (bit-identical tape to
+/// [`run_plan`]), but P0's correction fields are buffered and flushed as
+/// ONE message per shape group (first-appearance order) instead of one
+/// per field, and P2 performs one receive per group. Total offline bytes
+/// are unchanged — per-field payloads are packed separately and
+/// concatenated — while the offline round/message count drops from
+/// Σ fields to the group count (DESIGN.md §Graph optimizer).
+pub fn run_plan_deduped(ctx: &PartyCtx, plan: &[PlanOp]) -> (Vec<Correlation>, DedupStats) {
+    let shapes: Vec<CorrShape> = plan.iter().map(|op| op.shape()).collect();
+    let stats = DedupStats {
+        groups: dedup_groups(plan),
+        messages_unopt: shapes.iter().map(field_count).sum(),
+    };
+    // Group membership (indices into `plan`), first-appearance order —
+    // derived from public shapes, so all parties agree.
+    let mut order: Vec<(CorrShape, Vec<usize>)> = Vec::new();
+    for (i, shape) in shapes.iter().enumerate() {
+        match order.iter_mut().find(|(s, _)| s == shape) {
+            Some((_, members)) => members.push(i),
+            None => order.push((shape.clone(), vec![i])),
+        }
+    }
+
+    // Multi-table ops borrow a ref slice; keep those vecs alive alongside
+    // the producers.
+    let multi_refs: Vec<Vec<&LutTable2>> = plan
+        .iter()
+        .map(|op| match op {
+            PlanOp::Lut2Multi { ts, .. } => ts.iter().collect(),
+            _ => Vec::new(),
+        })
+        .collect();
+    let corrs = ctx.with_phase(Phase::Offline, |ctx| {
+        let phase = ctx.phase();
+        let prods: Vec<ProducerRef<'_>> = plan
+            .iter()
+            .zip(&multi_refs)
+            .map(|(op, refs)| match op {
+                PlanOp::Lut { t, n } => ProducerRef::Lut { t, n: *n },
+                PlanOp::Lut2 { t, n, groups } => ProducerRef::Lut2 { t, n: *n, groups: *groups },
+                PlanOp::Lut2Multi { n, .. } => ProducerRef::Lut2Multi { ts: refs, n: *n },
+            })
+            .collect();
+        match ctx.id {
+            P0 => {
+                // All draws in plan order, then one flush per group.
+                let fields_per_op: Vec<Vec<Vec<u64>>> =
+                    prods.iter().map(|p| p.p0_fields(ctx)).collect();
+                for (_, members) in &order {
+                    let mut payload = Vec::new();
+                    for &i in members {
+                        for ((ring, _), vals) in
+                            field_specs(&shapes[i]).into_iter().zip(&fields_per_op[i])
+                        {
+                            payload.extend(crate::core::pack::pack(ring, vals));
+                        }
+                    }
+                    ctx.net.send_bytes(P2, phase, payload);
+                }
+                prods.iter().map(|p| p.p0_corr()).collect()
+            }
+            P1 => prods.iter().map(|p| p.p1_corr(ctx)).collect(),
+            P2 => {
+                let mut fields_per_op: Vec<Option<Vec<Vec<u64>>>> = vec![None; plan.len()];
+                for (_, members) in &order {
+                    let bytes = ctx.net.recv_bytes(P0, phase);
+                    let mut off = 0usize;
+                    for &i in members {
+                        let mut fields = Vec::new();
+                        for (ring, len) in field_specs(&shapes[i]) {
+                            let plen = ring.packed_len(len);
+                            fields.push(crate::core::pack::unpack(
+                                ring,
+                                &bytes[off..off + plen],
+                                len,
+                            ));
+                            off += plen;
+                        }
+                        fields_per_op[i] = Some(fields);
+                    }
+                    assert_eq!(off, bytes.len(), "group message length mismatch");
+                }
+                shapes
+                    .iter()
+                    .zip(fields_per_op)
+                    .map(|(shape, fields)| {
+                        corr_from_fields(shape.clone(), fields.expect("field set"))
+                    })
+                    .collect()
+            }
+            _ => unreachable!(),
+        }
+    });
+    (corrs, stats)
 }
 
 #[cfg(test)]

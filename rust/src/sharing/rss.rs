@@ -172,6 +172,67 @@ pub fn reshare_a2_to_rss(ctx: &PartyCtx, x: &A2) -> Rss {
     }
 }
 
+/// Reshare SEVERAL independent additive vectors into RSS with ONE
+/// opening exchange: per part, every PRG stream advances in exactly the
+/// positions sequential [`reshare_a2_to_rss`] calls would use (P0 draws
+/// `s1` then `s2` per part, in part order; P1/P2 draw their seeded limb
+/// per part, in part order), and each part's δ vector is packed
+/// separately before the payloads concatenate into one P1↔P2 exchange.
+/// Bytes identical to the sequential calls; rounds drop to 1. The online
+/// reshare half of the round-packing pass's fused conversion node
+/// (DESIGN.md §Graph optimizer).
+pub fn reshare_a2_to_rss_many(ctx: &PartyCtx, xs: &[&A2]) -> Vec<Rss> {
+    debug_assert!(!xs.is_empty());
+    let phase = ctx.phase();
+    match ctx.id {
+        0 => xs
+            .iter()
+            .map(|x| {
+                let s1 = ctx.pair_prg(2).ring_vec(x.ring, x.len);
+                let s2 = ctx.pair_prg(1).ring_vec(x.ring, x.len);
+                Rss { ring: x.ring, next: s1, prev: s2 }
+            })
+            .collect(),
+        1 | 2 => {
+            let peer = 3 - ctx.id;
+            let mut seeded: Vec<Vec<u64>> = Vec::with_capacity(xs.len());
+            let mut opened: Vec<Vec<u64>> = Vec::with_capacity(xs.len());
+            let mut payload = Vec::new();
+            for x in xs {
+                let s = ctx.pair_prg(0).ring_vec(x.ring, x.len);
+                let d: Vec<u64> = (0..x.len).map(|i| x.ring.sub(x.vals[i], s[i])).collect();
+                payload.extend(crate::core::pack::pack(x.ring, &d));
+                seeded.push(s);
+                opened.push(d);
+            }
+            ctx.net.send_bytes(peer, phase, payload);
+            let theirs = ctx.net.recv_bytes(peer, phase);
+            let mut off = 0usize;
+            let out = xs
+                .iter()
+                .zip(seeded)
+                .zip(opened)
+                .map(|((x, s), d)| {
+                    let plen = x.ring.packed_len(x.len);
+                    let their =
+                        crate::core::pack::unpack(x.ring, &theirs[off..off + plen], x.len);
+                    off += plen;
+                    let s0: Vec<u64> =
+                        (0..x.len).map(|i| x.ring.add(d[i], their[i])).collect();
+                    if ctx.id == 1 {
+                        Rss { ring: x.ring, next: s, prev: s0 }
+                    } else {
+                        Rss { ring: x.ring, next: s0, prev: s }
+                    }
+                })
+                .collect();
+            debug_assert_eq!(off, theirs.len());
+            out
+        }
+        _ => unreachable!(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -7,8 +7,10 @@
 
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::passes::OptConfig;
 use ppq_bert::model::secure::{
-    bert_classify_graph, bert_graph, bert_graph_dry, mlp_graph, mlp_graph_dry, secure_classify,
+    bert_classify_graph, bert_classify_graph_opt, bert_graph, bert_graph_dry, bert_graph_dry_opt,
+    bert_graph_opt, mlp_graph_dry, mlp_graph_dry_opt, mlp_graph_opt, secure_classify,
     secure_infer_batch, MlpConfig, MlpWeights,
 };
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
@@ -16,6 +18,7 @@ use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::transport::{MetricsSnapshot, Phase};
 
 const STRATS: [MaxStrategy; 3] = [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort];
+const OPTS: [OptConfig; 2] = [OptConfig::none(), OptConfig::o1()];
 
 /// One BERT window on a fresh session: build the graph, optionally prep
 /// its tape through the graph walk, evaluate, and return (P1 logits,
@@ -25,12 +28,23 @@ fn run_bert(
     batch: usize,
     warm: bool,
 ) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
+    run_bert_opt(strat, batch, warm, OptConfig::none())
+}
+
+/// [`run_bert`] with an explicit optimizer pipeline.
+fn run_bert_opt(
+    strat: MaxStrategy,
+    batch: usize,
+    warm: bool,
+    opt: OptConfig,
+) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
     let cfg = BertConfig::tiny();
     let (w, _) = prepared_model(cfg);
     let inputs = prepared_inputs(&cfg, batch);
     let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
         let per = LayerQuantConfig::uniform(&cfg, strat);
-        let g = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&w) } else { None });
+        let weights = if ctx.id == P0 { Some(&w) } else { None };
+        let g = bert_graph_opt(ctx, &cfg, &per, weights, opt);
         let plan_len = g.plan(batch).len();
         if warm {
             let tape = g.prep(ctx, batch);
@@ -48,13 +62,22 @@ fn run_bert(
 
 /// One MLP window (the non-BERT builder) on a fresh session.
 fn run_mlp(batch: usize, warm: bool) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
+    run_mlp_opt(batch, warm, OptConfig::none())
+}
+
+/// [`run_mlp`] with an explicit optimizer pipeline.
+fn run_mlp_opt(
+    batch: usize,
+    warm: bool,
+    opt: OptConfig,
+) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
     let mcfg = MlpConfig::tiny();
     let inputs: Vec<Vec<i64>> = (0..batch)
         .map(|b| (0..mcfg.d_in).map(|i| ((i + 3 * b) % 15) as i64 - 7).collect())
         .collect();
     let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
         let mw = if ctx.id == P0 { Some(MlpWeights::synth(&mcfg, 7)) } else { None };
-        let g = mlp_graph(ctx, &mcfg, mw.as_ref());
+        let g = mlp_graph_opt(ctx, &mcfg, mw.as_ref(), opt);
         let plan_len = g.plan(batch).len();
         if warm {
             let tape = g.prep(ctx, batch);
@@ -192,6 +215,94 @@ fn classify_graph_is_plan_consistent() {
     assert!(warm_snap.pool_hits() > 0);
     assert_eq!(warm_class, cold_class);
     assert!(warm_class < cfg.n_classes as u64);
+}
+
+/// Every builder × opt level keeps the graph invariants: the warm tape
+/// is consumed exactly (hits == plan length, zero misses), warm and
+/// cold logits agree, and the dry builder's modeled bytes equal the
+/// metered offline traffic at BOTH opt levels (packing moves message
+/// boundaries, never bytes — DESIGN.md §Graph optimizer).
+#[test]
+fn opt_levels_stay_plan_consistent_for_every_builder() {
+    let batch = 2usize;
+    for opt in OPTS {
+        let (cold_logits, cold, plan_len) =
+            run_bert_opt(MaxStrategy::Tournament, batch, false, opt);
+        let (warm_logits, warm, _) = run_bert_opt(MaxStrategy::Tournament, batch, true, opt);
+        assert!(plan_len > 0);
+        assert_eq!(cold.pool_misses(), plan_len as u64, "bert {opt:?}: cold misses");
+        assert_eq!(warm.pool_hits(), plan_len as u64, "bert {opt:?}: warm hits");
+        assert_eq!(warm.pool_misses(), 0, "bert {opt:?}: warm misses");
+        assert_eq!(warm_logits, cold_logits, "bert {opt:?}: warm/cold logits");
+        let cfg = BertConfig::tiny();
+        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        let g = bert_graph_dry_opt(&cfg, &per, opt);
+        let modeled: u64 = g.plan_entries(batch).iter().map(|e| e.bytes).sum();
+        assert_eq!(cold.total_bytes(Phase::Offline), modeled, "bert {opt:?}: modeled bytes");
+
+        let (mcold_logits, mcold, mplan_len) = run_mlp_opt(batch, false, opt);
+        let (mwarm_logits, mwarm, _) = run_mlp_opt(batch, true, opt);
+        assert!(mplan_len > 0);
+        assert_eq!(mcold.pool_misses(), mplan_len as u64, "mlp {opt:?}: cold misses");
+        assert_eq!(mwarm.pool_hits(), mplan_len as u64, "mlp {opt:?}: warm hits");
+        assert_eq!(mwarm.pool_misses(), 0, "mlp {opt:?}: warm misses");
+        assert_eq!(mwarm_logits, mcold_logits, "mlp {opt:?}: warm/cold logits");
+        let mg = mlp_graph_dry_opt(&MlpConfig::tiny(), opt);
+        let mmodeled: u64 = mg.plan_entries(batch).iter().map(|e| e.bytes).sum();
+        assert_eq!(mcold.total_bytes(Phase::Offline), mmodeled, "mlp {opt:?}: modeled bytes");
+    }
+}
+
+/// The classify builder is opt-aware too: warm windows at every level
+/// consume their tape exactly and agree on the argmax class, and its
+/// fingerprint re-keys per opt level.
+#[test]
+fn classify_graph_stays_plan_consistent_across_opt_levels() {
+    let cfg = BertConfig::tiny();
+    let run = |warm: bool, opt: OptConfig| -> (u64, u64, MetricsSnapshot) {
+        let (w, x) = prepared_model(cfg);
+        let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+            let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+            let weights = if ctx.id == P0 { Some(&w) } else { None };
+            let g = bert_classify_graph_opt(ctx, &cfg, &per, weights, opt);
+            if warm {
+                let tape = g.prep(ctx, 1);
+                ctx.install_corr(tape);
+            }
+            let class = secure_classify(ctx, &g, if ctx.id == P1 { Some(&x) } else { None });
+            assert_eq!(ctx.corr_pending(), 0);
+            (class, g.fingerprint())
+        });
+        (outs[1].0, outs[1].1, snap)
+    };
+    let mut fps = Vec::new();
+    let mut classes = Vec::new();
+    for opt in OPTS {
+        let (cold_class, fp, _) = run(false, opt);
+        let (warm_class, _, warm_snap) = run(true, opt);
+        assert_eq!(warm_snap.pool_misses(), 0, "classify {opt:?}: warm misses");
+        assert!(warm_snap.pool_hits() > 0, "classify {opt:?}");
+        assert_eq!(warm_class, cold_class, "classify {opt:?}: warm/cold class");
+        fps.push(fp);
+        classes.push(cold_class);
+    }
+    assert_ne!(fps[0], fps[1], "classify fingerprint must re-key per opt level");
+    assert_eq!(classes[0], classes[1], "opt level must not change the class");
+}
+
+/// Fingerprints re-key across opt levels for every builder, so tapes
+/// persisted at one level are never served at another.
+#[test]
+fn fingerprints_rekey_across_opt_levels_for_every_builder() {
+    let cfg = BertConfig::tiny();
+    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+    let bert_fp = |opt: OptConfig| bert_graph_dry_opt(&cfg, &per, opt).fingerprint();
+    assert_ne!(bert_fp(OptConfig::none()), bert_fp(OptConfig::o1()));
+    // Level-0 opt builds match the opt-less builders exactly.
+    assert_eq!(bert_fp(OptConfig::none()), bert_graph_dry(&cfg, &per).fingerprint());
+    let mlp_fp = |opt: OptConfig| mlp_graph_dry_opt(&MlpConfig::tiny(), opt).fingerprint();
+    assert_ne!(mlp_fp(OptConfig::none()), mlp_fp(OptConfig::o1()));
+    assert_eq!(mlp_fp(OptConfig::none()), mlp_graph_dry(&MlpConfig::tiny()).fingerprint());
 }
 
 /// Batch scaling is derived from shapes: the plan for B = 4 has the same

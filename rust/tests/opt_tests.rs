@@ -1,0 +1,278 @@
+//! Differential tests pinning the graph optimizer (DESIGN.md §Graph
+//! optimizer): over random secure graphs and the real builders, sealing
+//! with `--opt 1` must change ONLY message boundaries — logits and
+//! hidden shares stay bit-identical, metered online rounds drop (never
+//! rise), offline bytes are unchanged, and correlation dedup batches
+//! the offline correction messages without touching their content.
+//!
+//! Every random-graph case is generated from a `testing::Gen` seed, so
+//! a failure report names the seed that replays it.
+
+use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
+use ppq_bert::coordinator::session::{prep_into_pool, serve_window, CorrPool};
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::passes::OptConfig;
+use ppq_bert::model::randgraph::{rand_graph, rand_graph_dry, rand_inputs};
+use ppq_bert::model::secure::{bert_graph_dry, bert_graph_opt, secure_infer_batch};
+use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
+use ppq_bert::prop_assert;
+use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::protocols::prep::{run_plan, run_plan_deduped, CorrKind, CorrShape, Correlation};
+use ppq_bert::protocols::tape_store::{TapePool, TapeStore};
+use ppq_bert::testing::check;
+use ppq_bert::transport::Phase;
+
+/// One fresh 3-party session evaluating random graph `seed` at `opt`:
+/// P1's revealed logits, every party's hidden share vector, and the
+/// session meter. Same master seed at every opt level, so any output
+/// difference is the optimizer's fault.
+struct RandRun {
+    logits: Vec<Vec<i64>>,
+    hidden: [Vec<u64>; 3],
+    online_rounds: u64,
+    offline_bytes: u64,
+    packed_groups: usize,
+}
+
+fn run_rand(seed: u64, batch: usize, opt: OptConfig) -> RandRun {
+    let inputs = rand_inputs(seed, batch);
+    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+        let g = rand_graph(ctx, seed, opt);
+        let (logits, hidden) =
+            secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
+        assert_eq!(ctx.corr_pending(), 0, "seed {seed}: tape left behind");
+        (logits, hidden.vals, g.packed_groups())
+    });
+    let packed_groups = outs[0].2;
+    let [o0, o1, o2] = outs;
+    RandRun {
+        logits: o1.0,
+        hidden: [o0.1, o1.1, o2.1],
+        online_rounds: snap.max_rounds(Phase::Online),
+        offline_bytes: snap.total_bytes(Phase::Offline),
+        packed_groups,
+    }
+}
+
+/// The headline differential property, 50 random graphs per CI run:
+/// `--opt 1` output is bit-identical to `--opt 0` (logits AND every
+/// party's hidden shares), online rounds never rise — and drop strictly
+/// whenever the packing pass fused anything — while offline bytes are
+/// untouched. Failures report the generator seed for replay.
+#[test]
+fn opt1_is_bit_identical_and_never_slower_over_random_graphs() {
+    check("opt differential over random graphs", 50, |g| {
+        let seed = g.seed;
+        let batch = if seed % 2 == 0 { 1 } else { 4 };
+        let base = run_rand(seed, batch, OptConfig::none());
+        let opt = run_rand(seed, batch, OptConfig::o1());
+        prop_assert!(
+            opt.logits == base.logits,
+            "B={batch}: logits diverged: opt1 {:?} vs opt0 {:?}",
+            opt.logits,
+            base.logits
+        );
+        for p in 0..3 {
+            prop_assert!(
+                opt.hidden[p] == base.hidden[p],
+                "B={batch}: party {p} hidden shares diverged"
+            );
+        }
+        prop_assert!(
+            opt.online_rounds <= base.online_rounds,
+            "B={batch}: opt1 used MORE online rounds ({} vs {})",
+            opt.online_rounds,
+            base.online_rounds
+        );
+        prop_assert!(
+            opt.packed_groups == 0 || opt.online_rounds < base.online_rounds,
+            "B={batch}: {} packed groups saved no rounds ({} vs {})",
+            opt.packed_groups,
+            opt.online_rounds,
+            base.online_rounds
+        );
+        prop_assert!(
+            opt.offline_bytes == base.offline_bytes,
+            "B={batch}: offline bytes changed: {} vs {}",
+            opt.offline_bytes,
+            base.offline_bytes
+        );
+        Ok(())
+    });
+}
+
+/// One fresh BERT-tiny session at `opt`: P1 logits, per-party hidden
+/// shares, metered online rounds and packed-group count.
+fn run_bert(opt: OptConfig, batch: usize) -> RandRun {
+    let cfg = BertConfig::tiny();
+    let (w, _) = prepared_model(cfg);
+    let inputs = prepared_inputs(&cfg, batch);
+    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+        let weights = if ctx.id == P0 { Some(&w) } else { None };
+        let g = bert_graph_opt(ctx, &cfg, &per, weights, opt);
+        let (logits, hidden) =
+            secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
+        (logits, hidden.vals, g.packed_groups())
+    });
+    let packed_groups = outs[0].2;
+    let [o0, o1, o2] = outs;
+    RandRun {
+        logits: o1.0,
+        hidden: [o0.1, o1.1, o2.1],
+        online_rounds: snap.max_rounds(Phase::Online),
+        offline_bytes: snap.total_bytes(Phase::Offline),
+        packed_groups,
+    }
+}
+
+/// The acceptance measurement: BERT-tiny's MEASURED online round count
+/// at `--opt 1` is strictly below the `--opt 0` per-op sum (B = 1 and
+/// B = 4), with bit-identical logits and hidden shares. The attention
+/// blocks' adjacent conversion pairs must actually fuse.
+#[test]
+fn bert_tiny_opt1_measures_strictly_fewer_online_rounds() {
+    for batch in [1usize, 4] {
+        let base = run_bert(OptConfig::none(), batch);
+        let opt = run_bert(OptConfig::o1(), batch);
+        assert_eq!(opt.logits, base.logits, "B={batch}: logits must be bit-identical");
+        for p in 0..3 {
+            assert_eq!(opt.hidden[p], base.hidden[p], "B={batch}: party {p} hidden shares");
+        }
+        assert_eq!(base.packed_groups, 0, "B={batch}: opt0 must stay unpacked");
+        let layers = BertConfig::tiny().n_layers;
+        assert_eq!(
+            opt.packed_groups,
+            2 * layers,
+            "B={batch}: each layer's two attention conversion pairs must fuse"
+        );
+        assert!(
+            opt.online_rounds < base.online_rounds,
+            "B={batch}: measured opt1 rounds {} must be strictly below the opt0 \
+             per-op sum {}",
+            opt.online_rounds,
+            base.online_rounds
+        );
+        assert_eq!(opt.offline_bytes, base.offline_bytes, "B={batch}: offline bytes");
+    }
+}
+
+/// Correlation dedup is draw-identical: executing the same plan with
+/// [`run_plan`] and [`run_plan_deduped`] (fresh sessions, same master
+/// seed) yields field-for-field EQUAL correlation tapes at every party,
+/// the same offline byte total, and strictly fewer offline rounds —
+/// message boundaries are the only thing that moved.
+#[test]
+fn deduped_plan_run_is_field_identical_and_batches_messages() {
+    let cfg = BertConfig::tiny();
+    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+    let g = bert_graph_dry(&cfg, &per);
+    let plan_a = g.plan(2);
+    let plan_b = g.plan(2);
+    let plan_len = plan_a.len();
+    let (tapes_a, snap_a) = run_3pc(SessionCfg::default(), move |ctx| run_plan(ctx, &plan_a));
+    let (tapes_b, snap_b) =
+        run_3pc(SessionCfg::default(), move |ctx| run_plan_deduped(ctx, &plan_b));
+    for (p, (a, b)) in tapes_a.iter().zip(&tapes_b).enumerate() {
+        assert_eq!(a.len(), plan_len, "party {p}: tape length");
+        assert_eq!(a, &b.0, "party {p}: correlations must be field-identical under dedup");
+    }
+    let stats = &tapes_b[0].1;
+    assert_eq!(stats.ops(), plan_len, "dedup stats must cover the whole plan");
+    assert!(
+        stats.messages_deduped() < stats.messages_unopt,
+        "repeated layer shapes must batch ({} -> {})",
+        stats.messages_unopt,
+        stats.messages_deduped()
+    );
+    assert_eq!(
+        snap_a.total_bytes(Phase::Offline),
+        snap_b.total_bytes(Phase::Offline),
+        "dedup must not change offline bytes"
+    );
+    assert!(
+        snap_b.max_rounds(Phase::Offline) < snap_a.max_rounds(Phase::Offline),
+        "dedup must reduce offline rounds ({} vs {})",
+        snap_b.max_rounds(Phase::Offline),
+        snap_a.max_rounds(Phase::Offline)
+    );
+}
+
+/// Tapes never cross opt levels: the fingerprint (pool key) differs, a
+/// window served with the `--opt 1` graph leaves an `--opt 0` tape
+/// untouched (cold fallback, counted as misses), and the `--opt 0`
+/// graph still consumes its own tape warm afterwards.
+#[test]
+fn opt_levels_never_share_pool_keys() {
+    let seed = 7u64;
+    let inputs = rand_inputs(seed, 1);
+    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+        let g0 = rand_graph(ctx, seed, OptConfig::none());
+        let g1 = rand_graph(ctx, seed, OptConfig::o1());
+        assert_ne!(g0.fingerprint(), g1.fingerprint(), "opt must re-key the pool");
+        let mut pool = CorrPool::new();
+        prep_into_pool(ctx, &g0, &mut pool, 1);
+        let key0 = (g0.fingerprint(), 1usize);
+        assert_eq!(pool.get(&key0).map_or(0, |q| q.len()), 1);
+        let p1_inputs = if ctx.id == P1 { Some(&inputs[..]) } else { None };
+        // Serving the opt1 graph must NOT consume the opt0 tape.
+        let _ = serve_window(ctx, &g1, &mut pool, 1, p1_inputs);
+        assert_eq!(
+            pool.get(&key0).map_or(0, |q| q.len()),
+            1,
+            "an opt1 window consumed an opt0 tape"
+        );
+        // The opt0 graph still serves its own tape warm.
+        let _ = serve_window(ctx, &g0, &mut pool, 1, p1_inputs);
+        assert_eq!(pool.get(&key0).map_or(0, |q| q.len()), 0, "warm window must pop its tape");
+        (g0.plan(1).len(), g1.plan(1).len())
+    });
+    let (warm_len, cold_len) = outs[1];
+    assert_eq!(snap.pool_hits(), warm_len as u64, "opt0 window must be fully warm");
+    assert_eq!(snap.pool_misses(), cold_len as u64, "opt1 window must be fully cold");
+}
+
+/// The durable store keeps the opt-keyed pools separate across a
+/// restart: tapes persisted under the `--opt 0` fingerprint reload
+/// under that key only — a party restarted at `--opt 1` finds its pool
+/// empty instead of a foreign tape.
+#[test]
+fn tape_store_restart_keeps_opt_keys_separate() {
+    let dir = std::env::temp_dir().join(format!("ppq_opt_tape_keys_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fp0 = rand_graph_dry(3, OptConfig::none()).fingerprint();
+    let fp1 = rand_graph_dry(3, OptConfig::o1()).fingerprint();
+    assert_ne!(fp0, fp1);
+
+    // Geometry-consistent synthetic tape (the codec round-trips
+    // geometry; content is opaque filler), persisted under the opt0 key.
+    let shape = CorrShape {
+        kind: CorrKind::Lut1,
+        x_bits: 4,
+        y_bits: 0,
+        out_bits: vec![16],
+        n: 2,
+        groups: 0,
+    };
+    let corr = Correlation {
+        shape: shape.clone(),
+        tsh: vec![(0..2 * 16).map(|i| i as u64).collect()],
+        dx: vec![9, 11],
+        dy: Vec::new(),
+    };
+    let session = [7u8; 16];
+    let store = TapeStore::new(&dir, 2, session).expect("create store");
+    let mut pool = TapePool::new();
+    pool.entry((fp0, 1)).or_default().push_back(vec![corr.clone()]);
+    store.save_pool(&pool).expect("persist pool");
+    drop(store);
+
+    // Restart: the reloaded pool serves the opt0 key and ONLY that key.
+    let store = TapeStore::new(&dir, 2, session).expect("reopen store");
+    let (loaded, warnings) = store.load_pool();
+    assert!(warnings.is_empty(), "clean store must reload without warnings: {warnings:?}");
+    assert_eq!(loaded.get(&(fp0, 1)).map_or(0, |q| q.len()), 1);
+    assert!(!loaded.contains_key(&(fp1, 1)), "opt1 key must not inherit opt0 tapes");
+    assert_eq!(loaded[&(fp0, 1)][0], vec![corr], "tape content must round-trip");
+    let _ = std::fs::remove_dir_all(&dir);
+}
