@@ -34,6 +34,8 @@ bench-quick:
 	cargo bench --bench transport -- --quick --json BENCH_ci.json
 	cargo bench --bench batching -- --quick --json BENCH_ci.json
 	cargo bench --bench offline -- --quick --json BENCH_ci.json
+	cargo bench --bench threads -- --quick --json BENCH_ci.json
+	tools/check_thread_scaling.sh BENCH_ci.json
 	@echo "--- BENCH_ci.json"
 	@cat BENCH_ci.json
 
@@ -42,6 +44,7 @@ bench:
 	cargo bench --bench transport
 	cargo bench --bench batching
 	cargo bench --bench offline
+	cargo bench --bench threads
 	cargo bench --bench table2
 	cargo bench --bench table3
 	cargo bench --bench table4

@@ -1,0 +1,131 @@
+//! Measured thread sweep of the persistent worker pool: offline tape
+//! generation and the warm online window, each at worker-pool sizes
+//! 1/2/4/8 on the same machine (DESIGN.md §Parallel runtime).
+//!
+//! Thread count must change wall-clock ONLY — the bench asserts P1's
+//! logits are bit-identical across the sweep — and records measured
+//! walls as `threads/t{N}/{offline,online}` rows. The Amdahl curve from
+//! [`ppq_bert::bench_harness::thread_scale`] (formerly the only source
+//! of thread-sweep numbers, DESIGN.md §Substitutions) is kept as a
+//! modeled cross-check column next to the measurements.
+//!
+//!   cargo bench --bench threads
+//!   CI smoke: cargo bench --bench threads -- --quick --json BENCH_ci.json
+
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::Instant;
+
+use ppq_bert::bench_harness::{
+    fmt_dur, prepared_inputs, prepared_model, thread_scale, BenchOpts, Table,
+};
+use ppq_bert::coordinator::session::{prep_into_pool, serve_window};
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::secure::bert_graph;
+use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
+use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::protocols::tape_store::TapePool;
+use ppq_bert::transport::{build_mesh, Metrics, Phase};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let opts = BenchOpts::from_env_args();
+    let cfg = BertConfig::tiny();
+    let batch = if opts.quick { 1 } else { 4 };
+    let (weights, _) = prepared_model(cfg);
+    let weights = Arc::new(weights);
+    let inputs = prepared_inputs(&cfg, batch);
+
+    let mut t = Table::new(&[
+        "threads",
+        "offline wall",
+        "offline x",
+        "online wall",
+        "online x",
+        "modeled x (Amdahl)",
+    ]);
+    let mut ref_walls: Option<(f64, f64)> = None;
+    let mut ref_logits: Option<Vec<Vec<i64>>> = None;
+    for threads in THREADS {
+        let scfg = SessionCfg { threads, ..SessionCfg::default() };
+        let metrics = Arc::new(Metrics::new());
+        let nets = build_mesh(Arc::clone(&metrics), None);
+        // Main thread is the timer; the barrier brackets the offline and
+        // online regions so setup (weight sharing, graph build) is
+        // excluded from both walls.
+        let barrier = Arc::new(Barrier::new(4));
+        let (tx, rx) = mpsc::channel();
+        let mut parties = Vec::new();
+        for (id, net) in nets.into_iter().enumerate() {
+            let weights = Arc::clone(&weights);
+            let inputs = inputs.clone();
+            let barrier = Arc::clone(&barrier);
+            let tx = tx.clone();
+            parties.push(std::thread::spawn(move || {
+                let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
+                let w = if id == P0 { Some(&*weights) } else { None };
+                let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+                let model = bert_graph(&ctx, &cfg, &per, w);
+                let mut pool = TapePool::new();
+                barrier.wait(); // offline timer starts
+                prep_into_pool(&ctx, &model, &mut pool, batch);
+                barrier.wait(); // offline timer stops
+                let p1_inputs = if id == P1 { Some(&inputs[..]) } else { None };
+                barrier.wait(); // online timer starts
+                let logits = serve_window(&ctx, &model, &mut pool, batch, p1_inputs);
+                barrier.wait(); // online timer stops
+                ctx.flush_timer();
+                if id == P1 {
+                    let _ = tx.send(logits);
+                }
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        barrier.wait();
+        let offline_wall = t0.elapsed();
+        barrier.wait();
+        let t1 = Instant::now();
+        barrier.wait();
+        let online_wall = t1.elapsed();
+        for h in parties {
+            h.join().expect("bench party");
+        }
+        let logits = rx.recv().expect("P1 logits");
+        match &ref_logits {
+            None => ref_logits = Some(logits),
+            Some(want) => {
+                assert_eq!(&logits, want, "T={threads}: logits must be thread-invariant");
+            }
+        }
+        let d = metrics.snapshot();
+        opts.record(
+            &format!("threads/t{threads}/offline"),
+            offline_wall,
+            d.total_bytes(Phase::Offline),
+            d.max_rounds(Phase::Offline),
+        );
+        opts.record(
+            &format!("threads/t{threads}/online"),
+            online_wall,
+            d.total_bytes(Phase::Online),
+            d.max_rounds(Phase::Online),
+        );
+        let (off_s, on_s) = (offline_wall.as_secs_f64(), online_wall.as_secs_f64());
+        let (ref_off, ref_on) = *ref_walls.get_or_insert((off_s, on_s));
+        t.row(vec![
+            threads.to_string(),
+            fmt_dur(offline_wall),
+            format!("{:.2}", ref_off / off_s.max(1e-9)),
+            fmt_dur(online_wall),
+            format!("{:.2}", ref_on / on_s.max(1e-9)),
+            format!("{:.2}", thread_scale(threads)),
+        ]);
+    }
+    t.print(&format!(
+        "measured thread sweep (BERT-tiny, window = {batch}): one persistent worker pool per \
+         party drives matmul rows, attention blocks, packing and offline PRG generation; \
+         speedups are measured on this machine, the Amdahl column is the calibrated model \
+         kept as a cross-check (DESIGN.md §Parallel runtime)",
+    ));
+}

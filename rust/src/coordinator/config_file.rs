@@ -10,7 +10,7 @@
 //!
 //! [serving]
 //! max_batch = 8
-//! threads = 4
+//! threads = 4          # worker threads per party (0 = auto-detect)
 //! net = lan            # lan | wan | local
 //! max_strategy = tournament   # tournament | linear | sort
 //! buckets = 8,16,32
@@ -211,6 +211,15 @@ prep_depth = 3
         assert!(c.bert_config().is_err());
         let c = ConfigFile::parse("[model]\nseq_len = banana").unwrap();
         assert!(c.bert_config().is_err());
+        let c = ConfigFile::parse("[serving]\nthreads = banana").unwrap();
+        assert!(c.server_config().is_err());
+    }
+
+    #[test]
+    fn threads_zero_means_auto_detect() {
+        let c = ConfigFile::parse("[serving]\nthreads = 0").unwrap();
+        let sc = c.server_config().unwrap();
+        assert_eq!(sc.session.threads, 0); // resolved by the pool at start
     }
 
     #[test]

@@ -4,7 +4,30 @@
 //! online phase), so the transport packs sub-byte rings tightly instead of
 //! rounding every element up to a byte.
 
+use super::pool::WorkerPool;
 use super::ring::Ring;
+
+/// Below this element count the pooled variants run serially: dispatch
+/// overhead beats the win on small frames (δ-openings are a few hundred
+/// elements; offline table fields are millions).
+const POOL_CUTOFF: usize = 4096;
+
+const fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Elements per byte-aligned unit of the bit stream: chunk boundaries in
+/// the pooled variants are multiples of this so each chunk's bits tile
+/// exact bytes (2 for 4-bit, 4 for 6-bit, 1 for whole-byte widths).
+const fn unit_elems(bits: usize) -> usize {
+    8 / gcd(bits, 8)
+}
 
 /// Pack `vals` (each already reduced into `ring`) bit-tight, little-endian
 /// bit order within the stream.
@@ -115,6 +138,45 @@ pub fn unpack(ring: Ring, bytes: &[u8], n: usize) -> Vec<u64> {
     out
 }
 
+/// [`pack`] across a worker pool (byte-identical output for every pool
+/// size: chunks are cut on byte-aligned element boundaries and
+/// reassembled in order — DESIGN.md §Parallel runtime). `None` or a
+/// small input falls back to the serial path.
+pub fn pack_pooled(pool: Option<&WorkerPool>, ring: Ring, vals: &[u64]) -> Vec<u8> {
+    let n = vals.len();
+    let pool = match pool {
+        Some(p) if p.threads() > 1 && n >= POOL_CUTOFF => p,
+        _ => return pack(ring, vals),
+    };
+    let unit = unit_elems(ring.bits() as usize);
+    let units = (n + unit - 1) / unit;
+    let parts = pool.run_chunks(units, |ulo, uhi, _| {
+        let lo = ulo * unit;
+        let hi = n.min(uhi * unit);
+        pack(ring, &vals[lo..hi])
+    });
+    parts.concat()
+}
+
+/// [`unpack`] across a worker pool (inverse of [`pack_pooled`]; output
+/// identical to serial [`unpack`] for every pool size).
+pub fn unpack_pooled(pool: Option<&WorkerPool>, ring: Ring, bytes: &[u8], n: usize) -> Vec<u64> {
+    let pool = match pool {
+        Some(p) if p.threads() > 1 && n >= POOL_CUTOFF => p,
+        _ => return unpack(ring, bytes, n),
+    };
+    let bits = ring.bits() as usize;
+    let unit = unit_elems(bits);
+    let unit_bytes = unit * bits / 8;
+    let units = (n + unit - 1) / unit;
+    let parts = pool.run_chunks(units, |ulo, uhi, _| {
+        let lo = ulo * unit;
+        let hi = n.min(uhi * unit);
+        unpack(ring, &bytes[ulo * unit_bytes..], hi - lo)
+    });
+    parts.concat()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +192,27 @@ mod tests {
                 let bytes = pack(ring, &vals);
                 assert_eq!(bytes.len(), ring.packed_len(n));
                 assert_eq!(unpack(ring, &bytes, n), vals, "ring {ring:?} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_pack_matches_serial_for_every_pool_size() {
+        let mut prg = Prg::new([13; 16]);
+        // Above and below the pooled cutoff, even and odd widths.
+        for ring in [R4, R6, R8, R16, Ring::new(10), Ring::new(64)] {
+            for n in [100usize, POOL_CUTOFF + 7] {
+                let vals = prg.ring_vec(ring, n);
+                let want_bytes = pack(ring, &vals);
+                for threads in [1usize, 2, 3, 8] {
+                    let pool = WorkerPool::new(threads);
+                    let got = pack_pooled(Some(&pool), ring, &vals);
+                    assert_eq!(got, want_bytes, "pack ring {ring:?} n {n} t {threads}");
+                    let back = unpack_pooled(Some(&pool), ring, &want_bytes, n);
+                    assert_eq!(back, vals, "unpack ring {ring:?} n {n} t {threads}");
+                }
+                assert_eq!(pack_pooled(None, ring, &vals), want_bytes);
+                assert_eq!(unpack_pooled(None, ring, &want_bytes, n), vals);
             }
         }
     }

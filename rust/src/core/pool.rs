@@ -1,53 +1,303 @@
-//! Minimal data-parallel helper (rayon is not available offline).
+//! Persistent worker pool for data-parallel party-local compute
+//! (rayon is not available offline, so this is in-tree).
 //!
-//! `par_chunks` splits an index range across `threads` scoped OS threads.
-//! On the single-core CI container this mostly measures oversubscription;
-//! the bench harness pairs it with the calibrated scaling model described
-//! in DESIGN.md.
+//! A [`WorkerPool`] owns `threads - 1` long-lived OS threads plus the
+//! caller's thread; [`WorkerPool::run_chunks`] splits an index range into
+//! contiguous chunks, executes them across the pool, and collects the
+//! per-chunk outputs **in chunk order**, so parallel helpers built on it
+//! produce byte-identical results for every thread count. One pool lives
+//! for the whole party session (owned by `PartyCtx`), so steady-state
+//! dispatch is a queue push + condvar wake rather than a thread spawn.
+//! See DESIGN.md §Parallel runtime for the determinism argument.
+//!
+//! A chunk that panics does not tear down the pool: the payload is
+//! captured and re-raised on the submitting thread with the chunk index
+//! and element range attached.
 
-/// Run `f(start, end, chunk_index)` over `threads` contiguous chunks of
-/// `0..len`, collecting the per-chunk outputs in order.
-pub fn par_chunks<T, F>(threads: usize, len: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize, usize, usize) -> T + Sync,
-{
-    let threads = threads.max(1).min(len.max(1));
-    if threads <= 1 {
-        return vec![f(0, len, 0)];
-    }
-    let chunk = (len + threads - 1) / threads;
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(len);
-            let f = &f;
-            handles.push(s.spawn(move || f(lo, hi, t)));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    })
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// A queued unit of work. Jobs are lifetime-erased closures; see the
+/// safety comment in [`WorkerPool::run_chunks`].
+type Job = Box<dyn FnOnce() + Send>;
+
+/// Lock a mutex, recovering from poisoning (a poisoned lock only means a
+/// chunk panicked while holding it; the data is a plain result slot and
+/// stays well-formed, and the panic itself is re-raised with context by
+/// the submitting thread).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// Parallel-map over a mutable slice in contiguous chunks.
-pub fn par_map_mut<T, F>(threads: usize, data: &mut [T], f: F)
-where
-    T: Send,
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    let len = data.len();
-    let threads = threads.max(1).min(len.max(1));
-    if threads <= 1 {
-        f(0, data);
-        return;
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct JobQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    fn push(&self, jobs: Vec<Job>) {
+        let mut st = lock(&self.state);
+        st.jobs.extend(jobs);
+        drop(st);
+        self.ready.notify_all();
     }
-    let chunk = (len + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (t, part) in data.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || f(t * chunk, part));
+}
+
+fn worker_loop(q: &JobQueue) {
+    loop {
+        let job = {
+            let mut st = lock(&q.state);
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = q.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // Chunk closures catch their own panics (the payload travels back
+        // to the submitting thread), but stay defensive: a worker must
+        // never die and strand queued jobs.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// Erase the lifetime of a job closure so it can sit in the pool's queue.
+///
+/// # Safety
+///
+/// The caller must block until the job has finished running before any
+/// borrow captured inside it leaves scope. [`WorkerPool::run_chunks`]
+/// guarantees this by waiting on a completion latch that counts every
+/// chunk, panicking or not, before returning.
+unsafe fn erase_job_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
+}
+
+struct PoolInner {
+    queue: Arc<JobQueue>,
+    threads: usize,
+    /// Reusable u16 conversion buffers for the narrow-lane matmul path
+    /// (hoisted out of `mm_local` so steady-state windows stop
+    /// reallocating them per call).
+    scratch: Mutex<(Vec<u16>, Vec<u16>)>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        lock(&self.queue.state).shutdown = true;
+        self.queue.ready.notify_all();
+        for h in lock(&self.workers).drain(..) {
+            let _ = h.join();
         }
-    });
+    }
+}
+
+/// Resolve a `--threads` value: `0` means auto-detect
+/// (`std::thread::available_parallelism`, falling back to 1), anything
+/// else is taken literally.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Persistent worker pool: `threads - 1` long-lived threads plus the
+/// submitting thread. Cheap to clone (clones share the same workers and
+/// queue); the threads shut down when the last clone drops.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads()).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool sized by `threads` (`0` = auto-detect; see
+    /// [`resolve_threads`]). `threads - 1` OS threads are spawned; the
+    /// caller's thread always executes chunk 0 itself, so `threads == 1`
+    /// spawns nothing and runs everything inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = resolve_threads(threads);
+        let queue = Arc::new(JobQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads.saturating_sub(1));
+        for i in 1..threads {
+            let q = Arc::clone(&queue);
+            let h = std::thread::Builder::new()
+                .name(format!("ppq-pool-{i}"))
+                .spawn(move || worker_loop(&q))
+                .expect("worker pool: failed to spawn worker thread");
+            workers.push(h);
+        }
+        WorkerPool {
+            inner: Arc::new(PoolInner {
+                queue,
+                threads,
+                scratch: Mutex::new((Vec::new(), Vec::new())),
+                workers: Mutex::new(workers),
+            }),
+        }
+    }
+
+    /// The resolved thread count this pool was built with (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    /// Run `f(start, end, chunk_index)` over contiguous chunks of
+    /// `0..len`, collecting the per-chunk outputs **in chunk order**.
+    /// Chunk boundaries depend only on `len` and the pool's thread
+    /// count; the output vector's concatenation order never does. If a
+    /// chunk panics, every other chunk still runs to completion and the
+    /// payload is re-raised here with the chunk index and range.
+    pub fn run_chunks<T, F>(&self, len: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize, usize) -> T + Sync,
+    {
+        if len == 0 {
+            return Vec::new();
+        }
+        let threads = self.threads().min(len);
+        if threads <= 1 {
+            return vec![f(0, len, 0)];
+        }
+        let chunk = (len + threads - 1) / threads;
+        let nchunks = (len + chunk - 1) / chunk;
+        let slots: Vec<Mutex<Option<std::thread::Result<T>>>> =
+            (0..nchunks).map(|_| Mutex::new(None)).collect();
+        let done = Mutex::new(0usize);
+        let all_done = Condvar::new();
+        {
+            let slots = &slots;
+            let done = &done;
+            let all_done = &all_done;
+            let f = &f;
+            let run_one = move |idx: usize| {
+                let lo = idx * chunk;
+                let hi = len.min(lo + chunk);
+                let r = catch_unwind(AssertUnwindSafe(|| f(lo, hi, idx)));
+                *lock(&slots[idx]) = Some(r);
+                let mut d = lock(done);
+                *d += 1;
+                if *d == nchunks {
+                    all_done.notify_all();
+                }
+            };
+            let jobs: Vec<Job> = (1..nchunks)
+                .map(|idx| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || run_one(idx));
+                    // SAFETY: we do not leave this block until `done`
+                    // reaches `nchunks`, i.e. until every enqueued job has
+                    // finished, so the borrows of `f`, `slots`, `done` and
+                    // `all_done` inside `job` never outlive this frame.
+                    unsafe { erase_job_lifetime(job) }
+                })
+                .collect();
+            self.inner.queue.push(jobs);
+            run_one(0);
+            let mut d = lock(done);
+            while *d < nchunks {
+                d = all_done.wait(d).unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+        let mut out = Vec::with_capacity(nchunks);
+        for (idx, slot) in slots.into_iter().enumerate() {
+            let r = slot
+                .into_inner()
+                .unwrap_or_else(PoisonError::into_inner)
+                .expect("worker pool: chunk finished without storing a result");
+            match r {
+                Ok(v) => out.push(v),
+                Err(payload) => {
+                    let lo = idx * chunk;
+                    let hi = len.min(lo + chunk);
+                    let msg = payload
+                        .downcast_ref::<&'static str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    panic!("worker pool: chunk {idx} (elements {lo}..{hi}) panicked: {msg}");
+                }
+            }
+        }
+        out
+    }
+
+    /// Parallel-map over a mutable slice in contiguous chunks whose start
+    /// offsets and lengths are multiples of `granule` (except the final
+    /// chunk's length). `f(start, part)` receives the absolute element
+    /// offset of its sub-slice. Chunk boundaries depend only on
+    /// `data.len()`, `granule` and the pool size — never on scheduling —
+    /// so the result is identical for every thread count.
+    pub fn run_mut<T, F>(&self, data: &mut [T], granule: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = data.len();
+        if len == 0 {
+            return;
+        }
+        let granule = granule.max(1);
+        let units = (len + granule - 1) / granule;
+        let threads = self.threads().min(units);
+        if threads <= 1 {
+            f(0, data);
+            return;
+        }
+        let per_chunk = ((units + threads - 1) / threads) * granule;
+        let mut parts: Vec<Option<(usize, &mut [T])>> = Vec::new();
+        let mut rest: &mut [T] = data;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per_chunk.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            parts.push(Some((base, head)));
+            base += take;
+            rest = tail;
+        }
+        let nparts = parts.len();
+        let parts = Mutex::new(parts);
+        let parts_ref = &parts;
+        let fref = &f;
+        self.run_chunks(nparts, |lo, hi, _| {
+            for i in lo..hi {
+                let item = lock(parts_ref)[i].take();
+                let (start, part) = item.expect("worker pool: run_mut part claimed twice");
+                fref(start, part);
+            }
+        });
+    }
+
+    /// Borrow the pool's reusable u16 conversion buffers (cleared state is
+    /// the caller's responsibility — callers `clear()` + `extend()`).
+    /// Protocol code runs single-threaded per party, so this lock is
+    /// uncontended; it exists so the pool can be shared by value.
+    pub fn with_u16_scratch<R>(&self, f: impl FnOnce(&mut Vec<u16>, &mut Vec<u16>) -> R) -> R {
+        let mut g = lock(&self.inner.scratch);
+        let (a, b) = &mut *g;
+        f(a, b)
+    }
 }
 
 #[cfg(test)]
@@ -55,9 +305,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn par_chunks_covers_range() {
+    fn chunks_cover_range_in_order() {
         for threads in [1, 2, 3, 7] {
-            let parts = par_chunks(threads, 100, |lo, hi, _| (lo, hi));
+            let pool = WorkerPool::new(threads);
+            let parts = pool.run_chunks(100, |lo, hi, _| (lo, hi));
             assert_eq!(parts[0].0, 0);
             assert_eq!(parts.last().unwrap().1, 100);
             for w in parts.windows(2) {
@@ -67,19 +318,104 @@ mod tests {
     }
 
     #[test]
-    fn par_map_mut_touches_all() {
-        let mut v = vec![0u32; 97];
-        par_map_mut(4, &mut v, |base, part| {
-            for (i, x) in part.iter_mut().enumerate() {
-                *x = (base + i) as u32;
-            }
+    fn warm_pool_reuse_is_consistent() {
+        let pool = WorkerPool::new(4);
+        let want: usize = (0..1000).sum();
+        for _ in 0..50 {
+            let got: usize = pool
+                .run_chunks(1000, |lo, hi, _| (lo..hi).sum::<usize>())
+                .into_iter()
+                .sum();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn run_mut_touches_every_element_once() {
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut v = vec![0u32; 97];
+            pool.run_mut(&mut v, 5, |base, part| {
+                for (i, x) in part.iter_mut().enumerate() {
+                    *x += (base + i) as u32 + 1;
+                }
+            });
+            assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32 + 1), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn run_mut_respects_granule_alignment() {
+        let pool = WorkerPool::new(3);
+        let mut v = vec![0u8; 100];
+        let bases = Mutex::new(Vec::new());
+        pool.run_mut(&mut v, 8, |base, part| {
+            lock(&bases).push((base, part.len()));
         });
-        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+        let mut seen = lock(&bases).clone();
+        seen.sort_unstable();
+        let total: usize = seen.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, 100);
+        for &(base, len) in &seen {
+            assert_eq!(base % 8, 0, "chunk start {base} not granule-aligned");
+            if base + len < 100 {
+                assert_eq!(len % 8, 0, "interior chunk length {len} not granule-aligned");
+            }
+        }
     }
 
     #[test]
     fn zero_len_ok() {
-        let parts = par_chunks(4, 0, |lo, hi, _| hi - lo);
-        assert_eq!(parts.iter().sum::<usize>(), 0);
+        let pool = WorkerPool::new(4);
+        let parts = pool.run_chunks(0, |lo, hi, _| hi - lo);
+        assert!(parts.is_empty());
+        let mut v: Vec<u8> = Vec::new();
+        pool.run_mut(&mut v, 4, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn auto_detect_resolves_to_at_least_one() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert!(WorkerPool::new(0).threads() >= 1);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let reference: Vec<usize> = WorkerPool::new(1)
+            .run_chunks(257, |lo, hi, _| (lo..hi).map(|i| i * 7).collect::<Vec<_>>())
+            .concat();
+        for threads in [2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let got: Vec<usize> = pool
+                .run_chunks(257, |lo, hi, _| (lo..hi).map(|i| i * 7).collect::<Vec<_>>())
+                .concat();
+            assert_eq!(got, reference, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn scratch_is_reusable() {
+        let pool = WorkerPool::new(2);
+        pool.with_u16_scratch(|a, b| {
+            a.extend([1u16, 2, 3]);
+            b.push(9);
+        });
+        pool.with_u16_scratch(|a, b| {
+            assert_eq!(a.len(), 3);
+            assert_eq!(b.len(), 1);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool: chunk")]
+    fn worker_panic_carries_chunk_context() {
+        let pool = WorkerPool::new(4);
+        pool.run_chunks(100, |lo, _hi, _idx| {
+            if lo >= 25 {
+                panic!("boom at {lo}");
+            }
+            lo
+        });
     }
 }

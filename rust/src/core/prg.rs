@@ -12,6 +12,7 @@
 //! deterministic, which is all the simulation's correctness and metering
 //! rely on; swap in AES-NI for a hardened deployment.
 
+use super::pool::WorkerPool;
 use super::ring::Ring;
 
 const CHACHA_CONST: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
@@ -81,7 +82,30 @@ fn fnv1a64(bytes: &[u8], basis: u64) -> u64 {
     h
 }
 
+/// Keystream bytes a single [`Prg::ring_elem`] draw consumes.
+pub fn ring_elem_bytes(ring: Ring) -> u64 {
+    ((ring.bits() + 7) / 8) as u64
+}
+
+/// Keystream bytes a [`Prg::ring_vec`]`(ring, n)` call consumes: the
+/// word-sliced path (widths dividing 64) reads 8 bytes per packed word;
+/// odd widths fall back to per-element draws. Parallel draws use this to
+/// position-address each chunk's stream (DESIGN.md §Parallel runtime).
+pub fn ring_vec_bytes(ring: Ring, n: usize) -> u64 {
+    let bits = ring.bits();
+    if 64 % bits != 0 {
+        return n as u64 * ring_elem_bytes(ring);
+    }
+    let per = (64 / bits) as usize;
+    ((n + per - 1) / per) as u64 * 8
+}
+
 /// Deterministic ChaCha20-CTR stream.
+///
+/// `Clone` is deliberate: a clone is an independent cursor into the same
+/// keystream, which is what lets the worker pool split one bulk draw
+/// into seek-addressed chunks without perturbing the parent stream.
+#[derive(Clone)]
 pub struct Prg {
     key: [u32; 8],
     counter: u64,
@@ -218,6 +242,55 @@ impl Prg {
         }
         out
     }
+
+    /// Parallel [`Prg::ring_vec`]: bit-identical output and final
+    /// [`Prg::pos`] for every pool size. Each chunk clones the generator
+    /// and seeks to its exact keystream byte offset (word-aligned for the
+    /// sliced path, element-aligned for odd widths), so the split is
+    /// position-addressed rather than order-dependent; afterwards the
+    /// parent stream is advanced by [`ring_vec_bytes`] exactly as a
+    /// serial draw would have.
+    pub fn ring_vec_par(&mut self, pool: &WorkerPool, ring: Ring, n: usize) -> Vec<u64> {
+        let bits = ring.bits();
+        let base = self.pos();
+        let me: &Prg = self;
+        let parts: Vec<Vec<u64>> = if 64 % bits != 0 {
+            let nbytes = ring_elem_bytes(ring);
+            pool.run_chunks(n, |lo, hi, _| {
+                let mut p = me.clone();
+                p.seek(base.wrapping_add(lo as u64 * nbytes));
+                p.ring_vec(ring, hi - lo)
+            })
+        } else {
+            let per = (64 / bits) as usize;
+            let words = (n + per - 1) / per;
+            pool.run_chunks(words, |wlo, whi, _| {
+                let mut p = me.clone();
+                p.seek(base.wrapping_add(wlo as u64 * 8));
+                let lo = wlo * per;
+                let hi = n.min(whi * per);
+                p.ring_vec(ring, hi - lo)
+            })
+        };
+        self.seek(base.wrapping_add(ring_vec_bytes(ring, n)));
+        parts.concat()
+    }
+
+    /// Parallel equivalent of `n` sequential [`Prg::ring_elem`] draws
+    /// (element `i` reads its bytes at offset `i * ring_elem_bytes`):
+    /// bit-identical values and final [`Prg::pos`] for every pool size.
+    pub fn ring_elems_par(&mut self, pool: &WorkerPool, ring: Ring, n: usize) -> Vec<u64> {
+        let nbytes = ring_elem_bytes(ring);
+        let base = self.pos();
+        let me: &Prg = self;
+        let parts: Vec<Vec<u64>> = pool.run_chunks(n, |lo, hi, _| {
+            let mut p = me.clone();
+            p.seek(base.wrapping_add(lo as u64 * nbytes));
+            (lo..hi).map(|_| p.ring_elem(ring)).collect()
+        });
+        self.seek(base.wrapping_add(n as u64 * nbytes));
+        parts.concat()
+    }
 }
 
 #[cfg(test)]
@@ -305,6 +378,58 @@ mod tests {
         b.seek(a.pos());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn parallel_draws_match_serial_for_every_pool_size() {
+        use crate::core::pool::WorkerPool;
+        use crate::core::ring::{R10, R32, R6, R64, R8};
+        let rings = [R4, R6, R8, R10, R16, R32, R64];
+        for ring in rings {
+            for n in [0usize, 1, 3, 17, 64, 257, 1000] {
+                // Reference: serial draws after a misaligned warm-up so
+                // chunk seeks start mid-block.
+                let mut serial = Prg::new([9; 16]);
+                serial.next_u8();
+                serial.next_u8();
+                serial.next_u8();
+                let want_vec = serial.ring_vec(ring, n);
+                let want_vec_pos = serial.pos();
+                let want_elems: Vec<u64> = (0..n).map(|_| serial.ring_elem(ring)).collect();
+                let want_elems_pos = serial.pos();
+                for threads in [1usize, 2, 3, 8] {
+                    let b = ring.bits();
+                    let pool = WorkerPool::new(threads);
+                    let mut par = Prg::new([9; 16]);
+                    par.next_u8();
+                    par.next_u8();
+                    par.next_u8();
+                    let got_vec = par.ring_vec_par(&pool, ring, n);
+                    assert_eq!(got_vec, want_vec, "ring_vec {b}b n={n} t={threads}");
+                    assert_eq!(par.pos(), want_vec_pos, "vec pos {b}b n={n} t={threads}");
+                    let got_elems = par.ring_elems_par(&pool, ring, n);
+                    assert_eq!(got_elems, want_elems, "elems {b}b n={n} t={threads}");
+                    assert_eq!(par.pos(), want_elems_pos, "elem pos {b}b n={n} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn draw_cost_helpers_match_actual_consumption() {
+        use crate::core::ring::{R10, R6, R64};
+        for ring in [R4, R6, R10, R16, R64] {
+            for n in [0usize, 1, 5, 16, 33] {
+                let mut p = Prg::new([11; 16]);
+                p.ring_vec(ring, n);
+                assert_eq!(p.pos(), ring_vec_bytes(ring, n), "{}b n={n}", ring.bits());
+                let mut q = Prg::new([11; 16]);
+                for _ in 0..n {
+                    q.ring_elem(ring);
+                }
+                assert_eq!(q.pos(), n as u64 * ring_elem_bytes(ring), "{}b n={n}", ring.bits());
+            }
         }
     }
 

@@ -550,6 +550,7 @@ fn cmd_serve(flags: HashMap<String, String>) {
     let mut scfg = ServerConfig::new(cfg);
     scfg.max_batch = batch;
     scfg.prep_depth = prep;
+    scfg.session.threads = flag_parse(&flags, "threads", 1);
     scfg.opt = opt_from(&flags);
     let mut coord = Coordinator::start(scfg, w);
     for i in 0..n {
@@ -779,7 +780,7 @@ USAGE:
                                              arms a kill -9-style abort on party N
                                              at window W (refusals become expected)
   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--opt 0|1]
-               [--conf FILE]
+               [--threads T] [--conf FILE]
   repro plan   [--config tiny|base] [--seq N] [--layers L] [--batch B]
                [--max tournament|linear|sort] [--opt 0|1] [--json]
                                              dump the per-op offline tape a
@@ -799,6 +800,10 @@ USAGE:
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N] [--opt 0|1]
   repro help
+
+--threads T sizes each party's persistent worker pool (T=0 auto-detects the
+core count); it changes wall-clock only — logits, shares, bytes and rounds
+are bit-identical for every T.
 
 Multi-process quickstart (three terminals + any number of clients):
   repro party --id 0 & repro party --id 1 & repro party --id 2 &

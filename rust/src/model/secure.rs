@@ -39,6 +39,7 @@
 //! size and the head count, while bytes scale linearly
 //! (DESIGN.md §Batched serving).
 
+use crate::core::pool::WorkerPool;
 use crate::core::prg::Prg;
 use crate::core::ring::{sign_extend, Ring, R16, R32, R4, R6};
 use crate::model::config::{BertConfig, LayerQuantConfig};
@@ -69,57 +70,93 @@ use crate::transport::Phase;
 /// Gather the per-head column blocks of a `[batch*s, d]` activation into
 /// (sequence, head)-major row blocks `[batch*n_heads*s, dh]` so the
 /// attention matmuls for every sequence and head run as ONE
-/// sequence-batched Alg. 3 call.
-fn gather_heads(x: &A2, batch: usize, s: usize, d: usize, heads: usize, dh: usize) -> A2 {
+/// sequence-batched Alg. 3 call. Each (sequence, head) block is an
+/// independent copy, so the pool chunks over them and reassembles in
+/// block order (DESIGN.md §Parallel runtime).
+fn gather_heads(
+    pool: &WorkerPool,
+    x: &A2,
+    batch: usize,
+    s: usize,
+    d: usize,
+    heads: usize,
+    dh: usize,
+) -> A2 {
     let len = batch * heads * s * dh;
     if x.vals.is_empty() {
         return A2::empty(x.ring, len);
     }
-    let mut vals = Vec::with_capacity(len);
-    for b in 0..batch {
-        for hd in 0..heads {
-            for r in 0..s {
-                let base = (b * s + r) * d + hd * dh;
-                vals.extend_from_slice(&x.vals[base..base + dh]);
+    let vals = pool
+        .run_chunks(batch * heads, |lo, hi, _| {
+            let mut part = Vec::with_capacity((hi - lo) * s * dh);
+            for bh in lo..hi {
+                let (b, hd) = (bh / heads, bh % heads);
+                for r in 0..s {
+                    let base = (b * s + r) * d + hd * dh;
+                    part.extend_from_slice(&x.vals[base..base + dh]);
+                }
             }
-        }
-    }
+            part
+        })
+        .concat();
     A2 { ring: x.ring, vals, len }
 }
 
 /// Inverse of [`gather_heads`]: scatter (sequence, head)-major `[·, dh]`
-/// row blocks back into a `[batch*s, d]` activation.
-fn scatter_heads(x: &A2, batch: usize, s: usize, d: usize, heads: usize, dh: usize) -> A2 {
+/// row blocks back into a `[batch*s, d]` activation. Pool-chunked over
+/// output rows (granule `d`): every output element has exactly one
+/// writer, so the result is pool-size-independent.
+fn scatter_heads(
+    pool: &WorkerPool,
+    x: &A2,
+    batch: usize,
+    s: usize,
+    d: usize,
+    heads: usize,
+    dh: usize,
+) -> A2 {
     let len = batch * s * d;
     if x.vals.is_empty() {
         return A2::empty(x.ring, len);
     }
     let mut vals = vec![0u64; len];
-    for b in 0..batch {
-        for hd in 0..heads {
-            for r in 0..s {
+    pool.run_mut(&mut vals, d, |start, part| {
+        for (off, row) in part.chunks_mut(d).enumerate() {
+            let row_idx = start / d + off;
+            let (b, r) = (row_idx / s, row_idx % s);
+            for hd in 0..heads {
                 let src = ((b * heads + hd) * s + r) * dh;
-                let dst = (b * s + r) * d + hd * dh;
-                vals[dst..dst + dh].copy_from_slice(&x.vals[src..src + dh]);
+                row[hd * dh..(hd + 1) * dh].copy_from_slice(&x.vals[src..src + dh]);
             }
         }
-    }
+    });
     A2 { ring: x.ring, vals, len }
 }
 
 /// Per-block transpose of RSS share matrices: `blocks` stacked
-/// `[rows, cols]` matrices -> `blocks` stacked `[cols, rows]` (local).
-fn transpose_rss_blocks(x: &Rss, blocks: usize, rows: usize, cols: usize) -> Rss {
+/// `[rows, cols]` matrices -> `blocks` stacked `[cols, rows]` (local,
+/// pool-chunked per block).
+fn transpose_rss_blocks(
+    pool: &WorkerPool,
+    x: &Rss,
+    blocks: usize,
+    rows: usize,
+    cols: usize,
+) -> Rss {
+    debug_assert_eq!(x.next.len(), blocks * rows * cols);
+    let blk = rows * cols;
     let tr = |v: &Vec<u64>| -> Vec<u64> {
         let mut out = vec![0u64; v.len()];
-        for g in 0..blocks {
-            let base = g * rows * cols;
-            for r in 0..rows {
-                for c in 0..cols {
-                    out[base + c * rows + r] = v[base + r * cols + c];
+        pool.run_mut(&mut out, blk, |start, part| {
+            for (off, dst) in part.chunks_mut(blk).enumerate() {
+                let base = (start / blk + off) * blk;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        dst[c * rows + r] = v[base + r * cols + c];
+                    }
                 }
             }
-        }
+        });
         out
     };
     Rss { ring: x.ring, next: tr(&x.next), prev: tr(&x.prev) }
@@ -222,7 +259,7 @@ impl SecureOp for QkvHeadsOp {
         let ws: [&Rss; 3] = [&self.wq, &self.wk, &self.wv];
         let qkv = rss_matmul_trc_multi(ctx, h16, &ws, rows, self.d, self.d, 4);
         qkv.iter()
-            .map(|x| Value::A2(gather_heads(x, batch, self.s, self.d, self.nh, dh)))
+            .map(|x| Value::A2(gather_heads(ctx.pool(), x, batch, self.s, self.d, self.nh, dh)))
             .collect()
     }
 }
@@ -359,7 +396,7 @@ impl SecureOp for AttnVMatmulOp {
     fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
         let (attn16, vh16) = (inputs[0].as_rss(), inputs[1].as_rss());
         let blocks = vh16.len() / (self.s * self.dh);
-        let vt = transpose_rss_blocks(vh16, blocks, self.s, self.dh); // blocks of [dh, s] = vᵀ
+        let vt = transpose_rss_blocks(ctx.pool(), vh16, blocks, self.s, self.dh); // [dh, s] = vᵀ
         let ctx4 = rss_matmul_trc_seq(ctx, attn16, &vt, blocks, self.s, self.s, self.dh, 4);
         vec![Value::A2(ctx4)]
     }
@@ -437,7 +474,7 @@ impl SecureOp for OutProjOp {
         let dh = self.d / self.nh;
         let batch = ctxh.len / (self.nh * self.s * dh);
         let rows = batch * self.s;
-        let ctxcat = scatter_heads(ctxh, batch, self.s, self.d, self.nh, dh);
+        let ctxcat = scatter_heads(ctx.pool(), ctxh, batch, self.s, self.d, self.nh, dh);
         let ctx16 = convert_to_rss(ctx, &ctxcat, R16, true);
         let o4 = rss_matmul_trc(ctx, &ctx16, &self.wo, rows, self.d, self.d, 4);
         vec![Value::A2(o4)]

@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::core::pool::WorkerPool;
 use crate::core::prg::Prg;
 use crate::protocols::prep::{CorrShape, Correlation};
 use crate::transport::{build_mesh, Metrics, MetricsSnapshot, Net, NetParams, Phase};
@@ -45,19 +46,27 @@ pub struct PartyCtx {
     corr_store: RefCell<VecDeque<Correlation>>,
     phase: Cell<Phase>,
     phase_started: Cell<Instant>,
-    /// Worker threads available for data-parallel protocol steps.
+    /// Resolved worker-thread count (≥ 1; a `--threads 0` auto-detect
+    /// request is already resolved here).
     pub threads: usize,
+    /// Persistent worker pool for every data-parallel protocol step
+    /// (matmul rows, attention blocks, pack/unpack, offline table
+    /// generation). One pool per party, alive for the whole session.
+    pool: WorkerPool,
 }
 
 impl PartyCtx {
     /// Build a party context from a mesh endpoint. Pairwise seeds are
     /// derived from the master seed (a key-agreement handshake in a real
     /// deployment — communication-free either way).
-    pub fn new(id: usize, net: Net, master_seed: [u8; 16], threads: usize) -> PartyCtx {
+    pub fn new(id: usize, mut net: Net, master_seed: [u8; 16], threads: usize) -> PartyCtx {
         let mk_pair = |other: usize| RefCell::new(Prg::derive(master_seed, &pair_label(id, other)));
         let mk_prep = |other: usize| {
             RefCell::new(Prg::derive(master_seed, &format!("prep-{}", pair_label(id, other))))
         };
+        let pool = WorkerPool::new(threads);
+        let threads = pool.threads();
+        net.attach_pool(pool.clone());
         PartyCtx {
             id,
             net,
@@ -69,7 +78,17 @@ impl PartyCtx {
             phase: Cell::new(Phase::Online),
             phase_started: Cell::new(Instant::now()),
             threads,
+            pool,
         }
+    }
+
+    /// The party's persistent worker pool (see `core::pool`). Thread
+    /// count changes only wall-clock: every helper built on the pool
+    /// assembles chunk results in deterministic order, so protocol
+    /// outputs and meters are bit-identical for every size
+    /// (DESIGN.md §Parallel runtime).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// The currently active protocol phase (messages are tagged with it).
@@ -224,7 +243,9 @@ pub struct PrgCursors {
 pub struct SessionCfg {
     /// Seed every per-party and pairwise PRG stream is derived from.
     pub master_seed: [u8; 16],
-    /// Worker threads per party for data-parallel steps.
+    /// Worker threads per party for data-parallel steps (`0` =
+    /// auto-detect via `available_parallelism`). Thread count changes
+    /// only wall-clock, never bytes, rounds, logits or shares.
     pub threads: usize,
     /// Inject real sleeps matching these network parameters (demo only;
     /// benches use the post-hoc cost model instead).

@@ -113,12 +113,20 @@ pub fn lut_online(ctx: &PartyCtx, t: &LutTable, corr: &Correlation, xs: &A2) -> 
         .collect();
     let peer = if ctx.id == P1 { P2 } else { P1 };
     let theirs = ctx.net.exchange_ring(peer, ctx.phase(), t.in_ring, &delta_sh);
-    let vals = (0..n)
-        .map(|i| {
-            let delta = t.in_ring.add(delta_sh[i], theirs[i]);
-            tsh[i * size + delta as usize]
+    // Masked-table gather split across the worker pool; chunks reassemble
+    // in index order so the result is pool-size-independent
+    // (DESIGN.md §Parallel runtime).
+    let vals = ctx
+        .pool()
+        .run_chunks(n, |lo, hi, _| {
+            (lo..hi)
+                .map(|i| {
+                    let delta = t.in_ring.add(delta_sh[i], theirs[i]);
+                    tsh[i * size + delta as usize]
+                })
+                .collect::<Vec<u64>>()
         })
-        .collect();
+        .concat();
     A2 { ring: t.out_ring, vals, len: n }
 }
 
@@ -158,12 +166,17 @@ pub fn lut_online_packed(ctx: &PartyCtx, parts: &[(&LutTable, &Correlation, &A2)
             let their = crate::core::pack::unpack(t.in_ring, &theirs[off..off + plen], n);
             off += plen;
             let tsh = &corr.tsh[0];
-            let vals = (0..n)
-                .map(|i| {
-                    let delta = t.in_ring.add(delta_sh[i], their[i]);
-                    tsh[i * size + delta as usize]
+            let vals = ctx
+                .pool()
+                .run_chunks(n, |lo, hi, _| {
+                    (lo..hi)
+                        .map(|i| {
+                            let delta = t.in_ring.add(delta_sh[i], their[i]);
+                            tsh[i * size + delta as usize]
+                        })
+                        .collect::<Vec<u64>>()
                 })
-                .collect();
+                .concat();
             A2 { ring: t.out_ring, vals, len: n }
         })
         .collect();
@@ -238,15 +251,21 @@ pub fn lut2_online_shared_y(
     let split = t.x_ring.packed_len(n);
     let their_dx = crate::core::pack::unpack(t.x_ring, &theirs[..split], n);
     let their_dy = crate::core::pack::unpack(t.y_ring, &theirs[split..], groups);
-    let mut vals = Vec::with_capacity(n);
-    for g in 0..groups {
-        let dy = t.y_ring.add(my_dy[g], their_dy[g]) as usize;
-        for j in 0..per_group {
-            let i = g * per_group + j;
-            let dx = t.x_ring.add(my_dx[i], their_dx[i]) as usize;
-            vals.push(tsh[i * size + dx * sy + dy]);
-        }
-    }
+    // Flat index-addressed gather (g = i / per_group) so the worker pool
+    // can chunk it anywhere; identical order to the historical g/j loop
+    // (DESIGN.md §Parallel runtime).
+    let vals = ctx
+        .pool()
+        .run_chunks(n, |lo, hi, _| {
+            (lo..hi)
+                .map(|i| {
+                    let dy = t.y_ring.add(my_dy[i / per_group], their_dy[i / per_group]) as usize;
+                    let dx = t.x_ring.add(my_dx[i], their_dx[i]) as usize;
+                    tsh[i * size + dx * sy + dy]
+                })
+                .collect::<Vec<u64>>()
+        })
+        .concat();
     A2 { ring: t.out_ring, vals, len: n }
 }
 
@@ -309,13 +328,19 @@ pub fn lut2_multi_online(
     ts.iter()
         .enumerate()
         .map(|(ti, t)| {
-            let vals = (0..n)
-                .map(|i| {
-                    let dx = t0.x_ring.add(my_dx[i], their_dx[i]) as usize;
-                    let dy = t0.y_ring.add(my_dy[i], their_dy[i]) as usize;
-                    tshs[ti][i * size + dx * sy + dy]
+            let tsh = &tshs[ti];
+            let vals = ctx
+                .pool()
+                .run_chunks(n, |lo, hi, _| {
+                    (lo..hi)
+                        .map(|i| {
+                            let dx = t0.x_ring.add(my_dx[i], their_dx[i]) as usize;
+                            let dy = t0.y_ring.add(my_dy[i], their_dy[i]) as usize;
+                            tsh[i * size + dx * sy + dy]
+                        })
+                        .collect::<Vec<u64>>()
                 })
-                .collect();
+                .concat();
             A2 { ring: t.out_ring, vals, len: n }
         })
         .collect()

@@ -7,45 +7,86 @@
 //! round. Local products are re-randomized with a fresh zero-sharing
 //! before P0 discloses its limb.
 
-use crate::core::pool::par_chunks;
+use crate::core::pool::WorkerPool;
 use crate::core::ring::Ring;
 use crate::party::{PartyCtx, P0, P1};
 use crate::sharing::rss::zero_share;
 use crate::sharing::{A2, Rss};
 
-/// Local wrapping matmul `a [rows,k] x b^T [m,k] -> [rows,m]` over `ring`.
+/// Local wrapping matmul `a [rows,k] x b^T [m,k] -> [rows,m]` over `ring`,
+/// parallelized over rows on `pool`. See [`mm_local_blocks`].
+pub fn mm_local(
+    ring: Ring,
+    a: &[u64],
+    b: &[u64],
+    rows: usize,
+    k: usize,
+    m: usize,
+    pool: &WorkerPool,
+) -> Vec<u64> {
+    mm_local_blocks(ring, a, b, 1, rows, k, m, pool)
+}
+
+/// Block-batched local wrapping matmul: `a` stacks `blocks` row blocks
+/// (`[blocks*rows, k]`), `b` stacks `blocks` operand matrices
+/// (`[blocks*m, k]`), and output block `i` is `a_i · b_iᵀ [rows, m]`.
+/// All `blocks * rows` output rows are one parallel axis on `pool` —
+/// this is what parallelizes the per-(batch, head) attention matmuls —
+/// and chunk outputs are reassembled in row order, so the result is
+/// identical for every pool size (DESIGN.md §Parallel runtime).
 ///
 /// Perf (EXPERIMENTS.md §Perf): for rings of <= 16 bits all arithmetic is
 /// done in wrapping `u16` — `(a·b mod 2^16)` summed `mod 2^16` equals the
 /// full product reduced `mod 2^16`, and the narrow lanes auto-vectorize
-/// (4x the elements per SIMD register vs u64).
-pub fn mm_local(ring: Ring, a: &[u64], b: &[u64], rows: usize, k: usize, m: usize, threads: usize) -> Vec<u64> {
+/// (4x the elements per SIMD register vs u64). The u16 conversion
+/// buffers live in the pool's scratch, reused across calls.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_local_blocks(
+    ring: Ring,
+    a: &[u64],
+    b: &[u64],
+    blocks: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    pool: &WorkerPool,
+) -> Vec<u64> {
+    debug_assert_eq!(a.len(), blocks * rows * k);
+    debug_assert_eq!(b.len(), blocks * m * k);
+    let nrows = blocks * rows;
     if ring.bits() <= 16 {
-        let a16: Vec<u16> = a.iter().map(|&v| v as u16).collect();
-        let b16: Vec<u16> = b.iter().map(|&v| v as u16).collect();
-        let outs = par_chunks(threads, rows, |lo, hi, _| {
-            let mut out = vec![0u64; (hi - lo) * m];
-            for r in lo..hi {
-                let ar = &a16[r * k..(r + 1) * k];
-                for o in 0..m {
-                    let br = &b16[o * k..(o + 1) * k];
-                    let mut acc = 0u16;
-                    for j in 0..k {
-                        acc = acc.wrapping_add(ar[j].wrapping_mul(br[j]));
+        return pool.with_u16_scratch(|a16, b16| {
+            a16.clear();
+            a16.extend(a.iter().map(|&v| v as u16));
+            b16.clear();
+            b16.extend(b.iter().map(|&v| v as u16));
+            let (a16, b16) = (&a16[..], &b16[..]);
+            let outs = pool.run_chunks(nrows, |lo, hi, _| {
+                let mut out = vec![0u64; (hi - lo) * m];
+                for r in lo..hi {
+                    let blk = r / rows;
+                    let ar = &a16[r * k..(r + 1) * k];
+                    for o in 0..m {
+                        let br = &b16[(blk * m + o) * k..(blk * m + o + 1) * k];
+                        let mut acc = 0u16;
+                        for j in 0..k {
+                            acc = acc.wrapping_add(ar[j].wrapping_mul(br[j]));
+                        }
+                        out[(r - lo) * m + o] = ring.reduce(acc as u64);
                     }
-                    out[(r - lo) * m + o] = ring.reduce(acc as u64);
                 }
-            }
-            out
+                out
+            });
+            outs.concat()
         });
-        return outs.concat();
     }
-    let outs = par_chunks(threads, rows, |lo, hi, _| {
+    let outs = pool.run_chunks(nrows, |lo, hi, _| {
         let mut out = vec![0u64; (hi - lo) * m];
         for r in lo..hi {
+            let blk = r / rows;
             let ar = &a[r * k..(r + 1) * k];
             for o in 0..m {
-                let br = &b[o * k..(o + 1) * k];
+                let br = &b[(blk * m + o) * k..(blk * m + o + 1) * k];
                 let mut acc = 0u64;
                 for j in 0..k {
                     acc = acc.wrapping_add(ar[j].wrapping_mul(br[j]));
@@ -61,17 +102,33 @@ pub fn mm_local(ring: Ring, a: &[u64], b: &[u64], rows: usize, k: usize, m: usiz
 /// Each party's local share of the product (paper's 3-term cross formula):
 /// `z_i = Σ x_{i-1} y_{i+1} + x_{i+1} y_{i-1} + x_{i+1} y_{i+1}`.
 /// Folded to two matmuls: `x_prev·y_next + x_next·(y_prev + y_next)`.
-fn local_cross_mm(ctx: &PartyCtx, x: &Rss, w: &Rss, rows: usize, k: usize, m: usize) -> Vec<u64> {
+/// Block-batched like [`mm_local_blocks`], with the operand sum and the
+/// final add parallelized on the party's pool as well.
+fn local_cross_mm_blocks(
+    ctx: &PartyCtx,
+    x: &Rss,
+    w: &Rss,
+    blocks: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+) -> Vec<u64> {
     let ring = x.ring;
-    let w_sum: Vec<u64> = w
-        .prev
-        .iter()
-        .zip(&w.next)
-        .map(|(&a, &b)| ring.add(a, b))
-        .collect();
-    let t1 = mm_local(ring, &x.prev, &w.next, rows, k, m, ctx.threads);
-    let t2 = mm_local(ring, &x.next, &w_sum, rows, k, m, ctx.threads);
-    (0..rows * m).map(|i| ring.add(t1[i], t2[i])).collect()
+    let pool = ctx.pool();
+    let mut w_sum = vec![0u64; w.next.len()];
+    pool.run_mut(&mut w_sum, k, |base, part| {
+        for (i, v) in part.iter_mut().enumerate() {
+            *v = ring.add(w.prev[base + i], w.next[base + i]);
+        }
+    });
+    let mut z = mm_local_blocks(ring, &x.prev, &w.next, blocks, rows, k, m, pool);
+    let t2 = mm_local_blocks(ring, &x.next, &w_sum, blocks, rows, k, m, pool);
+    pool.run_mut(&mut z, m, |base, part| {
+        for (i, v) in part.iter_mut().enumerate() {
+            *v = ring.add(*v, t2[base + i]);
+        }
+    });
+    z
 }
 
 /// Alg. 3: RSS matmul + high-bit truncation. `x` is `[rows,k]`, `w` is
@@ -125,12 +182,10 @@ pub fn rss_matmul_full_seq(
     debug_assert_eq!(x.len(), batch * rows * k);
     debug_assert_eq!(w.len(), batch * m * k);
     let n = batch * rows * m;
-    let mut z = Vec::with_capacity(n);
-    for b in 0..batch {
-        let xb = x.slice(b * rows * k, (b + 1) * rows * k);
-        let wb = w.slice(b * m * k, (b + 1) * m * k);
-        z.extend(local_cross_mm(ctx, &xb, &wb, rows, k, m));
-    }
+    // All batch blocks go through ONE block-batched local matmul, so the
+    // worker pool sees batch*rows rows as a single parallel axis instead
+    // of batch serial passes over rows.
+    let mut z = local_cross_mm_blocks(ctx, x, w, batch, rows, k, m);
     let alpha = zero_share(ctx, ring, n);
     for (v, a) in z.iter_mut().zip(&alpha) {
         *v = ring.add(*v, *a);
@@ -173,7 +228,7 @@ pub fn rss_matmul_trc_multi(
     for w in ws {
         debug_assert_eq!(w.ring, ring);
         debug_assert_eq!(w.len(), m * k);
-        z.extend(local_cross_mm(ctx, x, w, rows, k, m));
+        z.extend(local_cross_mm_blocks(ctx, x, w, 1, rows, k, m));
     }
     let alpha = zero_share(ctx, ring, n);
     for (v, a) in z.iter_mut().zip(&alpha) {
@@ -288,11 +343,35 @@ mod tests {
         // 2x3 * (2x3)^T -> 2x2
         let a = enc(R16, &[1, 2, 3, -1, 0, 2]);
         let b = enc(R16, &[2, 2, 2, 1, -1, 1]);
-        let out = mm_local(R16, &a, &b, 2, 3, 2, 1);
+        let out = mm_local(R16, &a, &b, 2, 3, 2, &crate::core::pool::WorkerPool::new(1));
         assert_eq!(
             out.iter().map(|&v| R16.decode(v)).collect::<Vec<_>>(),
             vec![12, 2, 2, 1]
         );
+    }
+
+    #[test]
+    fn block_batched_mm_local_matches_per_block_for_every_pool_size() {
+        use crate::core::pool::WorkerPool;
+        let (blocks, rows, k, m) = (3usize, 4usize, 5usize, 2usize);
+        for ring in [R16, R32] {
+            let a: Vec<u64> =
+                (0..blocks * rows * k).map(|i| ring.encode(i as i64 % 9 - 4)).collect();
+            let b: Vec<u64> =
+                (0..blocks * m * k).map(|i| ring.encode(i as i64 % 7 - 3)).collect();
+            let serial = WorkerPool::new(1);
+            let mut want = Vec::new();
+            for blk in 0..blocks {
+                let ab = &a[blk * rows * k..(blk + 1) * rows * k];
+                let bb = &b[blk * m * k..(blk + 1) * m * k];
+                want.extend(mm_local(ring, ab, bb, rows, k, m, &serial));
+            }
+            for threads in [1usize, 2, 4, 8] {
+                let pool = WorkerPool::new(threads);
+                let got = mm_local_blocks(ring, &a, &b, blocks, rows, k, m, &pool);
+                assert_eq!(got, want, "ring {ring:?} threads {threads}");
+            }
+        }
     }
 
     #[test]

@@ -263,28 +263,37 @@ impl ProducerRef<'_> {
     }
 
     /// P0: draw all randomness and compute the correction fields (in
-    /// [`field_specs`] order) WITHOUT sending them. Draw order is
-    /// identical to the historical inline producers — bulk pairwise
-    /// vectors first, per-element own-PRG masks inside the loops
-    /// (EXPERIMENTS.md §Perf) — so tapes stay bit-for-bit reproducible.
+    /// [`field_specs`] order) WITHOUT sending them. Per-stream draw order
+    /// and byte counts are identical to the historical inline producers —
+    /// bulk pairwise vectors first, then the own-PRG masks — with every
+    /// bulk draw split across the party's worker pool by keystream
+    /// position (`Prg::ring_vec_par`), so tapes stay bit-for-bit
+    /// reproducible for every thread count (DESIGN.md §Parallel runtime,
+    /// EXPERIMENTS.md §Perf).
     fn p0_fields(&self, ctx: &PartyCtx) -> Vec<Vec<u64>> {
         let mut own = ctx.prep_own_prg();
         let mut pair = ctx.prep_pair_prg(P1);
+        let pool = ctx.pool();
         match self {
             ProducerRef::Lut { t, n } => {
                 let n = *n;
                 let size = t.size();
                 let (inr, outr) = (t.in_ring, t.out_ring);
-                let mut corr = pair.ring_vec(outr, n * size);
-                let mut dcorr = pair.ring_vec(inr, n);
-                for i in 0..n {
-                    let delta = own.ring_elem(inr);
-                    let base = i * size;
-                    for j in 0..size {
-                        let shifted = t.entries[(j + delta as usize) % size];
-                        corr[base + j] = outr.sub(shifted, corr[base + j]);
+                let mut corr = pair.ring_vec_par(pool, outr, n * size);
+                let mut dcorr = pair.ring_vec_par(pool, inr, n);
+                // Position-addressed equivalent of drawing Δ_i inside the
+                // shift loop: same own-stream bytes, bulk + parallel.
+                let deltas = own.ring_elems_par(pool, inr, n);
+                pool.run_mut(&mut corr, size, |base, part| {
+                    for (e, row) in part.chunks_mut(size).enumerate() {
+                        let delta = deltas[base / size + e] as usize;
+                        for (j, c) in row.iter_mut().enumerate() {
+                            *c = outr.sub(t.entries[(j + delta) % size], *c);
+                        }
                     }
-                    dcorr[i] = inr.sub(delta, dcorr[i]);
+                });
+                for i in 0..n {
+                    dcorr[i] = inr.sub(deltas[i], dcorr[i]);
                 }
                 vec![corr, dcorr]
             }
@@ -294,28 +303,31 @@ impl ProducerRef<'_> {
                 let (sx, sy) = (bx.size(), by.size());
                 let size = sx * sy;
                 // one Δ' per group; bulk randomness draws (EXPERIMENTS.md §Perf)
-                let dys: Vec<u64> = (0..groups).map(|_| own.ring_elem(by)).collect();
+                let dys = own.ring_elems_par(pool, by, groups);
                 let per_group = n / groups;
-                let mut corr = pair.ring_vec(outr, n * size);
-                let mut dxc = pair.ring_vec(bx, n);
-                let mut dyc = pair.ring_vec(by, groups);
-                for g in 0..groups {
-                    let dy = dys[g] as usize;
-                    for e in 0..per_group {
-                        let i = g * per_group + e;
-                        let dx = own.ring_elem(bx);
-                        let base = i * size;
+                let mut corr = pair.ring_vec_par(pool, outr, n * size);
+                let mut dxc = pair.ring_vec_par(pool, bx, n);
+                let mut dyc = pair.ring_vec_par(pool, by, groups);
+                let dxs = own.ring_elems_par(pool, bx, n);
+                pool.run_mut(&mut corr, size, |base, part| {
+                    for (e, row) in part.chunks_mut(size).enumerate() {
+                        let i = base / size + e;
+                        let dx = dxs[i];
+                        let dy = dys[i / per_group] as usize;
                         for u in 0..sx {
                             // inner index shift: precompute the dy-rotated row
                             let src_row = (bx.add(u as u64, dx) as usize) * sy;
                             for v in 0..sy {
                                 let src = src_row + ((v + dy) & (sy - 1));
-                                corr[base + u * sy + v] =
-                                    outr.sub(t.entries[src], corr[base + u * sy + v]);
+                                row[u * sy + v] = outr.sub(t.entries[src], row[u * sy + v]);
                             }
                         }
-                        dxc[i] = bx.sub(dx, dxc[i]);
                     }
+                });
+                for i in 0..n {
+                    dxc[i] = bx.sub(dxs[i], dxc[i]);
+                }
+                for g in 0..groups {
                     dyc[g] = by.sub(dys[g], dyc[g]);
                 }
                 vec![corr, dxc, dyc]
@@ -325,27 +337,29 @@ impl ProducerRef<'_> {
                 let t0 = ts[0];
                 let (sx, sy) = (t0.x_ring.size(), t0.y_ring.size());
                 let size = sx * sy;
-                let dxv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.x_ring)).collect();
-                let dyv: Vec<u64> = (0..n).map(|_| own.ring_elem(t0.y_ring)).collect();
+                let dxv = own.ring_elems_par(pool, t0.x_ring, n);
+                let dyv = own.ring_elems_par(pool, t0.y_ring, n);
                 let mut fields = Vec::with_capacity(ts.len() + 2);
                 for t in ts.iter() {
-                    let mut corr = pair.ring_vec(t.out_ring, n * size);
-                    for i in 0..n {
-                        let (dx, dy) = (dxv[i] as usize, dyv[i] as usize);
-                        let base = i * size;
-                        for u in 0..sx {
-                            let src_row = ((u + dx) & (sx - 1)) * sy;
-                            for v in 0..sy {
-                                let src = src_row + ((v + dy) & (sy - 1));
-                                corr[base + u * sy + v] =
-                                    t.out_ring.sub(t.entries[src], corr[base + u * sy + v]);
+                    let mut corr = pair.ring_vec_par(pool, t.out_ring, n * size);
+                    pool.run_mut(&mut corr, size, |base, part| {
+                        for (e, row) in part.chunks_mut(size).enumerate() {
+                            let i = base / size + e;
+                            let (dx, dy) = (dxv[i] as usize, dyv[i] as usize);
+                            for u in 0..sx {
+                                let src_row = ((u + dx) & (sx - 1)) * sy;
+                                for v in 0..sy {
+                                    let src = src_row + ((v + dy) & (sy - 1));
+                                    row[u * sy + v] =
+                                        t.out_ring.sub(t.entries[src], row[u * sy + v]);
+                                }
                             }
                         }
-                    }
+                    });
                     fields.push(corr);
                 }
-                let mut dxc = pair.ring_vec(t0.x_ring, n);
-                let mut dyc = pair.ring_vec(t0.y_ring, n);
+                let mut dxc = pair.ring_vec_par(pool, t0.x_ring, n);
+                let mut dyc = pair.ring_vec_par(pool, t0.y_ring, n);
                 for i in 0..n {
                     dxc[i] = t0.x_ring.sub(dxv[i], dxc[i]);
                     dyc[i] = t0.y_ring.sub(dyv[i], dyc[i]);
@@ -361,9 +375,10 @@ impl ProducerRef<'_> {
     fn p1_corr(&self, ctx: &PartyCtx) -> Correlation {
         let shape = self.shape();
         let mut pair = ctx.prep_pair_prg(P0);
+        let pool = ctx.pool();
         let mut fields: Vec<Vec<u64>> = field_specs(&shape)
             .into_iter()
-            .map(|(ring, len)| pair.ring_vec(ring, len))
+            .map(|(ring, len)| pair.ring_vec_par(pool, ring, len))
             .collect();
         // P1's fields follow the same layout P2 receives.
         let dy = if shape.kind == CorrKind::Lut1 { Vec::new() } else { fields.pop().expect("dy") };
@@ -617,7 +632,8 @@ pub fn run_plan_deduped(ctx: &PartyCtx, plan: &[PlanOp]) -> (Vec<Correlation>, D
                         for ((ring, _), vals) in
                             field_specs(&shapes[i]).into_iter().zip(&fields_per_op[i])
                         {
-                            payload.extend(crate::core::pack::pack(ring, vals));
+                            let pool = Some(ctx.pool());
+                            payload.extend(crate::core::pack::pack_pooled(pool, ring, vals));
                         }
                     }
                     ctx.net.send_bytes(P2, phase, payload);
@@ -634,7 +650,8 @@ pub fn run_plan_deduped(ctx: &PartyCtx, plan: &[PlanOp]) -> (Vec<Correlation>, D
                         let mut fields = Vec::new();
                         for (ring, len) in field_specs(&shapes[i]) {
                             let plen = ring.packed_len(len);
-                            fields.push(crate::core::pack::unpack(
+                            fields.push(crate::core::pack::unpack_pooled(
+                                Some(ctx.pool()),
                                 ring,
                                 &bytes[off..off + plen],
                                 len,

@@ -66,16 +66,23 @@ pub fn softmax_rows(
     // 1. row maxima
     let xo = max_rows(ctx, x, rows, n, strat);
 
-    // 2. d = x - xo (local, broadcast per row)
+    // 2. d = x - xo (local, broadcast per row; pool-chunked over rows —
+    // DESIGN.md §Parallel runtime)
     let d = if x.vals.is_empty() {
         A2::empty(R4, rows * n)
     } else {
-        let mut vals = Vec::with_capacity(rows * n);
-        for r in 0..rows {
-            for j in 0..n {
-                vals.push(R4.sub(x.vals[r * n + j], xo.vals[r]));
-            }
-        }
+        let vals = ctx
+            .pool()
+            .run_chunks(rows, |lo, hi, _| {
+                let mut part = Vec::with_capacity((hi - lo) * n);
+                for r in lo..hi {
+                    for j in 0..n {
+                        part.push(R4.sub(x.vals[r * n + j], xo.vals[r]));
+                    }
+                }
+                part
+            })
+            .concat();
         A2 { ring: R4, vals, len: rows * n }
     };
 
@@ -86,15 +93,20 @@ pub fn softmax_rows(
     let big = if e.vals.is_empty() {
         A2::empty(e.ring, rows)
     } else {
-        let vals = (0..rows)
-            .map(|r| {
-                let mut acc = 0u64;
-                for j in 0..n {
-                    acc = e.ring.add(acc, e.vals[r * n + j]);
-                }
-                acc
+        let vals = ctx
+            .pool()
+            .run_chunks(rows, |lo, hi, _| {
+                (lo..hi)
+                    .map(|r| {
+                        let mut acc = 0u64;
+                        for j in 0..n {
+                            acc = e.ring.add(acc, e.vals[r * n + j]);
+                        }
+                        acc
+                    })
+                    .collect::<Vec<u64>>()
             })
-            .collect();
+            .concat();
         A2 { ring: e.ring, vals, len: rows }
     };
 

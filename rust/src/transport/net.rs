@@ -13,7 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::core::error::{Error, Result};
-use crate::core::pack::{pack, unpack};
+use crate::core::pack::{pack_pooled, unpack_pooled};
+use crate::core::pool::WorkerPool;
 use crate::core::ring::Ring;
 
 use super::metrics::{Metrics, MetricsSnapshot, Phase};
@@ -117,6 +118,10 @@ pub struct Net {
     /// receiver sleeps RTT/2 plus bytes/bandwidth per message, matching
     /// the `NetParams::modeled_net_time` decomposition.
     pub realtime: Option<NetParams>,
+    /// Worker pool for bulk pack/unpack of large frames (attached by
+    /// `PartyCtx`; `None` = serial). Payload bytes are identical either
+    /// way, so meters never depend on the pool size.
+    pool: Option<WorkerPool>,
 }
 
 impl Net {
@@ -127,7 +132,13 @@ impl Net {
         metrics: Arc<Metrics>,
         realtime: Option<NetParams>,
     ) -> Net {
-        Net { id, chans, metrics, realtime }
+        Net { id, chans, metrics, realtime, pool: None }
+    }
+
+    /// Attach a worker pool for bulk pack/unpack (called by `PartyCtx`
+    /// during setup; a `Net` used directly stays serial).
+    pub fn attach_pool(&mut self, pool: WorkerPool) {
+        self.pool = Some(pool);
     }
 
     /// Establish a backend and wrap it: `Net::over(Box::new(transport),
@@ -196,7 +207,7 @@ impl Net {
 
     /// Send `vals` bit-tightly packed for `ring` (see `core::pack`).
     pub fn send_ring(&self, to: usize, phase: Phase, ring: Ring, vals: &[u64]) {
-        self.send_bytes(to, phase, pack(ring, vals));
+        self.send_bytes(to, phase, pack_pooled(self.pool.as_ref(), ring, vals));
     }
 
     /// Blocking receive of `n` ring elements (one protocol round),
@@ -214,7 +225,7 @@ impl Net {
                 ring.bits(),
             )));
         }
-        Ok(unpack(ring, &bytes, n))
+        Ok(unpack_pooled(self.pool.as_ref(), ring, &bytes, n))
     }
 
     /// Blocking receive of `n` ring elements (one protocol round);

@@ -28,20 +28,22 @@ fn run_bert(
     batch: usize,
     warm: bool,
 ) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
-    run_bert_opt(strat, batch, warm, OptConfig::none())
+    run_bert_opt(strat, batch, warm, OptConfig::none(), 1)
 }
 
-/// [`run_bert`] with an explicit optimizer pipeline.
+/// [`run_bert`] with an explicit optimizer pipeline and worker-pool size.
 fn run_bert_opt(
     strat: MaxStrategy,
     batch: usize,
     warm: bool,
     opt: OptConfig,
+    threads: usize,
 ) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
     let cfg = BertConfig::tiny();
     let (w, _) = prepared_model(cfg);
     let inputs = prepared_inputs(&cfg, batch);
-    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+    let scfg = SessionCfg { threads, ..SessionCfg::default() };
+    let (outs, snap) = run_3pc(scfg, move |ctx| {
         let per = LayerQuantConfig::uniform(&cfg, strat);
         let weights = if ctx.id == P0 { Some(&w) } else { None };
         let g = bert_graph_opt(ctx, &cfg, &per, weights, opt);
@@ -62,20 +64,22 @@ fn run_bert_opt(
 
 /// One MLP window (the non-BERT builder) on a fresh session.
 fn run_mlp(batch: usize, warm: bool) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
-    run_mlp_opt(batch, warm, OptConfig::none())
+    run_mlp_opt(batch, warm, OptConfig::none(), 1)
 }
 
-/// [`run_mlp`] with an explicit optimizer pipeline.
+/// [`run_mlp`] with an explicit optimizer pipeline and worker-pool size.
 fn run_mlp_opt(
     batch: usize,
     warm: bool,
     opt: OptConfig,
+    threads: usize,
 ) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
     let mcfg = MlpConfig::tiny();
     let inputs: Vec<Vec<i64>> = (0..batch)
         .map(|b| (0..mcfg.d_in).map(|i| ((i + 3 * b) % 15) as i64 - 7).collect())
         .collect();
-    let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
+    let scfg = SessionCfg { threads, ..SessionCfg::default() };
+    let (outs, snap) = run_3pc(scfg, move |ctx| {
         let mw = if ctx.id == P0 { Some(MlpWeights::synth(&mcfg, 7)) } else { None };
         let g = mlp_graph_opt(ctx, &mcfg, mw.as_ref(), opt);
         let plan_len = g.plan(batch).len();
@@ -227,8 +231,8 @@ fn opt_levels_stay_plan_consistent_for_every_builder() {
     let batch = 2usize;
     for opt in OPTS {
         let (cold_logits, cold, plan_len) =
-            run_bert_opt(MaxStrategy::Tournament, batch, false, opt);
-        let (warm_logits, warm, _) = run_bert_opt(MaxStrategy::Tournament, batch, true, opt);
+            run_bert_opt(MaxStrategy::Tournament, batch, false, opt, 1);
+        let (warm_logits, warm, _) = run_bert_opt(MaxStrategy::Tournament, batch, true, opt, 1);
         assert!(plan_len > 0);
         assert_eq!(cold.pool_misses(), plan_len as u64, "bert {opt:?}: cold misses");
         assert_eq!(warm.pool_hits(), plan_len as u64, "bert {opt:?}: warm hits");
@@ -240,8 +244,8 @@ fn opt_levels_stay_plan_consistent_for_every_builder() {
         let modeled: u64 = g.plan_entries(batch).iter().map(|e| e.bytes).sum();
         assert_eq!(cold.total_bytes(Phase::Offline), modeled, "bert {opt:?}: modeled bytes");
 
-        let (mcold_logits, mcold, mplan_len) = run_mlp_opt(batch, false, opt);
-        let (mwarm_logits, mwarm, _) = run_mlp_opt(batch, true, opt);
+        let (mcold_logits, mcold, mplan_len) = run_mlp_opt(batch, false, opt, 1);
+        let (mwarm_logits, mwarm, _) = run_mlp_opt(batch, true, opt, 1);
         assert!(mplan_len > 0);
         assert_eq!(mcold.pool_misses(), mplan_len as u64, "mlp {opt:?}: cold misses");
         assert_eq!(mwarm.pool_hits(), mplan_len as u64, "mlp {opt:?}: warm hits");
@@ -303,6 +307,46 @@ fn fingerprints_rekey_across_opt_levels_for_every_builder() {
     let mlp_fp = |opt: OptConfig| mlp_graph_dry_opt(&MlpConfig::tiny(), opt).fingerprint();
     assert_ne!(mlp_fp(OptConfig::none()), mlp_fp(OptConfig::o1()));
     assert_eq!(mlp_fp(OptConfig::none()), mlp_graph_dry(&MlpConfig::tiny()).fingerprint());
+}
+
+/// Deterministic meter fields must match exactly; `compute_ns` is the
+/// only field thread count may change.
+fn assert_meters_eq(got: &MetricsSnapshot, want: &MetricsSnapshot, what: &str) {
+    assert_eq!(got.bytes, want.bytes, "{what}: bytes");
+    assert_eq!(got.msgs, want.msgs, "{what}: msgs");
+    assert_eq!(got.rounds, want.rounds, "{what}: rounds");
+    assert_eq!(got.prep_hits, want.prep_hits, "{what}: prep hits");
+    assert_eq!(got.prep_misses, want.prep_misses, "{what}: prep misses");
+}
+
+/// Tentpole invariant of the parallel runtime
+/// (DESIGN.md §Parallel runtime): the worker-pool size changes
+/// wall-clock ONLY. For both
+/// builders × both opt levels × warm and cold tapes, the logits and
+/// every deterministic meter field (per-link/phase bytes, messages,
+/// rounds, prep hits/misses) are bit-identical across
+/// `threads ∈ {1, 2, 4, 8}`.
+#[test]
+fn thread_count_never_changes_outputs_or_meters() {
+    let batch = 1usize;
+    for opt in OPTS {
+        for warm in [false, true] {
+            let (want_logits, want, _) =
+                run_bert_opt(MaxStrategy::Tournament, batch, warm, opt, 1);
+            let (mwant_logits, mwant, _) = run_mlp_opt(batch, warm, opt, 1);
+            for threads in [2usize, 4, 8] {
+                let tag = format!("bert {opt:?} warm={warm} T={threads}");
+                let (logits, snap, _) =
+                    run_bert_opt(MaxStrategy::Tournament, batch, warm, opt, threads);
+                assert_eq!(logits, want_logits, "{tag}: logits");
+                assert_meters_eq(&snap, &want, &tag);
+                let mtag = format!("mlp {opt:?} warm={warm} T={threads}");
+                let (mlogits, msnap, _) = run_mlp_opt(batch, warm, opt, threads);
+                assert_eq!(mlogits, mwant_logits, "{mtag}: logits");
+                assert_meters_eq(&msnap, &mwant, &mtag);
+            }
+        }
+    }
 }
 
 /// Batch scaling is derived from shapes: the plan for B = 4 has the same

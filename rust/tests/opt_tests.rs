@@ -1,5 +1,6 @@
-//! Differential tests pinning the graph optimizer (DESIGN.md §Graph
-//! optimizer): over random secure graphs and the real builders, sealing
+//! Differential tests pinning the graph optimizer
+//! (DESIGN.md §Graph optimizer): over random secure graphs and the real
+//! builders, sealing
 //! with `--opt 1` must change ONLY message boundaries — logits and
 //! hidden shares stay bit-identical, metered online rounds drop (never
 //! rise), offline bytes are unchanged, and correlation dedup batches
@@ -196,6 +197,42 @@ fn deduped_plan_run_is_field_identical_and_batches_messages() {
         snap_b.max_rounds(Phase::Offline),
         snap_a.max_rounds(Phase::Offline)
     );
+}
+
+/// Offline tapes are thread-invariant: executing the same plan (plain
+/// AND deduped) under worker pools of 1, 2, 4 and 8 threads yields
+/// field-identical correlation tapes at every party and identical
+/// offline byte/message/round meters — the parallel PRG draws are
+/// position-addressed into the same keystream, so thread count never
+/// reaches the tape (DESIGN.md §Parallel runtime).
+#[test]
+fn offline_tape_is_bit_identical_across_thread_counts() {
+    let cfg = BertConfig::tiny();
+    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
+    let g = bert_graph_dry(&cfg, &per);
+    let run = |threads: usize, dedup: bool| {
+        let plan = g.plan(2);
+        let scfg = SessionCfg { threads, ..SessionCfg::default() };
+        run_3pc(scfg, move |ctx| {
+            if dedup {
+                run_plan_deduped(ctx, &plan).0
+            } else {
+                run_plan(ctx, &plan)
+            }
+        })
+    };
+    for dedup in [false, true] {
+        let (want, want_snap) = run(1, dedup);
+        for threads in [2usize, 4, 8] {
+            let (got, snap) = run(threads, dedup);
+            for p in 0..3 {
+                assert_eq!(got[p], want[p], "dedup={dedup} T={threads}: party {p} tape");
+            }
+            assert_eq!(snap.bytes, want_snap.bytes, "dedup={dedup} T={threads}: bytes");
+            assert_eq!(snap.msgs, want_snap.msgs, "dedup={dedup} T={threads}: msgs");
+            assert_eq!(snap.rounds, want_snap.rounds, "dedup={dedup} T={threads}: rounds");
+        }
+    }
 }
 
 /// Tapes never cross opt levels: the fingerprint (pool key) differs, a

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Sanity-gate the measured thread sweep in a bench JSON-lines file
+# (default BENCH_ci.json): with >= 2 cores available, the t=2 offline
+# wall must not exceed the t=1 offline wall — the worker pool has to
+# actually buy wall-clock on the offline path (DESIGN.md §Parallel
+# runtime). On a single-core machine the comparison is meaningless
+# (both runs time-slice one core), so the check logs why and skips.
+# CI runs this from `make bench-quick`; run locally as
+#   tools/check_thread_scaling.sh [BENCH_ci.json]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+file="${1:-BENCH_ci.json}"
+if [ ! -f "$file" ]; then
+  echo "check_thread_scaling: $file not found (run the threads bench with --json first)" >&2
+  exit 1
+fi
+
+cores=$(getconf _NPROCESSORS_ONLN 2>/dev/null || echo 1)
+if [ "$cores" -lt 2 ]; then
+  echo "check_thread_scaling: SKIP — only $cores core(s) online; t=2 vs t=1 wall" \
+       "comparison needs real parallelism"
+  exit 0
+fi
+
+wall_of() {
+  # Last record wins, matching how reruns append to the file.
+  grep "\"bench\":\"threads/t$1/offline\"" "$file" \
+    | tail -n 1 \
+    | sed -E 's/.*"wall_ms":([0-9.]+).*/\1/'
+}
+
+t1=$(wall_of 1)
+t2=$(wall_of 2)
+if [ -z "$t1" ] || [ -z "$t2" ]; then
+  echo "check_thread_scaling: missing threads/t{1,2}/offline rows in $file" >&2
+  exit 1
+fi
+
+echo "check_thread_scaling: offline wall t1=${t1}ms t2=${t2}ms ($cores cores)"
+if awk -v a="$t2" -v b="$t1" 'BEGIN { exit !(a <= b) }'; then
+  echo "check_thread_scaling: OK — t=2 is no slower than t=1"
+else
+  echo "check_thread_scaling: FAIL — t=2 offline wall ${t2}ms exceeds t=1 ${t1}ms" >&2
+  exit 1
+fi

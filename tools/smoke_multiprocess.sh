@@ -91,8 +91,11 @@ echo "OK: single remote client reproduced the in-process logits: $remote_logits"
 # ---- scenario 2: K=4 concurrent clients on a FRESH deployment ----
 # (fresh because loadgen --check replays the deployment's full window
 # history through an in-process session; a generous linger makes the
-# concurrent clients share windows deterministically.)
-spawn_deployment "$((PORT_BASE + 10))" --max-batch 8 --linger 1000
+# concurrent clients share windows deterministically. --threads 2 runs
+# every party on a 2-thread worker pool — loadgen's in-process replay
+# runs single-threaded, so --check also pins that pool size never
+# reaches the logits.)
+spawn_deployment "$((PORT_BASE + 10))" --max-batch 8 --linger 1000 --threads 2
 
 loadgen_out=$("$BIN" loadgen --clients 4 --requests 2 \
   --remote "$ADDR0,$ADDR1,$ADDR2" --check --halt)
