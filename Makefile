@@ -35,6 +35,7 @@ bench-quick:
 	cargo bench --bench batching -- --quick --json BENCH_ci.json
 	cargo bench --bench offline -- --quick --json BENCH_ci.json
 	cargo bench --bench threads -- --quick --json BENCH_ci.json
+	cargo bench --bench buckets -- --quick --json BENCH_ci.json
 	tools/check_thread_scaling.sh BENCH_ci.json
 	@echo "--- BENCH_ci.json"
 	@cat BENCH_ci.json
@@ -45,6 +46,7 @@ bench:
 	cargo bench --bench batching
 	cargo bench --bench offline
 	cargo bench --bench threads
+	cargo bench --bench buckets
 	cargo bench --bench table2
 	cargo bench --bench table3
 	cargo bench --bench table4

@@ -1,0 +1,95 @@
+//! Heterogeneous-workload sweep: one warm window per (task, bucket)
+//! key, the unit the multi-task sequencer schedules
+//! (DESIGN.md §Heterogeneous serving).
+//!
+//! For every task head (classify / ner / pair / embed) at two padded
+//! sequence-length buckets, a fresh session preps the bucket's tape and
+//! serves one window. The recorded rows pin the per-bucket cost
+//! trajectory (`buckets/{task}/s{seq}`): warm windows must spend ZERO
+//! request-path offline bytes regardless of task or bucket, online
+//! rounds are constant per bucket (not per request mix), and shorter
+//! buckets are strictly cheaper in online bytes — the saving that
+//! bucketing buys over padding everything to the longest sequence.
+//!
+//!   cargo bench --bench buckets
+//!   cargo bench --bench buckets -- --quick --json BENCH_ci.json   (CI smoke)
+
+use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, BenchOpts, Table};
+use ppq_bert::coordinator::Session;
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::GraphSpec;
+use ppq_bert::party::SessionCfg;
+use ppq_bert::transport::{NetParams, Phase};
+
+const TASKS: [TaskKind; 4] =
+    [TaskKind::Classify, TaskKind::Ner, TaskKind::Pair, TaskKind::Embed];
+
+fn main() {
+    let opts = BenchOpts::from_env_args();
+    let cfg = BertConfig::tiny();
+    let buckets: [usize; 2] = [cfg.seq_len / 2, cfg.seq_len];
+    let batch = if opts.quick { 1 } else { 4 };
+
+    let mut t = Table::new(&[
+        "task",
+        "bucket",
+        "warm offline B",
+        "online rounds",
+        "online KiB",
+        "LAN window",
+        "WAN window",
+    ]);
+
+    for task in TASKS {
+        let mut bytes_by_bucket = Vec::new();
+        for &bucket in &buckets {
+            // Fresh session per (task, bucket) key: exactly what the
+            // deployment's sequencer keeps warm independently per key.
+            let (w, _) = prepared_model(cfg);
+            let spec = GraphSpec::new(task, cfg).with_seq(bucket).with_batch(batch);
+            let bucket_cfg = spec.effective();
+            let sess = Session::start_spec(spec, w, SessionCfg::default());
+            sess.prep(batch);
+            let pre = sess.snapshot();
+            let t0 = std::time::Instant::now();
+            let outs = sess.infer_batch(&prepared_inputs(&bucket_cfg, batch));
+            let wall = t0.elapsed();
+            assert_eq!(outs.len(), batch);
+            let mut d = sess.snapshot();
+            d.saturating_sub_assign(&pre);
+            sess.shutdown();
+
+            let offline = d.total_bytes(Phase::Offline);
+            assert_eq!(
+                offline, 0,
+                "{}/s{bucket}: a prepped bucket must serve warm",
+                task.as_str()
+            );
+            let online = d.total_bytes(Phase::Online);
+            let rounds = d.max_rounds(Phase::Online);
+            bytes_by_bucket.push(online);
+            opts.record(&format!("buckets/{}/s{bucket}", task.as_str()), wall, online, rounds);
+            t.row(vec![
+                task.as_str().to_string(),
+                format!("s{bucket}"),
+                offline.to_string(),
+                rounds.to_string(),
+                format!("{:.1}", online as f64 / 1024.0),
+                fmt_dur(NetParams::LAN.modeled_phase_time(&d, Phase::Online)),
+                fmt_dur(NetParams::WAN.modeled_phase_time(&d, Phase::Online)),
+            ]);
+        }
+        assert!(
+            bytes_by_bucket[0] < bytes_by_bucket[1],
+            "{}: the short bucket must be strictly cheaper online ({} !< {})",
+            task.as_str(),
+            bytes_by_bucket[0],
+            bytes_by_bucket[1]
+        );
+    }
+    t.print(
+        "per-(task, bucket) warm windows: zero request-path offline bytes at every key; \
+         short buckets cost strictly fewer online bytes than padding to the full sequence \
+         (BERT-tiny; window = batch)",
+    );
+}

@@ -28,11 +28,10 @@ use std::time::{Duration, Instant};
 use ppq_bert::bench_harness::{fmt_dur, prepared_inputs, prepared_model, BenchOpts, Table};
 use ppq_bert::coordinator::session::{prep_into_pool, serve_window};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
-use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::config::{BertConfig, TaskKind};
 use ppq_bert::model::passes::OptConfig;
-use ppq_bert::model::secure::{bert_graph, bert_graph_dry, bert_graph_dry_opt, bert_graph_opt};
+use ppq_bert::model::secure::GraphSpec;
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
-use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::protocols::prep::{dedup_groups, field_count};
 use ppq_bert::protocols::tape_store::{TapePool, TapeStore};
 use ppq_bert::transport::{build_mesh, Metrics, MetricsSnapshot, NetParams, Phase};
@@ -116,7 +115,7 @@ fn main() {
     // correction bytes (no session needed — the dry build carries no
     // shares but all shapes).
     let plan_batch = if opts.quick { 1 } else { 4 };
-    let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament));
+    let g = GraphSpec::new(TaskKind::Classify, cfg).dry();
     let mut per_node: Vec<(String, usize, u64)> = Vec::new();
     for e in g.plan_entries(plan_batch) {
         let merged = match per_node.last_mut() {
@@ -178,8 +177,7 @@ fn main() {
         seed.push(std::thread::spawn(move || {
             let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
             let w = if id == P0 { Some(&*weights) } else { None };
-            let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-            let model = bert_graph(&ctx, &cfg, &per_layer, w);
+            let model = GraphSpec::new(TaskKind::Classify, cfg).build(&ctx, w);
             let mut pool = TapePool::new();
             prep_into_pool(&ctx, &model, &mut pool, 1);
             let store = TapeStore::new(dir, id, session_label).expect("open tape store");
@@ -207,8 +205,7 @@ fn main() {
             assert!(warnings.is_empty(), "tape reload warnings: {warnings:?}");
             let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
             let w = if id == P0 { Some(&*weights) } else { None };
-            let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-            let model = bert_graph(&ctx, &cfg, &per_layer, w);
+            let model = GraphSpec::new(TaskKind::Classify, cfg).build(&ctx, w);
             let inputs = if id == P1 { Some(vec![input]) } else { None };
             let logits = serve_window(&ctx, &model, &mut pool, 1, inputs.as_deref());
             ctx.flush_timer();
@@ -261,8 +258,7 @@ fn main() {
             parties.push(std::thread::spawn(move || {
                 let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
                 let w = if id == P0 { Some(&*weights) } else { None };
-                let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-                let model = bert_graph_opt(&ctx, &cfg, &per_layer, w, opt);
+                let model = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).build(&ctx, w);
                 let mut pool = TapePool::new();
                 prep_into_pool(&ctx, &model, &mut pool, 1);
                 ctx.flush_timer();
@@ -273,8 +269,7 @@ fn main() {
         }
         let wall = start.elapsed();
         let d = metrics.snapshot();
-        let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-        let dry = bert_graph_dry_opt(&cfg, &per_layer, opt);
+        let dry = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).dry();
         let plan = dry.plan(1);
         let msgs: usize = if level == 0 {
             plan.iter().map(|op| field_count(&op.shape())).sum()

@@ -19,10 +19,9 @@ use ppq_bert::bench_harness::{
     fmt_dur, prepared_inputs, prepared_model, thread_scale, BenchOpts, Table,
 };
 use ppq_bert::coordinator::session::{prep_into_pool, serve_window};
-use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
-use ppq_bert::model::secure::bert_graph;
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::GraphSpec;
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
-use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::protocols::tape_store::TapePool;
 use ppq_bert::transport::{build_mesh, Metrics, Phase};
 
@@ -64,8 +63,7 @@ fn main() {
             parties.push(std::thread::spawn(move || {
                 let ctx = PartyCtx::new(id, net, scfg.master_seed, scfg.threads);
                 let w = if id == P0 { Some(&*weights) } else { None };
-                let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-                let model = bert_graph(&ctx, &cfg, &per, w);
+                let model = GraphSpec::new(TaskKind::Classify, cfg).build(&ctx, w);
                 let mut pool = TapePool::new();
                 barrier.wait(); // offline timer starts
                 prep_into_pool(&ctx, &model, &mut pool, batch);

@@ -14,11 +14,10 @@ use ppq_bert::bench_harness::{
     fmt_dur, prepared_inputs, prepared_model, time_once, BenchOpts, Table,
 };
 use ppq_bert::core::ring::R16;
-use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::config::{BertConfig, TaskKind};
 use ppq_bert::model::passes::OptConfig;
-use ppq_bert::model::secure::{bert_graph_default, bert_graph_opt, secure_infer, secure_infer_batch};
+use ppq_bert::model::secure::{secure_infer, secure_infer_batch, GraphSpec};
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
-use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::transport::{build_mesh, loopback_mesh, Metrics, Net, Phase};
 
 /// One ping-pong exchange of `n` 16-bit ring elements between P1 and P2.
@@ -51,7 +50,8 @@ fn infer_over(nets: [Net; 3]) {
             let (weights, x) = (&weights, &x);
             s.spawn(move || {
                 let ctx = PartyCtx::new(net.id, net, SessionCfg::default().master_seed, 1);
-                let model = bert_graph_default(&ctx, &cfg, (ctx.id == P0).then_some(weights));
+                let model = GraphSpec::new(TaskKind::Classify, cfg)
+                    .build(&ctx, (ctx.id == P0).then_some(weights));
                 let xin = (ctx.id == P1).then(|| x.clone());
                 let _ = secure_infer(&ctx, &model, xin.as_deref());
             });
@@ -69,9 +69,8 @@ fn infer_batch_over(nets: [Net; 3], batch: usize, opt: OptConfig) {
             let (weights, inputs) = (&weights, &inputs);
             s.spawn(move || {
                 let ctx = PartyCtx::new(net.id, net, SessionCfg::default().master_seed, 1);
-                let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
                 let w = (ctx.id == P0).then_some(weights);
-                let model = bert_graph_opt(&ctx, &cfg, &per, w, opt);
+                let model = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).build(&ctx, w);
                 let xin = (ctx.id == P1).then(|| inputs.clone());
                 let _ = secure_infer_batch(&ctx, &model, batch, xin.as_deref());
             });

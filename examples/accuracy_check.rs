@@ -7,8 +7,8 @@
 //! Requires `make artifacts`. Run:
 //! `cargo run --release --example accuracy_check`
 
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer, GraphSpec};
 use ppq_bert::model::weights::{read_i32_file, Weights};
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::runtime::native;
@@ -50,7 +50,8 @@ fn main() {
         x.clone(),
     );
     let (mpc_outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-        let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&wc) } else { None });
+        let m = GraphSpec::new(TaskKind::Classify, cfg)
+            .build(ctx, if ctx.id == P0 { Some(&wc) } else { None });
         let (logits, h) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
         (logits, reveal2(ctx, &h))
     });

@@ -4,8 +4,8 @@
 //! Run: `cargo run --release --example quickstart`
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer, GraphSpec};
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::runtime::native;
 use ppq_bert::transport::{NetParams, Phase};
@@ -29,7 +29,8 @@ fn main() {
     let t0 = std::time::Instant::now();
     let xin = x.clone();
     let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-        let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&weights) } else { None });
+        let m = GraphSpec::new(TaskKind::Classify, cfg)
+            .build(ctx, if ctx.id == P0 { Some(&weights) } else { None });
         let (logits, _) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
         logits
     });

@@ -14,8 +14,8 @@
 use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer, GraphSpec};
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::transport::{NetParams, Phase};
 
@@ -28,7 +28,8 @@ fn main() {
         let (w, xin) = (clone_w(&weights, cfg), x.clone());
         let t0 = std::time::Instant::now();
         let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg)
+                .build(ctx, if ctx.id == P0 { Some(&w) } else { None });
             secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
         });
         (snap, t0.elapsed())
@@ -45,7 +46,8 @@ fn main() {
         let scfg = SessionCfg { realtime: Some(demo_wan), ..SessionCfg::default() };
         let t0 = std::time::Instant::now();
         let (_, snap) = run_3pc(scfg, move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg)
+                .build(ctx, if ctx.id == P0 { Some(&w) } else { None });
             secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
         });
         (snap, t0.elapsed())

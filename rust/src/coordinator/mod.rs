@@ -15,7 +15,9 @@ pub mod server;
 pub mod session;
 
 pub use config_file::ConfigFile;
-pub use remote::{Completed, PartyOpts, RemoteClient, ServeOpts};
+pub use remote::{
+    Completed, InferenceRequest, InferenceResponse, PartyOpts, RemoteClient, ServeOpts, TaskOutput,
+};
 pub use router::Router;
 pub use server::{Coordinator, InferenceResult, ServerConfig};
 pub use session::Session;

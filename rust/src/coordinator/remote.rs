@@ -51,6 +51,7 @@
 //! ([`wire::WindowReport`]), and merges the parties' local meters into
 //! exactly the shared in-process meter.
 
+use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::io::BufReader;
@@ -64,10 +65,10 @@ use std::time::{Duration, Instant};
 
 use crate::core::error::{bail, Context, Result};
 use crate::core::prg::Prg;
-use crate::model::config::{BertConfig, LayerQuantConfig};
+use crate::model::config::{BertConfig, TaskKind};
 use crate::model::graph::SecureGraph;
 use crate::model::passes::OptConfig;
-use crate::model::secure::bert_graph_opt;
+use crate::model::secure::GraphSpec;
 use crate::model::weights::{synth_input, Weights};
 use crate::party::{PartyCtx, SessionCfg, P0, P1, P2};
 use crate::protocols::max::MaxStrategy;
@@ -87,7 +88,7 @@ const FAULT_DISARMED: u64 = u64::MAX;
 /// mirror of `ServerConfig`'s batching knobs; all three parties should
 /// run the same values, but only P1's — the sequencer's — are live for
 /// admission and window cutting).
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 pub struct ServeOpts {
     /// Requests per batch window: the batcher drains up to this many
     /// queued requests into one batched MPC pass.
@@ -101,9 +102,18 @@ pub struct ServeOpts {
     /// Per-connection cap on admitted-but-unfinished requests.
     pub max_inflight: usize,
     /// Ahead-of-time correlation tapes (for `max_batch`-sized windows)
-    /// to keep pooled; produced while the queue is idle. 0 disables
-    /// preprocessing.
+    /// to keep pooled; produced while the queue is idle and split
+    /// across the served (task, bucket) keys by observed admission
+    /// pressure. 0 disables preprocessing.
     pub prep_depth: usize,
+    /// Task kinds this deployment serves (order/duplicates ignored;
+    /// empty means classification only). Every party must run the same
+    /// set — the topology is baked into the wire session id.
+    pub tasks: Vec<TaskKind>,
+    /// Padded sequence-length buckets (order/duplicates ignored; empty
+    /// means one bucket at the model's full `seq_len`). A request of
+    /// true length L is zero-padded into the smallest bucket ≥ L.
+    pub buckets: Vec<usize>,
 }
 
 impl Default for ServeOpts {
@@ -114,8 +124,60 @@ impl Default for ServeOpts {
             queue_cap: 256,
             max_inflight: 64,
             prep_depth: 0,
+            tasks: Vec::new(),
+            buckets: Vec::new(),
         }
     }
+}
+
+/// The deployment's served task kinds: [`ServeOpts::tasks`] sorted and
+/// deduped; a deployment that names none serves classification.
+fn served_tasks(serve: &ServeOpts) -> Vec<TaskKind> {
+    let mut tasks = serve.tasks.clone();
+    if tasks.is_empty() {
+        tasks.push(TaskKind::Classify);
+    }
+    tasks.sort_unstable();
+    tasks.dedup();
+    tasks
+}
+
+/// The deployment's padded seq-length buckets, ascending:
+/// [`ServeOpts::buckets`] sorted and deduped; empty means one bucket at
+/// the model's full `seq_len`.
+fn served_buckets(serve: &ServeOpts, cfg: &BertConfig) -> Vec<usize> {
+    let mut buckets = serve.buckets.clone();
+    if buckets.is_empty() {
+        buckets.push(cfg.seq_len);
+    }
+    buckets.sort_unstable();
+    buckets.dedup();
+    buckets
+}
+
+/// Every (task, bucket) graph this deployment serves, in the
+/// deterministic order all three parties must build them in at Setup:
+/// the weight-sharing (`Π_share`) protocol order is part of
+/// bit-compatibility, so the parties walk this exact sequence.
+pub fn served_keys(serve: &ServeOpts, cfg: &BertConfig) -> Vec<(TaskKind, usize)> {
+    let tasks = served_tasks(serve);
+    let buckets = served_buckets(serve, cfg);
+    let mut keys = Vec::with_capacity(tasks.len() * buckets.len());
+    for &t in &tasks {
+        for &b in &buckets {
+            keys.push((t, b));
+        }
+    }
+    keys
+}
+
+/// Zero-pad a request's embedded rows from its true length to its
+/// bucket length. The padding is PUBLIC and deterministic — every
+/// party and every replay produces the same padded window, which is
+/// what keeps per-bucket logits bit-identical to isolated runs.
+pub fn pad_to_bucket(mut input: Vec<i64>, bucket: usize, d_model: usize) -> Vec<i64> {
+    input.resize(bucket * d_model, 0);
+    input
 }
 
 /// Configuration of one party process.
@@ -195,11 +257,41 @@ pub fn default_addrs() -> [String; 3] {
 /// seed still drives the protocol PRGs; only the handshake id is
 /// shape-bound.
 pub fn session_id(master_seed: [u8; 16], cfg: &BertConfig) -> [u8; 16] {
-    let label = format!(
-        "wire-session-s{}-d{}-l{}-h{}-f{}-c{}",
-        cfg.seq_len, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.n_classes
+    deployment_session_id(master_seed, cfg, &[(TaskKind::Classify, cfg.seq_len)])
+}
+
+/// [`session_id`] of a heterogeneous deployment: the label additionally
+/// fixes the full served (task, bucket) set, so a party or client
+/// configured for a different serving topology fails at connect time —
+/// a topology-diverged party would otherwise mesh, then desynchronize
+/// during Setup (the parties build their graph sets in lockstep).
+pub fn deployment_session_id(
+    master_seed: [u8; 16],
+    cfg: &BertConfig,
+    keys: &[(TaskKind, usize)],
+) -> [u8; 16] {
+    derive16(master_seed, &format!("wire-session-{}", topology_label(cfg, keys)))
+}
+
+/// The human-readable deployment topology: model shape + every served
+/// (task, bucket). Sequence length appears ONLY in the per-key
+/// suffixes (the default key is `(classify, cfg.seq_len)`, so the
+/// legacy single-bucket id still binds `--seq`): with explicit
+/// buckets, a client's base `--seq` is irrelevant to the topology and
+/// must not perturb the id.
+fn topology_label(cfg: &BertConfig, keys: &[(TaskKind, usize)]) -> String {
+    let mut label = format!(
+        "d{}-l{}-h{}-f{}-c{}",
+        cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.n_classes
     );
-    let mut prg = Prg::derive(master_seed, &label);
+    for &(t, b) in keys {
+        label.push_str(&format!("-{}.s{}", t.as_str(), b));
+    }
+    label
+}
+
+fn derive16(master_seed: [u8; 16], label: &str) -> [u8; 16] {
+    let mut prg = Prg::derive(master_seed, label);
     let mut id = [0u8; 16];
     for b in id.iter_mut() {
         *b = prg.next_u8();
@@ -229,16 +321,17 @@ pub fn seed_from_label(label: &str) -> [u8; 16] {
 /// claimed control connection; a client that merely knows the session
 /// id cannot hijack or desynchronize the serving control plane.
 pub fn control_token(master_seed: [u8; 16], cfg: &BertConfig) -> [u8; 16] {
-    let label = format!(
-        "control-plane-s{}-d{}-l{}-h{}-f{}-c{}",
-        cfg.seq_len, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.n_classes
-    );
-    let mut prg = Prg::derive(master_seed, &label);
-    let mut t = [0u8; 16];
-    for b in t.iter_mut() {
-        *b = prg.next_u8();
-    }
-    t
+    deployment_control_token(master_seed, cfg, &[(TaskKind::Classify, cfg.seq_len)])
+}
+
+/// [`control_token`] of a heterogeneous deployment (topology-bound like
+/// [`deployment_session_id`]).
+pub fn deployment_control_token(
+    master_seed: [u8; 16],
+    cfg: &BertConfig,
+    keys: &[(TaskKind, usize)],
+) -> [u8; 16] {
+    derive16(master_seed, &format!("control-plane-{}", topology_label(cfg, keys)))
 }
 
 /// A client connection's send half, shared between its reader thread
@@ -262,10 +355,13 @@ struct ConnState {
     next_seq: u32,
 }
 
-/// An admitted request waiting for a window slot.
+/// An admitted request waiting for a window slot: already resolved to
+/// its (task, bucket) and zero-padded to the bucket length.
 struct Pending {
     id: u64,
     conn: u32,
+    task: TaskKind,
+    bucket: usize,
     input: Vec<i64>,
 }
 
@@ -304,8 +400,17 @@ struct Shared {
     admission_cv: Condvar,
     opts: ServeOpts,
     id: usize,
-    /// Values per request (`seq_len * d_model`) this deployment serves.
-    input_len: usize,
+    /// Values per embedded token row: a request of true length L
+    /// carries `L * d_model` values.
+    d_model: usize,
+    /// Task kinds this deployment serves (sorted).
+    tasks: Vec<TaskKind>,
+    /// Padded seq-length buckets, ascending; admission picks the
+    /// smallest bucket that fits a request's true length.
+    buckets: Vec<usize>,
+    /// Per-(task, bucket) admission counts — the observed bucket
+    /// pressure that drives how the prep depth is split across keys.
+    pressure: Mutex<HashMap<(TaskKind, usize), u64>>,
     /// Current recovery epoch: acked in every handshake (so rejoining
     /// peers adopt it) and reported in [`ServeStats`] as the number of
     /// completed recoveries.
@@ -326,7 +431,14 @@ struct Shared {
 /// refused request is simply never scheduled). The sequence number is
 /// consumed by every well-formed submission, refused or not, so the
 /// client's counter and the connection's stay aligned across refusals.
-fn admit(shared: &Shared, conn: u32, seq: u32, input: Vec<i64>) -> Option<String> {
+fn admit(
+    shared: &Shared,
+    conn: u32,
+    seq: u32,
+    task: u8,
+    true_seq: u32,
+    input: Vec<i64>,
+) -> Option<String> {
     let mut adm = shared.admission.lock().expect("admission poisoned");
     let queue_len = adm.queue.len();
     let draining = adm.draining;
@@ -341,13 +453,41 @@ fn admit(shared: &Shared, conn: u32, seq: u32, input: Vec<i64>) -> Option<String
     if draining {
         return Some("deployment is draining".to_string());
     }
-    if input.len() != shared.input_len {
+    let task = match TaskKind::from_u8(task) {
+        Ok(t) => t,
+        Err(e) => return Some(e),
+    };
+    if !shared.tasks.contains(&task) {
+        let served: Vec<&str> = shared.tasks.iter().map(|t| t.as_str()).collect();
         return Some(format!(
-            "request shaped for {} values, this deployment serves {}",
-            input.len(),
-            shared.input_len
+            "task {} not served by this deployment (serves: {})",
+            task.as_str(),
+            served.join(", ")
         ));
     }
+    // The payload determines the request's true length; a nonzero
+    // claimed length must agree with it (clients send 0 to mean
+    // "derive from the payload shape").
+    let d = shared.d_model;
+    if input.is_empty() || input.len() % d != 0 {
+        return Some(format!(
+            "request carries {} values, not a multiple of d_model={d}",
+            input.len()
+        ));
+    }
+    let len = input.len() / d;
+    if true_seq != 0 && true_seq as usize != len {
+        return Some(format!(
+            "request claims sequence length {true_seq} but carries {len} embedded rows"
+        ));
+    }
+    let Some(bucket) = shared.buckets.iter().copied().find(|&b| b >= len) else {
+        let bs: Vec<String> = shared.buckets.iter().map(|b| format!("s{b}")).collect();
+        return Some(format!(
+            "sequence length {len} exceeds every served bucket ({})",
+            bs.join(", ")
+        ));
+    };
     if queue_len >= shared.opts.queue_cap {
         return Some(format!("admission queue full ({queue_len} queued)"));
     }
@@ -358,7 +498,14 @@ fn admit(shared: &Shared, conn: u32, seq: u32, input: Vec<i64>) -> Option<String
         ));
     }
     st.inflight += 1;
-    adm.queue.push_back(Pending { id: wire::request_id(conn, seq), conn, input });
+    let input = pad_to_bucket(input, bucket, d);
+    adm.queue.push_back(Pending { id: wire::request_id(conn, seq), conn, task, bucket, input });
+    *shared
+        .pressure
+        .lock()
+        .expect("pressure poisoned")
+        .entry((task, bucket))
+        .or_insert(0) += 1;
     shared.admission_cv.notify_all();
     None
 }
@@ -415,9 +562,9 @@ fn client_reader(shared: Arc<Shared>, conn: u32, stream: TcpStream) {
         };
         match tag {
             Tag::InferRequest if shared.id == P1 => match wire::decode_infer_request(&payload) {
-                Ok((seq, input)) => {
+                Ok((seq, task, true_seq, input)) => {
                     let id = wire::request_id(conn, seq);
-                    if let Some(reason) = admit(&shared, conn, seq, input) {
+                    if let Some(reason) = admit(&shared, conn, seq, task, true_seq, input) {
                         shared.counters.refused.fetch_add(1, Ordering::Relaxed);
                         if send_frame(&writer, Tag::Refused, &wire::encode_refused(id, &reason))
                             .is_err()
@@ -588,13 +735,36 @@ fn accept_loop(
 /// they survive rebuilds.
 struct PartyState {
     ctx: PartyCtx,
-    model: SecureGraph,
+    /// Every served graph, keyed by (task, bucket). A `BTreeMap` so all
+    /// parties iterate it in the same deterministic order.
+    models: BTreeMap<(TaskKind, usize), SecureGraph>,
+}
+
+impl PartyState {
+    /// Resolve the served graph a control directive names. The control
+    /// plane is authenticated, so an unknown (task, bucket) means the
+    /// parties' serving topologies diverged — a deployment
+    /// misconfiguration, fatal.
+    fn model_for(&self, task: u8, seq: u32) -> Result<&SecureGraph> {
+        let task = match TaskKind::from_u8(task) {
+            Ok(t) => t,
+            Err(e) => bail!("control directive: {e}"),
+        };
+        self.models.get(&(task, seq as usize)).with_context(|| {
+            format!(
+                "control directive names unserved graph (task {}, bucket s{seq})",
+                task.as_str()
+            )
+        })
+    }
 }
 
 /// Build a party's protocol state over established channels: fresh
-/// PRGs, then the (deterministic) Setup pass. Used both at startup and
-/// on every recovery rebuild — re-running Setup re-derives the same
-/// graph instance bit-for-bit, which is what keeps persisted tapes
+/// PRGs, then one (deterministic) Setup pass per served (task, bucket)
+/// graph, in sorted key order at every party — the weight-sharing
+/// protocol order is part of bit-compatibility. Used both at startup
+/// and on every recovery rebuild — re-running Setup re-derives the same
+/// graph instances bit-for-bit, which is what keeps persisted tapes
 /// valid across restarts.
 fn build_state(
     opts: &PartyOpts,
@@ -607,10 +777,16 @@ fn build_state(
     // with in-process sessions); only the handshake uses the shape-bound
     // session id.
     let ctx = PartyCtx::new(opts.id, net, opts.scfg.master_seed, opts.scfg.threads);
-    let per_layer = LayerQuantConfig::uniform(&opts.cfg, opts.max_strategy);
-    let model = bert_graph_opt(&ctx, &opts.cfg, &per_layer, weights, opts.opt);
+    let mut models = BTreeMap::new();
+    for (task, bucket) in served_keys(&opts.serve, &opts.cfg) {
+        let spec = GraphSpec::new(task, opts.cfg)
+            .with_seq(bucket)
+            .with_strategy(opts.max_strategy)
+            .with_opt(opts.opt);
+        models.insert((task, bucket), spec.build(&ctx, weights));
+    }
     ctx.flush_timer();
-    PartyState { ctx, model }
+    PartyState { ctx, models }
 }
 
 /// Advance the boundary record past one completed event and snapshot
@@ -816,7 +992,8 @@ fn try_rejoin(
     party_rx: &Receiver<(u8, TcpStream, u64)>,
 ) -> Result<bool> {
     slot.take();
-    let session = session_id(opts.scfg.master_seed, &opts.cfg);
+    let session =
+        deployment_session_id(opts.scfg.master_seed, &opts.cfg, &served_keys(&opts.serve, &opts.cfg));
     let target = shared.epoch.load(Ordering::SeqCst);
     let per_attempt = opts.reconnect_backoff.max(Duration::from_millis(200));
     let metrics = Arc::clone(&shared.metrics);
@@ -1013,8 +1190,14 @@ pub fn arm_fault(addr: &str, session: [u8; 16], window: u64, timeout: Duration) 
 /// drain completes. Blocks for the lifetime of the deployment.
 pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
     assert!(opts.id < 3, "party id out of range");
-    let session = session_id(opts.scfg.master_seed, &opts.cfg);
-    let coord_token = control_token(opts.scfg.master_seed, &opts.cfg);
+    let keys = served_keys(&opts.serve, &opts.cfg);
+    for &(t, b) in &keys {
+        if let Err(e) = opts.cfg.validate_bucket(t, b) {
+            bail!("invalid serving topology: {e}");
+        }
+    }
+    let session = deployment_session_id(opts.scfg.master_seed, &opts.cfg, &keys);
+    let coord_token = deployment_control_token(opts.scfg.master_seed, &opts.cfg, &keys);
     let store = match &opts.tape_dir {
         Some(dir) => Some(TapeStore::new(dir.clone(), opts.id, session)?),
         None => None,
@@ -1049,9 +1232,12 @@ pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
         metrics: Arc::clone(&metrics),
         admission: Mutex::new(AdmissionQueue::default()),
         admission_cv: Condvar::new(),
-        opts: opts.serve,
+        opts: opts.serve.clone(),
         id: opts.id,
-        input_len: opts.cfg.seq_len * opts.cfg.d_model,
+        d_model: opts.cfg.d_model,
+        tasks: served_tasks(&opts.serve),
+        buckets: served_buckets(&opts.serve, &opts.cfg),
+        pressure: Mutex::new(HashMap::new()),
         epoch: AtomicU64::new(loaded.map(|s| s.epoch).unwrap_or(0).max(epoch)),
         tapes: AtomicU64::new(corr_pool.values().map(|q| q.len() as u64).sum()),
         fault_window: AtomicU64::new(opts.fault_window.unwrap_or(FAULT_DISARMED)),
@@ -1180,8 +1366,9 @@ fn direct(links: &mut [TcpStream], tag: Tag, payload: &[u8]) -> Result<()> {
 /// handshake on each; used at startup and after every recovery (the
 /// links are always rebuilt fresh).
 fn dial_control_links(opts: &PartyOpts) -> Result<Vec<TcpStream>> {
-    let session = session_id(opts.scfg.master_seed, &opts.cfg);
-    let token = control_token(opts.scfg.master_seed, &opts.cfg);
+    let keys = served_keys(&opts.serve, &opts.cfg);
+    let session = deployment_session_id(opts.scfg.master_seed, &opts.cfg, &keys);
+    let token = deployment_control_token(opts.scfg.master_seed, &opts.cfg, &keys);
     let mut links = Vec::new();
     for p in [P0, P2] {
         let addr = opts.peers[p]
@@ -1210,19 +1397,22 @@ enum Action {
 }
 
 /// Decide the sequencer's next step. The first queued request opens a
-/// linger deadline; the window cuts at `max_batch` requests, at the
-/// deadline, or when a drain is requested — whichever comes first.
-/// While the queue is idle the pool is topped up, and once a drain was
-/// requested and the queue has emptied the deployment exits.
-fn next_action(shared: &Shared, pooled_full: usize) -> Action {
-    let sopts = shared.opts;
+/// linger deadline; a window cuts at `max_batch` requests, at the
+/// deadline, or when a drain is requested — whichever comes first —
+/// and contains ONLY requests sharing the oldest queued request's
+/// (task, bucket): windows never mix graphs. Later-keyed requests stay
+/// queued, FIFO order preserved, and are cut on the next pass. While
+/// the queue is idle the pool is topped up (`want_prep`), and once a
+/// drain was requested and the queue has emptied the deployment exits.
+fn next_action(shared: &Shared, want_prep: bool) -> Action {
+    let sopts = &shared.opts;
     let mut adm = shared.admission.lock().expect("admission poisoned");
     loop {
         if adm.queue.is_empty() {
             if adm.draining {
                 return Action::Exit;
             }
-            if pooled_full < sopts.prep_depth {
+            if want_prep {
                 return Action::Prep;
             }
             let (guard, _) = shared
@@ -1248,12 +1438,82 @@ fn next_action(shared: &Shared, pooled_full: usize) -> Action {
                 break;
             }
         }
-        let n = adm.queue.len().min(sopts.max_batch);
-        if n == 0 {
+        if adm.queue.is_empty() {
             continue;
         }
-        return Action::Serve(adm.queue.drain(..n).collect());
+        let key = {
+            let head = adm.queue.front().expect("queue non-empty");
+            (head.task, head.bucket)
+        };
+        let mut items = Vec::new();
+        let mut rest = VecDeque::with_capacity(adm.queue.len());
+        for p in adm.queue.drain(..) {
+            if items.len() < sopts.max_batch && (p.task, p.bucket) == key {
+                items.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        adm.queue = rest;
+        return Action::Serve(items);
     }
+}
+
+/// Target pooled tapes per (task, bucket): the configured prep depth
+/// split across the served keys in proportion to observed admission
+/// pressure — uniform before any traffic — with every key keeping at
+/// least one tape (when prep is enabled at all), so a quiet bucket's
+/// first window still serves warm. The per-key minimum means the
+/// targets can sum past `prep_depth`; it bounds pooled tapes at
+/// `prep_depth + #keys`, all off the request path.
+fn prep_targets(shared: &Shared) -> BTreeMap<(TaskKind, usize), usize> {
+    let mut keys = Vec::new();
+    for &t in &shared.tasks {
+        for &b in &shared.buckets {
+            keys.push((t, b));
+        }
+    }
+    let depth = shared.opts.prep_depth;
+    let mut targets = BTreeMap::new();
+    if depth == 0 {
+        for k in keys {
+            targets.insert(k, 0);
+        }
+        return targets;
+    }
+    let pressure = shared.pressure.lock().expect("pressure poisoned");
+    let total: u64 = keys.iter().map(|k| pressure.get(k).copied().unwrap_or(0)).sum();
+    let n = keys.len().max(1);
+    for k in keys {
+        let share = if total == 0 {
+            depth / n
+        } else {
+            (depth as u64 * pressure.get(&k).copied().unwrap_or(0) / total) as usize
+        };
+        targets.insert(k, share.max(1));
+    }
+    targets
+}
+
+/// The next (task, bucket) the sequencer should prep, if any pool is
+/// below its target: the largest deficit wins, ties broken by key
+/// order. `None` when every key is at target. Only P1 ever chooses —
+/// followers obey its broadcast directives — so the pressure-driven
+/// choice cannot desynchronize the parties.
+fn choose_prep_key(state: &PartyState, shared: &Shared, pool: &CorrPool) -> Option<(TaskKind, usize)> {
+    let batch = shared.opts.max_batch;
+    let mut best: Option<((TaskKind, usize), usize)> = None;
+    for (key, target) in prep_targets(shared) {
+        let Some(model) = state.models.get(&key) else { continue };
+        let have = pool.get(&(model.fingerprint(), batch)).map(|q| q.len()).unwrap_or(0);
+        if have < target {
+            let deficit = target - have;
+            if best.map(|(_, d)| deficit > d).unwrap_or(true) {
+                best = Some((key, deficit));
+            }
+        }
+    }
+    best.map(|(k, _)| k)
 }
 
 /// This party's [`WindowReport`] for a window it just measured.
@@ -1263,6 +1523,8 @@ fn window_report(
     pos: usize,
     batch: usize,
     wall_ns: u64,
+    task: u8,
+    seq: u32,
 ) -> WindowReport {
     WindowReport {
         wid,
@@ -1272,6 +1534,8 @@ fn window_report(
         online_bytes: delta.total_bytes(Phase::Online),
         offline_bytes: delta.total_bytes(Phase::Offline),
         wall_ns,
+        task,
+        seq,
     }
 }
 
@@ -1290,9 +1554,10 @@ fn reply(shared: &Shared, conn: u32, tag: Tag, payload: &[u8]) {
     }
 }
 
-/// Run one pool top-up at P1 (broadcast the directive, generate
-/// locally), with abort handling: a mid-prep peer death rolls into
-/// recovery. `false` means recovery failed and the party should drain.
+/// Run one pool top-up at P1 for the (task, bucket) graph `key`
+/// (broadcast the directive, generate locally), with abort handling: a
+/// mid-prep peer death rolls into recovery. `false` means recovery
+/// failed and the party should drain.
 #[allow(clippy::too_many_arguments)]
 fn sequencer_prep(
     slot: &mut Option<PartyState>,
@@ -1305,14 +1570,21 @@ fn sequencer_prep(
     party_rx: &Receiver<(u8, TcpStream, u64)>,
     links: &mut Vec<TcpStream>,
     last_window: &mut Option<Vec<Pending>>,
+    key: (TaskKind, usize),
 ) -> bool {
     let batch = shared.opts.max_batch;
+    let (task, bucket) = key;
     let res = {
         let st = slot.as_ref().expect("state present");
+        let model = &st.models[&key];
         catch_unwind(AssertUnwindSafe(|| -> Result<()> {
-            direct(links.as_mut_slice(), Tag::Prep, &wire::encode_prep(batch as u32))?;
+            direct(
+                links.as_mut_slice(),
+                Tag::Prep,
+                &wire::encode_prep(task.as_u8(), bucket as u32, batch as u32),
+            )?;
             st.ctx.reset_timer();
-            prep_into_pool(&st.ctx, &st.model, pool, batch);
+            prep_into_pool(&st.ctx, model, pool, batch);
             st.ctx.flush_timer();
             Ok(())
         }))
@@ -1321,8 +1593,8 @@ fn sequencer_prep(
         Ok(Ok(())) => {
             shared.counters.preps.fetch_add(1, Ordering::Relaxed);
             let st = slot.as_ref().expect("state present");
-            let key = (st.model.fingerprint(), batch);
-            advance_boundary(&st.ctx, recov, Some(key));
+            let pool_key = (st.models[&key].fingerprint(), batch);
+            advance_boundary(&st.ctx, recov, Some(pool_key));
             persist(store, pool, recov, shared);
             true
         }
@@ -1357,37 +1629,35 @@ fn serve_as_sequencer(
     party_rx: &Receiver<(u8, TcpStream, u64)>,
 ) -> Result<()> {
     let mut links = dial_control_links(opts)?;
-    let sopts = shared.opts;
     let mut next_wid = 0u64;
     let mut last_window: Option<Vec<Pending>> = None;
-    // Prefill so even the first window is served warm — skipped to the
-    // extent restored tapes already cover the target depth.
+    // Prefill every served (task, bucket) key up to its target (uniform
+    // split before any traffic) so even first windows serve warm —
+    // skipped to the extent restored tapes already cover the depths.
     loop {
         let key = {
             let st = slot.as_ref().expect("state present");
-            (st.model.fingerprint(), sopts.max_batch)
+            choose_prep_key(st, shared, pool)
         };
-        if pool.get(&key).map(|q| q.len()).unwrap_or(0) >= sopts.prep_depth {
-            break;
-        }
+        let Some(key) = key else { break };
         if !sequencer_prep(
             slot, pool, recov, opts, shared, store, weights, party_rx, &mut links,
-            &mut last_window,
+            &mut last_window, key,
         ) {
             return Ok(());
         }
     }
     loop {
-        let key = {
+        let prep_key = {
             let st = slot.as_ref().expect("state present");
-            (st.model.fingerprint(), sopts.max_batch)
+            choose_prep_key(st, shared, pool)
         };
-        let pooled_full = pool.get(&key).map(|q| q.len()).unwrap_or(0);
-        match next_action(shared, pooled_full) {
+        match next_action(shared, prep_key.is_some()) {
             Action::Prep => {
+                let key = prep_key.expect("prep action implies a key below target");
                 if !sequencer_prep(
                     slot, pool, recov, opts, shared, store, weights, party_rx, &mut links,
-                    &mut last_window,
+                    &mut last_window, key,
                 ) {
                     return Ok(());
                 }
@@ -1402,10 +1672,15 @@ fn serve_as_sequencer(
                 }
                 let routes: Vec<(u64, u32)> = items.iter().map(|p| (p.id, p.conn)).collect();
                 let inputs: Vec<Vec<i64>> = items.iter().map(|p| p.input.clone()).collect();
+                // next_action cuts windows per key, so every item shares
+                // the first one's (task, bucket).
+                let (task, bucket) = (items[0].task, items[0].bucket);
                 let res = {
                     let st = slot.as_ref().expect("state present");
                     catch_unwind(AssertUnwindSafe(|| {
-                        serve_one_window(st, shared, &mut links, pool, wid, &routes, &inputs)
+                        serve_one_window(
+                            st, shared, &mut links, pool, wid, task, bucket, &routes, &inputs,
+                        )
                     }))
                 };
                 match res {
@@ -1448,36 +1723,46 @@ fn serve_as_sequencer(
     }
 }
 
-/// Evaluate one window at P1: broadcast the manifest, run the batched
-/// pass (consuming a pooled tape if one matches), fan the logits and
+/// Evaluate one window at P1: broadcast the manifest (task + bucket +
+/// request ids), run the batched pass over that key's graph (consuming
+/// a pooled tape if one matches), fan the task-shaped outputs and
 /// per-request window reports back out to the owning connections, and
 /// release the requests' in-flight budget.
+#[allow(clippy::too_many_arguments)]
 fn serve_one_window(
     state: &PartyState,
     shared: &Shared,
     links: &mut [TcpStream],
     corr_pool: &mut CorrPool,
     wid: u64,
+    task: TaskKind,
+    bucket: usize,
     routes: &[(u64, u32)],
     inputs: &[Vec<i64>],
 ) -> Result<()> {
     let batch = routes.len();
     let ids: Vec<u64> = routes.iter().map(|&(id, _)| id).collect();
-    direct(links, Tag::Manifest, &wire::encode_manifest(wid, &ids))?;
+    direct(
+        links,
+        Tag::Manifest,
+        &wire::encode_manifest(wid, task.as_u8(), bucket as u32, &ids),
+    )?;
 
+    let model = &state.models[&(task, bucket)];
     let pre = shared.metrics.snapshot();
     state.ctx.reset_timer();
     let t0 = Instant::now();
-    let logits = serve_window(&state.ctx, &state.model, corr_pool, batch, Some(inputs));
+    let outputs = serve_window(&state.ctx, model, corr_pool, batch, Some(inputs));
     state.ctx.flush_timer();
     let wall_ns = t0.elapsed().as_nanos() as u64;
     record_latency(shared, wall_ns);
     let mut delta = shared.metrics.snapshot();
     delta.saturating_sub_assign(&pre);
 
-    for (pos, (&(id, conn), lg)) in routes.iter().zip(&logits).enumerate() {
-        reply(shared, conn, Tag::Logits, &wire::encode_logits(id, lg));
-        let report = window_report(&delta, wid, pos, batch, wall_ns);
+    for (pos, (&(id, conn), out)) in routes.iter().zip(&outputs).enumerate() {
+        reply(shared, conn, Tag::Logits, &wire::encode_logits(id, out));
+        let report =
+            window_report(&delta, wid, pos, batch, wall_ns, task.as_u8(), bucket as u32);
         reply(shared, conn, Tag::Done, &wire::encode_done(id, &report));
     }
     {
@@ -1493,15 +1778,26 @@ fn serve_one_window(
     Ok(())
 }
 
-/// Evaluate one manifested window at P0/P2 and ack completions to
-/// bound client connections.
-fn run_manifest(state: &PartyState, pool: &mut CorrPool, shared: &Shared, wid: u64, ids: &[u64]) {
+/// Evaluate one manifested window at P0/P2 — over the graph the
+/// manifest's (task, bucket) names — and ack completions to bound
+/// client connections.
+#[allow(clippy::too_many_arguments)]
+fn run_manifest(
+    ctx: &PartyCtx,
+    model: &SecureGraph,
+    pool: &mut CorrPool,
+    shared: &Shared,
+    wid: u64,
+    task: u8,
+    seq: u32,
+    ids: &[u64],
+) {
     let batch = ids.len();
     let pre = shared.metrics.snapshot();
-    state.ctx.reset_timer();
+    ctx.reset_timer();
     let t0 = Instant::now();
-    let _ = serve_window(&state.ctx, &state.model, pool, batch, None);
-    state.ctx.flush_timer();
+    let _ = serve_window(ctx, model, pool, batch, None);
+    ctx.flush_timer();
     let wall_ns = t0.elapsed().as_nanos() as u64;
     record_latency(shared, wall_ns);
     let mut delta = shared.metrics.snapshot();
@@ -1512,7 +1808,7 @@ fn run_manifest(state: &PartyState, pool: &mut CorrPool, shared: &Shared, wid: u
             binds.get(&wire::conn_of(id)).copied()
         };
         let Some(local) = local else { continue };
-        let report = window_report(&delta, wid, pos, batch, wall_ns);
+        let report = window_report(&delta, wid, pos, batch, wall_ns, task, seq);
         reply(shared, local, Tag::Done, &wire::encode_done(id, &report));
     }
     shared.counters.windows.fetch_add(1, Ordering::Relaxed);
@@ -1596,7 +1892,7 @@ fn serve_from_manifests(
                 recover_or_drain!(target);
             }
             Tag::Manifest => {
-                let (wid, ids) = wire::decode_manifest(&payload)?;
+                let (wid, task, seq, ids) = wire::decode_manifest(&payload)?;
                 if shared.fault_window.load(Ordering::SeqCst) == wid {
                     // Fault injection: die exactly as if kill -9'd at
                     // this window's manifest.
@@ -1604,7 +1900,10 @@ fn serve_from_manifests(
                 }
                 let res = {
                     let st = slot.as_ref().expect("state present");
-                    catch_unwind(AssertUnwindSafe(|| run_manifest(st, pool, shared, wid, &ids)))
+                    let model = st.model_for(task, seq)?;
+                    catch_unwind(AssertUnwindSafe(|| {
+                        run_manifest(&st.ctx, model, pool, shared, wid, task, seq, &ids)
+                    }))
                 };
                 match res {
                     Ok(()) => {
@@ -1622,21 +1921,24 @@ fn serve_from_manifests(
                 }
             }
             Tag::Prep => {
-                let batch = wire::decode_prep(&payload)? as usize;
-                let res = {
+                let (task, seq, batch) = wire::decode_prep(&payload)?;
+                let batch = batch as usize;
+                let (fp, res) = {
                     let st = slot.as_ref().expect("state present");
-                    catch_unwind(AssertUnwindSafe(|| {
+                    let model = st.model_for(task, seq)?;
+                    let fp = model.fingerprint();
+                    let res = catch_unwind(AssertUnwindSafe(|| {
                         st.ctx.reset_timer();
-                        prep_into_pool(&st.ctx, &st.model, pool, batch);
+                        prep_into_pool(&st.ctx, model, pool, batch);
                         st.ctx.flush_timer();
-                    }))
+                    }));
+                    (fp, res)
                 };
                 match res {
                     Ok(()) => {
                         shared.counters.preps.fetch_add(1, Ordering::Relaxed);
                         let st = slot.as_ref().expect("state present");
-                        let key = (st.model.fingerprint(), batch);
-                        advance_boundary(&st.ctx, recov, Some(key));
+                        advance_boundary(&st.ctx, recov, Some((fp, batch)));
                         persist(store, pool, recov, shared);
                     }
                     Err(_) => {
@@ -1717,13 +2019,14 @@ impl PartyConn {
     }
 }
 
-/// One served request: P1's revealed logits plus each party's window
+/// One served request: P1's revealed output plus each party's window
 /// report for the window the request rode in.
 #[derive(Clone, Debug)]
 pub struct Completed {
     /// The request id [`RemoteClient::submit`] returned.
     pub id: u64,
-    /// Revealed class logits.
+    /// The revealed task-shaped output values (class logits, per-token
+    /// logits, or the pooled hidden row — see [`TaskOutput`]).
     pub logits: Vec<i64>,
     /// Per-party window reports, indexed by party id.
     pub reports: [WindowReport; 3],
@@ -1734,6 +2037,16 @@ impl Completed {
     /// window this request rode in.
     pub fn batch(&self) -> usize {
         self.reports[P1].batch as usize
+    }
+
+    /// The wire task byte of the window this request rode in.
+    pub fn task(&self) -> u8 {
+        self.reports[P1].task
+    }
+
+    /// The padded bucket length the window was served at.
+    pub fn bucket(&self) -> usize {
+        self.reports[P1].seq as usize
     }
 
     /// The deployment-wide window id (P1 cut order).
@@ -1769,6 +2082,62 @@ impl Completed {
     pub fn amortized_online_bytes(&self) -> u64 {
         self.window_online_bytes() / (self.reports[P1].batch.max(1) as u64)
     }
+}
+
+/// One typed request to a (possibly heterogeneous) deployment: the
+/// task kind, the TRUE token count — before bucket padding; the
+/// sequencer pads to the smallest served bucket ≥ `seq` — and the
+/// client-side embedded rows (`seq * d_model` values; the embedding
+/// table is public and applied by the data owner, as everywhere).
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    /// Which task head should evaluate this request.
+    pub task: TaskKind,
+    /// True token count, before bucket padding.
+    pub seq: usize,
+    /// Embedded rows, `seq * d_model` quantized values.
+    pub tokens: Vec<i64>,
+}
+
+impl InferenceRequest {
+    /// A typed request; `seq` is the TRUE length, `tokens` its rows.
+    pub fn new(task: TaskKind, seq: usize, tokens: Vec<i64>) -> InferenceRequest {
+        InferenceRequest { task, seq, tokens }
+    }
+}
+
+/// A task-shaped revealed output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TaskOutput {
+    /// `classify` / `pair`: one row of class logits.
+    ClassLogits(Vec<i64>),
+    /// `ner`: per-token class logits, `bucket * n_classes` values
+    /// row-major (rows for padding positions included at the tail).
+    TokenLogits(Vec<i64>),
+    /// `embed`: the revealed pooled hidden row (`d_model` 4-bit
+    /// values).
+    Hidden(Vec<i64>),
+}
+
+impl TaskOutput {
+    /// The raw revealed values, whatever the shape.
+    pub fn values(&self) -> &[i64] {
+        match self {
+            TaskOutput::ClassLogits(v) | TaskOutput::TokenLogits(v) | TaskOutput::Hidden(v) => v,
+        }
+    }
+}
+
+/// One completed typed request: the task-shaped output plus the raw
+/// completion (window reports, ids).
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    /// The task the deployment served this request as.
+    pub task: TaskKind,
+    /// The revealed output, shaped per the task.
+    pub output: TaskOutput,
+    /// The raw completion (window reports, ids, amortization stats).
+    pub completed: Completed,
 }
 
 /// A client of a 3-process deployment: one connection per party. The
@@ -1833,17 +2202,58 @@ impl RemoteClient {
         Ok(client)
     }
 
-    /// Submit one request without waiting for it. Pipelined requests —
-    /// from this client and every other connected client — arriving
-    /// within the deployment's linger window share one batched MPC
-    /// pass. Returns the request id for [`wait`](RemoteClient::wait).
+    /// Submit one classification request without waiting for it (the
+    /// legacy untyped path: task fixed to `classify`, claimed length 0
+    /// = "derive from the payload shape", so a full-bucket input lands
+    /// in the bucket it exactly fills). Pipelined requests — from this
+    /// client and every other connected client — arriving within the
+    /// deployment's linger window share one batched MPC pass. Returns
+    /// the request id for [`wait`](RemoteClient::wait).
     pub fn submit(&mut self, input: &[i64]) -> Result<u64> {
+        self.send_request(TaskKind::Classify.as_u8(), 0, input)
+    }
+
+    /// Submit one typed request without waiting (pipelined like
+    /// [`submit`](RemoteClient::submit)). The sequencer refuses — never
+    /// silently reshapes — a task this deployment does not serve, a
+    /// length no bucket fits, or rows inconsistent with `seq`; the
+    /// refusal surfaces from [`wait_response`](RemoteClient::wait_response)
+    /// as an error naming P1's reason.
+    pub fn submit_request(&mut self, req: &InferenceRequest) -> Result<u64> {
+        self.send_request(req.task.as_u8(), req.seq as u32, &req.tokens)
+    }
+
+    fn send_request(&mut self, task: u8, true_seq: u32, input: &[i64]) -> Result<u64> {
         let seq = self.next_seq;
         self.next_seq = self.next_seq.checked_add(1).context("request seq overflow")?;
-        let payload = wire::encode_infer_request(seq, input);
+        let payload = wire::encode_infer_request(seq, task, true_seq, input);
         wire::write_frame(&mut self.parties[P1].writer, Tag::InferRequest, &payload)
             .context("submit request")?;
         Ok(wire::request_id(self.conn, seq))
+    }
+
+    /// Block until typed request `id` completes, shaping the output by
+    /// the task the serving window reported.
+    pub fn wait_response(&mut self, id: u64) -> Result<InferenceResponse> {
+        let completed = self.wait(id)?;
+        let task = match TaskKind::from_u8(completed.task()) {
+            Ok(t) => t,
+            Err(e) => bail!("malformed window report: {e}"),
+        };
+        let output = match task {
+            TaskKind::Classify | TaskKind::Pair => {
+                TaskOutput::ClassLogits(completed.logits.clone())
+            }
+            TaskKind::Ner => TaskOutput::TokenLogits(completed.logits.clone()),
+            TaskKind::Embed => TaskOutput::Hidden(completed.logits.clone()),
+        };
+        Ok(InferenceResponse { task, output, completed })
+    }
+
+    /// Submit + wait for one typed request.
+    pub fn infer_request(&mut self, req: &InferenceRequest) -> Result<InferenceResponse> {
+        let id = self.submit_request(req)?;
+        self.wait_response(id)
     }
 
     /// Block until request `id` completes on all three parties. An
@@ -1957,6 +2367,149 @@ mod tests {
         // A hostile count must be rejected by arithmetic, not by a huge
         // allocation attempt.
         assert!(decode_depths(&u64::MAX.to_le_bytes()).is_err(), "hostile count");
+    }
+
+    /// A P1-shaped [`Shared`] for admission tests (no sockets, no mesh).
+    fn admission_shared(tasks: Vec<TaskKind>, buckets: Vec<usize>) -> Shared {
+        Shared {
+            writers: Mutex::new(HashMap::new()),
+            binds: Mutex::new(HashMap::new()),
+            shutdown_waiters: Mutex::new(Vec::new()),
+            exited: AtomicBool::new(false),
+            counters: Counters::default(),
+            metrics: Arc::new(Metrics::new()),
+            admission: Mutex::new(AdmissionQueue::default()),
+            admission_cv: Condvar::new(),
+            opts: ServeOpts::default(),
+            id: P1,
+            d_model: 4,
+            tasks,
+            buckets,
+            pressure: Mutex::new(HashMap::new()),
+            epoch: AtomicU64::new(0),
+            tapes: AtomicU64::new(0),
+            fault_window: AtomicU64::new(FAULT_DISARMED),
+            lat_hist: Mutex::new([0u64; wire::LAT_BUCKETS]),
+        }
+    }
+
+    #[test]
+    fn admission_refuses_mismatched_tasks_and_lengths_with_clear_errors() {
+        let shared = admission_shared(vec![TaskKind::Classify, TaskKind::Ner], vec![4, 8]);
+        shared
+            .admission
+            .lock()
+            .unwrap()
+            .conns
+            .insert(7, ConnState { inflight: 0, next_seq: 0 });
+        // an unknown task byte
+        let r = admit(&shared, 7, 0, 9, 2, vec![0; 8]).expect("refused");
+        assert!(r.contains("unknown task byte"), "{r}");
+        // a task the deployment does not serve, naming what it does
+        let r = admit(&shared, 7, 1, TaskKind::Embed.as_u8(), 2, vec![0; 8]).expect("refused");
+        assert!(r.contains("not served"), "{r}");
+        assert!(r.contains("classify") && r.contains("ner"), "{r}");
+        // a length no bucket fits, naming the buckets
+        let r = admit(&shared, 7, 2, TaskKind::Ner.as_u8(), 9, vec![0; 36]).expect("refused");
+        assert!(r.contains("exceeds every served bucket"), "{r}");
+        assert!(r.contains("s4") && r.contains("s8"), "{r}");
+        // a claimed length that disagrees with the payload
+        let r = admit(&shared, 7, 3, TaskKind::Classify.as_u8(), 3, vec![0; 8]).expect("refused");
+        assert!(r.contains("claims sequence length 3"), "{r}");
+        // a ragged payload
+        let r = admit(&shared, 7, 4, TaskKind::Classify.as_u8(), 0, vec![0; 7]).expect("refused");
+        assert!(r.contains("multiple of d_model"), "{r}");
+        // a well-formed short request is admitted, padded into the
+        // smallest bucket that fits
+        assert!(admit(&shared, 7, 5, TaskKind::Ner.as_u8(), 2, vec![1; 8]).is_none());
+        let adm = shared.admission.lock().unwrap();
+        let p = adm.queue.front().expect("queued");
+        assert_eq!((p.task, p.bucket), (TaskKind::Ner, 4));
+        assert_eq!(p.input.len(), 16, "padded to the bucket length");
+        assert_eq!(&p.input[..8], &[1i64; 8][..]);
+        assert!(p.input[8..].iter().all(|&v| v == 0), "zero padding");
+        assert_eq!(shared.pressure.lock().unwrap()[&(TaskKind::Ner, 4)], 1);
+    }
+
+    #[test]
+    fn windows_cut_per_task_and_bucket_in_fifo_order() {
+        let shared = admission_shared(vec![TaskKind::Classify, TaskKind::Ner], vec![4, 8]);
+        {
+            let mut adm = shared.admission.lock().unwrap();
+            let mix = [
+                (TaskKind::Classify, 4),
+                (TaskKind::Ner, 4),
+                (TaskKind::Classify, 4),
+                (TaskKind::Classify, 8),
+            ];
+            for (i, &(task, bucket)) in mix.iter().enumerate() {
+                adm.queue.push_back(Pending {
+                    id: i as u64,
+                    conn: 0,
+                    task,
+                    bucket,
+                    input: Vec::new(),
+                });
+            }
+        }
+        let ids = |items: &[Pending]| items.iter().map(|p| p.id).collect::<Vec<_>>();
+        let Action::Serve(w1) = next_action(&shared, false) else { panic!("expected a window") };
+        assert_eq!(ids(&w1), vec![0, 2], "same-key requests batch together, FIFO");
+        let Action::Serve(w2) = next_action(&shared, false) else { panic!("expected a window") };
+        assert_eq!(ids(&w2), vec![1], "a different task never shares the window");
+        let Action::Serve(w3) = next_action(&shared, false) else { panic!("expected a window") };
+        assert_eq!(ids(&w3), vec![3], "a different bucket never shares the window");
+    }
+
+    #[test]
+    fn prep_depth_splits_across_observed_pressure() {
+        let mut shared = admission_shared(vec![TaskKind::Classify, TaskKind::Embed], vec![8]);
+        shared.opts.prep_depth = 6;
+        // uniform split before any traffic
+        let t = prep_targets(&shared);
+        assert_eq!(t[&(TaskKind::Classify, 8)], 3);
+        assert_eq!(t[&(TaskKind::Embed, 8)], 3);
+        // skewed pressure splits proportionally, but every key keeps
+        // at least one tape
+        *shared.pressure.lock().unwrap().entry((TaskKind::Classify, 8)).or_insert(0) += 5;
+        *shared.pressure.lock().unwrap().entry((TaskKind::Embed, 8)).or_insert(0) += 1;
+        let t = prep_targets(&shared);
+        assert_eq!(t[&(TaskKind::Classify, 8)], 5);
+        assert_eq!(t[&(TaskKind::Embed, 8)], 1);
+        // prep disabled: every target is zero
+        shared.opts.prep_depth = 0;
+        assert!(prep_targets(&shared).values().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn serving_topology_normalizes_and_keys_the_session_id() {
+        let cfg = BertConfig::tiny();
+        let mut serve = ServeOpts::default();
+        assert_eq!(served_keys(&serve, &cfg), vec![(TaskKind::Classify, cfg.seq_len)]);
+        serve.tasks = vec![TaskKind::Ner, TaskKind::Classify, TaskKind::Ner];
+        serve.buckets = vec![8, 4, 8];
+        assert_eq!(
+            served_keys(&serve, &cfg),
+            vec![
+                (TaskKind::Classify, 4),
+                (TaskKind::Classify, 8),
+                (TaskKind::Ner, 4),
+                (TaskKind::Ner, 8),
+            ]
+        );
+        // the default-topology id is exactly session_id's, and a
+        // different topology cannot mesh with it
+        let seed = [7u8; 16];
+        let default_keys = [(TaskKind::Classify, cfg.seq_len)];
+        assert_eq!(session_id(seed, &cfg), deployment_session_id(seed, &cfg, &default_keys));
+        assert_ne!(
+            session_id(seed, &cfg),
+            deployment_session_id(seed, &cfg, &served_keys(&serve, &cfg))
+        );
+        assert_ne!(
+            control_token(seed, &cfg),
+            deployment_control_token(seed, &cfg, &served_keys(&serve, &cfg))
+        );
     }
 
     #[test]

@@ -24,8 +24,9 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::model::config::BertConfig;
+use crate::model::config::{BertConfig, TaskKind};
 use crate::model::passes::OptConfig;
+use crate::model::secure::GraphSpec;
 use crate::model::weights::Weights;
 use crate::party::SessionCfg;
 use crate::protocols::max::MaxStrategy;
@@ -38,6 +39,10 @@ use super::session::Session;
 pub struct ServerConfig {
     /// Model shape served by this coordinator's session.
     pub cfg: BertConfig,
+    /// Which task head the session's graph ends in (`--task`). The
+    /// in-process coordinator serves one (task, shape) pair; the wire
+    /// deployment (`remote::run_party`) is the multi-task path.
+    pub task: TaskKind,
     /// MPC session parameters (seed, threads, realtime injection).
     pub session: SessionCfg,
     /// Requests per batch window (the batcher drains up to this many
@@ -62,6 +67,7 @@ impl ServerConfig {
     pub fn new(cfg: BertConfig) -> Self {
         ServerConfig {
             cfg,
+            task: TaskKind::Classify,
             session: SessionCfg::default(),
             max_batch: 8,
             net: NetParams::LAN,
@@ -136,7 +142,10 @@ impl Coordinator {
     /// `prep_depth > 0` — prefills the correlation pool so even the
     /// first window is served warm.
     pub fn start(cfg: ServerConfig, weights: Weights) -> Coordinator {
-        let session = Session::start_opt(cfg.cfg, weights, cfg.session, cfg.max_strategy, cfg.opt);
+        let spec = GraphSpec::new(cfg.task, cfg.cfg)
+            .with_strategy(cfg.max_strategy)
+            .with_opt(cfg.opt);
+        let session = Session::start_spec(spec, weights, cfg.session);
         let last_snap = session.snapshot();
         let mut c = Coordinator {
             cfg,

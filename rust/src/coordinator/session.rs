@@ -11,10 +11,10 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::model::config::{BertConfig, LayerQuantConfig};
+use crate::model::config::{BertConfig, TaskKind};
 use crate::model::graph::SecureGraph;
 use crate::model::passes::OptConfig;
-use crate::model::secure::{bert_graph_opt, secure_infer_batch};
+use crate::model::secure::{per_request_outputs, secure_infer_batch, GraphSpec};
 use crate::model::weights::Weights;
 use crate::party::{PartyCtx, SessionCfg, P0, P1};
 use crate::protocols::max::MaxStrategy;
@@ -40,9 +40,11 @@ pub type CorrPool = HashMap<(u64, usize), VecDeque<Vec<Correlation>>>;
 /// correlation tape keyed by exactly (this graph, `batch`) if one
 /// exists (warm window — zero request-path offline communication),
 /// walk the graph as one batched MPC pass, and verify the tape was
-/// consumed exactly. This is the per-window body shared by the
-/// in-process [`Session`] command loop and the multi-process serving
-/// loop (`coordinator::remote`).
+/// consumed exactly. Returns ONE flat revealed output vector per
+/// request (class logits, per-token logits, or the pooled hidden row,
+/// depending on the graph's head). This is the per-window body shared
+/// by the in-process [`Session`] command loop and the multi-process
+/// serving loop (`coordinator::remote`).
 pub fn serve_window(
     ctx: &PartyCtx,
     model: &SecureGraph,
@@ -54,12 +56,14 @@ pub fn serve_window(
     if let Some(tape) = pool.get_mut(&key).and_then(|q| q.pop_front()) {
         ctx.install_corr(tape);
     }
-    let (logits, _) = secure_infer_batch(ctx, model, batch, inputs);
+    let (rows, _) = secure_infer_batch(ctx, model, batch, inputs);
     // A graph-derived tape is consumed exactly; anything left behind
     // means an op's plan diverged from its eval body.
     debug_assert_eq!(ctx.corr_pending(), 0, "correlation tape not fully consumed (plan drift)");
     ctx.clear_corr();
-    logits
+    // The NER head emits `seq` rows per request; regroup batch-major
+    // head rows into one vector per request (no-op for one-row heads).
+    per_request_outputs(rows, batch)
 }
 
 /// Generate one window's correlation tape ahead of time — by walking
@@ -96,8 +100,12 @@ pub struct Session {
     done_rx: Receiver<()>,
     metrics: Arc<Metrics>,
     handles: Vec<JoinHandle<()>>,
-    /// The model shape this session serves (fixed per session).
+    /// The model shape this session serves (fixed per session), at the
+    /// spec's bucket length.
     pub cfg: BertConfig,
+    /// The full typed description of the served graph (task, bucket,
+    /// quantization, optimizer pipeline).
+    pub spec: GraphSpec,
 }
 
 impl Session {
@@ -152,6 +160,29 @@ impl Session {
         max_strategy: MaxStrategy,
         opt: OptConfig,
     ) -> Session {
+        let spec =
+            GraphSpec::new(TaskKind::Classify, cfg).with_strategy(max_strategy).with_opt(opt);
+        Self::start_over_spec(nets, spec, weights, scfg)
+    }
+
+    /// Spawn a session serving an arbitrary [`GraphSpec`] (task + bucket
+    /// length) over the default in-process mesh — what the per-bucket
+    /// `loadgen --check` replay runs.
+    pub fn start_spec(spec: GraphSpec, weights: Weights, scfg: SessionCfg) -> Session {
+        let metrics = Arc::new(Metrics::new());
+        let nets = build_mesh(Arc::clone(&metrics), scfg.realtime);
+        Self::start_over_spec(nets, spec, weights, scfg)
+    }
+
+    /// [`Session::start_spec`] over ALREADY-established transport
+    /// endpoints; the general constructor every other `start*` funnels
+    /// into.
+    pub fn start_over_spec(
+        nets: [Net; 3],
+        spec: GraphSpec,
+        weights: Weights,
+        scfg: SessionCfg,
+    ) -> Session {
         let metrics = Arc::clone(&nets[0].metrics);
         let (logits_tx, logits_rx) = channel();
         let (done_tx, done_rx) = channel();
@@ -165,11 +196,11 @@ impl Session {
             let weights = Arc::clone(&weights);
             let logits_tx = logits_tx.clone();
             let done_tx = done_tx.clone();
+            let spec = spec.clone();
             handles.push(std::thread::spawn(move || {
                 let ctx = make_ctx(id, net, scfg);
                 let w = if id == P0 { Some(&*weights) } else { None };
-                let per_layer = LayerQuantConfig::uniform(&cfg, max_strategy);
-                let model = bert_graph_opt(&ctx, &cfg, &per_layer, w, opt);
+                let model = spec.build(&ctx, w);
                 // Party-local pool of ahead-of-time correlation tapes,
                 // keyed by (graph, window size). Every party receives the
                 // same command sequence, so all three pools evolve in
@@ -210,7 +241,7 @@ impl Session {
                 ctx.flush_timer();
             }));
         }
-        Session { cmd_tx, logits_rx, done_rx, metrics, handles, cfg }
+        Session { cmd_tx, logits_rx, done_rx, metrics, handles, cfg: spec.effective(), spec }
     }
 
     /// Run one batched inference (blocking): the whole window is evaluated

@@ -20,12 +20,13 @@ use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
 use ppq_bert::coordinator::remote::{
-    arm_fault, default_addrs, run_party_addr, seed_from_label, session_id, Completed, PartyOpts,
-    RemoteClient,
+    arm_fault, default_addrs, deployment_session_id, run_party_addr, seed_from_label, served_keys,
+    Completed, InferenceRequest, PartyOpts, RemoteClient, ServeOpts,
 };
 use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
-use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::config::{BertConfig, TaskKind};
 use ppq_bert::model::passes::OptConfig;
+use ppq_bert::model::secure::GraphSpec;
 use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
 use ppq_bert::protocols::max::MaxStrategy;
@@ -131,19 +132,75 @@ fn remote_addrs(flags: &HashMap<String, String>) -> [String; 3] {
     }
 }
 
+/// `--task classify|ner|pair|embed`: the task head a single-task
+/// command targets (default classify).
+fn task_from(flags: &HashMap<String, String>) -> TaskKind {
+    match flags.get("task").filter(|s| !s.is_empty()) {
+        None => TaskKind::Classify,
+        Some(s) => TaskKind::parse(s).unwrap_or_else(|e| usage_error(&e)),
+    }
+}
+
+/// `--tasks a,b,..`: served task kinds (empty = classify only).
+fn tasks_from(flags: &HashMap<String, String>) -> Vec<TaskKind> {
+    match flags.get("tasks").filter(|s| !s.is_empty()) {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .map(|s| TaskKind::parse(s.trim()).unwrap_or_else(|e| usage_error(&e)))
+            .collect(),
+    }
+}
+
+/// `--buckets n,m,..`: served padded seq-length buckets (empty = one
+/// bucket at the configured `--seq`).
+fn buckets_from(flags: &HashMap<String, String>) -> Vec<usize> {
+    match flags.get("buckets").filter(|s| !s.is_empty()) {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    usage_error("--buckets wants comma-separated sequence lengths")
+                })
+            })
+            .collect(),
+    }
+}
+
+/// The (task, bucket) topology a client must agree on with the
+/// deployment. Applies the same normalization `run_party` does, so the
+/// derived session id matches iff the `--tasks`/`--buckets` lists
+/// describe the same deployment (a mismatch fails the handshake).
+fn topology_keys(flags: &HashMap<String, String>, cfg: &BertConfig) -> Vec<(TaskKind, usize)> {
+    let serve = ServeOpts {
+        tasks: tasks_from(flags),
+        buckets: buckets_from(flags),
+        ..ServeOpts::default()
+    };
+    served_keys(&serve, cfg)
+}
+
 fn cmd_infer(flags: HashMap<String, String>) {
     if flags.contains_key("remote") {
         return cmd_infer_remote(flags);
     }
     let cfg = config_from(&flags);
     let net = net_from(&flags);
+    let task = task_from(&flags);
     let threads: usize = flag_parse(&flags, "threads", 1);
     println!(
-        "secure inference: {} layers, d={}, seq={}, threads={}, net={}",
-        cfg.n_layers, cfg.d_model, cfg.seq_len, threads, net.name
+        "secure inference: task {}, {} layers, d={}, seq={}, threads={}, net={}",
+        task.as_str(),
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.seq_len,
+        threads,
+        net.name
     );
     let (w, x) = prepared_model(cfg);
     let mut scfg = ServerConfig::new(cfg);
+    scfg.task = task;
     scfg.session = SessionCfg { threads, ..SessionCfg::default() };
     scfg.net = net;
     scfg.opt = opt_from(&flags);
@@ -175,15 +232,20 @@ fn cmd_infer(flags: HashMap<String, String>) {
 fn cmd_infer_remote(flags: HashMap<String, String>) {
     let cfg = config_from(&flags);
     let addrs = remote_addrs(&flags);
+    let task = task_from(&flags);
     println!(
-        "remote secure inference: {} layers, d={}, seq={} via {}",
-        cfg.n_layers, cfg.d_model, cfg.seq_len, addrs.join(", ")
+        "remote secure inference: task {}, {} layers, d={}, seq={} via {}",
+        task.as_str(),
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.seq_len,
+        addrs.join(", ")
     );
     let seed = match flags.get("session").filter(|s| !s.is_empty()) {
         Some(label) => seed_from_label(label),
         None => SessionCfg::default().master_seed,
     };
-    let session = session_id(seed, &cfg);
+    let session = deployment_session_id(seed, &cfg, &topology_keys(&flags, &cfg));
     let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
         .unwrap_or_else(|e| {
             eprintln!("error: connect to deployment: {e}");
@@ -191,7 +253,8 @@ fn cmd_infer_remote(flags: HashMap<String, String>) {
         });
     let x = synth_input(&cfg, 11);
     let t0 = std::time::Instant::now();
-    let id = client.submit(&x).unwrap_or_else(|e| {
+    let req = InferenceRequest::new(task, cfg.seq_len, x);
+    let id = client.submit_request(&req).unwrap_or_else(|e| {
         eprintln!("error: submit: {e}");
         std::process::exit(1);
     });
@@ -201,7 +264,10 @@ fn cmd_infer_remote(flags: HashMap<String, String>) {
     });
     let dt = t0.elapsed();
     println!(
-        "request {id}: logits {:?}  wall {}  (window {}, batch {}, {} online rounds, {} offline B)",
+        "request {id}: {} s{} output {:?}  wall {}  (window {}, batch {}, {} online rounds, \
+         {} offline B)",
+        task.as_str(),
+        done.bucket(),
         done.logits,
         fmt_dur(dt),
         done.wid(),
@@ -257,6 +323,8 @@ fn cmd_party(flags: HashMap<String, String>) {
     opts.serve.queue_cap = flag_parse(&flags, "queue-cap", opts.serve.queue_cap);
     opts.serve.max_inflight = flag_parse(&flags, "max-inflight", opts.serve.max_inflight);
     opts.serve.prep_depth = flag_parse(&flags, "prep", opts.serve.prep_depth);
+    opts.serve.tasks = tasks_from(&flags);
+    opts.serve.buckets = buckets_from(&flags);
     if let Some(dir) = flags.get("tape-dir").filter(|s| !s.is_empty()) {
         opts.tape_dir = Some(std::path::PathBuf::from(dir));
     }
@@ -289,15 +357,19 @@ fn cmd_party(flags: HashMap<String, String>) {
             }
         }
     }
+    let topology: Vec<String> = served_keys(&opts.serve, &opts.cfg)
+        .iter()
+        .map(|(t, b)| format!("{}.s{b}", t.as_str()))
+        .collect();
     println!(
-        "party {id}: listening on {listen}, peers {:?}, model {} layers d={} seq={}",
+        "party {id}: listening on {listen}, peers {:?}, model {} layers d={}, serving {}",
         peer_ids
             .iter()
             .map(|&p| opts.peers[p].clone().unwrap())
             .collect::<Vec<_>>(),
         opts.cfg.n_layers,
         opts.cfg.d_model,
-        opts.cfg.seq_len,
+        topology.join(" "),
     );
     if let Err(e) = run_party_addr(&listen, opts) {
         eprintln!("error: party {id}: {e}");
@@ -319,14 +391,33 @@ fn parse_fault_spec(spec: &str) -> Result<(usize, u64), String> {
     Ok((party, window))
 }
 
+/// Deterministic request mix: request `ridx` of a loadgen run carries
+/// task `tasks[ridx % n]` at bucket `buckets[(ridx / n) % m]`, with a
+/// bucket-length synthetic input. `--check` replays exactly this
+/// mapping, so outputs can be compared bit-for-bit.
+fn loadgen_request(
+    cfg: &BertConfig,
+    tasks: &[TaskKind],
+    buckets: &[usize],
+    ridx: usize,
+) -> InferenceRequest {
+    let task = tasks[ridx % tasks.len()];
+    let bucket = buckets[(ridx / tasks.len()) % buckets.len()];
+    let rcfg = BertConfig { seq_len: bucket, ..*cfg };
+    InferenceRequest::new(task, bucket, synth_input(&rcfg, 100 + ridx as u64))
+}
+
 /// Multi-client load driver against a live 3-process deployment:
 /// `--clients K` threads each submit `--requests N` pipelined requests
 /// simultaneously, so the deployment's wire-path batcher folds requests
-/// from DIFFERENT clients into shared windows. Prints throughput and
-/// amortization stats; `--check` additionally replays the observed
-/// window compositions through a fresh in-process session and demands
-/// bit-identical logits (requires a fresh deployment with the default
-/// weights seed), `--halt` shuts the deployment down afterwards.
+/// from DIFFERENT clients into shared windows. With `--tasks`/
+/// `--buckets` the stream interleaves tasks and lengths, exercising the
+/// per-(task, bucket) sequencer. Prints throughput and amortization
+/// stats; `--check` additionally replays the observed window
+/// compositions through fresh in-process sessions — one per
+/// (task, bucket) group — and demands bit-identical outputs (requires a
+/// fresh deployment with the default weights seed), `--halt` shuts the
+/// deployment down afterwards.
 fn cmd_loadgen(flags: HashMap<String, String>) {
     let cfg = config_from(&flags);
     let addrs = remote_addrs(&flags);
@@ -335,11 +426,27 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
     if clients == 0 || requests == 0 {
         usage_error("loadgen needs --clients >= 1 and --requests >= 1");
     }
+    let tasks = {
+        let t = tasks_from(&flags);
+        if t.is_empty() {
+            vec![TaskKind::Classify]
+        } else {
+            t
+        }
+    };
+    let buckets = {
+        let b = buckets_from(&flags);
+        if b.is_empty() {
+            vec![cfg.seq_len]
+        } else {
+            b
+        }
+    };
     let seed = match flags.get("session").filter(|s| !s.is_empty()) {
         Some(label) => seed_from_label(label),
         None => SessionCfg::default().master_seed,
     };
-    let session = session_id(seed, &cfg);
+    let session = deployment_session_id(seed, &cfg, &topology_keys(&flags, &cfg));
     let fault: Option<(usize, u64)> =
         flags.get("fault").map(|spec| parse_fault_spec(spec).unwrap_or_else(|e| usage_error(&e)));
     println!(
@@ -366,6 +473,7 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
     for k in 0..clients {
         let addrs = addrs.clone();
         let barrier = Arc::clone(&barrier);
+        let (tasks, buckets) = (tasks.clone(), buckets.clone());
         handles.push(std::thread::spawn(
             move || -> std::result::Result<(Vec<(usize, Completed)>, usize), String> {
                 let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30))
@@ -374,8 +482,10 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
                 let mut ids = Vec::new();
                 for j in 0..requests {
                     let ridx = k * requests + j;
-                    let x = synth_input(&cfg, 100 + ridx as u64);
-                    let id = client.submit(&x).map_err(|e| format!("client {k}: submit: {e}"))?;
+                    let req = loadgen_request(&cfg, &tasks, &buckets, ridx);
+                    let id = client
+                        .submit_request(&req)
+                        .map_err(|e| format!("client {k}: submit: {e}"))?;
                     ids.push((ridx, id));
                 }
                 let mut out = Vec::new();
@@ -486,31 +596,62 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
                 std::process::exit(1);
             }
         }
-        // Replay the observed window compositions through a fresh
-        // in-process session: logits must be bit-identical.
-        let (w, _) = prepared_model(cfg);
-        let scfg = SessionCfg { master_seed: seed, ..SessionCfg::default() };
-        let sess = Session::start_opt(cfg, w, scfg, MaxStrategy::Tournament, opt_from(&flags));
-        let mut mismatches = 0usize;
+        // Group the observed windows by (task, bucket) — a window must
+        // never mix keys — then replay each group's compositions
+        // through a fresh in-process session of that exact spec:
+        // outputs must be bit-identical per bucket.
+        let mut groups: BTreeMap<(u8, usize), Vec<(u64, &Vec<(usize, Completed)>)>> =
+            BTreeMap::new();
         for (wid, reqs) in &windows {
-            let inputs: Vec<Vec<i64>> = reqs
-                .iter()
-                .map(|(ridx, _)| synth_input(&cfg, 100 + *ridx as u64))
-                .collect();
-            let logits = sess.infer_batch(&inputs);
-            for ((ridx, c), l) in reqs.iter().zip(&logits) {
-                if &c.logits != l {
-                    mismatches += 1;
-                    eprintln!("MISMATCH: request {ridx} (window {wid})");
+            let key = (reqs[0].1.task(), reqs[0].1.bucket());
+            for (ridx, c) in reqs {
+                if (c.task(), c.bucket()) != key {
+                    eprintln!("FAIL: window {wid} mixed (task, bucket) keys at request {ridx}");
+                    std::process::exit(1);
                 }
             }
+            groups.entry(key).or_default().push((*wid, reqs));
         }
-        sess.shutdown();
+        let scfg = SessionCfg { master_seed: seed, ..SessionCfg::default() };
+        let mut mismatches = 0usize;
+        for ((task_byte, bucket), wins) in &groups {
+            let task = TaskKind::from_u8(*task_byte).unwrap_or_else(|e| {
+                eprintln!("error: malformed window report: {e}");
+                std::process::exit(1);
+            });
+            let spec = GraphSpec::new(task, cfg)
+                .with_seq(*bucket)
+                .with_strategy(MaxStrategy::Tournament)
+                .with_opt(opt_from(&flags));
+            let (w, _) = prepared_model(cfg);
+            let sess = Session::start_spec(spec, w, scfg);
+            for (wid, reqs) in wins {
+                let inputs: Vec<Vec<i64>> = reqs
+                    .iter()
+                    .map(|(ridx, _)| loadgen_request(&cfg, &tasks, &buckets, *ridx).tokens)
+                    .collect();
+                let outs = sess.infer_batch(&inputs);
+                for ((ridx, c), l) in reqs.iter().zip(&outs) {
+                    if &c.logits != l {
+                        mismatches += 1;
+                        eprintln!(
+                            "MISMATCH: request {ridx} (window {wid}, {} s{bucket})",
+                            task.as_str()
+                        );
+                    }
+                }
+            }
+            sess.shutdown();
+        }
         if mismatches > 0 {
-            eprintln!("FAIL: {mismatches} logits mismatched the in-process replay");
+            eprintln!("FAIL: {mismatches} outputs mismatched the in-process replay");
             std::process::exit(1);
         }
-        println!("CHECK OK: all {total} logits bit-identical to the in-process replay");
+        println!(
+            "CHECK OK: all {total} outputs bit-identical to the in-process replay \
+             ({} (task, bucket) groups)",
+            groups.len()
+        );
     }
     if flags.contains_key("halt") {
         if let Err(e) = probe.shutdown() {
@@ -604,9 +745,7 @@ fn plan_total_json(report: &ppq_bert::model::passes::PlanReport, batch: usize, o
 /// one `round` object per schedule level, one `group` object per dedup
 /// group, then one `TOTAL` record).
 fn cmd_plan(flags: HashMap<String, String>) {
-    use ppq_bert::model::config::LayerQuantConfig;
     use ppq_bert::model::passes::plan_report;
-    use ppq_bert::model::secure::bert_graph_dry_opt;
     use ppq_bert::protocols::prep::CorrKind;
 
     let cfg = config_from(&flags);
@@ -616,7 +755,12 @@ fn cmd_plan(flags: HashMap<String, String>) {
     }
     let strat = max_strategy_from(&flags);
     let opt = opt_from(&flags);
-    let g = bert_graph_dry_opt(&cfg, &LayerQuantConfig::uniform(&cfg, strat), opt);
+    let task = task_from(&flags);
+    let spec = GraphSpec::new(task, cfg).with_strategy(strat).with_opt(opt);
+    if let Err(e) = spec.validate() {
+        usage_error(&format!("invalid plan target: {e}"));
+    }
+    let g = spec.dry();
     let entries = g.plan_entries(batch);
     let report = plan_report(&g, batch);
     let json = flags.contains_key("json");
@@ -719,6 +863,43 @@ fn cmd_plan(flags: HashMap<String, String>) {
             );
         }
     }
+
+    // Per-(task, bucket) tape totals of a heterogeneous deployment
+    // (`--tasks`/`--buckets`): what one warm window of each served key
+    // costs, so capacity planning can budget the prep split.
+    let keys = topology_keys(&flags, &cfg);
+    if keys.len() > 1 || keys[0] != (task, cfg.seq_len) {
+        if !json {
+            println!("per-bucket offline tape totals (window of {batch}):");
+        }
+        for (t, b) in &keys {
+            let spec = GraphSpec::new(*t, cfg).with_seq(*b).with_strategy(strat).with_opt(opt);
+            if let Err(e) = spec.validate() {
+                usage_error(&format!("invalid plan target: {e}"));
+            }
+            let bg = spec.dry();
+            let bentries = bg.plan_entries(batch);
+            let bytes: u64 = bentries.iter().map(|e| e.bytes).sum();
+            if json {
+                println!(
+                    "{{\"bucket\":\"{}/s{}\",\"ops\":{},\"bytes\":{}}}",
+                    t.as_str(),
+                    b,
+                    bentries.len(),
+                    bytes
+                );
+            } else {
+                println!(
+                    "  {:<10} s{:<4} {:>6} correlations {:>14} bytes ({:.2} MiB)",
+                    t.as_str(),
+                    b,
+                    bentries.len(),
+                    bytes,
+                    bytes as f64 / 1048576.0
+                );
+            }
+        }
+    }
 }
 
 fn cmd_oracle(flags: HashMap<String, String>) {
@@ -767,36 +948,53 @@ fn cmd_comm(flags: HashMap<String, String>) {
 const HELP: &str = "repro — privacy-preserving quantized BERT inference (3-party MPC)
 
 USAGE:
-  repro infer  [--config tiny|base] [--seq N] [--layers L] [--threads T] [--net lan|wan|local]
-               [--opt 0|1]
-  repro infer  --remote [ADDR0,ADDR1,ADDR2] [--session LABEL] [--halt]
-                                             run against `repro party` processes
+  repro infer  [--config tiny|base] [--task classify|ner|pair|embed] [--seq N] [--layers L]
+               [--threads T] [--net lan|wan|local] [--opt 0|1]
+  repro infer  --remote [ADDR0,ADDR1,ADDR2] [--task K] [--tasks A,B] [--buckets N,M]
+               [--session LABEL] [--halt]
+                                             run against `repro party` processes;
+                                             --task picks this request's head,
+                                             --tasks/--buckets must repeat the
+                                             deployment's serving topology (it is
+                                             baked into the session id)
   repro loadgen [--clients K] [--requests N] [--remote [ADDRS]] [--session LABEL]
-                [--fault party:N@window:W] [--check] [--opt 0|1] [--halt]
-                                             K concurrent clients; --check replays
-                                             the observed windows in-process and
-                                             demands bit-identical logits (--opt
+                [--tasks A,B] [--buckets N,M] [--fault party:N@window:W] [--check]
+                [--opt 0|1] [--halt]
+                                             K concurrent clients; --tasks/--buckets
+                                             interleave a mixed-workload stream;
+                                             --check replays the observed windows
+                                             in-process per (task, bucket) group and
+                                             demands bit-identical outputs (--opt
                                              must match the deployment's); --fault
                                              arms a kill -9-style abort on party N
                                              at window W (refusals become expected)
-  repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D] [--opt 0|1]
-               [--threads T] [--conf FILE]
-  repro plan   [--config tiny|base] [--seq N] [--layers L] [--batch B]
+  repro serve  [--config tiny|base] [--task K] [--requests N] [--batch B] [--prep D]
+               [--opt 0|1] [--threads T] [--conf FILE]
+  repro plan   [--config tiny|base] [--task K] [--seq N] [--layers L] [--batch B]
                [--max tournament|linear|sort] [--opt 0|1] [--json]
+               [--tasks A,B] [--buckets N,M]
                                              dump the per-op offline tape a
                                              B-request window will consume, the
                                              packed-round schedule and the dedup
-                                             groups (graph walk; --json = NDJSON)
+                                             groups (graph walk; --json = NDJSON);
+                                             --tasks/--buckets append per-bucket
+                                             tape totals for a heterogeneous
+                                             deployment
   repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
-               [--layers L] [--threads T] [--weights-seed S] [--session LABEL]
-               [--max-batch B] [--linger MS] [--queue-cap Q] [--max-inflight I] [--prep D]
-               [--tape-dir DIR] [--fault-window W] [--opt 0|1]
+               [--layers L] [--tasks A,B] [--buckets N,M] [--threads T] [--weights-seed S]
+               [--session LABEL] [--max-batch B] [--linger MS] [--queue-cap Q]
+               [--max-inflight I] [--prep D] [--tape-dir DIR] [--fault-window W] [--opt 0|1]
                [--reconnect-attempts R] [--reconnect-backoff-ms MS]
-                                             --tape-dir persists correlation tapes +
-                                             PRG cursors so a killed party restarts
-                                             warm; --fault-window aborts at window W;
-                                             --opt seals the served graph with the
-                                             optimizer pipeline (all parties agree)
+                                             --tasks/--buckets serve several task
+                                             heads at several padded seq-length
+                                             buckets from one deployment (windows
+                                             are cut per (task, bucket); all
+                                             parties must agree); --tape-dir
+                                             persists correlation tapes + PRG
+                                             cursors so a killed party restarts
+                                             warm; --fault-window aborts at window
+                                             W; --opt seals the served graphs with
+                                             the optimizer pipeline
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N] [--opt 0|1]
   repro help
@@ -809,6 +1007,11 @@ Multi-process quickstart (three terminals + any number of clients):
   repro party --id 0 & repro party --id 1 & repro party --id 2 &
   repro loadgen --clients 4 --requests 2 --check
   repro infer --remote --halt
+
+Heterogeneous quickstart (one deployment, four task heads, two buckets):
+  for i in 0 1 2; do repro party --id $i --tasks classify,ner,pair,embed --buckets 4,8 & done
+  repro loadgen --clients 4 --requests 4 --tasks classify,ner,pair,embed --buckets 4,8 --check
+  repro infer --remote --task ner --seq 4 --tasks classify,ner,pair,embed --buckets 4,8 --halt
 ";
 
 fn main() {
@@ -842,18 +1045,15 @@ fn main() {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use ppq_bert::model::config::LayerQuantConfig;
     use ppq_bert::model::passes::plan_report;
-    use ppq_bert::model::secure::bert_graph_dry_opt;
 
     /// The NDJSON `TOTAL` record quotes exactly the modeled report:
     /// bytes, plan ops, schedule rounds and both message counts.
     #[test]
     fn plan_json_total_matches_modeled_report() {
         let cfg = BertConfig::tiny();
-        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
         for (opt, level) in [(OptConfig::none(), 0u8), (OptConfig::o1(), 1)] {
-            let g = bert_graph_dry_opt(&cfg, &per, opt);
+            let g = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).dry();
             let report = plan_report(&g, 2);
             let modeled: u64 = g.plan_entries(2).iter().map(|e| e.bytes).sum();
             assert_eq!(report.total_bytes, modeled, "--opt {level}");
@@ -878,9 +1078,8 @@ mod tests {
     #[test]
     fn plan_report_accounting_is_consistent() {
         let cfg = BertConfig::tiny();
-        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-        let g0 = bert_graph_dry_opt(&cfg, &per, OptConfig::none());
-        let g1 = bert_graph_dry_opt(&cfg, &per, OptConfig::o1());
+        let g0 = GraphSpec::new(TaskKind::Classify, cfg).with_opt(OptConfig::none()).dry();
+        let g1 = GraphSpec::new(TaskKind::Classify, cfg).with_opt(OptConfig::o1()).dry();
         let r0 = plan_report(&g0, 1);
         let r1 = plan_report(&g1, 1);
         assert_eq!(r0.total_bytes, r1.total_bytes, "packing must not change offline bytes");

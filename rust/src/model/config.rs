@@ -4,6 +4,85 @@
 
 use crate::protocols::max::MaxStrategy;
 
+/// The serving workload a secure graph implements — the ONE task enum
+/// shared by the CLI (`--task`), the wire frames (request/manifest/
+/// report), the correlation-pool keys and the graph fingerprints
+/// (DESIGN.md §Heterogeneous serving). Discriminants are the on-wire
+/// byte encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TaskKind {
+    /// Single-sentence classification from the CLS token (the paper's
+    /// task): one logit row of `n_classes` per request.
+    Classify = 0,
+    /// Token-level classification (NER-style): one logit row of
+    /// `n_classes` per POSITION, `seq * n_classes` values per request.
+    Ner = 1,
+    /// Sentence-pair scoring: two segments packed into one sequence
+    /// with segment embeddings added client-side; one logit row of
+    /// `n_classes` per request.
+    Pair = 2,
+    /// Embedding extraction: the pooled (CLS) hidden row is revealed to
+    /// the data-owner side — `d_model` values per request, no
+    /// classifier matmul.
+    Embed = 3,
+}
+
+impl TaskKind {
+    /// Every task, in wire-byte order (deterministic iteration order
+    /// for multi-task deployments — weight-sharing order is
+    /// bit-compatibility-critical, so all parties build graphs by
+    /// walking this order).
+    pub const ALL: [TaskKind; 4] = [TaskKind::Classify, TaskKind::Ner, TaskKind::Pair, TaskKind::Embed];
+
+    /// CLI / display name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskKind::Classify => "classify",
+            TaskKind::Ner => "ner",
+            TaskKind::Pair => "pair",
+            TaskKind::Embed => "embed",
+        }
+    }
+
+    /// Parse a CLI `--task` value.
+    pub fn parse(s: &str) -> Result<TaskKind, String> {
+        match s {
+            "classify" => Ok(TaskKind::Classify),
+            "ner" => Ok(TaskKind::Ner),
+            "pair" => Ok(TaskKind::Pair),
+            "embed" => Ok(TaskKind::Embed),
+            other => Err(format!("unknown task `{other}` (classify|ner|pair|embed)")),
+        }
+    }
+
+    /// Wire encoding (request/manifest/prep/report frames).
+    pub fn as_u8(&self) -> u8 {
+        *self as u8
+    }
+
+    /// Decode a wire byte; hostile bytes are errors, not panics.
+    pub fn from_u8(b: u8) -> Result<TaskKind, String> {
+        match b {
+            0 => Ok(TaskKind::Classify),
+            1 => Ok(TaskKind::Ner),
+            2 => Ok(TaskKind::Pair),
+            3 => Ok(TaskKind::Embed),
+            other => Err(format!("unknown task byte {other}")),
+        }
+    }
+
+    /// Revealed output elements per request for a bucket of padded
+    /// length `seq` (the task-appropriate head width).
+    pub fn out_len(&self, cfg: &BertConfig, seq: usize) -> usize {
+        match self {
+            TaskKind::Classify | TaskKind::Pair => cfg.n_classes,
+            TaskKind::Ner => seq * cfg.n_classes,
+            TaskKind::Embed => cfg.d_model,
+        }
+    }
+}
+
 /// Architecture and quantization hyperparameters of the 1w/4a BERT.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BertConfig {
@@ -131,6 +210,25 @@ impl BertConfig {
             if v.is_nan() || v <= 0.0 {
                 return Err(format!("{name} must be positive"));
             }
+        }
+        Ok(())
+    }
+
+    /// Bucket-aware validation for heterogeneous deployments: validate
+    /// this model shape serving `task` at padded bucket length `seq`.
+    /// Errors name the offending (task, bucket) so a multi-bucket
+    /// deployment failure is attributable to the bucket that caused it
+    /// (the plain [`BertConfig::validate`] bound still applies, at the
+    /// bucket's length rather than `self.seq_len`).
+    pub fn validate_bucket(&self, task: TaskKind, seq: usize) -> Result<(), String> {
+        let eff = BertConfig { seq_len: seq, ..*self };
+        eff.validate()
+            .map_err(|e| format!("task {} bucket s{}: {e}", task.as_str(), seq))?;
+        if task == TaskKind::Pair && seq < 2 {
+            return Err(format!(
+                "task pair bucket s{seq}: sentence-pair scoring packs two \
+                 segments into one sequence (needs seq >= 2)"
+            ));
         }
         Ok(())
     }
@@ -267,6 +365,38 @@ mod tests {
         assert!(c.validate().unwrap_err().contains("n_classes"));
         c.n_classes = 300; // wraps the 8-bit argmax index ring
         assert!(c.validate().unwrap_err().contains("256"));
+    }
+
+    #[test]
+    fn task_kind_round_trips_wire_bytes_and_names() {
+        for t in TaskKind::ALL {
+            assert_eq!(TaskKind::from_u8(t.as_u8()).unwrap(), t);
+            assert_eq!(TaskKind::parse(t.as_str()).unwrap(), t);
+        }
+        assert!(TaskKind::from_u8(9).is_err());
+        assert!(TaskKind::parse("sbert").is_err());
+    }
+
+    #[test]
+    fn task_out_lens_are_task_shaped() {
+        let cfg = BertConfig::tiny();
+        assert_eq!(TaskKind::Classify.out_len(&cfg, 8), cfg.n_classes);
+        assert_eq!(TaskKind::Pair.out_len(&cfg, 8), cfg.n_classes);
+        assert_eq!(TaskKind::Ner.out_len(&cfg, 16), 16 * cfg.n_classes);
+        assert_eq!(TaskKind::Embed.out_len(&cfg, 8), cfg.d_model);
+    }
+
+    #[test]
+    fn bucket_validation_names_the_offending_bucket_and_task() {
+        let cfg = BertConfig::tiny();
+        assert!(cfg.validate_bucket(TaskKind::Ner, 16).is_ok());
+        let err = cfg.validate_bucket(TaskKind::Ner, 129).unwrap_err();
+        assert!(err.contains("task ner"), "{err}");
+        assert!(err.contains("bucket s129"), "{err}");
+        assert!(err.contains("128"), "{err}");
+        let err = cfg.validate_bucket(TaskKind::Pair, 1).unwrap_err();
+        assert!(err.contains("task pair"), "{err}");
+        assert!(err.contains("two"), "{err}");
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! resulting embeddings into 4-bit values").
 //!
 //! This module is the data-owner-local pipeline: token ids → (token +
-//! positional) embedding → symmetric 4-bit quantization. It runs in the
-//! clear at P1 before anything is shared.
+//! positional [+ segment]) embedding → symmetric 4-bit quantization. It
+//! runs in the clear at P1 before anything is shared. Sentence-pair
+//! requests ([`crate::model::config::TaskKind::Pair`]) pack their two
+//! segments here, client-side, via [`PublicEmbedding::embed_quantize_pair`]
+//! — the secure trunk only ever sees one `[seq, d_model]` block.
 
 use crate::core::prg::Prg;
 
@@ -21,6 +24,9 @@ pub struct PublicEmbedding {
     tok: Vec<f32>,
     /// float positional embeddings [max_seq, d]
     pos: Vec<f32>,
+    /// float segment (token-type) embeddings [2, d], added when packing
+    /// a sentence pair
+    seg: Vec<f32>,
     /// symmetric quantization scale (per-tensor, calibrated at build)
     pub scale: f32,
 }
@@ -43,6 +49,7 @@ impl PublicEmbedding {
         };
         let tok: Vec<f32> = (0..vocab * d_model).map(|_| gauss()).collect();
         let pos: Vec<f32> = (0..max_seq * d_model).map(|_| gauss() * 0.3).collect();
+        let seg: Vec<f32> = (0..2 * d_model).map(|_| gauss() * 0.3).collect();
         // calibrate scale so p99 |e| maps near the 4-bit edge
         let mut mags: Vec<f32> = tok.iter().map(|v| v.abs()).collect();
         mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -53,6 +60,7 @@ impl PublicEmbedding {
             max_seq,
             tok,
             pos,
+            seg,
             scale: p99 / 7.0,
         }
     }
@@ -67,6 +75,31 @@ impl PublicEmbedding {
             let t = t as usize % self.vocab;
             for j in 0..d {
                 let e = self.tok[t * d + j] + self.pos[p * d + j];
+                let q = (e / self.scale).round() as i64;
+                out.push(q.clamp(-8, 7));
+            }
+        }
+        out
+    }
+
+    /// Data-owner-local sentence-pair packing: embed both segments with
+    /// continuous positions, add each side's segment embedding, and
+    /// quantize to one `[len_a + len_b, d_model]` activation block. The
+    /// secure trunk evaluates the packed block like any other sequence;
+    /// the segment distinction lives entirely in this public, P1-local
+    /// step.
+    pub fn embed_quantize_pair(&self, seg_a: &[u32], seg_b: &[u32]) -> Vec<i64> {
+        assert!(seg_a.len() + seg_b.len() <= self.max_seq, "packed pair too long");
+        let d = self.d_model;
+        let mut out = Vec::with_capacity((seg_a.len() + seg_b.len()) * d);
+        let tagged = seg_a
+            .iter()
+            .map(|&t| (t, 0usize))
+            .chain(seg_b.iter().map(|&t| (t, 1usize)));
+        for (p, (t, s)) in tagged.enumerate() {
+            let t = t as usize % self.vocab;
+            for j in 0..d {
+                let e = self.tok[t * d + j] + self.pos[p * d + j] + self.seg[s * d + j];
                 let q = (e / self.scale).round() as i64;
                 out.push(q.clamp(-8, 7));
             }
@@ -115,5 +148,31 @@ mod tests {
     fn oov_tokens_wrap() {
         let emb = PublicEmbedding::synth(32, 16, 8, 5);
         assert_eq!(emb.embed_quantize(&[33]), emb.embed_quantize(&[1]));
+    }
+
+    #[test]
+    fn pair_packs_both_segments_as_4bit() {
+        let emb = PublicEmbedding::synth(32, 16, 8, 6);
+        let x = emb.embed_quantize_pair(&[1, 2, 3], &[4, 5]);
+        assert_eq!(x.len(), 5 * 16);
+        assert!(x.iter().all(|&v| (-8..8).contains(&v)));
+    }
+
+    #[test]
+    fn segment_identity_matters() {
+        // Token 7 at position 1: once inside segment A, once opening
+        // segment B. Same token + position, different segment table row.
+        let emb = PublicEmbedding::synth(32, 16, 8, 7);
+        let aa = emb.embed_quantize_pair(&[7, 7], &[]);
+        let ab = emb.embed_quantize_pair(&[7], &[7]);
+        assert_eq!(&aa[..16], &ab[..16], "shared segment-A prefix must agree");
+        assert_ne!(&aa[16..32], &ab[16..32], "segment embedding missing");
+    }
+
+    #[test]
+    fn pair_packing_is_deterministic() {
+        let a = PublicEmbedding::synth(32, 16, 8, 8).embed_quantize_pair(&[1, 2], &[3]);
+        let b = PublicEmbedding::synth(32, 16, 8, 8).embed_quantize_pair(&[1, 2], &[3]);
+        assert_eq!(a, b);
     }
 }

@@ -13,7 +13,7 @@
 //! once in *plan* mode and once in *eval* mode therefore cannot drift:
 //! the tape is derived from the object that executes.
 //!
-//! Builders (`model::secure::bert_graph`, `model::secure::mlp_graph`)
+//! Builders (`model::secure::GraphSpec`, `model::secure::MlpSpec`)
 //! assemble graphs; the serving layer (`coordinator::session`,
 //! `coordinator::remote`) pools correlation tapes keyed by
 //! ([`SecureGraph::fingerprint`], window size) and evaluates windows by
@@ -315,6 +315,11 @@ impl GraphBuilder {
         }
         passes::annotate(&mut g);
         let mut h = DefaultHasher::new();
+        // The graph NAME is part of the identity: task-tagged builds
+        // (e.g. sentence-pair vs single-sentence classification) can be
+        // structurally identical yet must never share pools or tapes —
+        // their weight contents differ even though their shapes agree.
+        g.name.hash(&mut h);
         g.item_len.hash(&mut h);
         g.input_party.hash(&mut h);
         g.input_ring.bits().hash(&mut h);

@@ -201,7 +201,7 @@ pub fn rand_graph(ctx: &PartyCtx, seed: u64, opt: OptConfig) -> SecureGraph {
 
 /// Share-less build of random graph `seed` (plans, fingerprints and byte
 /// accounting only — evaluating it is a bug, like
-/// [`crate::model::secure::bert_graph_dry`]).
+/// [`crate::model::secure::GraphSpec::dry`]).
 pub fn rand_graph_dry(seed: u64, opt: OptConfig) -> SecureGraph {
     build(seed, false, &mut DryParams, opt)
 }

@@ -1,7 +1,7 @@
 //! The secure quantized model pipelines, expressed as op graphs: this
 //! module provides the [`SecureOp`] implementations (attention stages,
 //! softmax, LayerNorm residuals, FFN, classifier heads) and the graph
-//! *builders* ([`bert_graph`], [`mlp_graph`]) that assemble them — the
+//! *builders* ([`GraphSpec`], [`MlpSpec`]) that assemble them — the
 //! paper's system, end to end, as a declarative description from which
 //! BOTH the offline preprocessing plan and the online MPC pass are
 //! derived (DESIGN.md §Secure op graph).
@@ -42,7 +42,7 @@
 use crate::core::pool::WorkerPool;
 use crate::core::prg::Prg;
 use crate::core::ring::{sign_extend, Ring, R16, R32, R4, R6};
-use crate::model::config::{BertConfig, LayerQuantConfig};
+use crate::model::config::{BertConfig, LayerQuantConfig, TaskKind};
 use crate::model::graph::{GraphBuilder, LutConvertSpec, SecureGraph, SecureOp, VType, Value};
 use crate::model::passes::OptConfig;
 use crate::model::weights::Weights;
@@ -660,6 +660,49 @@ impl SecureOp for ClassifierOp {
     }
 }
 
+/// Embedding head: reveal each request's pooled (CLS) hidden row to the
+/// data-owner side — P1/P2 learn the 4-bit pooled rows, P0 learns
+/// nothing. A pure reveal: one opening, no correlations, so it
+/// contributes no plan entries (like [`ClassifierOp`] minus the
+/// matmul and the 4→16 extension).
+pub(crate) struct RevealRowsOp {
+    pub(crate) d: usize,
+    pub(crate) label: String,
+}
+
+impl SecureOp for RevealRowsOp {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn in_types(&self) -> Vec<VType> {
+        vec![VType::a2(4)]
+    }
+
+    fn out_types(&self) -> Vec<VType> {
+        vec![VType::clear()]
+    }
+
+    fn out_lens(&self, in_lens: &[usize]) -> Vec<usize> {
+        vec![in_lens[0] / self.d]
+    }
+
+    fn eval(&self, ctx: &PartyCtx, inputs: &[&Value]) -> Vec<Value> {
+        let x = inputs[0].as_a2();
+        let batch = x.len / self.d;
+        let revealed = reveal2(ctx, x);
+        let rows: Vec<Vec<i64>> = if revealed.is_empty() {
+            vec![Vec::new(); batch] // P0 learns nothing
+        } else {
+            revealed
+                .chunks(self.d)
+                .map(|c| c.iter().map(|&v| R4.decode(v)).collect())
+                .collect()
+        };
+        vec![Value::Clear(rows)]
+    }
+}
+
 /// Output-minimized classifier head: only the *argmax index* of the
 /// logits is ever opened — the logit values stay secret
 /// (`protocols::argmax`).
@@ -754,10 +797,19 @@ impl Params for DryParams {
     }
 }
 
-/// Which classifier head a BERT graph ends in.
+/// Which head a BERT graph ends in (the low-level selector behind
+/// [`GraphSpec`]'s task mapping).
 enum Head {
+    /// CLS-row logits, revealed at P1/P2.
     Logits,
+    /// Output-minimized: only the argmax class index is opened.
     Argmax,
+    /// Per-position logits over the FULL hidden state (NER): `batch*s`
+    /// revealed rows of `n_classes`.
+    TokenLogits,
+    /// Reveal the pooled CLS hidden rows (embedding extraction): no
+    /// classifier weights are shared at all.
+    Hidden,
 }
 
 // ---------------------------------------------------------------------------
@@ -789,14 +841,20 @@ fn build_bert(
     per_layer: &[LayerQuantConfig],
     weights: Option<&Weights>,
     head: Head,
+    tag: &str,
     ps: &mut dyn Params,
     opt: OptConfig,
 ) -> SecureGraph {
     cfg.validate().expect("invalid BertConfig");
     assert_eq!(per_layer.len(), cfg.n_layers, "one LayerQuantConfig per layer");
     let (s, d, dh, nh) = (cfg.seq_len, cfg.d_model, cfg.d_head(), cfg.n_heads);
+    // The task tag is part of the graph NAME, and the name is hashed
+    // into the fingerprint: a sentence-pair graph is structurally
+    // identical to the classify graph but its weights differ, so it
+    // must key distinct pools/tapes. The untagged classify name is the
+    // frozen parity baseline (`graph_parity.rs`).
     let (mut b, mut h4) = GraphBuilder::new(
-        &format!("bert(l={},d={},s={})", cfg.n_layers, d, s),
+        &format!("bert{tag}(l={},d={},s={})", cfg.n_layers, d, s),
         P1,
         R4,
         s * d,
@@ -868,49 +926,240 @@ fn build_bert(
         let f4 = b.push(FfnOp { w1, w2, d, d_ff: cfg.d_ff, label: p("ffn") }, &[h1])[0];
         h4 = b.push(ResidualLnOp { ln: ln2, d, label: p("res_ln2") }, &[h1, f4])[0];
     }
-    let cls_vals: Option<Vec<u64>> = weights.map(|w| {
-        w.tensor("cls.w")
-            .data
-            .iter()
-            .map(|&v| R16.encode(v * cfg.scale_cls))
-            .collect()
-    });
-    let cls_w = ps.rss(R16, cls_vals, cfg.n_classes * d);
-    let cls = b.push(ClsSelectOp { s, d, label: "cls.select".into() }, &[h4])[0];
+    // The embedding head shares no classifier weights at all; every
+    // other head shares `cls.w` here — all parties take the same branch
+    // (the head is public graph structure), so the Π_share sequence
+    // stays identical across parties.
+    let share_cls = |ps: &mut dyn Params| -> Rss {
+        let cls_vals: Option<Vec<u64>> = weights.map(|w| {
+            w.tensor("cls.w")
+                .data
+                .iter()
+                .map(|&v| R16.encode(v * cfg.scale_cls))
+                .collect()
+        });
+        ps.rss(R16, cls_vals, cfg.n_classes * d)
+    };
     let out = match head {
-        Head::Logits => b.push(
-            ClassifierOp { w: cls_w, d, n_classes: cfg.n_classes, label: "cls.logits".into() },
-            &[cls],
-        )[0],
-        Head::Argmax => b.push(
-            ArgmaxHeadOp { w: cls_w, d, n_classes: cfg.n_classes, label: "cls.argmax".into() },
-            &[cls],
-        )[0],
+        Head::Logits => {
+            let cls_w = share_cls(ps);
+            let cls = b.push(ClsSelectOp { s, d, label: "cls.select".into() }, &[h4])[0];
+            b.push(
+                ClassifierOp { w: cls_w, d, n_classes: cfg.n_classes, label: "cls.logits".into() },
+                &[cls],
+            )[0]
+        }
+        Head::Argmax => {
+            let cls_w = share_cls(ps);
+            let cls = b.push(ClsSelectOp { s, d, label: "cls.select".into() }, &[h4])[0];
+            b.push(
+                ArgmaxHeadOp { w: cls_w, d, n_classes: cfg.n_classes, label: "cls.argmax".into() },
+                &[cls],
+            )[0]
+        }
+        // Per-position head: the classifier matmul over the FULL hidden
+        // state — `ClassifierOp` computes its row count as len/d, so it
+        // naturally emits `batch*s` logit rows.
+        Head::TokenLogits => {
+            let cls_w = share_cls(ps);
+            b.push(
+                ClassifierOp {
+                    w: cls_w,
+                    d,
+                    n_classes: cfg.n_classes,
+                    label: "cls.token_logits".into(),
+                },
+                &[h4],
+            )[0]
+        }
+        Head::Hidden => {
+            let cls = b.push(ClsSelectOp { s, d, label: "cls.select".into() }, &[h4])[0];
+            b.push(RevealRowsOp { d, label: "cls.reveal".into() }, &[cls])[0]
+        }
     };
     b.output(out);
     b.output(h4);
     b.finish_with(opt)
 }
 
+/// One typed description of a servable BERT graph: task, model shape,
+/// per-layer quantization, serving bucket and optimizer pipeline — the
+/// single graph-construction entry point (see DESIGN.md
+/// §Heterogeneous serving). Every builder call in src/, tests and benches goes through
+/// `GraphSpec::build` (live, under `Phase::Setup`) or `GraphSpec::dry`
+/// (share-less, plan/accounting only); the old free-function builders
+/// survive one PR as deprecated one-line wrappers.
+#[derive(Clone)]
+pub struct GraphSpec {
+    /// Which workload head the trunk ends in.
+    pub task: TaskKind,
+    /// Model shape; `model.seq_len` is overridden by `seq`.
+    pub model: BertConfig,
+    /// Per-layer quantization knobs (one entry per layer at the
+    /// effective depth).
+    pub quant: Vec<LayerQuantConfig>,
+    /// Serving window size this spec plans for (plan rendering and pool
+    /// prefill metadata; the sealed graph itself is batch-agnostic).
+    pub batch: usize,
+    /// Padded bucket sequence length the graph is built at.
+    pub seq: usize,
+    /// Optimizer pipeline the graph is sealed with.
+    pub opt: OptConfig,
+}
+
+impl GraphSpec {
+    /// A spec with the common defaults: uniform tournament quantization,
+    /// `seq = model.seq_len`, window of 1, `--opt 0`.
+    pub fn new(task: TaskKind, model: BertConfig) -> GraphSpec {
+        GraphSpec {
+            task,
+            quant: LayerQuantConfig::uniform(&model, MaxStrategy::Tournament),
+            batch: 1,
+            seq: model.seq_len,
+            model,
+            opt: OptConfig::none(),
+        }
+    }
+
+    /// Rebuild at a different padded bucket length.
+    pub fn with_seq(mut self, seq: usize) -> GraphSpec {
+        self.seq = seq;
+        self
+    }
+
+    /// Seal with a different optimizer pipeline.
+    pub fn with_opt(mut self, opt: OptConfig) -> GraphSpec {
+        self.opt = opt;
+        self
+    }
+
+    /// Plan for a different window size.
+    pub fn with_batch(mut self, batch: usize) -> GraphSpec {
+        self.batch = batch;
+        self
+    }
+
+    /// Uniform per-layer quantization with a different `Π_max`
+    /// realization.
+    pub fn with_strategy(mut self, strat: MaxStrategy) -> GraphSpec {
+        self.quant = LayerQuantConfig::uniform(&self.model, strat);
+        self
+    }
+
+    /// Explicit per-layer quantization knobs.
+    pub fn with_quant(mut self, quant: Vec<LayerQuantConfig>) -> GraphSpec {
+        self.quant = quant;
+        self
+    }
+
+    /// The model shape at this spec's bucket length (what the builders
+    /// and the replay sessions actually run).
+    pub fn effective(&self) -> BertConfig {
+        BertConfig { seq_len: self.seq, ..self.model }
+    }
+
+    /// Bucket-aware validation: errors name this spec's (task, bucket).
+    pub fn validate(&self) -> Result<(), String> {
+        self.model.validate_bucket(self.task, self.seq)?;
+        if self.quant.len() != self.model.n_layers {
+            return Err(format!(
+                "task {} bucket s{}: {} LayerQuantConfig entries for {} layers",
+                self.task.as_str(),
+                self.seq,
+                self.quant.len(),
+                self.model.n_layers
+            ));
+        }
+        Ok(())
+    }
+
+    /// Flat input elements per request at the bucket length (requests
+    /// shorter than the bucket are zero-padded by the sequencer).
+    pub fn input_len(&self) -> usize {
+        self.seq * self.model.d_model
+    }
+
+    /// Revealed output elements per request (task-appropriate head
+    /// width).
+    pub fn out_len(&self) -> usize {
+        self.task.out_len(&self.model, self.seq)
+    }
+
+    fn head_and_tag(&self) -> (Head, &'static str) {
+        match self.task {
+            TaskKind::Classify => (Head::Logits, ""),
+            TaskKind::Ner => (Head::TokenLogits, "-ner"),
+            TaskKind::Pair => (Head::Logits, "-pair"),
+            TaskKind::Embed => (Head::Hidden, "-embed"),
+        }
+    }
+
+    /// Live build under `Phase::Setup`: runs the real `Π_share`
+    /// protocols; exactly P0 supplies weights. All `--opt` levels share
+    /// the same `Π_share` sequence — only seal-time passes differ.
+    pub fn build(&self, ctx: &PartyCtx, weights: Option<&Weights>) -> SecureGraph {
+        assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
+        self.validate().expect("invalid GraphSpec");
+        let (head, tag) = self.head_and_tag();
+        let cfg = self.effective();
+        ctx.with_phase(Phase::Setup, |ctx| {
+            build_bert(&cfg, &self.quant, weights, head, tag, &mut LiveParams { ctx }, self.opt)
+        })
+    }
+
+    /// Share-less build: plans, shapes, fingerprints and byte accounting
+    /// all work (derived from public shapes only); evaluating a dry
+    /// graph is a bug. What `repro plan` and the offline benches walk —
+    /// no session, no weights, no communication. Dry and live builds of
+    /// the same spec share names, so their fingerprints agree.
+    pub fn dry(&self) -> SecureGraph {
+        self.validate().expect("invalid GraphSpec");
+        let (head, tag) = self.head_and_tag();
+        let cfg = self.effective();
+        build_bert(&cfg, &self.quant, None, head, tag, &mut DryParams, self.opt)
+    }
+
+    /// Live build of the output-minimized ARGMAX variant of the
+    /// classification head (only the predicted class index is ever
+    /// opened). Only meaningful for [`TaskKind::Classify`].
+    pub fn build_argmax(&self, ctx: &PartyCtx, weights: Option<&Weights>) -> SecureGraph {
+        assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
+        assert_eq!(self.task, TaskKind::Classify, "argmax head is a classify variant");
+        self.validate().expect("invalid GraphSpec");
+        let cfg = self.effective();
+        ctx.with_phase(Phase::Setup, |ctx| {
+            build_bert(&cfg, &self.quant, weights, Head::Argmax, "", &mut LiveParams { ctx }, self.opt)
+        })
+    }
+}
+
+/// Regroup a head's revealed Clear rows into ONE flat output vector per
+/// request: head rows are batch-major (classify/pair/embed emit one row
+/// per request; the NER head emits `s` rows per request), so chunking
+/// by `rows.len() / batch` is the per-request grouping for every task.
+/// P0's empty rows stay empty.
+pub fn per_request_outputs(rows: Vec<Vec<i64>>, batch: usize) -> Vec<Vec<i64>> {
+    assert!(batch > 0 && rows.len() % batch == 0, "head rows must cover the window");
+    let per = rows.len() / batch;
+    rows.chunks(per).map(|c| c.concat()).collect()
+}
+
 /// Model-owner setup as a graph builder: P0 supplies the (calibrated)
 /// weights; all three parties end with their shares of every `W'`, γ',
 /// β and the scale-folded conversion tables, wired into a
-/// [`SecureGraph`] whose outputs are `[logits, final hidden]`. Each
-/// layer carries its own [`LayerQuantConfig`]. Runs under
-/// `Phase::Setup`. Sealed at `--opt 0` — the frozen parity baseline;
-/// [`bert_graph_opt`] selects the optimizer pipeline.
+/// [`SecureGraph`] whose outputs are `[logits, final hidden]`.
+#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).build(ctx, weights)")]
 pub fn bert_graph(
     ctx: &PartyCtx,
     cfg: &BertConfig,
     per_layer: &[LayerQuantConfig],
     weights: Option<&Weights>,
 ) -> SecureGraph {
-    bert_graph_opt(ctx, cfg, per_layer, weights, OptConfig::none())
+    GraphSpec::new(TaskKind::Classify, *cfg).with_quant(per_layer.to_vec()).build(ctx, weights)
 }
 
-/// [`bert_graph`] sealed with an explicit optimizer pipeline
-/// (DESIGN.md §Graph optimizer). All `--opt` levels share the same
-/// `Π_share` setup sequence; only seal-time passes differ.
+/// [`bert_graph`] sealed with an explicit optimizer pipeline.
+#[deprecated(note = "use GraphSpec::new(..).with_opt(opt).build(ctx, weights)")]
 pub fn bert_graph_opt(
     ctx: &PartyCtx,
     cfg: &BertConfig,
@@ -918,35 +1167,38 @@ pub fn bert_graph_opt(
     weights: Option<&Weights>,
     opt: OptConfig,
 ) -> SecureGraph {
-    assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
-    ctx.with_phase(Phase::Setup, |ctx| {
-        build_bert(cfg, per_layer, weights, Head::Logits, &mut LiveParams { ctx }, opt)
-    })
+    GraphSpec::new(TaskKind::Classify, *cfg)
+        .with_quant(per_layer.to_vec())
+        .with_opt(opt)
+        .build(ctx, weights)
 }
 
 /// [`bert_graph`] with uniform per-layer knobs and the tournament
-/// `Π_max` — the common serving default.
+/// `Π_max` — the frozen parity baseline (`graph_parity.rs`).
+#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).build(ctx, weights)")]
 pub fn bert_graph_default(
     ctx: &PartyCtx,
     cfg: &BertConfig,
     weights: Option<&Weights>,
 ) -> SecureGraph {
-    bert_graph(ctx, cfg, &LayerQuantConfig::uniform(cfg, MaxStrategy::Tournament), weights)
+    GraphSpec::new(TaskKind::Classify, *cfg).build(ctx, weights)
 }
 
-/// [`bert_graph`] variant ending in the output-minimized argmax head:
-/// the parties only ever open the predicted class index, never the
-/// logits. Outputs are `[class rows, final hidden]`.
+/// [`bert_graph`] variant ending in the output-minimized argmax head.
+#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).build_argmax(ctx, weights)")]
 pub fn bert_classify_graph(
     ctx: &PartyCtx,
     cfg: &BertConfig,
     per_layer: &[LayerQuantConfig],
     weights: Option<&Weights>,
 ) -> SecureGraph {
-    bert_classify_graph_opt(ctx, cfg, per_layer, weights, OptConfig::none())
+    GraphSpec::new(TaskKind::Classify, *cfg)
+        .with_quant(per_layer.to_vec())
+        .build_argmax(ctx, weights)
 }
 
 /// [`bert_classify_graph`] sealed with an explicit optimizer pipeline.
+#[deprecated(note = "use GraphSpec::new(..).with_opt(opt).build_argmax(ctx, weights)")]
 pub fn bert_classify_graph_opt(
     ctx: &PartyCtx,
     cfg: &BertConfig,
@@ -954,29 +1206,26 @@ pub fn bert_classify_graph_opt(
     weights: Option<&Weights>,
     opt: OptConfig,
 ) -> SecureGraph {
-    assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
-    ctx.with_phase(Phase::Setup, |ctx| {
-        build_bert(cfg, per_layer, weights, Head::Argmax, &mut LiveParams { ctx }, opt)
-    })
+    GraphSpec::new(TaskKind::Classify, *cfg)
+        .with_quant(per_layer.to_vec())
+        .with_opt(opt)
+        .build_argmax(ctx, weights)
 }
 
-/// Build the BERT graph with share-less placeholder parameters: plans,
-/// shapes, fingerprints and byte accounting all work (they are derived
-/// from public shapes only); evaluating a dry graph is a bug. This is
-/// what `repro plan` and the offline bench walk — no session, no
-/// weights, no communication.
+/// Share-less classify build (see [`GraphSpec::dry`]).
+#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).dry()")]
 pub fn bert_graph_dry(cfg: &BertConfig, per_layer: &[LayerQuantConfig]) -> SecureGraph {
-    bert_graph_dry_opt(cfg, per_layer, OptConfig::none())
+    GraphSpec::new(TaskKind::Classify, *cfg).with_quant(per_layer.to_vec()).dry()
 }
 
-/// [`bert_graph_dry`] sealed with an explicit optimizer pipeline — what
-/// `repro plan --opt 1` and the offline bench's dedup rows walk.
+/// [`bert_graph_dry`] sealed with an explicit optimizer pipeline.
+#[deprecated(note = "use GraphSpec::new(..).with_opt(opt).dry()")]
 pub fn bert_graph_dry_opt(
     cfg: &BertConfig,
     per_layer: &[LayerQuantConfig],
     opt: OptConfig,
 ) -> SecureGraph {
-    build_bert(cfg, per_layer, None, Head::Logits, &mut DryParams, opt)
+    GraphSpec::new(TaskKind::Classify, *cfg).with_quant(per_layer.to_vec()).with_opt(opt).dry()
 }
 
 // ---------------------------------------------------------------------------
@@ -1072,31 +1321,70 @@ fn build_mlp(
     b.finish_with(opt)
 }
 
-/// Build the MLP classifier graph; P0 supplies the weights. Runs under
-/// `Phase::Setup`. Outputs are `[logits, hidden]`, like [`bert_graph`].
+/// Typed spec for the standalone MLP graph — the [`GraphSpec`] analog
+/// for the non-BERT builder (one entry point, live or dry).
+#[derive(Clone)]
+pub struct MlpSpec {
+    /// Model shape.
+    pub model: MlpConfig,
+    /// Optimizer pipeline the graph is sealed with.
+    pub opt: OptConfig,
+}
+
+impl MlpSpec {
+    /// A spec sealed at `--opt 0`.
+    pub fn new(model: MlpConfig) -> MlpSpec {
+        MlpSpec { model, opt: OptConfig::none() }
+    }
+
+    /// Seal with a different optimizer pipeline.
+    pub fn with_opt(mut self, opt: OptConfig) -> MlpSpec {
+        self.opt = opt;
+        self
+    }
+
+    /// Live build under `Phase::Setup`; exactly P0 supplies weights.
+    /// Outputs are `[logits, hidden]`, like the BERT graphs.
+    pub fn build(&self, ctx: &PartyCtx, weights: Option<&MlpWeights>) -> SecureGraph {
+        assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
+        ctx.with_phase(Phase::Setup, |ctx| {
+            build_mlp(&self.model, weights, &mut LiveParams { ctx }, self.opt)
+        })
+    }
+
+    /// Share-less build for planning/accounting (see [`GraphSpec::dry`]).
+    pub fn dry(&self) -> SecureGraph {
+        build_mlp(&self.model, None, &mut DryParams, self.opt)
+    }
+}
+
+/// Build the MLP classifier graph; P0 supplies the weights.
+#[deprecated(note = "use MlpSpec::new(cfg).build(ctx, weights)")]
 pub fn mlp_graph(ctx: &PartyCtx, cfg: &MlpConfig, weights: Option<&MlpWeights>) -> SecureGraph {
-    mlp_graph_opt(ctx, cfg, weights, OptConfig::none())
+    MlpSpec::new(*cfg).build(ctx, weights)
 }
 
 /// [`mlp_graph`] sealed with an explicit optimizer pipeline.
+#[deprecated(note = "use MlpSpec::new(cfg).with_opt(opt).build(ctx, weights)")]
 pub fn mlp_graph_opt(
     ctx: &PartyCtx,
     cfg: &MlpConfig,
     weights: Option<&MlpWeights>,
     opt: OptConfig,
 ) -> SecureGraph {
-    assert!((ctx.id == P0) == weights.is_some(), "exactly P0 supplies weights");
-    ctx.with_phase(Phase::Setup, |ctx| build_mlp(cfg, weights, &mut LiveParams { ctx }, opt))
+    MlpSpec::new(*cfg).with_opt(opt).build(ctx, weights)
 }
 
-/// Share-less MLP graph for planning/accounting (see [`bert_graph_dry`]).
+/// Share-less MLP graph for planning/accounting.
+#[deprecated(note = "use MlpSpec::new(cfg).dry()")]
 pub fn mlp_graph_dry(cfg: &MlpConfig) -> SecureGraph {
-    mlp_graph_dry_opt(cfg, OptConfig::none())
+    MlpSpec::new(*cfg).dry()
 }
 
 /// [`mlp_graph_dry`] sealed with an explicit optimizer pipeline.
+#[deprecated(note = "use MlpSpec::new(cfg).with_opt(opt).dry()")]
 pub fn mlp_graph_dry_opt(cfg: &MlpConfig, opt: OptConfig) -> SecureGraph {
-    build_mlp(cfg, None, &mut DryParams, opt)
+    MlpSpec::new(*cfg).with_opt(opt).dry()
 }
 
 // ---------------------------------------------------------------------------

@@ -516,8 +516,8 @@ pub struct RecoveryState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::config::{BertConfig, LayerQuantConfig};
-    use crate::model::secure::{bert_graph_dry, mlp_graph_dry, MlpConfig};
+    use crate::model::config::{BertConfig, TaskKind};
+    use crate::model::secure::{GraphSpec, MlpConfig, MlpSpec};
     use crate::protocols::max::MaxStrategy;
 
     fn tmp_dir(tag: &str) -> PathBuf {
@@ -566,8 +566,7 @@ mod tests {
         let cfg = BertConfig::tiny();
         let mut out = Vec::new();
         for strat in [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort] {
-            let per_layer = LayerQuantConfig::uniform(&cfg, strat);
-            let g = bert_graph_dry(&cfg, &per_layer);
+            let g = GraphSpec::new(TaskKind::Classify, cfg).with_strategy(strat).dry();
             for batch in [1usize, 4] {
                 let shapes: Vec<CorrShape> =
                     g.plan(batch).iter().map(|op| op.shape()).collect();
@@ -575,7 +574,7 @@ mod tests {
                 out.push((g.fingerprint(), batch, shapes));
             }
         }
-        let g = mlp_graph_dry(&MlpConfig::tiny());
+        let g = MlpSpec::new(MlpConfig::tiny()).dry();
         for batch in [1usize, 4] {
             out.push((g.fingerprint(), batch, g.plan(batch).iter().map(|op| op.shape()).collect()));
         }

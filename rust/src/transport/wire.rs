@@ -44,8 +44,13 @@ use crate::transport::metrics::Phase;
 /// acks, and the serving control plane (manifests). Version 3 added the
 /// recovery epoch to party hellos and acks, the [`Tag::Resync`] /
 /// [`Tag::Fault`] control frames, and the extended [`ServeStats`]
-/// payload (DESIGN.md §Durability & recovery).
-pub const WIRE_VERSION: u8 = 3;
+/// payload (DESIGN.md §Durability & recovery). Version 4 added the
+/// (task, seq) bucket fields to the request, manifest, prep and
+/// window-report payloads for heterogeneous-workload serving
+/// (DESIGN.md §Heterogeneous serving). The task travels as a raw byte
+/// at this layer — `model::config::TaskKind` decodes it — so the
+/// transport stays model-agnostic.
+pub const WIRE_VERSION: u8 = 4;
 
 /// Refuse frames whose length prefix exceeds this (1 GiB): a corrupt or
 /// hostile prefix must not drive allocation.
@@ -448,11 +453,14 @@ pub fn coord_handshake(
 // ---- client protocol payload encodings (all little-endian) ----
 
 /// Encode a [`Tag::InferRequest`] payload: the per-connection sequence
-/// number plus ONE request's flattened quantized input (sent only to
-/// P1, the data owner).
-pub fn encode_infer_request(seq: u32, input: &[i64]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(8 + input.len() * 8);
+/// number, the task byte, the TRUE (unpadded) sequence length, plus ONE
+/// request's flattened quantized input (sent only to P1, the data
+/// owner). P1 pads the input to its serving bucket.
+pub fn encode_infer_request(seq: u32, task: u8, true_seq: u32, input: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13 + input.len() * 8);
     out.extend_from_slice(&seq.to_le_bytes());
+    out.push(task);
+    out.extend_from_slice(&true_seq.to_le_bytes());
     out.extend_from_slice(&(input.len() as u32).to_le_bytes());
     for &v in input {
         out.extend_from_slice(&v.to_le_bytes());
@@ -460,30 +468,32 @@ pub fn encode_infer_request(seq: u32, input: &[i64]) -> Vec<u8> {
     out
 }
 
-/// Decode a [`Tag::InferRequest`] payload into `(seq, input)`. Hostile
-/// header fields are an [`Error`], never an overflow or out-of-bounds
-/// index.
-pub fn decode_infer_request(payload: &[u8]) -> Result<(u32, Vec<i64>)> {
-    if payload.len() < 8 {
+/// Decode a [`Tag::InferRequest`] payload into `(seq, task, true_seq,
+/// input)`. Hostile header fields are an [`Error`], never an overflow
+/// or out-of-bounds index.
+pub fn decode_infer_request(payload: &[u8]) -> Result<(u32, u8, u32, Vec<i64>)> {
+    if payload.len() < 13 {
         bail!("infer request: truncated header");
     }
     let seq = u32::from_le_bytes(payload[0..4].try_into().unwrap());
-    let per_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let task = payload[4];
+    let true_seq = u32::from_le_bytes(payload[5..9].try_into().unwrap());
+    let per_len = u32::from_le_bytes(payload[9..13].try_into().unwrap()) as usize;
     let body_ok = per_len
         .checked_mul(8)
-        .map(|v| v == payload.len() - 8)
+        .map(|v| v == payload.len() - 13)
         .unwrap_or(false);
     if !body_ok {
         bail!(
             "infer request: body is {} bytes, expected {per_len} values",
-            payload.len() - 8,
+            payload.len() - 13,
         );
     }
-    let input = payload[8..]
+    let input = payload[13..]
         .chunks_exact(8)
         .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    Ok((seq, input))
+    Ok((seq, task, true_seq, input))
 }
 
 /// Encode a [`Tag::Logits`] payload: the request id plus its revealed
@@ -540,10 +550,15 @@ pub struct WindowReport {
     pub offline_bytes: u64,
     /// Wall-clock nanoseconds of the window's MPC pass at this party.
     pub wall_ns: u64,
+    /// Task byte of the bucket this window was cut from (see
+    /// `model::config::TaskKind`).
+    pub task: u8,
+    /// Padded bucket sequence length of the window.
+    pub seq: u32,
 }
 
 impl WindowReport {
-    const LEN: usize = 48;
+    const LEN: usize = 53;
 
     fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.wid.to_le_bytes());
@@ -553,6 +568,8 @@ impl WindowReport {
         out.extend_from_slice(&self.online_bytes.to_le_bytes());
         out.extend_from_slice(&self.offline_bytes.to_le_bytes());
         out.extend_from_slice(&self.wall_ns.to_le_bytes());
+        out.push(self.task);
+        out.extend_from_slice(&self.seq.to_le_bytes());
     }
 
     fn decode(b: &[u8]) -> Result<WindowReport> {
@@ -569,6 +586,8 @@ impl WindowReport {
             online_bytes: u64_at(24),
             offline_bytes: u64_at(32),
             wall_ns: u64_at(40),
+            task: b[48],
+            seq: u32_at(49),
         })
     }
 }
@@ -609,11 +628,14 @@ pub fn decode_refused(payload: &[u8]) -> Result<(u64, String)> {
     Ok((id, String::from_utf8_lossy(&payload[8..]).into_owned()))
 }
 
-/// Encode a [`Tag::Manifest`] payload: the window id plus the request
-/// ids composing the window, in row order.
-pub fn encode_manifest(wid: u64, ids: &[u64]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(12 + ids.len() * 8);
+/// Encode a [`Tag::Manifest`] payload: the window id, the (task,
+/// bucket) the window was cut from, plus the request ids composing the
+/// window, in row order.
+pub fn encode_manifest(wid: u64, task: u8, seq: u32, ids: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17 + ids.len() * 8);
     out.extend_from_slice(&wid.to_le_bytes());
+    out.push(task);
+    out.extend_from_slice(&seq.to_le_bytes());
     out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
     for &id in ids {
         out.extend_from_slice(&id.to_le_bytes());
@@ -621,37 +643,45 @@ pub fn encode_manifest(wid: u64, ids: &[u64]) -> Vec<u8> {
     out
 }
 
-/// Decode a [`Tag::Manifest`] payload into `(wid, ids)`; an empty or
-/// length-inconsistent manifest is an [`Error`].
-pub fn decode_manifest(payload: &[u8]) -> Result<(u64, Vec<u64>)> {
-    if payload.len() < 12 {
+/// Decode a [`Tag::Manifest`] payload into `(wid, task, seq, ids)`; an
+/// empty or length-inconsistent manifest is an [`Error`].
+pub fn decode_manifest(payload: &[u8]) -> Result<(u64, u8, u32, Vec<u64>)> {
+    if payload.len() < 17 {
         bail!("manifest: truncated header");
     }
     let wid = u64::from_le_bytes(payload[0..8].try_into().unwrap());
-    let n = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
-    let body_ok = n.checked_mul(8).map(|v| v == payload.len() - 12).unwrap_or(false);
+    let task = payload[8];
+    let seq = u32::from_le_bytes(payload[9..13].try_into().unwrap());
+    let n = u32::from_le_bytes(payload[13..17].try_into().unwrap()) as usize;
+    let body_ok = n.checked_mul(8).map(|v| v == payload.len() - 17).unwrap_or(false);
     if !body_ok || n == 0 {
-        bail!("manifest: bad body ({} ids, {} bytes)", n, payload.len() - 12);
+        bail!("manifest: bad body ({} ids, {} bytes)", n, payload.len() - 17);
     }
-    let ids = payload[12..]
+    let ids = payload[17..]
         .chunks_exact(8)
         .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    Ok((wid, ids))
+    Ok((wid, task, seq, ids))
 }
 
-/// Encode a [`Tag::Prep`] payload: the window size to produce a
-/// correlation tape for.
-pub fn encode_prep(batch: u32) -> Vec<u8> {
-    batch.to_le_bytes().to_vec()
+/// Encode a [`Tag::Prep`] payload: the (task, bucket) graph and the
+/// window size to produce a correlation tape for.
+pub fn encode_prep(task: u8, seq: u32, batch: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9);
+    out.push(task);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&batch.to_le_bytes());
+    out
 }
 
-/// Decode a [`Tag::Prep`] payload.
-pub fn decode_prep(payload: &[u8]) -> Result<u32> {
-    if payload.len() != 4 {
+/// Decode a [`Tag::Prep`] payload into `(task, seq, batch)`.
+pub fn decode_prep(payload: &[u8]) -> Result<(u8, u32, u32)> {
+    if payload.len() != 9 {
         bail!("prep directive: bad length {}", payload.len());
     }
-    Ok(u32::from_le_bytes(payload.try_into().unwrap()))
+    let seq = u32::from_le_bytes(payload[1..5].try_into().unwrap());
+    let batch = u32::from_le_bytes(payload[5..9].try_into().unwrap());
+    Ok((payload[0], seq, batch))
 }
 
 /// Encode a [`Tag::Bind`] payload: the P1 connection-id namespace whose
@@ -834,11 +864,11 @@ mod tests {
     #[test]
     fn infer_request_roundtrip() {
         let input = vec![1i64, -2, 3];
-        let enc = encode_infer_request(9, &input);
-        assert_eq!(decode_infer_request(&enc).unwrap(), (9, input));
+        let enc = encode_infer_request(9, 2, 16, &input);
+        assert_eq!(decode_infer_request(&enc).unwrap(), (9, 2, 16, input));
         assert!(decode_infer_request(&enc[..6]).is_err());
         // Length-inconsistent header is an error, not a bad slice.
-        let mut bad = encode_infer_request(9, &[1, 2]);
+        let mut bad = encode_infer_request(9, 0, 8, &[1, 2]);
         bad.truncate(bad.len() - 8);
         assert!(decode_infer_request(&bad).is_err());
     }
@@ -848,6 +878,8 @@ mod tests {
         // per_len * 8 wrapping must be refused by checked math.
         let mut payload = Vec::new();
         payload.extend_from_slice(&1u32.to_le_bytes()); // seq
+        payload.push(0); // task
+        payload.extend_from_slice(&8u32.to_le_bytes()); // true_seq
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // per_len
         assert!(decode_infer_request(&payload).is_err());
         let mut logits = Vec::new();
@@ -855,8 +887,10 @@ mod tests {
         logits.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_logits(&logits).is_err());
         let mut manifest = Vec::new();
-        manifest.extend_from_slice(&0u64.to_le_bytes());
-        manifest.extend_from_slice(&u32::MAX.to_le_bytes());
+        manifest.extend_from_slice(&0u64.to_le_bytes()); // wid
+        manifest.push(0); // task
+        manifest.extend_from_slice(&8u32.to_le_bytes()); // seq
+        manifest.extend_from_slice(&u32::MAX.to_le_bytes()); // n
         assert!(decode_manifest(&manifest).is_err());
     }
 
@@ -878,6 +912,8 @@ mod tests {
             online_bytes: 123_456,
             offline_bytes: 0,
             wall_ns: 9_999,
+            task: 1,
+            seq: 16,
         };
         let enc = encode_done(request_id(2, 8), &report);
         assert_eq!(decode_done(&enc).unwrap(), (request_id(2, 8), report));
@@ -894,15 +930,15 @@ mod tests {
     #[test]
     fn manifest_roundtrip() {
         let ids = vec![request_id(1, 0), request_id(2, 0), request_id(1, 1)];
-        let enc = encode_manifest(5, &ids);
-        assert_eq!(decode_manifest(&enc).unwrap(), (5, ids));
+        let enc = encode_manifest(5, 3, 16, &ids);
+        assert_eq!(decode_manifest(&enc).unwrap(), (5, 3, 16, ids));
         // empty manifests are refused
-        assert!(decode_manifest(&encode_manifest(5, &[])).is_err());
+        assert!(decode_manifest(&encode_manifest(5, 0, 8, &[])).is_err());
     }
 
     #[test]
     fn prep_bind_stats_roundtrip() {
-        assert_eq!(decode_prep(&encode_prep(8)).unwrap(), 8);
+        assert_eq!(decode_prep(&encode_prep(1, 16, 8)).unwrap(), (1, 16, 8));
         assert!(decode_prep(&[1, 2]).is_err());
         assert_eq!(decode_bind(&encode_bind(12)).unwrap(), 12);
         let mut stats = ServeStats {

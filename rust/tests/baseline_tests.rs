@@ -16,9 +16,11 @@ fn crypten_comm_dwarfs_ours_per_layer_shape() {
 
     let ours_online = {
         let (wc, xc) = (clone_w(&w, cfg), x.clone());
-        use ppq_bert::model::secure::{bert_graph_default, secure_infer};
+        use ppq_bert::model::config::TaskKind;
+        use ppq_bert::model::secure::{secure_infer, GraphSpec};
         let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == 0 { Some(&wc) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg)
+                .build(ctx, if ctx.id == 0 { Some(&wc) } else { None });
             secure_infer(ctx, &m, if ctx.id == P1 { Some(&xc) } else { None });
         });
         snap.total_bytes(Phase::Online)

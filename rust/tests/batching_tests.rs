@@ -6,8 +6,8 @@
 
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer, secure_infer_batch};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer, secure_infer_batch, GraphSpec};
 use ppq_bert::model::weights::Weights;
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::protocols::max::MaxStrategy;
@@ -37,7 +37,7 @@ fn batched_logits_match_independent_inference() {
 
     let (wc, inc) = (clone_weights(&w, cfg), inputs.clone());
     let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-        let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&wc) } else { None });
+        let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&wc) } else { None });
         let (batched, h4) = secure_infer_batch(
             ctx,
             &m,
@@ -84,7 +84,7 @@ fn batch_of_four_costs_single_request_rounds() {
         let (w, _) = prepared_model(cfg);
         let inputs = prepared_inputs(&cfg, batch);
         let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&w) } else { None });
             secure_infer_batch(ctx, &m, batch, if ctx.id == P1 { Some(&inputs) } else { None });
         });
         (

@@ -3,15 +3,15 @@
 //! size × `Π_max` realization the graph-derived tape must be consumed
 //! exactly — no leftovers, no inline fallbacks — and a warm (prepped)
 //! window's logits must be bit-identical to a cold one's
-//! (DESIGN.md §Secure op graph).
+//! (DESIGN.md §Secure op graph). All graph construction goes through
+//! the typed [`GraphSpec`] / [`MlpSpec`] entry points, including the
+//! three non-classify task heads (ner / pair / embed).
 
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
-use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::config::{BertConfig, LayerQuantConfig, TaskKind};
 use ppq_bert::model::passes::OptConfig;
 use ppq_bert::model::secure::{
-    bert_classify_graph, bert_classify_graph_opt, bert_graph, bert_graph_dry, bert_graph_dry_opt,
-    bert_graph_opt, mlp_graph_dry, mlp_graph_dry_opt, mlp_graph_opt, secure_classify,
-    secure_infer_batch, MlpConfig, MlpWeights,
+    secure_classify, secure_infer_batch, GraphSpec, MlpConfig, MlpSpec, MlpWeights,
 };
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::protocols::max::MaxStrategy;
@@ -20,19 +20,32 @@ use ppq_bert::transport::{MetricsSnapshot, Phase};
 const STRATS: [MaxStrategy; 3] = [MaxStrategy::Tournament, MaxStrategy::Linear, MaxStrategy::Sort];
 const OPTS: [OptConfig; 2] = [OptConfig::none(), OptConfig::o1()];
 
-/// One BERT window on a fresh session: build the graph, optionally prep
-/// its tape through the graph walk, evaluate, and return (P1 logits,
-/// meter, plan length).
+/// One classify window on a fresh session: build the graph, optionally
+/// prep its tape through the graph walk, evaluate, and return (P1
+/// logits, meter, plan length).
 fn run_bert(
     strat: MaxStrategy,
     batch: usize,
     warm: bool,
 ) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
-    run_bert_opt(strat, batch, warm, OptConfig::none(), 1)
+    run_task_opt(TaskKind::Classify, strat, batch, warm, OptConfig::none(), 1)
 }
 
 /// [`run_bert`] with an explicit optimizer pipeline and worker-pool size.
 fn run_bert_opt(
+    strat: MaxStrategy,
+    batch: usize,
+    warm: bool,
+    opt: OptConfig,
+    threads: usize,
+) -> (Vec<Vec<i64>>, MetricsSnapshot, usize) {
+    run_task_opt(TaskKind::Classify, strat, batch, warm, opt, threads)
+}
+
+/// One BERT-trunk window for ANY task head on a fresh session — the
+/// shared harness behind [`run_bert_opt`] and the new-head coverage.
+fn run_task_opt(
+    task: TaskKind,
     strat: MaxStrategy,
     batch: usize,
     warm: bool,
@@ -44,22 +57,21 @@ fn run_bert_opt(
     let inputs = prepared_inputs(&cfg, batch);
     let scfg = SessionCfg { threads, ..SessionCfg::default() };
     let (outs, snap) = run_3pc(scfg, move |ctx| {
-        let per = LayerQuantConfig::uniform(&cfg, strat);
         let weights = if ctx.id == P0 { Some(&w) } else { None };
-        let g = bert_graph_opt(ctx, &cfg, &per, weights, opt);
+        let g = GraphSpec::new(task, cfg).with_strategy(strat).with_opt(opt).build(ctx, weights);
         let plan_len = g.plan(batch).len();
         if warm {
             let tape = g.prep(ctx, batch);
             assert_eq!(tape.len(), plan_len);
             ctx.install_corr(tape);
         }
-        let (logits, _) =
+        let (rows, _) =
             secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
         assert_eq!(ctx.corr_pending(), 0, "tape not fully consumed (plan drift)");
-        (logits, plan_len)
+        (rows, plan_len)
     });
-    let (logits, plan_len) = outs[1].clone();
-    (logits, snap, plan_len)
+    let (rows, plan_len) = outs[1].clone();
+    (rows, snap, plan_len)
 }
 
 /// One MLP window (the non-BERT builder) on a fresh session.
@@ -81,7 +93,7 @@ fn run_mlp_opt(
     let scfg = SessionCfg { threads, ..SessionCfg::default() };
     let (outs, snap) = run_3pc(scfg, move |ctx| {
         let mw = if ctx.id == P0 { Some(MlpWeights::synth(&mcfg, 7)) } else { None };
-        let g = mlp_graph_opt(ctx, &mcfg, mw.as_ref(), opt);
+        let g = MlpSpec::new(mcfg).with_opt(opt).build(ctx, mw.as_ref());
         let plan_len = g.plan(batch).len();
         if warm {
             let tape = g.prep(ctx, batch);
@@ -134,7 +146,7 @@ fn dry_plan_bytes_match_metered_offline_traffic() {
     for batch in [1usize, 2] {
         let (_, cold, _) = run_bert(MaxStrategy::Tournament, batch, false);
         let cfg = BertConfig::tiny();
-        let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament));
+        let g = GraphSpec::new(TaskKind::Classify, cfg).dry();
         let modeled: u64 = g.plan_entries(batch).iter().map(|e| e.bytes).sum();
         assert_eq!(
             cold.total_bytes(Phase::Offline),
@@ -150,20 +162,20 @@ fn dry_plan_bytes_match_metered_offline_traffic() {
 #[test]
 fn fingerprints_track_graph_structure() {
     let cfg = BertConfig::tiny();
-    let fp = |strat: MaxStrategy| {
-        bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, strat)).fingerprint()
-    };
+    let fp =
+        |strat: MaxStrategy| GraphSpec::new(TaskKind::Classify, cfg).with_strategy(strat).dry().fingerprint();
     assert_eq!(fp(MaxStrategy::Tournament), fp(MaxStrategy::Tournament));
     assert_ne!(fp(MaxStrategy::Tournament), fp(MaxStrategy::Sort));
     assert_ne!(fp(MaxStrategy::Tournament), fp(MaxStrategy::Linear));
-    assert_ne!(fp(MaxStrategy::Tournament), mlp_graph_dry(&MlpConfig::tiny()).fingerprint());
+    assert_ne!(fp(MaxStrategy::Tournament), MlpSpec::new(MlpConfig::tiny()).dry().fingerprint());
 
     // The live build (with real shares) has the same structure, hence
     // the same fingerprint, as the dry build.
     let (w, _) = prepared_model(cfg);
     let (fps, _) = run_3pc(SessionCfg::default(), move |ctx| {
-        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-        bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&w) } else { None }).fingerprint()
+        GraphSpec::new(TaskKind::Classify, cfg)
+            .build(ctx, if ctx.id == P0 { Some(&w) } else { None })
+            .fingerprint()
     });
     assert_eq!(fps[0], fp(MaxStrategy::Tournament));
     assert_eq!(fps[0], fps[1]);
@@ -181,7 +193,9 @@ fn mixed_per_layer_strategies_stay_plan_consistent() {
         let mut per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
         per[1].max_strategy = MaxStrategy::Sort;
         per[1].sm_sx = 0.25; // per-layer softmax scale
-        let g = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&w) } else { None });
+        let g = GraphSpec::new(TaskKind::Classify, cfg)
+            .with_quant(per)
+            .build(ctx, if ctx.id == P0 { Some(&w) } else { None });
         let tape = g.prep(ctx, 2);
         ctx.install_corr(tape);
         secure_infer_batch(ctx, &g, 2, if ctx.id == P1 { Some(&inputs) } else { None });
@@ -200,9 +214,8 @@ fn classify_graph_is_plan_consistent() {
     let run = |warm: bool| -> (u64, MetricsSnapshot) {
         let (w, x) = prepared_model(cfg);
         let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
             let weights = if ctx.id == P0 { Some(&w) } else { None };
-            let g = bert_classify_graph(ctx, &cfg, &per, weights);
+            let g = GraphSpec::new(TaskKind::Classify, cfg).build_argmax(ctx, weights);
             if warm {
                 let tape = g.prep(ctx, 1);
                 ctx.install_corr(tape);
@@ -239,8 +252,7 @@ fn opt_levels_stay_plan_consistent_for_every_builder() {
         assert_eq!(warm.pool_misses(), 0, "bert {opt:?}: warm misses");
         assert_eq!(warm_logits, cold_logits, "bert {opt:?}: warm/cold logits");
         let cfg = BertConfig::tiny();
-        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-        let g = bert_graph_dry_opt(&cfg, &per, opt);
+        let g = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).dry();
         let modeled: u64 = g.plan_entries(batch).iter().map(|e| e.bytes).sum();
         assert_eq!(cold.total_bytes(Phase::Offline), modeled, "bert {opt:?}: modeled bytes");
 
@@ -251,10 +263,66 @@ fn opt_levels_stay_plan_consistent_for_every_builder() {
         assert_eq!(mwarm.pool_hits(), mplan_len as u64, "mlp {opt:?}: warm hits");
         assert_eq!(mwarm.pool_misses(), 0, "mlp {opt:?}: warm misses");
         assert_eq!(mwarm_logits, mcold_logits, "mlp {opt:?}: warm/cold logits");
-        let mg = mlp_graph_dry_opt(&MlpConfig::tiny(), opt);
+        let mg = MlpSpec::new(MlpConfig::tiny()).with_opt(opt).dry();
         let mmodeled: u64 = mg.plan_entries(batch).iter().map(|e| e.bytes).sum();
         assert_eq!(mcold.total_bytes(Phase::Offline), mmodeled, "mlp {opt:?}: modeled bytes");
     }
+}
+
+/// The three non-classify task heads are first-class graph builders
+/// (DESIGN.md §Heterogeneous serving): for every task × opt level, the
+/// warm tape is consumed exactly, warm and cold outputs are
+/// bit-identical, the dry builder's modeled bytes equal the metered
+/// offline traffic, outputs have the task-appropriate width, and
+/// `threads ∈ {1, 4}` changes nothing but wall-clock.
+#[test]
+fn new_task_heads_stay_plan_consistent() {
+    let batch = 2usize;
+    let cfg = BertConfig::tiny();
+    for task in [TaskKind::Ner, TaskKind::Pair, TaskKind::Embed] {
+        for opt in OPTS {
+            let tag = format!("{} {opt:?}", task.as_str());
+            let (cold_rows, cold, plan_len) =
+                run_task_opt(task, MaxStrategy::Tournament, batch, false, opt, 1);
+            let (warm_rows, warm, _) =
+                run_task_opt(task, MaxStrategy::Tournament, batch, true, opt, 1);
+            assert!(plan_len > 0, "{tag}");
+            assert_eq!(cold.pool_misses(), plan_len as u64, "{tag}: cold misses");
+            assert_eq!(cold.pool_hits(), 0, "{tag}: cold hits");
+            assert_eq!(warm.pool_hits(), plan_len as u64, "{tag}: warm hits");
+            assert_eq!(warm.pool_misses(), 0, "{tag}: warm misses");
+            assert_eq!(warm_rows, cold_rows, "{tag}: warm/cold outputs");
+
+            // Revealed rows regroup to one task-shaped output per request.
+            let spec = GraphSpec::new(task, cfg).with_opt(opt);
+            assert_eq!(warm_rows.len() % batch, 0, "{tag}: rows must cover the window");
+            let per_request: usize = warm_rows[..warm_rows.len() / batch]
+                .iter()
+                .map(|r| r.len())
+                .sum();
+            assert_eq!(per_request, spec.out_len(), "{tag}: per-request output width");
+
+            let dry = spec.dry();
+            let modeled: u64 = dry.plan_entries(batch).iter().map(|e| e.bytes).sum();
+            assert_eq!(cold.total_bytes(Phase::Offline), modeled, "{tag}: modeled bytes");
+
+            // The parallel-runtime invariant holds for the new heads too.
+            let (t4_rows, t4, _) =
+                run_task_opt(task, MaxStrategy::Tournament, batch, true, opt, 4);
+            assert_eq!(t4_rows, warm_rows, "{tag}: T=4 outputs");
+            assert_meters_eq(&t4, &warm, &format!("{tag} T=4"));
+        }
+    }
+
+    // Task-tagged graphs never share a tape pool with the classify
+    // trunk or with each other: all four fingerprints are distinct.
+    let mut fps: Vec<u64> = [TaskKind::Classify, TaskKind::Ner, TaskKind::Pair, TaskKind::Embed]
+        .iter()
+        .map(|&t| GraphSpec::new(t, cfg).dry().fingerprint())
+        .collect();
+    fps.sort_unstable();
+    fps.dedup();
+    assert_eq!(fps.len(), 4, "task heads must have distinct fingerprints");
 }
 
 /// The classify builder is opt-aware too: warm windows at every level
@@ -266,9 +334,8 @@ fn classify_graph_stays_plan_consistent_across_opt_levels() {
     let run = |warm: bool, opt: OptConfig| -> (u64, u64, MetricsSnapshot) {
         let (w, x) = prepared_model(cfg);
         let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
             let weights = if ctx.id == P0 { Some(&w) } else { None };
-            let g = bert_classify_graph_opt(ctx, &cfg, &per, weights, opt);
+            let g = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).build_argmax(ctx, weights);
             if warm {
                 let tape = g.prep(ctx, 1);
                 ctx.install_corr(tape);
@@ -299,14 +366,43 @@ fn classify_graph_stays_plan_consistent_across_opt_levels() {
 #[test]
 fn fingerprints_rekey_across_opt_levels_for_every_builder() {
     let cfg = BertConfig::tiny();
-    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-    let bert_fp = |opt: OptConfig| bert_graph_dry_opt(&cfg, &per, opt).fingerprint();
+    let bert_fp =
+        |opt: OptConfig| GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).dry().fingerprint();
     assert_ne!(bert_fp(OptConfig::none()), bert_fp(OptConfig::o1()));
-    // Level-0 opt builds match the opt-less builders exactly.
-    assert_eq!(bert_fp(OptConfig::none()), bert_graph_dry(&cfg, &per).fingerprint());
-    let mlp_fp = |opt: OptConfig| mlp_graph_dry_opt(&MlpConfig::tiny(), opt).fingerprint();
+    let mlp_fp = |opt: OptConfig| MlpSpec::new(MlpConfig::tiny()).with_opt(opt).dry().fingerprint();
     assert_ne!(mlp_fp(OptConfig::none()), mlp_fp(OptConfig::o1()));
-    assert_eq!(mlp_fp(OptConfig::none()), mlp_graph_dry(&MlpConfig::tiny()).fingerprint());
+}
+
+/// The deprecated free-function builders survive one PR as wrappers and
+/// must keep producing the IDENTICAL graphs (same fingerprints, hence
+/// same tape pools) as their `GraphSpec` / `MlpSpec` replacements.
+#[test]
+#[allow(deprecated)]
+fn deprecated_wrappers_build_identical_graphs() {
+    use ppq_bert::model::secure::{bert_graph_dry, bert_graph_dry_opt, mlp_graph_dry, mlp_graph_dry_opt};
+    let cfg = BertConfig::tiny();
+    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Sort);
+    assert_eq!(
+        bert_graph_dry(&cfg, &per).fingerprint(),
+        GraphSpec::new(TaskKind::Classify, cfg).with_quant(per.clone()).dry().fingerprint()
+    );
+    assert_eq!(
+        bert_graph_dry_opt(&cfg, &per, OptConfig::o1()).fingerprint(),
+        GraphSpec::new(TaskKind::Classify, cfg)
+            .with_quant(per)
+            .with_opt(OptConfig::o1())
+            .dry()
+            .fingerprint()
+    );
+    let mcfg = MlpConfig::tiny();
+    assert_eq!(
+        mlp_graph_dry(&mcfg).fingerprint(),
+        MlpSpec::new(mcfg).dry().fingerprint()
+    );
+    assert_eq!(
+        mlp_graph_dry_opt(&mcfg, OptConfig::o1()).fingerprint(),
+        MlpSpec::new(mcfg).with_opt(OptConfig::o1()).dry().fingerprint()
+    );
 }
 
 /// Deterministic meter fields must match exactly; `compute_ns` is the
@@ -354,7 +450,7 @@ fn thread_count_never_changes_outputs_or_meters() {
 #[test]
 fn plan_scales_linearly_with_batch() {
     let cfg = BertConfig::tiny();
-    let g = bert_graph_dry(&cfg, &LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament));
+    let g = GraphSpec::new(TaskKind::Classify, cfg).dry();
     let p1 = g.plan_entries(1);
     let p4 = g.plan_entries(4);
     assert_eq!(p1.len(), p4.len(), "same op sequence regardless of batch");

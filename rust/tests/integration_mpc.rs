@@ -2,8 +2,8 @@
 //! the native oracle (which in turn matches the python/XLA artifact)
 //! within the local-truncation carry budget.
 
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer, GraphSpec};
 use ppq_bert::model::weights::{synth_input, Weights};
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::runtime::native;
@@ -27,7 +27,7 @@ fn secure_infer_tracks_native_oracle() {
     let xin = x.clone();
     let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
         let weights = if ctx.id == P0 { Some(&w) } else { None };
-        let m = bert_graph_default(ctx, &cfg, weights);
+        let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,weights);
         let (logits, h4) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
         let h_rev = reveal2(ctx, &h4);
         (logits, h_rev)
@@ -79,7 +79,7 @@ fn secure_infer_is_deterministic_given_seed() {
     let run = || {
         let (w2, xin) = (clone_weights(&w, cfg), x.clone());
         let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w2) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&w2) } else { None });
             secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None }).0
         });
         outs[1].clone()
@@ -94,7 +94,7 @@ fn different_inputs_give_different_outputs() {
     let run = |input: Vec<i64>| {
         let w2 = clone_weights(&w, cfg);
         let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w2) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&w2) } else { None });
             let (_, h) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&input) } else { None });
             reveal2(ctx, &h)
         });
@@ -127,7 +127,7 @@ fn single_head_single_token_edge_config() {
     let (_, h_ref) = native::forward(&cfg, &w, &x);
     let xin = x.clone();
     let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-        let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w) } else { None });
+        let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&w) } else { None });
         let (_, h) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
         reveal2(ctx, &h)
     });
@@ -146,7 +146,7 @@ fn extreme_inputs_saturate_gracefully() {
         let (_, h_ref) = native::forward(&cfg, &w, &x);
         let (wc, xin) = (clone_weights(&w, cfg), x.clone());
         let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&wc) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&wc) } else { None });
             let (_, h) = secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None });
             reveal2(ctx, &h)
         });
@@ -168,7 +168,7 @@ fn thread_count_does_not_change_results() {
         let mut scfg = SessionCfg::default();
         scfg.threads = threads;
         let (outs, _) = run_3pc(scfg, move |ctx| {
-            let m = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&wc) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg).build(ctx,if ctx.id == P0 { Some(&wc) } else { None });
             secure_infer(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None }).0
         });
         outs[1].clone()
@@ -178,9 +178,7 @@ fn thread_count_does_not_change_results() {
 
 #[test]
 fn secure_classify_matches_plaintext_argmax_class() {
-    use ppq_bert::model::config::LayerQuantConfig;
-    use ppq_bert::model::secure::{bert_classify_graph, secure_classify};
-    use ppq_bert::protocols::max::MaxStrategy;
+    use ppq_bert::model::secure::secure_classify;
     let (cfg, w, x) = tiny_setup();
     let (logits_ref, _) = native::forward(&cfg, &w, &x);
     // plaintext class from the *requantized* logits (the protocol
@@ -189,9 +187,8 @@ fn secure_classify_matches_plaintext_argmax_class() {
     let want = q.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0 as u64;
     let (wc, xin) = (clone_weights(&w, cfg), x.clone());
     let (outs, _) = run_3pc(SessionCfg::default(), move |ctx| {
-        let per_layer = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
         let weights = if ctx.id == P0 { Some(&wc) } else { None };
-        let m = bert_classify_graph(ctx, &cfg, &per_layer, weights);
+        let m = GraphSpec::new(TaskKind::Classify, cfg).build_argmax(ctx, weights);
         secure_classify(ctx, &m, if ctx.id == P1 { Some(&xin) } else { None })
     });
     // classes must agree across P1/P2 and be in range; with carry noise the

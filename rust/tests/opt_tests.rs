@@ -11,13 +11,12 @@
 
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::coordinator::session::{prep_into_pool, serve_window, CorrPool};
-use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
+use ppq_bert::model::config::{BertConfig, TaskKind};
 use ppq_bert::model::passes::OptConfig;
 use ppq_bert::model::randgraph::{rand_graph, rand_graph_dry, rand_inputs};
-use ppq_bert::model::secure::{bert_graph_dry, bert_graph_opt, secure_infer_batch};
+use ppq_bert::model::secure::{secure_infer_batch, GraphSpec};
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::prop_assert;
-use ppq_bert::protocols::max::MaxStrategy;
 use ppq_bert::protocols::prep::{run_plan, run_plan_deduped, CorrKind, CorrShape, Correlation};
 use ppq_bert::protocols::tape_store::{TapePool, TapeStore};
 use ppq_bert::testing::check;
@@ -109,9 +108,8 @@ fn run_bert(opt: OptConfig, batch: usize) -> RandRun {
     let (w, _) = prepared_model(cfg);
     let inputs = prepared_inputs(&cfg, batch);
     let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-        let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
         let weights = if ctx.id == P0 { Some(&w) } else { None };
-        let g = bert_graph_opt(ctx, &cfg, &per, weights, opt);
+        let g = GraphSpec::new(TaskKind::Classify, cfg).with_opt(opt).build(ctx, weights);
         let (logits, hidden) =
             secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
         (logits, hidden.vals, g.packed_groups())
@@ -166,8 +164,7 @@ fn bert_tiny_opt1_measures_strictly_fewer_online_rounds() {
 #[test]
 fn deduped_plan_run_is_field_identical_and_batches_messages() {
     let cfg = BertConfig::tiny();
-    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-    let g = bert_graph_dry(&cfg, &per);
+    let g = GraphSpec::new(TaskKind::Classify, cfg).dry();
     let plan_a = g.plan(2);
     let plan_b = g.plan(2);
     let plan_len = plan_a.len();
@@ -208,8 +205,7 @@ fn deduped_plan_run_is_field_identical_and_batches_messages() {
 #[test]
 fn offline_tape_is_bit_identical_across_thread_counts() {
     let cfg = BertConfig::tiny();
-    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-    let g = bert_graph_dry(&cfg, &per);
+    let g = GraphSpec::new(TaskKind::Classify, cfg).dry();
     let run = |threads: usize, dedup: bool| {
         let plan = g.plan(2);
         let scfg = SessionCfg { threads, ..SessionCfg::default() };

@@ -13,8 +13,8 @@
 
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::coordinator::{Coordinator, ServerConfig, Session};
-use ppq_bert::model::config::{BertConfig, LayerQuantConfig};
-use ppq_bert::model::secure::{bert_graph, secure_infer_batch};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer_batch, GraphSpec};
 use ppq_bert::model::weights::Weights;
 use ppq_bert::party::{run_3pc, SessionCfg, P0, P1};
 use ppq_bert::protocols::max::MaxStrategy;
@@ -113,8 +113,8 @@ fn prep_tape_aligns_with_online_consumption() {
         let (wc, inc) = (w, inputs);
         let (plan_lens, snap) = {
             let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-                let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Tournament);
-                let m = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&wc) } else { None });
+                let m = GraphSpec::new(TaskKind::Classify, cfg)
+                    .build(ctx, if ctx.id == P0 { Some(&wc) } else { None });
                 let plan_len = m.plan(batch).len();
                 let tape = m.prep(ctx, batch);
                 assert_eq!(tape.len(), plan_len);
@@ -142,8 +142,9 @@ fn prep_covers_every_max_strategy() {
         let inputs = prepared_inputs(&cfg, 2);
         let (wc, inc) = (w, inputs);
         let (_, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-            let per = LayerQuantConfig::uniform(&cfg, strat);
-            let m = bert_graph(ctx, &cfg, &per, if ctx.id == P0 { Some(&wc) } else { None });
+            let m = GraphSpec::new(TaskKind::Classify, cfg)
+                .with_strategy(strat)
+                .build(ctx, if ctx.id == P0 { Some(&wc) } else { None });
             let tape = m.prep(ctx, 2);
             ctx.install_corr(tape);
             secure_infer_batch(ctx, &m, 2, if ctx.id == P1 { Some(&inc) } else { None });

@@ -7,6 +7,7 @@
 //! the same window compositions — while backpressure and client
 //! disconnects stay strictly local to the affected request.
 
+use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::sync::{mpsc, Arc, Barrier};
 use std::thread::JoinHandle;
@@ -14,11 +15,13 @@ use std::time::Duration;
 
 use ppq_bert::bench_harness::prepared_model;
 use ppq_bert::coordinator::remote::{
-    run_party, session_id, Completed, PartyOpts, RemoteClient, ServeOpts,
+    deployment_session_id, pad_to_bucket, run_party, served_keys, Completed, InferenceRequest,
+    PartyOpts, RemoteClient, ServeOpts, TaskOutput,
 };
 use ppq_bert::coordinator::Session;
 use ppq_bert::core::error::Result;
-use ppq_bert::model::config::BertConfig;
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::GraphSpec;
 use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
 use ppq_bert::protocols::max::MaxStrategy;
@@ -38,11 +41,15 @@ fn spawn_deployment(
         .collect::<Vec<_>>()
         .try_into()
         .unwrap();
-    let session = session_id(SessionCfg::default().master_seed, &cfg);
+    let session = deployment_session_id(
+        SessionCfg::default().master_seed,
+        &cfg,
+        &served_keys(&serve, &cfg),
+    );
     let mut handles = Vec::new();
     for (id, listener) in listeners.into_iter().enumerate() {
         let mut opts = PartyOpts::new(id, cfg);
-        opts.serve = serve;
+        opts.serve = serve.clone();
         for p in 0..3 {
             if p != id {
                 opts.peers[p] = Some(addrs[p].clone());
@@ -152,7 +159,7 @@ fn queue_overflow_is_refused_cleanly_and_deployment_survives() {
         linger: Duration::from_millis(1500),
         queue_cap: 2,
         max_inflight: 64,
-        prep_depth: 0,
+        ..ServeOpts::default()
     };
     let (addrs, session, handles) = spawn_deployment(cfg, serve);
     let mut client =
@@ -201,7 +208,7 @@ fn per_connection_inflight_cap_refuses_cleanly() {
         linger: Duration::from_millis(1500),
         queue_cap: 64,
         max_inflight: 1,
-        prep_depth: 0,
+        ..ServeOpts::default()
     };
     let (addrs, session, handles) = spawn_deployment(cfg, serve);
     let mut client =
@@ -240,7 +247,7 @@ fn completed_requests_around_a_refusal_replay_bit_identically() {
         linger: Duration::from_millis(20),
         queue_cap: 1,
         max_inflight: 64,
-        prep_depth: 0,
+        ..ServeOpts::default()
     };
     let (addrs, session, handles) = spawn_deployment(cfg, serve);
     let mut client =
@@ -294,7 +301,7 @@ fn client_disconnect_drops_only_its_requests() {
         linger: Duration::from_millis(2500),
         queue_cap: 64,
         max_inflight: 64,
-        prep_depth: 0,
+        ..ServeOpts::default()
     };
     let (addrs, session, handles) = spawn_deployment(cfg, serve);
 
@@ -331,6 +338,158 @@ fn client_disconnect_drops_only_its_requests() {
     assert_eq!(d2.logits, replay[1]);
 
     b.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("party thread").expect("party error");
+    }
+}
+
+/// The heterogeneous-serving acceptance pin (see DESIGN.md
+/// §Heterogeneous serving): ONE deployment concurrently serves three task heads at two
+/// seq-length buckets. Requests land in the smallest served bucket that
+/// fits their true length, windows are cut strictly per (task, bucket)
+/// (never mixed), the prefilled per-key tapes serve each key's first
+/// full window with ZERO request-path offline bytes, every output is
+/// bit-identical to a fresh single-task in-process session evaluating
+/// the identically padded composition, and hostile or mismatched
+/// requests are refused with clear errors while the same connection
+/// keeps serving.
+#[test]
+fn mixed_traffic_windows_never_mix_buckets_and_replay_per_task() {
+    let cfg = BertConfig::tiny(); // seq_len 8: buckets 4 and 8 both valid
+    let serve = ServeOpts {
+        max_batch: 2,
+        linger: Duration::from_secs(3),
+        prep_depth: 2, // >= 1 tape per (task, bucket) key at prefill
+        tasks: vec![TaskKind::Classify, TaskKind::Ner, TaskKind::Embed],
+        buckets: vec![4, 8],
+        ..ServeOpts::default()
+    };
+    let (addrs, session, handles) = spawn_deployment(cfg, serve);
+    let mut client =
+        RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("connect");
+
+    // Admission refuses mismatched requests with a clear reason, and
+    // the connection keeps working afterwards (refusals stay local to
+    // P1 — no other party ever learns about them).
+    let in4 = |seed: u64| synth_input(&BertConfig { seq_len: 4, ..cfg }, seed);
+    let err = client
+        .infer_request(&InferenceRequest::new(TaskKind::Pair, 4, in4(900)))
+        .unwrap_err();
+    assert!(err.to_string().contains("not served by this deployment"), "{err}");
+    let err = client
+        .infer_request(&InferenceRequest::new(TaskKind::Classify, 3, in4(901)))
+        .unwrap_err();
+    assert!(err.to_string().contains("claims sequence length"), "{err}");
+    let long = synth_input(&BertConfig { seq_len: 16, ..cfg }, 902);
+    let err = client.infer_request(&InferenceRequest::new(TaskKind::Ner, 16, long)).unwrap_err();
+    assert!(err.to_string().contains("exceeds every served bucket"), "{err}");
+
+    // Mixed pipelined stream: (task, true length) pairs across both
+    // buckets; true lengths 3 and 6 exercise the zero-padding path.
+    let reqs: [(TaskKind, usize, u64); 6] = [
+        (TaskKind::Classify, 4, 910),
+        (TaskKind::Classify, 4, 911), // same key, adjacent: shares a window
+        (TaskKind::Ner, 3, 912),      // padded to s4
+        (TaskKind::Embed, 8, 913),
+        (TaskKind::Classify, 6, 914), // padded to s8
+        (TaskKind::Ner, 8, 915),
+    ];
+    let ids: Vec<u64> = reqs
+        .iter()
+        .map(|&(t, len, seed)| {
+            let x = synth_input(&BertConfig { seq_len: len, ..cfg }, seed);
+            client.submit_request(&InferenceRequest::new(t, len, x)).expect("submit")
+        })
+        .collect();
+    let completed: Vec<(usize, Completed)> =
+        ids.into_iter().enumerate().map(|(i, id)| (i, client.wait(id).expect("wait"))).collect();
+
+    // Every request landed in the smallest served bucket that fits its
+    // true length, under its own task, with a task-shaped output.
+    for (i, c) in &completed {
+        let (task, len, _) = reqs[*i];
+        let want_bucket = if len <= 4 { 4 } else { 8 };
+        assert_eq!(c.bucket(), want_bucket, "request {i} landed in the wrong bucket");
+        assert_eq!(TaskKind::from_u8(c.task()).unwrap(), task, "request {i} task");
+        assert_eq!(
+            c.logits.len(),
+            task.out_len(&cfg, want_bucket),
+            "request {i}: output not shaped for {} at s{want_bucket}",
+            task.as_str()
+        );
+    }
+
+    // Windows never mix (task, bucket) keys.
+    let mut by_window: BTreeMap<u64, Vec<(usize, Completed)>> = BTreeMap::new();
+    for (i, c) in completed {
+        by_window.entry(c.wid()).or_default().push((i, c));
+    }
+    for (wid, members) in &by_window {
+        let key = (members[0].1.task(), members[0].1.bucket());
+        for (i, c) in members {
+            assert_eq!((c.task(), c.bucket()), key, "window {wid} mixed keys at request {i}");
+        }
+    }
+
+    // The prefill put one max_batch tape behind every served key, so a
+    // FULL window consumes warm material: zero request-path offline
+    // bytes. (Partial windows are cut at sizes that were never prepped
+    // and regenerate inline — only full windows are asserted.)
+    let mut saw_full = false;
+    for members in by_window.values() {
+        if members[0].1.batch() == 2 {
+            saw_full = true;
+            assert_eq!(
+                members[0].1.window_offline_bytes(),
+                0,
+                "full window of a prefilled key must serve warm"
+            );
+        }
+    }
+    assert!(saw_full, "the adjacent classify.s4 pair should have shared a full window");
+
+    // Per-key replay: each window's padded composition through a fresh
+    // single-task in-process session of that exact GraphSpec must be
+    // bit-identical.
+    let mut groups: BTreeMap<(u8, usize), Vec<u64>> = BTreeMap::new();
+    for (wid, members) in &by_window {
+        groups.entry((members[0].1.task(), members[0].1.bucket())).or_default().push(*wid);
+    }
+    for ((task_byte, bucket), wids) in &groups {
+        let task = TaskKind::from_u8(*task_byte).unwrap();
+        let spec = GraphSpec::new(task, cfg).with_seq(*bucket);
+        let (w, _) = prepared_model(cfg);
+        let sess = Session::start_spec(spec, w, SessionCfg::default());
+        for wid in wids {
+            let mut members: Vec<&(usize, Completed)> = by_window[wid].iter().collect();
+            members.sort_by_key(|(_, c)| c.pos());
+            let inputs: Vec<Vec<i64>> = members
+                .iter()
+                .map(|(i, _)| {
+                    let (_, len, seed) = reqs[*i];
+                    let x = synth_input(&BertConfig { seq_len: len, ..cfg }, seed);
+                    pad_to_bucket(x, *bucket, cfg.d_model)
+                })
+                .collect();
+            let outs = sess.infer_batch(&inputs);
+            for ((i, c), l) in members.iter().zip(&outs) {
+                assert_eq!(
+                    &c.logits, l,
+                    "request {i} (window {wid}) diverged from the single-task replay"
+                );
+            }
+        }
+        sess.shutdown();
+    }
+
+    // The typed client API round-trips a task-shaped response.
+    let resp = client
+        .infer_request(&InferenceRequest::new(TaskKind::Embed, 4, in4(920)))
+        .expect("typed embed request");
+    assert!(matches!(resp.output, TaskOutput::Hidden(_)));
+    assert_eq!(resp.output.values().len(), cfg.d_model);
+
+    client.shutdown().expect("shutdown");
     for h in handles {
         h.join().expect("party thread").expect("party error");
     }

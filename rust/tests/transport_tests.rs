@@ -15,8 +15,8 @@ use std::time::Duration;
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::coordinator::remote::{run_party, session_id, PartyOpts, RemoteClient};
 use ppq_bert::coordinator::{Coordinator, ServerConfig};
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer_batch};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer_batch, GraphSpec};
 use ppq_bert::party::{PartyCtx, SessionCfg, P0, P1};
 use ppq_bert::transport::wire::{self, Accepted, PartyHello, Tag};
 use ppq_bert::transport::{build_mesh, loopback_mesh, Metrics, MetricsSnapshot, PHASES};
@@ -39,7 +39,7 @@ fn run_window_over(
             handles.push(s.spawn(move || {
                 let ctx = PartyCtx::new(net.id, net, scfg.master_seed, scfg.threads);
                 let w = (ctx.id == P0).then_some(weights);
-                let model = bert_graph_default(&ctx, &cfg, w);
+                let model = GraphSpec::new(TaskKind::Classify, cfg).build(&ctx, w);
                 let x = (ctx.id == P1).then(|| inputs.clone());
                 let (logits, _) = secure_infer_batch(&ctx, &model, 2, x.as_deref());
                 ctx.flush_timer();

@@ -14,6 +14,10 @@
 #    refused cleanly, the retry is served from the reloaded correlation
 #    tape (zero request-path offline bytes) and its logits stay
 #    bit-identical to the in-process result.
+# 4. Spawn a FOURTH deployment serving all four task heads at two
+#    seq-length buckets and drive it with a mixed-task loadgen --check:
+#    windows are cut per (task, bucket) and every key's outputs must be
+#    bit-identical to an in-process single-task replay.
 #
 # Exercises the real process boundary (and the real client concurrency
 # and real SIGKILL crash recovery) the in-thread tests cannot.
@@ -166,6 +170,25 @@ fi
 "$BIN" infer --remote "$ADDR0,$ADDR1,$ADDR2" --halt >/dev/null
 unset TAPE_BASE
 echo "OK: party 2 SIGKILLed and restarted from its tape store: retry served warm (attempt $attempt), bit-identical logits"
+
+# ---- scenario 4: one deployment, four tasks, two seq-length buckets ----
+# The heterogeneous-serving path over the real process boundary: every
+# party serves (classify, ner, pair, embed) x (s4, s8), loadgen round-
+# robins its requests across all eight (task, bucket) keys, and --check
+# replays every window per key in-process — windows must never mix keys
+# and each key's logits must be bit-identical to its single-task replay.
+HET_FLAGS=(--tasks classify,ner,pair,embed --buckets 4,8 --max-batch 4 --linger 1000 --prep 1)
+spawn_deployment "$((PORT_BASE + 30))" "${HET_FLAGS[@]}"
+
+het_out=$("$BIN" loadgen --clients 4 --requests 4 \
+  --tasks classify,ner,pair,embed --buckets 4,8 \
+  --remote "$ADDR0,$ADDR1,$ADDR2" --check --halt)
+echo "$het_out"
+if ! echo "$het_out" | grep -q "CHECK OK"; then
+  echo "FAIL: mixed-task loadgen did not verify against the per-bucket replays" >&2
+  exit 1
+fi
+echo "OK: one deployment served 4 tasks at 2 buckets; per-key replay bit-identical"
 
 # All parties were asked to halt; give them a moment and confirm.
 for pid in "${PIDS[@]}"; do
