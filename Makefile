@@ -36,6 +36,7 @@ bench-quick:
 	cargo bench --bench offline -- --quick --json BENCH_ci.json
 	cargo bench --bench threads -- --quick --json BENCH_ci.json
 	cargo bench --bench buckets -- --quick --json BENCH_ci.json
+	cargo bench --bench fleet -- --quick --json BENCH_ci.json
 	tools/check_thread_scaling.sh BENCH_ci.json
 	@echo "--- BENCH_ci.json"
 	@cat BENCH_ci.json
@@ -47,6 +48,7 @@ bench:
 	cargo bench --bench offline
 	cargo bench --bench threads
 	cargo bench --bench buckets
+	cargo bench --bench fleet
 	cargo bench --bench table2
 	cargo bench --bench table3
 	cargo bench --bench table4

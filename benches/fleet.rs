@@ -1,0 +1,184 @@
+//! Replica fleet sweep (DESIGN.md §Replica fleet): the same client
+//! load through a fleet of 1 and then 2 replica trios, all in-process
+//! on loopback TCP — the router redirect path, sticky assignments, and
+//! per-replica meshes are all real, only the processes are threads.
+//!
+//! Recorded rows pin the fleet's perf trajectory in BENCH_ci.json:
+//! `fleet/r{R}/throughput` (aggregate wall for the whole load) and
+//! `fleet/r{R}/p99` (p99 of the per-request window walls reported by
+//! each replica's P1). The bench also pins the fleet's correctness
+//! claim: every client submits the SAME request stream, so replicas
+//! with DIFFERENT master seeds must reveal bit-identical logits —
+//! spreading load across trios never perturbs outputs.
+//!
+//!   cargo bench --bench fleet
+//!   CI smoke: cargo bench --bench fleet -- --quick --json BENCH_ci.json
+
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use ppq_bert::bench_harness::{fmt_dur, BenchOpts, Table};
+use ppq_bert::coordinator::fleet::{
+    halt_fleet, run_fleet_router, FleetClient, FleetOpts, ReplicaSpec,
+};
+use ppq_bert::coordinator::remote::{
+    run_party, seed_from_label, served_keys, InferenceRequest, PartyOpts, ServeOpts,
+};
+use ppq_bert::core::error::Result;
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::weights::synth_input;
+use ppq_bert::party::P1;
+
+/// Spawn one replica trio under its fleet label (one thread per party).
+fn spawn_replica(
+    cfg: BertConfig,
+    serve: &ServeOpts,
+    label: &str,
+) -> ([String; 3], Vec<JoinHandle<Result<()>>>) {
+    let listeners: Vec<TcpListener> =
+        (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: [String; 3] = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect::<Vec<_>>()
+        .try_into()
+        .unwrap();
+    let mut handles = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let mut opts = PartyOpts::new(id, cfg);
+        opts.serve = serve.clone();
+        opts.scfg.master_seed = seed_from_label(label);
+        for p in 0..3 {
+            if p != id {
+                opts.peers[p] = Some(addrs[p].clone());
+            }
+        }
+        handles.push(std::thread::spawn(move || run_party(listener, opts)));
+    }
+    (addrs, handles)
+}
+
+fn main() {
+    let opts = BenchOpts::from_env_args();
+    let cfg = BertConfig::tiny();
+    let per_client = if opts.quick { 2 } else { 8 };
+    let serve = ServeOpts::default();
+    let keys = served_keys(&serve, &cfg);
+
+    let mut t = Table::new(&[
+        "replicas",
+        "clients",
+        "requests",
+        "total wall",
+        "req/s",
+        "window p50",
+        "window p99",
+    ]);
+    let mut ref_logits: Option<Vec<Vec<Vec<i64>>>> = None;
+    let mut rates = Vec::new();
+    for replicas in [1usize, 2] {
+        // R trios + the router; 2 clients per replica drive the load.
+        let mut party_handles = Vec::new();
+        let mut specs = Vec::new();
+        for r in 0..replicas {
+            let label = format!("fleet-r{r}");
+            let (addrs, handles) = spawn_replica(cfg, &serve, &label);
+            party_handles.extend(handles);
+            specs.push(ReplicaSpec { label, addrs });
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let router = listener.local_addr().unwrap().to_string();
+        let fopts = FleetOpts {
+            replicas: specs,
+            cfg,
+            keys: keys.clone(),
+            poll: Duration::from_millis(100),
+            timeout: Duration::from_secs(30),
+        };
+        let router_handle = std::thread::spawn(move || run_fleet_router(listener, fopts));
+
+        let clients = 2 * replicas;
+        let barrier = Arc::new(Barrier::new(clients + 1));
+        let (tx, rx) = mpsc::channel();
+        let mut workers = Vec::new();
+        for k in 0..clients {
+            let router = router.clone();
+            let keys = keys.clone();
+            let barrier = Arc::clone(&barrier);
+            let tx = tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut fc = FleetClient::connect(&router, &cfg, &keys, Duration::from_secs(30))
+                    .expect("fleet connect");
+                barrier.wait();
+                let mut walls = Vec::with_capacity(per_client);
+                let mut logits = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    // The SAME stream for every client: replicas with
+                    // different seeds must agree bit-for-bit.
+                    let x = synth_input(&cfg, 700 + i as u64);
+                    let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, x);
+                    let resp = fc.client.infer_request(&req).expect("serve");
+                    walls.push(resp.completed.reports[P1].wall_ns);
+                    logits.push(resp.completed.logits.clone());
+                }
+                tx.send((k, walls, logits)).unwrap();
+            }));
+        }
+        drop(tx);
+        barrier.wait();
+        let t0 = Instant::now();
+        let mut results: Vec<(usize, Vec<u64>, Vec<Vec<i64>>)> = rx.iter().collect();
+        let wall = t0.elapsed();
+        for h in workers {
+            h.join().expect("client thread");
+        }
+        results.sort_by_key(|(k, _, _)| *k);
+
+        // Bit-identity across replicas AND across fleet sizes.
+        let logits: Vec<Vec<Vec<i64>>> = results.iter().map(|(_, _, l)| l.clone()).collect();
+        for (k, per) in logits.iter().enumerate() {
+            assert_eq!(per, &logits[0], "client {k}: fleet spread perturbed logits");
+        }
+        match &ref_logits {
+            None => ref_logits = Some(logits),
+            Some(want) => {
+                assert_eq!(&logits[0], &want[0], "r{replicas}: diverged from the r1 fleet");
+            }
+        }
+
+        let total = clients * per_client;
+        let mut walls: Vec<u64> = results.iter().flat_map(|(_, w, _)| w.iter().copied()).collect();
+        walls.sort_unstable();
+        let pct = |q: f64| -> Duration {
+            Duration::from_nanos(walls[((walls.len() - 1) as f64 * q).round() as usize])
+        };
+        let rate = total as f64 / wall.as_secs_f64().max(1e-9);
+        rates.push(rate);
+        opts.record(&format!("fleet/r{replicas}/throughput"), wall, 0, total as u64);
+        opts.record(&format!("fleet/r{replicas}/p99"), pct(0.99), 0, 0);
+        t.row(vec![
+            replicas.to_string(),
+            clients.to_string(),
+            total.to_string(),
+            fmt_dur(wall),
+            format!("{rate:.1}"),
+            fmt_dur(pct(0.50)),
+            fmt_dur(pct(0.99)),
+        ]);
+
+        halt_fleet(&router, &cfg, &keys, Duration::from_secs(30)).expect("fleet halt");
+        router_handle.join().expect("router thread").expect("router exits cleanly");
+        for h in party_handles {
+            h.join().expect("party thread").expect("party exits cleanly");
+        }
+    }
+    t.print(&format!(
+        "fleet sweep (BERT-tiny, 2 clients/replica x {per_client} requests, r2/r1 speedup \
+         {:.2}x): identical request streams through 1- and 2-replica fleets reveal \
+         bit-identical logits; throughput and window-wall tails are recorded as the \
+         fleet's perf trajectory (DESIGN.md §Replica fleet)",
+        rates[1] / rates[0].max(1e-9)
+    ));
+}

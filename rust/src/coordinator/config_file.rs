@@ -15,6 +15,8 @@
 //! max_strategy = tournament   # tournament | linear | sort
 //! buckets = 8,16,32
 //! prep_depth = 2       # ahead-of-time correlation tapes per bucket
+//! prep_adaptive = true # EWMA-sized pool target (prep_depth = floor)
+//! prep_max = 8         # adaptive pool-target ceiling
 //! ```
 
 use std::collections::HashMap;
@@ -128,6 +130,23 @@ impl ConfigFile {
         if let Some(p) = self.get_usize("serving", "prep_depth")? {
             sc.prep_depth = p;
         }
+        let adaptive = match self.get("serving", "prep_adaptive") {
+            None => false,
+            Some("true" | "on" | "1") => true,
+            Some("false" | "off" | "0") => false,
+            Some(other) => bail!("[serving] prep_adaptive = {other}: expected true|false"),
+        };
+        let ceiling = self.get_usize("serving", "prep_max")?;
+        // Same validation the CLI applies to --prep/--prep-adaptive/
+        // --prep-max: contradictory combinations fail at load time.
+        match crate::protocols::prep::PrepBudget::new(sc.prep_depth, ceiling, adaptive) {
+            Ok(b) => {
+                sc.prep_depth = b.floor;
+                sc.prep_max = b.ceiling;
+                sc.prep_adaptive = b.adaptive;
+            }
+            Err(e) => bail!("[serving] prep config: {e}"),
+        }
         if let Some(l) = self.get_usize("serving", "opt")? {
             if l > 1 {
                 bail!("unknown opt level `{l}` (0|1)");
@@ -212,6 +231,32 @@ prep_depth = 3
         let c = ConfigFile::parse("[model]\nseq_len = banana").unwrap();
         assert!(c.bert_config().is_err());
         let c = ConfigFile::parse("[serving]\nthreads = banana").unwrap();
+        assert!(c.server_config().is_err());
+    }
+
+    #[test]
+    fn prep_budget_keys_parse_and_reject_contradictions() {
+        let c = ConfigFile::parse("[serving]\nprep_depth = 1\nprep_adaptive = true\nprep_max = 6")
+            .unwrap();
+        let sc = c.server_config().unwrap();
+        assert!(sc.prep_adaptive);
+        assert_eq!((sc.prep_depth, sc.prep_max), (1, 6));
+
+        // Static mode keeps prep_depth as the whole budget.
+        let c = ConfigFile::parse("[serving]\nprep_depth = 3").unwrap();
+        let sc = c.server_config().unwrap();
+        assert!(!sc.prep_adaptive);
+        assert_eq!(sc.prep_depth, 3);
+
+        // A ceiling without the adaptive scheduler is contradictory.
+        let c = ConfigFile::parse("[serving]\nprep_max = 6").unwrap();
+        assert!(c.server_config().is_err());
+        // As is a floor above the ceiling.
+        let c = ConfigFile::parse("[serving]\nprep_depth = 9\nprep_adaptive = on\nprep_max = 6")
+            .unwrap();
+        assert!(c.server_config().is_err());
+        // And a malformed boolean.
+        let c = ConfigFile::parse("[serving]\nprep_adaptive = maybe").unwrap();
         assert!(c.server_config().is_err());
     }
 

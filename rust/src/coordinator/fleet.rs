@@ -1,0 +1,502 @@
+//! Replica fleet router (DESIGN.md §Replica fleet): one front-end
+//! listener spreading client connections across R independent 3-party
+//! trios.
+//!
+//! A *fleet* is R deployments of the SAME model/serving topology, each
+//! with its own master seed ([`seed_from_label`] of the replica label),
+//! its own mesh, and its own correlation pools. Because a served
+//! request's logits are a deterministic function of (weights, inputs)
+//! alone, any replica answers any request bit-identically — so the
+//! router can spread load freely without perturbing outputs.
+//!
+//! The router is a *redirect* front end, not a proxy: a client dials
+//! the router, the [`wire::Tag::FleetHello`] / [`wire::Tag::FleetAssign`]
+//! exchange hands it one replica (sticky for the life of the router
+//! connection), and the client then dials that trio DIRECTLY with the
+//! ordinary [`RemoteClient`] handshake. Secret-shared inputs never
+//! touch the router, and the router is not on the serving hot path —
+//! it only sees connection arrivals and per-replica health.
+//!
+//! Health and load come from each replica's existing serving counters:
+//! a poller thread per replica holds a bare client connection to the
+//! replica's P1 (the sequencer) and requests [`wire::ServeStats`] every
+//! poll interval. A replica is *healthy* while its poller's last
+//! exchange succeeded; admission picks the healthy replica with the
+//! least pressure (live router-assigned connections + last observed
+//! queue depth), and when NO replica is healthy the router answers
+//! every hello with a clean [`wire::Tag::Error`] refusal — the fleet
+//! analogue of the single-trio symmetric refusal.
+//!
+//! The fleet session id ([`fleet_session_id`]) binds the model shape
+//! and the full served (task, bucket) set, exactly like a deployment's
+//! wire session id: a client configured for a different topology fails
+//! at the router handshake, and a client routed to replica `k` verifies
+//! `k`'s own topology-bound session id when it dials the trio — a
+//! topology-diverged replica fails loudly at connect time, never
+//! mid-request.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::core::error::{bail, Context, Result};
+use crate::model::config::{BertConfig, TaskKind};
+use crate::party::P1;
+use crate::transport::tcp::dial_retry;
+use crate::transport::wire::{self, FleetAssign, ServeStats, Tag};
+
+use super::remote::{self, deployment_session_id, seed_from_label, topology_label, RemoteClient};
+
+/// One replica trio of the fleet: its deployment label (the parties
+/// were started with `--session LABEL`, so the label fixes the master
+/// seed and the wire session id) and its three listen addresses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    /// Deployment label; the replica's master seed is
+    /// [`seed_from_label`]`(label)`.
+    pub label: String,
+    /// The trio's listen addresses (party 0, 1, 2 in order).
+    pub addrs: [String; 3],
+}
+
+/// Configuration of a fleet router process (`repro router`).
+pub struct FleetOpts {
+    /// The replica trios, in assignment-index order. Every replica must
+    /// serve the same topology (`cfg` + `keys`); divergence is caught
+    /// by the topology-bound session handshakes, not trusted.
+    pub replicas: Vec<ReplicaSpec>,
+    /// Model shape served by every replica.
+    pub cfg: BertConfig,
+    /// Served (task, bucket) set, as [`remote::served_keys`] orders it.
+    pub keys: Vec<(TaskKind, usize)>,
+    /// Health/stats poll interval (also each poller's redial budget).
+    pub poll: Duration,
+    /// Dial budget for halting replicas at fleet shutdown.
+    pub timeout: Duration,
+}
+
+/// The fleet-level wire session id presented in [`wire::Tag::FleetHello`]:
+/// derived from a PUBLIC fixed seed mixed with the topology label, so
+/// any client that knows the fleet's topology can compute it — it
+/// authenticates *configuration agreement*, not identity (the replica
+/// trios' own handshakes carry the real per-deployment credentials).
+pub fn fleet_session_id(cfg: &BertConfig, keys: &[(TaskKind, usize)]) -> [u8; 16] {
+    remote::derive16(*b"ppq-bert-session", &format!("fleet-router-{}", topology_label(cfg, keys)))
+}
+
+/// The wire session id of the replica labeled `label`: what a routed
+/// client must present when it dials the assigned trio. Topology-bound
+/// like every deployment session id, so a replica whose served set
+/// diverged from the fleet's refuses the client at handshake time.
+pub fn replica_session_id(label: &str, cfg: &BertConfig, keys: &[(TaskKind, usize)]) -> [u8; 16] {
+    deployment_session_id(seed_from_label(label), cfg, keys)
+}
+
+/// One replica's router-side state: its spec, its derived session id,
+/// and the health/load signals the admission decision reads.
+struct ReplicaState {
+    spec: ReplicaSpec,
+    /// [`replica_session_id`] of `spec.label` (poller handshakes, halt).
+    session: [u8; 16],
+    /// True while the poller's last stats exchange succeeded.
+    healthy: AtomicBool,
+    /// Last observed sequencer queue depth ([`ServeStats::queued`]).
+    queued: AtomicU64,
+    /// Live router connections currently assigned to this replica.
+    conns: AtomicU64,
+}
+
+/// State shared between the accept loop, per-connection handlers, and
+/// the per-replica pollers.
+struct FleetShared {
+    replicas: Vec<ReplicaState>,
+    session: [u8; 16],
+    topology: String,
+    /// The router's own bound address (shutdown self-dial wakes accept).
+    addr: SocketAddr,
+    /// Serializes pick-and-charge, so N simultaneous hellos spread by
+    /// least pressure instead of all reading the same stale counts.
+    assign: Mutex<()>,
+    exit: AtomicBool,
+}
+
+/// The healthy replica with the least pressure (live assigned
+/// connections + last observed queue depth; ties go to the lowest
+/// index), or `None` when the whole fleet is unhealthy.
+fn pick_replica(shared: &FleetShared) -> Option<usize> {
+    shared
+        .replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.healthy.load(Ordering::SeqCst))
+        .min_by_key(|(_, r)| r.conns.load(Ordering::SeqCst) + r.queued.load(Ordering::SeqCst))
+        .map(|(i, _)| i)
+}
+
+/// Dial every healthy replica as an ordinary client and ask it to
+/// drain and exit (best effort: an already-dead replica is logged and
+/// skipped — fleet halt must not hang on a crashed trio).
+fn halt_replicas(shared: &FleetShared, timeout: Duration) {
+    for (i, r) in shared.replicas.iter().enumerate() {
+        if !r.healthy.load(Ordering::SeqCst) {
+            continue;
+        }
+        match RemoteClient::connect(&r.spec.addrs, r.session, timeout) {
+            Ok(client) => {
+                if let Err(e) = client.shutdown() {
+                    eprintln!("[fleet] replica {i} ({}) drain: {e}", r.spec.label);
+                }
+            }
+            Err(e) => eprintln!("[fleet] replica {i} ({}) halt dial: {e}", r.spec.label),
+        }
+    }
+}
+
+/// One poller's connected phase: hold a bare client connection to the
+/// replica's P1 and exchange stats every poll interval, publishing
+/// queue depth and health. Returns `Ok` only on router exit; any wire
+/// error bubbles up so the caller can mark the replica unhealthy and
+/// redial. `ready` is dropped after the first completed exchange — the
+/// router's accept loop waits for every poller's first attempt so
+/// startup health is deterministic.
+fn poll_stream(
+    shared: &FleetShared,
+    idx: usize,
+    poll: Duration,
+    ready: &mut Option<Sender<()>>,
+) -> Result<()> {
+    let r = &shared.replicas[idx];
+    let mut stream = dial_retry(&r.spec.addrs[P1], poll)?;
+    stream.set_nodelay(true).context("set_nodelay")?;
+    wire::client_handshake(&mut stream, &r.session)
+        .with_context(|| format!("stats handshake with replica {idx} ({})", r.spec.label))?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stats stream")?);
+    while !shared.exit.load(Ordering::SeqCst) {
+        wire::write_frame(&mut stream, Tag::StatsReq, &[])?;
+        let stats = loop {
+            let (tag, payload) = wire::read_frame(&mut reader)?;
+            match tag {
+                Tag::Stats => break ServeStats::from_bytes(&payload)?,
+                Tag::Error => bail!("replica reported: {}", String::from_utf8_lossy(&payload)),
+                // A stats-only link owes us nothing else; skip strays.
+                _ => continue,
+            }
+        };
+        r.queued.store(stats.queued, Ordering::SeqCst);
+        if !r.healthy.swap(true, Ordering::SeqCst) {
+            eprintln!("[fleet] replica {idx} ({}) healthy", r.spec.label);
+        }
+        ready.take();
+        thread::sleep(poll);
+    }
+    Ok(())
+}
+
+/// Poller thread body for one replica: connect, poll until an error,
+/// mark unhealthy, back off one interval, redial — forever, until the
+/// router exits.
+fn poll_replica(shared: Arc<FleetShared>, idx: usize, poll: Duration, ready: Sender<()>) {
+    let mut ready = Some(ready);
+    while !shared.exit.load(Ordering::SeqCst) {
+        let err = poll_stream(&shared, idx, poll, &mut ready).err();
+        let r = &shared.replicas[idx];
+        if r.healthy.swap(false, Ordering::SeqCst) {
+            if let Some(e) = &err {
+                eprintln!("[fleet] replica {idx} ({}) lost: {e}", r.spec.label);
+            }
+        }
+        ready.take();
+        thread::sleep(poll);
+    }
+}
+
+/// One router connection: validate the hello, assign the least-pressure
+/// healthy replica (sticky — the assignment lives as long as this
+/// connection, which the client holds open), and keep the connection's
+/// replica charged until it closes. A session-bearing
+/// [`Tag::Shutdown`] frame halts every replica and then the router.
+fn handle_conn(shared: Arc<FleetShared>, stream: TcpStream, timeout: Duration) {
+    let _ = stream.set_nodelay(true);
+    let Ok(cloned) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(cloned);
+    let mut writer = stream;
+    let mut assigned: Option<usize> = None;
+    loop {
+        let Ok((tag, payload)) = wire::read_frame(&mut reader) else { break };
+        match tag {
+            Tag::FleetHello => {
+                if payload.len() != 17 || payload[0] != wire::WIRE_VERSION {
+                    let _ = wire::write_frame(&mut writer, Tag::Error, b"malformed fleet hello");
+                    break;
+                }
+                if payload[1..17] != shared.session {
+                    let _ = wire::write_frame(
+                        &mut writer,
+                        Tag::Error,
+                        b"fleet session mismatch (different model/serving topology)",
+                    );
+                    break;
+                }
+                if assigned.is_some() {
+                    let _ = wire::write_frame(&mut writer, Tag::Error, b"already assigned");
+                    break;
+                }
+                let picked = {
+                    let _guard = shared.assign.lock().expect("assign lock poisoned");
+                    let idx = pick_replica(&shared);
+                    if let Some(idx) = idx {
+                        shared.replicas[idx].conns.fetch_add(1, Ordering::SeqCst);
+                    }
+                    idx
+                };
+                let Some(idx) = picked else {
+                    let _ = wire::write_frame(&mut writer, Tag::Error, b"no healthy replica");
+                    break;
+                };
+                assigned = Some(idx);
+                let r = &shared.replicas[idx];
+                let a = FleetAssign {
+                    session: shared.session,
+                    replica: idx as u32,
+                    label: r.spec.label.clone(),
+                    topology: shared.topology.clone(),
+                    addrs: r.spec.addrs.clone(),
+                };
+                if wire::write_frame(&mut writer, Tag::FleetAssign, &wire::encode_fleet_assign(&a))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Tag::Shutdown => {
+                if payload.len() != 17
+                    || payload[0] != wire::WIRE_VERSION
+                    || payload[1..17] != shared.session
+                {
+                    let _ = wire::write_frame(&mut writer, Tag::Error, b"malformed fleet halt");
+                    break;
+                }
+                halt_replicas(&shared, timeout);
+                let _ = wire::write_frame(&mut writer, Tag::Done, &[]);
+                shared.exit.store(true, Ordering::SeqCst);
+                // Wake the accept loop so the router actually exits.
+                let _ = TcpStream::connect(shared.addr);
+                break;
+            }
+            other => {
+                let msg = format!("unexpected frame {other:?} at fleet router");
+                let _ = wire::write_frame(&mut writer, Tag::Error, msg.as_bytes());
+                break;
+            }
+        }
+    }
+    if let Some(idx) = assigned {
+        shared.replicas[idx].conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Run the fleet router over an already-bound listener: derive every
+/// replica's session id, start the pollers, wait for each poller's
+/// first health verdict (so early clients see real health, not a
+/// startup race), then accept and assign until a fleet halt. Blocks
+/// for the lifetime of the fleet.
+pub fn run_fleet_router(listener: TcpListener, opts: FleetOpts) -> Result<()> {
+    if opts.replicas.is_empty() {
+        bail!("fleet has no replicas");
+    }
+    let session = fleet_session_id(&opts.cfg, &opts.keys);
+    let topology = topology_label(&opts.cfg, &opts.keys);
+    let addr = listener.local_addr().context("router local addr")?;
+    let replicas = opts
+        .replicas
+        .iter()
+        .map(|spec| ReplicaState {
+            session: replica_session_id(&spec.label, &opts.cfg, &opts.keys),
+            spec: spec.clone(),
+            healthy: AtomicBool::new(false),
+            queued: AtomicU64::new(0),
+            conns: AtomicU64::new(0),
+        })
+        .collect();
+    let shared = Arc::new(FleetShared {
+        replicas,
+        session,
+        topology,
+        addr,
+        assign: Mutex::new(()),
+        exit: AtomicBool::new(false),
+    });
+    let (ready_tx, ready_rx) = channel::<()>();
+    let mut pollers = Vec::with_capacity(shared.replicas.len());
+    for idx in 0..shared.replicas.len() {
+        let shared = Arc::clone(&shared);
+        let tx = ready_tx.clone();
+        let poll = opts.poll;
+        pollers.push(thread::spawn(move || poll_replica(shared, idx, poll, tx)));
+    }
+    drop(ready_tx);
+    // Blocks until every poller dropped its sender (first attempt done).
+    while ready_rx.recv().is_ok() {}
+    let healthy = shared.replicas.iter().filter(|r| r.healthy.load(Ordering::SeqCst)).count();
+    eprintln!(
+        "[fleet] router on {addr}: {}/{} replicas healthy, topology {}",
+        healthy,
+        shared.replicas.len(),
+        shared.topology
+    );
+    loop {
+        let Ok((stream, _)) = listener.accept() else { continue };
+        if shared.exit.load(Ordering::SeqCst) {
+            break;
+        }
+        let shared = Arc::clone(&shared);
+        let timeout = opts.timeout;
+        thread::spawn(move || handle_conn(shared, stream, timeout));
+    }
+    for p in pollers {
+        let _ = p.join();
+    }
+    eprintln!("[fleet] router on {addr} exited");
+    Ok(())
+}
+
+/// A client routed through a fleet: the sticky assignment plus a live
+/// [`RemoteClient`] of the assigned trio. The router connection is
+/// held open for the client's lifetime — it IS the stickiness/load
+/// signal the router tracks.
+pub struct FleetClient {
+    /// The assignment the router answered with.
+    pub assign: FleetAssign,
+    /// Direct client of the assigned replica trio.
+    pub client: RemoteClient,
+    /// Keeps the router's per-replica connection count charged.
+    _router: TcpStream,
+}
+
+impl FleetClient {
+    /// Dial the router, obtain a sticky assignment, verify the
+    /// advertised topology matches this client's, and dial the
+    /// assigned trio directly (the trio's own handshake then verifies
+    /// the replica's topology-bound session id — a diverged replica
+    /// fails HERE, loudly, not mid-request).
+    pub fn connect(
+        router: &str,
+        cfg: &BertConfig,
+        keys: &[(TaskKind, usize)],
+        timeout: Duration,
+    ) -> Result<FleetClient> {
+        let session = fleet_session_id(cfg, keys);
+        let mut stream = dial_retry(router, timeout)?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        let assign = wire::fleet_handshake(&mut stream, &session)
+            .with_context(|| format!("fleet handshake with {router}"))?;
+        let expect = topology_label(cfg, keys);
+        if assign.topology != expect {
+            bail!(
+                "fleet assigned replica {} with topology {}, expected {expect}",
+                assign.replica,
+                assign.topology
+            );
+        }
+        let rsession = replica_session_id(&assign.label, cfg, keys);
+        let client = RemoteClient::connect(&assign.addrs, rsession, timeout).with_context(|| {
+            format!("dialing assigned replica {} ({})", assign.replica, assign.label)
+        })?;
+        Ok(FleetClient { assign, client, _router: stream })
+    }
+}
+
+/// Halt a fleet: present the fleet session in a [`Tag::Shutdown`]
+/// frame; the router drains every healthy replica (each trio serves
+/// its queue, then exits), acks, and exits itself.
+pub fn halt_fleet(
+    router: &str,
+    cfg: &BertConfig,
+    keys: &[(TaskKind, usize)],
+    timeout: Duration,
+) -> Result<()> {
+    let session = fleet_session_id(cfg, keys);
+    let mut stream = dial_retry(router, timeout)?;
+    stream.set_nodelay(true).context("set_nodelay")?;
+    let mut payload = vec![wire::WIRE_VERSION];
+    payload.extend_from_slice(&session);
+    wire::write_frame(&mut stream, Tag::Shutdown, &payload)?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone halt stream")?);
+    let (tag, payload) = wire::read_frame(&mut reader)?;
+    match tag {
+        Tag::Done => Ok(()),
+        Tag::Error => bail!("fleet halt refused: {}", String::from_utf8_lossy(&payload)),
+        other => bail!("expected halt ack, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys() -> Vec<(TaskKind, usize)> {
+        vec![(TaskKind::Classify, 8)]
+    }
+
+    #[test]
+    fn fleet_ids_bind_topology_and_replica_label() {
+        let cfg = BertConfig::tiny();
+        let fleet = fleet_session_id(&cfg, &keys());
+        // Fleet id binds the served set: a different bucket is a
+        // different fleet.
+        assert_ne!(fleet, fleet_session_id(&cfg, &[(TaskKind::Classify, 4)]));
+        // Replica ids bind BOTH label (seed) and topology.
+        let r0 = replica_session_id("fleet-r0", &cfg, &keys());
+        let r1 = replica_session_id("fleet-r1", &cfg, &keys());
+        assert_ne!(r0, r1);
+        assert_ne!(r0, replica_session_id("fleet-r0", &cfg, &[(TaskKind::Classify, 4)]));
+        // And the fleet id is not any replica's id: the router's
+        // handshake cannot be replayed against a trio, or vice versa.
+        assert_ne!(fleet, r0);
+    }
+
+    #[test]
+    fn least_pressure_pick_prefers_idle_healthy_replicas() {
+        let cfg = BertConfig::tiny();
+        let spec = |i: usize| ReplicaSpec {
+            label: format!("r{i}"),
+            addrs: ["a".into(), "b".into(), "c".into()],
+        };
+        let shared = FleetShared {
+            replicas: (0..3)
+                .map(|i| ReplicaState {
+                    session: replica_session_id(&format!("r{i}"), &cfg, &keys()),
+                    spec: spec(i),
+                    healthy: AtomicBool::new(false),
+                    queued: AtomicU64::new(0),
+                    conns: AtomicU64::new(0),
+                })
+                .collect(),
+            session: fleet_session_id(&cfg, &keys()),
+            topology: topology_label(&cfg, &keys()),
+            addr: "127.0.0.1:0".parse().unwrap(),
+            assign: Mutex::new(()),
+            exit: AtomicBool::new(false),
+        };
+        // Whole fleet unhealthy: symmetric refusal, not an arbitrary pick.
+        assert_eq!(pick_replica(&shared), None);
+        for r in &shared.replicas {
+            r.healthy.store(true, Ordering::SeqCst);
+        }
+        // Ties break to the lowest index (deterministic assignment).
+        assert_eq!(pick_replica(&shared), Some(0));
+        // Pressure = live conns + observed queue depth.
+        shared.replicas[0].conns.store(3, Ordering::SeqCst);
+        shared.replicas[1].conns.store(1, Ordering::SeqCst);
+        shared.replicas[1].queued.store(1, Ordering::SeqCst);
+        shared.replicas[2].conns.store(1, Ordering::SeqCst);
+        assert_eq!(pick_replica(&shared), Some(2));
+        // An unhealthy replica is never picked, however idle.
+        shared.replicas[2].healthy.store(false, Ordering::SeqCst);
+        assert_eq!(pick_replica(&shared), Some(1));
+    }
+}

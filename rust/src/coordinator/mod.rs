@@ -9,12 +9,14 @@
 //! 3-party deployment).
 
 pub mod config_file;
+pub mod fleet;
 pub mod remote;
 pub mod router;
 pub mod server;
 pub mod session;
 
 pub use config_file::ConfigFile;
+pub use fleet::{FleetClient, FleetOpts, ReplicaSpec};
 pub use remote::{
     Completed, InferenceRequest, InferenceResponse, PartyOpts, RemoteClient, ServeOpts, TaskOutput,
 };

@@ -104,8 +104,18 @@ pub struct ServeOpts {
     /// Ahead-of-time correlation tapes (for `max_batch`-sized windows)
     /// to keep pooled; produced while the queue is idle and split
     /// across the served (task, bucket) keys by observed admission
-    /// pressure. 0 disables preprocessing.
+    /// pressure. 0 disables preprocessing. With the adaptive scheduler
+    /// on ([`ServeOpts::prep_adaptive`]) this is the per-key *floor*
+    /// instead of the whole budget.
     pub prep_depth: usize,
+    /// Adaptive prep scheduler (DESIGN.md §Replica fleet): size each
+    /// (task, bucket) pool by its EWMA share of recent window arrivals,
+    /// clamped to `[prep_depth, prep_ceiling]`, instead of splitting the
+    /// static `prep_depth` budget.
+    pub prep_adaptive: bool,
+    /// Per-key pool-depth ceiling for the adaptive scheduler (ignored
+    /// when `prep_adaptive` is off).
+    pub prep_ceiling: usize,
     /// Task kinds this deployment serves (order/duplicates ignored;
     /// empty means classification only). Every party must run the same
     /// set — the topology is baked into the wire session id.
@@ -124,8 +134,28 @@ impl Default for ServeOpts {
             queue_cap: 256,
             max_inflight: 64,
             prep_depth: 0,
+            prep_adaptive: false,
+            prep_ceiling: crate::protocols::prep::DEFAULT_PREP_CEILING,
             tasks: Vec::new(),
             buckets: Vec::new(),
+        }
+    }
+}
+
+impl ServeOpts {
+    /// The prep sizing policy these knobs describe (already-validated
+    /// values; operator input is validated by
+    /// [`PrepBudget::new`](crate::protocols::prep::PrepBudget::new)
+    /// before it lands here).
+    pub fn prep_budget(&self) -> crate::protocols::prep::PrepBudget {
+        if self.prep_adaptive {
+            crate::protocols::prep::PrepBudget {
+                floor: self.prep_depth,
+                ceiling: self.prep_ceiling.max(1),
+                adaptive: true,
+            }
+        } else {
+            crate::protocols::prep::PrepBudget::fixed(self.prep_depth)
         }
     }
 }
@@ -278,8 +308,9 @@ pub fn deployment_session_id(
 /// suffixes (the default key is `(classify, cfg.seq_len)`, so the
 /// legacy single-bucket id still binds `--seq`): with explicit
 /// buckets, a client's base `--seq` is irrelevant to the topology and
-/// must not perturb the id.
-fn topology_label(cfg: &BertConfig, keys: &[(TaskKind, usize)]) -> String {
+/// must not perturb the id. Public because the fleet router binds this
+/// label into its assignment frames (DESIGN.md §Replica fleet).
+pub fn topology_label(cfg: &BertConfig, keys: &[(TaskKind, usize)]) -> String {
     let mut label = format!(
         "d{}-l{}-h{}-f{}-c{}",
         cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.n_classes
@@ -290,7 +321,7 @@ fn topology_label(cfg: &BertConfig, keys: &[(TaskKind, usize)]) -> String {
     label
 }
 
-fn derive16(master_seed: [u8; 16], label: &str) -> [u8; 16] {
+pub(crate) fn derive16(master_seed: [u8; 16], label: &str) -> [u8; 16] {
     let mut prg = Prg::derive(master_seed, label);
     let mut id = [0u8; 16];
     for b in id.iter_mut() {
@@ -409,8 +440,14 @@ struct Shared {
     /// smallest bucket that fits a request's true length.
     buckets: Vec<usize>,
     /// Per-(task, bucket) admission counts — the observed bucket
-    /// pressure that drives how the prep depth is split across keys.
+    /// pressure that drives how a static prep depth is split across
+    /// keys.
     pressure: Mutex<HashMap<(TaskKind, usize), u64>>,
+    /// Adaptive prep scheduler state: per-(task, bucket) EWMA share of
+    /// recent window arrivals, updated by the sequencer at every window
+    /// cut ([`crate::protocols::prep::ewma_observe`]). Unused when
+    /// `opts.prep_adaptive` is off.
+    prep_ewma: Mutex<HashMap<(TaskKind, usize), f64>>,
     /// Current recovery epoch: acked in every handshake (so rejoining
     /// peers adopt it) and reported in [`ServeStats`] as the number of
     /// completed recoveries.
@@ -817,6 +854,20 @@ fn persist(store: Option<&TapeStore>, pool: &CorrPool, recov: &RecoveryState, sh
         }
         if let Err(e) = store.save_state(recov) {
             eprintln!("party {}: state save failed: {e:#}", shared.id);
+        }
+        if shared.id == P1 && shared.opts.prep_adaptive {
+            // The sequencer's learned traffic shares, in thousandths —
+            // advisory sizing history, so save errors only warn.
+            let entries: Vec<(u8, u32, u64)> = shared
+                .prep_ewma
+                .lock()
+                .expect("prep ewma poisoned")
+                .iter()
+                .map(|(&(t, b), &s)| (t.as_u8(), b as u32, (s * 1000.0) as u64))
+                .collect();
+            if let Err(e) = store.save_sched(&entries) {
+                eprintln!("party {}: sched save failed: {e:#}", shared.id);
+            }
         }
     }
 }
@@ -1238,11 +1289,24 @@ pub fn run_party(listener: TcpListener, opts: PartyOpts) -> Result<()> {
         tasks: served_tasks(&opts.serve),
         buckets: served_buckets(&opts.serve, &opts.cfg),
         pressure: Mutex::new(HashMap::new()),
+        prep_ewma: Mutex::new(HashMap::new()),
         epoch: AtomicU64::new(loaded.map(|s| s.epoch).unwrap_or(0).max(epoch)),
         tapes: AtomicU64::new(corr_pool.values().map(|q| q.len() as u64).sum()),
         fault_window: AtomicU64::new(opts.fault_window.unwrap_or(FAULT_DISARMED)),
         lat_hist: Mutex::new([0u64; wire::LAT_BUCKETS]),
     });
+    // Resume the adaptive scheduler's learned traffic shares (advisory:
+    // a missing or invalid file just means a few re-learning windows).
+    if opts.serve.prep_adaptive {
+        if let Some(entries) = store.as_ref().and_then(|s| s.load_sched()) {
+            let mut ewma = shared.prep_ewma.lock().expect("prep ewma poisoned");
+            for (task, bucket, milli) in entries {
+                if let Ok(t) = TaskKind::from_u8(task) {
+                    ewma.insert((t, bucket as usize), milli as f64 / 1000.0);
+                }
+            }
+        }
+    }
     let (coord_tx, coord_rx) = channel();
     let (party_tx, party_rx) = channel();
     for (stream, token) in parked_coords {
@@ -1455,23 +1519,50 @@ fn next_action(shared: &Shared, want_prep: bool) -> Action {
             }
         }
         adm.queue = rest;
+        if sopts.prep_adaptive {
+            // One EWMA step per cut window: this key's share of recent
+            // arrivals rises, every other key's decays. Driven by the
+            // window sequence (not wall clock), so a given admission
+            // order always produces the same pool targets.
+            crate::protocols::prep::ewma_observe(
+                &mut shared.prep_ewma.lock().expect("prep ewma poisoned"),
+                key,
+            );
+        }
         return Action::Serve(items);
     }
 }
 
-/// Target pooled tapes per (task, bucket): the configured prep depth
-/// split across the served keys in proportion to observed admission
-/// pressure — uniform before any traffic — with every key keeping at
-/// least one tape (when prep is enabled at all), so a quiet bucket's
-/// first window still serves warm. The per-key minimum means the
-/// targets can sum past `prep_depth`; it bounds pooled tapes at
-/// `prep_depth + #keys`, all off the request path.
+/// Target pooled tapes per (task, bucket).
+///
+/// Static mode: the configured prep depth split across the served keys
+/// in proportion to observed admission pressure — uniform before any
+/// traffic — with every key keeping at least one tape (when prep is
+/// enabled at all), so a quiet bucket's first window still serves warm.
+/// The per-key minimum means the targets can sum past `prep_depth`; it
+/// bounds pooled tapes at `prep_depth + #keys`, all off the request
+/// path.
+///
+/// Adaptive mode (`--prep-adaptive`, DESIGN.md §Replica fleet): each
+/// key's target is its EWMA share of recent window arrivals times the
+/// ceiling, clamped to `[prep_depth, prep_ceiling]` — pressured keys
+/// bank deeper pools, idle keys decay back to the floor, and nobody
+/// retunes `--prep` when the traffic mix shifts.
 fn prep_targets(shared: &Shared) -> BTreeMap<(TaskKind, usize), usize> {
     let mut keys = Vec::new();
     for &t in &shared.tasks {
         for &b in &shared.buckets {
             keys.push((t, b));
         }
+    }
+    if shared.opts.prep_adaptive {
+        let budget = shared.opts.prep_budget();
+        let ewma = shared.prep_ewma.lock().expect("prep ewma poisoned");
+        let mut targets = BTreeMap::new();
+        for k in keys {
+            targets.insert(k, budget.target(ewma.get(&k).copied().unwrap_or(0.0)));
+        }
+        return targets;
     }
     let depth = shared.opts.prep_depth;
     let mut targets = BTreeMap::new();
@@ -2386,6 +2477,7 @@ mod tests {
             tasks,
             buckets,
             pressure: Mutex::new(HashMap::new()),
+            prep_ewma: Mutex::new(HashMap::new()),
             epoch: AtomicU64::new(0),
             tapes: AtomicU64::new(0),
             fault_window: AtomicU64::new(FAULT_DISARMED),
@@ -2479,6 +2571,53 @@ mod tests {
         // prep disabled: every target is zero
         shared.opts.prep_depth = 0;
         assert!(prep_targets(&shared).values().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn adaptive_targets_follow_window_arrivals_and_clamp_to_the_budget() {
+        let mut shared = admission_shared(vec![TaskKind::Classify, TaskKind::Ner], vec![8]);
+        shared.opts.prep_adaptive = true;
+        shared.opts.prep_depth = 0; // floor
+        shared.opts.prep_ceiling = 4;
+        let hot = (TaskKind::Classify, 8);
+        let cold = (TaskKind::Ner, 8);
+        // Cold start: no observed windows, every target sits at the floor.
+        let t = prep_targets(&shared);
+        assert_eq!(t[&hot], 0);
+        assert_eq!(t[&cold], 0);
+        // A skewed window mix: the pressured key's target converges
+        // toward the ceiling, the idle key decays back to the floor.
+        for _ in 0..12 {
+            crate::protocols::prep::ewma_observe(
+                &mut shared.prep_ewma.lock().unwrap(),
+                hot,
+            );
+        }
+        let t = prep_targets(&shared);
+        assert_eq!(t[&hot], 4, "sole-traffic key earns the whole ceiling");
+        assert_eq!(t[&cold], 0, "idle key stays at the floor");
+        // A nonzero floor keeps even idle keys minimally warm, and the
+        // ceiling caps the pressured key.
+        shared.opts.prep_depth = 1;
+        let t = prep_targets(&shared);
+        assert_eq!(t[&hot], 4);
+        assert_eq!(t[&cold], 1);
+        // next_action's cut path feeds the EWMA: cutting `cold` windows
+        // shifts the targets without touching `pressure`.
+        for _ in 0..12 {
+            let mut adm = shared.admission.lock().unwrap();
+            adm.queue.push_back(Pending {
+                id: 0,
+                conn: 0,
+                task: cold.0,
+                bucket: cold.1,
+                input: Vec::new(),
+            });
+            drop(adm);
+            let Action::Serve(_) = next_action(&shared, false) else { panic!("window") };
+        }
+        let t = prep_targets(&shared);
+        assert!(t[&cold] > t[&hot], "targets chase the observed mix: {t:?}");
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //! executables and the paper's per-shape offline tables both make mixed
 //! shapes expensive — bucketing keeps every session's tables shaped
 //! right while amortizing the one-time weight-sharing setup per bucket).
+//! This is the IN-PROCESS shape router; the multi-process *fleet*
+//! router, which spreads client connections across replica trios, is
+//! [`super::fleet`].
 
 use std::collections::BTreeMap;
 

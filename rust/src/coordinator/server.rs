@@ -56,7 +56,18 @@ pub struct ServerConfig {
     /// full-window (`max_batch`) tapes [`Coordinator::maintain_pool`]
     /// keeps ready. 0 disables preprocessing (every window generates its
     /// LUT material inline, as the paper's accounting-only split did).
+    /// With [`ServerConfig::prep_adaptive`] on, this is the FLOOR the
+    /// adaptive target never drops below.
     pub prep_depth: usize,
+    /// Adaptive prep sizing (the in-process mirror of the fleet's
+    /// per-key scheduler, DESIGN.md §Replica fleet): grow the pool
+    /// target with the EWMA of window arrivals, from `prep_depth` up to
+    /// [`ServerConfig::prep_max`], instead of pinning it at
+    /// `prep_depth`.
+    pub prep_adaptive: bool,
+    /// Pool-depth ceiling for the adaptive target (ignored when
+    /// [`ServerConfig::prep_adaptive`] is off).
+    pub prep_max: usize,
     /// Optimizer pipeline the session's graph is sealed with (`--opt`).
     pub opt: OptConfig,
 }
@@ -73,7 +84,25 @@ impl ServerConfig {
             net: NetParams::LAN,
             max_strategy: MaxStrategy::Tournament,
             prep_depth: 0,
+            prep_adaptive: false,
+            prep_max: crate::protocols::prep::DEFAULT_PREP_CEILING,
             opt: OptConfig::none(),
+        }
+    }
+
+    /// The prep sizing policy these knobs describe (mirrors
+    /// `remote::ServeOpts::prep_budget`; operator input is validated by
+    /// [`PrepBudget::new`](crate::protocols::prep::PrepBudget::new)
+    /// before it lands here).
+    pub fn prep_budget(&self) -> crate::protocols::prep::PrepBudget {
+        if self.prep_adaptive {
+            crate::protocols::prep::PrepBudget {
+                floor: self.prep_depth,
+                ceiling: self.prep_max.max(1),
+                adaptive: true,
+            }
+        } else {
+            crate::protocols::prep::PrepBudget::fixed(self.prep_depth)
         }
     }
 }
@@ -133,6 +162,11 @@ pub struct Coordinator {
     /// issue the same commands to all three parties.
     pool: HashMap<usize, usize>,
     prepped_windows: u64,
+    /// EWMA of window arrivals (the single-key analogue of the fleet
+    /// sequencer's per-(task, bucket) shares): rises toward 1 while
+    /// every [`Coordinator::run_batch`] poll cuts a window, decays
+    /// toward 0 across empty polls. Drives the adaptive pool target.
+    demand: f64,
     last_snap: MetricsSnapshot,
 }
 
@@ -156,6 +190,7 @@ impl Coordinator {
             windows: 0,
             pool: HashMap::new(),
             prepped_windows: 0,
+            demand: 0.0,
             last_snap,
         };
         c.maintain_pool();
@@ -197,7 +232,7 @@ impl Coordinator {
     /// synchronously between windows — the point is that it runs *off*
     /// the metered request path.
     pub fn maintain_pool(&mut self) {
-        let target = self.cfg.prep_depth;
+        let target = self.cfg.prep_budget().target(self.demand);
         let batch = self.cfg.max_batch;
         while self.pooled(batch) < target {
             self.prep_window(batch);
@@ -241,6 +276,10 @@ impl Coordinator {
     /// up off the request path.
     pub fn run_batch(&mut self) -> Vec<InferenceResult> {
         let n = self.queue.len().min(self.cfg.max_batch);
+        // One EWMA step per poll: a cut window observes demand, an
+        // empty poll observes idleness (pure decay).
+        let retain = crate::protocols::prep::EWMA_RETAIN;
+        self.demand = retain * self.demand + if n > 0 { 1.0 - retain } else { 0.0 };
         if n == 0 {
             return Vec::new();
         }

@@ -6,6 +6,8 @@
 //!   repro serve  [--config tiny|base] [--requests N] [--batch B] [--prep D]
 //!   repro plan   [--config tiny|base] [--batch B] [--json]   per-op offline tape dump
 //!   repro party  --id N [--listen ADDR] [--peers A,B] [--config tiny|base] ...
+//!   repro router --replicas A0,A1,A2;B0,B1,B2 [--labels r0,r1] [--listen ADDR] ...
+//!                                         fleet front end over replica trios
 //!   repro oracle [--artifacts DIR]        run the PJRT plaintext oracle
 //!   repro comm   [--seq N]                print metered comm (Table-4 row)
 //!   repro help
@@ -19,6 +21,9 @@ use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use ppq_bert::bench_harness::{fmt_dur, prepared_model};
+use ppq_bert::coordinator::fleet::{
+    halt_fleet, run_fleet_router, FleetClient, FleetOpts, ReplicaSpec,
+};
 use ppq_bert::coordinator::remote::{
     arm_fault, default_addrs, deployment_session_id, run_party_addr, seed_from_label, served_keys,
     Completed, InferenceRequest, PartyOpts, RemoteClient, ServeOpts,
@@ -30,6 +35,7 @@ use ppq_bert::model::secure::GraphSpec;
 use ppq_bert::model::weights::synth_input;
 use ppq_bert::party::SessionCfg;
 use ppq_bert::protocols::max::MaxStrategy;
+use ppq_bert::protocols::prep::PrepBudget;
 use ppq_bert::transport::{NetParams, Phase, PHASES};
 
 /// Parse `--key value` / `--bool` flags. A valueless flag (trailing, or
@@ -323,6 +329,21 @@ fn cmd_party(flags: HashMap<String, String>) {
     opts.serve.queue_cap = flag_parse(&flags, "queue-cap", opts.serve.queue_cap);
     opts.serve.max_inflight = flag_parse(&flags, "max-inflight", opts.serve.max_inflight);
     opts.serve.prep_depth = flag_parse(&flags, "prep", opts.serve.prep_depth);
+    // `--prep D` is the whole static budget, or the per-key FLOOR with
+    // the adaptive scheduler on; `--prep-max` only exists in adaptive
+    // mode. Contradictory combinations are usage errors, not guesses.
+    let prep_ceiling: Option<usize> = flags.get("prep-max").map(|v| {
+        v.parse().unwrap_or_else(|_| usage_error(&format!("--prep-max needs a value (got `{v}`)")))
+    });
+    match PrepBudget::new(opts.serve.prep_depth, prep_ceiling, flags.contains_key("prep-adaptive"))
+    {
+        Ok(b) => {
+            opts.serve.prep_depth = b.floor;
+            opts.serve.prep_ceiling = b.ceiling;
+            opts.serve.prep_adaptive = b.adaptive;
+        }
+        Err(e) => usage_error(&e),
+    }
     opts.serve.tasks = tasks_from(&flags);
     opts.serve.buckets = buckets_from(&flags);
     if let Some(dir) = flags.get("tape-dir").filter(|s| !s.is_empty()) {
@@ -378,6 +399,73 @@ fn cmd_party(flags: HashMap<String, String>) {
     println!("party {id}: shutdown requested, exiting");
 }
 
+/// Parse `--replicas A0,A1,A2;B0,B1,B2[;...]` (one trio per `;`-group)
+/// plus optional `--labels r0,r1[,...]`; unlabeled replica `i` defaults
+/// to `fleet-r{i}`, matching the smoke tooling's party labels.
+fn parse_replicas(flags: &HashMap<String, String>) -> Vec<ReplicaSpec> {
+    let spec = match flags.get("replicas").filter(|s| !s.is_empty()) {
+        Some(s) => s,
+        None => usage_error("router needs --replicas A0,A1,A2;B0,B1,B2[;...]"),
+    };
+    let labels: Vec<String> = match flags.get("labels").filter(|s| !s.is_empty()) {
+        Some(l) => l.split(',').map(|s| s.trim().to_string()).collect(),
+        None => Vec::new(),
+    };
+    let trios: Vec<&str> = spec.split(';').filter(|s| !s.trim().is_empty()).collect();
+    if !labels.is_empty() && labels.len() != trios.len() {
+        usage_error(&format!(
+            "--labels names {} replicas but --replicas has {}",
+            labels.len(),
+            trios.len()
+        ));
+    }
+    trios
+        .iter()
+        .enumerate()
+        .map(|(i, trio)| {
+            let parts: Vec<String> = trio.split(',').map(|s| s.trim().to_string()).collect();
+            let addrs = match <[String; 3]>::try_from(parts) {
+                Ok(a) => a,
+                Err(_) => usage_error(&format!(
+                    "replica {i} wants three comma-separated addresses, got `{trio}`"
+                )),
+            };
+            let label = labels.get(i).cloned().unwrap_or_else(|| format!("fleet-r{i}"));
+            ReplicaSpec { label, addrs }
+        })
+        .collect()
+}
+
+/// `repro router`: the fleet front end (DESIGN.md §Replica fleet). The
+/// topology flags (`--config`/`--seq`/`--tasks`/`--buckets`/`--layers`)
+/// must repeat what every replica's parties serve — they derive the
+/// fleet session id and each replica's expected session id.
+fn cmd_router(flags: HashMap<String, String>) {
+    let cfg = config_from(&flags);
+    let keys = topology_keys(&flags, &cfg);
+    let replicas = parse_replicas(&flags);
+    let listen = flags
+        .get("listen")
+        .filter(|s| !s.is_empty())
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:9120".to_string());
+    let poll = Duration::from_millis(flag_parse(&flags, "poll-ms", 200u64));
+    let listener = match std::net::TcpListener::bind(&listen) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("error: router bind {listen}: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("router: listening on {listen}, fleet of {} replicas", replicas.len());
+    let opts = FleetOpts { replicas, cfg, keys, poll, timeout: Duration::from_secs(30) };
+    if let Err(e) = run_fleet_router(listener, opts) {
+        eprintln!("error: router: {e}");
+        std::process::exit(1);
+    }
+    println!("router: fleet halted, exiting");
+}
+
 /// Parse a `--fault party:N@window:W` spec: which party aborts (as if
 /// `kill -9`'d) at which window id.
 fn parse_fault_spec(spec: &str) -> Result<(usize, u64), String> {
@@ -407,6 +495,257 @@ fn loadgen_request(
     InferenceRequest::new(task, bucket, synth_input(&rcfg, 100 + ridx as u64))
 }
 
+/// Replay observed window compositions through fresh in-process
+/// sessions — one per (task, bucket) group, a window never mixes keys —
+/// and demand bit-identical outputs. Exits the process on any
+/// mismatch; returns the group count. Shared by the single-trio and
+/// fleet (`--router`) `--check` paths: `seed` is the deployment's (or
+/// the replica's) master seed.
+fn replay_check(
+    cfg: &BertConfig,
+    flags: &HashMap<String, String>,
+    tasks: &[TaskKind],
+    buckets: &[usize],
+    seed: [u8; 16],
+    windows: &BTreeMap<u64, Vec<(usize, Completed)>>,
+) -> usize {
+    let mut groups: BTreeMap<(u8, usize), Vec<(u64, &Vec<(usize, Completed)>)>> = BTreeMap::new();
+    for (wid, reqs) in windows {
+        let key = (reqs[0].1.task(), reqs[0].1.bucket());
+        for (ridx, c) in reqs {
+            if (c.task(), c.bucket()) != key {
+                eprintln!("FAIL: window {wid} mixed (task, bucket) keys at request {ridx}");
+                std::process::exit(1);
+            }
+        }
+        groups.entry(key).or_default().push((*wid, reqs));
+    }
+    let scfg = SessionCfg { master_seed: seed, ..SessionCfg::default() };
+    let mut mismatches = 0usize;
+    for ((task_byte, bucket), wins) in &groups {
+        let task = TaskKind::from_u8(*task_byte).unwrap_or_else(|e| {
+            eprintln!("error: malformed window report: {e}");
+            std::process::exit(1);
+        });
+        let spec = GraphSpec::new(task, *cfg)
+            .with_seq(*bucket)
+            .with_strategy(MaxStrategy::Tournament)
+            .with_opt(opt_from(flags));
+        let (w, _) = prepared_model(*cfg);
+        let sess = Session::start_spec(spec, w, scfg);
+        for (wid, reqs) in wins {
+            let inputs: Vec<Vec<i64>> = reqs
+                .iter()
+                .map(|(ridx, _)| loadgen_request(cfg, tasks, buckets, *ridx).tokens)
+                .collect();
+            let outs = sess.infer_batch(&inputs);
+            for ((ridx, c), l) in reqs.iter().zip(&outs) {
+                if &c.logits != l {
+                    mismatches += 1;
+                    eprintln!(
+                        "MISMATCH: request {ridx} (window {wid}, {} s{bucket})",
+                        task.as_str()
+                    );
+                }
+            }
+        }
+        sess.shutdown();
+    }
+    if mismatches > 0 {
+        eprintln!("FAIL: {mismatches} outputs mismatched the in-process replay");
+        std::process::exit(1);
+    }
+    groups.len()
+}
+
+/// The `--tasks`/`--buckets` request mix a loadgen run drives (the
+/// defaults mirror a topology-flag-less deployment: classify at the
+/// configured `--seq`).
+fn loadgen_mix(flags: &HashMap<String, String>, cfg: &BertConfig) -> (Vec<TaskKind>, Vec<usize>) {
+    let tasks = {
+        let t = tasks_from(flags);
+        if t.is_empty() {
+            vec![TaskKind::Classify]
+        } else {
+            t
+        }
+    };
+    let buckets = {
+        let b = buckets_from(flags);
+        if b.is_empty() {
+            vec![cfg.seq_len]
+        } else {
+            b
+        }
+    };
+    (tasks, buckets)
+}
+
+/// Fleet-mode load driver (`loadgen --router ADDR`): every client
+/// obtains a sticky replica assignment from the fleet router, then
+/// drives its assigned trio directly. Window ids are PER REPLICA, so
+/// aggregation, the latency percentiles, and the `--check` replay all
+/// group by (replica, window); each replica's replay seeds from its
+/// assigned label, exactly as its parties did.
+fn cmd_loadgen_fleet(flags: HashMap<String, String>) {
+    let cfg = config_from(&flags);
+    let router = match flags.get("router").filter(|s| !s.is_empty()) {
+        Some(a) => a.clone(),
+        None => usage_error("--router needs the fleet router's address"),
+    };
+    let clients: usize = flag_parse(&flags, "clients", 4);
+    let requests: usize = flag_parse(&flags, "requests", 1);
+    if clients == 0 || requests == 0 {
+        usage_error("loadgen needs --clients >= 1 and --requests >= 1");
+    }
+    if flags.contains_key("fault") {
+        usage_error("--fault drives one trio directly; it does not compose with --router");
+    }
+    if flags.contains_key("session") {
+        usage_error("--session does not apply with --router (replica seeds come from labels)");
+    }
+    let (tasks, buckets) = loadgen_mix(&flags, &cfg);
+    let keys = topology_keys(&flags, &cfg);
+    let expect_replicas: Option<usize> = flags
+        .get("replicas")
+        .map(|v| v.parse().unwrap_or_else(|_| usage_error("--replicas wants a replica count")));
+    println!("loadgen: {clients} concurrent clients x {requests} requests via fleet {router}");
+
+    let barrier = Arc::new(Barrier::new(clients));
+    let t0 = std::time::Instant::now();
+    type FleetRun = (u32, String, [String; 3], Vec<(usize, Completed)>);
+    let mut handles = Vec::new();
+    for k in 0..clients {
+        let router = router.clone();
+        let keys = keys.clone();
+        let barrier = Arc::clone(&barrier);
+        let (tasks, buckets) = (tasks.clone(), buckets.clone());
+        handles.push(std::thread::spawn(move || -> std::result::Result<FleetRun, String> {
+            let mut fc = FleetClient::connect(&router, &cfg, &keys, Duration::from_secs(30))
+                .map_err(|e| format!("client {k}: fleet connect: {e}"))?;
+            barrier.wait();
+            let mut ids = Vec::new();
+            for j in 0..requests {
+                let ridx = k * requests + j;
+                let req = loadgen_request(&cfg, &tasks, &buckets, ridx);
+                let id = fc
+                    .client
+                    .submit_request(&req)
+                    .map_err(|e| format!("client {k}: submit: {e}"))?;
+                ids.push((ridx, id));
+            }
+            let mut out = Vec::new();
+            for (ridx, id) in ids {
+                out.push((ridx, fc.client.wait(id).map_err(|e| format!("client {k}: wait: {e}"))?));
+            }
+            Ok((fc.assign.replica, fc.assign.label.clone(), fc.assign.addrs.clone(), out))
+        }));
+    }
+    // Per replica: label, trio addresses, client count, completions.
+    let mut replicas: BTreeMap<u32, (String, [String; 3], usize, Vec<(usize, Completed)>)> =
+        BTreeMap::new();
+    for h in handles {
+        match h.join().expect("client thread panicked") {
+            Ok((rep, label, addrs, mut v)) => {
+                let entry = replicas.entry(rep).or_insert_with(|| (label, addrs, 0, Vec::new()));
+                entry.2 += 1;
+                entry.3.append(&mut v);
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
+    let total: usize = replicas.values().map(|(_, _, _, v)| v.len()).sum();
+    let mut walls: Vec<u64> = replicas
+        .values()
+        .flat_map(|(_, _, _, v)| v.iter().map(|(_, c)| c.reports[1].wall_ns))
+        .collect();
+    walls.sort_unstable();
+    let pct = |q: f64| {
+        let i = ((walls.len() - 1) as f64 * q).round() as usize;
+        Duration::from_nanos(walls[i])
+    };
+    println!(
+        "served {total} requests in {} ({:.2} req/s) across {} replicas",
+        fmt_dur(wall),
+        total as f64 / wall.as_secs_f64(),
+        replicas.len(),
+    );
+    if !walls.is_empty() {
+        println!(
+            "window wall p50/p95/p99: {} / {} / {}",
+            fmt_dur(pct(0.50)),
+            fmt_dur(pct(0.95)),
+            fmt_dur(pct(0.99)),
+        );
+    }
+    for (rep, (label, _, conns, comps)) in &replicas {
+        let windows: std::collections::BTreeSet<u64> = comps.iter().map(|(_, c)| c.wid()).collect();
+        println!(
+            "  replica {rep} ({label}): {conns} clients, {} requests, {} windows",
+            comps.len(),
+            windows.len(),
+        );
+    }
+    if let Some(expect) = expect_replicas {
+        if replicas.len() != expect {
+            eprintln!("error: expected {expect} replicas to serve traffic, saw {}", replicas.len());
+            std::process::exit(1);
+        }
+    }
+
+    if flags.contains_key("check") {
+        let mut groups = 0usize;
+        for (rep, (label, addrs, _, comps)) in &replicas {
+            let mut windows: BTreeMap<u64, Vec<(usize, Completed)>> = BTreeMap::new();
+            for (ridx, c) in comps {
+                windows.entry(c.wid()).or_default().push((*ridx, c.clone()));
+            }
+            for reqs in windows.values_mut() {
+                reqs.sort_by_key(|(_, c)| c.pos());
+            }
+            // Same freshness guard as the single-trio path, per replica:
+            // the replay only proves anything if loadgen saw EVERY
+            // window this replica ever cut.
+            let seed = seed_from_label(label);
+            let session = deployment_session_id(seed, &cfg, &keys);
+            let mut probe = RemoteClient::connect(addrs, session, Duration::from_secs(30))
+                .unwrap_or_else(|e| {
+                    eprintln!("error: replica {rep} probe connect: {e}");
+                    std::process::exit(1);
+                });
+            if let Ok(s) = probe.stats(1) {
+                if s.windows != windows.len() as u64 {
+                    eprintln!(
+                        "error: --check needs a fresh fleet (replica {rep} served {} windows, \
+                         loadgen saw {})",
+                        s.windows,
+                        windows.len()
+                    );
+                    std::process::exit(1);
+                }
+            }
+            groups += replay_check(&cfg, &flags, &tasks, &buckets, seed, &windows);
+        }
+        println!(
+            "CHECK OK: all {total} outputs bit-identical to the in-process replay \
+             ({groups} (task, bucket) groups across {} replicas)",
+            replicas.len()
+        );
+    }
+    if flags.contains_key("halt") {
+        if let Err(e) = halt_fleet(&router, &cfg, &keys, Duration::from_secs(30)) {
+            eprintln!("warning: fleet halt: {e}");
+        } else {
+            println!("fleet halted");
+        }
+    }
+}
+
 /// Multi-client load driver against a live 3-process deployment:
 /// `--clients K` threads each submit `--requests N` pipelined requests
 /// simultaneously, so the deployment's wire-path batcher folds requests
@@ -419,6 +758,9 @@ fn loadgen_request(
 /// fresh deployment with the default weights seed), `--halt` shuts the
 /// deployment down afterwards.
 fn cmd_loadgen(flags: HashMap<String, String>) {
+    if flags.contains_key("router") {
+        return cmd_loadgen_fleet(flags);
+    }
     let cfg = config_from(&flags);
     let addrs = remote_addrs(&flags);
     let clients: usize = flag_parse(&flags, "clients", 4);
@@ -426,22 +768,7 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
     if clients == 0 || requests == 0 {
         usage_error("loadgen needs --clients >= 1 and --requests >= 1");
     }
-    let tasks = {
-        let t = tasks_from(&flags);
-        if t.is_empty() {
-            vec![TaskKind::Classify]
-        } else {
-            t
-        }
-    };
-    let buckets = {
-        let b = buckets_from(&flags);
-        if b.is_empty() {
-            vec![cfg.seq_len]
-        } else {
-            b
-        }
-    };
+    let (tasks, buckets) = loadgen_mix(&flags, &cfg);
     let seed = match flags.get("session").filter(|s| !s.is_empty()) {
         Some(label) => seed_from_label(label),
         None => SessionCfg::default().master_seed,
@@ -596,61 +923,10 @@ fn cmd_loadgen(flags: HashMap<String, String>) {
                 std::process::exit(1);
             }
         }
-        // Group the observed windows by (task, bucket) — a window must
-        // never mix keys — then replay each group's compositions
-        // through a fresh in-process session of that exact spec:
-        // outputs must be bit-identical per bucket.
-        let mut groups: BTreeMap<(u8, usize), Vec<(u64, &Vec<(usize, Completed)>)>> =
-            BTreeMap::new();
-        for (wid, reqs) in &windows {
-            let key = (reqs[0].1.task(), reqs[0].1.bucket());
-            for (ridx, c) in reqs {
-                if (c.task(), c.bucket()) != key {
-                    eprintln!("FAIL: window {wid} mixed (task, bucket) keys at request {ridx}");
-                    std::process::exit(1);
-                }
-            }
-            groups.entry(key).or_default().push((*wid, reqs));
-        }
-        let scfg = SessionCfg { master_seed: seed, ..SessionCfg::default() };
-        let mut mismatches = 0usize;
-        for ((task_byte, bucket), wins) in &groups {
-            let task = TaskKind::from_u8(*task_byte).unwrap_or_else(|e| {
-                eprintln!("error: malformed window report: {e}");
-                std::process::exit(1);
-            });
-            let spec = GraphSpec::new(task, cfg)
-                .with_seq(*bucket)
-                .with_strategy(MaxStrategy::Tournament)
-                .with_opt(opt_from(&flags));
-            let (w, _) = prepared_model(cfg);
-            let sess = Session::start_spec(spec, w, scfg);
-            for (wid, reqs) in wins {
-                let inputs: Vec<Vec<i64>> = reqs
-                    .iter()
-                    .map(|(ridx, _)| loadgen_request(&cfg, &tasks, &buckets, *ridx).tokens)
-                    .collect();
-                let outs = sess.infer_batch(&inputs);
-                for ((ridx, c), l) in reqs.iter().zip(&outs) {
-                    if &c.logits != l {
-                        mismatches += 1;
-                        eprintln!(
-                            "MISMATCH: request {ridx} (window {wid}, {} s{bucket})",
-                            task.as_str()
-                        );
-                    }
-                }
-            }
-            sess.shutdown();
-        }
-        if mismatches > 0 {
-            eprintln!("FAIL: {mismatches} outputs mismatched the in-process replay");
-            std::process::exit(1);
-        }
+        let groups = replay_check(&cfg, &flags, &tasks, &buckets, seed, &windows);
         println!(
             "CHECK OK: all {total} outputs bit-identical to the in-process replay \
-             ({} (task, bucket) groups)",
-            groups.len()
+             ({groups} (task, bucket) groups)"
         );
     }
     if flags.contains_key("halt") {
@@ -968,6 +1244,26 @@ USAGE:
                                              must match the deployment's); --fault
                                              arms a kill -9-style abort on party N
                                              at window W (refusals become expected)
+  repro loadgen --router ADDR [--replicas R] [--clients K] [--requests N]
+                [--tasks A,B] [--buckets N,M] [--check] [--halt]
+                                             fleet mode: each client takes a sticky
+                                             replica assignment from the router;
+                                             prints per-replica spread and window
+                                             wall p50/p95/p99; --replicas R demands
+                                             traffic reached exactly R replicas;
+                                             --check replays per replica (seeded
+                                             from its label); --halt drains the
+                                             whole fleet through the router
+  repro router --replicas A0,A1,A2;B0,B1,B2[;...] [--labels r0,r1] [--listen ADDR]
+               [--config tiny|base] [--seq N] [--layers L] [--tasks A,B] [--buckets N,M]
+               [--poll-ms MS]
+                                             fleet front end: spreads client
+                                             connections across replica trios by
+                                             health (polled from each replica's P1)
+                                             and load; topology flags must repeat
+                                             the replicas' serving topology; replica
+                                             i's parties must run
+                                             --session fleet-r{i} (or --labels)
   repro serve  [--config tiny|base] [--task K] [--requests N] [--batch B] [--prep D]
                [--opt 0|1] [--threads T] [--conf FILE]
   repro plan   [--config tiny|base] [--task K] [--seq N] [--layers L] [--batch B]
@@ -983,7 +1279,8 @@ USAGE:
   repro party  --id 0|1|2 [--listen ADDR] [--peers A,B] [--config tiny|base] [--seq N]
                [--layers L] [--tasks A,B] [--buckets N,M] [--threads T] [--weights-seed S]
                [--session LABEL] [--max-batch B] [--linger MS] [--queue-cap Q]
-               [--max-inflight I] [--prep D] [--tape-dir DIR] [--fault-window W] [--opt 0|1]
+               [--max-inflight I] [--prep D] [--prep-adaptive] [--prep-max C]
+               [--tape-dir DIR] [--fault-window W] [--opt 0|1]
                [--reconnect-attempts R] [--reconnect-backoff-ms MS]
                                              --tasks/--buckets serve several task
                                              heads at several padded seq-length
@@ -994,7 +1291,12 @@ USAGE:
                                              cursors so a killed party restarts
                                              warm; --fault-window aborts at window
                                              W; --opt seals the served graphs with
-                                             the optimizer pipeline
+                                             the optimizer pipeline; --prep D is
+                                             the static per-key tape budget, or —
+                                             with --prep-adaptive — the per-key
+                                             FLOOR under the EWMA scheduler, whose
+                                             per-key ceiling is --prep-max C
+                                             (contradictory combos are rejected)
   repro oracle [--artifacts DIR]
   repro comm   [--config tiny|base] [--seq N] [--opt 0|1]
   repro help
@@ -1012,6 +1314,13 @@ Heterogeneous quickstart (one deployment, four task heads, two buckets):
   for i in 0 1 2; do repro party --id $i --tasks classify,ner,pair,embed --buckets 4,8 & done
   repro loadgen --clients 4 --requests 4 --tasks classify,ner,pair,embed --buckets 4,8 --check
   repro infer --remote --task ner --seq 4 --tasks classify,ner,pair,embed --buckets 4,8 --halt
+
+Fleet quickstart (two replica trios + a router; quote the `;` in --replicas):
+  start trio r (ports 9130+3r..9132+3r): repro party --id i --session fleet-r{r}
+    --listen ADDR_i --peers ADDR_j,ADDR_k --max-batch 1 --prep-adaptive
+  repro router --listen 127.0.0.1:9120 --replicas \\
+    '127.0.0.1:9130,127.0.0.1:9131,127.0.0.1:9132;127.0.0.1:9133,127.0.0.1:9134,127.0.0.1:9135'
+  repro loadgen --router 127.0.0.1:9120 --replicas 2 --clients 4 --requests 2 --check --halt
 ";
 
 fn main() {
@@ -1035,6 +1344,7 @@ fn main() {
         "serve" => cmd_serve(flags),
         "plan" => cmd_plan(flags),
         "party" => cmd_party(flags),
+        "router" => cmd_router(flags),
         "oracle" => cmd_oracle(flags),
         "comm" => cmd_comm(flags),
         "help" => print!("{HELP}"),

@@ -252,7 +252,7 @@ impl BertConfig {
 
 /// Per-layer quantization + protocol knobs — the paper's *fine-grained
 /// layer-wise quantization* as an actual API: each encoder layer of a
-/// graph built by `model::secure::bert_graph` carries its own softmax
+/// graph built by `model::secure::GraphSpec` carries its own softmax
 /// scale, LayerNorm scale/epsilon (baked into that layer's LUT
 /// contents) and `Π_max` realization, instead of one global knob
 /// (DESIGN.md §Secure op graph).

@@ -987,8 +987,7 @@ fn build_bert(
 /// single graph-construction entry point (see DESIGN.md
 /// §Heterogeneous serving). Every builder call in src/, tests and benches goes through
 /// `GraphSpec::build` (live, under `Phase::Setup`) or `GraphSpec::dry`
-/// (share-less, plan/accounting only); the old free-function builders
-/// survive one PR as deprecated one-line wrappers.
+/// (share-less, plan/accounting only).
 #[derive(Clone)]
 pub struct GraphSpec {
     /// Which workload head the trunk ends in.
@@ -1144,94 +1143,10 @@ pub fn per_request_outputs(rows: Vec<Vec<i64>>, batch: usize) -> Vec<Vec<i64>> {
     rows.chunks(per).map(|c| c.concat()).collect()
 }
 
-/// Model-owner setup as a graph builder: P0 supplies the (calibrated)
-/// weights; all three parties end with their shares of every `W'`, γ',
-/// β and the scale-folded conversion tables, wired into a
-/// [`SecureGraph`] whose outputs are `[logits, final hidden]`.
-#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).build(ctx, weights)")]
-pub fn bert_graph(
-    ctx: &PartyCtx,
-    cfg: &BertConfig,
-    per_layer: &[LayerQuantConfig],
-    weights: Option<&Weights>,
-) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg).with_quant(per_layer.to_vec()).build(ctx, weights)
-}
-
-/// [`bert_graph`] sealed with an explicit optimizer pipeline.
-#[deprecated(note = "use GraphSpec::new(..).with_opt(opt).build(ctx, weights)")]
-pub fn bert_graph_opt(
-    ctx: &PartyCtx,
-    cfg: &BertConfig,
-    per_layer: &[LayerQuantConfig],
-    weights: Option<&Weights>,
-    opt: OptConfig,
-) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg)
-        .with_quant(per_layer.to_vec())
-        .with_opt(opt)
-        .build(ctx, weights)
-}
-
-/// [`bert_graph`] with uniform per-layer knobs and the tournament
-/// `Π_max` — the frozen parity baseline (`graph_parity.rs`).
-#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).build(ctx, weights)")]
-pub fn bert_graph_default(
-    ctx: &PartyCtx,
-    cfg: &BertConfig,
-    weights: Option<&Weights>,
-) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg).build(ctx, weights)
-}
-
-/// [`bert_graph`] variant ending in the output-minimized argmax head.
-#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).build_argmax(ctx, weights)")]
-pub fn bert_classify_graph(
-    ctx: &PartyCtx,
-    cfg: &BertConfig,
-    per_layer: &[LayerQuantConfig],
-    weights: Option<&Weights>,
-) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg)
-        .with_quant(per_layer.to_vec())
-        .build_argmax(ctx, weights)
-}
-
-/// [`bert_classify_graph`] sealed with an explicit optimizer pipeline.
-#[deprecated(note = "use GraphSpec::new(..).with_opt(opt).build_argmax(ctx, weights)")]
-pub fn bert_classify_graph_opt(
-    ctx: &PartyCtx,
-    cfg: &BertConfig,
-    per_layer: &[LayerQuantConfig],
-    weights: Option<&Weights>,
-    opt: OptConfig,
-) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg)
-        .with_quant(per_layer.to_vec())
-        .with_opt(opt)
-        .build_argmax(ctx, weights)
-}
-
-/// Share-less classify build (see [`GraphSpec::dry`]).
-#[deprecated(note = "use GraphSpec::new(TaskKind::Classify, cfg).dry()")]
-pub fn bert_graph_dry(cfg: &BertConfig, per_layer: &[LayerQuantConfig]) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg).with_quant(per_layer.to_vec()).dry()
-}
-
-/// [`bert_graph_dry`] sealed with an explicit optimizer pipeline.
-#[deprecated(note = "use GraphSpec::new(..).with_opt(opt).dry()")]
-pub fn bert_graph_dry_opt(
-    cfg: &BertConfig,
-    per_layer: &[LayerQuantConfig],
-    opt: OptConfig,
-) -> SecureGraph {
-    GraphSpec::new(TaskKind::Classify, *cfg).with_quant(per_layer.to_vec()).with_opt(opt).dry()
-}
-
 // ---------------------------------------------------------------------------
 // A second, non-BERT builder: the IR is not transformer-shaped.
 
-/// Shape of the standalone MLP classifier graph ([`mlp_graph`]) — a
+/// Shape of the standalone MLP classifier graph ([`MlpSpec`]) — a
 /// second builder over the same op set, proving the IR is architecture-
 /// agnostic: flat input → FC/ReLU/FC block → revealed logits.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -1358,35 +1273,6 @@ impl MlpSpec {
     }
 }
 
-/// Build the MLP classifier graph; P0 supplies the weights.
-#[deprecated(note = "use MlpSpec::new(cfg).build(ctx, weights)")]
-pub fn mlp_graph(ctx: &PartyCtx, cfg: &MlpConfig, weights: Option<&MlpWeights>) -> SecureGraph {
-    MlpSpec::new(*cfg).build(ctx, weights)
-}
-
-/// [`mlp_graph`] sealed with an explicit optimizer pipeline.
-#[deprecated(note = "use MlpSpec::new(cfg).with_opt(opt).build(ctx, weights)")]
-pub fn mlp_graph_opt(
-    ctx: &PartyCtx,
-    cfg: &MlpConfig,
-    weights: Option<&MlpWeights>,
-    opt: OptConfig,
-) -> SecureGraph {
-    MlpSpec::new(*cfg).with_opt(opt).build(ctx, weights)
-}
-
-/// Share-less MLP graph for planning/accounting.
-#[deprecated(note = "use MlpSpec::new(cfg).dry()")]
-pub fn mlp_graph_dry(cfg: &MlpConfig) -> SecureGraph {
-    MlpSpec::new(*cfg).dry()
-}
-
-/// [`mlp_graph_dry`] sealed with an explicit optimizer pipeline.
-#[deprecated(note = "use MlpSpec::new(cfg).with_opt(opt).dry()")]
-pub fn mlp_graph_dry_opt(cfg: &MlpConfig, opt: OptConfig) -> SecureGraph {
-    MlpSpec::new(*cfg).with_opt(opt).dry()
-}
-
 // ---------------------------------------------------------------------------
 // Inference entry points (thin wrappers over the graph walk).
 
@@ -1432,7 +1318,7 @@ pub fn secure_infer(ctx: &PartyCtx, g: &SecureGraph, x4: Option<&[i64]>) -> (Vec
 }
 
 /// Output-minimized secure classification over a graph built by
-/// [`bert_classify_graph`]: the parties only ever open the *argmax
+/// [`GraphSpec::build_argmax`]: the parties only ever open the *argmax
 /// index* of the logits — the logit values themselves stay secret.
 /// Returns the predicted class at P1/P2 (0 at P0, which learns nothing).
 pub fn secure_classify(ctx: &PartyCtx, g: &SecureGraph, x4: Option<&[i64]>) -> u64 {

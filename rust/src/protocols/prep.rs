@@ -676,6 +676,112 @@ pub fn run_plan_deduped(ctx: &PartyCtx, plan: &[PlanOp]) -> (Vec<Correlation>, D
     (corrs, stats)
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive prep budgets (DESIGN.md §Replica fleet).
+//
+// The serving loops historically topped every pool up to a hand-set
+// static depth (`--prep D`). The adaptive scheduler replaces that with a
+// *policy*: track an exponentially-weighted share of recent window
+// arrivals per (task, bucket) key and size each key's pool target as its
+// share of a configurable ceiling. The policy lives here as pure
+// arithmetic — no threads, no sockets — so both serving paths (the
+// in-process `Coordinator` and the wire-path sequencer) apply the exact
+// same sizing rule and the unit tests below pin it. Crucially the
+// *decision site* is unchanged: only the sequencer (or the in-process
+// coordinator) turns targets into prep work, keeping pool mutations
+// symmetric across the three parties.
+
+/// EWMA retention per observed window (λ): on every window cut, each
+/// key's share decays by λ and the cut key gains `1 − λ`, so shares
+/// always sum to ≤ 1 and converge to each key's fraction of recent
+/// traffic. λ = 3/4 weights the last ~4 windows at ≈ 68% — fast enough
+/// to chase a mix shift within a handful of windows, slow enough not to
+/// thrash on an interleaved mix.
+pub const EWMA_RETAIN: f64 = 0.75;
+
+/// Default adaptive ceiling (windows of correlations per key) when the
+/// operator gives none.
+pub const DEFAULT_PREP_CEILING: usize = 8;
+
+/// Per-key pool-depth policy: how many windows of correlations the
+/// serving loop should keep banked for one (task, bucket) key.
+///
+/// * Static (`adaptive == false`): target is always `floor` — the
+///   pre-fleet `--prep D` behavior (callers may still split a static
+///   depth across keys by pressure; see `remote::prep_targets`).
+/// * Adaptive: target is the key's EWMA traffic share of `ceiling`,
+///   clamped to `[floor, ceiling]` — keys that stop seeing traffic decay
+///   back to `floor`, pressured keys grow toward `ceiling`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrepBudget {
+    /// Minimum banked windows per served key (the `--prep` value).
+    pub floor: usize,
+    /// Maximum banked windows per key the scheduler may reach.
+    pub ceiling: usize,
+    /// Whether the EWMA sizing rule is active.
+    pub adaptive: bool,
+}
+
+impl PrepBudget {
+    /// The pre-fleet static budget: always exactly `depth`.
+    pub fn fixed(depth: usize) -> PrepBudget {
+        PrepBudget { floor: depth, ceiling: depth, adaptive: false }
+    }
+
+    /// Validate an operator's (floor, ceiling, adaptive) combination.
+    ///
+    /// Rejections (satellite: `--prep` semantics): a ceiling without the
+    /// adaptive scheduler is contradictory (static mode has no ceiling
+    /// knob), as is a floor above the ceiling; an adaptive ceiling of 0
+    /// could never bank anything.
+    pub fn new(floor: usize, ceiling: Option<usize>, adaptive: bool) -> Result<PrepBudget, String> {
+        if !adaptive {
+            return match ceiling {
+                Some(c) => Err(format!(
+                    "prep ceiling {c} only applies with the adaptive scheduler (--prep-adaptive)"
+                )),
+                None => Ok(PrepBudget::fixed(floor)),
+            };
+        }
+        let ceiling = ceiling.unwrap_or(DEFAULT_PREP_CEILING);
+        if ceiling == 0 {
+            return Err("adaptive prep ceiling must be at least 1".into());
+        }
+        if floor > ceiling {
+            return Err(format!("prep floor {floor} exceeds the adaptive ceiling {ceiling}"));
+        }
+        Ok(PrepBudget { floor, ceiling, adaptive: true })
+    }
+
+    /// Pool-depth target for a key whose EWMA traffic share is `share`
+    /// (∈ [0, 1]): static budgets return the floor unconditionally;
+    /// adaptive budgets return `⌈share · ceiling⌉` clamped to
+    /// `[floor, ceiling]`.
+    pub fn target(&self, share: f64) -> usize {
+        if !self.adaptive {
+            return self.floor;
+        }
+        let want = (share.clamp(0.0, 1.0) * self.ceiling as f64).ceil() as usize;
+        want.clamp(self.floor, self.ceiling)
+    }
+}
+
+/// One EWMA step over a key→share map: every key decays by
+/// [`EWMA_RETAIN`], then the observed key gains the remainder. Applied
+/// once per cut window with the window's (task, bucket) key, the map
+/// converges to each key's share of recent window arrivals. Driven by
+/// the window sequence (not wall clock), so identical window orders
+/// produce identical shares on every run.
+pub fn ewma_observe<K: std::hash::Hash + Eq>(
+    shares: &mut std::collections::HashMap<K, f64>,
+    hit: K,
+) {
+    for v in shares.values_mut() {
+        *v *= EWMA_RETAIN;
+    }
+    *shares.entry(hit).or_insert(0.0) += 1.0 - EWMA_RETAIN;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -755,5 +861,55 @@ mod tests {
         for (shapes, produced) in outs {
             assert_eq!(shapes, produced);
         }
+    }
+
+    #[test]
+    fn prep_budget_validation_rejects_contradictions() {
+        // Ceiling without the adaptive scheduler is contradictory.
+        assert!(PrepBudget::new(2, Some(8), false).is_err());
+        // Floor above ceiling can never be satisfied.
+        assert!(PrepBudget::new(9, Some(8), true).is_err());
+        // Zero ceiling banks nothing.
+        assert!(PrepBudget::new(0, Some(0), true).is_err());
+        // Static without a ceiling is the pre-fleet behavior.
+        assert_eq!(PrepBudget::new(3, None, false).unwrap(), PrepBudget::fixed(3));
+        // Adaptive without a ceiling gets the default.
+        let b = PrepBudget::new(1, None, true).unwrap();
+        assert_eq!((b.floor, b.ceiling, b.adaptive), (1, DEFAULT_PREP_CEILING, true));
+    }
+
+    #[test]
+    fn prep_budget_target_clamps_between_floor_and_ceiling() {
+        let b = PrepBudget::new(1, Some(8), true).unwrap();
+        assert_eq!(b.target(0.0), 1, "idle key decays to the floor");
+        assert_eq!(b.target(1.0), 8, "sole key earns the whole ceiling");
+        assert_eq!(b.target(0.5), 4);
+        assert_eq!(b.target(0.26), 3, "targets round up");
+        // Static budgets ignore the share entirely.
+        assert_eq!(PrepBudget::fixed(2).target(0.9), 2);
+        assert_eq!(PrepBudget::fixed(2).target(0.0), 2);
+    }
+
+    #[test]
+    fn ewma_shares_track_a_skewed_window_mix() {
+        let mut shares: std::collections::HashMap<&str, f64> = Default::default();
+        // 3:1 mix of windows between two keys.
+        for _ in 0..8 {
+            ewma_observe(&mut shares, "hot");
+            ewma_observe(&mut shares, "hot");
+            ewma_observe(&mut shares, "hot");
+            ewma_observe(&mut shares, "cold");
+        }
+        let hot = shares["hot"];
+        let cold = shares["cold"];
+        assert!(hot + cold <= 1.0 + 1e-9, "shares are a partition of recent traffic");
+        assert!(hot > cold, "the pressured key must dominate");
+        let b = PrepBudget::new(0, Some(8), true).unwrap();
+        assert!(b.target(hot) > b.target(cold), "pool targets follow the pressure");
+        // A mix flip re-converges: the cold key takes over.
+        for _ in 0..16 {
+            ewma_observe(&mut shares, "cold");
+        }
+        assert!(shares["cold"] > shares["hot"], "EWMA chases the new mix");
     }
 }

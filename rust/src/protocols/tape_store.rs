@@ -42,6 +42,7 @@ pub type TapePool = HashMap<(u64, usize), VecDeque<Vec<Correlation>>>;
 
 const TAPE_MAGIC: &[u8; 8] = b"PPQTAPE1";
 const STATE_MAGIC: &[u8; 8] = b"PPQSTAT1";
+const SCHED_MAGIC: &[u8; 8] = b"PPQSCHD1";
 /// On-disk format version; bump on any layout change so stale stores
 /// are rejected instead of misread.
 pub const TAPE_FORMAT_VERSION: u32 = 1;
@@ -275,6 +276,10 @@ impl TapeStore {
         self.dir.join(format!("state_p{}.bin", self.party))
     }
 
+    fn sched_path(&self) -> PathBuf {
+        self.dir.join(format!("sched_p{}.bin", self.party))
+    }
+
     fn write_atomic(&self, path: &Path, bytes: &[u8]) -> Result<()> {
         let tmp = path.with_extension("bin.tmp");
         fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
@@ -463,6 +468,54 @@ impl TapeStore {
             return None;
         }
         Some(RecoveryState { seq, cursors, prev_cursors, last_prep_key, epoch })
+    }
+
+    /// Persist the adaptive prep scheduler's learned per-key traffic
+    /// shares (DESIGN.md §Replica fleet): entries of (task byte, bucket,
+    /// share in thousandths), sorted for deterministic bytes. Kept in a
+    /// separate `sched_p<party>.bin` file — it is advisory sizing
+    /// history, not boundary state, so a corrupt or missing file only
+    /// costs a few re-learning windows, never a reconciliation.
+    pub fn save_sched(&self, shares: &[(u8, u32, u64)]) -> Result<()> {
+        let mut entries = shares.to_vec();
+        entries.sort_unstable();
+        let mut file = self.header(SCHED_MAGIC);
+        put_u32(&mut file, entries.len() as u32);
+        for &(task, bucket, milli) in &entries {
+            file.push(task);
+            put_u32(&mut file, bucket);
+            put_u64(&mut file, milli);
+        }
+        let crc = crc32(&file);
+        put_u32(&mut file, crc);
+        self.write_atomic(&self.sched_path(), &file)
+    }
+
+    /// Restore the scheduler shares; `None` when the file is absent or
+    /// fails any validation (the scheduler just starts cold).
+    pub fn load_sched(&self) -> Option<Vec<(u8, u32, u64)>> {
+        let bytes = fs::read(self.sched_path()).ok()?;
+        let mut r = Reader::new(&bytes);
+        self.check_header(&mut r, SCHED_MAGIC)?;
+        let n = r.u32()? as usize;
+        if n > bytes.len() {
+            return None;
+        }
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let task = r.u8()?;
+            let bucket = r.u32()?;
+            let milli = r.u64()?;
+            entries.push((task, bucket, milli));
+        }
+        let body_end = r.off;
+        if crc32(&bytes[..body_end]) != r.u32()? {
+            return None;
+        }
+        if !r.done() {
+            return None;
+        }
+        Some(entries)
     }
 }
 
@@ -758,6 +811,37 @@ mod tests {
         assert!(store.load_state().is_none(), "truncated state accepted");
         fs::write(&path, &original).unwrap();
         assert_eq!(store.load_state(), Some(st));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sched_shares_round_trip_and_reject_corruption() {
+        let dir = tmp_dir("sched");
+        let store = TapeStore::new(&dir, 1, [9; 16]).unwrap();
+        assert!(store.load_sched().is_none(), "no sched file yet");
+
+        // Unsorted input comes back sorted (deterministic bytes).
+        let shares = vec![(1u8, 8u32, 750u64), (0u8, 4u32, 250u64)];
+        store.save_sched(&shares).unwrap();
+        assert_eq!(store.load_sched(), Some(vec![(0, 4, 250), (1, 8, 750)]));
+
+        // Bound to (party, session): a different session rejects it.
+        let other = TapeStore::new(&dir, 1, [10; 16]).unwrap();
+        assert!(other.load_sched().is_none());
+
+        // Any bit flip or truncation invalidates the file wholesale.
+        let path = dir.join("sched_p1.bin");
+        let original = fs::read(&path).unwrap();
+        for at in 0..original.len() {
+            let mut bad = original.clone();
+            bad[at] ^= 0x10;
+            fs::write(&path, &bad).unwrap();
+            assert!(store.load_sched().is_none(), "bit flip at {at} accepted");
+        }
+        fs::write(&path, &original[..original.len() - 1]).unwrap();
+        assert!(store.load_sched().is_none(), "truncated sched accepted");
+        fs::write(&path, &original).unwrap();
+        assert!(store.load_sched().is_some());
         let _ = fs::remove_dir_all(&dir);
     }
 }

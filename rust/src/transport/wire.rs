@@ -49,8 +49,13 @@ use crate::transport::metrics::Phase;
 /// window-report payloads for heterogeneous-workload serving
 /// (DESIGN.md §Heterogeneous serving). The task travels as a raw byte
 /// at this layer — `model::config::TaskKind` decodes it — so the
-/// transport stays model-agnostic.
-pub const WIRE_VERSION: u8 = 4;
+/// transport stays model-agnostic. Version 5 added the fleet handshake
+/// ([`Tag::FleetHello`] / [`Tag::FleetAssign`]): a front-end router
+/// assigns each client to one of R independent party-trios, binding the
+/// fleet session id, the replica index/label and the serving topology
+/// into the assignment so a topology-diverged replica fails loudly at
+/// connect time (DESIGN.md §Replica fleet).
+pub const WIRE_VERSION: u8 = 5;
 
 /// Refuse frames whose length prefix exceeds this (1 GiB): a corrupt or
 /// hostile prefix must not drive allocation.
@@ -121,6 +126,14 @@ pub enum Tag {
     /// manifest for that window. Test-only, but always decoded so the
     /// fault schedule needs no special build.
     Fault,
+    /// Client → fleet router: request a replica assignment (version +
+    /// fleet session id). The router answers [`Tag::FleetAssign`], or
+    /// [`Tag::Error`] when no healthy replica can take the connection.
+    FleetHello,
+    /// Fleet router → client: the sticky replica assignment
+    /// ([`FleetAssign`] payload: fleet session echo, replica index +
+    /// label, topology label, the trio's three party addresses).
+    FleetAssign,
 }
 
 impl Tag {
@@ -151,6 +164,8 @@ impl Tag {
             Tag::Stats => 21,
             Tag::Resync => 22,
             Tag::Fault => 23,
+            Tag::FleetHello => 24,
+            Tag::FleetAssign => 25,
         }
     }
 
@@ -181,6 +196,8 @@ impl Tag {
             21 => Tag::Stats,
             22 => Tag::Resync,
             23 => Tag::Fault,
+            24 => Tag::FleetHello,
+            25 => Tag::FleetAssign,
             other => bail!("unknown wire tag {other}"),
         })
     }
@@ -448,6 +465,105 @@ pub fn coord_handshake(
         bail!("expected HelloAck, got {tag:?}");
     }
     Ok(decode_ack(&payload, session)?.0)
+}
+
+// ---- fleet handshake (DESIGN.md §Replica fleet) ----
+
+/// A fleet router's sticky replica assignment: everything a client
+/// needs to dial the chosen trio directly — plus the bindings that make
+/// a topology divergence loud (the fleet session echo and the replica's
+/// topology label; the client additionally verifies the replica's own
+/// session id at [`client_handshake`] time, since the replica session
+/// is derived from its label + topology).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct FleetAssign {
+    /// The fleet session id, echoed from the hello (a stale or
+    /// mis-dialed router fails here).
+    pub session: [u8; 16],
+    /// Index of the assigned replica in the router's fleet.
+    pub replica: u32,
+    /// The replica's deployment label (`repro party --session LABEL`);
+    /// its master seed — and so its wire session id — derive from this.
+    pub label: String,
+    /// The serving topology the router believes this replica runs; a
+    /// client expecting a different topology must refuse the assignment.
+    pub topology: String,
+    /// The trio's listen addresses (party 0, 1, 2 in order).
+    pub addrs: [String; 3],
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn take_str(payload: &[u8], off: &mut usize) -> Result<String> {
+    let end = off.checked_add(2).filter(|&e| e <= payload.len());
+    let Some(end) = end else { bail!("fleet assign: truncated string length") };
+    let len = u16::from_le_bytes(payload[*off..end].try_into().unwrap()) as usize;
+    let send = end.checked_add(len).filter(|&e| e <= payload.len());
+    let Some(send) = send else { bail!("fleet assign: truncated string body") };
+    let s = std::str::from_utf8(&payload[end..send])
+        .map_err(|_| Error::msg("fleet assign: non-UTF-8 string"))?
+        .to_string();
+    *off = send;
+    Ok(s)
+}
+
+/// Encode a [`Tag::FleetAssign`] payload.
+pub fn encode_fleet_assign(a: &FleetAssign) -> Vec<u8> {
+    let mut out = vec![WIRE_VERSION];
+    out.extend_from_slice(&a.session);
+    out.extend_from_slice(&a.replica.to_le_bytes());
+    put_str(&mut out, &a.label);
+    put_str(&mut out, &a.topology);
+    for addr in &a.addrs {
+        put_str(&mut out, addr);
+    }
+    out
+}
+
+/// Decode a [`Tag::FleetAssign`] payload, verifying version and that the
+/// echoed fleet session matches the one the client presented.
+pub fn decode_fleet_assign(payload: &[u8], session: &[u8; 16]) -> Result<FleetAssign> {
+    if payload.len() < 21 || payload[0] != WIRE_VERSION {
+        bail!("malformed fleet assignment");
+    }
+    if &payload[1..17] != session {
+        bail!("fleet assignment: session id mismatch (router serves a different fleet)");
+    }
+    let replica = u32::from_le_bytes(payload[17..21].try_into().unwrap());
+    let mut off = 21;
+    let label = take_str(payload, &mut off)?;
+    let topology = take_str(payload, &mut off)?;
+    let a0 = take_str(payload, &mut off)?;
+    let a1 = take_str(payload, &mut off)?;
+    let a2 = take_str(payload, &mut off)?;
+    if off != payload.len() {
+        bail!("fleet assignment: trailing bytes");
+    }
+    Ok(FleetAssign { session: *session, replica, label, topology, addrs: [a0, a1, a2] })
+}
+
+/// Client side of the fleet handshake: present the fleet session id,
+/// receive the sticky replica assignment. A [`Tag::Error`] reply (no
+/// healthy replica — the fleet analogue of a symmetric refusal) or any
+/// validation failure is a hard error; the router connection should
+/// then be dropped.
+pub fn fleet_handshake(
+    stream: &mut (impl Read + Write),
+    session: &[u8; 16],
+) -> Result<FleetAssign> {
+    let mut payload = vec![WIRE_VERSION];
+    payload.extend_from_slice(session);
+    write_frame(stream, Tag::FleetHello, &payload)?;
+    stream.flush()?;
+    let (tag, payload) = read_frame(stream)?;
+    match tag {
+        Tag::FleetAssign => decode_fleet_assign(&payload, session),
+        Tag::Error => bail!("fleet refused: {}", String::from_utf8_lossy(&payload)),
+        other => bail!("expected a fleet assignment, got {other:?}"),
+    }
 }
 
 // ---- client protocol payload encodings (all little-endian) ----
@@ -814,6 +930,29 @@ mod tests {
     use super::*;
     use std::io::Cursor;
 
+    /// A mock handshake stream: reads pre-baked reply frames, collects
+    /// whatever the client side writes.
+    struct HandshakePipe {
+        read: Cursor<Vec<u8>>,
+        write: Vec<u8>,
+    }
+
+    impl Read for HandshakePipe {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.read.read(buf)
+        }
+    }
+
+    impl Write for HandshakePipe {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.write.write(buf)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
     #[test]
     fn frame_roundtrip_all_tags() {
         for (tag, payload) in [
@@ -847,10 +986,49 @@ mod tests {
 
     #[test]
     fn tag_bytes_roundtrip() {
-        for b in 0..24u8 {
+        for b in 0..26u8 {
             assert_eq!(Tag::from_u8(b).unwrap().as_u8(), b);
         }
-        assert!(Tag::from_u8(24).is_err());
+        assert!(Tag::from_u8(26).is_err());
+    }
+
+    #[test]
+    fn fleet_assign_roundtrip_and_rejects_hostile_input() {
+        let session = [3u8; 16];
+        let a = FleetAssign {
+            session,
+            replica: 1,
+            label: "fleet-r1".to_string(),
+            topology: "d64-l2-h4-f128-c4-classify.s8".to_string(),
+            addrs: [
+                "127.0.0.1:9210".to_string(),
+                "127.0.0.1:9211".to_string(),
+                "127.0.0.1:9212".to_string(),
+            ],
+        };
+        let enc = encode_fleet_assign(&a);
+        assert_eq!(decode_fleet_assign(&enc, &session).unwrap(), a);
+        // A different fleet session must not validate.
+        assert!(decode_fleet_assign(&enc, &[4u8; 16]).is_err());
+        // Truncations at every boundary are errors, not panics.
+        for cut in 0..enc.len() {
+            assert!(decode_fleet_assign(&enc[..cut], &session).is_err(), "cut at {cut}");
+        }
+        // Trailing bytes are refused.
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(decode_fleet_assign(&padded, &session).is_err());
+        // Version skew is refused.
+        let mut stale = enc.clone();
+        stale[0] = WIRE_VERSION - 1;
+        assert!(decode_fleet_assign(&stale, &session).is_err());
+        // The handshake helper surfaces a router-side Error frame as a
+        // refusal the caller can report.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Tag::Error, b"fleet has no healthy replica").unwrap();
+        let mut stream = HandshakePipe { read: Cursor::new(buf), write: Vec::new() };
+        let err = fleet_handshake(&mut stream, &session).unwrap_err();
+        assert!(format!("{err:#}").contains("no healthy replica"));
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Replica fleet serving (DESIGN.md §Replica fleet): the router must
+//! hand out sticky least-pressure assignments, keep the fleet available
+//! across a replica loss (only the lost replica's clients are
+//! affected), refuse symmetrically when NO replica is healthy, fail
+//! loudly on topology divergence, and never perturb logits — every
+//! routed request must match an in-process replay bit-for-bit. The
+//! adaptive prep scheduler must reach zero request-path offline bytes
+//! on a pressured key without any hand-set static `--prep` budget.
+
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use ppq_bert::bench_harness::prepared_model;
+use ppq_bert::coordinator::fleet::{
+    fleet_session_id, halt_fleet, replica_session_id, run_fleet_router, FleetClient, FleetOpts,
+    ReplicaSpec,
+};
+use ppq_bert::coordinator::remote::{
+    run_party, seed_from_label, served_keys, Completed, InferenceRequest, PartyOpts, RemoteClient,
+    ServeOpts,
+};
+use ppq_bert::coordinator::Session;
+use ppq_bert::core::error::Result;
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::weights::synth_input;
+use ppq_bert::party::SessionCfg;
+use ppq_bert::protocols::max::MaxStrategy;
+
+/// Spawn one replica trio (real loopback sockets, one thread per party
+/// process body) under its fleet label: the label fixes the master
+/// seed, exactly as `repro party --session LABEL` does.
+fn spawn_replica(
+    cfg: BertConfig,
+    serve: &ServeOpts,
+    label: &str,
+) -> ([String; 3], Vec<JoinHandle<Result<()>>>) {
+    let listeners: Vec<TcpListener> =
+        (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: [String; 3] = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect::<Vec<_>>()
+        .try_into()
+        .unwrap();
+    let mut handles = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let mut opts = PartyOpts::new(id, cfg);
+        opts.serve = serve.clone();
+        opts.scfg.master_seed = seed_from_label(label);
+        for p in 0..3 {
+            if p != id {
+                opts.peers[p] = Some(addrs[p].clone());
+            }
+        }
+        handles.push(std::thread::spawn(move || run_party(listener, opts)));
+    }
+    (addrs, handles)
+}
+
+/// Spawn a router over the given replicas; returns its address and the
+/// router thread handle.
+fn spawn_router(
+    cfg: BertConfig,
+    serve: &ServeOpts,
+    replicas: Vec<ReplicaSpec>,
+) -> (String, JoinHandle<Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = FleetOpts {
+        replicas,
+        cfg,
+        keys: served_keys(serve, &cfg),
+        poll: Duration::from_millis(100),
+        timeout: Duration::from_secs(10),
+    };
+    let handle = std::thread::spawn(move || run_fleet_router(listener, opts));
+    (addr, handle)
+}
+
+/// Sticky least-pressure assignment + the fleet's bit-identity pin:
+/// four clients spread 2/2 across two replicas (each holds its router
+/// connection, so the router's live-connection count alternates the
+/// picks), every request is served by the client's assigned trio, and
+/// an in-process replay of each replica's window stream — seeded from
+/// that replica's label — matches every logit bit-for-bit. One fleet
+/// halt through the router then drains both trios and the router.
+#[test]
+fn fleet_spreads_sticky_assignments_and_matches_in_process_replay() {
+    let cfg = BertConfig::tiny();
+    // One-request windows: every pool key is (fingerprint, 1), so the
+    // warm-window invariant is exact (see DESIGN.md §Replica fleet).
+    let serve = ServeOpts { max_batch: 1, ..ServeOpts::default() };
+    let (addrs0, handles0) = spawn_replica(cfg, &serve, "fleet-r0");
+    let (addrs1, handles1) = spawn_replica(cfg, &serve, "fleet-r1");
+    let keys = served_keys(&serve, &cfg);
+    let (router, router_handle) = spawn_router(
+        cfg,
+        &serve,
+        vec![
+            ReplicaSpec { label: "fleet-r0".into(), addrs: addrs0 },
+            ReplicaSpec { label: "fleet-r1".into(), addrs: addrs1 },
+        ],
+    );
+
+    // Sequential connects (each client keeps its router connection
+    // open) make the least-pressure picks deterministic: 0, 1, 0, 1.
+    let mut clients: Vec<FleetClient> = (0..4)
+        .map(|k| {
+            FleetClient::connect(&router, &cfg, &keys, Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("client {k}: {e}"))
+        })
+        .collect();
+    let assigned: Vec<u32> = clients.iter().map(|c| c.assign.replica).collect();
+    assert_eq!(assigned, vec![0, 1, 0, 1], "least-pressure must alternate idle replicas");
+    for c in &clients {
+        let expect = if c.assign.replica == 0 { "fleet-r0" } else { "fleet-r1" };
+        assert_eq!(c.assign.label, expect);
+    }
+
+    // Each client drives its assigned trio; requests stay on that
+    // replica (stickiness is the connection itself).
+    let mut done: Vec<(u32, usize, Completed)> = Vec::new();
+    for round in 0..2 {
+        for (k, fc) in clients.iter_mut().enumerate() {
+            let ridx = round * 4 + k;
+            let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, input(&cfg, ridx));
+            let resp = fc.client.infer_request(&req).expect("serve");
+            done.push((fc.assign.replica, ridx, resp.completed));
+        }
+    }
+
+    // Replay each replica's observed window stream through an
+    // in-process session seeded from ITS label: logits must be
+    // bit-identical — the fleet changes where a request runs, never
+    // what it computes. (A single-trio deployment replays against the
+    // same in-process baseline, so fleet == single-trio bit-for-bit.)
+    for replica in [0u32, 1] {
+        let label = if replica == 0 { "fleet-r0" } else { "fleet-r1" };
+        let mut mine: Vec<&(u32, usize, Completed)> =
+            done.iter().filter(|(r, _, _)| *r == replica).collect();
+        assert_eq!(mine.len(), 4, "2 clients x 2 rounds per replica");
+        mine.sort_by_key(|(_, _, c)| (c.wid(), c.pos()));
+        let scfg = SessionCfg { master_seed: seed_from_label(label), ..SessionCfg::default() };
+        let (w, _) = prepared_model(cfg);
+        let sess = Session::start(cfg, w, scfg, MaxStrategy::Tournament);
+        for (_, ridx, c) in mine {
+            assert_eq!(c.batch(), 1, "max_batch 1 serves one-request windows");
+            let replay = sess.infer_batch(&[input(&cfg, *ridx)]);
+            assert_eq!(c.logits, replay[0], "request {ridx} on replica {replica}");
+        }
+        sess.shutdown();
+    }
+
+    drop(clients);
+    halt_fleet(&router, &cfg, &keys, Duration::from_secs(30)).expect("fleet halt");
+    router_handle.join().expect("router thread").expect("router exits cleanly");
+    for h in handles0.into_iter().chain(handles1) {
+        h.join().expect("party thread").expect("party exits cleanly");
+    }
+}
+
+/// Losing one replica must only affect that replica's clients: the
+/// fleet keeps admitting (new connections land on the survivor), a
+/// survivor-assigned client keeps serving, and once the LAST replica is
+/// gone the router refuses symmetrically with a clean error instead of
+/// handing out dead trios.
+#[test]
+fn replica_loss_reroutes_new_clients_and_empty_fleet_refuses() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts { max_batch: 1, ..ServeOpts::default() };
+    let (addrs0, handles0) = spawn_replica(cfg, &serve, "fleet-r0");
+    let (addrs1, handles1) = spawn_replica(cfg, &serve, "fleet-r1");
+    let keys = served_keys(&serve, &cfg);
+    let (router, router_handle) = spawn_router(
+        cfg,
+        &serve,
+        vec![
+            ReplicaSpec { label: "fleet-r0".into(), addrs: addrs0.clone() },
+            ReplicaSpec { label: "fleet-r1".into(), addrs: addrs1.clone() },
+        ],
+    );
+
+    let mut a = FleetClient::connect(&router, &cfg, &keys, Duration::from_secs(30)).expect("a");
+    let mut b = FleetClient::connect(&router, &cfg, &keys, Duration::from_secs(30)).expect("b");
+    assert_eq!((a.assign.replica, b.assign.replica), (0, 1));
+
+    // Take replica 0 down (a clean drain stands in for the smoke
+    // test's kill -9: either way its listener goes away and the
+    // router's poller loses the stats link).
+    let r0_session = replica_session_id("fleet-r0", &cfg, &keys);
+    RemoteClient::connect(&addrs0, r0_session, Duration::from_secs(30))
+        .expect("halt probe")
+        .shutdown()
+        .expect("drain replica 0");
+    for h in handles0 {
+        h.join().expect("party thread").expect("replica 0 exits cleanly");
+    }
+
+    // The survivor's client never noticed.
+    let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, input(&cfg, 100));
+    let resp = b.client.infer_request(&req).expect("survivor keeps serving");
+    assert_eq!(resp.completed.batch(), 1);
+
+    // New connections land on the survivor as soon as the poller
+    // notices (bounded by the poll interval; retry with a short dial
+    // budget until then).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut c = loop {
+        match FleetClient::connect(&router, &cfg, &keys, Duration::from_millis(500)) {
+            Ok(fc) if fc.assign.replica == 1 => break fc,
+            Ok(_) | Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Ok(fc) => panic!("router kept assigning dead replica {}", fc.assign.replica),
+            Err(e) => panic!("router never rerouted to the survivor: {e}"),
+        }
+    };
+    let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, input(&cfg, 101));
+    c.client.infer_request(&req).expect("rerouted client serves");
+
+    // Down the survivor too: the fleet must refuse symmetrically.
+    drop(b);
+    drop(c);
+    let r1_session = replica_session_id("fleet-r1", &cfg, &keys);
+    RemoteClient::connect(&addrs1, r1_session, Duration::from_secs(30))
+        .expect("halt probe")
+        .shutdown()
+        .expect("drain replica 1");
+    for h in handles1 {
+        h.join().expect("party thread").expect("replica 1 exits cleanly");
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match FleetClient::connect(&router, &cfg, &keys, Duration::from_millis(500)) {
+            Err(e) if e.to_string().contains("no healthy replica") => break,
+            Err(e) if Instant::now() >= deadline => panic!("wrong refusal: {e}"),
+            Ok(_) if Instant::now() >= deadline => panic!("empty fleet still assigning"),
+            _ => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+
+    // `a` was the dead replica's client: its trio is gone, so its next
+    // request errors — locally, without poisoning anything above.
+    let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, input(&cfg, 102));
+    assert!(a.client.infer_request(&req).is_err(), "dead replica's client must fail");
+
+    halt_fleet(&router, &cfg, &keys, Duration::from_secs(30)).expect("fleet halt");
+    router_handle.join().expect("router thread").expect("router exits cleanly");
+}
+
+/// The adaptive prep scheduler (zero static `--prep`): under a skewed
+/// mix the pressured key's EWMA share grows its pool target, so after a
+/// short warm-up every window on that key is served from ahead-of-time
+/// material — zero request-path offline bytes — while the idle key is
+/// never prepped past the floor (0).
+#[test]
+fn adaptive_prep_reaches_zero_offline_bytes_on_the_pressured_key() {
+    let cfg = BertConfig::tiny();
+    let serve = ServeOpts {
+        max_batch: 1,
+        prep_depth: 0,
+        prep_adaptive: true,
+        prep_ceiling: 4,
+        buckets: vec![4, cfg.seq_len],
+        ..ServeOpts::default()
+    };
+    let (addrs, handles) = spawn_replica(cfg, &serve, "fleet-r0");
+    let keys = served_keys(&serve, &cfg);
+    let session = replica_session_id("fleet-r0", &cfg, &keys);
+    let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("c");
+
+    // Pressure ONLY the full-length bucket. Sequential submit/wait
+    // leaves the sequencer idle between windows, which is when the
+    // adaptive scheduler banks tapes for the hot key.
+    let mut offline = Vec::new();
+    for i in 0..8usize {
+        let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, input(&cfg, 200 + i));
+        let resp = client.infer_request(&req).expect("serve");
+        offline.push(resp.completed.window_offline_bytes());
+        // Give the idle-prep loop room to top the pool back up.
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    assert!(offline[0] > 0, "the very first window has nothing banked (floor is 0)");
+    assert_eq!(
+        offline[4..],
+        [0, 0, 0, 0],
+        "sustained pressure must converge to warm (zero-offline-byte) windows: {offline:?}"
+    );
+
+    let stats = client.stats(1).expect("stats");
+    assert!(stats.preps > 0, "the scheduler must have banked tapes");
+    // The idle bucket's share decays to 0, so its target stays at the
+    // floor: nothing pooled beyond the hot key's ceiling.
+    assert!(
+        stats.tapes <= 4,
+        "only the pressured key may hold tapes (ceiling 4), got {}",
+        stats.tapes
+    );
+
+    client.shutdown().expect("drain");
+    for h in handles {
+        h.join().expect("party thread").expect("party exits cleanly");
+    }
+}
+
+/// Topology divergence must fail loudly at connect time, in both
+/// directions: a replica serving a different (task, bucket) set than
+/// the router claims never becomes healthy (its topology-bound session
+/// id fails the poller's handshake, so clients are refused, not handed
+/// a diverged trio); and a CLIENT whose topology differs from the
+/// router's is rejected at the fleet handshake by the session echo.
+#[test]
+fn topology_divergence_is_loud_at_connect_time() {
+    let cfg = BertConfig::tiny();
+    // The replica really serves only the full-length bucket...
+    let real = ServeOpts { max_batch: 1, ..ServeOpts::default() };
+    let (addrs, handles) = spawn_replica(cfg, &real, "fleet-r0");
+    // ...but the router (and its clients) believe the fleet serves two.
+    let claimed = ServeOpts { max_batch: 1, buckets: vec![4, cfg.seq_len], ..ServeOpts::default() };
+    let claimed_keys = served_keys(&claimed, &cfg);
+    let (router, router_handle) = spawn_router(
+        cfg,
+        &claimed,
+        vec![ReplicaSpec { label: "fleet-r0".into(), addrs: addrs.clone() }],
+    );
+
+    // The diverged replica can never pass the poller's session check,
+    // so the fleet has no healthy replica to assign.
+    let err = FleetClient::connect(&router, &cfg, &claimed_keys, Duration::from_secs(10))
+        .expect_err("a diverged replica must not be assigned");
+    assert!(
+        err.to_string().contains("no healthy replica"),
+        "expected the symmetric refusal, got: {err}"
+    );
+
+    // A client on a third topology disagrees with the ROUTER's session
+    // id and is rejected by the handshake echo itself.
+    let other = ServeOpts { max_batch: 1, buckets: vec![4], ..ServeOpts::default() };
+    let other_keys = served_keys(&other, &cfg);
+    assert_ne!(fleet_session_id(&cfg, &other_keys), fleet_session_id(&cfg, &claimed_keys));
+    let err = FleetClient::connect(&router, &cfg, &other_keys, Duration::from_secs(10))
+        .expect_err("a diverged client must be rejected");
+    assert!(
+        err.to_string().contains("session mismatch"),
+        "expected a session-mismatch rejection, got: {err}"
+    );
+
+    // The replica itself is still a perfectly healthy SINGLE-TRIO
+    // deployment under its true topology.
+    let real_keys = served_keys(&real, &cfg);
+    let session = replica_session_id("fleet-r0", &cfg, &real_keys);
+    let mut client = RemoteClient::connect(&addrs, session, Duration::from_secs(30)).expect("c");
+    let req = InferenceRequest::new(TaskKind::Classify, cfg.seq_len, input(&cfg, 300));
+    client.infer_request(&req).expect("true-topology client serves");
+
+    // Fleet halt only drains HEALTHY replicas — the diverged trio was
+    // never healthy, so drain it directly under its true session.
+    halt_fleet(&router, &cfg, &claimed_keys, Duration::from_secs(30)).expect("fleet halt");
+    router_handle.join().expect("router thread").expect("router exits cleanly");
+    client.shutdown().expect("drain the diverged replica");
+    for h in handles {
+        h.join().expect("party thread").expect("party exits cleanly");
+    }
+}
+
+/// Deterministic per-request input (mirrors `repro loadgen`'s stream).
+fn input(cfg: &BertConfig, ridx: usize) -> Vec<i64> {
+    synth_input(cfg, 100 + ridx as u64)
+}

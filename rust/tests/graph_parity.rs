@@ -9,15 +9,10 @@
 //! same master seed, so every PRG draw and every protocol message must
 //! line up for the outputs to match exactly.
 
-// The frozen baseline calls the deprecated pre-`GraphSpec` builder on
-// purpose: the wrapper must keep producing the identical graph for one
-// more release, and this file is what pins that.
-#![allow(deprecated)]
-
 use ppq_bert::bench_harness::{prepared_inputs, prepared_model};
 use ppq_bert::core::ring::{R16, R4};
-use ppq_bert::model::config::BertConfig;
-use ppq_bert::model::secure::{bert_graph_default, secure_infer_batch};
+use ppq_bert::model::config::{BertConfig, TaskKind};
+use ppq_bert::model::secure::{secure_infer_batch, GraphSpec};
 use ppq_bert::model::weights::Weights;
 use ppq_bert::party::{run_3pc, PartyCtx, SessionCfg, P0, P1};
 use ppq_bert::protocols::convert::{convert_to_rss, extend_ring_many};
@@ -292,7 +287,8 @@ fn run_graph(cfg: BertConfig, batch: usize) -> ([PartyOut; 3], Vec<(u64, u64)>) 
     let (w, _) = prepared_model(cfg);
     let inputs = prepared_inputs(&cfg, batch);
     let (outs, snap) = run_3pc(SessionCfg::default(), move |ctx| {
-        let g = bert_graph_default(ctx, &cfg, if ctx.id == P0 { Some(&w) } else { None });
+        let g = GraphSpec::new(TaskKind::Classify, cfg)
+            .build(ctx, if ctx.id == P0 { Some(&w) } else { None });
         let (logits, h) =
             secure_infer_batch(ctx, &g, batch, if ctx.id == P1 { Some(&inputs) } else { None });
         (logits, h.vals)

@@ -373,38 +373,6 @@ fn fingerprints_rekey_across_opt_levels_for_every_builder() {
     assert_ne!(mlp_fp(OptConfig::none()), mlp_fp(OptConfig::o1()));
 }
 
-/// The deprecated free-function builders survive one PR as wrappers and
-/// must keep producing the IDENTICAL graphs (same fingerprints, hence
-/// same tape pools) as their `GraphSpec` / `MlpSpec` replacements.
-#[test]
-#[allow(deprecated)]
-fn deprecated_wrappers_build_identical_graphs() {
-    use ppq_bert::model::secure::{bert_graph_dry, bert_graph_dry_opt, mlp_graph_dry, mlp_graph_dry_opt};
-    let cfg = BertConfig::tiny();
-    let per = LayerQuantConfig::uniform(&cfg, MaxStrategy::Sort);
-    assert_eq!(
-        bert_graph_dry(&cfg, &per).fingerprint(),
-        GraphSpec::new(TaskKind::Classify, cfg).with_quant(per.clone()).dry().fingerprint()
-    );
-    assert_eq!(
-        bert_graph_dry_opt(&cfg, &per, OptConfig::o1()).fingerprint(),
-        GraphSpec::new(TaskKind::Classify, cfg)
-            .with_quant(per)
-            .with_opt(OptConfig::o1())
-            .dry()
-            .fingerprint()
-    );
-    let mcfg = MlpConfig::tiny();
-    assert_eq!(
-        mlp_graph_dry(&mcfg).fingerprint(),
-        MlpSpec::new(mcfg).dry().fingerprint()
-    );
-    assert_eq!(
-        mlp_graph_dry_opt(&mcfg, OptConfig::o1()).fingerprint(),
-        MlpSpec::new(mcfg).with_opt(OptConfig::o1()).dry().fingerprint()
-    );
-}
-
 /// Deterministic meter fields must match exactly; `compute_ns` is the
 /// only field thread count may change.
 fn assert_meters_eq(got: &MetricsSnapshot, want: &MetricsSnapshot, what: &str) {

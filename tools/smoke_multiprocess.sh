@@ -18,6 +18,12 @@
 #    seq-length buckets and drive it with a mixed-task loadgen --check:
 #    windows are cut per (task, bucket) and every key's outputs must be
 #    bit-identical to an in-process single-task replay.
+# 5. Spawn a 2-replica FLEET (7 processes: two trios with distinct
+#    per-label seeds + one `repro router`), spread a concurrent loadgen
+#    across both replicas with per-replica --check replays, then kill -9
+#    replica 0's sequencer: the router must reroute new clients to the
+#    survivor while the fleet keeps serving, and a fleet --halt drains
+#    the survivor and the router.
 #
 # Exercises the real process boundary (and the real client concurrency
 # and real SIGKILL crash recovery) the in-thread tests cannot.
@@ -189,6 +195,51 @@ if ! echo "$het_out" | grep -q "CHECK OK"; then
   exit 1
 fi
 echo "OK: one deployment served 4 tasks at 2 buckets; per-key replay bit-identical"
+
+# ---- scenario 5: 2-replica fleet + router, kill/reroute drill ----
+# Two trios under distinct labels (distinct master seeds), single-request
+# windows, and the adaptive prep scheduler (no hand-set --prep budget);
+# the router spreads 4 concurrent clients across BOTH replicas and
+# --check replays each replica's windows under its label's seed.
+FLEET_FLAGS=(--max-batch 1 --prep-adaptive --prep-max 4)
+R0_BASE=${#PIDS[@]}
+spawn_deployment "$((PORT_BASE + 40))" --session fleet-r0 "${FLEET_FLAGS[@]}"
+R0_ADDRS="$ADDR0,$ADDR1,$ADDR2"
+R0_P1_IDX=$((R0_BASE + 1))
+spawn_deployment "$((PORT_BASE + 50))" --session fleet-r1 "${FLEET_FLAGS[@]}"
+R1_ADDRS="$ADDR0,$ADDR1,$ADDR2"
+
+ROUTER="127.0.0.1:$((PORT_BASE + 60))"
+"$BIN" router --listen "$ROUTER" --replicas "$R0_ADDRS;$R1_ADDRS" & PIDS+=($!)
+
+fleet_out=$("$BIN" loadgen --clients 4 --requests 2 \
+  --router "$ROUTER" --replicas 2 --check)
+echo "$fleet_out"
+if ! echo "$fleet_out" | grep -q "CHECK OK"; then
+  echo "FAIL: fleet loadgen did not verify against the per-replica replays" >&2
+  exit 1
+fi
+echo "OK: the router spread 4 clients over 2 replicas; per-replica replay bit-identical"
+
+# Kill replica 0's sequencer; the router's poller must mark it unhealthy
+# and route every new client to the survivor — the fleet stays up.
+kill -9 "${PIDS[$R0_P1_IDX]}"
+sleep 2 # a few poll intervals for the router to notice
+surv_out=$("$BIN" loadgen --clients 2 --requests 2 \
+  --router "$ROUTER" --replicas 1 --halt)
+echo "$surv_out"
+if ! echo "$surv_out" | grep -q "replica 1 (fleet-r1)"; then
+  echo "FAIL: traffic after the kill did not land on the surviving replica" >&2
+  exit 1
+fi
+if ! echo "$surv_out" | grep -q "fleet halted"; then
+  echo "FAIL: the fleet did not halt cleanly after the drill" >&2
+  exit 1
+fi
+# Replica 0's surviving parties lost their sequencer for good: reap them
+# rather than waiting out their reconnect budgets.
+kill -9 "${PIDS[$R0_BASE]}" "${PIDS[$((R0_BASE + 2))]}" 2>/dev/null || true
+echo "OK: replica 0 SIGKILLed; new clients rerouted to the survivor, fleet halted cleanly"
 
 # All parties were asked to halt; give them a moment and confirm.
 for pid in "${PIDS[@]}"; do
